@@ -1,0 +1,45 @@
+//! Communication–accuracy tradeoff on a *sparse* workload — the
+//! regime (paper Fig. 4, bow dataset) where disKPCA's nnz-dependent
+//! communication shines: sampled points ship as (index, value) pairs,
+//! so informed sampling buys more accuracy per word.
+//!
+//!     cargo run --release --example comm_tradeoff
+
+
+use diskpca::coordinator::Params;
+use diskpca::config::Config;
+use diskpca::experiments::{run_method, Ctx, Method};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::new();
+    cfg.set("scale", "0.25");
+    cfg.set("workers", "16");
+    let ctx = Ctx::from_config(&cfg)?;
+    let spec = ctx.dataset("bow_like")?;
+    let data = spec.generate(ctx.seed);
+    let kernel = ctx.kernel("poly", &data);
+    println!(
+        "bow_like: n={} d={} ρ={:.1} (sparse), kernel {}",
+        data.len(),
+        data.dim(),
+        data.avg_nnz_per_point(),
+        kernel.name()
+    );
+    println!(
+        "\n{:<20} {:>8} {:>6} {:>12} {:>12}",
+        "method", "n_adapt", "|Y|", "comm(words)", "err/n"
+    );
+    for n_adapt in [50usize, 100, 200, 400] {
+        for method in [Method::DisKpca, Method::UniformDisLr] {
+            let params = Params { n_adapt, ..ctx.cfg.params() };
+            let r = run_method(&ctx, &spec, &data, kernel, &params, method);
+            println!(
+                "{:<20} {:>8} {:>6} {:>12} {:>12.5}",
+                r.method, n_adapt, r.num_points, r.comm_words, r.err_per_point
+            );
+        }
+    }
+    println!("\nexpected shape (paper Fig. 4a): error falls with communication;");
+    println!("disKPCA dominates uniform at equal words on sparse data.");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the full three-layer
+//! system on a realistic small workload.
+//!
+//! - loads the AOT artifacts (L1 Pallas kernels inside L2 JAX graphs,
+//!   compiled to HLO text by `make artifacts`) into the PJRT runtime;
+//! - generates the mnist8m-like workload (784-dim, cluster-structured)
+//!   plus the sparse bow-like workload (4096-dim, Zipf);
+//! - runs disKPCA and both uniform baselines at matched |Y| over the
+//!   power-law partition, with the Gaussian and polynomial kernels;
+//! - reports the paper's headline metric — low-rank approximation
+//!   error vs communication — plus the per-round word accounting.
+//!
+//!     make artifacts && cargo run --release --example e2e_pipeline
+
+use std::sync::Arc;
+
+use diskpca::config::Config;
+use diskpca::experiments::{run_method, Ctx, Method};
+use diskpca::runtime::XlaBackend;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::new();
+    cfg.set("scale", &std::env::var("E2E_SCALE").unwrap_or_else(|_| "0.25".into()));
+    cfg.set("workers", "8");
+    cfg.set("n_lev", "50");
+    let xla = Arc::new(XlaBackend::load("artifacts")?);
+    let ctx = Ctx::with_backend(&cfg, xla.clone(), "xla".into())?;
+
+    println!("=== diskpca end-to-end pipeline (backend: xla/PJRT) ===\n");
+    for (dataset, family) in [("mnist8m_like", "gauss"), ("bow_like", "poly")] {
+        let spec = ctx.dataset(dataset)?;
+        let data = spec.generate(ctx.seed);
+        let kernel = ctx.kernel(family, &data);
+        println!(
+            "--- {dataset}: n={} d={} s={} ρ={:.0} kernel={} ---",
+            data.len(),
+            data.dim(),
+            spec.s,
+            data.avg_nnz_per_point(),
+            kernel.name()
+        );
+        println!(
+            "{:<20} {:>6} {:>12} {:>12} {:>9}",
+            "method", "|Y|", "comm(words)", "err/n", "wall(s)"
+        );
+        for n_adapt in [100usize, 200] {
+            let mut params = ctx.cfg.params();
+            params.n_adapt = n_adapt;
+            for method in Method::all() {
+                let r = run_method(&ctx, &spec, &data, kernel, &params, method);
+                println!(
+                    "{:<20} {:>6} {:>12} {:>12.5} {:>9.2}",
+                    format!("{} (Ŷ={n_adapt})", r.method),
+                    r.num_points,
+                    r.comm_words,
+                    r.err_per_point,
+                    r.wall_secs
+                );
+            }
+        }
+        println!();
+    }
+
+    // Surface the runtime's own accounting: every heavy op should have
+    // gone through XLA, not the native fallback.
+    use std::sync::atomic::Ordering;
+    println!(
+        "XLA runtime: {} artifact calls, {} compiles, {} native fallbacks",
+        xla.stats.calls.load(Ordering::Relaxed),
+        xla.stats.compiles.load(Ordering::Relaxed),
+        xla.stats.fallbacks.load(Ordering::Relaxed),
+    );
+    println!("see EXPERIMENTS.md §E2E for the recorded run");
+    Ok(())
+}

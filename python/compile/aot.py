@@ -1,0 +1,199 @@
+"""AOT: lower every L2 graph over the shape grid to HLO-text artifacts.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Outputs ``artifacts/<name>.hlo.txt`` plus ``artifacts/manifest.json``
+(consumed by ``rust/src/runtime/manifest.rs``). Python runs only here —
+never on the request path.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Static shape grid (DESIGN.md §5). Rust pads inputs to these shapes.
+D_GRID = [32, 128, 512, 1024]
+BLOCK_N = 256  # data-column block
+M_RFF = 512  # random features per block
+T_EMBED = 64  # kernel-subspace-embedding dim t = O(k)
+T2_TS = 512  # TensorSketch dim before Gaussian down-projection
+Y_PAD = 512  # padded |Y| for gram/projection artifacts
+POLY_Q = 4  # paper's experiment setting
+ARCCOS_DEG = 2  # paper's experiment setting
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+
+
+def build_grid():
+    """(name, fn, [arg specs]) for every artifact."""
+    arts = []
+    for d in D_GRID:
+        arts.append(
+            (
+                f"embed_rff_d{d}",
+                functools.partial(model.embed_rff, t=T_EMBED),
+                [
+                    ("x", f32(BLOCK_N, d)),
+                    ("omega", f32(d, M_RFF)),
+                    ("b", f32(M_RFF)),
+                    ("h", i32(M_RFF)),
+                    ("s", f32(M_RFF)),
+                ],
+            )
+        )
+        arts.append(
+            (
+                f"embed_arccos_d{d}",
+                functools.partial(
+                    model.embed_arccos, t=T_EMBED, degree=ARCCOS_DEG
+                ),
+                [
+                    ("x", f32(BLOCK_N, d)),
+                    ("omega", f32(d, M_RFF)),
+                    ("h", i32(M_RFF)),
+                    ("s", f32(M_RFF)),
+                ],
+            )
+        )
+        arts.append(
+            (
+                f"embed_poly_d{d}",
+                model.embed_poly,
+                [
+                    ("x", f32(BLOCK_N, d)),
+                    ("hs", i32(POLY_Q, d)),
+                    ("ss", f32(POLY_Q, d)),
+                    ("g", f32(T2_TS, T_EMBED)),
+                ],
+            )
+        )
+        arts.append(
+            (
+                f"gram_gauss_d{d}",
+                model.gram_gauss,
+                [("y", f32(Y_PAD, d)), ("x", f32(BLOCK_N, d))],
+            )
+        )
+        arts.append(
+            (
+                f"gram_poly_d{d}",
+                functools.partial(model.gram_poly, q=POLY_Q),
+                [("y", f32(Y_PAD, d)), ("x", f32(BLOCK_N, d))],
+            )
+        )
+        arts.append(
+            (
+                f"gram_arccos_d{d}",
+                functools.partial(model.gram_arccos, degree=ARCCOS_DEG),
+                [("y", f32(Y_PAD, d)), ("x", f32(BLOCK_N, d))],
+            )
+        )
+    arts.append(
+        (
+            "leverage_norms",
+            model.leverage_norms,
+            [("zinv_t", f32(T_EMBED, T_EMBED)), ("e", f32(T_EMBED, BLOCK_N))],
+        )
+    )
+    arts.append(
+        (
+            "project_residual",
+            model.project_residual,
+            [
+                ("rinv_t", f32(Y_PAD, Y_PAD)),
+                ("k_ya", f32(Y_PAD, BLOCK_N)),
+                ("diag_a", f32(BLOCK_N)),
+            ],
+        )
+    )
+    return arts
+
+
+def to_hlo_text(lowered):
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_json(name, spec):
+    return {
+        "name": name,
+        "shape": list(spec.shape),
+        "dtype": str(spec.dtype),
+    }
+
+
+def out_specs(fn, specs):
+    outs = jax.eval_shape(fn, *specs)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    return [{"shape": list(o.shape), "dtype": str(o.dtype)} for o in outs]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "static": {
+            "block_n": BLOCK_N,
+            "m_rff": M_RFF,
+            "t_embed": T_EMBED,
+            "t2_ts": T2_TS,
+            "y_pad": Y_PAD,
+            "poly_q": POLY_Q,
+            "arccos_deg": ARCCOS_DEG,
+            "d_grid": D_GRID,
+        },
+        "artifacts": [],
+    }
+    for name, fn, specs in build_grid():
+        if args.only and args.only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*[s for _, s in specs])
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "inputs": [spec_json(n, s) for n, s in specs],
+                "outputs": out_specs(fn, [s for _, s in specs]),
+                "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            }
+        )
+        print(f"  lowered {name}: {len(text)} chars")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Pallas kernel: CountSketch along the feature axis.
+
+CountSketch is a scatter-add on GPU (each input column lands in bucket
+h[j] with sign s[j]). Scatter is MXU-hostile on TPU, so we use the
+matmul formulation (DESIGN.md §Hardware-Adaptation): for a column block
+J, the sketch matrix tile S[J, :] = s[J]·onehot(h[J]) is materialized
+on the fly in VMEM and the output tile accumulates X[:, J] @ S[J, :] —
+a (bn×bm)·(bm×t) MXU matmul per grid step, revisiting the output block
+across the m-axis of the grid (sequential grid ⇒ safe accumulation).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cs_kernel(x_ref, h_ref, s_ref, o_ref, *, t):
+    """Accumulate one (bn, t) output tile from one (bn, bm) input tile."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    h = h_ref[...]  # [bm] int32 buckets
+    s = s_ref[...]  # [bm] ±1 signs
+    onehot = (h[:, None] == jnp.arange(t, dtype=jnp.int32)[None, :]).astype(
+        jnp.float32
+    )
+    o_ref[...] += jnp.dot(
+        x_ref[...], s[:, None] * onehot, preferred_element_type=jnp.float32
+    )
+
+
+def countsketch(x, h, s, t, *, block_n=128, block_m=128):
+    """Pallas CountSketch: x [n,m], h,s [m] -> [n,t]. Shapes must tile."""
+    n, m = x.shape
+    bn, bm = min(block_n, n), min(block_m, m)
+    assert n % bn == 0 and m % bm == 0, (n, m, bn, bm)
+    grid = (n // bn, m // bm)
+    return pl.pallas_call(
+        lambda xr, hr, sr, orf: _cs_kernel(xr, hr, sr, orf, t=t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bn, t), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, t), jnp.float32),
+        interpret=True,
+    )(x, h.astype(jnp.int32), s.astype(jnp.float32))
+
+
+def vmem_estimate_bytes(t, bn=128, bm=128):
+    """VMEM residency of one grid step: X tile + onehot tile + out tile."""
+    return 4 * (bn * bm + bm * t + bn * t) + 8 * bm

@@ -1,0 +1,87 @@
+"""Pallas kernels: tiled gram (kernel-matrix) blocks.
+
+K(Y, X) blocks drive both RepSample's adaptive sampling and disLR's
+projection (paper §5.3–5.4, Appendix A). Each is an MXU matmul
+Yᵀ·X tile with a fused elementwise kernel-map epilogue (exp / integer
+power / arc-cos closed form) applied while the tile is VMEM-resident.
+Row norms needed by the gauss/arccos maps are computed per-tile from
+the same VMEM-resident operands — cheaper than a second HBM pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gauss_kernel(y_ref, x_ref, o_ref, *, gamma):
+    y = y_ref[...]  # [by, d]
+    x = x_ref[...]  # [bx, d]
+    dots = jnp.dot(y, x.T, preferred_element_type=jnp.float32)
+    yy = jnp.sum(y * y, axis=1)[:, None]
+    xx = jnp.sum(x * x, axis=1)[None, :]
+    d2 = jnp.maximum(yy + xx - 2.0 * dots, 0.0)
+    o_ref[...] = jnp.exp(-gamma * d2)
+
+
+def _poly_kernel(y_ref, x_ref, o_ref, *, c, q):
+    dots = jnp.dot(y_ref[...], x_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = (dots + c) ** q
+
+
+def _arccos_kernel(y_ref, x_ref, o_ref, *, degree):
+    y = y_ref[...]
+    x = x_ref[...]
+    dots = jnp.dot(y, x.T, preferred_element_type=jnp.float32)
+    ny = jnp.sqrt(jnp.sum(y * y, axis=1))[:, None]
+    nx = jnp.sqrt(jnp.sum(x * x, axis=1))[None, :]
+    denom = jnp.maximum(ny * nx, 1e-30)
+    cos_t = jnp.clip(dots / denom, -1.0, 1.0)
+    theta = jnp.arccos(cos_t)
+    sin_t = jnp.sqrt(jnp.maximum(1.0 - cos_t * cos_t, 0.0))
+    if degree == 0:
+        j = jnp.pi - theta
+        scale = jnp.ones_like(denom)
+    elif degree == 1:
+        j = sin_t + (jnp.pi - theta) * cos_t
+        scale = ny * nx
+    else:  # degree 2
+        j = 3.0 * sin_t * cos_t + (jnp.pi - theta) * (1.0 + 2.0 * cos_t**2)
+        scale = (ny * nx) ** 2
+    o_ref[...] = (1.0 / jnp.pi) * scale * j
+
+
+_KERNELS = {
+    "gauss": _gauss_kernel,
+    "poly": _poly_kernel,
+    "arccos": _arccos_kernel,
+}
+
+
+def gram_block(y, x, kind, *, block_y=128, block_x=128, **params):
+    """Pallas gram block K(y, x): [ny,d],[nx,d] -> [ny,nx].
+
+    kind: "gauss" (gamma=), "poly" (c=, q=), "arccos" (degree=).
+    """
+    ny, d = y.shape
+    nx = x.shape[0]
+    by, bx = min(block_y, ny), min(block_x, nx)
+    assert ny % by == 0 and nx % bx == 0, (ny, nx, by, bx)
+    kern = functools.partial(_KERNELS[kind], **params)
+    return pl.pallas_call(
+        kern,
+        grid=(ny // by, nx // bx),
+        in_specs=[
+            pl.BlockSpec((by, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bx, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((by, bx), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ny, nx), jnp.float32),
+        interpret=True,
+    )(y, x)
+
+
+def vmem_estimate_bytes(d, by=128, bx=128):
+    """VMEM residency of one grid step: Y tile + X tile + out tile."""
+    return 4 * (by * d + bx * d + by * bx)

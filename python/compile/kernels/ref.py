@@ -1,0 +1,148 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact (up to float assoc.)
+counterpart here; pytest asserts allclose between the two across a
+hypothesis-driven shape sweep. These are also the semantic spec for the
+native rust fallbacks in ``rust/src/kernels``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------- RFF ----
+def rff_features(x, omega, b):
+    """Random Fourier features for a shift-invariant kernel.
+
+    x: [n, d], omega: [d, m], b: [m]  ->  [n, m]
+    z(x) = sqrt(2/m) * cos(x @ omega + b); E[z(x)ᵀz(y)] = κ(x - y).
+    """
+    m = omega.shape[1]
+    return jnp.sqrt(2.0 / m) * jnp.cos(x @ omega + b[None, :])
+
+
+def arccos_features(x, omega, degree):
+    """Arc-cosine random features (Cho & Saul): sqrt(2/m)·Θ(wᵀx)(wᵀx)^deg.
+
+    degree 0 is the pure Heaviside indicator — (relu(a))**0 would
+    wrongly map clamped zeros to one.
+    """
+    m = omega.shape[1]
+    a = x @ omega
+    pos = (a > 0).astype(jnp.float32)
+    if degree == 0:
+        feats = pos
+    else:
+        feats = pos * a**degree
+    return jnp.sqrt(2.0 / m) * feats
+
+
+# --------------------------------------------------------- CountSketch ----
+def countsketch_matrix(h, s, t):
+    """Dense [m, t] CountSketch matrix: S[j, h[j]] = s[j]."""
+    return (s[:, None] * (h[:, None] == jnp.arange(t)[None, :])).astype(
+        jnp.float32
+    )
+
+
+def countsketch(x, h, s, t):
+    """Apply CountSketch along the feature axis: [n, m] -> [n, t].
+
+    out[:, h[j]] += s[j] * x[:, j]   (h: [m] buckets, s: [m] ±1 signs)
+    """
+    return x @ countsketch_matrix(h, s, t)
+
+
+# -------------------------------------------------------- Gram blocks ----
+def sqdist(x, y):
+    """Pairwise squared euclidean distances. x: [nx, d], y: [ny, d]."""
+    xx = jnp.sum(x * x, axis=1)[:, None]
+    yy = jnp.sum(y * y, axis=1)[None, :]
+    return jnp.maximum(xx + yy - 2.0 * (x @ y.T), 0.0)
+
+
+def gram_gauss(x, y, gamma):
+    """Gaussian RBF gram block: exp(-gamma * ||x - y||²)."""
+    return jnp.exp(-gamma * sqdist(x, y))
+
+
+def gram_poly(x, y, c, q):
+    """Polynomial gram block: (xᵀy + c)^q."""
+    return (x @ y.T + c) ** q
+
+
+def gram_arccos(x, y, degree):
+    """Arc-cosine gram block of degree 0, 1 or 2 (Cho & Saul 2009).
+
+    κ_n(x,y) = (1/π) ‖x‖ⁿ‖y‖ⁿ J_n(θ),  θ = arccos(xᵀy / ‖x‖‖y‖)
+      J_0 = π - θ
+      J_1 = sin θ + (π - θ) cos θ
+      J_2 = 3 sinθ cosθ + (π - θ)(1 + 2cos²θ)
+    """
+    nx = jnp.sqrt(jnp.sum(x * x, axis=1))[:, None]
+    ny = jnp.sqrt(jnp.sum(y * y, axis=1))[None, :]
+    denom = jnp.maximum(nx * ny, 1e-30)
+    cos_t = jnp.clip((x @ y.T) / denom, -1.0, 1.0)
+    theta = jnp.arccos(cos_t)
+    sin_t = jnp.sqrt(jnp.maximum(1.0 - cos_t * cos_t, 0.0))
+    if degree == 0:
+        j = jnp.pi - theta
+        scale = 1.0
+    elif degree == 1:
+        j = sin_t + (jnp.pi - theta) * cos_t
+        scale = nx * ny
+    elif degree == 2:
+        j = 3.0 * sin_t * cos_t + (jnp.pi - theta) * (1.0 + 2.0 * cos_t**2)
+        scale = (nx * ny) ** 2
+    else:
+        raise ValueError(f"unsupported arc-cos degree {degree}")
+    return (1.0 / jnp.pi) * scale * j
+
+
+# -------------------------------------------------------- TensorSketch ----
+def tensorsketch(x, hs, ss, t):
+    """TensorSketch of the degree-q polynomial feature map (Pham–Pagh).
+
+    x: [n, m]; hs, ss: [q, m] independent CountSketch params.
+    Returns [n, t] with E[TS(x)ᵀTS(y)] = (xᵀy)^q.
+    Computed as IFFT( Π_q FFT(CS_q(x)) ).
+    """
+    q = hs.shape[0]
+    acc = None
+    for i in range(q):
+        c = countsketch(x, hs[i], ss[i], t)
+        f = jnp.fft.fft(c, axis=1)
+        acc = f if acc is None else acc * f
+    return jnp.real(jnp.fft.ifft(acc, axis=1))
+
+
+# ------------------------------------------------- protocol-side math ----
+def leverage_norms(zinv_t, e):
+    """Column squared norms of (Zᵀ)⁻¹E.  zinv_t: [t, t], e: [t, n] -> [n]."""
+    u = zinv_t @ e
+    return jnp.sum(u * u, axis=0)
+
+
+def project_residual(rinv_t, k_ya, diag_a):
+    """Kernel-trick projection onto span φ(Y) + squared residuals.
+
+    rinv_t: [y, y] = R⁻ᵀ from K(Y,Y) = RᵀR;  k_ya: [y, n];  diag_a: [n]
+    Returns (Π = R⁻ᵀ K(Y,A): [y, n], residuals: [n]).
+    """
+    pi = rinv_t @ k_ya
+    res = jnp.maximum(diag_a - jnp.sum(pi * pi, axis=0), 0.0)
+    return pi, res
+
+
+# --------------------------------------------------------------- numpy ----
+def np_median_pairwise(x, sample=None, seed=0):
+    """Median pairwise distance ("median trick") — numpy helper for tests."""
+    rng = np.random.default_rng(seed)
+    x = np.asarray(x)
+    if sample is not None and x.shape[0] > sample:
+        x = x[rng.choice(x.shape[0], sample, replace=False)]
+    d2 = np.maximum(
+        (x * x).sum(1)[:, None] + (x * x).sum(1)[None, :] - 2 * x @ x.T, 0
+    )
+    iu = np.triu_indices(x.shape[0], 1)
+    return float(np.sqrt(np.median(d2[iu])))

@@ -1,0 +1,86 @@
+"""Pallas kernel: tiled random-feature blocks (RFF and arc-cos).
+
+The hot loop of the worker-local kernel subspace embedding (paper §5.1)
+is Z = sqrt(2/m)·cos(XΩ + b): an [n,d]×[d,m] matmul with a fused
+elementwise epilogue. We tile over (n, m) with BlockSpec so each grid
+step keeps one (bn,d)·(d,bm) tile pair VMEM-resident and applies the
+epilogue while the tile is still on-chip (single HBM pass).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the matmul feeds the MXU
+in (bn×d)·(d×bm) tiles; cos/relu-power run on the VPU over the same
+VMEM tile. interpret=True everywhere — the CPU PJRT plugin cannot run
+Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rff_kernel(x_ref, omega_ref, b_ref, o_ref, *, scale):
+    """One (bn, bm) output tile: scale * cos(x @ omega + b)."""
+    acc = jnp.dot(x_ref[...], omega_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = scale * jnp.cos(acc + b_ref[...][None, :])
+
+
+def _arccos_kernel(x_ref, omega_ref, o_ref, *, scale, degree):
+    """One (bn, bm) output tile: scale * Θ(x@omega)·(x@omega)^degree."""
+    acc = jnp.dot(x_ref[...], omega_ref[...], preferred_element_type=jnp.float32)
+    pos = (acc > 0).astype(jnp.float32)
+    r = pos if degree == 0 else pos * acc**degree
+    o_ref[...] = scale * r
+
+
+def _grid_specs(n, d, m, bn, bm, with_bias):
+    grid = (n // bn, m // bm)
+    in_specs = [
+        pl.BlockSpec((bn, d), lambda i, j: (i, 0)),  # X tile: row block, full d
+        pl.BlockSpec((d, bm), lambda i, j: (0, j)),  # Ω tile: full d, col block
+    ]
+    if with_bias:
+        in_specs.append(pl.BlockSpec((bm,), lambda i, j: (j,)))
+    out_spec = pl.BlockSpec((bn, bm), lambda i, j: (i, j))
+    return grid, in_specs, out_spec
+
+
+def rff_features(x, omega, b, *, block_n=128, block_m=128):
+    """Pallas RFF features: [n,d],[d,m],[m] -> [n,m]. Shapes must tile."""
+    n, d = x.shape
+    m = omega.shape[1]
+    bn, bm = min(block_n, n), min(block_m, m)
+    assert n % bn == 0 and m % bm == 0, (n, m, bn, bm)
+    grid, in_specs, out_spec = _grid_specs(n, d, m, bn, bm, True)
+    scale = float(2.0 / m) ** 0.5  # python scalar: pallas kernels must not capture tracers
+    return pl.pallas_call(
+        functools.partial(_rff_kernel, scale=scale),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(x, omega, b)
+
+
+def arccos_features(x, omega, degree, *, block_n=128, block_m=128):
+    """Pallas arc-cos random features: [n,d],[d,m] -> [n,m]."""
+    n, d = x.shape
+    m = omega.shape[1]
+    bn, bm = min(block_n, n), min(block_m, m)
+    assert n % bn == 0 and m % bm == 0, (n, m, bn, bm)
+    grid, in_specs, out_spec = _grid_specs(n, d, m, bn, bm, False)
+    scale = float(2.0 / m) ** 0.5
+    return pl.pallas_call(
+        functools.partial(_arccos_kernel, scale=scale, degree=float(degree)),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(x, omega)
+
+
+def vmem_estimate_bytes(d, bn=128, bm=128):
+    """Estimated VMEM residency of one grid step (f32): X + Ω + b + out."""
+    return 4 * (bn * d + d * bm + bm + bn * bm)

@@ -1,0 +1,26 @@
+"""TensorSketch for polynomial kernels (Pham–Pagh / Avron et al.).
+
+TS(x) = IFFT( Π_{i<q} FFT(CS_i(x)) ) satisfies
+E[TS(x)ᵀTS(y)] = (xᵀy)^q — a subspace embedding of the degree-q
+polynomial feature map (paper Lemma 4). The q component CountSketches
+are the Pallas hot path (MXU matmul formulation, see countsketch.py);
+the FFT combine stays at the jnp level — XLA's native FFT is already a
+tuned custom-call, re-deriving it in Pallas buys nothing on TPU.
+"""
+
+import jax.numpy as jnp
+
+from . import countsketch as cs
+
+
+def tensorsketch(x, hs, ss, t, *, block_n=128, block_m=128):
+    """TensorSketch: x [n,m], hs/ss [q,m] -> [n,t] (real f32)."""
+    q = hs.shape[0]
+    acc = None
+    for i in range(q):
+        c = cs.countsketch(
+            x, hs[i], ss[i], t, block_n=block_n, block_m=block_m
+        )
+        f = jnp.fft.fft(c, axis=1)
+        acc = f if acc is None else acc * f
+    return jnp.real(jnp.fft.ifft(acc, axis=1)).astype(jnp.float32)

@@ -1,0 +1,84 @@
+"""L2 — the worker-local compute graphs of disKPCA, in JAX.
+
+Each function here is a fixed-shape graph over one *column block* of a
+worker's local data (rust loops blocks and pads, see
+``rust/src/runtime``). They call the Pallas L1 kernels and are lowered
+once by ``aot.py`` to HLO text artifacts.
+
+Dynamic-parameter conventions (so artifacts stay static-shape):
+- Gaussian γ is baked to 1.0 — rust pre-scales data by √γ (distances
+  scale: ‖√γx − √γy‖² = γ‖x−y‖²), and draws Ω already scaled by 1/σ.
+- polynomial is the paper's homogeneous κ = ⟨x,y⟩^q with q static per
+  artifact; an inhomogeneous kernel is obtained by appending a √c
+  constant coordinate on the rust side.
+- arc-cos degree is static per artifact.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import countsketch as cs_k
+from .kernels import gram as gram_k
+from .kernels import rff as rff_k
+from .kernels import tensorsketch as ts_k
+
+
+# ------------------------------------------------ kernel space embeds ----
+def embed_rff(x, omega, b, h, s, *, t):
+    """E-block for shift-invariant kernels: CountSketch(RFF(x)).
+
+    x: [n, d], omega: [d, m], b: [m], h/s: [m]  ->  [n, t]
+    (paper §5.1: S(φ(x)) = T·R(φ(x)) with T = CountSketch.)
+    """
+    z = rff_k.rff_features(x, omega, b)
+    return cs_k.countsketch(z, h, s, t)
+
+
+def embed_arccos(x, omega, h, s, *, t, degree):
+    """E-block for arc-cosine kernels: CountSketch(relu-features(x))."""
+    z = rff_k.arccos_features(x, omega, degree)
+    return cs_k.countsketch(z, h, s, t)
+
+
+def embed_poly(x, hs, ss, g):
+    """E-block for polynomial kernels: TensorSketch then Gaussian sketch.
+
+    x: [n, d], hs/ss: [q, d], g: [t2, t]  ->  [n, t]
+    (paper Lemma 4: TENSORSKETCH to O(3^q k²) dims, then dense Gaussian
+    down to t = O(k/ε).)
+    """
+    t2 = g.shape[0]
+    ts = ts_k.tensorsketch(x, hs, ss, t2)
+    return jnp.dot(ts, g, preferred_element_type=jnp.float32)
+
+
+# ----------------------------------------------------------- gram ops ----
+def gram_gauss(y, x):
+    """K(Y, X) Gaussian block, γ baked to 1 (rust pre-scales)."""
+    return gram_k.gram_block(y, x, "gauss", gamma=1.0)
+
+
+def gram_poly(y, x, *, q):
+    """K(Y, X) homogeneous polynomial block ⟨y,x⟩^q."""
+    return gram_k.gram_block(y, x, "poly", c=0.0, q=q)
+
+
+def gram_arccos(y, x, *, degree):
+    """K(Y, X) arc-cosine block."""
+    return gram_k.gram_block(y, x, "arccos", degree=degree)
+
+
+# ------------------------------------------------ protocol-side math ----
+def leverage_norms(zinv_t, e):
+    """disLS step 3 (paper Alg. 1): ℓⱼ = ‖((Zᵀ)⁻¹E)_{:j}‖²."""
+    u = jnp.dot(zinv_t, e, preferred_element_type=jnp.float32)
+    return jnp.sum(u * u, axis=0)
+
+
+def project_residual(rinv_t, k_ya, diag_a):
+    """Appendix A kernel-trick projection: Π = R⁻ᵀK(Y,A), residuals.
+
+    Returns (Π: [y, n], res: [n]) with res_j = κ(a_j,a_j) − ‖Π_{:j}‖².
+    """
+    pi = jnp.dot(rinv_t, k_ya, preferred_element_type=jnp.float32)
+    res = jnp.maximum(diag_a - jnp.sum(pi * pi, axis=0), 0.0)
+    return pi, res

@@ -1,0 +1,26 @@
+"""Shared fixtures/strategies for the L1/L2 test suite."""
+
+import numpy as np
+import pytest
+from hypothesis import strategies as st
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+@pytest.fixture
+def nprng():
+    return rng(0)
+
+
+# Dimensions are drawn as (multiplier, block) pairs so the pallas grids
+# always tile exactly; blocks are kept small — interpret mode is slow.
+def tiled_dims(max_blocks=3, blocks=(4, 8, 16)):
+    return st.tuples(
+        st.integers(1, max_blocks), st.sampled_from(blocks)
+    ).map(lambda t: (t[0] * t[1], t[1]))
+
+
+def f32a(r, *shape, scale=1.0):
+    return (r.standard_normal(shape) * scale).astype(np.float32)

@@ -1,0 +1,79 @@
+"""AOT pipeline: grid construction, lowering, manifest integrity."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from compile import aot
+
+
+def test_grid_covers_design():
+    names = [n for n, _, _ in aot.build_grid()]
+    for d in aot.D_GRID:
+        for fam in (
+            "embed_rff",
+            "embed_arccos",
+            "embed_poly",
+            "gram_gauss",
+            "gram_poly",
+            "gram_arccos",
+        ):
+            assert f"{fam}_d{d}" in names
+    assert "leverage_norms" in names and "project_residual" in names
+
+
+def test_lower_one_artifact_to_hlo_text():
+    name, fn, specs = aot.build_grid()[0]
+    lowered = jax.jit(fn).lower(*[s for _, s in specs])
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+@pytest.mark.skipif(
+    not os.path.exists(
+        os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    ),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_matches_files():
+    adir = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(adir, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    assert len(man["artifacts"]) == len(aot.build_grid())
+    for art in man["artifacts"]:
+        path = os.path.join(adir, art["file"])
+        assert os.path.exists(path), art["file"]
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head
+        assert art["inputs"] and art["outputs"]
+        for spec in art["inputs"] + art["outputs"]:
+            assert all(dim > 0 for dim in spec["shape"])
+
+
+def test_out_specs_shapes():
+    # project_residual returns a 2-tuple
+    name, fn, specs = [a for a in aot.build_grid() if a[0] == "project_residual"][0]
+    outs = aot.out_specs(fn, [s for _, s in specs])
+    assert len(outs) == 2
+    assert outs[0]["shape"] == [aot.Y_PAD, aot.BLOCK_N]
+    assert outs[1]["shape"] == [aot.BLOCK_N]
+
+
+def test_cli_filter_runs(tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path), "--only", "leverage"],
+        capture_output=True,
+        text=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    assert out.returncode == 0, out.stderr
+    assert (tmp_path / "leverage_norms.hlo.txt").exists()
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert [a["name"] for a in man["artifacts"]] == ["leverage_norms"]

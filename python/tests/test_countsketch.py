@@ -1,0 +1,77 @@
+"""L1: Pallas CountSketch kernel vs oracle + sketch invariants."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import countsketch as cs
+from compile.kernels import ref
+from .conftest import f32a, rng, tiled_dims
+
+
+def cs_params(r, m, t):
+    h = r.integers(0, t, m).astype(np.int32)
+    s = (r.integers(0, 2, m) * 2 - 1).astype(np.float32)
+    return h, s
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nd=tiled_dims(),
+    md=tiled_dims(),
+    t=st.sampled_from([4, 16, 32]),
+    seed=st.integers(0, 2**31),
+)
+def test_countsketch_matches_ref(nd, md, t, seed):
+    (n, bn), (m, bm) = nd, md
+    r = rng(seed)
+    x = f32a(r, n, m)
+    h, s = cs_params(r, m, t)
+    got = cs.countsketch(x, h, s, t, block_n=bn, block_m=bm)
+    want = ref.countsketch(x, h, s, t)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_countsketch_exact_scatter_semantics():
+    """Hand-checkable case: every column to bucket 0 sums the row."""
+    x = np.arange(12, dtype=np.float32).reshape(2, 6)
+    h = np.zeros(6, np.int32)
+    s = np.ones(6, np.float32)
+    got = np.asarray(cs.countsketch(x, h, s, 4, block_n=2, block_m=6))
+    want = np.zeros((2, 4), np.float32)
+    want[:, 0] = x.sum(1)
+    np.testing.assert_allclose(got, want)
+
+
+def test_countsketch_sign_sensitivity():
+    x = np.ones((2, 2), np.float32)
+    h = np.array([1, 1], np.int32)
+    s = np.array([1.0, -1.0], np.float32)
+    got = np.asarray(cs.countsketch(x, h, s, 2, block_n=2, block_m=2))
+    np.testing.assert_allclose(got, 0.0)
+
+
+def test_countsketch_inner_product_unbiased():
+    """E[CS(x)ᵀCS(y)] = xᵀy: average over many independent sketches."""
+    r = rng(7)
+    m, t, trials = 64, 16, 400
+    x = f32a(r, 1, m)
+    y = f32a(r, 1, m)
+    exact = float((x @ y.T)[0, 0])
+    est = []
+    for _ in range(trials):
+        h, s = cs_params(r, m, t)
+        cx = ref.countsketch(x, h, s, t)
+        cy = ref.countsketch(y, h, s, t)
+        est.append(float((np.asarray(cx) @ np.asarray(cy).T)[0, 0]))
+    assert abs(np.mean(est) - exact) < 0.5
+
+
+def test_countsketch_accumulates_across_m_blocks():
+    """Grid revisiting: m split over 4 blocks must equal single block."""
+    r = rng(3)
+    x = f32a(r, 8, 32)
+    h, s = cs_params(r, 32, 8)
+    a = np.asarray(cs.countsketch(x, h, s, 8, block_n=8, block_m=8))
+    b = np.asarray(cs.countsketch(x, h, s, 8, block_n=8, block_m=32))
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)

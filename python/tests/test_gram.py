@@ -1,0 +1,91 @@
+"""L1: Pallas gram-block kernels vs oracle + kernel-math invariants."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import gram, ref
+from .conftest import f32a, rng, tiled_dims
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    nyd=tiled_dims(),
+    nxd=tiled_dims(),
+    d=st.integers(2, 16),
+    seed=st.integers(0, 2**31),
+)
+def test_gram_gauss_matches_ref(nyd, nxd, d, seed):
+    (ny, by), (nx, bx) = nyd, nxd
+    r = rng(seed)
+    y, x = f32a(r, ny, d), f32a(r, nx, d)
+    got = gram.gram_block(y, x, "gauss", gamma=0.7, block_y=by, block_x=bx)
+    want = ref.gram_gauss(y, x, 0.7)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    nyd=tiled_dims(),
+    nxd=tiled_dims(),
+    q=st.sampled_from([2, 3, 4]),
+    seed=st.integers(0, 2**31),
+)
+def test_gram_poly_matches_ref(nyd, nxd, q, seed):
+    (ny, by), (nx, bx) = nyd, nxd
+    r = rng(seed)
+    y, x = f32a(r, ny, 5, scale=0.5), f32a(r, nx, 5, scale=0.5)
+    got = gram.gram_block(y, x, "poly", c=0.0, q=q, block_y=by, block_x=bx)
+    want = ref.gram_poly(y, x, 0.0, q)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    nyd=tiled_dims(),
+    degree=st.sampled_from([0, 1, 2]),
+    seed=st.integers(0, 2**31),
+)
+def test_gram_arccos_matches_ref(nyd, degree, seed):
+    (ny, by) = nyd
+    r = rng(seed)
+    y, x = f32a(r, ny, 6), f32a(r, 8, 6)
+    got = gram.gram_block(
+        y, x, "arccos", degree=degree, block_y=by, block_x=8
+    )
+    want = ref.gram_arccos(y, x, degree)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gram_gauss_diagonal_ones():
+    r = rng(2)
+    x = f32a(r, 16, 4)
+    k = np.asarray(gram.gram_block(x, x, "gauss", gamma=1.0, block_y=8, block_x=8))
+    np.testing.assert_allclose(np.diag(k), 1.0, rtol=1e-5)
+    assert np.all(k <= 1.0 + 1e-6) and np.all(k >= 0.0)
+
+
+def test_gram_gauss_psd():
+    """Gram matrices are PSD — eigenvalues ≥ -tol."""
+    r = rng(5)
+    x = f32a(r, 24, 6)
+    k = np.asarray(gram.gram_block(x, x, "gauss", gamma=0.5, block_y=8, block_x=8))
+    w = np.linalg.eigvalsh((k + k.T) / 2)
+    assert w.min() > -1e-4
+
+
+def test_gram_arccos_known_identical_points():
+    """κ₂(x,x) = ‖x‖⁴·(1/π)·(0 + π·3) = 3‖x‖⁴? No: θ=0 ⇒ J₂ = 3π ⇒ κ = 3‖x‖⁴...
+
+    J₂(0) = 3·0·1 + π(1+2) = 3π, κ = (1/π)‖x‖⁴·3π = 3‖x‖⁴.
+    """
+    x = np.array([[1.0, 1.0]], np.float32)  # ‖x‖² = 2
+    k = np.asarray(gram.gram_block(x, x, "arccos", degree=2, block_y=1, block_x=1))
+    np.testing.assert_allclose(k[0, 0], 3.0 * 4.0, rtol=1e-5)
+
+
+def test_gram_poly_known_value():
+    y = np.array([[1.0, 2.0]], np.float32)
+    x = np.array([[3.0, 1.0]], np.float32)
+    k = np.asarray(gram.gram_block(y, x, "poly", c=0.0, q=4, block_y=1, block_x=1))
+    np.testing.assert_allclose(k[0, 0], 5.0**4, rtol=1e-6)

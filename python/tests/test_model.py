@@ -1,0 +1,91 @@
+"""L2: the jax compute graphs (model.py) — shape + semantics checks."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import ref
+from .conftest import f32a, rng
+
+
+def test_embed_rff_shapes_and_semantics():
+    r = rng(0)
+    n, d, m, t = 16, 5, 32, 8
+    x = f32a(r, n, d)
+    omega = f32a(r, d, m)
+    b = r.uniform(0, 2 * np.pi, m).astype(np.float32)
+    h = r.integers(0, t, m).astype(np.int32)
+    s = (r.integers(0, 2, m) * 2 - 1).astype(np.float32)
+    e = np.asarray(model.embed_rff(x, omega, b, h, s, t=t))
+    assert e.shape == (n, t)
+    want = ref.countsketch(ref.rff_features(x, omega, b), h, s, t)
+    np.testing.assert_allclose(e, want, rtol=1e-4, atol=1e-5)
+
+
+def test_embed_rff_preserves_gram():
+    """E·Eᵀ ≈ K for large m, t: the whole point of §5.1."""
+    r = rng(1)
+    n, d, m, t = 16, 4, 2048, 256
+    sigma = 2.0
+    x = f32a(r, n, d)
+    omega = (r.standard_normal((d, m)) / sigma).astype(np.float32)
+    b = r.uniform(0, 2 * np.pi, m).astype(np.float32)
+    h = r.integers(0, t, m).astype(np.int32)
+    s = (r.integers(0, 2, m) * 2 - 1).astype(np.float32)
+    e = np.asarray(model.embed_rff(x, omega, b, h, s, t=t))
+    k_approx = e @ e.T
+    k = np.asarray(ref.gram_gauss(x, x, 1.0 / (2 * sigma**2)))
+    assert np.max(np.abs(k_approx - k)) < 0.35
+
+
+def test_embed_poly_shapes():
+    r = rng(2)
+    n, d, q, t2, t = 8, 16, 2, 64, 8
+    x = f32a(r, n, d, scale=0.5)
+    hs = r.integers(0, t2, (q, d)).astype(np.int32)
+    ss = (r.integers(0, 2, (q, d)) * 2 - 1).astype(np.float32)
+    g = (r.standard_normal((t2, t)) / np.sqrt(t)).astype(np.float32)
+    e = np.asarray(model.embed_poly(x, hs, ss, g))
+    assert e.shape == (n, t)
+    want = np.asarray(ref.tensorsketch(x, hs, ss, t2)) @ np.asarray(g)
+    np.testing.assert_allclose(e, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_leverage_norms_matches_ref(seed):
+    r = rng(seed)
+    t, n = 6, 20
+    zinv = f32a(r, t, t)
+    e = f32a(r, t, n)
+    got = np.asarray(model.leverage_norms(zinv, e))
+    want = np.asarray(ref.leverage_norms(zinv, e))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_project_residual_matches_ref(seed):
+    r = rng(seed)
+    y, n = 5, 12
+    rinv = f32a(r, y, y)
+    k_ya = f32a(r, y, n)
+    diag = np.abs(f32a(r, n)) + 5.0
+    got_pi, got_res = model.project_residual(rinv, k_ya, diag)
+    want_pi, want_res = ref.project_residual(rinv, k_ya, diag)
+    np.testing.assert_allclose(got_pi, want_pi, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got_res, want_res, rtol=1e-4, atol=1e-4)
+
+
+def test_project_residual_exact_for_points_in_span():
+    """Residual of a point that *is* in Y must be ~0 (gauss kernel)."""
+    r = rng(3)
+    yv = f32a(r, 4, 3)
+    k_yy = np.asarray(ref.gram_gauss(yv, yv, 1.0)) + 1e-6 * np.eye(4)
+    rchol = np.linalg.cholesky(k_yy).T  # K = RᵀR
+    rinv_t = np.linalg.inv(rchol.T).astype(np.float32)
+    k_ya = np.asarray(ref.gram_gauss(yv, yv, 1.0))  # A = Y
+    diag = np.ones(4, np.float32)
+    _, res = model.project_residual(rinv_t.astype(np.float32), k_ya, diag)
+    assert np.max(np.asarray(res)) < 1e-3

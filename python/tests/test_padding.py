@@ -1,0 +1,104 @@
+"""Padding equivalence — the contract the rust runtime relies on.
+
+`rust/src/runtime/xla.rs` pads inputs to the artifact grid's static
+shapes (zero feature-rows, zero point-columns). These tests pin the
+mathematical facts that make that sound:
+- zero-padding the feature dim of X and Ω/Y leaves RFF features, gram
+  blocks and TensorSketch outputs unchanged;
+- zero-padded point-columns produce garbage only in their own output
+  columns (which rust slices away).
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import countsketch as cs
+from compile.kernels import gram, ref, rff
+from .conftest import f32a, rng
+
+
+def pad_rows(a, rows):
+    out = np.zeros((rows, a.shape[1]), np.float32)
+    out[: a.shape[0]] = a
+    return out
+
+
+def pad_cols(a, cols):
+    out = np.zeros((a.shape[0], cols), np.float32)
+    out[:, : a.shape[1]] = a
+    return out
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.integers(2, 12), dpad=st.integers(0, 8), seed=st.integers(0, 2**31))
+def test_rff_feature_dim_padding_invariant(d, dpad, seed):
+    r = rng(seed)
+    n, m = 8, 16
+    x = f32a(r, n, d)
+    omega = f32a(r, d, m)
+    b = r.uniform(0, 2 * np.pi, m).astype(np.float32)
+    base = np.asarray(rff.rff_features(x, omega, b, block_n=8, block_m=16))
+    xp = pad_cols(x, d + dpad)  # features are x columns here ([n, d])
+    op = pad_rows(omega, d + dpad)
+    padded = np.asarray(rff.rff_features(xp, op, b, block_n=8, block_m=16))
+    np.testing.assert_allclose(padded, base, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.integers(2, 10), dpad=st.integers(0, 6), seed=st.integers(0, 2**31))
+def test_gram_feature_dim_padding_invariant(d, dpad, seed):
+    r = rng(seed)
+    y = f32a(r, 8, d)
+    x = f32a(r, 8, d)
+    for kind, params in [("gauss", dict(gamma=0.8)), ("poly", dict(c=0.0, q=4)), ("arccos", dict(degree=2))]:
+        base = np.asarray(gram.gram_block(y, x, kind, block_y=8, block_x=8, **params))
+        yp = pad_cols(y, d + dpad)
+        xp = pad_cols(x, d + dpad)
+        padded = np.asarray(gram.gram_block(yp, xp, kind, block_y=8, block_x=8, **params))
+        np.testing.assert_allclose(padded, base, rtol=1e-5, atol=1e-5, err_msg=kind)
+
+
+def test_point_column_padding_isolated():
+    """Padded point-rows only affect their own output rows."""
+    r = rng(3)
+    n, d, m = 6, 4, 8
+    x = f32a(r, n, d)
+    omega = f32a(r, d, m)
+    b = r.uniform(0, 2 * np.pi, m).astype(np.float32)
+    base = np.asarray(rff.rff_features(x, omega, b, block_n=6, block_m=8))
+    xp = pad_rows(x, 8)
+    padded = np.asarray(rff.rff_features(xp, omega, b, block_n=8, block_m=8))
+    np.testing.assert_allclose(padded[:n], base, rtol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_countsketch_padded_inputs_zero_contribution(seed):
+    """Extra sketch columns mapped anywhere contribute 0 for zero data."""
+    r = rng(seed)
+    n, m, t = 8, 16, 8
+    x = f32a(r, n, m)
+    h = r.integers(0, t, m).astype(np.int32)
+    s = (r.integers(0, 2, m) * 2 - 1).astype(np.float32)
+    base = np.asarray(cs.countsketch(x, h, s, t, block_n=8, block_m=16))
+    # pad 8 zero feature-columns with arbitrary tables
+    xp = pad_cols(x, m + 8)
+    hp = np.concatenate([h, r.integers(0, t, 8).astype(np.int32)])
+    sp = np.concatenate([s, np.ones(8, np.float32)])
+    padded = np.asarray(cs.countsketch(xp, hp, sp, t, block_n=8, block_m=24))
+    np.testing.assert_allclose(padded, base, rtol=1e-6, atol=1e-6)
+
+
+def test_tensorsketch_feature_padding_invariant():
+    r = rng(5)
+    n, m, t, q = 4, 8, 16, 3
+    x = f32a(r, n, m, scale=0.5)
+    hs = r.integers(0, t, (q, m)).astype(np.int32)
+    ss = (r.integers(0, 2, (q, m)) * 2 - 1).astype(np.float32)
+    base = np.asarray(ref.tensorsketch(x, hs, ss, t))
+    xp = pad_cols(x, m + 6)
+    hsp = np.concatenate([hs, np.zeros((q, 6), np.int32)], axis=1)
+    ssp = np.concatenate([ss, np.ones((q, 6), np.float32)], axis=1)
+    padded = np.asarray(ref.tensorsketch(xp, hsp, ssp, t))
+    np.testing.assert_allclose(padded, base, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,94 @@
+"""L1: Pallas RFF / arc-cos feature kernels vs pure-jnp oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref, rff
+from .conftest import f32a, rng, tiled_dims
+
+
+@settings(max_examples=15, deadline=None)
+@given(nd=tiled_dims(), md=tiled_dims(), d=st.integers(3, 24), seed=st.integers(0, 2**31))
+def test_rff_matches_ref(nd, md, d, seed):
+    (n, bn), (m, bm) = nd, md
+    r = rng(seed)
+    x = f32a(r, n, d)
+    omega = f32a(r, d, m)
+    b = (r.uniform(0, 2 * np.pi, m)).astype(np.float32)
+    got = rff.rff_features(x, omega, b, block_n=bn, block_m=bm)
+    want = ref.rff_features(x, omega, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nd=tiled_dims(),
+    md=tiled_dims(),
+    degree=st.sampled_from([0, 1, 2]),
+    seed=st.integers(0, 2**31),
+)
+def test_arccos_features_match_ref(nd, md, degree, seed):
+    (n, bn), (m, bm) = nd, md
+    r = rng(seed)
+    x = f32a(r, n, 7)
+    omega = f32a(r, 7, m)
+    got = rff.arccos_features(x, omega, degree, block_n=bn, block_m=bm)
+    want = ref.arccos_features(x, omega, degree)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_rff_approximates_gaussian_kernel():
+    """Statistical: z(x)ᵀz(y) ≈ exp(-‖x-y‖²/2σ²) with m=4096 features."""
+    r = rng(1)
+    d, m, n = 6, 4096, 16
+    sigma = 1.5
+    x = f32a(r, n, d)
+    omega = (r.standard_normal((d, m)) / sigma).astype(np.float32)
+    b = r.uniform(0, 2 * np.pi, m).astype(np.float32)
+    z = np.asarray(rff.rff_features(x, omega, b, block_n=8, block_m=128))
+    approx = z @ z.T
+    exact = np.asarray(ref.gram_gauss(x, x, 1.0 / (2 * sigma**2)))
+    assert np.max(np.abs(approx - exact)) < 0.15
+
+
+def test_rff_approximates_laplace_kernel():
+    """The same Pallas cos-feature kernel serves the Laplacian kernel
+    when ω is Cauchy-distributed (the rust coordinator's
+    Kernel::Laplace path): z(x)ᵀz(y) ≈ exp(-γ‖x-y‖₁)."""
+    r = rng(2)
+    d, m, n = 5, 8192, 12
+    gamma = 0.5
+    x = (0.5 * r.standard_normal((n, d))).astype(np.float32)
+    omega = (gamma * np.tan(np.pi * (r.uniform(size=(d, m)) - 0.5))).astype(np.float32)
+    b = r.uniform(0, 2 * np.pi, m).astype(np.float32)
+    z = np.asarray(rff.rff_features(x, omega, b, block_n=4, block_m=128))
+    approx = z @ z.T
+    l1 = np.abs(x[:, None, :] - x[None, :, :]).sum(-1)
+    exact = np.exp(-gamma * l1)
+    assert np.max(np.abs(approx - exact)) < 0.15
+
+
+def test_rff_value_known_case():
+    """d=1, ω=0, b=0 ⇒ all features = sqrt(2/m)·cos(0)."""
+    x = np.ones((8, 1), np.float32)
+    omega = np.zeros((1, 8), np.float32)
+    b = np.zeros(8, np.float32)
+    z = np.asarray(rff.rff_features(x, omega, b, block_n=8, block_m=8))
+    np.testing.assert_allclose(z, np.sqrt(2 / 8), rtol=1e-6)
+
+
+def test_rff_rejects_untileable():
+    with pytest.raises(AssertionError):
+        rff.rff_features(
+            np.zeros((9, 3), np.float32),
+            np.zeros((3, 8), np.float32),
+            np.zeros(8, np.float32),
+            block_n=8,
+            block_m=8,
+        )
+
+
+def test_vmem_estimate_positive():
+    assert rff.vmem_estimate_bytes(128) > 0

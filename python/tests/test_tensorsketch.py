@@ -1,0 +1,59 @@
+"""L1: TensorSketch (pallas countsketch + FFT combine) vs oracle."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref, tensorsketch as ts
+from .conftest import f32a, rng, tiled_dims
+
+
+def ts_params(r, q, m, t):
+    hs = r.integers(0, t, (q, m)).astype(np.int32)
+    ss = (r.integers(0, 2, (q, m)) * 2 - 1).astype(np.float32)
+    return hs, ss
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nd=tiled_dims(),
+    md=tiled_dims(),
+    q=st.sampled_from([2, 3, 4]),
+    t=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31),
+)
+def test_tensorsketch_matches_ref(nd, md, q, t, seed):
+    (n, bn), (m, bm) = nd, md
+    r = rng(seed)
+    x = f32a(r, n, m, scale=0.5)
+    hs, ss = ts_params(r, q, m, t)
+    got = ts.tensorsketch(x, hs, ss, t, block_n=bn, block_m=bm)
+    want = ref.tensorsketch(x, hs, ss, t)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_tensorsketch_unbiased_for_poly_kernel():
+    """E[TS(x)ᵀTS(y)] = (xᵀy)^q — check with averaging over sketches."""
+    r = rng(11)
+    m, t, q, trials = 8, 64, 2, 600
+    x = f32a(r, 1, m, scale=0.5)
+    y = f32a(r, 1, m, scale=0.5)
+    exact = float((x @ y.T)[0, 0]) ** q
+    est = []
+    for _ in range(trials):
+        hs, ss = ts_params(r, q, m, t)
+        tx = np.asarray(ref.tensorsketch(x, hs, ss, t))
+        ty = np.asarray(ref.tensorsketch(y, hs, ss, t))
+        est.append(float((tx @ ty.T)[0, 0]))
+    # var of TS is O(‖x‖²q‖y‖²q/t); generous 3σ-style bound
+    assert abs(np.mean(est) - exact) < 0.3, (np.mean(est), exact)
+
+
+def test_tensorsketch_degree1_is_countsketch():
+    """q=1 TensorSketch degenerates to a plain CountSketch."""
+    r = rng(4)
+    x = f32a(r, 8, 16)
+    hs, ss = ts_params(r, 1, 16, 8)
+    got = np.asarray(ts.tensorsketch(x, hs, ss, 8, block_n=8, block_m=16))
+    want = np.asarray(ref.countsketch(x, hs[0], ss[0], 8))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

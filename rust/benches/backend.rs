@@ -1,0 +1,78 @@
+//! Backend benchmarks: the worker-side heavy ops, native-f64 vs the
+//! XLA/PJRT artifact path (L1 Pallas inside L2 JAX). These are the
+//! numbers §Perf optimizes — the embed and gram calls dominate every
+//! protocol round.
+
+use std::sync::Arc;
+
+use diskpca::bench_harness::{black_box, Bencher};
+use diskpca::data::Data;
+use diskpca::embed::EmbedSpec;
+use diskpca::kernels::Kernel;
+use diskpca::linalg::Mat;
+use diskpca::rng::Rng;
+use diskpca::runtime::{Backend, NativeBackend, XlaBackend};
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::seed_from(3);
+    let native: Arc<dyn Backend> = Arc::new(NativeBackend::new());
+    let xla: Option<Arc<dyn Backend>> = XlaBackend::load("artifacts")
+        .ok()
+        .map(|x| Arc::new(x) as Arc<dyn Backend>);
+    if xla.is_none() {
+        eprintln!("NOTE: artifacts missing — run `make artifacts` for the XLA rows");
+    }
+
+    // mnist-like worker shard: 784 dims, 512 points
+    let x = Data::Dense(Mat::from_fn(784, 512, |_, _| rng.normal() * 0.3));
+    let gauss = EmbedSpec { kernel: Kernel::Gauss { gamma: 0.5 }, m: 512, t2: 512, t: 64, seed: 5 };
+    let poly = EmbedSpec { kernel: Kernel::Poly { q: 4 }, m: 512, t2: 512, t: 64, seed: 5 };
+    let backends: Vec<(&str, Arc<dyn Backend>)> = match &xla {
+        Some(x) => vec![("native", native.clone()), ("xla", x.clone())],
+        None => vec![("native", native.clone())],
+    };
+    for (name, be) in &backends {
+        let be = be.clone();
+        b.bench(&format!("embed_rff[{name}] 784x512 m=512 t=64"), {
+            let x = x.clone();
+            let be = be.clone();
+            move || black_box(be.embed(&gauss, &x))
+        });
+        b.bench(&format!("embed_poly[{name}] 784x512 q=4 t=64"), {
+            let x = x.clone();
+            let be = be.clone();
+            move || black_box(be.embed(&poly, &x))
+        });
+        let y = Mat::from_fn(784, 128, |_, _| rng.normal() * 0.3);
+        b.bench(&format!("gram_gauss[{name}] 128x512 d=784"), {
+            let x = x.clone();
+            let be = be.clone();
+            move || black_box(be.gram(Kernel::Gauss { gamma: 0.5 }, &y, &x))
+        });
+    }
+
+    // laplace gram — native-only path (no artifact; L1-distance kernel)
+    {
+        let y = Mat::from_fn(784, 128, |_, _| rng.normal() * 0.3);
+        let x2 = x.clone();
+        b.bench("gram_laplace[native] 128x512 d=784", move || {
+            black_box(diskpca::kernels::gram(Kernel::Laplace { gamma: 0.5 }, &y, &x2))
+        });
+        let ylo = Mat::from_fn(18, 256, |_, _| rng.normal());
+        let xlo = Data::Dense(Mat::from_fn(18, 4096, |_, _| rng.normal()));
+        b.bench("gram_laplace[native] 256x4096 d=18 (susy)", move || {
+            black_box(diskpca::kernels::gram(Kernel::Laplace { gamma: 0.5 }, &ylo, &xlo))
+        });
+    }
+
+    // sparse bow-like shard through the native path (XLA densifies)
+    let xs = Data::Sparse(diskpca::data::zipf_sparse(4096, 256, 60, &mut rng));
+    let gauss_sp = EmbedSpec { kernel: Kernel::Gauss { gamma: 0.1 }, m: 512, t2: 512, t: 64, seed: 7 };
+    b.bench("embed_rff[native] sparse 4096x256 rho=60", {
+        let native = native.clone();
+        move || black_box(native.embed(&gauss_sp, &xs))
+    });
+
+    b.write_csv("results/bench_backend.csv").unwrap();
+}

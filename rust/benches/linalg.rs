@@ -1,0 +1,65 @@
+//! Master-side linear algebra benchmarks: the QR in disLS, the SVD in
+//! disLR, the eigensolvers behind batch KPCA — sized at the protocol's
+//! actual operating points.
+
+use diskpca::bench_harness::{black_box, Bencher};
+use diskpca::linalg::{chol_psd, eigh, qr_r_only, qr_thin, svd, top_eigh, top_k_left_singular, Mat};
+use diskpca::rng::Rng;
+
+fn randmat(rng: &mut Rng, m: usize, n: usize) -> Mat {
+    Mat::from_fn(m, n, |_, _| rng.normal())
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::seed_from(2);
+
+    // disLS master QR: (s·p)×t with s=100, p=250 → capped workload
+    let stacked = randmat(&mut rng, 4000, 64);
+    b.bench("qr_r_only 4000x64 (disLS master)", || {
+        black_box(qr_r_only(&stacked))
+    });
+    let a = randmat(&mut rng, 512, 128);
+    b.bench("qr_thin 512x128", || black_box(qr_thin(&a)));
+
+    // disLR master SVD: |Y|×(s·w) wide matrix via QR shrink
+    let pit = randmat(&mut rng, 250, 2000);
+    b.bench("top_k_left_singular 250x2000 k=10 (disLR)", || {
+        black_box(top_k_left_singular(&pit, 10))
+    });
+    let sq = randmat(&mut rng, 200, 200);
+    b.bench("svd 200x200", || black_box(svd(&sq)));
+
+    // K(Y,Y) cholesky at |Y| = 450
+    let y = randmat(&mut rng, 450, 32);
+    let spd = y.matmul_a_bt(&y);
+    let mut spd_j = spd.clone();
+    for i in 0..450 {
+        spd_j[(i, i)] += 1.0;
+    }
+    b.bench("chol_psd 450x450 (K_YY)", || black_box(chol_psd(&spd_j)));
+
+    // batch-KPCA eigensolvers
+    let k200 = {
+        let m = randmat(&mut rng, 200, 200);
+        let mut s = m.matmul_at_b(&m);
+        s.scale(1.0 / 200.0);
+        s
+    };
+    b.bench("eigh(jacobi) 200x200", || black_box(eigh(&k200)));
+    let k800 = {
+        let m = randmat(&mut rng, 800, 64);
+        m.matmul_a_bt(&m)
+    };
+    let mut seed_rng = Rng::seed_from(3);
+    b.bench("top_eigh 800x800 k=10 (batch ground truth)", || {
+        black_box(top_eigh(&k800, 10, &mut seed_rng))
+    });
+
+    // core matmul shape in the protocol hot loop
+    let m1 = randmat(&mut rng, 450, 450);
+    let m2 = randmat(&mut rng, 450, 256);
+    b.bench("matmul 450x450 * 450x256", || black_box(m1.matmul(&m2)));
+
+    b.write_csv("results/bench_linalg.csv").unwrap();
+}

@@ -1,0 +1,157 @@
+//! End-to-end protocol benchmarks — one per paper artifact family:
+//! the full disKPCA pass (Figs 4–6 runs), its four rounds separately,
+//! the baselines at matched |Y|, and k-means (Fig 8). Driven at a
+//! reduced scale so `cargo bench` stays minutes, not hours; the
+//! figure-fidelity runs live in `diskpca fig4 …`.
+
+use std::sync::Arc;
+
+use diskpca::bench_harness::{black_box, Bencher};
+use diskpca::coordinator::{
+    dis_embed, dis_eval, dis_kpca, dis_leverage_scores, dis_low_rank, dis_set_solution,
+    kmeans::distributed_kmeans, rep_sample, run_cluster, uniform_batch_kpca, uniform_dis_lr,
+    Params,
+};
+use diskpca::data::{by_name, Data};
+use diskpca::embed::EmbedSpec;
+use diskpca::kernels::{median_trick_gamma, Kernel};
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+fn params() -> Params {
+    Params { k: 10, t: 64, p: 128, n_lev: 30, n_adapt: 100, m_rff: 512, t2: 512, w: 0, seed: 5 }
+}
+
+fn workload(name: &str, scale: f64, workers: usize) -> (Vec<Data>, Data, Kernel) {
+    let mut spec = by_name(name, scale).unwrap();
+    spec.s = workers;
+    let data = spec.generate(11);
+    let mut rng = Rng::seed_from(13);
+    let gamma = median_trick_gamma(&data, 0.2, 128, &mut rng);
+    let shards = spec.partition(&data, 17);
+    (shards, data, Kernel::Gauss { gamma })
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let backend = Arc::new(NativeBackend::new());
+
+    // ---- full disKPCA, per dataset family (fig4/5/6 workloads) ----
+    for (name, family) in [
+        ("susy_like", "fig5"),
+        ("mnist8m_like", "fig5"),
+        ("news20_like", "fig6"),
+    ] {
+        let (shards, _, kernel) = workload(name, 0.08, 8);
+        let p = params();
+        let be = backend.clone();
+        b.bench(&format!("{family}/diskpca[{name}] s=8"), move || {
+            let shards = shards.clone();
+            let be = be.clone();
+            black_box(run_cluster(shards, kernel, be, move |c| {
+                let sol = dis_kpca(c, kernel, &p);
+                dis_eval(c);
+                sol.num_points()
+            }))
+        });
+    }
+
+    // ---- per-round decomposition on one workload ----
+    let (shards, _, kernel) = workload("mnist8m_like", 0.08, 8);
+    let p = params();
+    let spec = EmbedSpec { kernel, m: p.m_rff, t2: p.t2, t: p.t, seed: p.seed };
+    let be = backend.clone();
+    let sh2 = shards.clone();
+    b.bench("round/embed+disLS (Algs 4.1 + 1)", move || {
+        let shards = sh2.clone();
+        let be = be.clone();
+        black_box(run_cluster(shards, kernel, be, move |c| {
+            dis_embed(c, spec);
+            dis_leverage_scores(c, &p).len()
+        }))
+    });
+    let be = backend.clone();
+    let sh3 = shards.clone();
+    b.bench("round/full-pipeline (Algs 1+2+3)", move || {
+        let shards = sh3.clone();
+        let be = be.clone();
+        black_box(run_cluster(shards, kernel, be, move |c| {
+            dis_embed(c, spec);
+            let masses = dis_leverage_scores(c, &p);
+            let y = rep_sample(c, &p, &masses);
+            dis_low_rank(c, kernel, &p, &y).num_points()
+        }))
+    });
+
+    // ---- baselines at matched |Y| (fig4/5 comparison cost) ----
+    let total = p.n_lev + p.n_adapt;
+    let be = backend.clone();
+    let sh4 = shards.clone();
+    b.bench("baseline/uniform+disLR", move || {
+        let shards = sh4.clone();
+        let be = be.clone();
+        black_box(run_cluster(shards, kernel, be, move |c| {
+            uniform_dis_lr(c, kernel, &p, total).num_points()
+        }))
+    });
+    let be = backend.clone();
+    let sh5 = shards.clone();
+    b.bench("baseline/uniform+batchKPCA", move || {
+        let shards = sh5.clone();
+        let be = be.clone();
+        black_box(run_cluster(shards, kernel, be, move |c| {
+            let sol = uniform_batch_kpca(c, kernel, &p, total);
+            dis_set_solution(c, &sol);
+            sol.num_points()
+        }))
+    });
+
+    // ---- fig8: spectral clustering ----
+    let be = backend.clone();
+    let sh6 = shards.clone();
+    b.bench("fig8/diskpca+kmeans[mnist8m_like]", move || {
+        let shards = sh6.clone();
+        let be = be.clone();
+        black_box(run_cluster(shards, kernel, be, move |c| {
+            let _ = dis_kpca(c, kernel, &p);
+            distributed_kmeans(c, 10, 15, 99).iters
+        }))
+    });
+
+    // ---- extensions: CSS certificate + KRR downstream ----
+    let be = backend.clone();
+    let sh7 = shards.clone();
+    b.bench("ext/css+certificate", move || {
+        let shards = sh7.clone();
+        let be = be.clone();
+        black_box(run_cluster(shards, kernel, be, move |c| {
+            diskpca::coordinator::dis_css(c, kernel, &p).y.len()
+        }))
+    });
+    let be = backend.clone();
+    b.bench("ext/css+krr", move || {
+        let shards = shards.clone();
+        let be = be.clone();
+        black_box(run_cluster(shards, kernel, be, move |c| {
+            let css = diskpca::coordinator::dis_css(c, kernel, &p);
+            diskpca::coordinator::dis_krr(c, kernel, &css.y, 1e-3, 7).alpha.len()
+        }))
+    });
+
+    // ---- extension: laplace kernel end-to-end (native gram path) ----
+    let (lshards, ldata, _) = workload("susy_like", 0.08, 8);
+    let mut lrng = Rng::seed_from(29);
+    let lkernel = Kernel::Laplace {
+        gamma: diskpca::kernels::median_trick_gamma_l1(&ldata, 1.0, 128, &mut lrng),
+    };
+    let be = backend.clone();
+    b.bench("ext/diskpca-laplace[susy_like] s=8", move || {
+        let shards = lshards.clone();
+        let be = be.clone();
+        black_box(run_cluster(shards, lkernel, be, move |c| {
+            dis_kpca(c, lkernel, &p).num_points()
+        }))
+    });
+
+    b.write_csv("results/bench_protocol.csv").unwrap();
+}

@@ -1,0 +1,79 @@
+//! Transport benchmarks: in-memory vs TCP star, codec throughput —
+//! verifies the coordinator (L3) is not the bottleneck vs compute.
+
+use std::sync::Arc;
+
+use diskpca::bench_harness::{black_box, Bencher};
+use diskpca::comm::{codec, memory, tcp, Cluster, CommStats, Message};
+use diskpca::coordinator::Worker;
+use diskpca::data::Data;
+use diskpca::kernels::Kernel;
+use diskpca::linalg::Mat;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+fn spawn_memory(s: usize, n_per: usize) -> (Cluster, Vec<std::thread::JoinHandle<()>>) {
+    let mut rng = Rng::seed_from(1);
+    let (links, endpoints) = memory::star(s);
+    let cluster = Cluster::new(links, CommStats::new());
+    let handles = endpoints
+        .into_iter()
+        .map(|ep| {
+            let shard = Data::Dense(Mat::from_fn(16, n_per, |_, _| rng.normal()));
+            let be = Arc::new(NativeBackend::new());
+            std::thread::spawn(move || Worker::new(shard, Kernel::Gauss { gamma: 1.0 }, be).run(ep))
+        })
+        .collect();
+    (cluster, handles)
+}
+
+fn spawn_tcp(s: usize, n_per: usize) -> (Cluster, Vec<std::thread::JoinHandle<()>>) {
+    let mut rng = Rng::seed_from(1);
+    let (links, endpoints) = tcp::star(s).unwrap();
+    let cluster = Cluster::new(links, CommStats::new());
+    let handles = endpoints
+        .into_iter()
+        .map(|ep| {
+            let shard = Data::Dense(Mat::from_fn(16, n_per, |_, _| rng.normal()));
+            let be = Arc::new(NativeBackend::new());
+            std::thread::spawn(move || Worker::new(shard, Kernel::Gauss { gamma: 1.0 }, be).run(ep))
+        })
+        .collect();
+    (cluster, handles)
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::seed_from(2);
+
+    // codec throughput on a protocol-sized matrix
+    let m = Mat::from_fn(64, 250, |_, _| rng.normal());
+    let msg = Message::RespMat(m);
+    b.bench("codec/encode RespMat 64x250", || black_box(codec::encode(&msg)));
+    let bytes = codec::encode(&msg);
+    b.bench("codec/decode RespMat 64x250", || black_box(codec::decode(&bytes).unwrap()));
+
+    // request/reply round-trip latency, 8 workers
+    for (name, (cluster, handles)) in [
+        ("memory", spawn_memory(8, 64)),
+        ("tcp", spawn_tcp(8, 64)),
+    ] {
+        b.bench(&format!("star[{name}]/count roundtrip s=8"), || {
+            black_box(cluster.exchange(&Message::ReqCount).len())
+        });
+        // payload-heavy broadcast: 64×64 coeff-sized matrices
+        let z = Mat::from_fn(64, 64, |i, j| (i * 64 + j) as f64);
+        b.bench(&format!("star[{name}]/scores broadcast 64x64 s=8"), || {
+            // ReqEvalTrace replies scalars; ReqScores needs embed state,
+            // so use the trace round with a dummy matrix encode cost
+            black_box(codec::encode(&Message::ReqScores { z: z.clone() }));
+            black_box(cluster.exchange(&Message::ReqEvalTrace).len())
+        });
+        cluster.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    b.write_csv("results/bench_transport.csv").unwrap();
+}

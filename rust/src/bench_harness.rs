@@ -1,0 +1,152 @@
+//! Micro/meso benchmark harness (criterion unavailable offline).
+//!
+//! Warmup + timed iterations, reporting median / mean / min / MAD.
+//! `cargo bench` targets use [`Bencher`] with `harness = false`.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    /// median absolute deviation — stability indicator.
+    pub mad: Duration,
+}
+
+impl Sample {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Sample {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10.3?} median  {:>10.3?} min  ±{:>8.3?} mad  ({} iters)",
+            self.name, self.median, self.min, self.mad, self.iters
+        )
+    }
+}
+
+pub struct Bencher {
+    /// minimum wall-clock budget per benchmark.
+    pub budget: Duration,
+    /// max iterations regardless of budget.
+    pub max_iters: usize,
+    pub samples: Vec<Sample>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Honour a quick mode for CI: DISKPCA_BENCH_FAST=1
+        let fast = std::env::var("DISKPCA_BENCH_FAST").is_ok();
+        Self {
+            budget: if fast { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            max_iters: if fast { 5 } else { 200 },
+            samples: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark; `f` returns a value that is black-boxed.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Sample {
+        // warmup: one run (compiles caches, faults pages)
+        black_box(f());
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.budget && times.len() < self.max_iters)
+            || times.len() < 3
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let median = times[times.len() / 2];
+        let min = times[0];
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let mut devs: Vec<Duration> = times
+            .iter()
+            .map(|&t| if t > median { t - median } else { median - t })
+            .collect();
+        devs.sort();
+        let mad = devs[devs.len() / 2];
+        let sample = Sample {
+            name: name.to_string(),
+            iters: times.len(),
+            median,
+            mean,
+            min,
+            mad,
+        };
+        println!("{sample}");
+        self.samples.push(sample.clone());
+        sample
+    }
+
+    /// Write all samples as CSV (name,median_ns,mean_ns,min_ns,mad_ns,iters).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = String::from("name,median_ns,mean_ns,min_ns,mad_ns,iters\n");
+        for s in &self.samples {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                s.name,
+                s.median.as_nanos(),
+                s.mean.as_nanos(),
+                s.min.as_nanos(),
+                s.mad.as_nanos(),
+                s.iters
+            ));
+        }
+        std::fs::write(path, out)
+    }
+}
+
+/// Prevent the optimizer from deleting benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher { budget: Duration::from_millis(30), max_iters: 50, samples: vec![] };
+        let s = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.iters >= 3);
+        assert!(s.min <= s.median && s.median <= s.mean * 3);
+        assert_eq!(b.samples.len(), 1);
+    }
+
+    #[test]
+    fn csv_written() {
+        let mut b = Bencher { budget: Duration::from_millis(5), max_iters: 3, samples: vec![] };
+        b.bench("noop", || 1);
+        let path = std::env::temp_dir().join("diskpca_bench_test.csv");
+        b.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("name,"));
+        assert!(text.contains("noop"));
+    }
+}

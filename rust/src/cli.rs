@@ -1,0 +1,112 @@
+//! Tiny CLI argument parser (no clap offline): subcommand + `--key
+//! value` flags + positionals, feeding [`crate::config::Config`].
+
+use crate::config::Config;
+
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub command: String,
+    pub positionals: Vec<String>,
+    pub config: Config,
+}
+
+pub fn parse(args: impl IntoIterator<Item = String>) -> Result<Cli, String> {
+    let mut it = args.into_iter().peekable();
+    let command = it.next().unwrap_or_else(|| "help".to_string());
+    let mut config = Config::new();
+    let mut positionals = Vec::new();
+    while let Some(arg) = it.next() {
+        if let Some(key) = arg.strip_prefix("--") {
+            if key.is_empty() {
+                return Err("bare -- not supported".into());
+            }
+            // --flag=value or --flag value or boolean --flag
+            if let Some((k, v)) = key.split_once('=') {
+                config.set(k, v);
+            } else if it
+                .peek()
+                .map(|n| !n.starts_with("--"))
+                .unwrap_or(false)
+            {
+                let v = it.next().unwrap();
+                config.set(key, &v);
+            } else {
+                config.set(key, "true");
+            }
+        } else {
+            positionals.push(arg);
+        }
+    }
+    // --config file.conf loads a file underneath the flag overrides
+    if let Some(path) = config.get("config").map(str::to_string) {
+        let mut base = Config::load(&path)?;
+        base.merge(&config);
+        config = base;
+    }
+    Ok(Cli { command, positionals, config })
+}
+
+pub const USAGE: &str = "diskpca — communication-efficient distributed kernel PCA (KDD'16)
+
+USAGE: diskpca <command> [dataset] [--key value ...]
+
+COMMANDS
+  run        run disKPCA on a dataset        diskpca run har_like --kernel gauss --n_adapt 200
+  table1     print the dataset registry (Table 1 analogues)
+  fig2..fig8 regenerate the paper's figures  diskpca fig4 --scale 0.1
+  figL       extension: Laplacian-kernel comm/error tradeoff
+  css        extension: kernel column subset selection + KRR downstream
+  bench-comm print the per-round communication table for one run
+  ablation   sampling-stage ablation (full / leverage-only / adaptive-only)
+  shard      write power-law shards of a dataset to disk
+  master     multi-process master:  diskpca master --listen 0.0.0.0:7700 --workers 4 --kernel gauss --gamma 0.5
+  worker     multi-process worker:  diskpca worker --connect host:7700 --data shard.bin --kernel gauss --gamma 0.5
+  help       this message
+
+COMMON FLAGS
+  --kernel gauss|poly|arccos|laplace   kernel family (default gauss)
+  --backend native|xla         worker compute backend (default native)
+  --scale F                    dataset size multiplier (default 0.1)
+  --k N --t N --p N --n_lev N --n_adapt N --m_rff N --t2 N --seed N
+  --workers N                  override the dataset's worker count
+  --config FILE                load key=value config file
+  --out DIR                    results directory (default results)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_positionals() {
+        let cli = parse(sv(&["run", "har_like", "--k", "10", "--kernel=poly", "--verbose"]))
+            .unwrap();
+        assert_eq!(cli.command, "run");
+        assert_eq!(cli.positionals, vec!["har_like"]);
+        assert_eq!(cli.config.usize_or("k", 0), 10);
+        assert_eq!(cli.config.str_or("kernel", ""), "poly");
+        assert!(cli.config.bool_or("verbose", false));
+    }
+
+    #[test]
+    fn empty_args_give_help() {
+        let cli = parse(sv(&[])).unwrap();
+        assert_eq!(cli.command, "help");
+    }
+
+    #[test]
+    fn flag_at_end_is_boolean() {
+        let cli = parse(sv(&["run", "--fast"])).unwrap();
+        assert!(cli.config.bool_or("fast", false));
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        let cli = parse(sv(&["run", "--offset", "-3"])).unwrap();
+        assert_eq!(cli.config.str_or("offset", ""), "-3");
+    }
+}

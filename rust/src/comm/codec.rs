@@ -1,0 +1,481 @@
+//! Binary wire codec for [`Message`] — hand-rolled (no serde offline).
+//!
+//! Format: 1-byte variant tag, then fields as little-endian u64/f64
+//! with u64 length prefixes on sequences. Used by the TCP transport
+//! and by codec tests to pin the wire size against the word
+//! accounting model.
+
+use crate::embed::EmbedSpec;
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+
+use super::{Message, PointSet};
+
+#[derive(Debug)]
+pub enum CodecError {
+    Truncated,
+    BadTag(u8),
+}
+
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Default for Writer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn mat(&mut self, m: &Mat) {
+        self.u64(m.rows() as u64);
+        self.u64(m.cols() as u64);
+        for &v in m.data() {
+            self.f64(v);
+        }
+    }
+
+    fn points(&mut self, p: &PointSet) {
+        match p {
+            PointSet::Dense(m) => {
+                self.u8(0);
+                self.mat(m);
+            }
+            PointSet::Sparse { d, cols } => {
+                self.u8(1);
+                self.u64(*d as u64);
+                self.u64(cols.len() as u64);
+                for col in cols {
+                    self.u64(col.len() as u64);
+                    for &(r, v) in col {
+                        self.u64(r as u64);
+                        self.f64(v);
+                    }
+                }
+            }
+        }
+    }
+
+    fn kernel(&mut self, k: &Kernel) {
+        match *k {
+            Kernel::Gauss { gamma } => {
+                self.u8(0);
+                self.f64(gamma);
+            }
+            Kernel::Poly { q } => {
+                self.u8(1);
+                self.u64(q as u64);
+            }
+            Kernel::ArcCos { degree } => {
+                self.u8(2);
+                self.u64(degree as u64);
+            }
+            Kernel::Laplace { gamma } => {
+                self.u8(3);
+                self.f64(gamma);
+            }
+        }
+    }
+
+    fn spec(&mut self, s: &EmbedSpec) {
+        self.kernel(&s.kernel);
+        self.u64(s.m as u64);
+        self.u64(s.t2 as u64);
+        self.u64(s.t as u64);
+        self.u64(s.seed);
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, at: 0 }
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        let v = *self.buf.get(self.at).ok_or(CodecError::Truncated)?;
+        self.at += 1;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        let end = self.at + 8;
+        let bytes = self.buf.get(self.at..end).ok_or(CodecError::Truncated)?;
+        self.at = end;
+        Ok(u64::from_le_bytes(bytes.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn mat(&mut self) -> Result<Mat, CodecError> {
+        let rows = self.u64()? as usize;
+        let cols = self.u64()? as usize;
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(self.f64()?);
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    fn points(&mut self) -> Result<PointSet, CodecError> {
+        match self.u8()? {
+            0 => Ok(PointSet::Dense(self.mat()?)),
+            1 => {
+                let d = self.u64()? as usize;
+                let n = self.u64()? as usize;
+                let mut cols = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let nnz = self.u64()? as usize;
+                    let mut col = Vec::with_capacity(nnz);
+                    for _ in 0..nnz {
+                        let r = self.u64()? as u32;
+                        let v = self.f64()?;
+                        col.push((r, v));
+                    }
+                    cols.push(col);
+                }
+                Ok(PointSet::Sparse { d, cols })
+            }
+            t => Err(CodecError::BadTag(t)),
+        }
+    }
+
+    fn kernel(&mut self) -> Result<Kernel, CodecError> {
+        match self.u8()? {
+            0 => Ok(Kernel::Gauss { gamma: self.f64()? }),
+            1 => Ok(Kernel::Poly { q: self.u64()? as u32 }),
+            2 => Ok(Kernel::ArcCos { degree: self.u64()? as u32 }),
+            3 => Ok(Kernel::Laplace { gamma: self.f64()? }),
+            t => Err(CodecError::BadTag(t)),
+        }
+    }
+
+    fn spec(&mut self) -> Result<EmbedSpec, CodecError> {
+        Ok(EmbedSpec {
+            kernel: self.kernel()?,
+            m: self.u64()? as usize,
+            t2: self.u64()? as usize,
+            t: self.u64()? as usize,
+            seed: self.u64()?,
+        })
+    }
+}
+
+/// Serialize one message.
+pub fn encode(msg: &Message) -> Vec<u8> {
+    let mut w = Writer::new();
+    use Message::*;
+    match msg {
+        ReqEmbed { spec } => {
+            w.u8(0);
+            w.spec(spec);
+        }
+        ReqSketchEmbed { p, seed } => {
+            w.u8(1);
+            w.u64(*p as u64);
+            w.u64(*seed);
+        }
+        ReqScores { z } => {
+            w.u8(2);
+            w.mat(z);
+        }
+        ReqSampleLeverage { count, seed } => {
+            w.u8(3);
+            w.u64(*count as u64);
+            w.u64(*seed);
+        }
+        ReqResiduals { pts } => {
+            w.u8(4);
+            w.points(pts);
+        }
+        ReqSampleAdaptive { count, seed } => {
+            w.u8(5);
+            w.u64(*count as u64);
+            w.u64(*seed);
+        }
+        ReqProjectSketch { pts, w: ww, seed } => {
+            w.u8(6);
+            w.points(pts);
+            w.u64(*ww as u64);
+            w.u64(*seed);
+        }
+        ReqFinal { coeffs } => {
+            w.u8(7);
+            w.mat(coeffs);
+        }
+        ReqEvalError => w.u8(8),
+        ReqEvalTrace => w.u8(9),
+        ReqSampleUniform { count, seed } => {
+            w.u8(10);
+            w.u64(*count as u64);
+            w.u64(*seed);
+        }
+        ReqKmeansStep { centers } => {
+            w.u8(11);
+            w.mat(centers);
+        }
+        ReqCount => w.u8(12),
+        Quit => w.u8(13),
+        RespMat(m) => {
+            w.u8(14);
+            w.mat(m);
+        }
+        RespScalar(v) => {
+            w.u8(15);
+            w.f64(*v);
+        }
+        RespCount(n) => {
+            w.u8(16);
+            w.u64(*n as u64);
+        }
+        RespPoints(p) => {
+            w.u8(17);
+            w.points(p);
+        }
+        RespKmeans { sums, counts, obj } => {
+            w.u8(18);
+            w.mat(sums);
+            w.u64(counts.len() as u64);
+            for &c in counts {
+                w.u64(c as u64);
+            }
+            w.f64(*obj);
+        }
+        Ack => w.u8(19),
+        ReqSetSolution { pts, coeffs } => {
+            w.u8(20);
+            w.points(pts);
+            w.mat(coeffs);
+        }
+        ReqSampleProjected { count, seed } => {
+            w.u8(21);
+            w.u64(*count as u64);
+            w.u64(*seed);
+        }
+        ReqBusyTime => w.u8(22),
+        ReqScoresVec => w.u8(23),
+        ReqKrrStats { pts, teacher_seed } => {
+            w.u8(24);
+            w.points(pts);
+            w.u64(*teacher_seed);
+        }
+        RespKrr { g, b, tnorm } => {
+            w.u8(25);
+            w.mat(g);
+            w.mat(b);
+            w.f64(*tnorm);
+        }
+        ReqKrrEval { alpha } => {
+            w.u8(26);
+            w.mat(alpha);
+        }
+    }
+    w.finish()
+}
+
+/// Deserialize one message.
+pub fn decode(buf: &[u8]) -> Result<Message, CodecError> {
+    let mut r = Reader::new(buf);
+    use Message::*;
+    let msg = match r.u8()? {
+        0 => ReqEmbed { spec: r.spec()? },
+        1 => ReqSketchEmbed { p: r.u64()? as usize, seed: r.u64()? },
+        2 => ReqScores { z: r.mat()? },
+        3 => ReqSampleLeverage { count: r.u64()? as usize, seed: r.u64()? },
+        4 => ReqResiduals { pts: r.points()? },
+        5 => ReqSampleAdaptive { count: r.u64()? as usize, seed: r.u64()? },
+        6 => ReqProjectSketch { pts: r.points()?, w: r.u64()? as usize, seed: r.u64()? },
+        7 => ReqFinal { coeffs: r.mat()? },
+        8 => ReqEvalError,
+        9 => ReqEvalTrace,
+        10 => ReqSampleUniform { count: r.u64()? as usize, seed: r.u64()? },
+        11 => ReqKmeansStep { centers: r.mat()? },
+        12 => ReqCount,
+        13 => Quit,
+        14 => RespMat(r.mat()?),
+        15 => RespScalar(r.f64()?),
+        16 => RespCount(r.u64()? as usize),
+        17 => RespPoints(r.points()?),
+        18 => {
+            let sums = r.mat()?;
+            let n = r.u64()? as usize;
+            let counts = (0..n).map(|_| r.u64().map(|v| v as usize)).collect::<Result<_, _>>()?;
+            let obj = r.f64()?;
+            RespKmeans { sums, counts, obj }
+        }
+        19 => Ack,
+        20 => ReqSetSolution { pts: r.points()?, coeffs: r.mat()? },
+        21 => ReqSampleProjected { count: r.u64()? as usize, seed: r.u64()? },
+        22 => ReqBusyTime,
+        23 => ReqScoresVec,
+        24 => ReqKrrStats { pts: r.points()?, teacher_seed: r.u64()? },
+        25 => {
+            let g = r.mat()?;
+            let b = r.mat()?;
+            let tnorm = r.f64()?;
+            RespKrr { g, b, tnorm }
+        }
+        26 => ReqKrrEval { alpha: r.mat()? },
+        t => return Err(CodecError::BadTag(t)),
+    };
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn roundtrip(msg: Message) -> Message {
+        decode(&encode(&msg)).expect("decode failed")
+    }
+
+    fn mats_eq(a: &Mat, b: &Mat) -> bool {
+        a.rows() == b.rows() && a.cols() == b.cols() && a.max_abs_diff(b) == 0.0
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        let mut rng = Rng::seed_from(1);
+        let m = Mat::from_fn(3, 4, |_, _| rng.normal());
+        let sparse = PointSet::Sparse { d: 10, cols: vec![vec![(1, 2.5)], vec![], vec![(9, -1.0), (0, 3.0)]] };
+        let spec = EmbedSpec { kernel: Kernel::Poly { q: 4 }, m: 512, t2: 256, t: 64, seed: 99 };
+
+        match roundtrip(Message::ReqEmbed { spec }) {
+            Message::ReqEmbed { spec: s } => {
+                assert_eq!(s.m, 512);
+                assert_eq!(s.seed, 99);
+                assert!(matches!(s.kernel, Kernel::Poly { q: 4 }));
+            }
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(Message::ReqScores { z: m.clone() }) {
+            Message::ReqScores { z } => assert!(mats_eq(&z, &m)),
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(Message::ReqResiduals { pts: sparse.clone() }) {
+            Message::ReqResiduals { pts: PointSet::Sparse { d, cols } } => {
+                assert_eq!(d, 10);
+                assert_eq!(cols.len(), 3);
+                assert_eq!(cols[2], vec![(0, 3.0), (9, -1.0)].into_iter().collect::<Vec<_>>().into_iter().rev().collect::<Vec<_>>());
+            }
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(Message::RespKmeans { sums: m.clone(), counts: vec![1, 2, 3], obj: 4.5 }) {
+            Message::RespKmeans { sums, counts, obj } => {
+                assert!(mats_eq(&sums, &m));
+                assert_eq!(counts, vec![1, 2, 3]);
+                assert_eq!(obj, 4.5);
+            }
+            other => panic!("{other:?}"),
+        }
+        for msg in [
+            Message::ReqEvalError,
+            Message::ReqEvalTrace,
+            Message::ReqCount,
+            Message::Quit,
+            Message::Ack,
+            Message::RespScalar(-1.25),
+            Message::RespCount(77),
+            Message::ReqSketchEmbed { p: 5, seed: 6 },
+            Message::ReqSampleLeverage { count: 10, seed: 3 },
+            Message::ReqSampleAdaptive { count: 4, seed: 2 },
+            Message::ReqSampleUniform { count: 8, seed: 1 },
+            Message::ReqScoresVec,
+        ] {
+            let back = roundtrip(msg.clone());
+            assert_eq!(back.tag(), msg.tag());
+            assert_eq!(back.words(), msg.words());
+        }
+    }
+
+    #[test]
+    fn roundtrip_krr_variants() {
+        let mut rng = Rng::seed_from(2);
+        let m = Mat::from_fn(4, 4, |_, _| rng.normal());
+        let b = Mat::from_fn(4, 1, |_, _| rng.normal());
+        let pts = PointSet::Dense(Mat::from_fn(3, 5, |_, _| rng.normal()));
+        match roundtrip(Message::ReqKrrStats { pts: pts.clone(), teacher_seed: 42 }) {
+            Message::ReqKrrStats { pts: p, teacher_seed } => {
+                assert_eq!(teacher_seed, 42);
+                assert!(mats_eq(&p.to_mat(), &pts.to_mat()));
+            }
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(Message::RespKrr { g: m.clone(), b: b.clone(), tnorm: 7.5 }) {
+            Message::RespKrr { g, b: bb, tnorm } => {
+                assert!(mats_eq(&g, &m));
+                assert!(mats_eq(&bb, &b));
+                assert_eq!(tnorm, 7.5);
+            }
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(Message::ReqKrrEval { alpha: b.clone() }) {
+            Message::ReqKrrEval { alpha } => assert!(mats_eq(&alpha, &b)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_laplace_kernel_spec() {
+        let spec = EmbedSpec {
+            kernel: Kernel::Laplace { gamma: 0.75 },
+            m: 128,
+            t2: 64,
+            t: 16,
+            seed: 5,
+        };
+        match roundtrip(Message::ReqEmbed { spec }) {
+            Message::ReqEmbed { spec: s } => match s.kernel {
+                Kernel::Laplace { gamma } => assert_eq!(gamma, 0.75),
+                other => panic!("{other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn wire_size_tracks_word_count() {
+        // Big payloads: bytes ≈ 8 × words (+ small header overhead).
+        let mut rng = Rng::seed_from(2);
+        let m = Mat::from_fn(50, 40, |_, _| rng.normal());
+        let msg = Message::RespMat(m);
+        let bytes = encode(&msg).len();
+        let words = msg.words();
+        assert!(bytes >= 8 * words);
+        assert!(bytes <= 8 * words + 64, "bytes {bytes} words {words}");
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode(&[200]).is_err());
+        assert!(decode(&[2, 1]).is_err()); // truncated mat
+    }
+}

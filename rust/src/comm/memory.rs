@@ -1,0 +1,90 @@
+//! In-process star transport over std mpsc channels.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+use super::{Message, WorkerLink};
+
+/// Worker-side endpoint: blocking request stream + reply sender.
+pub struct WorkerEndpoint {
+    rx: Receiver<Message>,
+    tx: Sender<Message>,
+}
+
+impl WorkerEndpoint {
+    /// Block for the next request.
+    pub fn recv(&self) -> Message {
+        self.rx.recv().expect("master hung up")
+    }
+
+    /// Send a reply to the master.
+    pub fn send(&self, msg: Message) {
+        let _ = self.tx.send(msg);
+    }
+}
+
+struct MemLink {
+    tx: Sender<Message>,
+    rx: Mutex<Receiver<Message>>,
+}
+
+impl WorkerLink for MemLink {
+    fn send(&self, msg: Message) {
+        self.tx.send(msg).expect("worker hung up");
+    }
+
+    fn recv(&self) -> Message {
+        self.rx.lock().unwrap().recv().expect("worker hung up")
+    }
+}
+
+/// Create a star of `s` in-memory links: returns (master links,
+/// worker endpoints) — hand each endpoint to one worker thread.
+pub fn star(s: usize) -> (Vec<Box<dyn WorkerLink>>, Vec<WorkerEndpoint>) {
+    let mut links: Vec<Box<dyn WorkerLink>> = Vec::with_capacity(s);
+    let mut endpoints = Vec::with_capacity(s);
+    for _ in 0..s {
+        let (req_tx, req_rx) = channel();
+        let (resp_tx, resp_rx) = channel();
+        links.push(Box::new(MemLink { tx: req_tx, rx: Mutex::new(resp_rx) }));
+        endpoints.push(WorkerEndpoint { rx: req_rx, tx: resp_tx });
+    }
+    (links, endpoints)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{Cluster, CommStats};
+    use std::thread;
+
+    #[test]
+    fn echo_roundtrip() {
+        let (links, endpoints) = star(3);
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                thread::spawn(move || loop {
+                    match ep.recv() {
+                        Message::Quit => break,
+                        Message::ReqCount => ep.send(Message::RespCount(7)),
+                        _ => ep.send(Message::Ack),
+                    }
+                })
+            })
+            .collect();
+        let cluster = Cluster::new(links, CommStats::new());
+        cluster.set_round("test");
+        let replies = cluster.exchange(&Message::ReqCount);
+        assert_eq!(replies.len(), 3);
+        for r in replies {
+            assert!(matches!(r, Message::RespCount(7)));
+        }
+        // 3 requests (1 word) + 3 replies (1 word)
+        assert_eq!(cluster.stats.total_words(), 6);
+        cluster.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

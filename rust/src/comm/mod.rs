@@ -1,0 +1,481 @@
+//! Master–worker communication layer with per-word accounting.
+//!
+//! The paper measures cost in *words* (one f64 = one word; an index
+//! counts as a word; a sparse point costs 2·nnz). Every [`Message`]
+//! knows its word count, and [`CommStats`] aggregates words per
+//! protocol round and direction — these totals are exactly what
+//! Figures 4–6/8 plot on the x-axis.
+//!
+//! Two transports implement the same star topology:
+//! - [`memory::Hub`] — in-process channels (default; experiments)
+//! - [`tcp`] — length-prefixed framed TCP over loopback, proving the
+//!   protocol genuinely serializes (see `codec`).
+
+pub mod codec;
+pub mod memory;
+pub mod tcp;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::embed::EmbedSpec;
+use crate::linalg::Mat;
+
+/// Points being shipped between nodes — dense or sparse encoding, to
+/// honour the paper's ρ-dependent cost model.
+#[derive(Clone, Debug)]
+pub enum PointSet {
+    Dense(Mat),
+    /// (dim, per-point (row, value) lists)
+    Sparse { d: usize, cols: Vec<Vec<(u32, f64)>> },
+}
+
+impl PointSet {
+    pub fn len(&self) -> usize {
+        match self {
+            PointSet::Dense(m) => m.cols(),
+            PointSet::Sparse { cols, .. } => cols.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            PointSet::Dense(m) => m.rows(),
+            PointSet::Sparse { d, .. } => *d,
+        }
+    }
+
+    /// Transmission cost in words.
+    pub fn words(&self) -> usize {
+        match self {
+            PointSet::Dense(m) => m.rows() * m.cols(),
+            PointSet::Sparse { cols, .. } => {
+                cols.iter().map(|c| 2 * c.len()).sum::<usize>() + cols.len()
+            }
+        }
+    }
+
+    /// Materialize as a dense d×n matrix.
+    pub fn to_mat(&self) -> Mat {
+        match self {
+            PointSet::Dense(m) => m.clone(),
+            PointSet::Sparse { d, cols } => {
+                let mut out = Mat::zeros(*d, cols.len());
+                for (j, col) in cols.iter().enumerate() {
+                    for &(r, v) in col {
+                        out[(r as usize, j)] = v;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Concatenate point sets (all must share the dim).
+    pub fn concat(sets: &[PointSet]) -> PointSet {
+        assert!(!sets.is_empty());
+        if sets.iter().all(|s| matches!(s, PointSet::Sparse { .. })) {
+            let d = sets[0].dim();
+            let mut cols = Vec::new();
+            for s in sets {
+                if let PointSet::Sparse { cols: c, .. } = s {
+                    cols.extend(c.iter().cloned());
+                }
+            }
+            PointSet::Sparse { d, cols }
+        } else {
+            let mats: Vec<Mat> = sets.iter().map(|s| s.to_mat()).collect();
+            let mut out = mats[0].clone();
+            for m in &mats[1..] {
+                out = out.hcat(m);
+            }
+            PointSet::Dense(out)
+        }
+    }
+
+    /// Extract selected columns of a [`crate::data::Data`] shard as a
+    /// PointSet in the shard's natural encoding.
+    pub fn from_data(x: &crate::data::Data, idx: &[usize]) -> PointSet {
+        match x {
+            crate::data::Data::Dense(m) => PointSet::Dense(m.select_cols(idx)),
+            crate::data::Data::Sparse(s) => PointSet::Sparse {
+                d: s.rows(),
+                cols: idx
+                    .iter()
+                    .map(|&j| s.col_iter(j).map(|(r, v)| (r as u32, v)).collect())
+                    .collect(),
+            },
+        }
+    }
+}
+
+/// Protocol message (requests master→worker, responses worker→master).
+#[derive(Clone, Debug)]
+pub enum Message {
+    // ---- requests ----
+    /// Build E^i = S(φ(Aⁱ)) with the shared spec (Alg. 4 step 1).
+    ReqEmbed { spec: EmbedSpec },
+    /// Right-sketch E^i to p columns, return it (Alg. 1 step 1).
+    ReqSketchEmbed { p: usize, seed: u64 },
+    /// Receive Z; compute local leverage scores; reply with total mass
+    /// (Alg. 1 steps 2–3).
+    ReqScores { z: Mat },
+    /// Draw `count` leverage-weighted points (Alg. 2 step 1).
+    ReqSampleLeverage { count: usize, seed: u64 },
+    /// Receive the union P; compute residual distances to span φ(P);
+    /// reply with total residual mass (Alg. 2 steps 2–3).
+    ReqResiduals { pts: PointSet },
+    /// Draw `count` residual-weighted points (Alg. 2 step 3).
+    ReqSampleAdaptive { count: usize, seed: u64 },
+    /// Receive Y; compute Πⁱ = R⁻ᵀK(Y,Aⁱ); right-sketch to w columns
+    /// and return (Alg. 3 step 1).
+    ReqProjectSketch { pts: PointSet, w: usize, seed: u64 },
+    /// Receive the top-k coefficient matrix C (|Y|×k): cache the
+    /// solution L = φ(Y)·C (Alg. 3 step 3). Y and Π are already held
+    /// from ReqProjectSketch.
+    ReqFinal { coeffs: Mat },
+    /// Install an arbitrary solution L = φ(Y)·C from scratch (baseline
+    /// algorithms): recomputes K(Y, Aⁱ) worker-side.
+    ReqSetSolution { pts: PointSet, coeffs: Mat },
+    /// Uniform sample of the *projected* (k-dim) local points — k-means
+    /// seeding.
+    ReqSampleProjected { count: usize, seed: u64 },
+    /// Partial ‖φ(Aⁱ) − LLᵀφ(Aⁱ)‖² for the cached solution.
+    ReqEvalError,
+    /// Partial Σⱼ κ(xⱼ,xⱼ) (for normalizing errors).
+    ReqEvalTrace,
+    /// Draw `count` uniform points (baselines).
+    ReqSampleUniform { count: usize, seed: u64 },
+    /// Project local data onto the cached solution and run one k-means
+    /// assignment step against `centers` (k×k-dim); reply sums/counts.
+    ReqKmeansStep { centers: Mat },
+    /// Return the full per-point leverage-score vector (1×nᵢ). Costs
+    /// O(nᵢ) words — an offline/validation API, not part of disKPCA
+    /// (the §5.2 remark: (1±ε) scores "useful for other applications").
+    ReqScoresVec,
+    /// Kernel ridge regression downstream app: receive the
+    /// representative set Y; compute K(Y,Aⁱ), teacher targets
+    /// tⱼ = cos(vᵀxⱼ) with v ~ N(0,I) derived from `teacher_seed`, and
+    /// reply with the normal-equation pieces (K_YA·K_AY, K_YA·t, ‖t‖²).
+    ReqKrrStats { pts: PointSet, teacher_seed: u64 },
+    /// Evaluate a KRR coefficient vector α: reply Σⱼ (K(Aⁱ,Y)α − t)².
+    ReqKrrEval { alpha: Mat },
+    /// Number of local points.
+    ReqCount,
+    /// Cumulative compute-busy seconds on this worker (for the Fig-7
+    /// critical-path metric on a single-core testbed).
+    ReqBusyTime,
+    /// Shut the worker down.
+    Quit,
+
+    // ---- responses ----
+    RespMat(Mat),
+    RespScalar(f64),
+    RespCount(usize),
+    RespPoints(PointSet),
+    RespKmeans { sums: Mat, counts: Vec<usize>, obj: f64 },
+    /// KRR normal-equation pieces: g = K_YA·K_AY, b = K_YA·t (|Y|×1),
+    /// tnorm = ‖t‖².
+    RespKrr { g: Mat, b: Mat, tnorm: f64 },
+    Ack,
+}
+
+impl Message {
+    /// Word count for the accounting (8-byte words; usize counts 1).
+    pub fn words(&self) -> usize {
+        use Message::*;
+        match self {
+            ReqEmbed { spec } => spec.words(),
+            ReqSketchEmbed { .. } => 2,
+            ReqScores { z } => z.rows() * z.cols(),
+            ReqSampleLeverage { .. } => 2,
+            ReqResiduals { pts } => pts.words(),
+            ReqSampleAdaptive { .. } => 2,
+            ReqProjectSketch { pts, .. } => pts.words() + 2,
+            ReqFinal { coeffs } => coeffs.rows() * coeffs.cols(),
+            ReqSetSolution { pts, coeffs } => pts.words() + coeffs.rows() * coeffs.cols(),
+            ReqSampleProjected { .. } => 2,
+            ReqEvalError | ReqEvalTrace | ReqCount | ReqBusyTime | ReqScoresVec | Quit => 1,
+            ReqSampleUniform { .. } => 2,
+            ReqKmeansStep { centers } => centers.rows() * centers.cols(),
+            ReqKrrStats { pts, .. } => pts.words() + 1,
+            ReqKrrEval { alpha } => alpha.rows() * alpha.cols(),
+            RespKrr { g, b, .. } => g.rows() * g.cols() + b.rows() * b.cols() + 1,
+            RespMat(m) => m.rows() * m.cols(),
+            RespScalar(_) => 1,
+            RespCount(_) => 1,
+            RespPoints(p) => p.words(),
+            RespKmeans { sums, counts, .. } => sums.rows() * sums.cols() + counts.len() + 1,
+            Ack => 1,
+        }
+    }
+
+    pub fn tag(&self) -> &'static str {
+        use Message::*;
+        match self {
+            ReqEmbed { .. } => "ReqEmbed",
+            ReqSketchEmbed { .. } => "ReqSketchEmbed",
+            ReqScores { .. } => "ReqScores",
+            ReqSampleLeverage { .. } => "ReqSampleLeverage",
+            ReqResiduals { .. } => "ReqResiduals",
+            ReqSampleAdaptive { .. } => "ReqSampleAdaptive",
+            ReqProjectSketch { .. } => "ReqProjectSketch",
+            ReqFinal { .. } => "ReqFinal",
+            ReqSetSolution { .. } => "ReqSetSolution",
+            ReqSampleProjected { .. } => "ReqSampleProjected",
+            ReqEvalError => "ReqEvalError",
+            ReqEvalTrace => "ReqEvalTrace",
+            ReqSampleUniform { .. } => "ReqSampleUniform",
+            ReqKmeansStep { .. } => "ReqKmeansStep",
+            ReqScoresVec => "ReqScoresVec",
+            ReqKrrStats { .. } => "ReqKrrStats",
+            ReqKrrEval { .. } => "ReqKrrEval",
+            RespKrr { .. } => "RespKrr",
+            ReqCount => "ReqCount",
+            ReqBusyTime => "ReqBusyTime",
+            Quit => "Quit",
+            RespMat(_) => "RespMat",
+            RespScalar(_) => "RespScalar",
+            RespCount(_) => "RespCount",
+            RespPoints(_) => "RespPoints",
+            RespKmeans { .. } => "RespKmeans",
+            Ack => "Ack",
+        }
+    }
+}
+
+/// Word counters, grouped by protocol round label and direction.
+#[derive(Clone, Default, Debug)]
+pub struct CommStats {
+    inner: Arc<Mutex<StatsInner>>,
+}
+
+#[derive(Default, Debug)]
+struct StatsInner {
+    /// (round, to_master?) -> words
+    by_round: HashMap<(String, bool), usize>,
+    total: usize,
+    messages: usize,
+}
+
+impl CommStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, round: &str, to_master: bool, words: usize) {
+        let mut s = self.inner.lock().unwrap();
+        *s.by_round.entry((round.to_string(), to_master)).or_insert(0) += words;
+        s.total += words;
+        s.messages += 1;
+    }
+
+    pub fn total_words(&self) -> usize {
+        self.inner.lock().unwrap().total
+    }
+
+    pub fn message_count(&self) -> usize {
+        self.inner.lock().unwrap().messages
+    }
+
+    /// Words for one round (both directions).
+    pub fn round_words(&self, round: &str) -> usize {
+        let s = self.inner.lock().unwrap();
+        s.by_round
+            .iter()
+            .filter(|((r, _), _)| r == round)
+            .map(|(_, w)| w)
+            .sum()
+    }
+
+    /// Sorted (round, to_master_words, to_workers_words) table.
+    pub fn table(&self) -> Vec<(String, usize, usize)> {
+        let s = self.inner.lock().unwrap();
+        let mut rounds: Vec<String> = s
+            .by_round
+            .keys()
+            .map(|(r, _)| r.clone())
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        rounds.sort();
+        rounds
+            .into_iter()
+            .map(|r| {
+                let up = *s.by_round.get(&(r.clone(), true)).unwrap_or(&0);
+                let down = *s.by_round.get(&(r.clone(), false)).unwrap_or(&0);
+                (r, up, down)
+            })
+            .collect()
+    }
+
+    pub fn reset(&self) {
+        let mut s = self.inner.lock().unwrap();
+        s.by_round.clear();
+        s.total = 0;
+        s.messages = 0;
+    }
+}
+
+/// Worker-side view of its link to the master, transport-agnostic —
+/// `Worker::run` is generic over this.
+pub trait Endpoint: Send {
+    /// Block for the next request from the master.
+    fn recv_req(&mut self) -> Message;
+    /// Send one response back.
+    fn send_resp(&mut self, msg: Message);
+}
+
+impl Endpoint for memory::WorkerEndpoint {
+    fn recv_req(&mut self) -> Message {
+        self.recv()
+    }
+
+    fn send_resp(&mut self, msg: Message) {
+        self.send(msg)
+    }
+}
+
+impl Endpoint for tcp::TcpWorkerEndpoint {
+    fn recv_req(&mut self) -> Message {
+        self.recv()
+    }
+
+    fn send_resp(&mut self, msg: Message) {
+        self.send(msg)
+    }
+}
+
+/// A master-side handle to one worker: paired send/recv with
+/// accounting. Both in-memory and TCP transports implement this.
+pub trait WorkerLink: Send {
+    /// Send a request to the worker (counted as master→worker words).
+    fn send(&self, msg: Message);
+    /// Block for the worker's reply (counted as worker→master words).
+    fn recv(&self) -> Message;
+}
+
+/// Master-side view of the whole star.
+pub struct Cluster {
+    pub links: Vec<Box<dyn WorkerLink>>,
+    pub stats: CommStats,
+    /// Current protocol-round label applied to accounting.
+    round: Arc<Mutex<String>>,
+}
+
+impl Cluster {
+    pub fn new(links: Vec<Box<dyn WorkerLink>>, stats: CommStats) -> Self {
+        Self { links, stats, round: Arc::new(Mutex::new("init".into())) }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.links.len()
+    }
+
+    pub fn set_round(&self, name: &str) {
+        *self.round.lock().unwrap() = name.to_string();
+    }
+
+    fn round(&self) -> String {
+        self.round.lock().unwrap().clone()
+    }
+
+    /// Send to one worker (accounted).
+    pub fn send(&self, worker: usize, msg: Message) {
+        self.stats.record(&self.round(), false, msg.words());
+        self.links[worker].send(msg);
+    }
+
+    /// Receive one reply (accounted).
+    pub fn recv(&self, worker: usize) -> Message {
+        let msg = self.links[worker].recv();
+        self.stats.record(&self.round(), true, msg.words());
+        msg
+    }
+
+    /// Broadcast the same request to all workers.
+    pub fn broadcast(&self, msg: &Message) {
+        for w in 0..self.links.len() {
+            self.send(w, msg.clone());
+        }
+    }
+
+    /// Collect one reply from every worker (in worker order).
+    pub fn gather(&self) -> Vec<Message> {
+        (0..self.links.len()).map(|w| self.recv(w)).collect()
+    }
+
+    /// Broadcast + gather.
+    pub fn exchange(&self, msg: &Message) -> Vec<Message> {
+        self.broadcast(msg);
+        self.gather()
+    }
+
+    /// Shut down all workers.
+    pub fn shutdown(&self) {
+        for w in 0..self.links.len() {
+            self.send(w, Message::Quit);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pointset_words_cost_model() {
+        let dense = PointSet::Dense(Mat::zeros(10, 3));
+        assert_eq!(dense.words(), 30);
+        let sparse = PointSet::Sparse {
+            d: 1000,
+            cols: vec![vec![(1, 1.0), (5, 2.0)], vec![(7, 3.0)]],
+        };
+        assert_eq!(sparse.words(), 2 * 3 + 2);
+        assert_eq!(sparse.len(), 2);
+        assert_eq!(sparse.dim(), 1000);
+    }
+
+    #[test]
+    fn pointset_concat_and_mat() {
+        let a = PointSet::Sparse { d: 4, cols: vec![vec![(0, 1.0)]] };
+        let b = PointSet::Sparse { d: 4, cols: vec![vec![(3, 2.0)], vec![]] };
+        let c = PointSet::concat(&[a, b]);
+        assert_eq!(c.len(), 3);
+        let m = c.to_mat();
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(3, 1)], 2.0);
+        assert_eq!(m[(2, 2)], 0.0);
+        // mixed → dense
+        let mixed = PointSet::concat(&[c, PointSet::Dense(Mat::zeros(4, 1))]);
+        assert!(matches!(mixed, PointSet::Dense(_)));
+        assert_eq!(mixed.len(), 4);
+    }
+
+    #[test]
+    fn message_words() {
+        let m = Message::RespMat(Mat::zeros(5, 7));
+        assert_eq!(m.words(), 35);
+        assert_eq!(Message::Ack.words(), 1);
+        assert_eq!(Message::RespScalar(2.0).words(), 1);
+    }
+
+    #[test]
+    fn stats_accumulate_by_round() {
+        let s = CommStats::new();
+        s.record("disLS", true, 100);
+        s.record("disLS", false, 50);
+        s.record("disLR", true, 10);
+        assert_eq!(s.total_words(), 160);
+        assert_eq!(s.round_words("disLS"), 150);
+        assert_eq!(s.message_count(), 3);
+        let t = s.table();
+        assert_eq!(t.len(), 2);
+        s.reset();
+        assert_eq!(s.total_words(), 0);
+    }
+}

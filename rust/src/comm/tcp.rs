@@ -1,0 +1,161 @@
+//! Loopback TCP transport: length-prefixed frames of `codec` bytes.
+//!
+//! Functionally identical to the in-memory star; exists to prove the
+//! protocol genuinely serializes (no shared-memory cheating) and to
+//! measure wire bytes against the word-accounting model.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Mutex;
+
+use super::{codec, Message, WorkerLink};
+
+fn write_frame(stream: &mut TcpStream, msg: &Message) -> std::io::Result<()> {
+    let bytes = codec::encode(msg);
+    stream.write_all(&(bytes.len() as u64).to_le_bytes())?;
+    stream.write_all(&bytes)?;
+    stream.flush()
+}
+
+fn read_frame(stream: &mut TcpStream) -> std::io::Result<Message> {
+    let mut len = [0u8; 8];
+    stream.read_exact(&mut len)?;
+    let n = u64::from_le_bytes(len) as usize;
+    let mut buf = vec![0u8; n];
+    stream.read_exact(&mut buf)?;
+    codec::decode(&buf).map_err(|e| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, format!("{e:?}"))
+    })
+}
+
+/// Master-side link over TCP.
+pub struct TcpLink {
+    stream: Mutex<TcpStream>,
+}
+
+impl WorkerLink for TcpLink {
+    fn send(&self, msg: Message) {
+        write_frame(&mut self.stream.lock().unwrap(), &msg).expect("tcp send");
+    }
+
+    fn recv(&self) -> Message {
+        read_frame(&mut self.stream.lock().unwrap()).expect("tcp recv")
+    }
+}
+
+/// Worker-side endpoint over TCP (mirrors `memory::WorkerEndpoint`).
+pub struct TcpWorkerEndpoint {
+    stream: TcpStream,
+}
+
+impl TcpWorkerEndpoint {
+    pub fn recv(&mut self) -> Message {
+        read_frame(&mut self.stream).expect("tcp recv")
+    }
+
+    pub fn send(&mut self, msg: Message) {
+        write_frame(&mut self.stream, &msg).expect("tcp send")
+    }
+}
+
+/// Bind a loopback listener and connect `s` worker sockets; returns
+/// master links + worker endpoints, paired by worker index.
+pub fn star(s: usize) -> std::io::Result<(Vec<Box<dyn WorkerLink>>, Vec<TcpWorkerEndpoint>)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    // Connect worker sockets; accept order == connect order on loopback
+    // is not guaranteed, so handshake with an index byte.
+    let mut endpoints_unordered = Vec::with_capacity(s);
+    let connector = std::thread::spawn(move || -> std::io::Result<Vec<TcpStream>> {
+        (0..s).map(|_| TcpStream::connect(addr)).collect()
+    });
+    let mut master_side = Vec::with_capacity(s);
+    for _ in 0..s {
+        let (stream, _) = listener.accept()?;
+        stream.set_nodelay(true)?;
+        master_side.push(stream);
+    }
+    let worker_side = connector.join().expect("connector panicked")?;
+    for (i, mut m) in master_side.into_iter().enumerate() {
+        m.write_all(&(i as u64).to_le_bytes())?;
+        endpoints_unordered.push(m);
+    }
+    let mut workers: Vec<Option<TcpWorkerEndpoint>> = (0..s).map(|_| None).collect();
+    for mut w in worker_side {
+        w.set_nodelay(true)?;
+        let mut idx = [0u8; 8];
+        w.read_exact(&mut idx)?;
+        workers[u64::from_le_bytes(idx) as usize] = Some(TcpWorkerEndpoint { stream: w });
+    }
+    let links: Vec<Box<dyn WorkerLink>> = endpoints_unordered
+        .into_iter()
+        .map(|stream| Box::new(TcpLink { stream: Mutex::new(stream) }) as Box<dyn WorkerLink>)
+        .collect();
+    Ok((links, workers.into_iter().map(|w| w.unwrap()).collect()))
+}
+
+/// Multi-process deployment: master binds `addr` and accepts exactly
+/// `s` worker connections (`diskpca master`). Worker order = accept
+/// order; workers are symmetric so no index handshake is needed.
+pub fn listen(addr: &str, s: usize) -> std::io::Result<Vec<Box<dyn WorkerLink>>> {
+    let listener = TcpListener::bind(addr)?;
+    let mut links: Vec<Box<dyn WorkerLink>> = Vec::with_capacity(s);
+    for _ in 0..s {
+        let (stream, peer) = listener.accept()?;
+        stream.set_nodelay(true)?;
+        eprintln!("master: worker connected from {peer}");
+        links.push(Box::new(TcpLink { stream: Mutex::new(stream) }));
+    }
+    Ok(links)
+}
+
+/// Worker side of a multi-process deployment (`diskpca worker`).
+pub fn connect(addr: &str) -> std::io::Result<TcpWorkerEndpoint> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    Ok(TcpWorkerEndpoint { stream })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{Cluster, CommStats};
+    use crate::linalg::Mat;
+    use std::thread;
+
+    #[test]
+    fn tcp_roundtrip_with_payloads() {
+        let (links, endpoints) = star(2).unwrap();
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .map(|mut ep| {
+                thread::spawn(move || loop {
+                    match ep.recv() {
+                        Message::Quit => break,
+                        Message::ReqScores { z } => {
+                            // echo the frobenius norm back
+                            ep.send(Message::RespScalar(z.frob_norm_sq()))
+                        }
+                        _ => ep.send(Message::Ack),
+                    }
+                })
+            })
+            .collect();
+        let cluster = Cluster::new(links, CommStats::new());
+        cluster.set_round("tcp");
+        let z = Mat::from_fn(4, 4, |i, j| (i + j) as f64);
+        let replies = cluster.exchange(&Message::ReqScores { z: z.clone() });
+        for r in replies {
+            match r {
+                Message::RespScalar(v) => assert!((v - z.frob_norm_sq()).abs() < 1e-12),
+                other => panic!("{other:?}"),
+            }
+        }
+        // words: 2×16 (requests) + 2×1 (replies)
+        assert_eq!(cluster.stats.total_words(), 34);
+        cluster.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

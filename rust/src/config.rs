@@ -1,0 +1,155 @@
+//! Experiment configuration: defaults + file/flag overrides.
+//!
+//! A config is a flat key=value set loadable from a simple
+//! `key = value` file (comments with `#`) and overridable from CLI
+//! flags (`--key value`). Typed accessors with defaults keep call
+//! sites honest.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    vals: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse `key = value` lines; `#` starts a comment.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut cfg = Self::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            cfg.set(k.trim(), v.trim());
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.vals.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.vals.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("config {key}={v}: not a usize")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("config {key}={v}: not a float")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("config {key}={v}: not a u64")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true" | "1" | "yes") => true,
+            Some("false" | "0" | "no") => false,
+            Some(v) => panic!("config {key}={v}: not a bool"),
+            None => default,
+        }
+    }
+
+    /// Merge overrides (other wins).
+    pub fn merge(&mut self, other: &Config) {
+        for (k, v) in &other.vals {
+            self.vals.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.vals.keys().map(|s| s.as_str())
+    }
+
+    /// The protocol parameters encoded in this config.
+    pub fn params(&self) -> crate::coordinator::Params {
+        let d = crate::coordinator::Params::default();
+        crate::coordinator::Params {
+            k: self.usize_or("k", d.k),
+            t: self.usize_or("t", d.t),
+            p: self.usize_or("p", d.p),
+            n_lev: self.usize_or("n_lev", d.n_lev),
+            n_adapt: self.usize_or("n_adapt", d.n_adapt),
+            w: self.usize_or("w", d.w),
+            m_rff: self.usize_or("m_rff", d.m_rff),
+            t2: self.usize_or("t2", d.t2),
+            seed: self.u64_or("seed", d.seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_access() {
+        let cfg = Config::parse(
+            "k = 10\n# comment\nscale=0.5  # trailing\nname = bow_like\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.usize_or("k", 0), 10);
+        assert_eq!(cfg.f64_or("scale", 0.0), 0.5);
+        assert_eq!(cfg.str_or("name", ""), "bow_like");
+        assert!(cfg.bool_or("flag", false));
+        assert_eq!(cfg.usize_or("absent", 7), 7);
+    }
+
+    #[test]
+    fn parse_rejects_bad_lines() {
+        assert!(Config::parse("novalue\n").is_err());
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut a = Config::parse("k = 1\nt = 2\n").unwrap();
+        let b = Config::parse("t = 9\n").unwrap();
+        a.merge(&b);
+        assert_eq!(a.usize_or("k", 0), 1);
+        assert_eq!(a.usize_or("t", 0), 9);
+    }
+
+    #[test]
+    fn params_from_config() {
+        let cfg = Config::parse("k = 5\nn_adapt = 77\nseed = 3\n").unwrap();
+        let p = cfg.params();
+        assert_eq!(p.k, 5);
+        assert_eq!(p.n_adapt, 77);
+        assert_eq!(p.seed, 3);
+        assert_eq!(p.p, 250); // default preserved
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_type_panics() {
+        let cfg = Config::parse("k = abc\n").unwrap();
+        cfg.usize_or("k", 0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Success-probability boosting by repetition (paper Theorem 1
+//! remark: "The constant success probability can be boosted up to any
+//! high probability 1−δ by repetition, which adds only an extra
+//! O(log 1/δ) term to communication and computation.")
+//!
+//! [`dis_kpca_boosted`] runs disKPCA `reps` times with independent
+//! derived seeds, evaluates each candidate with the exact distributed
+//! error round, and keeps the best. The communication multiplies by
+//! `reps` — the accounting picks this up automatically because every
+//! repetition's rounds go through the same [`CommStats`].
+
+use crate::comm::Cluster;
+use crate::kernels::Kernel;
+
+use super::master::{dis_eval, dis_kpca, dis_set_solution};
+use super::{KpcaSolution, Params};
+
+/// Number of repetitions for failure probability ≤ δ given the base
+/// algorithm's 0.99 success rate: each repetition independently fails
+/// with probability ≤ 0.01, and we can *verify* candidates exactly via
+/// `dis_eval`, so r = ⌈log(δ)/log(0.01)⌉ repetitions suffice.
+pub fn reps_for_confidence(delta: f64) -> usize {
+    assert!(delta > 0.0 && delta < 1.0);
+    (delta.ln() / 0.01f64.ln()).ceil().max(1.0) as usize
+}
+
+/// Outcome of a boosted run: the winning solution plus the per-attempt
+/// errors (useful for reporting the boost's effect).
+#[derive(Clone, Debug)]
+pub struct BoostedRun {
+    pub solution: KpcaSolution,
+    /// ‖φ(A) − LLᵀφ(A)‖² of each attempt, in attempt order.
+    pub errors: Vec<f64>,
+    /// index into `errors` of the winner (minimum error).
+    pub winner: usize,
+    /// tr K (shared across attempts — same data).
+    pub trace: f64,
+}
+
+/// Run disKPCA `reps` times with independent seeds; return the
+/// attempt with the smallest exact approximation error.
+pub fn dis_kpca_boosted(
+    cluster: &Cluster,
+    kernel: Kernel,
+    params: &Params,
+    reps: usize,
+) -> BoostedRun {
+    assert!(reps >= 1);
+    let mut best: Option<(f64, KpcaSolution)> = None;
+    let mut errors = Vec::with_capacity(reps);
+    let mut trace = 0.0;
+    for r in 0..reps {
+        // splitmix-style seed derivation keeps attempts independent
+        let attempt = Params {
+            seed: params.seed.wrapping_add(0x9e3779b97f4a7c15u64.wrapping_mul(r as u64 + 1)),
+            ..*params
+        };
+        let sol = dis_kpca(cluster, kernel, &attempt);
+        let (err, tr) = dis_eval(cluster);
+        errors.push(err);
+        trace = tr;
+        if best.as_ref().map_or(true, |(b, _)| err < *b) {
+            best = Some((err, sol));
+        }
+    }
+    let (_, solution) = best.unwrap();
+    // leave the winner installed on the workers (the last attempt may
+    // not be the winner).
+    dis_set_solution(cluster, &solution);
+    let winner = errors
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    BoostedRun { solution, errors, winner, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_cluster;
+    use crate::data::{partition_power_law, Data};
+    use crate::rng::Rng;
+    use crate::runtime::NativeBackend;
+    use std::sync::Arc;
+
+    #[test]
+    fn reps_formula() {
+        assert_eq!(reps_for_confidence(0.01), 1);
+        assert_eq!(reps_for_confidence(1e-4), 2);
+        assert_eq!(reps_for_confidence(1e-6), 3);
+    }
+
+    #[test]
+    fn boosted_beats_or_ties_every_attempt() {
+        let mut rng = Rng::seed_from(21);
+        let data = Data::Dense(crate::data::clusters(8, 160, 4, 0.2, &mut rng));
+        let shards = partition_power_law(&data, 3, 5);
+        let kernel = Kernel::Gauss { gamma: 0.5 };
+        let params = Params {
+            k: 4,
+            t: 16,
+            p: 40,
+            n_lev: 10,
+            n_adapt: 16,
+            w: 0,
+            m_rff: 256,
+            t2: 128,
+            seed: 77,
+        };
+        let ((run, final_err), _) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| {
+                let run = dis_kpca_boosted(cluster, kernel, &params, 3);
+                let (err, _) = dis_eval(cluster);
+                (run, err)
+            },
+        );
+        assert_eq!(run.errors.len(), 3);
+        let best = run.errors.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(run.errors[run.winner], best);
+        // the installed solution must be the winner, not the last try
+        assert!(
+            (final_err - best).abs() < 1e-6 * run.trace,
+            "installed {final_err} vs best {best}"
+        );
+        // winning error from the data's perspective too
+        let local = run.solution.eval_error(&data);
+        assert!((local - best).abs() < 1e-6 * run.trace);
+    }
+
+    #[test]
+    fn boosting_never_hurts() {
+        let mut rng = Rng::seed_from(22);
+        let data = Data::Dense(crate::data::clusters(6, 120, 4, 0.25, &mut rng));
+        let kernel = Kernel::Gauss { gamma: 0.7 };
+        let params = Params {
+            k: 3,
+            t: 12,
+            p: 30,
+            n_lev: 8,
+            n_adapt: 10,
+            w: 0,
+            m_rff: 128,
+            t2: 64,
+            seed: 5,
+        };
+        // single run error
+        let shards = partition_power_law(&data, 3, 6);
+        let (single, _) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| {
+                let _ = dis_kpca(cluster, kernel, &params);
+                dis_eval(cluster).0
+            },
+        );
+        // boosted (first attempt uses a derived seed, so compare via
+        // min: the boosted error is the min over its own attempts)
+        let shards = partition_power_law(&data, 3, 6);
+        let (run, _) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| dis_kpca_boosted(cluster, kernel, &params, 4),
+        );
+        let boosted = run.errors[run.winner];
+        // across 4 independent attempts, the min is very unlikely to
+        // be more than marginally worse than any single reference run
+        assert!(boosted <= single * 1.10, "boosted {boosted} single {single}");
+    }
+}

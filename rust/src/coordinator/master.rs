@@ -1,0 +1,343 @@
+//! Master-side protocol drivers: disLS (Alg. 1), RepSample (Alg. 2),
+//! disLR (Alg. 3) and the full disKPCA (Alg. 4).
+
+use crate::comm::{Cluster, Message, PointSet};
+use crate::embed::EmbedSpec;
+use crate::kernels::{gram, Kernel};
+use crate::linalg::{chol_psd, qr_r_only, solve_upper, top_k_left_singular, Mat};
+use crate::rng::{multinomial, Rng};
+
+use super::{KpcaSolution, Params};
+
+/// Unwrap helpers.
+fn scalar(m: Message) -> f64 {
+    match m {
+        Message::RespScalar(v) => v,
+        other => panic!("expected RespScalar, got {}", other.tag()),
+    }
+}
+
+fn mat(m: Message) -> Mat {
+    match m {
+        Message::RespMat(v) => v,
+        other => panic!("expected RespMat, got {}", other.tag()),
+    }
+}
+
+fn points(m: Message) -> PointSet {
+    match m {
+        Message::RespPoints(v) => v,
+        other => panic!("expected RespPoints, got {}", other.tag()),
+    }
+}
+
+pub(super) fn count(m: Message) -> usize {
+    match m {
+        Message::RespCount(v) => v,
+        other => panic!("expected RespCount, got {}", other.tag()),
+    }
+}
+
+/// Alg. 4 step 1: broadcast the shared embedding spec; workers build
+/// E^i = S(φ(Aⁱ)) locally.
+pub fn dis_embed(cluster: &Cluster, spec: EmbedSpec) {
+    cluster.set_round("1-embed");
+    for ack in cluster.exchange(&Message::ReqEmbed { spec }) {
+        assert!(matches!(ack, Message::Ack));
+    }
+}
+
+/// Alg. 1 (disLS): returns per-worker leverage-score masses. Workers
+/// hold their individual scores; the master only ever sees the t×p
+/// sketches, the t×t factor Z, and one scalar per worker.
+pub fn dis_leverage_scores(cluster: &Cluster, params: &Params) -> Vec<f64> {
+    cluster.set_round("2-disLS");
+    let s = cluster.num_workers();
+    // step 1: per-worker right-sketch E^i T^i (distinct seeds ⇒ the
+    // block-diagonal T of Lemma 6).
+    for i in 0..s {
+        cluster.send(
+            i,
+            Message::ReqSketchEmbed { p: params.p, seed: params.seed ^ (0x515 + i as u64) },
+        );
+    }
+    let sketches: Vec<Mat> = cluster.gather().into_iter().map(mat).collect();
+    // step 2: QR-factorize [E¹T¹, …, EˢTˢ]ᵀ = U·Z, broadcast Z.
+    let transposed: Vec<Mat> = sketches.iter().map(|sk| sk.transpose()).collect();
+    let z = qr_r_only(&Mat::vcat_all(&transposed));
+    // step 3: workers compute ℓ̃ⱼ = ‖((Zᵀ)⁻¹Eⁱ)_{:j}‖², reply masses.
+    cluster
+        .exchange(&Message::ReqScores { z })
+        .into_iter()
+        .map(scalar)
+        .collect()
+}
+
+/// Alg. 1 with an ε-accurate sketch (§5.2 closing remark): an
+/// (ε/2)-subspace embedding instead of the ¼ one makes the worker-side
+/// scores (1±ε)-accurate — "useful for other applications". The sketch
+/// width grows as p = O(t/ε²); the masses returned here are the same
+/// per-worker totals as [`dis_leverage_scores`], and the full vectors
+/// can be pulled with [`dis_leverage_vectors`] (an O(n)-word offline
+/// API, not part of the disKPCA budget).
+pub fn dis_leverage_scores_eps(cluster: &Cluster, params: &Params, eps: f64) -> Vec<f64> {
+    assert!(eps > 0.0 && eps <= 1.0);
+    let p_eps = leverage_sketch_width(params.t, eps);
+    let boosted = Params { p: p_eps.max(params.p), ..*params };
+    dis_leverage_scores(cluster, &boosted)
+}
+
+/// Sketch width p for (1±ε)-accurate leverage scores. The right-sketch
+/// is a CountSketch, whose subspace-embedding guarantee needs
+/// p = O(t²/ε²) columns (Clarkson–Woodruff; the t² is the price of a
+/// single nonzero per column). The disKPCA default (p = O(t)) only
+/// targets constant accuracy, which is all Lemma 6 needs.
+pub fn leverage_sketch_width(t: usize, eps: f64) -> usize {
+    ((4.0 * (t * t) as f64) / (eps * eps)).ceil() as usize
+}
+
+/// Pull the full per-point leverage-score vectors from every worker
+/// (order: worker 0's points, worker 1's, …). O(n) words — offline
+/// validation/debug API, never used by disKPCA itself.
+pub fn dis_leverage_vectors(cluster: &Cluster) -> Vec<Vec<f64>> {
+    cluster.set_round("offline-scores");
+    cluster
+        .exchange(&Message::ReqScoresVec)
+        .into_iter()
+        .map(|m| {
+            let v = mat(m);
+            v.row(0).to_vec()
+        })
+        .collect()
+}
+
+/// Which parts of RepSample to run — the DESIGN.md ablation axis.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SamplingMode {
+    /// the paper: leverage P, then adaptive Ŷ (Alg. 2).
+    Full,
+    /// leverage scores only, |P| = n_lev + n_adapt (Challenge III:
+    /// rank-O(k/ε) span without the rank-k refinement).
+    LeverageOnly,
+    /// uniform P, then adaptive Ŷ (is the leverage stage pulling its
+    /// weight, or is adaptive sampling doing all the work?).
+    AdaptiveOnly,
+}
+
+/// Alg. 2 (RepSample): leverage sampling + adaptive sampling.
+/// Returns the representative set Y (dense d×|Y|) — already known to
+/// every worker because the requests carried it.
+pub fn rep_sample(cluster: &Cluster, params: &Params, masses: &[f64]) -> PointSet {
+    rep_sample_mode(cluster, params, masses, SamplingMode::Full)
+}
+
+/// RepSample with an explicit [`SamplingMode`] (ablations).
+pub fn rep_sample_mode(
+    cluster: &Cluster,
+    params: &Params,
+    masses: &[f64],
+    mode: SamplingMode,
+) -> PointSet {
+    match mode {
+        SamplingMode::Full => rep_sample_impl(cluster, params, masses, params.n_lev, true),
+        SamplingMode::LeverageOnly => {
+            rep_sample_impl(cluster, params, masses, params.n_lev + params.n_adapt, false)
+        }
+        SamplingMode::AdaptiveOnly => {
+            // uniform first stage of the same size
+            let p_set = super::baselines::dis_uniform_sample(
+                cluster,
+                params.n_lev,
+                params.seed ^ 0xab1a,
+            );
+            adaptive_stage(cluster, params, p_set)
+        }
+    }
+}
+
+fn rep_sample_impl(
+    cluster: &Cluster,
+    params: &Params,
+    masses: &[f64],
+    n_lev: usize,
+    adaptive: bool,
+) -> PointSet {
+    let mut rng = Rng::seed_from(params.seed ^ 0x5a3);
+    // ---- step 1: leverage-weighted sample of O(k log k) points ----
+    cluster.set_round("3-levSample");
+    let alloc = multinomial(&mut rng, masses, n_lev);
+    for (i, &c) in alloc.iter().enumerate() {
+        cluster.send(
+            i,
+            Message::ReqSampleLeverage { count: c, seed: params.seed ^ (0x1e7 + i as u64) },
+        );
+    }
+    let parts: Vec<PointSet> = cluster.gather().into_iter().map(points).collect();
+    let p_set = PointSet::concat(&parts);
+    if !adaptive {
+        return p_set;
+    }
+    adaptive_stage(cluster, params, p_set)
+}
+
+/// Steps 2–3 of Alg. 2: broadcast P, sample ∝ residual distance².
+fn adaptive_stage(cluster: &Cluster, params: &Params, p_set: PointSet) -> PointSet {
+    let mut rng = Rng::seed_from(params.seed ^ 0xa5a3);
+    cluster.set_round("4-adaptive");
+    let res_masses: Vec<f64> = cluster
+        .exchange(&Message::ReqResiduals { pts: p_set.clone() })
+        .into_iter()
+        .map(scalar)
+        .collect();
+    let alloc = multinomial(&mut rng, &res_masses, params.n_adapt);
+    for (i, &c) in alloc.iter().enumerate() {
+        cluster.send(
+            i,
+            Message::ReqSampleAdaptive { count: c, seed: params.seed ^ (0xada + i as u64) },
+        );
+    }
+    let mut all = vec![p_set];
+    all.extend(cluster.gather().into_iter().map(points).filter(|p| !p.is_empty()));
+    PointSet::concat(&all)
+}
+
+/// Alg. 3 (disLR): compute the best rank-k approximation in span φ(Y).
+/// Returns the solution (Y, C) with L = φ(Y)·C orthonormal.
+pub fn dis_low_rank(
+    cluster: &Cluster,
+    kernel: Kernel,
+    params: &Params,
+    y: &PointSet,
+) -> KpcaSolution {
+    cluster.set_round("5-disLR");
+    let timing = std::env::var_os("DISKPCA_TIMING").is_some();
+    let mut stamp = std::time::Instant::now();
+    let mut lap = |label: &str| {
+        if timing {
+            eprintln!("[timing]   disLR/{label:<10} {:?}", stamp.elapsed());
+        }
+        stamp = std::time::Instant::now();
+    };
+    let s = cluster.num_workers();
+    let w_cols = if params.w == 0 { y.len() } else { params.w };
+    // step 1: workers project + right-sketch.
+    for i in 0..s {
+        cluster.send(
+            i,
+            Message::ReqProjectSketch {
+                pts: y.clone(),
+                w: w_cols,
+                seed: params.seed ^ (0xd15 + i as u64),
+            },
+        );
+    }
+    let sketches: Vec<Mat> = cluster.gather().into_iter().map(mat).collect();
+    lap("project");
+    // step 2: concatenate ΠT = [Π¹T¹ … ΠˢTˢ]; top-k left vectors W.
+    let pit = Mat::hcat_all(&sketches);
+    let k = params.k.min(pit.rows()).min(pit.cols());
+    let (w_mat, _sv) = top_k_left_singular(&pit, k);
+    lap("svd");
+    // step 3: broadcast W; workers cache LᵀΦ(Aⁱ) = WᵀΠⁱ.
+    for ack in cluster.exchange(&Message::ReqFinal { coeffs: w_mat.clone() }) {
+        assert!(matches!(ack, Message::Ack));
+    }
+    lap("final");
+    // Master-side coefficients C = R⁻¹W so that L = φ(Y)·C.
+    let y_mat = y.to_mat();
+    let k_yy = gram(kernel, &y_mat, &crate::data::Data::Dense(y_mat.clone()));
+    let (r, _) = chol_psd(&k_yy);
+    let mut coeffs = Mat::zeros(y.len(), k);
+    for j in 0..k {
+        coeffs.set_col(j, &solve_upper(&r, &w_mat.col(j)));
+    }
+    lap("coeffs");
+    KpcaSolution { kernel, y: y_mat, coeffs }
+}
+
+/// Alg. 4 (disKPCA): the paper's headline algorithm.
+pub fn dis_kpca(cluster: &Cluster, kernel: Kernel, params: &Params) -> KpcaSolution {
+    dis_kpca_mode(cluster, kernel, params, SamplingMode::Full)
+}
+
+/// disKPCA with an ablated sampling stage (DESIGN.md ablations).
+///
+/// Set `DISKPCA_TIMING=1` to print per-round wall times to stderr —
+/// the §Perf first-stop for locating protocol bottlenecks.
+pub fn dis_kpca_mode(
+    cluster: &Cluster,
+    kernel: Kernel,
+    params: &Params,
+    mode: SamplingMode,
+) -> KpcaSolution {
+    let timing = std::env::var_os("DISKPCA_TIMING").is_some();
+    let mut stamp = std::time::Instant::now();
+    let mut lap = |label: &str| {
+        if timing {
+            eprintln!("[timing] {label:<12} {:?}", stamp.elapsed());
+        }
+        stamp = std::time::Instant::now();
+    };
+    let spec = EmbedSpec {
+        kernel,
+        m: params.m_rff,
+        t2: params.t2,
+        t: params.t,
+        seed: params.seed ^ 0xeb3d,
+    };
+    let y = if mode == SamplingMode::AdaptiveOnly {
+        // no embedding/leverage rounds at all in this ablation
+        rep_sample_mode(cluster, params, &[], mode)
+    } else {
+        dis_embed(cluster, spec);
+        lap("embed");
+        let masses = dis_leverage_scores(cluster, params);
+        lap("disLS");
+        rep_sample_mode(cluster, params, &masses, mode)
+    };
+    lap("repSample");
+    let sol = dis_low_rank(cluster, kernel, params, &y);
+    lap("disLR");
+    sol
+}
+
+/// Distributed evaluation: (‖φ(A) − LLᵀφ(A)‖², tr K) for the solution
+/// currently installed on the workers.
+pub fn dis_eval(cluster: &Cluster) -> (f64, f64) {
+    cluster.set_round("6-eval");
+    let err = cluster
+        .exchange(&Message::ReqEvalError)
+        .into_iter()
+        .map(scalar)
+        .sum();
+    let trace = cluster
+        .exchange(&Message::ReqEvalTrace)
+        .into_iter()
+        .map(scalar)
+        .sum();
+    (err, trace)
+}
+
+/// Per-worker cumulative compute seconds (Fig-7 critical path: on a
+/// single-core testbed, `max` over workers simulates the parallel
+/// runtime an s-machine cluster would see).
+pub fn dis_busy_times(cluster: &Cluster) -> Vec<f64> {
+    cluster.set_round("8-stats");
+    cluster
+        .exchange(&Message::ReqBusyTime)
+        .into_iter()
+        .map(scalar)
+        .collect()
+}
+
+/// Install an externally computed solution (baselines) on all workers.
+pub fn dis_set_solution(cluster: &Cluster, sol: &KpcaSolution) {
+    cluster.set_round("5-setSolution");
+    let msg = Message::ReqSetSolution {
+        pts: PointSet::Dense(sol.y.clone()),
+        coeffs: sol.coeffs.clone(),
+    };
+    for ack in cluster.exchange(&msg) {
+        assert!(matches!(ack, Message::Ack));
+    }
+}

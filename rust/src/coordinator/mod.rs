@@ -1,0 +1,467 @@
+//! The paper's system contribution: communication-efficient
+//! distributed kernel PCA (master–worker, arbitrary partition).
+//!
+//! - [`master`] — the four protocol drivers (Algs. 1–4)
+//! - [`worker`] — the worker state machine
+//! - [`baselines`] — uniform+disLR, uniform+batch-KPCA, batch KPCA
+//! - [`kmeans`] — distributed k-means / spectral clustering (§6.6)
+//! - [`run_cluster`] — spawn worker threads + run a master closure
+
+pub mod baselines;
+pub mod boost;
+pub mod css;
+pub mod kmeans;
+pub mod krr;
+pub mod master;
+pub mod related;
+pub mod worker;
+
+pub use baselines::{batch_kpca, uniform_batch_kpca, uniform_dis_lr, BatchKpca};
+pub use boost::{dis_kpca_boosted, reps_for_confidence, BoostedRun};
+pub use css::{dis_css, CssSolution};
+pub use krr::{dis_krr, KrrModel};
+pub use master::{
+    dis_embed, dis_eval, dis_kpca, dis_kpca_mode, dis_leverage_scores, dis_leverage_scores_eps,
+    dis_leverage_vectors, dis_low_rank, dis_set_solution, leverage_sketch_width, rep_sample,
+    rep_sample_mode, SamplingMode,
+};
+pub use worker::Worker;
+
+use std::sync::Arc;
+
+use crate::comm::{memory, Cluster, CommStats};
+use crate::data::Data;
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+use crate::runtime::Backend;
+
+/// Tunables for disKPCA (paper §6.2 defaults unless noted).
+#[derive(Clone, Copy, Debug)]
+pub struct Params {
+    /// number of principal components (paper: 10).
+    pub k: usize,
+    /// kernel-subspace-embedding dim t = O(k) (paper: 50; our XLA
+    /// grid bakes 64).
+    pub t: usize,
+    /// disLS right-sketch columns p = O(t) (paper: 250).
+    pub p: usize,
+    /// leverage samples |P| = O(k log k) (paper: part of |Y|).
+    pub n_lev: usize,
+    /// adaptive samples |Ŷ| = O(k/ε) (paper sweeps 50–400).
+    pub n_adapt: usize,
+    /// disLR sketch columns w (0 ⇒ |Y|, the paper's setting).
+    pub w: usize,
+    /// random features m for shift-invariant/arc-cos kernels
+    /// (paper: 2000; our XLA grid bakes 512).
+    pub m_rff: usize,
+    /// TensorSketch dim t₂ for polynomial kernels.
+    pub t2: usize,
+    /// master seed — every random choice derives from it.
+    pub seed: u64,
+}
+
+impl Default for Params {
+    fn default() -> Self {
+        Self {
+            k: 10,
+            t: 64,
+            p: 250,
+            n_lev: 50,
+            n_adapt: 200,
+            w: 0,
+            m_rff: 512,
+            t2: 512,
+            seed: 0xd15c,
+        }
+    }
+}
+
+/// The output of disKPCA: k components L = φ(Y)·C represented by the
+/// |Y| sampled points and a coefficient matrix (paper Thm 1 remark).
+#[derive(Clone, Debug)]
+pub struct KpcaSolution {
+    pub kernel: Kernel,
+    /// d×|Y| representative points.
+    pub y: Mat,
+    /// |Y|×k coefficients; LᵀL = I by construction.
+    pub coeffs: Mat,
+}
+
+impl KpcaSolution {
+    pub fn num_points(&self) -> usize {
+        self.y.cols()
+    }
+
+    pub fn k(&self) -> usize {
+        self.coeffs.cols()
+    }
+
+    /// Project points onto the components: LᵀΦ(x) = Cᵀ·K(Y, x) — k×n.
+    pub fn project(&self, x: &Data) -> Mat {
+        let k_yx = crate::kernels::gram(self.kernel, &self.y, x);
+        self.coeffs.matmul_at_b(&k_yx)
+    }
+
+    /// Exact ‖φ(x) − LLᵀφ(x)‖² summed over a dataset (single-machine
+    /// evaluation; the distributed path is `master::dis_eval`).
+    pub fn eval_error(&self, x: &Data) -> f64 {
+        let proj = self.project(x);
+        let norms = proj.col_norms_sq();
+        crate::kernels::diag(self.kernel, x)
+            .iter()
+            .zip(&norms)
+            .map(|(&d, &n)| (d - n).max(0.0))
+            .sum()
+    }
+}
+
+/// Spawn `shards.len()` worker threads over the in-memory transport,
+/// run `body` against the cluster, join, and return the body's output
+/// plus the communication stats.
+pub fn run_cluster<T: Send + 'static>(
+    shards: Vec<Data>,
+    kernel: Kernel,
+    backend: Arc<dyn Backend>,
+    body: impl FnOnce(&Cluster) -> T,
+) -> (T, CommStats) {
+    let s = shards.len();
+    let (links, endpoints) = memory::star(s);
+    let stats = CommStats::new();
+    let cluster = Cluster::new(links, stats.clone());
+    let handles: Vec<_> = shards
+        .into_iter()
+        .zip(endpoints)
+        .map(|(shard, ep)| {
+            let be = backend.clone();
+            std::thread::spawn(move || Worker::new(shard, kernel, be).run(ep))
+        })
+        .collect();
+    let out = body(&cluster);
+    cluster.shutdown();
+    for h in handles {
+        h.join().expect("worker panicked");
+    }
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{partition_power_law, Data};
+    use crate::rng::Rng;
+    use crate::runtime::NativeBackend;
+
+    fn cluster_low_rank_data(n: usize, d: usize) -> Data {
+        let mut rng = Rng::seed_from(42);
+        Data::Dense(crate::data::clusters(d, n, 4, 0.15, &mut rng))
+    }
+
+    fn small_params() -> Params {
+        Params {
+            k: 4,
+            t: 16,
+            p: 40,
+            n_lev: 12,
+            n_adapt: 24,
+            w: 0,
+            m_rff: 256,
+            t2: 128,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn diskpca_end_to_end_gauss() {
+        let data = cluster_low_rank_data(200, 8);
+        let shards = partition_power_law(&data, 4, 1);
+        let kernel = Kernel::Gauss { gamma: 0.8 };
+        let params = small_params();
+        let ((sol, err, trace), stats) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| {
+                let sol = dis_kpca(cluster, kernel, &params);
+                let (err, trace) = dis_eval(cluster);
+                (sol, err, trace)
+            },
+        );
+        assert_eq!(sol.k(), 4);
+        assert!(sol.num_points() >= 12 && sol.num_points() <= 12 + 24);
+        // distributed eval must match single-machine eval of the
+        // returned solution
+        let local_err = sol.eval_error(&data);
+        assert!(
+            (err - local_err).abs() < 1e-6 * trace,
+            "dis {err} vs local {local_err}"
+        );
+        // 4 tight clusters, k=4, gaussian kernel ⇒ relative error
+        // well below the trivial solution (err = trace for L = 0).
+        assert!(err / trace < 0.35, "relative error {}", err / trace);
+        // communication accounting: every round present
+        for round in ["1-embed", "2-disLS", "3-levSample", "4-adaptive", "5-disLR", "6-eval"] {
+            assert!(stats.round_words(round) > 0, "round {round} missing");
+        }
+    }
+
+    #[test]
+    fn diskpca_poly_kernel() {
+        let data = cluster_low_rank_data(150, 6);
+        let shards = partition_power_law(&data, 3, 2);
+        let kernel = Kernel::Poly { q: 2 };
+        let params = small_params();
+        let ((err, trace), _stats) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| {
+                let _sol = dis_kpca(cluster, kernel, &params);
+                dis_eval(cluster)
+            },
+        );
+        assert!(err >= 0.0 && err < trace, "err {err} trace {trace}");
+        assert!(err / trace < 0.5, "poly relative error {}", err / trace);
+    }
+
+    #[test]
+    fn diskpca_arccos_kernel_sparse_data() {
+        let mut rng = Rng::seed_from(3);
+        let data = Data::Sparse(crate::data::zipf_sparse(300, 120, 20, &mut rng));
+        let shards = partition_power_law(&data, 3, 3);
+        let kernel = Kernel::ArcCos { degree: 2 };
+        let params = small_params();
+        let ((err, trace), stats) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| {
+                let _ = dis_kpca(cluster, kernel, &params);
+                dis_eval(cluster)
+            },
+        );
+        assert!(err >= -1e-6 && err < trace);
+        // sparse points must be shipped sparse: the sampling rounds
+        // cost ≪ dense d×|Y| words
+        let sample_words = stats.round_words("3-levSample") + stats.round_words("4-adaptive");
+        let dense_cost = 300 * (12 + 24) * 4; // d × |Y| × (s bcasts)
+        assert!(sample_words < dense_cost, "{sample_words} vs {dense_cost}");
+    }
+
+    #[test]
+    fn diskpca_laplace_kernel() {
+        let data = cluster_low_rank_data(150, 6);
+        let shards = partition_power_law(&data, 3, 7);
+        let kernel = Kernel::Laplace { gamma: 0.5 };
+        let params = small_params();
+        let ((err, trace), _stats) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| {
+                let _sol = dis_kpca(cluster, kernel, &params);
+                dis_eval(cluster)
+            },
+        );
+        assert!(err >= 0.0 && err < trace, "err {err} trace {trace}");
+        assert!(err / trace < 0.5, "laplace relative error {}", err / trace);
+    }
+
+    #[test]
+    fn eps_leverage_scores_match_exact() {
+        // (1±ε) accuracy of disLS with the ε/2 embedding (§5.2 remark):
+        // compare worker-held scores against exact leverage of the
+        // concatenated embedded data E (reconstructible from the spec).
+        let data = cluster_low_rank_data(120, 6);
+        let shards = partition_power_law(&data, 3, 8);
+        let shards_copy = shards.clone();
+        let kernel = Kernel::Gauss { gamma: 0.6 };
+        let params = small_params();
+        let eps = 0.5;
+        let (vectors, _) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| {
+                let spec = crate::embed::EmbedSpec {
+                    kernel,
+                    m: params.m_rff,
+                    t2: params.t2,
+                    t: params.t,
+                    seed: params.seed ^ 0xeb3d,
+                };
+                dis_embed(cluster, spec);
+                let _ = master::dis_leverage_scores_eps(cluster, &params, eps);
+                master::dis_leverage_vectors(cluster)
+            },
+        );
+        // exact scores of E = [E¹ … Eˢ], rebuilt locally
+        let spec = crate::embed::EmbedSpec {
+            kernel,
+            m: params.m_rff,
+            t2: params.t2,
+            t: params.t,
+            seed: params.seed ^ 0xeb3d,
+        };
+        let mut e = crate::embed::embed(&spec, &shards_copy[0]);
+        for sh in &shards_copy[1..] {
+            e = e.hcat(&crate::embed::embed(&spec, sh));
+        }
+        let exact = crate::linalg::exact_leverage_scores(&e);
+        let approx: Vec<f64> = vectors.into_iter().flatten().collect();
+        assert_eq!(approx.len(), exact.len());
+        for (j, (&a, &x)) in approx.iter().zip(&exact).enumerate() {
+            if x > 1e-8 {
+                let ratio = a / x;
+                assert!(
+                    (1.0 - eps..=1.0 + eps).contains(&ratio),
+                    "col {j}: approx {a} exact {x} ratio {ratio}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn more_adaptive_samples_reduce_error() {
+        let data = cluster_low_rank_data(240, 10);
+        let kernel = Kernel::Gauss { gamma: 0.5 };
+        let mut errs = Vec::new();
+        for n_adapt in [6, 80] {
+            let shards = partition_power_law(&data, 4, 1);
+            let params = Params { n_adapt, ..small_params() };
+            let ((err, _), _) = run_cluster(
+                shards,
+                kernel,
+                Arc::new(NativeBackend::new()),
+                move |cluster| {
+                    let _ = dis_kpca(cluster, kernel, &params);
+                    dis_eval(cluster)
+                },
+            );
+            errs.push(err);
+        }
+        assert!(errs[1] <= errs[0] * 1.05, "{errs:?}");
+    }
+
+    #[test]
+    fn solution_projection_orthonormal() {
+        let data = cluster_low_rank_data(120, 6);
+        let shards = partition_power_law(&data, 2, 5);
+        let kernel = Kernel::Gauss { gamma: 1.0 };
+        let params = small_params();
+        let (sol, _) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| dis_kpca(cluster, kernel, &params),
+        );
+        // LᵀL = Cᵀ K(Y,Y) C must be ≈ I
+        let kyy = crate::kernels::gram(kernel, &sol.y, &Data::Dense(sol.y.clone()));
+        let ltl = sol.coeffs.matmul_at_b(&kyy.matmul(&sol.coeffs));
+        let eye = Mat::identity(sol.k());
+        assert!(ltl.max_abs_diff(&eye) < 1e-4, "LᵀL err {}", ltl.max_abs_diff(&eye));
+    }
+
+    #[test]
+    fn single_worker_cluster() {
+        // s=1 degenerates to a (sketched) single-machine algorithm and
+        // must still work end to end.
+        let data = cluster_low_rank_data(120, 6);
+        let kernel = Kernel::Gauss { gamma: 0.7 };
+        let params = small_params();
+        let ((err, trace), stats) = run_cluster(
+            vec![data],
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| {
+                assert_eq!(cluster.num_workers(), 1);
+                let _ = dis_kpca(cluster, kernel, &params);
+                dis_eval(cluster)
+            },
+        );
+        assert!(err >= 0.0 && err < trace);
+        assert!(stats.total_words() > 0);
+    }
+
+    #[test]
+    fn rank_one_kpca() {
+        let data = cluster_low_rank_data(90, 5);
+        let kernel = Kernel::Gauss { gamma: 0.4 };
+        let params = Params { k: 1, ..small_params() };
+        let (sol, _) = run_cluster(
+            vec![data.slice_cols(0, 45), data.slice_cols(45, 90)],
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| dis_kpca(cluster, kernel, &params),
+        );
+        assert_eq!(sol.k(), 1);
+    }
+
+    #[test]
+    fn tiny_shards_survive() {
+        // workers with 1–3 points each: sketches, sampling and
+        // projection must tolerate n_i smaller than every sketch dim.
+        let data = cluster_low_rank_data(12, 5);
+        let shards: Vec<Data> = (0..4).map(|i| data.slice_cols(3 * i, 3 * i + 3)).collect();
+        let kernel = Kernel::Gauss { gamma: 0.5 };
+        let params = Params { k: 2, n_lev: 4, n_adapt: 6, ..small_params() };
+        let ((err, trace), _) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| {
+                let _ = dis_kpca(cluster, kernel, &params);
+                dis_eval(cluster)
+            },
+        );
+        // 12 points, |Y| can cover everything ⇒ tiny error
+        assert!(err <= trace * 0.6 + 1e-9, "err {err} trace {trace}");
+    }
+
+    #[test]
+    fn ablation_modes_all_run() {
+        let data = cluster_low_rank_data(150, 8);
+        let kernel = Kernel::Gauss { gamma: 0.5 };
+        let params = small_params();
+        let mut errs = Vec::new();
+        for mode in [
+            SamplingMode::Full,
+            SamplingMode::LeverageOnly,
+            SamplingMode::AdaptiveOnly,
+        ] {
+            let shards = partition_power_law(&data, 3, 4);
+            let ((err, trace), _) = run_cluster(
+                shards,
+                kernel,
+                Arc::new(NativeBackend::new()),
+                move |cluster| {
+                    let _ = super::dis_kpca_mode(cluster, kernel, &params, mode);
+                    dis_eval(cluster)
+                },
+            );
+            assert!(err >= 0.0 && err <= trace);
+            errs.push(err);
+        }
+        assert_eq!(errs.len(), 3);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let data = cluster_low_rank_data(100, 5);
+        let kernel = Kernel::Gauss { gamma: 0.6 };
+        let mut sols = Vec::new();
+        for _ in 0..2 {
+            let shards = partition_power_law(&data, 3, 9);
+            let params = small_params();
+            let (sol, _) = run_cluster(
+                shards,
+                kernel,
+                Arc::new(NativeBackend::new()),
+                move |cluster| dis_kpca(cluster, kernel, &params),
+            );
+            sols.push(sol);
+        }
+        assert_eq!(sols[0].num_points(), sols[1].num_points());
+        assert!(sols[0].y.max_abs_diff(&sols[1].y) < 1e-12);
+        assert!(sols[0].coeffs.max_abs_diff(&sols[1].coeffs) < 1e-9);
+    }
+}

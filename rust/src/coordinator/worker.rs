@@ -1,0 +1,501 @@
+//! Worker-side protocol state machine.
+//!
+//! A worker owns one shard, answers the master's requests, and keeps
+//! the between-round state the paper's algorithms rely on (its E^i,
+//! its leverage scores, its residual distances, its Π^i, and finally
+//! its projected coordinates). All heavy math is dispatched through
+//! the [`Backend`] so the same worker runs native or XLA.
+
+use std::sync::Arc;
+
+use crate::comm::{Message, PointSet};
+use crate::data::Data;
+use crate::kernels::{diag as kernel_diag, Kernel};
+use crate::linalg::{chol_psd, Mat};
+use crate::rng::{AliasTable, Rng};
+use crate::runtime::Backend;
+use crate::sketch::CountSketch;
+
+/// Per-thread CPU time — the Fig-7 "computation time" metric. Wall
+/// clocks inflate under core contention when many worker threads
+/// share one core (the whole point of the scaling study is to watch
+/// per-worker compute shrink, so contention must not leak in).
+#[cfg(target_os = "linux")]
+pub fn thread_cpu_time() -> std::time::Duration {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: CLOCK_THREAD_CPUTIME_ID with a valid out-pointer.
+    unsafe {
+        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+    }
+    std::time::Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
+}
+
+/// Non-Linux fallback: monotonic wall clock (scaling studies then
+/// require an otherwise-idle machine).
+#[cfg(not(target_os = "linux"))]
+pub fn thread_cpu_time() -> std::time::Duration {
+    use std::time::Instant;
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed()
+}
+
+pub struct Worker {
+    shard: Data,
+    kernel: Kernel,
+    backend: Arc<dyn Backend>,
+    // ---- protocol state ----
+    /// E^i = S(φ(Aⁱ)) — t×nᵢ (Alg. 4 step 1).
+    embedded: Option<Mat>,
+    /// generalized leverage scores of the local columns (Alg. 1).
+    scores: Option<Vec<f64>>,
+    /// squared residual distances to span φ(P) (Alg. 2).
+    residuals: Option<Vec<f64>>,
+    /// Π^i = Qᵀφ(Aⁱ) — |Y|×nᵢ (Alg. 3 step 1).
+    pi: Option<Mat>,
+    /// LᵀΦ(Aⁱ) — k×nᵢ once a solution is installed.
+    projected: Option<Mat>,
+    /// KRR state: (K(Y,Aⁱ), teacher targets) from ReqKrrStats.
+    krr: Option<(Mat, Vec<f64>)>,
+    /// cumulative compute time (Fig-7 critical-path metric).
+    busy: std::time::Duration,
+}
+
+impl Worker {
+    pub fn new(shard: Data, kernel: Kernel, backend: Arc<dyn Backend>) -> Self {
+        Self {
+            shard,
+            kernel,
+            backend,
+            embedded: None,
+            scores: None,
+            residuals: None,
+            pi: None,
+            projected: None,
+            krr: None,
+            busy: std::time::Duration::ZERO,
+        }
+    }
+
+    /// Serve requests until `Quit` — works over any transport.
+    pub fn run(mut self, mut endpoint: impl crate::comm::Endpoint) {
+        loop {
+            let req = endpoint.recv_req();
+            if matches!(req, Message::Quit) {
+                break;
+            }
+            endpoint.send_resp(self.handle(req));
+        }
+    }
+
+    /// Handle one request (public for tcp workers + unit tests).
+    pub fn handle(&mut self, req: Message) -> Message {
+        let t0 = thread_cpu_time();
+        let resp = self.dispatch(req);
+        self.busy += thread_cpu_time().saturating_sub(t0);
+        resp
+    }
+
+    fn dispatch(&mut self, req: Message) -> Message {
+        match req {
+            Message::ReqCount => Message::RespCount(self.shard.len()),
+            Message::ReqBusyTime => Message::RespScalar(self.busy.as_secs_f64()),
+            Message::ReqEmbed { spec } => {
+                self.embedded = Some(self.backend.embed(&spec, &self.shard));
+                Message::Ack
+            }
+            Message::ReqSketchEmbed { p, seed } => {
+                let e = self.embedded.as_ref().expect("ReqEmbed first");
+                let mut rng = Rng::seed_from(seed);
+                let cs = CountSketch::new(e.cols(), p, &mut rng);
+                Message::RespMat(cs.apply_point_axis(e))
+            }
+            Message::ReqScores { z } => {
+                let e = self.embedded.as_ref().expect("ReqEmbed first");
+                let scores = self.backend.leverage_norms(&z, e);
+                let total = scores.iter().sum();
+                self.scores = Some(scores);
+                Message::RespScalar(total)
+            }
+            Message::ReqScoresVec => {
+                let scores = self.scores.as_ref().expect("ReqScores first");
+                let mut m = Mat::zeros(1, scores.len());
+                for (j, &v) in scores.iter().enumerate() {
+                    m[(0, j)] = v;
+                }
+                Message::RespMat(m)
+            }
+            Message::ReqKrrStats { pts, teacher_seed } => {
+                let y = pts.to_mat();
+                let k_ya = self.backend.gram(self.kernel, &y, &self.shard);
+                let targets = self.teacher_targets(teacher_seed);
+                // g = K_YA·K_AY (|Y|×|Y|), b = K_YA·t (|Y|×1)
+                let g = k_ya.matmul_a_bt(&k_ya);
+                let mut b = Mat::zeros(y.cols(), 1);
+                for i in 0..y.cols() {
+                    let row = k_ya.row(i);
+                    b[(i, 0)] = row.iter().zip(&targets).map(|(&k, &t)| k * t).sum();
+                }
+                let tnorm = targets.iter().map(|&t| t * t).sum();
+                self.krr = Some((k_ya, targets));
+                Message::RespKrr { g, b, tnorm }
+            }
+            Message::ReqKrrEval { alpha } => {
+                let (k_ya, targets) = self.krr.as_ref().expect("ReqKrrStats first");
+                // pred = αᵀ·K_YA (1×nᵢ)
+                let pred = alpha.matmul_at_b(k_ya);
+                let err: f64 = (0..targets.len())
+                    .map(|j| {
+                        let e = pred[(0, j)] - targets[j];
+                        e * e
+                    })
+                    .sum();
+                Message::RespScalar(err)
+            }
+            Message::ReqSampleLeverage { count, seed } => {
+                let scores = self.scores.clone().expect("ReqScores first");
+                self.sample_weighted(&scores, count, seed)
+            }
+            Message::ReqResiduals { pts } => {
+                let res = self.compute_residuals(&pts.to_mat());
+                let total = res.iter().sum();
+                self.residuals = Some(res);
+                Message::RespScalar(total)
+            }
+            Message::ReqSampleAdaptive { count, seed } => {
+                let res = self.residuals.clone().expect("ReqResiduals first");
+                self.sample_weighted(&res, count, seed)
+            }
+            Message::ReqProjectSketch { pts, w, seed } => {
+                let y = pts.to_mat();
+                let pi = self.project(&y).0;
+                let mut rng = Rng::seed_from(seed);
+                let cs = CountSketch::new(pi.cols(), w, &mut rng);
+                let sketched = cs.apply_point_axis(&pi);
+                self.pi = Some(pi);
+                Message::RespMat(sketched)
+            }
+            Message::ReqFinal { coeffs } => {
+                // L = Q·W ⇒ Lᵀφ(A) = Wᵀ·Π (Π cached from ReqProjectSketch)
+                let pi = self.pi.as_ref().expect("ReqProjectSketch first");
+                self.projected = Some(coeffs.matmul_at_b(pi));
+                Message::Ack
+            }
+            Message::ReqSetSolution { pts, coeffs } => {
+                // L = φ(Y)·C ⇒ Lᵀφ(A) = Cᵀ·K(Y, A)
+                let y = pts.to_mat();
+                let k_ya = self.backend.gram(self.kernel, &y, &self.shard);
+                self.projected = Some(coeffs.matmul_at_b(&k_ya));
+                Message::Ack
+            }
+            Message::ReqEvalError => {
+                let proj = self.projected.as_ref().expect("no solution installed");
+                let diag = kernel_diag(self.kernel, &self.shard);
+                let norms = proj.col_norms_sq();
+                let err: f64 = diag
+                    .iter()
+                    .zip(&norms)
+                    .map(|(&d, &n)| (d - n).max(0.0))
+                    .sum();
+                Message::RespScalar(err)
+            }
+            Message::ReqEvalTrace => {
+                Message::RespScalar(kernel_diag(self.kernel, &self.shard).iter().sum())
+            }
+            Message::ReqSampleUniform { count, seed } => {
+                let n = self.shard.len();
+                let mut rng = Rng::seed_from(seed);
+                let idx: Vec<usize> = if count >= n {
+                    (0..n).collect()
+                } else {
+                    rng.sample_without_replacement(n, count)
+                };
+                Message::RespPoints(PointSet::from_data(&self.shard, &idx))
+            }
+            Message::ReqSampleProjected { count, seed } => {
+                let proj = self.projected.as_ref().expect("no solution installed");
+                let n = proj.cols();
+                let mut rng = Rng::seed_from(seed);
+                let idx: Vec<usize> = (0..count.min(n)).map(|_| rng.below(n)).collect();
+                Message::RespMat(proj.select_cols(&idx))
+            }
+            Message::ReqKmeansStep { centers } => {
+                let proj = self.projected.as_ref().expect("no solution installed");
+                let (kdim, c) = (centers.rows(), centers.cols());
+                assert_eq!(proj.rows(), kdim);
+                let mut sums = Mat::zeros(kdim, c);
+                let mut counts = vec![0usize; c];
+                let mut obj = 0.0;
+                for j in 0..proj.cols() {
+                    let mut best = (f64::INFINITY, 0usize);
+                    for ci in 0..c {
+                        let mut d2 = 0.0;
+                        for r in 0..kdim {
+                            let d = proj[(r, j)] - centers[(r, ci)];
+                            d2 += d * d;
+                        }
+                        if d2 < best.0 {
+                            best = (d2, ci);
+                        }
+                    }
+                    obj += best.0;
+                    counts[best.1] += 1;
+                    for r in 0..kdim {
+                        sums[(r, best.1)] += proj[(r, j)];
+                    }
+                }
+                Message::RespKmeans { sums, counts, obj }
+            }
+            Message::Quit => Message::Ack,
+            other => panic!("worker got unexpected {other:?}"),
+        }
+    }
+
+    /// Weighted sample of local points (with replacement, then
+    /// deduplicated — duplicates add nothing to span φ(Y) but would
+    /// cost words), returned in the shard's natural encoding.
+    fn sample_weighted(&mut self, weights: &[f64], count: usize, seed: u64) -> Message {
+        if weights.is_empty() || count == 0 {
+            return Message::RespPoints(PointSet::from_data(&self.shard, &[]));
+        }
+        let mut rng = Rng::seed_from(seed);
+        let table = AliasTable::new(weights);
+        let mut idx = table.draw_many(&mut rng, count);
+        idx.sort_unstable();
+        idx.dedup();
+        Message::RespPoints(PointSet::from_data(&self.shard, &idx))
+    }
+
+    /// Π = R⁻ᵀK(Y, Aⁱ) and residuals, via kernel trick + implicit
+    /// Gram–Schmidt (paper Appendix A).
+    fn project(&self, y: &Mat) -> (Mat, Vec<f64>) {
+        let k_yy = crate::kernels::gram(self.kernel, y, &Data::Dense(y.clone()));
+        let (r, _jitter) = chol_psd(&k_yy);
+        let k_ya = self.backend.gram(self.kernel, y, &self.shard);
+        let diag = kernel_diag(self.kernel, &self.shard);
+        self.backend.project_residual(&r, &k_ya, &diag)
+    }
+
+    fn compute_residuals(&self, p: &Mat) -> Vec<f64> {
+        self.project(p).1
+    }
+
+    /// Synthetic teacher targets tⱼ = cos(vᵀxⱼ), v ~ N(0, I/√d) from
+    /// the shared seed — a fixed nonlinear function every worker can
+    /// evaluate locally, so KRR has ground truth without label
+    /// plumbing.
+    fn teacher_targets(&self, seed: u64) -> Vec<f64> {
+        let d = self.shard.dim();
+        let mut rng = Rng::seed_from(seed);
+        let scale = 1.0 / (d as f64).sqrt();
+        let v: Vec<f64> = (0..d).map(|_| rng.normal() * scale).collect();
+        (0..self.shard.len())
+            .map(|j| {
+                let mut a = 0.0;
+                match &self.shard {
+                    Data::Dense(m) => {
+                        let c = m.col(j);
+                        for r in 0..d {
+                            a += v[r] * c[r];
+                        }
+                    }
+                    Data::Sparse(s) => {
+                        for (r, val) in s.col_iter(j) {
+                            a += v[r] * val;
+                        }
+                    }
+                }
+                a.cos()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::EmbedSpec;
+    use crate::runtime::NativeBackend;
+
+    fn mk_worker(n: usize) -> Worker {
+        let mut rng = Rng::seed_from(1);
+        let shard = Data::Dense(Mat::from_fn(6, n, |_, _| rng.normal()));
+        Worker::new(
+            shard,
+            Kernel::Gauss { gamma: 0.5 },
+            Arc::new(NativeBackend::new()),
+        )
+    }
+
+    #[test]
+    fn protocol_happy_path() {
+        let mut w = mk_worker(30);
+        assert!(matches!(w.handle(Message::ReqCount), Message::RespCount(30)));
+        let spec = EmbedSpec {
+            kernel: Kernel::Gauss { gamma: 0.5 },
+            m: 256,
+            t2: 64,
+            t: 16,
+            seed: 3,
+        };
+        assert!(matches!(w.handle(Message::ReqEmbed { spec }), Message::Ack));
+        let et = match w.handle(Message::ReqSketchEmbed { p: 20, seed: 5 }) {
+            Message::RespMat(m) => m,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!((et.rows(), et.cols()), (16, 20));
+        // Z from the sketch (as the master would)
+        let z = crate::linalg::qr_r_only(&et.transpose());
+        let mass = match w.handle(Message::ReqScores { z }) {
+            Message::RespScalar(v) => v,
+            other => panic!("{other:?}"),
+        };
+        assert!(mass > 0.0);
+        let pts = match w.handle(Message::ReqSampleLeverage { count: 5, seed: 7 }) {
+            Message::RespPoints(p) => p,
+            other => panic!("{other:?}"),
+        };
+        // 5 draws with replacement, deduplicated
+        assert!((1..=5).contains(&pts.len()), "{}", pts.len());
+        let resid_mass = match w.handle(Message::ReqResiduals { pts: pts.clone() }) {
+            Message::RespScalar(v) => v,
+            other => panic!("{other:?}"),
+        };
+        assert!(resid_mass >= 0.0);
+        let extra = match w.handle(Message::ReqSampleAdaptive { count: 4, seed: 9 }) {
+            Message::RespPoints(p) => p,
+            other => panic!("{other:?}"),
+        };
+        let y = PointSet::concat(&[pts, extra]);
+        let ny = y.len();
+        let pit = match w.handle(Message::ReqProjectSketch { pts: y.clone(), w: 12, seed: 11 }) {
+            Message::RespMat(m) => m,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!((pit.rows(), pit.cols()), (ny, 12));
+        // fake top-k coefficients: identity on first 3 dims
+        let wmat = Mat::from_fn(ny, 3, |i, j| if i == j { 1.0 } else { 0.0 });
+        assert!(matches!(w.handle(Message::ReqFinal { coeffs: wmat }), Message::Ack));
+        let err = match w.handle(Message::ReqEvalError) {
+            Message::RespScalar(v) => v,
+            other => panic!("{other:?}"),
+        };
+        let trace = match w.handle(Message::ReqEvalTrace) {
+            Message::RespScalar(v) => v,
+            other => panic!("{other:?}"),
+        };
+        assert!(err >= 0.0 && err <= trace + 1e-9, "err {err} trace {trace}");
+        assert!((trace - 30.0).abs() < 1e-9); // gauss diag = 1 each
+    }
+
+    #[test]
+    fn residuals_zero_when_sampled_points_cover_shard() {
+        let mut w = mk_worker(8);
+        // P = the entire shard ⇒ all residuals ≈ 0
+        let all: Vec<usize> = (0..8).collect();
+        let pts = PointSet::from_data(&w.shard, &all);
+        let mass = match w.handle(Message::ReqResiduals { pts }) {
+            Message::RespScalar(v) => v,
+            other => panic!("{other:?}"),
+        };
+        assert!(mass < 1e-5, "mass {mass}");
+    }
+
+    #[test]
+    fn set_solution_then_kmeans() {
+        let mut w = mk_worker(20);
+        // random 4-point solution, orthonormalized coefficients not
+        // required for exercising the code path
+        let y = match w.handle(Message::ReqSampleUniform { count: 4, seed: 1 }) {
+            Message::RespPoints(p) => p,
+            other => panic!("{other:?}"),
+        };
+        let coeffs = Mat::from_fn(4, 2, |i, j| if i == j { 1.0 } else { 0.0 });
+        assert!(matches!(
+            w.handle(Message::ReqSetSolution { pts: y, coeffs }),
+            Message::Ack
+        ));
+        let sample = match w.handle(Message::ReqSampleProjected { count: 3, seed: 2 }) {
+            Message::RespMat(m) => m,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!((sample.rows(), sample.cols()), (2, 3));
+        match w.handle(Message::ReqKmeansStep { centers: sample }) {
+            Message::RespKmeans { sums, counts, obj } => {
+                assert_eq!(sums.rows(), 2);
+                assert_eq!(counts.iter().sum::<usize>(), 20);
+                assert!(obj >= 0.0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn scores_vec_returns_per_point_scores() {
+        let mut w = mk_worker(12);
+        let spec = EmbedSpec {
+            kernel: Kernel::Gauss { gamma: 0.5 },
+            m: 128,
+            t2: 64,
+            t: 8,
+            seed: 3,
+        };
+        w.handle(Message::ReqEmbed { spec });
+        let et = match w.handle(Message::ReqSketchEmbed { p: 16, seed: 5 }) {
+            Message::RespMat(m) => m,
+            other => panic!("{other:?}"),
+        };
+        let z = crate::linalg::qr_r_only(&et.transpose());
+        let total = match w.handle(Message::ReqScores { z }) {
+            Message::RespScalar(v) => v,
+            other => panic!("{other:?}"),
+        };
+        let vec = match w.handle(Message::ReqScoresVec) {
+            Message::RespMat(m) => m,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!((vec.rows(), vec.cols()), (1, 12));
+        let sum: f64 = vec.row(0).iter().sum();
+        assert!((sum - total).abs() < 1e-9 * total.max(1.0));
+        assert!(vec.row(0).iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn krr_stats_then_eval() {
+        let mut w = mk_worker(25);
+        let y = match w.handle(Message::ReqSampleUniform { count: 6, seed: 4 }) {
+            Message::RespPoints(p) => p,
+            other => panic!("{other:?}"),
+        };
+        let ny = y.len();
+        let (g, b, tnorm) = match w.handle(Message::ReqKrrStats { pts: y, teacher_seed: 9 }) {
+            Message::RespKrr { g, b, tnorm } => (g, b, tnorm),
+            other => panic!("{other:?}"),
+        };
+        assert_eq!((g.rows(), g.cols()), (ny, ny));
+        assert_eq!((b.rows(), b.cols()), (ny, 1));
+        // G = K_YA·K_AY is PSD ⇒ nonneg diagonal; targets are cos(·) ⇒
+        // ‖t‖² ≤ n
+        for i in 0..ny {
+            assert!(g[(i, i)] >= -1e-12);
+        }
+        assert!(tnorm >= 0.0 && tnorm <= 25.0 + 1e-9);
+        // evaluating α = 0 must give SSE = ‖t‖²
+        let zero = Mat::zeros(ny, 1);
+        let sse = match w.handle(Message::ReqKrrEval { alpha: zero }) {
+            Message::RespScalar(v) => v,
+            other => panic!("{other:?}"),
+        };
+        assert!((sse - tnorm).abs() < 1e-9 * tnorm.max(1.0), "{sse} vs {tnorm}");
+    }
+
+    #[test]
+    fn uniform_sample_capped_at_shard_size() {
+        let mut w = mk_worker(5);
+        let pts = match w.handle(Message::ReqSampleUniform { count: 50, seed: 3 }) {
+            Message::RespPoints(p) => p,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(pts.len(), 5);
+    }
+}

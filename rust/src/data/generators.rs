@@ -1,0 +1,210 @@
+//! Synthetic data generators (structural analogues of the paper's
+//! datasets; see DESIGN.md §3 for the substitution rationale).
+
+use crate::linalg::Mat;
+use crate::rng::{AliasTable, Rng};
+use crate::sparse::Csc;
+
+/// Low-rank + decaying spectral tail + white noise:
+/// A = U·diag(decay^i)·Vᵀ + noise·N. Columns are points (d×n).
+/// Mirrors regression-style UCI sets (yearpredmsd, insurance) whose
+/// KPCA error curves are driven by spectral decay.
+pub fn low_rank_noise(
+    d: usize,
+    n: usize,
+    rank: usize,
+    decay: f64,
+    noise: f64,
+    rng: &mut Rng,
+) -> Mat {
+    let rank = rank.min(d);
+    let u = Mat::from_fn(d, rank, |_, _| rng.normal() / (d as f64).sqrt());
+    let mut out = Mat::zeros(d, n);
+    for j in 0..n {
+        // latent coordinates with geometric scale
+        let mut z = vec![0.0; rank];
+        for (l, zl) in z.iter_mut().enumerate() {
+            *zl = rng.normal() * decay.powi(l as i32) * (d as f64).sqrt();
+        }
+        for i in 0..d {
+            let mut v = 0.0;
+            for l in 0..rank {
+                v += u[(i, l)] * z[l];
+            }
+            out[(i, j)] = v + noise * rng.normal();
+        }
+    }
+    out
+}
+
+/// Gaussian mixture with k random centers and **Zipf-skewed cluster
+/// sizes** (weight ∝ rank^{-1.5}). Mirrors classification sets
+/// (mnist8m, har, protein): real class/density distributions are
+/// imbalanced, which is exactly what leverage + adaptive sampling
+/// exploit over uniform sampling (paper §5.3) — a uniform sample of
+/// |Y| ≈ 100 points routinely misses the rare clusters entirely.
+pub fn clusters(d: usize, n: usize, k: usize, spread: f64, rng: &mut Rng) -> Mat {
+    let centers = Mat::from_fn(d, k, |_, _| rng.normal());
+    // normalize centers to ~unit norm so spread is meaningful
+    let norms: Vec<f64> = (0..k)
+        .map(|c| centers.col(c).iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12))
+        .collect();
+    let weights: Vec<f64> = (1..=k).map(|r| (r as f64).powf(-1.5)).collect();
+    let table = AliasTable::new(&weights);
+    let mut out = Mat::zeros(d, n);
+    for j in 0..n {
+        let c = table.draw(rng);
+        let inv = 1.0 / norms[c];
+        for i in 0..d {
+            out[(i, j)] =
+                centers[(i, c)] * inv + spread * rng.normal() / (d as f64).sqrt();
+        }
+    }
+    out
+}
+
+/// Zipf bag-of-words: per-point nnz ~ 0.5·avg..1.5·avg, word ids drawn
+/// from a Zipf(1.1) over the vocabulary, values log(1 + count). This
+/// matches bow/20news structure: a few very frequent words, a long
+/// tail, non-negative sparse counts.
+pub fn zipf_sparse(d: usize, n: usize, avg_nnz: usize, rng: &mut Rng) -> Csc {
+    // Zipf weights over the vocabulary.
+    let weights: Vec<f64> = (1..=d).map(|r| (r as f64).powf(-1.1)).collect();
+    let table = AliasTable::new(&weights);
+    let mut cols = Vec::with_capacity(n);
+    for _ in 0..n {
+        // heavy-tailed document lengths: ~10% of documents are 4×
+        // longer (real corpora mix tweets with essays). Long docs have
+        // huge polynomial-kernel norms ⇒ high leverage — the uniform
+        // baseline undersamples exactly what matters.
+        let boost = if rng.below(10) == 0 { 4 } else { 1 };
+        let nnz = (boost * (avg_nnz / 2 + rng.below(avg_nnz.max(1)))).max(1);
+        let mut counts: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+        for _ in 0..nnz {
+            *counts.entry(table.draw(rng) as u32).or_insert(0) += 1;
+        }
+        let col: Vec<(u32, f64)> = counts
+            .into_iter()
+            .map(|(w, c)| (w, (1.0 + c as f64).ln()))
+            .collect();
+        cols.push(col);
+    }
+    Csc::from_columns(d, cols)
+}
+
+/// Smooth low-dimensional manifold embedded by random sinusoids:
+/// x(t) = [sin(ωᵢᵀt + φᵢ)]ᵢ for t ∈ R^intrinsic. Mirrors ctslice
+/// (CT scan slices vary smoothly along the body axis) — fast spectral
+/// decay in the Gaussian kernel space.
+/// Latent coordinates are drawn with a *non-uniform density*
+/// (t = u⁵, concentrated near the manifold's core with a thin tail):
+/// like real sensor/physics data, most mass sits in a dense region
+/// while the informative extremes are rare — the regime where the
+/// paper's residual-driven adaptive sampling beats uniform.
+pub fn manifold(d: usize, n: usize, intrinsic: usize, rng: &mut Rng) -> Mat {
+    let omega = Mat::from_fn(intrinsic, d, |_, _| rng.normal() * 1.5);
+    let phase: Vec<f64> = (0..d)
+        .map(|_| rng.uniform(0.0, 2.0 * std::f64::consts::PI))
+        .collect();
+    let mut out = Mat::zeros(d, n);
+    for j in 0..n {
+        let t: Vec<f64> = (0..intrinsic)
+            .map(|_| {
+                let u = rng.uniform(-1.0, 1.0);
+                u.powi(5)
+            })
+            .collect();
+        for i in 0..d {
+            let mut a = phase[i];
+            for l in 0..intrinsic {
+                a += omega[(l, i)] * t[l];
+            }
+            out[(i, j)] = a.sin();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd;
+
+    #[test]
+    fn low_rank_has_decaying_spectrum() {
+        let mut rng = Rng::seed_from(1);
+        let a = low_rank_noise(30, 100, 5, 0.5, 0.01, &mut rng);
+        let (_, s, _) = svd(&a);
+        // strong decay over the first ranks, then a small noise tail
+        assert!(s[0] > 3.0 * s[4], "spectrum {:?}", &s[..8]);
+        assert!(s[5] < 0.2 * s[0]);
+    }
+
+    #[test]
+    fn clusters_are_separated() {
+        let mut rng = Rng::seed_from(2);
+        let k = 4;
+        let a = clusters(16, 200, k, 0.1, &mut rng);
+        // With tiny spread, pairwise distances are bimodal: near-0
+        // (same cluster) or ~O(1) (cross cluster). Check both modes.
+        let mut same = 0;
+        let mut far = 0;
+        for i in 0..50 {
+            for j in (i + 1)..50 {
+                let mut d2 = 0.0;
+                for r in 0..16 {
+                    let d = a[(r, i)] - a[(r, j)];
+                    d2 += d * d;
+                }
+                if d2 < 0.2 {
+                    same += 1;
+                } else if d2 > 0.5 {
+                    far += 1;
+                }
+            }
+        }
+        assert!(same > 50, "same {same}");
+        assert!(far > 200, "far {far}");
+    }
+
+    #[test]
+    fn zipf_sparse_head_heavy() {
+        let mut rng = Rng::seed_from(3);
+        let s = zipf_sparse(500, 300, 40, &mut rng);
+        assert_eq!(s.cols(), 300);
+        assert!(s.avg_nnz_per_col() > 15.0 && s.avg_nnz_per_col() < 80.0);
+        // head word (row 0) should occur in many more columns than any
+        // single tail word (Zipf head-heaviness)
+        let mut head = 0;
+        let mut tail = 0;
+        for j in 0..300 {
+            for (r, _) in s.col_iter(j) {
+                if r == 0 {
+                    head += 1;
+                }
+                if r == 450 {
+                    tail += 1;
+                }
+            }
+        }
+        assert!(head > 4 * tail, "head {head} tail {tail}");
+        // all values positive (log counts)
+        for j in 0..300 {
+            for (_, v) in s.col_iter(j) {
+                assert!(v > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn manifold_bounded_and_smoothish() {
+        let mut rng = Rng::seed_from(4);
+        let a = manifold(20, 100, 2, &mut rng);
+        for v in a.data() {
+            assert!(v.abs() <= 1.0 + 1e-12);
+        }
+        // intrinsic dim 2 + sinusoids ⇒ fast decay: σ₁₀ ≪ σ₁
+        let (_, s, _) = svd(&a);
+        assert!(s[15] < 0.3 * s[0], "{:?}", &s[..16]);
+    }
+}

@@ -1,0 +1,192 @@
+//! Dataset (de)serialization — the launcher's on-disk format.
+//!
+//! Binary format (little-endian):
+//!   magic "DKPC" | u8 version | u8 kind (0 dense, 1 sparse)
+//!   u64 d | u64 n | payload
+//! Dense payload: d·n f64 column-major. Sparse payload: per column a
+//! u64 nnz then (u32 row, f64 value) pairs.
+//!
+//! A CSV loader (one point per row, comma-separated features) covers
+//! ad-hoc external data.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::linalg::Mat;
+use crate::sparse::Csc;
+
+use super::Data;
+
+const MAGIC: &[u8; 4] = b"DKPC";
+
+pub fn save(data: &Data, path: impl AsRef<Path>) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&[1u8])?;
+    match data {
+        Data::Dense(m) => {
+            w.write_all(&[0u8])?;
+            w.write_all(&(m.rows() as u64).to_le_bytes())?;
+            w.write_all(&(m.cols() as u64).to_le_bytes())?;
+            // column-major so shard slicing maps to contiguous ranges
+            for j in 0..m.cols() {
+                for i in 0..m.rows() {
+                    w.write_all(&m[(i, j)].to_le_bytes())?;
+                }
+            }
+        }
+        Data::Sparse(s) => {
+            w.write_all(&[1u8])?;
+            w.write_all(&(s.rows() as u64).to_le_bytes())?;
+            w.write_all(&(s.cols() as u64).to_le_bytes())?;
+            for j in 0..s.cols() {
+                w.write_all(&(s.col_nnz(j) as u64).to_le_bytes())?;
+                for (r, v) in s.col_iter(j) {
+                    w.write_all(&(r as u32).to_le_bytes())?;
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Data> {
+    let f = std::fs::File::open(path.as_ref())?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a diskpca dataset file");
+    let mut hdr = [0u8; 2];
+    r.read_exact(&mut hdr)?;
+    anyhow::ensure!(hdr[0] == 1, "unsupported version {}", hdr[0]);
+    let mut u = [0u8; 8];
+    r.read_exact(&mut u)?;
+    let d = u64::from_le_bytes(u) as usize;
+    r.read_exact(&mut u)?;
+    let n = u64::from_le_bytes(u) as usize;
+    match hdr[1] {
+        0 => {
+            let mut m = Mat::zeros(d, n);
+            for j in 0..n {
+                for i in 0..d {
+                    r.read_exact(&mut u)?;
+                    m[(i, j)] = f64::from_le_bytes(u);
+                }
+            }
+            Ok(Data::Dense(m))
+        }
+        1 => {
+            let mut cols = Vec::with_capacity(n);
+            let mut u4 = [0u8; 4];
+            for _ in 0..n {
+                r.read_exact(&mut u)?;
+                let nnz = u64::from_le_bytes(u) as usize;
+                let mut col = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    r.read_exact(&mut u4)?;
+                    let row = u32::from_le_bytes(u4);
+                    r.read_exact(&mut u)?;
+                    col.push((row, f64::from_le_bytes(u)));
+                }
+                cols.push(col);
+            }
+            Ok(Data::Sparse(Csc::from_columns(d, cols)))
+        }
+        k => anyhow::bail!("unknown kind {k}"),
+    }
+}
+
+/// CSV: one data point per row, comma-separated features → dense d×n.
+pub fn load_csv(path: impl AsRef<Path>) -> anyhow::Result<Data> {
+    let f = std::fs::File::open(path.as_ref())?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let row: Vec<f64> = t
+            .split(',')
+            .map(|v| {
+                v.trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        if let Some(first) = rows.first() {
+            anyhow::ensure!(
+                row.len() == first.len(),
+                "line {}: ragged row ({} vs {})",
+                lineno + 1,
+                row.len(),
+                first.len()
+            );
+        }
+        rows.push(row);
+    }
+    anyhow::ensure!(!rows.is_empty(), "empty csv");
+    let (n, d) = (rows.len(), rows[0].len());
+    let mut m = Mat::zeros(d, n);
+    for (j, row) in rows.iter().enumerate() {
+        for (i, &v) in row.iter().enumerate() {
+            m[(i, j)] = v;
+        }
+    }
+    Ok(Data::Dense(m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Rng::seed_from(1);
+        let data = Data::Dense(Mat::from_fn(7, 11, |_, _| rng.normal()));
+        let path = std::env::temp_dir().join("diskpca_io_dense.bin");
+        save(&data, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert!(back.to_dense().max_abs_diff(&data.to_dense()) == 0.0);
+        assert!(matches!(back, Data::Dense(_)));
+    }
+
+    #[test]
+    fn sparse_roundtrip() {
+        let mut rng = Rng::seed_from(2);
+        let data = Data::Sparse(crate::data::zipf_sparse(200, 30, 10, &mut rng));
+        let path = std::env::temp_dir().join("diskpca_io_sparse.bin");
+        save(&data, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert!(matches!(back, Data::Sparse(_)));
+        assert_eq!(back.nnz(), data.nnz());
+        assert!(back.to_dense().max_abs_diff(&data.to_dense()) == 0.0);
+    }
+
+    #[test]
+    fn csv_load() {
+        let path = std::env::temp_dir().join("diskpca_io.csv");
+        std::fs::write(&path, "# header comment\n1.0, 2.0, 3.5\n4,5,6\n").unwrap();
+        let data = load_csv(&path).unwrap();
+        assert_eq!((data.dim(), data.len()), (3, 2));
+        assert_eq!(data.col_dense(1), vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let path = std::env::temp_dir().join("diskpca_io_bad.csv");
+        std::fs::write(&path, "1,2\n3\n").unwrap();
+        assert!(load_csv(&path).is_err());
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join("diskpca_io_garbage.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

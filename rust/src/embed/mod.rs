@@ -1,0 +1,203 @@
+//! Kernel subspace embeddings `E = S(φ(A))` (paper §5.1).
+//!
+//! Every worker must apply the *same* random map S, so an embedding is
+//! specified by a small [`EmbedSpec`] (kernel + dims + seed) that the
+//! master broadcasts in O(1) words; workers re-derive the random
+//! tables (Ω, b, CountSketch/TensorSketch tables, Gaussian G)
+//! deterministically from the seed instead of receiving them.
+//!
+//! Families (Lemmas 4–5):
+//! - shift-invariant (Gaussian): `S(φ(x)) = CountSketch(RFF_m(x)) → t`
+//! - arc-cosine: same with ReLU-power features
+//! - polynomial: `TensorSketch_q(x) → t₂`, then dense Gaussian `→ t`
+
+use crate::data::Data;
+use crate::kernels::{
+    arccos_features, arccos_params, laplace_rff_params, rff_features, rff_params, Kernel,
+};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::sketch::{CountSketch, GaussianSketch, TensorSketch};
+
+/// Broadcastable description of a kernel subspace embedding.
+#[derive(Clone, Copy, Debug)]
+pub struct EmbedSpec {
+    pub kernel: Kernel,
+    /// random-feature count m (gauss/arccos; paper uses 2000).
+    pub m: usize,
+    /// TensorSketch dim t₂ = O(3^q·k²) (poly only; power of two).
+    pub t2: usize,
+    /// final embedding dim t = O(k) (paper experiments: 50).
+    pub t: usize,
+    /// shared randomness — workers derive identical tables from this.
+    pub seed: u64,
+}
+
+impl EmbedSpec {
+    /// Words needed to broadcast this spec (for comm accounting).
+    pub fn words(&self) -> usize {
+        6
+    }
+}
+
+/// The materialized random tables for an [`EmbedSpec`] — identical on
+/// every worker by construction.
+pub enum EmbedTables {
+    /// RFF (Ω, b) + CountSketch for Gauss kernels.
+    Rff { params: crate::kernels::RffParams, cs: CountSketch },
+    /// arc-cos features Ω + CountSketch.
+    ArcCos { omega: Mat, degree: u32, cs: CountSketch },
+    /// TensorSketch + Gaussian for poly kernels.
+    Poly { ts: TensorSketch, g: GaussianSketch },
+}
+
+impl EmbedTables {
+    pub fn build(spec: &EmbedSpec, d: usize) -> Self {
+        let mut rng = Rng::seed_from(spec.seed ^ 0xe3bed);
+        match spec.kernel {
+            Kernel::Gauss { gamma } => {
+                let params = rff_params(d, spec.m, gamma, &mut rng);
+                let cs = CountSketch::new(spec.m, spec.t, &mut rng);
+                EmbedTables::Rff { params, cs }
+            }
+            Kernel::Laplace { gamma } => {
+                // Cauchy frequencies, same cos feature map ⇒ same
+                // Rff tables/artifact path as the Gaussian case.
+                let params = laplace_rff_params(d, spec.m, gamma, &mut rng);
+                let cs = CountSketch::new(spec.m, spec.t, &mut rng);
+                EmbedTables::Rff { params, cs }
+            }
+            Kernel::ArcCos { degree } => {
+                let omega = arccos_params(d, spec.m, &mut rng);
+                let cs = CountSketch::new(spec.m, spec.t, &mut rng);
+                EmbedTables::ArcCos { omega, degree, cs }
+            }
+            Kernel::Poly { q } => {
+                let ts = TensorSketch::new(d, spec.t2, q as usize, &mut rng);
+                let g = GaussianSketch::new(spec.t2, spec.t, &mut rng);
+                EmbedTables::Poly { ts, g }
+            }
+        }
+    }
+
+    /// `E = S(φ(x))`: t×n. Pure-native path (the XLA backend computes
+    /// the same map from the same tables, see `runtime`).
+    pub fn apply(&self, x: &Data) -> Mat {
+        match self {
+            EmbedTables::Rff { params, cs } => {
+                let z = rff_features(params, x); // m×n
+                cs.apply_feature_axis(&z)
+            }
+            EmbedTables::ArcCos { omega, degree, cs } => {
+                let z = arccos_features(omega, *degree, x);
+                cs.apply_feature_axis(&z)
+            }
+            EmbedTables::Poly { ts, g } => {
+                let sk = match x {
+                    Data::Dense(m) => ts.apply_feature_axis(m),
+                    Data::Sparse(s) => ts.apply_feature_axis_sparse(s),
+                };
+                g.apply_feature_axis(&sk)
+            }
+        }
+    }
+}
+
+/// Convenience: build tables + apply in one go.
+pub fn embed(spec: &EmbedSpec, x: &Data) -> Mat {
+    EmbedTables::build(spec, x.dim()).apply(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{gram_sym, Kernel};
+
+    fn spec(kernel: Kernel, t: usize) -> EmbedSpec {
+        EmbedSpec { kernel, m: 2048, t2: 256, t, seed: 42 }
+    }
+
+    #[test]
+    fn workers_derive_identical_embeddings() {
+        let mut rng = Rng::seed_from(1);
+        let x1 = Data::Dense(Mat::from_fn(6, 9, |_, _| rng.normal()));
+        let x2 = Data::Dense(Mat::from_fn(6, 4, |_, _| rng.normal()));
+        for kernel in [
+            Kernel::Gauss { gamma: 0.5 },
+            Kernel::Poly { q: 2 },
+            Kernel::ArcCos { degree: 2 },
+        ] {
+            let s = spec(kernel, 16);
+            // "two workers": independent table builds from one spec
+            let e1 = embed(&s, &x1);
+            let e1b = embed(&s, &x1);
+            assert!(e1.max_abs_diff(&e1b) < 1e-12);
+            // concatenation property: E over [x1|x2] = [E(x1)|E(x2)]
+            let joint = Data::Dense(x1.to_dense().hcat(&x2.to_dense()));
+            let ej = embed(&s, &joint);
+            let cat = e1.hcat(&embed(&s, &x2));
+            assert!(ej.max_abs_diff(&cat) < 1e-10, "{}", kernel.name());
+        }
+    }
+
+    #[test]
+    fn embedding_dims() {
+        let mut rng = Rng::seed_from(2);
+        let x = Data::Dense(Mat::from_fn(5, 7, |_, _| rng.normal()));
+        for kernel in [
+            Kernel::Gauss { gamma: 1.0 },
+            Kernel::Poly { q: 3 },
+            Kernel::ArcCos { degree: 1 },
+        ] {
+            let e = embed(&spec(kernel, 8), &x);
+            assert_eq!((e.rows(), e.cols()), (8, 7));
+        }
+    }
+
+    #[test]
+    fn gauss_embedding_preserves_gram_roughly() {
+        // EᵀE ≈ K with generous m, t — the P2 approximate-product
+        // property that everything downstream rests on.
+        let mut rng = Rng::seed_from(3);
+        let xm = Mat::from_fn(4, 12, |_, _| rng.normal());
+        let x = Data::Dense(xm.clone());
+        let gamma = 0.3;
+        let s = EmbedSpec { kernel: Kernel::Gauss { gamma }, m: 8192, t2: 256, t: 512, seed: 7 };
+        let e = embed(&s, &x);
+        let approx = e.matmul_at_b(&e);
+        let exact = gram_sym(Kernel::Gauss { gamma }, &xm);
+        assert!(
+            approx.max_abs_diff(&exact) < 0.3,
+            "err {}",
+            approx.max_abs_diff(&exact)
+        );
+    }
+
+    #[test]
+    fn poly_embedding_preserves_gram_roughly() {
+        let mut rng = Rng::seed_from(4);
+        let xm = Mat::from_fn(6, 10, |_, _| rng.normal() * 0.6);
+        let x = Data::Dense(xm.clone());
+        let s = EmbedSpec { kernel: Kernel::Poly { q: 2 }, m: 0, t2: 1024, t: 512, seed: 9 };
+        let e = embed(&s, &x);
+        let approx = e.matmul_at_b(&e);
+        let exact = gram_sym(Kernel::Poly { q: 2 }, &xm);
+        // sketching noise on single entries is heavy-tailed — check the
+        // relative Frobenius error instead of the max entry
+        let rel = approx.sub(&exact).frob_norm() / exact.frob_norm();
+        assert!(rel < 0.3, "rel frob err {rel}");
+    }
+
+    #[test]
+    fn different_seeds_give_different_embeddings() {
+        let mut rng = Rng::seed_from(5);
+        let x = Data::Dense(Mat::from_fn(5, 6, |_, _| rng.normal()));
+        let mut s1 = spec(Kernel::Gauss { gamma: 1.0 }, 8);
+        let mut s2 = s1;
+        s1.seed = 1;
+        s2.seed = 2;
+        let e1 = embed(&s1, &x);
+        let e2 = embed(&s2, &x);
+        assert!(e1.max_abs_diff(&e2) > 1e-3);
+    }
+}

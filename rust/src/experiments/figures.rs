@@ -1,0 +1,469 @@
+//! Drivers for Table 1 and Figures 2–8 (one function per artifact).
+
+use std::time::Instant;
+
+use super::report::{sci, Report};
+use super::{comm_model_words, run_method, Ctx, Method};
+use crate::coordinator::{
+    batch_kpca, dis_css, dis_kpca, dis_krr, dis_set_solution, kmeans::distributed_kmeans,
+    run_cluster, uniform_dis_lr, Params,
+};
+use crate::data::registry;
+
+fn sweep(ctx: &Ctx, default: &str) -> Vec<usize> {
+    ctx.cfg
+        .str_or("sweep", default)
+        .split(',')
+        .map(|v| v.trim().parse().expect("--sweep N,N,..."))
+        .collect()
+}
+
+fn params_with(ctx: &Ctx, n_adapt: usize) -> Params {
+    let mut p = ctx.cfg.params();
+    p.n_adapt = n_adapt;
+    p
+}
+
+/// Table 1: the dataset registry (paper spec → analogue spec).
+pub fn table1(ctx: &Ctx) -> anyhow::Result<()> {
+    let mut rep = Report::new(
+        "Table 1 — datasets (paper → analogue at --scale)",
+        &["dataset", "paper_d", "paper_n", "d", "n", "s", "sparse", "rho"],
+    );
+    for spec in registry(ctx.scale) {
+        let data = spec.generate(ctx.seed);
+        rep.row(vec![
+            spec.name.into(),
+            spec.paper_d.to_string(),
+            spec.paper_n.to_string(),
+            spec.d.to_string(),
+            data.len().to_string(),
+            spec.s.to_string(),
+            matches!(data, crate::data::Data::Sparse(_)).to_string(),
+            format!("{:.1}", data.avg_nnz_per_point()),
+        ]);
+    }
+    rep.print();
+    let path = rep.write_csv(&ctx.out_dir, "table1")?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Figures 2 (poly) & 3 (gauss): small datasets vs batch KPCA —
+/// error and runtime as |Ŷ| grows.
+pub fn fig_small_vs_batch(ctx: &Ctx, family: &str, fig_id: &str) -> anyhow::Result<()> {
+    let mut rep = Report::new(
+        &format!("{fig_id} — {family} kernel vs batch KPCA (small datasets)"),
+        &["dataset", "method", "n_adapt", "|Y|", "err/n", "opt_err/n", "wall_s"],
+    );
+    for name in ["insurance_like", "har_like"] {
+        let spec = ctx.dataset(name)?;
+        let data = spec.generate(ctx.seed);
+        let n = data.len();
+        let kernel = ctx.kernel(family, &data);
+        // ground truth: batch KPCA on the full dataset
+        let t0 = Instant::now();
+        let exact = n <= 400;
+        let batch = batch_kpca(&data.to_dense(), kernel, ctx.cfg.params().k, exact, ctx.seed);
+        let batch_wall = t0.elapsed().as_secs_f64();
+        let opt_pp = batch.opt_error / n as f64;
+        rep.row(vec![
+            name.into(),
+            "batchKPCA".into(),
+            "-".into(),
+            n.to_string(),
+            sci(opt_pp),
+            sci(opt_pp),
+            sci(batch_wall),
+        ]);
+        for n_adapt in sweep(ctx, "25,50,100,200") {
+            let params = params_with(ctx, n_adapt);
+            let r = run_method(ctx, &spec, &data, kernel, &params, Method::DisKpca);
+            rep.row(vec![
+                name.into(),
+                r.method.into(),
+                n_adapt.to_string(),
+                r.num_points.to_string(),
+                sci(r.err_per_point),
+                sci(opt_pp),
+                sci(r.wall_secs),
+            ]);
+        }
+    }
+    rep.print();
+    let path = rep.write_csv(&ctx.out_dir, fig_id)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Figures 4 (poly), 5 (gauss), 6 (arccos): communication vs error on
+/// large datasets, three methods.
+pub fn fig_comm_tradeoff(
+    ctx: &Ctx,
+    family: &str,
+    datasets: &[&str],
+    fig_id: &str,
+) -> anyhow::Result<()> {
+    let mut rep = Report::new(
+        &format!("{fig_id} — {family} kernel: communication vs low-rank error"),
+        &["dataset", "method", "n_adapt", "|Y|", "comm_words", "err/n", "wall_s"],
+    );
+    for name in datasets {
+        let spec = ctx.dataset(name)?;
+        let data = spec.generate(ctx.seed);
+        let kernel = ctx.kernel(family, &data);
+        for n_adapt in sweep(ctx, "50,100,200,400") {
+            let params = params_with(ctx, n_adapt);
+            for method in Method::all() {
+                // uniform+batch becomes too costly at large samples —
+                // the paper "stopped it short" too.
+                if method == Method::UniformBatch && params.n_lev + params.n_adapt > 300 {
+                    continue;
+                }
+                let r = run_method(ctx, &spec, &data, kernel, &params, method);
+                rep.row(vec![
+                    (*name).into(),
+                    r.method.into(),
+                    n_adapt.to_string(),
+                    r.num_points.to_string(),
+                    r.comm_words.to_string(),
+                    sci(r.err_per_point),
+                    sci(r.wall_secs),
+                ]);
+            }
+        }
+    }
+    rep.print();
+    let path = rep.write_csv(&ctx.out_dir, fig_id)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Figure 7: runtime scaling with the number of workers. The paper
+/// reports computation time (communication excluded) on a real
+/// cluster; on this single-core testbed the equivalent quantity is
+/// the **critical path** — max over workers of their compute-busy
+/// time (a perfectly parallel cluster's wall clock).
+pub fn fig7(ctx: &Ctx) -> anyhow::Result<()> {
+    let mut rep = Report::new(
+        "fig7 — disKPCA compute time vs #workers (gauss kernel)",
+        &["dataset", "partition", "workers", "crit_path_s", "total_compute_s", "speedup_vs_1"],
+    );
+    let worker_counts: Vec<usize> = ctx
+        .cfg
+        .str_or("worker_sweep", "1,2,4,8,16,32")
+        .split(',')
+        .map(|v| v.trim().parse().unwrap())
+        .collect();
+    // Two partition regimes: the paper's α=2 power law (heaviest
+    // worker keeps ≥60% of the data — critical path saturates at
+    // ~1.6×) and a balanced split (near-linear until fixed per-worker
+    // costs dominate, the paper's observed plateau).
+    for name in ["mnist8m_like", "susy_like"] {
+        let mut spec = ctx.dataset(name)?;
+        let data = spec.generate(ctx.seed);
+        let kernel = ctx.kernel("gauss", &data);
+        let params = ctx.cfg.params();
+        for part in ["uniform", "powerlaw"] {
+            let mut base = None;
+            for &s in &worker_counts {
+                if s > data.len() {
+                    continue;
+                }
+                spec.s = s;
+                let shards = if part == "uniform" {
+                    crate::data::partition_uniform(&data, s)
+                } else {
+                    spec.partition(&data, ctx.seed ^ 0x9a91)
+                };
+                let backend = ctx.backend.clone();
+                let p2 = params;
+                let (busy, _) = crate::coordinator::run_cluster(
+                    shards,
+                    kernel,
+                    backend,
+                    move |cluster| {
+                        let _ = dis_kpca(cluster, kernel, &p2);
+                        crate::coordinator::master::dis_busy_times(cluster)
+                    },
+                );
+                let crit = busy.iter().cloned().fold(0.0f64, f64::max);
+                let total: f64 = busy.iter().sum();
+                let speedup = base.map(|b: f64| b / crit).unwrap_or(1.0);
+                if base.is_none() {
+                    base = Some(crit);
+                }
+                rep.row(vec![
+                    name.into(),
+                    part.into(),
+                    s.to_string(),
+                    sci(crit),
+                    sci(total),
+                    sci(speedup),
+                ]);
+            }
+        }
+    }
+    rep.print();
+    let path = rep.write_csv(&ctx.out_dir, "fig7")?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Figure 8: spectral clustering (KPCA + distributed k-means) —
+/// k-means objective vs communication.
+pub fn fig8(ctx: &Ctx) -> anyhow::Result<()> {
+    let mut rep = Report::new(
+        "fig8 — KPCA + k-means: feature-space objective vs communication",
+        &["dataset", "kernel", "method", "n_adapt", "comm_words", "kmeans_obj", "iters"],
+    );
+    let cases = [
+        ("news20_like", "poly"),
+        ("susy_like", "poly"),
+        ("ctslice_like", "gauss"),
+        ("yearpredmsd_like", "gauss"),
+    ];
+    for (name, family) in cases {
+        let spec = ctx.dataset(name)?;
+        let data = spec.generate(ctx.seed);
+        let n = data.len();
+        let kernel = ctx.kernel(family, &data);
+        for n_adapt in sweep(ctx, "50,100,200") {
+            let params = params_with(ctx, n_adapt);
+            for method in [Method::DisKpca, Method::UniformDisLr] {
+                let shards = spec.partition(&data, ctx.seed ^ 0x9a91);
+                let backend = ctx.backend.clone();
+                let total = params.n_lev + params.n_adapt;
+                let kc = ctx.cfg.usize_or("clusters", params.k);
+                let seed = ctx.seed;
+                let ((res, _sol_pts), stats) =
+                    run_cluster(shards, kernel, backend, move |cluster| {
+                        let sol = match method {
+                            Method::DisKpca => dis_kpca(cluster, kernel, &params),
+                            _ => uniform_dis_lr(cluster, kernel, &params, total),
+                        };
+                        dis_set_solution(cluster, &sol);
+                        let res = distributed_kmeans(cluster, kc, 30, seed ^ 0x833);
+                        (res, sol.num_points())
+                    });
+                rep.row(vec![
+                    name.into(),
+                    family.into(),
+                    method.name().into(),
+                    n_adapt.to_string(),
+                    stats.total_words().to_string(),
+                    sci(res.feature_space_obj(n)),
+                    res.iters.to_string(),
+                ]);
+            }
+        }
+    }
+    rep.print();
+    let path = rep.write_csv(&ctx.out_dir, "fig8")?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// `css`: kernel column subset selection report (extension) —
+/// residual-fraction certificate of the CSS columns vs a uniform
+/// selection of the same size, plus the KRR downstream fit, over the
+/// |Ŷ| sweep.
+pub fn css_report(ctx: &Ctx, dataset: &str) -> anyhow::Result<()> {
+    let mut rep = Report::new(
+        &format!("css — column subset selection on {dataset} (gauss kernel)"),
+        &["n_adapt", "|Y|", "css_resid_frac", "unif_resid_frac", "krr_r2", "comm_words"],
+    );
+    let spec = ctx.dataset(dataset)?;
+    let data = spec.generate(ctx.seed);
+    let kernel = ctx.kernel("gauss", &data);
+    for n_adapt in sweep(ctx, "25,50,100,200") {
+        let params = params_with(ctx, n_adapt);
+        let shards = spec.partition(&data, ctx.seed ^ 0x9a91);
+        let backend = ctx.backend.clone();
+        let seed = ctx.seed;
+        let ((css, unif_frac, r2), stats) =
+            run_cluster(shards, kernel, backend, move |cluster| {
+                let css = dis_css(cluster, kernel, &params);
+                let unif = crate::coordinator::baselines::dis_uniform_sample(
+                    cluster,
+                    css.y.len(),
+                    seed ^ 0xc55,
+                );
+                let unif_resid: f64 = cluster
+                    .exchange(&crate::comm::Message::ReqResiduals { pts: unif })
+                    .into_iter()
+                    .map(|m| match m {
+                        crate::comm::Message::RespScalar(v) => v,
+                        other => panic!("unexpected {}", other.tag()),
+                    })
+                    .sum();
+                let model = dis_krr(cluster, kernel, &css.y, 1e-3, seed ^ 0x3a3);
+                (css.clone(), unif_resid / css.trace, model.r_squared())
+            });
+        rep.row(vec![
+            n_adapt.to_string(),
+            css.y.len().to_string(),
+            sci(css.residual_fraction()),
+            sci(unif_frac),
+            sci(r2),
+            stats.total_words().to_string(),
+        ]);
+    }
+    rep.print();
+    let path = rep.write_csv(&ctx.out_dir, "css")?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// `bench-comm`: one disKPCA run with the per-round communication
+/// table and the Theorem-1 closed-form model next to it.
+pub fn bench_comm(ctx: &Ctx, dataset: &str) -> anyhow::Result<()> {
+    let spec = ctx.dataset(dataset)?;
+    let data = spec.generate(ctx.seed);
+    let kernel = ctx.kernel(ctx.cfg.str_or("kernel", "gauss"), &data);
+    let params = ctx.cfg.params();
+    let shards = spec.partition(&data, ctx.seed ^ 0x9a91);
+    let backend = ctx.backend.clone();
+    let p2 = params;
+    let (sol, stats) = run_cluster(shards, kernel, backend, move |cluster| {
+        dis_kpca(cluster, kernel, &p2)
+    });
+    let mut rep = Report::new(
+        &format!("per-round communication on {dataset} (s={}, |Y|={})", spec.s, sol.num_points()),
+        &["round", "to_master", "to_workers", "total"],
+    );
+    for (round, up, down) in stats.table() {
+        rep.row(vec![round, up.to_string(), down.to_string(), (up + down).to_string()]);
+    }
+    rep.print();
+    let y = sol.num_points();
+    let model = comm_model_words(
+        spec.s,
+        params.t,
+        params.p,
+        y,
+        if params.w == 0 { y } else { params.w },
+        params.k,
+        data.avg_nnz_per_point(),
+    );
+    println!(
+        "total measured = {} words | Theorem-1 model ≈ {} words | ratio {:.2}",
+        stats.total_words(),
+        model,
+        stats.total_words() as f64 / model as f64
+    );
+    let path = rep.write_csv(&ctx.out_dir, &format!("comm_{dataset}"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// `ablation`: is each stage of the sampling pipeline pulling its
+/// weight? Runs Full / LeverageOnly / AdaptiveOnly at matched point
+/// budgets (the design choices DESIGN.md calls out).
+pub fn ablation(ctx: &Ctx, dataset: &str) -> anyhow::Result<()> {
+    use crate::coordinator::{dis_eval, dis_kpca_mode, SamplingMode};
+    let spec = ctx.dataset(dataset)?;
+    let data = spec.generate(ctx.seed);
+    let family = ctx.cfg.str_or("kernel", "gauss").to_string();
+    let kernel = ctx.kernel(&family, &data);
+    let mut rep = Report::new(
+        &format!("ablation — sampling stages on {dataset} ({family})"),
+        &["mode", "|Y|", "comm_words", "err/n", "rel_err"],
+    );
+    for (mode, name) in [
+        (SamplingMode::Full, "full (paper)"),
+        (SamplingMode::LeverageOnly, "leverage-only"),
+        (SamplingMode::AdaptiveOnly, "adaptive-only"),
+    ] {
+        let shards = spec.partition(&data, ctx.seed ^ 0x9a91);
+        let backend = ctx.backend.clone();
+        let params = ctx.cfg.params();
+        let n = data.len();
+        let ((err, trace, ny), stats) =
+            crate::coordinator::run_cluster(shards, kernel, backend, move |cluster| {
+                let sol = dis_kpca_mode(cluster, kernel, &params, mode);
+                let (err, trace) = dis_eval(cluster);
+                (err, trace, sol.num_points())
+            });
+        rep.row(vec![
+            name.into(),
+            ny.to_string(),
+            stats.total_words().to_string(),
+            sci(err / n as f64),
+            sci(err / trace),
+        ]);
+    }
+    rep.print();
+    let path = rep.write_csv(&ctx.out_dir, &format!("ablation_{dataset}"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// `run`: one disKPCA invocation with a result summary.
+pub fn run_one(ctx: &Ctx, dataset: &str) -> anyhow::Result<()> {
+    let spec = ctx.dataset(dataset)?;
+    let data = spec.generate(ctx.seed);
+    let family = ctx.cfg.str_or("kernel", "gauss").to_string();
+    let kernel = ctx.kernel(&family, &data);
+    let params = ctx.cfg.params();
+    println!(
+        "disKPCA on {dataset}: n={} d={} s={} kernel={} backend={}",
+        data.len(),
+        data.dim(),
+        spec.s,
+        kernel.name(),
+        ctx.backend_name,
+    );
+    let r = run_method(ctx, &spec, &data, kernel, &params, Method::DisKpca);
+    println!(
+        "|Y|={}  err/n={}  rel_err={:.4}  comm={} words  wall={:.2}s",
+        r.num_points,
+        sci(r.err_per_point),
+        r.err / r.trace,
+        r.comm_words,
+        r.wall_secs
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn tiny_ctx() -> Ctx {
+        let mut cfg = Config::new();
+        cfg.set("scale", "0.02");
+        cfg.set("workers", "3");
+        cfg.set("k", "3");
+        cfg.set("t", "16");
+        cfg.set("p", "32");
+        cfg.set("n_lev", "8");
+        cfg.set("m_rff", "128");
+        cfg.set("t2", "64");
+        cfg.set("sweep", "10");
+        cfg.set("median_sample", "60");
+        cfg.set("out", std::env::temp_dir().join("diskpca_fig_test").to_str().unwrap());
+        Ctx::from_config(&cfg).unwrap()
+    }
+
+    #[test]
+    fn table1_runs() {
+        table1(&tiny_ctx()).unwrap();
+    }
+
+    #[test]
+    fn fig_small_runs() {
+        fig_small_vs_batch(&tiny_ctx(), "gauss", "fig3_test").unwrap();
+    }
+
+    #[test]
+    fn fig_comm_runs() {
+        fig_comm_tradeoff(&tiny_ctx(), "gauss", &["protein_like"], "fig5_test").unwrap();
+    }
+
+    #[test]
+    fn bench_comm_runs() {
+        bench_comm(&tiny_ctx(), "protein_like").unwrap();
+    }
+}

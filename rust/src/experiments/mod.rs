@@ -1,0 +1,260 @@
+//! Experiment harness: one driver per paper table/figure.
+//!
+//! Every driver prints the same rows/series the paper reports and
+//! writes `results/<id>.csv`. DESIGN.md §6 maps each driver to the
+//! paper's evaluation; EXPERIMENTS.md records paper-vs-measured.
+
+mod figures;
+mod report;
+
+pub use figures::*;
+pub use report::Report;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::coordinator::{
+    self, dis_eval, dis_kpca, dis_set_solution, run_cluster, Params,
+};
+use crate::data::{by_name, Data, DatasetSpec};
+use crate::kernels::{median_trick_gamma, Kernel};
+use crate::rng::Rng;
+use crate::runtime::{backend_from_name, Backend};
+
+/// Shared experiment context built from CLI config.
+pub struct Ctx {
+    pub scale: f64,
+    pub backend: Arc<dyn Backend>,
+    pub backend_name: String,
+    pub out_dir: String,
+    pub seed: u64,
+    pub workers_override: Option<usize>,
+    pub cfg: Config,
+}
+
+impl Ctx {
+    pub fn from_config(cfg: &Config) -> anyhow::Result<Self> {
+        let backend_name = cfg.str_or("backend", "native").to_string();
+        let artifacts = cfg.str_or("artifacts", "artifacts").to_string();
+        let backend = backend_from_name(&backend_name, &artifacts)?;
+        Self::with_backend(cfg, backend, backend_name)
+    }
+
+    /// Build a context around a caller-owned backend (lets examples
+    /// keep a handle for inspecting e.g. XLA fallback stats).
+    pub fn with_backend(
+        cfg: &Config,
+        backend: Arc<dyn Backend>,
+        backend_name: String,
+    ) -> anyhow::Result<Self> {
+        Ok(Self {
+            scale: cfg.f64_or("scale", 0.1),
+            backend,
+            backend_name,
+            out_dir: cfg.str_or("out", "results").to_string(),
+            seed: cfg.u64_or("seed", 0xd15c),
+            workers_override: cfg.get("workers").map(|w| w.parse().expect("--workers N")),
+            cfg: cfg.clone(),
+        })
+    }
+
+    pub fn dataset(&self, name: &str) -> anyhow::Result<DatasetSpec> {
+        let mut spec = by_name(name, self.scale)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {name} (see `diskpca table1`)"))?;
+        if let Some(s) = self.workers_override {
+            spec.s = s;
+        }
+        Ok(spec)
+    }
+
+    /// The paper's kernel settings (§6.2): gauss σ = 0.2·median
+    /// distance over ≤20000 points; poly q=4; arc-cos degree 2.
+    pub fn kernel(&self, family: &str, data: &Data) -> Kernel {
+        match family {
+            "gauss" => {
+                let mut rng = Rng::seed_from(self.seed ^ 0x3e0);
+                let sample = self.cfg.usize_or("median_sample", 200);
+                Kernel::Gauss {
+                    gamma: median_trick_gamma(data, 0.2, sample, &mut rng),
+                }
+            }
+            "poly" => Kernel::Poly { q: self.cfg.usize_or("q", 4) as u32 },
+            "arccos" => Kernel::ArcCos { degree: self.cfg.usize_or("degree", 2) as u32 },
+            "laplace" => {
+                let mut rng = Rng::seed_from(self.seed ^ 0x3e1);
+                let sample = self.cfg.usize_or("median_sample", 200);
+                Kernel::Laplace {
+                    gamma: crate::kernels::median_trick_gamma_l1(data, 1.0, sample, &mut rng),
+                }
+            }
+            other => panic!("unknown kernel family {other} (gauss|poly|arccos|laplace)"),
+        }
+    }
+}
+
+/// Which KPCA method to run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    DisKpca,
+    UniformDisLr,
+    UniformBatch,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::DisKpca => "disKPCA",
+            Method::UniformDisLr => "uniform+disLR",
+            Method::UniformBatch => "uniform+batchKPCA",
+        }
+    }
+
+    pub fn all() -> [Method; 3] {
+        [Method::DisKpca, Method::UniformDisLr, Method::UniformBatch]
+    }
+}
+
+/// One method run's outcome.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub method: &'static str,
+    pub err: f64,
+    pub trace: f64,
+    /// err / n — the per-point low-rank approximation error plotted
+    /// in the paper's figures.
+    pub err_per_point: f64,
+    pub comm_words: usize,
+    pub num_points: usize,
+    pub wall_secs: f64,
+}
+
+/// Run one method over a freshly partitioned dataset and evaluate
+/// distributedly. `total_points` matches |Y| across methods so the
+/// comparison is representative-points-for-representative-points.
+pub fn run_method(
+    ctx: &Ctx,
+    spec: &DatasetSpec,
+    data: &Data,
+    kernel: Kernel,
+    params: &Params,
+    method: Method,
+) -> RunResult {
+    let shards = spec.partition(data, ctx.seed ^ 0x9a91);
+    let n = data.len();
+    let total_points = params.n_lev + params.n_adapt;
+    let backend = ctx.backend.clone();
+    let params = *params;
+    let t0 = Instant::now();
+    let ((err, trace, num_points), stats) =
+        run_cluster(shards, kernel, backend, move |cluster| {
+            let sol = match method {
+                Method::DisKpca => dis_kpca(cluster, kernel, &params),
+                Method::UniformDisLr => {
+                    coordinator::uniform_dis_lr(cluster, kernel, &params, total_points)
+                }
+                Method::UniformBatch => {
+                    let sol =
+                        coordinator::uniform_batch_kpca(cluster, kernel, &params, total_points);
+                    dis_set_solution(cluster, &sol);
+                    sol
+                }
+            };
+            let (err, trace) = dis_eval(cluster);
+            (err, trace, sol.num_points())
+        });
+    RunResult {
+        method: method.name(),
+        err,
+        trace,
+        err_per_point: err / n as f64,
+        comm_words: stats.total_words(),
+        num_points,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// The closed-form communication model from Theorem 1's accounting —
+/// printed next to measured words by `bench-comm`.
+pub fn comm_model_words(
+    s: usize,
+    t: usize,
+    p: usize,
+    y: usize,
+    w: usize,
+    k: usize,
+    rho: f64,
+) -> usize {
+    // disLS: s·t·p up + s·t² down; sampling: ~2·(s+1)·|Y|·ρ′ with
+    // ρ′ = words per point; disLR: s·|Y|·w up + s·|Y|·k down.
+    let point_words = rho.ceil() as usize;
+    s * t * p + s * t * t + 2 * (s + 1) * y * point_words + s * y * w + s * y * k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Ctx {
+        let mut cfg = Config::new();
+        cfg.set("scale", "0.03");
+        cfg.set("workers", "3");
+        Ctx::from_config(&cfg).unwrap()
+    }
+
+    fn small_params() -> Params {
+        Params {
+            k: 4,
+            t: 16,
+            p: 32,
+            n_lev: 10,
+            n_adapt: 20,
+            w: 0,
+            m_rff: 256,
+            t2: 128,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn run_method_all_methods() {
+        let c = ctx();
+        let spec = c.dataset("protein_like").unwrap();
+        let data = spec.generate(c.seed);
+        let kernel = c.kernel("gauss", &data);
+        for m in Method::all() {
+            let r = run_method(&c, &spec, &data, kernel, &small_params(), m);
+            assert!(r.err >= 0.0 && r.err <= r.trace * 1.001, "{m:?}: {r:?}");
+            assert!(r.comm_words > 0);
+            assert!(r.num_points > 0);
+        }
+    }
+
+    #[test]
+    fn diskpca_comm_near_model() {
+        let c = ctx();
+        let spec = c.dataset("protein_like").unwrap();
+        let data = spec.generate(c.seed);
+        let kernel = c.kernel("gauss", &data);
+        let p = small_params();
+        let r = run_method(&c, &spec, &data, kernel, &p, Method::DisKpca);
+        let y = r.num_points;
+        let model = comm_model_words(spec.s, p.t, p.p, y, y, p.k, spec.d as f64);
+        // within 3× of the closed form (eval round + alloc scalars on top)
+        assert!(
+            r.comm_words < 3 * model && r.comm_words > model / 3,
+            "measured {} vs model {model}",
+            r.comm_words
+        );
+    }
+
+    #[test]
+    fn kernel_selection() {
+        let c = ctx();
+        let spec = c.dataset("protein_like").unwrap();
+        let data = spec.generate(1);
+        assert!(matches!(c.kernel("gauss", &data), Kernel::Gauss { .. }));
+        assert!(matches!(c.kernel("poly", &data), Kernel::Poly { q: 4 }));
+        assert!(matches!(c.kernel("arccos", &data), Kernel::ArcCos { degree: 2 }));
+    }
+}

@@ -1,0 +1,159 @@
+//! Terminal scatter/line plots for the figure drivers — a quick
+//! visual check of curve *shapes* (who wins, where curves bend)
+//! without leaving the terminal. Multiple labelled series, log-x
+//! support for communication axes.
+
+/// One named series of (x, y) points.
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+pub struct AsciiPlot {
+    title: String,
+    width: usize,
+    height: usize,
+    log_x: bool,
+    series: Vec<Series>,
+}
+
+const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@'];
+
+impl AsciiPlot {
+    pub fn new(title: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            width: 64,
+            height: 18,
+            log_x: false,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn log_x(mut self) -> Self {
+        self.log_x = true;
+        self
+    }
+
+    pub fn size(mut self, width: usize, height: usize) -> Self {
+        self.width = width.max(16);
+        self.height = height.max(6);
+        self
+    }
+
+    pub fn add(&mut self, label: &str, points: Vec<(f64, f64)>) {
+        self.series.push(Series { label: label.to_string(), points });
+    }
+
+    fn tx(&self, x: f64) -> f64 {
+        if self.log_x {
+            x.max(1e-300).log10()
+        } else {
+            x
+        }
+    }
+
+    /// Render to a string (also what the tests inspect).
+    pub fn render(&self) -> String {
+        let pts: Vec<(f64, f64)> = self
+            .series
+            .iter()
+            .flat_map(|s| s.points.iter().map(|&(x, y)| (self.tx(x), y)))
+            .filter(|(x, y)| x.is_finite() && y.is_finite())
+            .collect();
+        if pts.is_empty() {
+            return format!("{}\n(no data)\n", self.title);
+        }
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &pts {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        if (x1 - x0).abs() < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (si, s) in self.series.iter().enumerate() {
+            let mark = MARKS[si % MARKS.len()];
+            for &(x, y) in &s.points {
+                let tx = self.tx(x);
+                if !tx.is_finite() || !y.is_finite() {
+                    continue;
+                }
+                let cx = ((tx - x0) / (x1 - x0) * (self.width - 1) as f64).round() as usize;
+                let cy = ((y - y0) / (y1 - y0) * (self.height - 1) as f64).round() as usize;
+                let row = self.height - 1 - cy.min(self.height - 1);
+                grid[row][cx.min(self.width - 1)] = mark;
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        out.push_str(&format!("{y1:>10.3e} ┐\n"));
+        for row in &grid {
+            out.push_str("           │");
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push_str(&format!("{y0:>10.3e} └{}\n", "─".repeat(self.width)));
+        out.push_str(&format!(
+            "            {:<.3e}{}{:>.3e}{}\n",
+            if self.log_x { 10f64.powf(x0) } else { x0 },
+            " ".repeat(self.width.saturating_sub(22)),
+            if self.log_x { 10f64.powf(x1) } else { x1 },
+            if self.log_x { "  (log x)" } else { "" },
+        ));
+        for (si, s) in self.series.iter().enumerate() {
+            out.push_str(&format!("            {} {}\n", MARKS[si % MARKS.len()], s.label));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_multiple_series() {
+        let mut p = AsciiPlot::new("test plot").size(32, 10);
+        p.add("a", vec![(1.0, 1.0), (2.0, 2.0), (3.0, 3.0)]);
+        p.add("b", vec![(1.0, 3.0), (3.0, 1.0)]);
+        let r = p.render();
+        assert!(r.contains("test plot"));
+        assert!(r.contains('*') && r.contains('o'));
+        assert!(r.contains("a") && r.contains("b"));
+        assert!(r.lines().count() > 10);
+    }
+
+    #[test]
+    fn log_x_handles_wide_ranges() {
+        let mut p = AsciiPlot::new("log").log_x().size(32, 8);
+        p.add("s", vec![(10.0, 1.0), (1e6, 2.0)]);
+        let r = p.render();
+        assert!(r.contains("(log x)"));
+    }
+
+    #[test]
+    fn empty_plot_safe() {
+        let p = AsciiPlot::new("empty");
+        assert!(p.render().contains("no data"));
+    }
+
+    #[test]
+    fn degenerate_single_point() {
+        let mut p = AsciiPlot::new("one");
+        p.add("s", vec![(5.0, 5.0)]);
+        let r = p.render();
+        assert!(r.contains('*'));
+    }
+}

@@ -1,0 +1,103 @@
+//! Row-oriented report: aligned stdout table + CSV file.
+
+use std::fs;
+use std::path::Path;
+
+pub struct Report {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let widths: Vec<usize> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain([h.len()])
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for r in &self.rows {
+            println!("{}", line(r));
+        }
+    }
+
+    /// Write `out_dir/<id>.csv`.
+    pub fn write_csv(&self, out_dir: &str, id: &str) -> std::io::Result<String> {
+        fs::create_dir_all(out_dir)?;
+        let path = Path::new(out_dir).join(format!("{id}.csv"));
+        let mut text = self.headers.join(",") + "\n";
+        for r in &self.rows {
+            text.push_str(&r.join(","));
+            text.push('\n');
+        }
+        fs::write(&path, text)?;
+        Ok(path.display().to_string())
+    }
+}
+
+/// 3-sig-fig science formatting for table cells.
+pub fn sci(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 0.01 && v.abs() < 100000.0 {
+        format!("{v:.4}")
+    } else {
+        format!("{v:.3e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_roundtrip() {
+        let mut r = Report::new("test", &["a", "b"]);
+        r.row(vec!["1".into(), "2".into()]);
+        r.row(vec!["333".into(), sci(0.12345)]);
+        r.print();
+        let dir = std::env::temp_dir().join("diskpca_report_test");
+        let path = r.write_csv(dir.to_str().unwrap(), "t").unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.starts_with("a,b\n1,2\n"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut r = Report::new("t", &["a", "b"]);
+        r.row(vec!["1".into()]);
+    }
+}

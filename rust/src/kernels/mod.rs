@@ -1,0 +1,567 @@
+//! Kernel functions, gram blocks and random feature expansions —
+//! native (f64) reference implementations. The XLA artifacts compute
+//! the same maps in f32 on the hot path; integration tests compare
+//! the two (`tests/runtime_parity.rs`).
+
+use crate::data::Data;
+use crate::linalg::{dot, Mat};
+use crate::rng::Rng;
+
+/// The three kernel families the paper evaluates (§6.2), plus the
+/// Laplacian — another shift-invariant kernel with a Fourier random
+/// feature expansion (Cauchy spectral density), covered by Theorem 1's
+/// "other properly regularized kernels" remark.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// exp(-γ‖x−y‖²); the paper's σ via median trick, γ = 1/(2σ²).
+    Gauss { gamma: f64 },
+    /// ⟨x,y⟩^q (homogeneous, the paper's form; q=4 in experiments).
+    Poly { q: u32 },
+    /// Cho–Saul arc-cosine kernel of degree 0/1/2 (n=2 in the paper).
+    ArcCos { degree: u32 },
+    /// exp(-γ‖x−y‖₁); Fourier features with ω ~ Cauchy(0, γ) per
+    /// coordinate (the Fourier transform of the Laplacian).
+    Laplace { gamma: f64 },
+}
+
+impl Kernel {
+    pub fn name(&self) -> String {
+        match self {
+            Kernel::Gauss { gamma } => format!("gauss(γ={gamma:.4})"),
+            Kernel::Poly { q } => format!("poly(q={q})"),
+            Kernel::ArcCos { degree } => format!("arccos(n={degree})"),
+            Kernel::Laplace { gamma } => format!("laplace(γ={gamma:.4})"),
+        }
+    }
+
+    /// κ(x, y) on dense vectors.
+    pub fn eval(&self, x: &[f64], y: &[f64]) -> f64 {
+        match *self {
+            Kernel::Gauss { gamma } => {
+                let mut d2 = 0.0;
+                for i in 0..x.len() {
+                    let d = x[i] - y[i];
+                    d2 += d * d;
+                }
+                (-gamma * d2).exp()
+            }
+            Kernel::Poly { q } => dot(x, y).powi(q as i32),
+            Kernel::ArcCos { degree } => {
+                let nx = dot(x, x).sqrt();
+                let ny = dot(y, y).sqrt();
+                arccos_from_parts(dot(x, y), nx, ny, degree)
+            }
+            Kernel::Laplace { gamma } => {
+                let mut d1 = 0.0;
+                for i in 0..x.len() {
+                    d1 += (x[i] - y[i]).abs();
+                }
+                (-gamma * d1).exp()
+            }
+        }
+    }
+
+    /// κ(x, x) — needed for residual distances without forming grams.
+    pub fn diag(&self, x_norm_sq: f64) -> f64 {
+        match *self {
+            Kernel::Gauss { .. } | Kernel::Laplace { .. } => 1.0,
+            Kernel::Poly { q } => x_norm_sq.powi(q as i32),
+            Kernel::ArcCos { degree } => match degree {
+                0 => 1.0,
+                1 => x_norm_sq, // (1/π)‖x‖²·J₁(0)=π ⇒ ‖x‖²
+                2 => 3.0 * x_norm_sq * x_norm_sq, // J₂(0)=3π
+                _ => panic!("arccos degree {degree} unsupported"),
+            },
+        }
+    }
+}
+
+/// Shared arc-cos formula from (⟨x,y⟩, ‖x‖, ‖y‖).
+fn arccos_from_parts(xy: f64, nx: f64, ny: f64, degree: u32) -> f64 {
+    let denom = (nx * ny).max(1e-300);
+    let cos_t = (xy / denom).clamp(-1.0, 1.0);
+    let theta = cos_t.acos();
+    let sin_t = (1.0 - cos_t * cos_t).max(0.0).sqrt();
+    let pi = std::f64::consts::PI;
+    let (j, scale) = match degree {
+        0 => (pi - theta, 1.0),
+        1 => (sin_t + (pi - theta) * cos_t, nx * ny),
+        2 => (
+            3.0 * sin_t * cos_t + (pi - theta) * (1.0 + 2.0 * cos_t * cos_t),
+            (nx * ny) * (nx * ny),
+        ),
+        _ => panic!("arccos degree {degree} unsupported"),
+    };
+    scale * j / pi
+}
+
+/// Gram block `K(Y, X)` with Y dense (d×|Y|) and X a data shard:
+/// returns |Y|×n. Sparse shards use O(nnz) dot products.
+pub fn gram(kernel: Kernel, y: &Mat, x: &Data) -> Mat {
+    let ny = y.cols();
+    let n = x.len();
+    assert_eq!(y.rows(), x.dim());
+    if let Kernel::Laplace { gamma } = kernel {
+        return gram_laplace(gamma, y, x);
+    }
+    let ycols: Vec<Vec<f64>> = (0..ny).map(|j| y.col(j)).collect();
+    let ynorms: Vec<f64> = ycols.iter().map(|c| dot(c, c)).collect();
+    let mut out = Mat::zeros(ny, n);
+    match x {
+        Data::Dense(xd) => {
+            // one blocked matmul for all inner products (§Perf), then a
+            // fused elementwise kernel map — mirrors the L1 tiling.
+            let dots = y.matmul_at_b(xd); // ny×n
+            let xnorms = xd.col_norms_sq();
+            for i in 0..ny {
+                let yn = ynorms[i];
+                let drow = dots.row(i);
+                let orow_base = i * n;
+                for j in 0..n {
+                    out.data_mut()[orow_base + j] =
+                        gram_entry(kernel, drow[j], yn, xnorms[j]);
+                }
+            }
+        }
+        Data::Sparse(xs) => {
+            for j in 0..n {
+                let xn = xs.col_norm_sq(j);
+                for i in 0..ny {
+                    let xy = xs.col_dot_dense(j, &ycols[i]);
+                    out[(i, j)] = gram_entry(kernel, xy, ynorms[i], xn);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[inline]
+fn gram_entry(kernel: Kernel, xy: f64, ynorm_sq: f64, xnorm_sq: f64) -> f64 {
+    match kernel {
+        Kernel::Gauss { gamma } => (-gamma * (ynorm_sq + xnorm_sq - 2.0 * xy).max(0.0)).exp(),
+        Kernel::Poly { q } => xy.powi(q as i32),
+        Kernel::ArcCos { degree } => {
+            arccos_from_parts(xy, ynorm_sq.sqrt(), xnorm_sq.sqrt(), degree)
+        }
+        Kernel::Laplace { .. } => unreachable!("laplace uses gram_laplace"),
+    }
+}
+
+/// ‖a − b‖₁ with four independent accumulators (same reassociation
+/// reasoning as `linalg::dot` — §Perf #9).
+#[inline]
+fn l1_dist(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        s0 += (a[i] - b[i]).abs();
+        s1 += (a[i + 1] - b[i + 1]).abs();
+        s2 += (a[i + 2] - b[i + 2]).abs();
+        s3 += (a[i + 3] - b[i + 3]).abs();
+    }
+    let mut acc = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        acc += (a[i] - b[i]).abs();
+    }
+    acc
+}
+
+/// Laplacian gram block: L1 distances don't factor through inner
+/// products, so compute them directly. Sparse shards use the identity
+/// ‖x − y‖₁ = ‖y‖₁ + Σ_{r∈nnz(x)} (|x_r − y_r| − |y_r|) for O(nnz·|Y|)
+/// instead of O(d·n·|Y|).
+fn gram_laplace(gamma: f64, y: &Mat, x: &Data) -> Mat {
+    let ny = y.cols();
+    let n = x.len();
+    let ycols: Vec<Vec<f64>> = (0..ny).map(|j| y.col(j)).collect();
+    let mut out = Mat::zeros(ny, n);
+    match x {
+        Data::Dense(xd) => {
+            for j in 0..n {
+                let xc = xd.col(j);
+                for i in 0..ny {
+                    let d1 = l1_dist(&xc, &ycols[i]);
+                    out[(i, j)] = (-gamma * d1).exp();
+                }
+            }
+        }
+        Data::Sparse(xs) => {
+            let ybase: Vec<f64> = ycols.iter().map(|c| c.iter().map(|v| v.abs()).sum()).collect();
+            for j in 0..n {
+                for i in 0..ny {
+                    let yc = &ycols[i];
+                    let mut d1 = ybase[i];
+                    for (r, v) in xs.col_iter(j) {
+                        d1 += (v - yc[r]).abs() - yc[r].abs();
+                    }
+                    out[(i, j)] = (-gamma * d1.max(0.0)).exp();
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Dense symmetric gram `K(Y, Y)` for a d×m matrix of points.
+pub fn gram_sym(kernel: Kernel, y: &Mat) -> Mat {
+    gram(kernel, y, &Data::Dense(y.clone()))
+}
+
+/// κ(x_j, x_j) for every point of a shard.
+pub fn diag(kernel: Kernel, x: &Data) -> Vec<f64> {
+    (0..x.len()).map(|j| kernel.diag(x.col_norm_sq(j))).collect()
+}
+
+// ------------------------------------------------------------------
+// Random feature expansions (paper §3 "Kernels and Random Features")
+// ------------------------------------------------------------------
+
+/// Fourier features for the Gaussian kernel exp(-γ‖x−y‖²):
+/// ω ~ N(0, 2γ·I) (since κ(x−y)=exp(-‖δ‖²/2σ²) ⇔ ω ~ N(0, σ⁻²I) with
+/// γ = 1/(2σ²) ⇒ σ⁻² = 2γ), b ~ U[0, 2π).
+pub struct RffParams {
+    /// d×m frequency matrix.
+    pub omega: Mat,
+    /// m phase offsets.
+    pub b: Vec<f64>,
+}
+
+pub fn rff_params(d: usize, m: usize, gamma: f64, rng: &mut Rng) -> RffParams {
+    let sd = (2.0 * gamma).sqrt();
+    RffParams {
+        omega: Mat::from_fn(d, m, |_, _| rng.normal() * sd),
+        b: (0..m).map(|_| rng.uniform(0.0, 2.0 * std::f64::consts::PI)).collect(),
+    }
+}
+
+/// z(x) = √(2/m)·cos(ωᵀx + b) for every point: returns m×n.
+///
+/// Perf note (EXPERIMENTS.md §Perf): the dense path runs ΩᵀX as one
+/// blocked matmul instead of per-point strided projections — 20×+ on
+/// mnist-sized shards.
+pub fn rff_features(params: &RffParams, x: &Data) -> Mat {
+    let m = params.omega.cols();
+    let n = x.len();
+    let scale = (2.0 / m as f64).sqrt();
+    let mut out = project_all(&params.omega, x);
+    for i in 0..m {
+        let b = params.b[i];
+        for v in out.row_mut(i) {
+            *v = scale * (*v + b).cos();
+        }
+    }
+    let _ = n;
+    out
+}
+
+/// Fourier features for the Laplacian kernel exp(-γ‖x−y‖₁): the
+/// spectral density is a product of Cauchy(0, γ) marginals, so
+/// ω_ij = γ·tan(π(u−½)) with u ~ U(0,1); the feature map is the same
+/// √(2/m)·cos(ωᵀx + b) as the Gaussian case (so [`rff_features`] and
+/// the L1 Pallas kernel are shared).
+pub fn laplace_rff_params(d: usize, m: usize, gamma: f64, rng: &mut Rng) -> RffParams {
+    RffParams {
+        omega: Mat::from_fn(d, m, |_, _| {
+            let u: f64 = rng.uniform(0.0, 1.0);
+            gamma * (std::f64::consts::PI * (u - 0.5)).tan()
+        }),
+        b: (0..m).map(|_| rng.uniform(0.0, 2.0 * std::f64::consts::PI)).collect(),
+    }
+}
+
+/// Arc-cosine random features: √(2/m)·max(0, ωᵀx)^degree, ω ~ N(0, I).
+pub fn arccos_params(d: usize, m: usize, rng: &mut Rng) -> Mat {
+    Mat::from_fn(d, m, |_, _| rng.normal())
+}
+
+pub fn arccos_features(omega: &Mat, degree: u32, x: &Data) -> Mat {
+    let m = omega.cols();
+    let scale = (2.0 / m as f64).sqrt();
+    let mut out = project_all(omega, x);
+    for v in out.data_mut() {
+        // Θ(wᵀx)·(wᵀx)^deg — degree 0 is the pure indicator
+        // (a.powi(0) would wrongly turn clamped zeros into ones).
+        *v = if *v > 0.0 { scale * v.powi(degree as i32) } else { 0.0 };
+    }
+    out
+}
+
+/// ΩᵀX for a whole shard — m×n. Dense: one blocked matmul; sparse:
+/// O(nnz·m) with contiguous Ω-row accumulation.
+fn project_all(omega: &Mat, x: &Data) -> Mat {
+    match x {
+        Data::Dense(xd) => omega.matmul_at_b(xd),
+        Data::Sparse(xs) => {
+            let m = omega.cols();
+            let n = xs.cols();
+            let mut out = Mat::zeros(m, n);
+            for j in 0..n {
+                for (r, v) in xs.col_iter(j) {
+                    let orow = omega.row(r);
+                    for i in 0..m {
+                        out[(i, j)] += orow[i] * v;
+                    }
+                }
+            }
+            out
+        }
+    }
+}
+
+/// The paper's "median trick": σ = c · median pairwise distance over a
+/// random subsample; returns γ = 1/(2σ²).
+pub fn median_trick_gamma(x: &Data, c: f64, sample: usize, rng: &mut Rng) -> f64 {
+    let n = x.len();
+    let idx = if n <= sample {
+        (0..n).collect::<Vec<_>>()
+    } else {
+        rng.sample_without_replacement(n, sample)
+    };
+    let cols: Vec<Vec<f64>> = idx.iter().map(|&j| x.col_dense(j)).collect();
+    let mut d2s = Vec::new();
+    for i in 0..cols.len() {
+        for j in (i + 1)..cols.len() {
+            let mut d2 = 0.0;
+            for r in 0..cols[i].len() {
+                let d = cols[i][r] - cols[j][r];
+                d2 += d * d;
+            }
+            d2s.push(d2);
+        }
+    }
+    assert!(!d2s.is_empty(), "median trick needs ≥2 points");
+    d2s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = d2s[d2s.len() / 2].sqrt();
+    let sigma = (c * med).max(1e-12);
+    1.0 / (2.0 * sigma * sigma)
+}
+
+/// Median trick for the Laplacian kernel: γ = 1/(c · median L1
+/// pairwise distance) so that κ at the median distance is e^{-1/c}.
+pub fn median_trick_gamma_l1(x: &Data, c: f64, sample: usize, rng: &mut Rng) -> f64 {
+    let n = x.len();
+    let idx = if n <= sample {
+        (0..n).collect::<Vec<_>>()
+    } else {
+        rng.sample_without_replacement(n, sample)
+    };
+    let cols: Vec<Vec<f64>> = idx.iter().map(|&j| x.col_dense(j)).collect();
+    let mut d1s = Vec::new();
+    for i in 0..cols.len() {
+        for j in (i + 1)..cols.len() {
+            let mut d1 = 0.0;
+            for r in 0..cols[i].len() {
+                d1 += (cols[i][r] - cols[j][r]).abs();
+            }
+            d1s.push(d1);
+        }
+    }
+    assert!(!d1s.is_empty(), "median trick needs ≥2 points");
+    d1s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = d1s[d1s.len() / 2];
+    1.0 / (c * med).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Csc;
+
+    fn shard(rng: &mut Rng, d: usize, n: usize) -> (Data, Data) {
+        let m = Mat::from_fn(d, n, |i, j| {
+            if (i + j) % 2 == 0 {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        (Data::Dense(m.clone()), Data::Sparse(Csc::from_dense(&m)))
+    }
+
+    #[test]
+    fn gram_dense_sparse_agree() {
+        let mut rng = Rng::seed_from(1);
+        let (dd, ds) = shard(&mut rng, 6, 8);
+        let y = Mat::from_fn(6, 4, |_, _| rng.normal());
+        for k in [
+            Kernel::Gauss { gamma: 0.3 },
+            Kernel::Poly { q: 4 },
+            Kernel::ArcCos { degree: 2 },
+        ] {
+            let a = gram(k, &y, &dd);
+            let b = gram(k, &y, &ds);
+            assert!(a.max_abs_diff(&b) < 1e-10, "{}", k.name());
+        }
+    }
+
+    #[test]
+    fn gram_matches_eval() {
+        let mut rng = Rng::seed_from(2);
+        let (dd, _) = shard(&mut rng, 5, 6);
+        let y = Mat::from_fn(5, 3, |_, _| rng.normal());
+        for k in [
+            Kernel::Gauss { gamma: 1.0 },
+            Kernel::Poly { q: 2 },
+            Kernel::ArcCos { degree: 1 },
+        ] {
+            let g = gram(k, &y, &dd);
+            for i in 0..3 {
+                for j in 0..6 {
+                    let wanted = k.eval(&y.col(i), &dd.col_dense(j));
+                    assert!((g[(i, j)] - wanted).abs() < 1e-10);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn diag_consistent_with_eval() {
+        let mut rng = Rng::seed_from(3);
+        let (dd, _) = shard(&mut rng, 4, 5);
+        for k in [
+            Kernel::Gauss { gamma: 0.7 },
+            Kernel::Poly { q: 3 },
+            Kernel::ArcCos { degree: 0 },
+            Kernel::ArcCos { degree: 1 },
+            Kernel::ArcCos { degree: 2 },
+        ] {
+            let d = diag(k, &dd);
+            for j in 0..5 {
+                let c = dd.col_dense(j);
+                // acos near cos=1 is ill-conditioned ⇒ loose tolerance
+                assert!(
+                    (d[j] - k.eval(&c, &c)).abs() < 1e-6,
+                    "{} at {j}: {} vs {}",
+                    k.name(),
+                    d[j],
+                    k.eval(&c, &c)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gram_gauss_psd_and_bounded() {
+        let mut rng = Rng::seed_from(4);
+        let y = Mat::from_fn(4, 10, |_, _| rng.normal());
+        let g = gram_sym(Kernel::Gauss { gamma: 0.5 }, &y);
+        for i in 0..10 {
+            assert!((g[(i, i)] - 1.0).abs() < 1e-12);
+            for j in 0..10 {
+                assert!(g[(i, j)] > 0.0 && g[(i, j)] <= 1.0 + 1e-12);
+                assert!((g[(i, j)] - g[(j, i)]).abs() < 1e-12);
+            }
+        }
+        // PSD via eigh
+        let (vals, _) = crate::linalg::eigh(&g);
+        assert!(vals.last().unwrap() > &-1e-9);
+    }
+
+    #[test]
+    fn rff_approximates_gauss_kernel() {
+        let mut rng = Rng::seed_from(5);
+        let d = 5;
+        let gamma = 0.4;
+        let x = Mat::from_fn(d, 10, |_, _| rng.normal());
+        let data = Data::Dense(x.clone());
+        let params = rff_params(d, 8192, gamma, &mut rng);
+        let z = rff_features(&params, &data);
+        let approx = z.matmul_at_b(&z);
+        let exact = gram_sym(Kernel::Gauss { gamma }, &x);
+        assert!(approx.max_abs_diff(&exact) < 0.1, "err {}", approx.max_abs_diff(&exact));
+    }
+
+    #[test]
+    fn arccos_features_approximate_kernel() {
+        let mut rng = Rng::seed_from(6);
+        let d = 4;
+        let x = Mat::from_fn(d, 8, |_, _| rng.normal());
+        let data = Data::Dense(x.clone());
+        for degree in [0u32, 1, 2] {
+            let omega = arccos_params(d, 16384, &mut rng);
+            let z = arccos_features(&omega, degree, &data);
+            let approx = z.matmul_at_b(&z);
+            let exact = gram_sym(Kernel::ArcCos { degree }, &x);
+            let scale = exact.frob_norm() / 8.0 + 1.0;
+            assert!(
+                approx.max_abs_diff(&exact) < 0.25 * scale,
+                "deg {degree} err {}",
+                approx.max_abs_diff(&exact)
+            );
+        }
+    }
+
+    #[test]
+    fn laplace_gram_dense_sparse_agree_and_match_eval() {
+        let mut rng = Rng::seed_from(8);
+        let (dd, ds) = shard(&mut rng, 6, 8);
+        let y = Mat::from_fn(6, 4, |_, _| rng.normal());
+        let k = Kernel::Laplace { gamma: 0.4 };
+        let a = gram(k, &y, &dd);
+        let b = gram(k, &y, &ds);
+        assert!(a.max_abs_diff(&b) < 1e-10);
+        for i in 0..4 {
+            for j in 0..8 {
+                let wanted = k.eval(&y.col(i), &dd.col_dense(j));
+                assert!((a[(i, j)] - wanted).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn laplace_gram_psd_and_bounded() {
+        let mut rng = Rng::seed_from(9);
+        let y = Mat::from_fn(4, 10, |_, _| rng.normal());
+        let g = gram_sym(Kernel::Laplace { gamma: 0.6 }, &y);
+        for i in 0..10 {
+            assert!((g[(i, i)] - 1.0).abs() < 1e-12);
+            for j in 0..10 {
+                assert!(g[(i, j)] > 0.0 && g[(i, j)] <= 1.0 + 1e-12);
+                assert!((g[(i, j)] - g[(j, i)]).abs() < 1e-12);
+            }
+        }
+        let (vals, _) = crate::linalg::eigh(&g);
+        assert!(vals.last().unwrap() > &-1e-9);
+    }
+
+    #[test]
+    fn laplace_rff_approximates_kernel() {
+        let mut rng = Rng::seed_from(10);
+        let d = 5;
+        let gamma = 0.5;
+        let x = Mat::from_fn(d, 10, |_, _| rng.normal());
+        let data = Data::Dense(x.clone());
+        let params = laplace_rff_params(d, 16384, gamma, &mut rng);
+        let z = rff_features(&params, &data);
+        let approx = z.matmul_at_b(&z);
+        let exact = gram_sym(Kernel::Laplace { gamma }, &x);
+        assert!(approx.max_abs_diff(&exact) < 0.12, "err {}", approx.max_abs_diff(&exact));
+    }
+
+    #[test]
+    fn median_trick_l1_scale_invariance() {
+        let mut rng = Rng::seed_from(11);
+        let x = Mat::from_fn(3, 40, |_, _| rng.normal());
+        let g1 = median_trick_gamma_l1(&Data::Dense(x.clone()), 1.0, 40, &mut rng);
+        let mut x2 = x.clone();
+        x2.scale(2.0);
+        let g2 = median_trick_gamma_l1(&Data::Dense(x2), 1.0, 40, &mut rng);
+        // doubling distances halves gamma
+        assert!((g1 / g2 - 2.0).abs() < 0.1, "{g1} {g2}");
+    }
+
+    #[test]
+    fn median_trick_scale_invariance() {
+        let mut rng = Rng::seed_from(7);
+        let x = Mat::from_fn(3, 40, |_, _| rng.normal());
+        let g1 = median_trick_gamma(&Data::Dense(x.clone()), 0.2, 40, &mut rng);
+        let mut x2 = x.clone();
+        x2.scale(2.0);
+        let g2 = median_trick_gamma(&Data::Dense(x2), 0.2, 40, &mut rng);
+        // doubling distances quarters gamma
+        assert!((g1 / g2 - 4.0).abs() < 0.2, "{g1} {g2}");
+    }
+}

@@ -1,0 +1,209 @@
+//! Multi-process deployment: `diskpca master` / `diskpca worker`.
+//!
+//! A real (non-simulated) deployment of the protocol: the master binds
+//! a TCP address and waits for `--workers N` connections; each worker
+//! process loads its shard from a dataset file (`data::io` format or
+//! CSV), connects, and serves the protocol until `Quit`. The exact
+//! same `coordinator` code drives both this and the in-process star —
+//! only the transport differs.
+//!
+//! ```text
+//!   # terminal 1 (master)
+//!   diskpca master --listen 127.0.0.1:7700 --workers 2 --kernel gauss --gamma 0.5
+//!   # terminals 2, 3 (workers)
+//!   diskpca worker --connect 127.0.0.1:7700 --data shard0.bin --kernel gauss --gamma 0.5
+//!   diskpca worker --connect 127.0.0.1:7700 --data shard1.bin --kernel gauss --gamma 0.5
+//! ```
+//!
+//! `diskpca shard <dataset> --out dir --parts N` writes power-law
+//! shards of a registry dataset to disk for the above.
+
+use std::sync::Arc;
+
+use crate::comm::{tcp, Cluster, CommStats};
+use crate::config::Config;
+use crate::coordinator::{dis_eval, dis_kpca, Worker};
+use crate::data::{self, Data};
+use crate::kernels::Kernel;
+use crate::runtime::backend_from_name;
+
+/// Kernel from explicit flags (a worker process has no data-dependent
+/// median trick — γ must be pinned so all nodes agree).
+pub fn kernel_from_flags(cfg: &Config) -> anyhow::Result<Kernel> {
+    Ok(match cfg.str_or("kernel", "gauss") {
+        "gauss" => Kernel::Gauss { gamma: cfg.f64_or("gamma", 0.5) },
+        "poly" => Kernel::Poly { q: cfg.usize_or("q", 4) as u32 },
+        "arccos" => Kernel::ArcCos { degree: cfg.usize_or("degree", 2) as u32 },
+        other => anyhow::bail!("unknown kernel {other}"),
+    })
+}
+
+/// `diskpca master`: accept workers, run disKPCA, print the result.
+pub fn master(cfg: &Config) -> anyhow::Result<()> {
+    let addr = cfg.str_or("listen", "127.0.0.1:7700");
+    let s = cfg.usize_or("workers", 2);
+    let kernel = kernel_from_flags(cfg)?;
+    let params = cfg.params();
+    eprintln!("master: waiting for {s} workers on {addr} …");
+    let links = tcp::listen(addr, s)?;
+    let cluster = Cluster::new(links, CommStats::new());
+    let t0 = std::time::Instant::now();
+    let sol = dis_kpca(&cluster, kernel, &params);
+    let (err, trace) = dis_eval(&cluster);
+    cluster.shutdown();
+    println!(
+        "disKPCA done: |Y|={} rel_err={:.4} comm={} words wall={:.2}s",
+        sol.num_points(),
+        err / trace,
+        cluster.stats.total_words(),
+        t0.elapsed().as_secs_f64()
+    );
+    for (round, up, down) in cluster.stats.table() {
+        println!("  {round:<14} up {up:>10}  down {down:>10}");
+    }
+    if let Some(out) = cfg.get("save-solution") {
+        data::io::save(&Data::Dense(sol.y.clone()), out)?;
+        println!("representative points saved to {out}");
+    }
+    Ok(())
+}
+
+/// `diskpca worker`: load a shard, serve the protocol.
+pub fn worker(cfg: &Config) -> anyhow::Result<()> {
+    let addr = cfg.str_or("connect", "127.0.0.1:7700");
+    let path = cfg
+        .get("data")
+        .ok_or_else(|| anyhow::anyhow!("worker needs --data <file.bin|file.csv>"))?;
+    let shard = if path.ends_with(".csv") {
+        data::io::load_csv(path)?
+    } else {
+        data::io::load(path)?
+    };
+    let kernel = kernel_from_flags(cfg)?;
+    let backend = backend_from_name(
+        cfg.str_or("backend", "native"),
+        cfg.str_or("artifacts", "artifacts"),
+    )?;
+    eprintln!(
+        "worker: {} points of dim {} → {addr} (backend {})",
+        shard.len(),
+        shard.dim(),
+        backend.name()
+    );
+    let endpoint = tcp::connect(addr)?;
+    Worker::new(shard, kernel, backend).run(endpoint);
+    eprintln!("worker: done");
+    Ok(())
+}
+
+/// `diskpca shard <dataset>`: write power-law shards to disk.
+pub fn shard(cfg: &Config, dataset: &str) -> anyhow::Result<()> {
+    let scale = cfg.f64_or("scale", 0.1);
+    let seed = cfg.u64_or("seed", 0xd15c);
+    let spec = data::by_name(dataset, scale)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let parts = cfg.usize_or("parts", spec.s);
+    let out = cfg.str_or("out", "shards");
+    std::fs::create_dir_all(out)?;
+    let global = spec.generate(seed);
+    let shards = data::partition_power_law(&global, parts, seed);
+    for (i, sh) in shards.iter().enumerate() {
+        let path = format!("{out}/{dataset}_{i:03}.bin");
+        data::io::save(sh, &path)?;
+        println!("{path}: {} points", sh.len());
+    }
+    Ok(())
+}
+
+/// In-process end-to-end check of the multi-process path (used by the
+/// integration test and `examples/multiprocess.rs`): spawns worker
+/// *threads* that connect through real sockets to a listening master.
+pub fn selftest(cfg: &Config) -> anyhow::Result<(f64, f64)> {
+    let s = cfg.usize_or("workers", 3);
+    let kernel = kernel_from_flags(cfg)?;
+    let params = cfg.params();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    drop(listener); // free the port for `listen` (race-free enough on loopback CI)
+
+    let scale = cfg.f64_or("scale", 0.05);
+    let spec = data::by_name(cfg.str_or("dataset", "protein_like"), scale)
+        .ok_or_else(|| anyhow::anyhow!("dataset"))?;
+    let global = spec.generate(cfg.u64_or("seed", 1));
+    let shards = data::partition_power_law(&global, s, 1);
+
+    let addr2 = addr.clone();
+    let master_thread = std::thread::spawn(move || -> anyhow::Result<(f64, f64)> {
+        let links = tcp::listen(&addr2, s)?;
+        let cluster = Cluster::new(links, CommStats::new());
+        let _ = dis_kpca(&cluster, kernel, &params);
+        let res = dis_eval(&cluster);
+        cluster.shutdown();
+        Ok(res)
+    });
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let worker_threads: Vec<_> = shards
+        .into_iter()
+        .map(|sh| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let be = Arc::new(crate::runtime::NativeBackend::new());
+                let ep = tcp::connect(&addr).expect("connect");
+                Worker::new(sh, kernel, be).run(ep);
+            })
+        })
+        .collect();
+    let res = master_thread.join().expect("master panicked")?;
+    for w in worker_threads {
+        w.join().expect("worker panicked");
+    }
+    Ok(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_flags() {
+        let mut cfg = Config::new();
+        cfg.set("kernel", "poly");
+        cfg.set("q", "3");
+        assert!(matches!(kernel_from_flags(&cfg).unwrap(), Kernel::Poly { q: 3 }));
+        cfg.set("kernel", "nope");
+        assert!(kernel_from_flags(&cfg).is_err());
+    }
+
+    #[test]
+    fn multiprocess_selftest() {
+        let mut cfg = Config::new();
+        cfg.set("workers", "3");
+        cfg.set("kernel", "gauss");
+        cfg.set("gamma", "0.6");
+        cfg.set("k", "3");
+        cfg.set("t", "16");
+        cfg.set("p", "32");
+        cfg.set("n_lev", "8");
+        cfg.set("n_adapt", "12");
+        cfg.set("m_rff", "128");
+        cfg.set("t2", "64");
+        let (err, trace) = selftest(&cfg).unwrap();
+        assert!(err >= 0.0 && err < trace, "{err} vs {trace}");
+    }
+
+    #[test]
+    fn shard_writes_files() {
+        let mut cfg = Config::new();
+        let dir = std::env::temp_dir().join("diskpca_shards");
+        cfg.set("out", dir.to_str().unwrap());
+        cfg.set("parts", "3");
+        cfg.set("scale", "0.02");
+        shard(&cfg, "protein_like").unwrap();
+        for i in 0..3 {
+            let p = dir.join(format!("protein_like_{i:03}.bin"));
+            assert!(p.exists());
+            let d = crate::data::io::load(&p).unwrap();
+            assert_eq!(d.dim(), 9);
+        }
+    }
+}

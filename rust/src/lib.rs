@@ -1,0 +1,36 @@
+//! # diskpca — Communication-Efficient Distributed Kernel PCA
+//!
+//! Production-quality reproduction of Balcan, Liang, Song, Woodruff,
+//! Xie, *"Communication Efficient Distributed Kernel Principal
+//! Component Analysis"* (KDD 2016), as a three-layer rust + JAX +
+//! Pallas stack:
+//!
+//! - **L3 (this crate)**: the paper's master–worker protocol — kernel
+//!   subspace embeddings, distributed leverage scores, representative
+//!   point sampling, distributed low-rank approximation — with exact
+//!   per-word communication accounting, plus every substrate it needs
+//!   (dense/sparse linear algebra, sketches, PRNG, transports,
+//!   dataset generators, evaluation).
+//! - **L2/L1**: JAX compute graphs with Pallas kernels, AOT-lowered to
+//!   HLO-text artifacts (`make artifacts`) and executed from rust via
+//!   PJRT ([`runtime`]). Python never runs on the request path.
+//!
+//! Start at [`coordinator`] for the headline algorithm, or
+//! `examples/quickstart.rs` for a runnable tour.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod embed;
+pub mod experiments;
+pub mod json;
+pub mod kernels;
+pub mod launcher;
+pub mod linalg;
+pub mod rng;
+pub mod runtime;
+pub mod sketch;
+pub mod sparse;

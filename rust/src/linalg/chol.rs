@@ -1,0 +1,112 @@
+//! Cholesky factorization of SPD matrices.
+//!
+//! K(Y,Y) = RᵀR drives the implicit Gram–Schmidt basis of span φ(Y)
+//! (paper Appendix A). Kernel gram matrices are only *semi*-definite,
+//! so `chol_psd` adds an adaptive jitter on the diagonal — standard
+//! practice, and equivalent to intersecting with a negligible ridge.
+
+use super::Mat;
+
+/// Plain Cholesky: `A = L·Lᵀ`, error if not positive definite.
+///
+/// The update term Σₖ L[i,k]·L[j,k] is a dot over two *contiguous*
+/// row prefixes, so it runs through the 4-accumulator [`super::dot`]
+/// (§Perf #6: every worker factorizes K(Y,Y) in disLR, |Y|³/6 flops
+/// each — the scalar chain was the last hot spot in `project`).
+pub fn cholesky(a: &Mat) -> Result<Mat, String> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n);
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let s = {
+                let ri = &l.row(i)[..j];
+                let rj = &l.row(j)[..j];
+                a[(i, j)] - super::dot(ri, rj)
+            };
+            if i == j {
+                if s <= 0.0 {
+                    return Err(format!("not SPD at pivot {i}: {s}"));
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Cholesky with adaptive jitter for PSD (gram) matrices.
+/// Returns upper-triangular `R` with `A + jitter·I = RᵀR`, plus the
+/// jitter actually used.
+pub fn chol_psd(a: &Mat) -> (Mat, f64) {
+    let n = a.rows();
+    let scale = (0..n).map(|i| a[(i, i)].abs()).fold(0.0, f64::max).max(1e-12);
+    let mut jitter = 0.0;
+    loop {
+        let mut aj = a.clone();
+        if jitter > 0.0 {
+            for i in 0..n {
+                aj[(i, i)] += jitter;
+            }
+        }
+        match cholesky(&aj) {
+            Ok(l) => return (l.transpose(), jitter),
+            Err(_) => {
+                jitter = if jitter == 0.0 { scale * 1e-10 } else { jitter * 10.0 };
+                assert!(
+                    jitter < scale,
+                    "cholesky failed even with jitter {jitter} (scale {scale})"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::seed_from(1);
+        let b = Mat::from_fn(8, 5, |_, _| rng.normal());
+        let a = b.matmul_at_b(&b); // 5x5 SPD (whp)
+        let l = cholesky(&a).unwrap();
+        let back = l.matmul(&l.transpose());
+        assert!(back.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig: 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn chol_psd_handles_singular() {
+        // rank-1 gram matrix
+        let v = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let a = v.matmul_at_b(&v);
+        let (r, jitter) = chol_psd(&a);
+        assert!(jitter > 0.0);
+        let back = r.matmul_at_b(&r); // RᵀR... r is upper: A ≈ RᵀR
+        assert!(back.max_abs_diff(&a) < 1e-5);
+    }
+
+    #[test]
+    fn chol_psd_upper_triangular() {
+        let mut rng = Rng::seed_from(2);
+        let b = Mat::from_fn(10, 6, |_, _| rng.normal());
+        let a = b.matmul_at_b(&b);
+        let (r, _) = chol_psd(&a);
+        for i in 0..6 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+        assert!(r.matmul_at_b(&r).max_abs_diff(&a) < 1e-8);
+    }
+}

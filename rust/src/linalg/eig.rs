@@ -1,0 +1,181 @@
+//! Symmetric eigensolvers.
+//!
+//! Batch KPCA (the paper's small-dataset ground truth, Figs 2–3) needs
+//! the spectrum of the full n×n gram matrix. Two paths:
+//! - `eigh`: cyclic Jacobi — exact, O(n³) with a big constant; used
+//!   for n up to ~500 and as the test oracle.
+//! - `top_eigh`: randomized subspace iteration — top-k eigenpairs of a
+//!   PSD matrix, O(n²·(k+p)·iters); used for the n in the thousands
+//!   that our scaled "small" datasets have.
+
+use super::{qr::qr_thin, Mat};
+use crate::rng::Rng;
+
+/// Full symmetric eigendecomposition via cyclic Jacobi.
+/// Returns `(eigenvalues desc, eigenvectors as columns)`.
+pub fn eigh(a: &Mat) -> (Vec<f64>, Mat) {
+    let n = a.rows();
+    assert_eq!(a.cols(), n);
+    let mut m = a.clone();
+    let mut v = Mat::identity(n);
+    let eps = 1e-14;
+    for _sweep in 0..100 {
+        // off-diagonal Frobenius mass
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        let scale: f64 = (0..n).map(|i| m[(i, i)] * m[(i, i)]).sum::<f64>().max(1e-300);
+        if off <= eps * eps * scale {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let theta = (m[(q, q)] - m[(p, p)]) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (1.0 + theta * theta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // M <- JᵀMJ over rows/cols p, q
+                for i in 0..n {
+                    let mip = m[(i, p)];
+                    let miq = m[(i, q)];
+                    m[(i, p)] = c * mip - s * miq;
+                    m[(i, q)] = s * mip + c * miq;
+                }
+                for j in 0..n {
+                    let mpj = m[(p, j)];
+                    let mqj = m[(q, j)];
+                    m[(p, j)] = c * mpj - s * mqj;
+                    m[(q, j)] = s * mpj + c * mqj;
+                }
+                for i in 0..n {
+                    let vip = v[(i, p)];
+                    let viq = v[(i, q)];
+                    v[(i, p)] = c * vip - s * viq;
+                    v[(i, q)] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    let mut vals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| vals[j].partial_cmp(&vals[i]).unwrap());
+    let vecs = v.select_cols(&order);
+    vals = order.iter().map(|&i| vals[i]).collect();
+    (vals, vecs)
+}
+
+/// Top-k eigenpairs of a symmetric PSD matrix by randomized subspace
+/// iteration with oversampling `p` and `iters` power steps.
+pub fn top_eigh(a: &Mat, k: usize, rng: &mut Rng) -> (Vec<f64>, Mat) {
+    let n = a.rows();
+    assert_eq!(a.cols(), n);
+    let k = k.min(n);
+    let p = (k + 8).min(n);
+    let iters = 12;
+    let g = Mat::from_fn(n, p, |_, _| rng.normal());
+    let mut q = qr_thin(&a.matmul(&g)).0;
+    for _ in 0..iters {
+        q = qr_thin(&a.matmul(&q)).0;
+    }
+    // Rayleigh–Ritz on the subspace.
+    let b = q.matmul_at_b(&a.matmul(&q)); // p×p
+    let (vals, vecs) = eigh(&b);
+    let topv = vecs.block(p, k);
+    (vals[..k].to_vec(), q.matmul(&topv))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_sym(rng: &mut Rng, n: usize) -> Mat {
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let mut s = b.matmul_at_b(&b);
+        s.scale(1.0 / n as f64);
+        s
+    }
+
+    #[test]
+    fn eigh_reconstructs() {
+        let mut rng = Rng::seed_from(1);
+        let a = rand_sym(&mut rng, 12);
+        let (vals, vecs) = eigh(&a);
+        // A·V = V·diag(vals)
+        let av = a.matmul(&vecs);
+        let mut vd = vecs.clone();
+        for j in 0..12 {
+            for i in 0..12 {
+                vd[(i, j)] *= vals[j];
+            }
+        }
+        assert!(av.max_abs_diff(&vd) < 1e-9);
+        // orthonormal
+        assert!(vecs.matmul_at_b(&vecs).max_abs_diff(&Mat::identity(12)) < 1e-10);
+        // trace preserved
+        let tr: f64 = (0..12).map(|i| a[(i, i)]).sum();
+        assert!((vals.iter().sum::<f64>() - tr).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eigh_known_2x2() {
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (vals, _) = eigh(&a);
+        assert!((vals[0] - 3.0).abs() < 1e-12);
+        assert!((vals[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eigh_sorted_descending() {
+        let mut rng = Rng::seed_from(2);
+        let a = rand_sym(&mut rng, 9);
+        let (vals, _) = eigh(&a);
+        for i in 1..vals.len() {
+            assert!(vals[i - 1] >= vals[i] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn top_eigh_matches_full_for_decaying_spectrum() {
+        let mut rng = Rng::seed_from(3);
+        let n = 40;
+        // PSD with geometric spectral decay — favourable for power iters.
+        let b = Mat::from_fn(n, n, |_, _| rng.normal());
+        let (q, _) = qr_thin(&b);
+        let mut a = Mat::zeros(n, n);
+        for l in 0..n {
+            let lam = 2.0f64.powi(-(l as i32));
+            for i in 0..n {
+                for j in 0..n {
+                    a[(i, j)] += lam * q[(i, l)] * q[(j, l)];
+                }
+            }
+        }
+        let (full_vals, _) = eigh(&a);
+        let (top_vals, top_vecs) = top_eigh(&a, 5, &mut rng);
+        for i in 0..5 {
+            assert!(
+                (top_vals[i] - full_vals[i]).abs() < 1e-8 * full_vals[0],
+                "eig {i}: {} vs {}",
+                top_vals[i],
+                full_vals[i]
+            );
+        }
+        // residual ‖A·v − λv‖ small
+        let av = a.matmul(&top_vecs);
+        for j in 0..5 {
+            let mut res = 0.0;
+            for i in 0..n {
+                let r = av[(i, j)] - top_vals[j] * top_vecs[(i, j)];
+                res += r * r;
+            }
+            assert!(res.sqrt() < 1e-7, "col {j} residual {res}");
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Radix-2 complex FFT + fast Walsh–Hadamard transform.
+//!
+//! The FFT backs the native TensorSketch (polynomial-kernel subspace
+//! embedding, paper Lemma 4); the FWHT backs the SRHT sketch option.
+//! Both are iterative in-place transforms over power-of-two lengths —
+//! sketch dims are chosen as powers of two throughout.
+
+use std::f64::consts::PI;
+
+/// Complex number as (re, im) — no external num crate.
+pub type C = (f64, f64);
+
+#[inline]
+fn cmul(a: C, b: C) -> C {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+
+/// In-place iterative radix-2 FFT. `inverse` applies conjugate twiddles
+/// and the 1/n scale.
+pub fn fft_inplace(x: &mut [C], inverse: bool) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fft length {n} not a power of two");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            x.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let wlen = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w = (1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = x[i + k];
+                let v = cmul(x[i + k + len / 2], w);
+                x[i + k] = (u.0 + v.0, u.1 + v.1);
+                x[i + k + len / 2] = (u.0 - v.0, u.1 - v.1);
+                w = cmul(w, wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let inv = 1.0 / n as f64;
+        for v in x.iter_mut() {
+            v.0 *= inv;
+            v.1 *= inv;
+        }
+    }
+}
+
+/// FFT of a real vector → complex spectrum.
+pub fn fft_real(x: &[f64]) -> Vec<C> {
+    let mut c: Vec<C> = x.iter().map(|&v| (v, 0.0)).collect();
+    fft_inplace(&mut c, false);
+    c
+}
+
+/// Inverse FFT, returning only the real parts.
+pub fn ifft_to_real(mut x: Vec<C>) -> Vec<f64> {
+    fft_inplace(&mut x, true);
+    x.into_iter().map(|c| c.0).collect()
+}
+
+/// In-place fast Walsh–Hadamard transform (unnormalized).
+pub fn fwht_inplace(x: &mut [f64]) {
+    let n = x.len();
+    assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for k in i..i + h {
+                let a = x[k];
+                let b = x[k + h];
+                x[k] = a + b;
+                x[k + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h <<= 1;
+    }
+}
+
+/// Circular convolution via FFT — the TensorSketch combine step.
+pub fn circular_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    let fa = fft_real(a);
+    let fb = fft_real(b);
+    let prod: Vec<C> = fa.iter().zip(&fb).map(|(&x, &y)| cmul(x, y)).collect();
+    ifft_to_real(prod)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn fft_roundtrip() {
+        let mut rng = Rng::seed_from(1);
+        for &n in &[1usize, 2, 8, 64, 256] {
+            let orig: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let spec = fft_real(&orig);
+            let back = ifft_to_real(spec);
+            for i in 0..n {
+                assert!((orig[i] - back[i]).abs() < 1e-10, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fft_known_impulse() {
+        // FFT of impulse = all ones
+        let spec = fft_real(&[1.0, 0.0, 0.0, 0.0]);
+        for &(re, im) in &spec {
+            assert!((re - 1.0).abs() < 1e-12 && im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_parseval() {
+        let mut rng = Rng::seed_from(2);
+        let x: Vec<f64> = (0..128).map(|_| rng.normal()).collect();
+        let spec = fft_real(&x);
+        let time_e: f64 = x.iter().map(|v| v * v).sum();
+        let freq_e: f64 = spec.iter().map(|c| c.0 * c.0 + c.1 * c.1).sum::<f64>() / 128.0;
+        assert!((time_e - freq_e).abs() < 1e-9 * time_e);
+    }
+
+    #[test]
+    fn convolution_matches_naive() {
+        let mut rng = Rng::seed_from(3);
+        let n = 16;
+        let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let fast = circular_convolve(&a, &b);
+        for k in 0..n {
+            let mut naive = 0.0;
+            for i in 0..n {
+                naive += a[i] * b[(k + n - i) % n];
+            }
+            assert!((fast[k] - naive).abs() < 1e-9, "k={k}");
+        }
+    }
+
+    #[test]
+    fn fwht_involution_up_to_scale() {
+        let mut rng = Rng::seed_from(4);
+        let n = 64;
+        let orig: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut x = orig.clone();
+        fwht_inplace(&mut x);
+        fwht_inplace(&mut x);
+        for i in 0..n {
+            assert!((x[i] / n as f64 - orig[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fwht_orthogonality() {
+        // H·Hᵀ = n·I — check via two basis vectors.
+        let n = 8;
+        let mut e0 = vec![0.0; n];
+        e0[0] = 1.0;
+        fwht_inplace(&mut e0);
+        let mut e1 = vec![0.0; n];
+        e1[1] = 1.0;
+        fwht_inplace(&mut e1);
+        let dot: f64 = e0.iter().zip(&e1).map(|(a, b)| a * b).sum();
+        assert!(dot.abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fft_rejects_non_power_of_two() {
+        fft_real(&[1.0, 2.0, 3.0]);
+    }
+}

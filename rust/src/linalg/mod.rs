@@ -1,0 +1,56 @@
+//! Dense linear algebra substrate (built from scratch — no external
+//! LA crates offline). Sized for the coordinator's master-side math:
+//! matrices up to a few thousand square.
+
+mod mat;
+pub mod chol;
+pub mod eig;
+pub mod fft;
+pub mod qr;
+mod svd;
+
+pub use chol::{chol_psd, cholesky};
+pub use eig::{eigh, top_eigh};
+pub use mat::{dot, Mat};
+pub use qr::{inv_upper, qr_r_only, qr_thin, solve_lower, solve_upper, solve_upper_transpose_mat};
+pub use svd::{svd, top_k_left_singular};
+
+/// Exact statistical leverage scores of the columns of `e` (t×n,
+/// t ≤ n): ℓⱼ = Eⱼᵀ(EEᵀ)⁺Eⱼ = ‖(Rᵀ)⁻¹Eⱼ‖² with RᵀR = EEᵀ. The
+/// reference the sketched disLS scores are validated against.
+pub fn exact_leverage_scores(e: &Mat) -> Vec<f64> {
+    let gram = e.matmul_a_bt(e);
+    let (r, _) = chol_psd(&gram);
+    solve_upper_transpose_mat(&r, e).col_norms_sq()
+}
+
+#[cfg(test)]
+mod leverage_tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn leverage_scores_sum_to_rank_and_bounded() {
+        let mut rng = Rng::seed_from(1);
+        let e = Mat::from_fn(5, 30, |_, _| rng.normal());
+        let l = exact_leverage_scores(&e);
+        // Σℓⱼ = rank(E) = 5 for generic E; 0 ≤ ℓⱼ ≤ 1
+        let sum: f64 = l.iter().sum();
+        assert!((sum - 5.0).abs() < 1e-6, "sum {sum}");
+        for &v in &l {
+            assert!((-1e-9..=1.0 + 1e-9).contains(&v), "score {v}");
+        }
+    }
+
+    #[test]
+    fn duplicated_heavy_column_splits_leverage() {
+        // a column duplicated twice shares its leverage mass
+        let mut rng = Rng::seed_from(2);
+        let mut e = Mat::from_fn(3, 10, |_, _| rng.normal());
+        let c = e.col(0);
+        e.set_col(9, &c);
+        let l = exact_leverage_scores(&e);
+        assert!((l[0] - l[9]).abs() < 1e-8);
+        assert!(l[0] < 1.0 - 1e-6, "duplicate can't have full leverage");
+    }
+}

@@ -1,0 +1,267 @@
+//! Householder QR + triangular solves.
+//!
+//! Used by the master in disLS (QR of the stacked sketched embeddings,
+//! paper Alg. 1 step 2), for the implicit Gram–Schmidt / Cholesky of
+//! K(Y,Y) (Appendix A), and inside the randomized eigensolver.
+
+use super::{mat::dot, Mat};
+
+/// Thin QR of an m×n matrix with m ≥ n: returns `(Q: m×n, R: n×n)`
+/// with `A = Q·R`, Q having orthonormal columns, R upper-triangular.
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows(), a.cols());
+    assert!(m >= n, "qr_thin needs m >= n, got {m}x{n}");
+    let mut r = a.clone();
+    // Store Householder vectors in-place below the diagonal; betas aside.
+    let mut betas = vec![0.0f64; n];
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Build the Householder vector for column k.
+        let mut x: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
+        let alpha = -x[0].signum() * x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let mut v = x.clone();
+        v[0] -= alpha;
+        let vnorm_sq: f64 = v.iter().map(|t| t * t).sum();
+        let beta = if vnorm_sq > 0.0 { 2.0 / vnorm_sq } else { 0.0 };
+        // Apply H = I - beta v vᵀ to the trailing block of R.
+        for j in k..n {
+            let mut s = 0.0;
+            for i in k..m {
+                s += v[i - k] * r[(i, j)];
+            }
+            s *= beta;
+            for i in k..m {
+                r[(i, j)] -= s * v[i - k];
+            }
+        }
+        x.clear();
+        betas[k] = beta;
+        vs.push(v);
+    }
+    // Extract R (upper n×n) and zero below.
+    let rmat = Mat::from_fn(n, n, |i, j| if j >= i { r[(i, j)] } else { 0.0 });
+    // Accumulate Q = H_0 H_1 … H_{n-1} · [I_n; 0].
+    let mut q = Mat::from_fn(m, n, |i, j| if i == j { 1.0 } else { 0.0 });
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let beta = betas[k];
+        if beta == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut s = 0.0;
+            for i in k..m {
+                s += v[i - k] * q[(i, j)];
+            }
+            s *= beta;
+            for i in k..m {
+                q[(i, j)] -= s * v[i - k];
+            }
+        }
+    }
+    (q, rmat)
+}
+
+/// R-only QR (the master never needs Q in disLS): returns the n×n
+/// upper-triangular factor of an m×n matrix, m ≥ n.
+///
+/// For tall inputs (m ≫ n — the disLS stack is (s·p)×t) this is
+/// CholeskyQR: R = chol(AᵀA), identical to the Householder R up to
+/// column signs and exact for the uses here (only RᵀR = AᵀA matters:
+/// leverage scores are ‖(Zᵀ)⁻¹E‖², invariant to any orthogonal factor
+/// on the left). Householder walks columns of a row-major matrix —
+/// stride-m gathers; AᵀA is one cache-blocked pass (§Perf #7).
+pub fn qr_r_only(a: &Mat) -> Mat {
+    let (m, n) = (a.rows(), a.cols());
+    assert!(m >= n);
+    if m > 4 * n {
+        let gram = a.matmul_at_b(a);
+        let (r, _jitter) = super::chol_psd(&gram);
+        return r;
+    }
+    let mut r = a.clone();
+    for k in 0..n {
+        let x0 = r[(k, k)];
+        let norm: f64 = (k..m).map(|i| r[(i, k)] * r[(i, k)]).sum::<f64>().sqrt();
+        if norm == 0.0 {
+            continue;
+        }
+        let alpha = -x0.signum() * norm;
+        let mut v: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
+        v[0] -= alpha;
+        let vnorm_sq: f64 = v.iter().map(|t| t * t).sum();
+        if vnorm_sq == 0.0 {
+            continue;
+        }
+        let beta = 2.0 / vnorm_sq;
+        for j in k..n {
+            let mut s = 0.0;
+            for i in k..m {
+                s += v[i - k] * r[(i, j)];
+            }
+            s *= beta;
+            for i in k..m {
+                r[(i, j)] -= s * v[i - k];
+            }
+        }
+    }
+    Mat::from_fn(n, n, |i, j| if j >= i { r[(i, j)] } else { 0.0 })
+}
+
+/// Solve `U x = b` for upper-triangular U (back substitution).
+pub fn solve_upper(u: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = u.rows();
+    assert_eq!(u.cols(), n);
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in (0..n).rev() {
+        for j in i + 1..n {
+            x[i] -= u[(i, j)] * x[j];
+        }
+        let d = u[(i, i)];
+        x[i] /= if d.abs() > 1e-300 { d } else { 1e-300_f64.copysign(d) };
+    }
+    x
+}
+
+/// Solve `L x = b` for lower-triangular L (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.len(), n);
+    let mut x = b.to_vec();
+    for i in 0..n {
+        for j in 0..i {
+            x[i] -= l[(i, j)] * x[j];
+        }
+        let d = l[(i, i)];
+        x[i] /= if d.abs() > 1e-300 { d } else { 1e-300_f64.copysign(d) };
+    }
+    x
+}
+
+/// Inverse of an upper-triangular matrix.
+pub fn inv_upper(u: &Mat) -> Mat {
+    let n = u.rows();
+    let mut inv = Mat::zeros(n, n);
+    for j in 0..n {
+        let mut e = vec![0.0; n];
+        e[j] = 1.0;
+        inv.set_col(j, &solve_upper(u, &e));
+    }
+    inv
+}
+
+/// Solve `Uᵀ X = B` column-wise — i.e. X = U⁻ᵀ B (used for
+/// Π = R⁻ᵀ K(Y,A) and the (Zᵀ)⁻¹E leverage computation).
+///
+/// Perf note (§Perf): transposes U once so the inner reduction is a
+/// contiguous prefix dot instead of a stride-n gather.
+pub fn solve_upper_transpose_mat(u: &Mat, b: &Mat) -> Mat {
+    let n = u.rows();
+    assert_eq!(b.rows(), n);
+    let l = u.transpose(); // lower-triangular, rows contiguous
+    let mut out = Mat::zeros(n, b.cols());
+    let mut x = vec![0.0; n];
+    for c in 0..b.cols() {
+        for i in 0..n {
+            let lrow = l.row(i);
+            let d = lrow[i];
+            let s = b[(i, c)] - dot(&lrow[..i], &x[..i]);
+            x[i] = s / if d.abs() > 1e-300 { d } else { 1e-300_f64.copysign(d) };
+        }
+        out.set_col(c, &x);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randmat(rng: &mut Rng, m: usize, n: usize) -> Mat {
+        Mat::from_fn(m, n, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::seed_from(1);
+        for &(m, n) in &[(5, 5), (10, 4), (30, 7), (4, 1)] {
+            let a = randmat(&mut rng, m, n);
+            let (q, r) = qr_thin(&a);
+            let qr = q.matmul(&r);
+            assert!(qr.max_abs_diff(&a) < 1e-10, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn qr_q_orthonormal() {
+        let mut rng = Rng::seed_from(2);
+        let a = randmat(&mut rng, 20, 6);
+        let (q, _) = qr_thin(&a);
+        let qtq = q.matmul_at_b(&q);
+        assert!(qtq.max_abs_diff(&Mat::identity(6)) < 1e-10);
+    }
+
+    #[test]
+    fn qr_r_upper_triangular() {
+        let mut rng = Rng::seed_from(3);
+        let a = randmat(&mut rng, 8, 8);
+        let (_, r) = qr_thin(&a);
+        for i in 0..8 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn r_only_matches_full_qr_up_to_signs() {
+        let mut rng = Rng::seed_from(4);
+        let a = randmat(&mut rng, 12, 5);
+        let (_, r1) = qr_thin(&a);
+        let r2 = qr_r_only(&a);
+        // RᵀR = AᵀA is sign-invariant — compare gramians.
+        let g1 = r1.matmul_at_b(&r1);
+        let g2 = r2.matmul_at_b(&r2);
+        assert!(g1.max_abs_diff(&g2) < 1e-9);
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let u = Mat::from_vec(3, 3, vec![2.0, 1.0, 1.0, 0.0, 3.0, 2.0, 0.0, 0.0, 4.0]);
+        let x = vec![1.0, -1.0, 2.0];
+        let b = u.matvec(&x);
+        let got = solve_upper(&u, &b);
+        for i in 0..3 {
+            assert!((got[i] - x[i]).abs() < 1e-12);
+        }
+        let l = u.transpose();
+        let bl = l.matvec(&x);
+        let gotl = solve_lower(&l, &bl);
+        for i in 0..3 {
+            assert!((gotl[i] - x[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn inv_upper_correct() {
+        let mut rng = Rng::seed_from(5);
+        let a = randmat(&mut rng, 6, 6);
+        let (_, r) = qr_thin(&a);
+        let rinv = inv_upper(&r);
+        assert!(r.matmul(&rinv).max_abs_diff(&Mat::identity(6)) < 1e-8);
+    }
+
+    #[test]
+    fn solve_upper_transpose_mat_correct() {
+        let mut rng = Rng::seed_from(6);
+        let a = randmat(&mut rng, 7, 4);
+        let (_, r) = qr_thin(&a.matmul_at_b(&a)); // SPD-ish → well-conditioned R
+        let b = randmat(&mut rng, 4, 5);
+        let x = solve_upper_transpose_mat(&r, &b);
+        let back = r.transpose().matmul(&x);
+        assert!(back.max_abs_diff(&b) < 1e-8);
+    }
+}

@@ -1,0 +1,195 @@
+//! Singular value decomposition via one-sided Jacobi (Hestenes).
+//!
+//! The master SVDs `ΠT ∈ R^{|Y|×w}` in disLR (paper Alg. 3 step 2) —
+//! a few-hundred-square problem, well inside one-sided Jacobi's
+//! comfort zone, and Jacobi gives high relative accuracy on the small
+//! singular values we truncate at.
+
+use super::Mat;
+
+/// Thin SVD: `A = U · diag(s) · Vᵀ` with U: m×r, s: r, V: n×r where
+/// r = min(m, n); singular values sorted descending.
+pub fn svd(a: &Mat) -> (Mat, Vec<f64>, Mat) {
+    let (m, n) = (a.rows(), a.cols());
+    if m < n {
+        // SVD of Aᵀ and swap factors.
+        let (u, s, v) = svd(&a.transpose());
+        return (v, s, u);
+    }
+    // One-sided Jacobi orthogonalizes the columns of W = A·V.
+    let mut w = a.clone();
+    let mut v = Mat::identity(n);
+    let eps = 1e-13;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries over columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                // Jacobi rotation zeroing the (p,q) gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q)];
+                    w[(i, p)] = c * wp - s * wq;
+                    w[(i, q)] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+    // Singular values = column norms of W; U = W normalized.
+    let mut sv: Vec<f64> = w.col_norms_sq().iter().map(|x| x.sqrt()).collect();
+    let mut u = w;
+    for j in 0..n {
+        let s = sv[j];
+        if s > 1e-300 {
+            for i in 0..m {
+                u[(i, j)] /= s;
+            }
+        }
+    }
+    // Sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| sv[j].partial_cmp(&sv[i]).unwrap());
+    let u = u.select_cols(&order);
+    let v = v.select_cols(&order);
+    sv = order.iter().map(|&i| sv[i]).collect();
+    (u, sv, v)
+}
+
+/// Top-k left singular vectors of `A` (m×n) — what disLR's master
+/// broadcasts as `W` (paper Alg. 3).
+///
+/// For wide inputs (n ≫ m, the disLR shape |Y|×s·w) the left vectors
+/// are the top eigenvectors of the m×m Gram A·Aᵀ, which costs one
+/// blocked matmul (m²n) plus a small randomized eigensolve — the
+/// Gram squaring loses relative accuracy only on the *small* singular
+/// values we truncate anyway. (§Perf #2: the previous Householder QR
+/// of Aᵀ was 2nm² scalar flops and dominated the whole disKPCA wall
+/// time at |Y| ≳ 300 — 90 s → <1 s on the susy |Y|=350 run.)
+pub fn top_k_left_singular(a: &Mat, k: usize) -> (Mat, Vec<f64>) {
+    let (m, n) = (a.rows(), a.cols());
+    let k = k.min(m.min(n));
+    if n > 2 * m {
+        let g = a.gram_self(); // m×m, symmetric half the work
+        let mut rng = crate::rng::Rng::seed_from(0x705f_u64 ^ ((m as u64) << 16) ^ n as u64);
+        let (vals, vecs) = super::top_eigh(&g, k, &mut rng);
+        let s: Vec<f64> = vals.iter().map(|&v| v.max(0.0).sqrt()).collect();
+        return (vecs.block(m, k), s);
+    }
+    let (u, s, _) = svd(a);
+    (u.block(m, k), s[..k].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randmat(rng: &mut Rng, m: usize, n: usize) -> Mat {
+        Mat::from_fn(m, n, |_, _| rng.normal())
+    }
+
+    fn check_svd(a: &Mat, tol: f64) {
+        let (u, s, v) = svd(a);
+        let r = a.rows().min(a.cols());
+        assert_eq!(s.len(), r);
+        // reconstruct
+        let mut us = u.clone();
+        for j in 0..r {
+            for i in 0..u.rows() {
+                us[(i, j)] *= s[j];
+            }
+        }
+        let back = us.matmul_a_bt(&v);
+        assert!(back.max_abs_diff(a) < tol, "recon err {}", back.max_abs_diff(a));
+        // orthonormal factors
+        assert!(u.matmul_at_b(&u).max_abs_diff(&Mat::identity(r)) < tol);
+        assert!(v.matmul_at_b(&v).max_abs_diff(&Mat::identity(r)) < tol);
+        // descending
+        for i in 1..s.len() {
+            assert!(s[i - 1] >= s[i] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn svd_reconstructs_various_shapes() {
+        let mut rng = Rng::seed_from(1);
+        for &(m, n) in &[(6, 6), (20, 5), (5, 20), (1, 4), (4, 1), (12, 12)] {
+            let a = randmat(&mut rng, m, n);
+            check_svd(&a, 1e-9);
+        }
+    }
+
+    #[test]
+    fn svd_known_diagonal() {
+        let a = Mat::from_vec(2, 2, vec![3.0, 0.0, 0.0, -2.0]);
+        let (_, s, _) = svd(&a);
+        assert!((s[0] - 3.0).abs() < 1e-12);
+        assert!((s[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn svd_low_rank() {
+        let mut rng = Rng::seed_from(2);
+        let b = randmat(&mut rng, 10, 2);
+        let c = randmat(&mut rng, 2, 8);
+        let a = b.matmul(&c); // rank 2
+        let (_, s, _) = svd(&a);
+        assert!(s[2] < 1e-9 * s[0]);
+        check_svd(&a, 1e-9);
+    }
+
+    #[test]
+    fn top_k_matches_full() {
+        let mut rng = Rng::seed_from(3);
+        let a = randmat(&mut rng, 8, 40);
+        let (uk, sk) = top_k_left_singular(&a, 3);
+        let (u, s, _) = svd(&a);
+        for j in 0..3 {
+            assert!((sk[j] - s[j]).abs() < 1e-8);
+            // compare up to sign
+            let mut dot = 0.0;
+            for i in 0..8 {
+                dot += uk[(i, j)] * u[(i, j)];
+            }
+            assert!(dot.abs() > 1.0 - 1e-8, "col {j} dot {dot}");
+        }
+    }
+
+    #[test]
+    fn singular_values_match_eigs_of_gram() {
+        let mut rng = Rng::seed_from(4);
+        let a = randmat(&mut rng, 9, 5);
+        let (_, s, _) = svd(&a);
+        let g = a.matmul_at_b(&a);
+        // tr(AᵀA) = Σ sᵢ²
+        let tr: f64 = (0..5).map(|i| g[(i, i)]).sum();
+        let ssum: f64 = s.iter().map(|x| x * x).sum();
+        assert!((tr - ssum).abs() < 1e-9 * tr.max(1.0));
+    }
+}

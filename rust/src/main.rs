@@ -1,0 +1,67 @@
+//! `diskpca` launcher: CLI → experiment drivers.
+//!
+//! The binary is self-contained after `make artifacts` — python never
+//! runs from here (the XLA backend loads pre-lowered HLO text).
+
+use diskpca::cli;
+use diskpca::experiments::{self, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = cli::parse(args).map_err(|e| anyhow::anyhow!(e))?;
+    if parsed.command == "help" || parsed.command == "--help" || parsed.command == "-h" {
+        println!("{}", cli::USAGE);
+        return Ok(());
+    }
+    let ctx = Ctx::from_config(&parsed.config)?;
+    let dataset = parsed
+        .positionals
+        .first()
+        .map(String::as_str)
+        .unwrap_or("har_like");
+    match parsed.command.as_str() {
+        "run" => experiments::run_one(&ctx, dataset)?,
+        "table1" => experiments::table1(&ctx)?,
+        "fig2" => experiments::fig_small_vs_batch(&ctx, "poly", "fig2")?,
+        "fig3" => experiments::fig_small_vs_batch(&ctx, "gauss", "fig3")?,
+        "fig4" => experiments::fig_comm_tradeoff(
+            &ctx,
+            "poly",
+            &["bow_like", "mnist8m_like", "susy_like", "higgs_like"],
+            "fig4",
+        )?,
+        "fig5" => experiments::fig_comm_tradeoff(
+            &ctx,
+            "gauss",
+            &["bow_like", "mnist8m_like", "susy_like", "higgs_like"],
+            "fig5",
+        )?,
+        "fig6" => experiments::fig_comm_tradeoff(
+            &ctx,
+            "arccos",
+            &["news20_like", "ctslice_like"],
+            "fig6",
+        )?,
+        "fig7" => experiments::fig7(&ctx)?,
+        "fig8" => experiments::fig8(&ctx)?,
+        // extension (not in the paper): Laplacian kernel — another
+        // shift-invariant family with a Fourier feature expansion
+        "figL" => experiments::fig_comm_tradeoff(
+            &ctx,
+            "laplace",
+            &["susy_like", "ctslice_like"],
+            "figL",
+        )?,
+        "css" => experiments::css_report(&ctx, dataset)?,
+        "bench-comm" => experiments::bench_comm(&ctx, dataset)?,
+        "ablation" => experiments::ablation(&ctx, dataset)?,
+        "master" => diskpca::launcher::master(&parsed.config)?,
+        "worker" => diskpca::launcher::worker(&parsed.config)?,
+        "shard" => diskpca::launcher::shard(&parsed.config, dataset)?,
+        other => {
+            eprintln!("unknown command `{other}`\n\n{}", cli::USAGE);
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,328 @@
+//! Deterministic PRNG + distributions substrate.
+//!
+//! No `rand` crate offline, so this module implements everything the
+//! protocol needs from scratch: xoshiro256++ (Blackman–Vigna) seeded
+//! via SplitMix64, Box–Muller normals, power-law/Zipf sampling for the
+//! partitioner, and the weighted samplers (alias method + weighted
+//! without-replacement) that drive leverage-score / adaptive sampling.
+//!
+//! Determinism matters: every experiment in EXPERIMENTS.md is
+//! reproducible from a single `u64` seed threaded through the config.
+
+mod xoshiro;
+pub use xoshiro::Xoshiro256;
+
+/// Convenience alias used across the crate.
+pub type Rng = Xoshiro256;
+
+impl Xoshiro256 {
+    /// Uniform in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's rejection-free-ish method).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply-shift; bias < 2^-64, fine for sampling.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped for
+    /// simplicity — generation is not a hot path; XLA does the flops).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-300 {
+                let u2 = self.f64();
+                return (-2.0 * u1.ln()).sqrt()
+                    * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Vector of iid normals scaled by `sigma`.
+    pub fn normals(&mut self, n: usize, sigma: f64) -> Vec<f64> {
+        (0..n).map(|_| self.normal() * sigma).collect()
+    }
+
+    /// Random ±1 sign.
+    pub fn sign(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Alias-method table for O(1) draws from a fixed discrete distribution.
+///
+/// Used for leverage-score and adaptive (residual-distance) sampling —
+/// the paper samples `O(k log k)` / `O(k/ε)` points with replacement
+/// from per-point weights (§5.3).
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights (need not be normalized).
+    /// Zero-total weight falls back to uniform.
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "alias table over empty weights");
+        let total: f64 = weights.iter().sum();
+        let scaled: Vec<f64> = if total <= 0.0 {
+            vec![1.0; n]
+        } else {
+            weights.iter().map(|w| w.max(0.0) * n as f64 / total).collect()
+        };
+        let mut prob = vec![0.0; n];
+        let mut alias = vec![0; n];
+        let mut small: Vec<usize> = Vec::new();
+        let mut large: Vec<usize> = Vec::new();
+        let mut p = scaled;
+        for (i, &pi) in p.iter().enumerate() {
+            if pi < 1.0 {
+                small.push(i)
+            } else {
+                large.push(i)
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s] = p[s];
+            alias[s] = l;
+            p[l] = (p[l] + p[s]) - 1.0;
+            if p[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        for &i in small.iter().chain(large.iter()) {
+            prob[i] = 1.0;
+            alias[i] = i;
+        }
+        Self { prob, alias }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// One O(1) draw.
+    pub fn draw(&self, rng: &mut Rng) -> usize {
+        let i = rng.below(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    /// `k` draws with replacement.
+    pub fn draw_many(&self, rng: &mut Rng, k: usize) -> Vec<usize> {
+        (0..k).map(|_| self.draw(rng)).collect()
+    }
+}
+
+/// Power-law sizes: n items over s bins with P(bin) ∝ rank^{-alpha}.
+///
+/// The paper partitions each dataset over workers "according to the
+/// power law distribution with exponent 2" — this reproduces that.
+/// Every bin gets at least `min_per_bin` items (a worker with zero
+/// points is legal but uninteresting).
+pub fn power_law_sizes(
+    rng: &mut Rng,
+    n: usize,
+    bins: usize,
+    alpha: f64,
+    min_per_bin: usize,
+) -> Vec<usize> {
+    assert!(bins > 0 && n >= bins * min_per_bin);
+    let weights: Vec<f64> = (1..=bins).map(|r| (r as f64).powf(-alpha)).collect();
+    let mut sizes = vec![min_per_bin; bins];
+    let table = AliasTable::new(&weights);
+    for _ in 0..(n - bins * min_per_bin) {
+        sizes[table.draw(rng)] += 1;
+    }
+    // Shuffle bin identities so worker 0 is not always the giant.
+    rng.shuffle(&mut sizes);
+    sizes
+}
+
+/// Multinomial allocation: distribute `k` draws over `weights`.
+/// Used by the master to allocate per-worker sample counts from the
+/// workers' total leverage/residual masses (one word per worker).
+pub fn multinomial(rng: &mut Rng, weights: &[f64], k: usize) -> Vec<usize> {
+    let table = AliasTable::new(weights);
+    let mut counts = vec![0usize; weights.len()];
+    for _ in 0..k {
+        counts[table.draw(rng)] += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::seed_from(42);
+        let mut b = Rng::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed_from(1);
+        let mut b = Rng::seed_from(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::seed_from(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::seed_from(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10);
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn alias_table_matches_weights() {
+        let weights = [1.0, 2.0, 3.0, 4.0];
+        let table = AliasTable::new(&weights);
+        let mut r = Rng::seed_from(5);
+        let mut counts = [0usize; 4];
+        let trials = 100_000;
+        for _ in 0..trials {
+            counts[table.draw(&mut r)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let want = weights[i] / 10.0;
+            let got = c as f64 / trials as f64;
+            assert!((got - want).abs() < 0.01, "bucket {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn alias_table_zero_weights_uniform() {
+        let table = AliasTable::new(&[0.0, 0.0, 0.0]);
+        let mut r = Rng::seed_from(5);
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            seen[table.draw(&mut r)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn alias_table_degenerate_single_mass() {
+        let table = AliasTable::new(&[0.0, 5.0, 0.0]);
+        let mut r = Rng::seed_from(5);
+        for _ in 0..100 {
+            assert_eq!(table.draw(&mut r), 1);
+        }
+    }
+
+    #[test]
+    fn power_law_sizes_sum_and_skew() {
+        let mut r = Rng::seed_from(9);
+        let sizes = power_law_sizes(&mut r, 10_000, 20, 2.0, 1);
+        assert_eq!(sizes.iter().sum::<usize>(), 10_000);
+        let mut sorted = sizes.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        // exponent-2 power law: the largest bin dominates (ζ(2)≈1.64 ⇒ >50%)
+        assert!(sorted[0] as f64 > 0.4 * 10_000.0, "top bin {}", sorted[0]);
+        assert!(sizes.iter().all(|&s| s >= 1));
+    }
+
+    #[test]
+    fn multinomial_total() {
+        let mut r = Rng::seed_from(1);
+        let counts = multinomial(&mut r, &[0.5, 0.25, 0.25], 1000);
+        assert_eq!(counts.iter().sum::<usize>(), 1000);
+        assert!(counts[0] > counts[1] && counts[0] > counts[2]);
+    }
+
+    #[test]
+    fn sample_without_replacement_distinct() {
+        let mut r = Rng::seed_from(2);
+        let s = r.sample_without_replacement(50, 20);
+        let mut dedup = s.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seed_from(4);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

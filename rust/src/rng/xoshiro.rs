@@ -1,0 +1,104 @@
+//! xoshiro256++ core generator (Blackman & Vigna, 2019), seeded by
+//! SplitMix64 as the authors recommend. Public-domain algorithm.
+
+/// xoshiro256++ state. `Clone` so samplers can fork deterministic
+/// sub-streams via [`Xoshiro256::split`].
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+/// SplitMix64 step — used only for seeding.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Xoshiro256 {
+    /// Seed the full 256-bit state from one `u64` via SplitMix64.
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        // All-zero state is invalid (fixed point); splitmix can't
+        // produce it from any seed, but keep the guard for clarity.
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Self { s }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Deterministically fork an independent sub-stream labelled by
+    /// `stream`. Workers derive their RNG as `root.split(worker_id)`,
+    /// so runs are reproducible regardless of thread scheduling.
+    pub fn split(&self, stream: u64) -> Self {
+        // Mix the label through splitmix over a digest of our state.
+        let mut sm = self.s[0] ^ self.s[2] ^ stream.wrapping_mul(0xA24BAED4963EE407);
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        Self { s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference vector from the xoshiro256++ C source with
+    /// s = {1, 2, 3, 4}.
+    #[test]
+    fn matches_reference_vector() {
+        let mut g = Xoshiro256 { s: [1, 2, 3, 4] };
+        let expect: [u64; 5] = [
+            41943041,
+            58720359,
+            3588806011781223,
+            3591011842654386,
+            9228616714210784205,
+        ];
+        for e in expect {
+            assert_eq!(g.next_u64(), e);
+        }
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let root = Xoshiro256::seed_from(99);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let va: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+        // re-splitting reproduces the same stream
+        let mut a2 = root.split(0);
+        let va2: Vec<u64> = (0..16).map(|_| a2.next_u64()).collect();
+        assert_eq!(va, va2);
+    }
+}

@@ -1,0 +1,169 @@
+//! Artifact manifest — the contract between `python/compile/aot.py`
+//! and the rust runtime. Parsed with the in-crate JSON substrate.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::json::{self, Value};
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Static shape-grid parameters baked by aot.py (DESIGN.md §5).
+#[derive(Clone, Copy, Debug)]
+pub struct StaticCfg {
+    pub block_n: usize,
+    pub m_rff: usize,
+    pub t_embed: usize,
+    pub t2_ts: usize,
+    pub y_pad: usize,
+    pub poly_q: u32,
+    pub arccos_deg: u32,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub cfg: StaticCfg,
+    pub d_grid: Vec<usize>,
+    pub artifacts: HashMap<String, Artifact>,
+}
+
+fn tensor_specs(v: &Value) -> anyhow::Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("specs not an array"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .ok_or_else(|| anyhow::anyhow!("missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: t
+                    .get("dtype")
+                    .and_then(|d| d.as_str())
+                    .unwrap_or("float32")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("manifest.json not found in {dir:?} (run `make artifacts`): {e}"))?;
+        let v = json::parse(&text)?;
+        let stat = v.get("static").ok_or_else(|| anyhow::anyhow!("no static section"))?;
+        let u = |k: &str| -> anyhow::Result<usize> {
+            stat.get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("static.{k} missing"))
+        };
+        let cfg = StaticCfg {
+            block_n: u("block_n")?,
+            m_rff: u("m_rff")?,
+            t_embed: u("t_embed")?,
+            t2_ts: u("t2_ts")?,
+            y_pad: u("y_pad")?,
+            poly_q: u("poly_q")? as u32,
+            arccos_deg: u("arccos_deg")? as u32,
+        };
+        let d_grid = stat
+            .get("d_grid")
+            .and_then(|g| g.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("static.d_grid missing"))?
+            .iter()
+            .filter_map(|d| d.as_usize())
+            .collect();
+        let mut artifacts = HashMap::new();
+        for a in v
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("no artifacts"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow::anyhow!("artifact without name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow::anyhow!("artifact without file"))?;
+            artifacts.insert(
+                name.clone(),
+                Artifact {
+                    name,
+                    path: dir.join(file),
+                    inputs: tensor_specs(a.get("inputs").unwrap_or(&Value::Null))?,
+                    outputs: tensor_specs(a.get("outputs").unwrap_or(&Value::Null))?,
+                },
+            );
+        }
+        Ok(Self { dir, cfg, d_grid, artifacts })
+    }
+
+    /// Smallest grid dim that fits `d` (None ⇒ fall back to native).
+    pub fn pad_dim(&self, d: usize) -> Option<usize> {
+        self.d_grid.iter().copied().filter(|&g| g >= d).min()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.get(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.cfg.block_n, 256);
+        assert!(m.get("leverage_norms").is_some());
+        assert!(m.get("project_residual").is_some());
+        for d in &m.d_grid {
+            for fam in ["embed_rff", "embed_arccos", "embed_poly", "gram_gauss", "gram_poly", "gram_arccos"] {
+                let art = m.get(&format!("{fam}_d{d}")).unwrap_or_else(|| panic!("{fam}_d{d}"));
+                assert!(art.path.exists(), "{:?}", art.path);
+                assert!(!art.inputs.is_empty());
+                assert!(!art.outputs.is_empty());
+            }
+        }
+        assert_eq!(m.pad_dim(28), Some(32));
+        assert_eq!(m.pad_dim(129), Some(512));
+        assert_eq!(m.pad_dim(1025), None);
+    }
+}

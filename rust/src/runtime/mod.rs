@@ -1,0 +1,58 @@
+//! Worker compute backends.
+//!
+//! The protocol's heavy per-worker math (kernel subspace embedding,
+//! gram blocks, projections) is dispatched through the [`Backend`]
+//! trait:
+//! - [`NativeBackend`] — pure-rust f64 reference (always available;
+//!   also the oracle in parity tests).
+//! - [`XlaBackend`] — the production hot path: AOT-compiled HLO
+//!   artifacts (L2 JAX graphs wrapping L1 Pallas kernels) executed on
+//!   the PJRT CPU client. Inputs are padded to the artifact's static
+//!   shapes; shapes outside the grid fall back to native.
+//!
+//! Python never runs here — artifacts are loaded from
+//! `artifacts/*.hlo.txt` produced once by `make artifacts`.
+
+mod manifest;
+mod native;
+mod xla;
+
+pub use manifest::{Artifact, Manifest};
+pub use native::NativeBackend;
+pub use xla::{XlaBackend, XlaStats};
+
+use crate::data::Data;
+use crate::embed::EmbedSpec;
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+
+/// Worker-side compute interface (everything a worker does that is
+/// O(n_i·work) — master-side math stays in `linalg`).
+pub trait Backend: Send + Sync {
+    /// E = S(φ(x)) per the spec: t×n.
+    fn embed(&self, spec: &EmbedSpec, x: &Data) -> Mat;
+
+    /// K(Y, x): |Y|×n.
+    fn gram(&self, kernel: Kernel, y: &Mat, x: &Data) -> Mat;
+
+    /// Column squared norms of (Zᵀ)⁻¹E given upper-triangular Z — the
+    /// disLS leverage scores.
+    fn leverage_norms(&self, z: &Mat, e: &Mat) -> Vec<f64>;
+
+    /// Π = R⁻ᵀ·K(Y,x) plus residuals κ(xⱼ,xⱼ) − ‖Π_{:j}‖², given the
+    /// upper-triangular Cholesky factor R of K(Y,Y).
+    fn project_residual(&self, r_upper: &Mat, k_yx: &Mat, diag: &[f64]) -> (Mat, Vec<f64>);
+
+    /// Human-readable name for logs.
+    fn name(&self) -> &'static str;
+}
+
+/// Build the backend selected by name: "native" or "xla" (with native
+/// fallback outside the artifact grid).
+pub fn backend_from_name(name: &str, artifacts_dir: &str) -> anyhow::Result<std::sync::Arc<dyn Backend>> {
+    match name {
+        "native" => Ok(std::sync::Arc::new(NativeBackend::new())),
+        "xla" => Ok(std::sync::Arc::new(XlaBackend::load(artifacts_dir)?)),
+        other => anyhow::bail!("unknown backend {other} (expected native|xla)"),
+    }
+}

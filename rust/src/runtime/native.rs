@@ -1,0 +1,113 @@
+//! Pure-rust reference backend (f64). Semantics match the L2 jax
+//! graphs in `python/compile/model.py` — `tests/runtime_parity.rs`
+//! pins the two against each other through the XLA backend.
+
+use crate::data::Data;
+use crate::embed::{embed, EmbedSpec};
+use crate::kernels::{gram, Kernel};
+use crate::linalg::{solve_upper_transpose_mat, Mat};
+
+use super::Backend;
+
+#[derive(Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl Backend for NativeBackend {
+    fn embed(&self, spec: &EmbedSpec, x: &Data) -> Mat {
+        embed(spec, x)
+    }
+
+    fn gram(&self, kernel: Kernel, y: &Mat, x: &Data) -> Mat {
+        gram(kernel, y, x)
+    }
+
+    fn leverage_norms(&self, z: &Mat, e: &Mat) -> Vec<f64> {
+        // ℓⱼ = ‖((Zᵀ)⁻¹E)_{:j}‖² via a triangular solve (never invert).
+        let u = solve_upper_transpose_mat(z, e);
+        u.col_norms_sq()
+    }
+
+    fn project_residual(&self, r_upper: &Mat, k_yx: &Mat, diag: &[f64]) -> (Mat, Vec<f64>) {
+        let pi = solve_upper_transpose_mat(r_upper, k_yx);
+        let norms = pi.col_norms_sq();
+        let res = diag
+            .iter()
+            .zip(&norms)
+            .map(|(&d, &n)| (d - n).max(0.0))
+            .collect();
+        (pi, res)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{diag as kdiag, gram_sym};
+    use crate::linalg::chol_psd;
+    use crate::rng::Rng;
+
+    #[test]
+    fn project_residual_zero_for_points_in_span() {
+        let mut rng = Rng::seed_from(1);
+        let kernel = Kernel::Gauss { gamma: 0.5 };
+        let y = Mat::from_fn(4, 6, |_, _| rng.normal());
+        let kyy = gram_sym(kernel, &y);
+        let (r, _) = chol_psd(&kyy);
+        let x = Data::Dense(y.clone()); // A = Y ⇒ residuals ≈ 0
+        let kyx = gram(kernel, &y, &x);
+        let d = kdiag(kernel, &x);
+        let be = NativeBackend::new();
+        let (_, res) = be.project_residual(&r, &kyx, &d);
+        for v in res {
+            assert!(v < 1e-6, "residual {v}");
+        }
+    }
+
+    #[test]
+    fn residuals_positive_outside_span() {
+        let mut rng = Rng::seed_from(2);
+        let kernel = Kernel::Gauss { gamma: 1.0 };
+        let y = Mat::from_fn(5, 3, |_, _| rng.normal());
+        let kyy = gram_sym(kernel, &y);
+        let (r, _) = chol_psd(&kyy);
+        let x = Data::Dense(Mat::from_fn(5, 10, |_, _| rng.normal() * 2.0));
+        let kyx = gram(kernel, &y, &x);
+        let d = kdiag(kernel, &x);
+        let be = NativeBackend::new();
+        let (pi, res) = be.project_residual(&r, &kyx, &d);
+        assert_eq!(pi.rows(), 3);
+        assert_eq!(pi.cols(), 10);
+        // distant points under a narrow kernel: residual ≈ κ(x,x) = 1
+        let total: f64 = res.iter().sum();
+        assert!(total > 1.0, "total residual {total}");
+        for v in &res {
+            assert!(*v >= 0.0 && *v <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn leverage_norms_match_direct_computation() {
+        let mut rng = Rng::seed_from(3);
+        let t = 5;
+        let a = Mat::from_fn(12, t, |_, _| rng.normal());
+        let (_, z) = crate::linalg::qr_thin(&a);
+        let e = Mat::from_fn(t, 9, |_, _| rng.normal());
+        let be = NativeBackend::new();
+        let got = be.leverage_norms(&z, &e);
+        let zinv = crate::linalg::inv_upper(&z);
+        let want = zinv.transpose().matmul(&e).col_norms_sq();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-8 * w.max(1.0), "{g} vs {w}");
+        }
+    }
+}

@@ -1,0 +1,504 @@
+//! XLA/PJRT backend — the production hot path.
+//!
+//! AOT HLO-text artifacts (lowered once from the L2 JAX graphs that
+//! wrap the L1 Pallas kernels) are compiled on the PJRT CPU client and
+//! cached. The `xla` crate's client is `Rc`-based (!Send), so a single
+//! **device service thread** owns the client + executables and worker
+//! threads submit [`Call`]s over a channel — the same shape as one
+//! shared accelerator per host.
+//!
+//! Inputs are padded to the artifact grid (zero feature-rows never
+//! change matmuls/kernel maps; padded point-columns are sliced away);
+//! requests outside the grid fall back to [`NativeBackend`] and are
+//! counted in [`XlaStats`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::data::Data;
+use crate::embed::{EmbedSpec, EmbedTables};
+use crate::kernels::Kernel;
+use crate::linalg::{inv_upper, Mat};
+
+use super::manifest::{Manifest, StaticCfg};
+use super::{Backend, NativeBackend};
+
+/// One tensor crossing the service-thread boundary.
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+pub struct Tensor {
+    pub shape: Vec<i64>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<i64>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<i64>() as usize, data.len());
+        Self { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<i64>, data: Vec<i32>) -> Self {
+        Self { shape, data: TensorData::I32(data) }
+    }
+}
+
+struct Call {
+    name: String,
+    inputs: Vec<Tensor>,
+    resp: Sender<anyhow::Result<Vec<Vec<f32>>>>,
+}
+
+/// Counters for observability + tests.
+#[derive(Default, Debug)]
+pub struct XlaStats {
+    pub calls: AtomicUsize,
+    pub fallbacks: AtomicUsize,
+    pub compiles: AtomicUsize,
+}
+
+pub struct XlaBackend {
+    tx: Mutex<Sender<Call>>,
+    cfg: StaticCfg,
+    d_grid: Vec<usize>,
+    native: NativeBackend,
+    pub stats: Arc<XlaStats>,
+}
+
+impl XlaBackend {
+    /// Load the manifest, spin up the device service thread.
+    pub fn load(artifacts_dir: &str) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let cfg = manifest.cfg;
+        let d_grid = manifest.d_grid.clone();
+        let stats = Arc::new(XlaStats::default());
+        let (tx, rx) = channel::<Call>();
+        let thread_stats = stats.clone();
+        std::thread::Builder::new()
+            .name("xla-service".into())
+            .spawn(move || {
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => c,
+                    Err(e) => {
+                        eprintln!("xla service: client init failed: {e}");
+                        return;
+                    }
+                };
+                let mut exes: std::collections::HashMap<String, xla::PjRtLoadedExecutable> =
+                    Default::default();
+                while let Ok(call) = rx.recv() {
+                    let result = serve(&client, &manifest, &mut exes, &thread_stats, &call);
+                    let _ = call.resp.send(result);
+                }
+            })
+            .expect("spawn xla service");
+        Ok(Self { tx: Mutex::new(tx), cfg, d_grid, native: NativeBackend::new(), stats })
+    }
+
+    fn pad_dim(&self, d: usize) -> Option<usize> {
+        self.d_grid.iter().copied().filter(|&g| g >= d).min()
+    }
+
+    /// Execute one artifact call on the service thread (blocking).
+    fn call(&self, name: &str, inputs: Vec<Tensor>) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.stats.calls.fetch_add(1, Ordering::Relaxed);
+        let (resp_tx, resp_rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Call { name: name.to_string(), inputs, resp: resp_tx })
+            .map_err(|_| anyhow::anyhow!("xla service thread gone"))?;
+        resp_rx.recv().map_err(|_| anyhow::anyhow!("xla service dropped call"))?
+    }
+
+    fn fallback(&self) {
+        self.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Pack a d×c column block of `x` (cols [j0, j0+bn)) as a padded
+    /// row-major [bn, d_pad] f32 tensor (points as rows), optionally
+    /// scaling entries.
+    fn pack_block(x: &Data, j0: usize, bn: usize, d_pad: usize, scale: f64) -> Vec<f32> {
+        let n = x.len();
+        let mut out = vec![0f32; bn * d_pad];
+        for b in 0..bn {
+            let j = j0 + b;
+            if j >= n {
+                break;
+            }
+            match x {
+                Data::Dense(m) => {
+                    for i in 0..m.rows() {
+                        out[b * d_pad + i] = (m[(i, j)] * scale) as f32;
+                    }
+                }
+                Data::Sparse(s) => {
+                    for (r, v) in s.col_iter(j) {
+                        out[b * d_pad + r] = (v * scale) as f32;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Pack a dense d×c matrix as padded row-major [rows_pad, d_pad].
+    fn pack_mat_points(y: &Mat, rows_pad: usize, d_pad: usize, scale: f64) -> Vec<f32> {
+        let mut out = vec![0f32; rows_pad * d_pad];
+        for j in 0..y.cols() {
+            for i in 0..y.rows() {
+                out[j * d_pad + i] = (y[(i, j)] * scale) as f32;
+            }
+        }
+        out
+    }
+
+    fn embed_xla(&self, spec: &EmbedSpec, x: &Data) -> Option<Mat> {
+        let cfg = self.cfg;
+        if spec.t != cfg.t_embed {
+            return None;
+        }
+        let d = x.dim();
+        let d_pad = self.pad_dim(d)?;
+        let bn = cfg.block_n;
+        let tables = EmbedTables::build(spec, d);
+        // Per-kernel constant inputs.
+        enum Mode {
+            Rff { omega: Vec<f32>, b: Vec<f32>, h: Vec<i32>, s: Vec<f32> },
+            Arc { omega: Vec<f32>, h: Vec<i32>, s: Vec<f32> },
+            Poly { hs: Vec<i32>, ss: Vec<f32>, g: Vec<f32> },
+        }
+        let pad_omega = |om: &Mat| -> Vec<f32> {
+            // om is d×m → row-major [d_pad, m], zero rows appended
+            let m = om.cols();
+            let mut out = vec![0f32; d_pad * m];
+            for i in 0..d {
+                for j in 0..m {
+                    out[i * m + j] = om[(i, j)] as f32;
+                }
+            }
+            out
+        };
+        let (art, mode) = match (&tables, spec.kernel) {
+            // Laplace shares the cos(ωᵀx+b) feature map, so the same
+            // RFF artifact serves both — only Ω's distribution differs.
+            (EmbedTables::Rff { params, cs }, Kernel::Gauss { .. } | Kernel::Laplace { .. }) => {
+                if spec.m != cfg.m_rff {
+                    return None;
+                }
+                let (h, s) = cs.tables();
+                (
+                    format!("embed_rff_d{d_pad}"),
+                    Mode::Rff {
+                        omega: pad_omega(&params.omega),
+                        b: params.b.iter().map(|&v| v as f32).collect(),
+                        h: h.iter().map(|&v| v as i32).collect(),
+                        s: s.iter().map(|&v| v as f32).collect(),
+                    },
+                )
+            }
+            (EmbedTables::ArcCos { omega, degree, cs }, Kernel::ArcCos { .. }) => {
+                if spec.m != cfg.m_rff || *degree != cfg.arccos_deg {
+                    return None;
+                }
+                let (h, s) = cs.tables();
+                (
+                    format!("embed_arccos_d{d_pad}"),
+                    Mode::Arc {
+                        omega: pad_omega(omega),
+                        h: h.iter().map(|&v| v as i32).collect(),
+                        s: s.iter().map(|&v| v as f32).collect(),
+                    },
+                )
+            }
+            (EmbedTables::Poly { ts, g }, Kernel::Poly { q }) => {
+                if q != cfg.poly_q || spec.t2 != cfg.t2_ts {
+                    return None;
+                }
+                // hs/ss: q×d padded to q×d_pad (pad cols hit zero data).
+                let qd = ts.degree();
+                let mut hs = vec![0i32; qd * d_pad];
+                let mut ss = vec![1f32; qd * d_pad];
+                for (qi, (h, s)) in ts.tables().into_iter().enumerate() {
+                    for j in 0..d {
+                        hs[qi * d_pad + j] = h[j] as i32;
+                        ss[qi * d_pad + j] = s[j] as f32;
+                    }
+                }
+                // g: our GaussianSketch is t×t2 → artifact wants [t2, t]
+                let gm = g.matrix();
+                let (t, t2) = (gm.rows(), gm.cols());
+                let mut gt = vec![0f32; t2 * t];
+                for i in 0..t {
+                    for j in 0..t2 {
+                        gt[j * t + i] = gm[(i, j)] as f32;
+                    }
+                }
+                (format!("embed_poly_d{d_pad}"), Mode::Poly { hs, ss, g: gt })
+            }
+            _ => return None,
+        };
+        let n = x.len();
+        let t = spec.t;
+        let mut e = Mat::zeros(t, n);
+        let mut j0 = 0;
+        while j0 < n {
+            let xb = Self::pack_block(x, j0, bn, d_pad, 1.0);
+            let inputs = match &mode {
+                Mode::Rff { omega, b, h, s } => vec![
+                    Tensor::f32(vec![bn as i64, d_pad as i64], xb),
+                    Tensor::f32(vec![d_pad as i64, spec.m as i64], omega.clone()),
+                    Tensor::f32(vec![spec.m as i64], b.clone()),
+                    Tensor::i32(vec![spec.m as i64], h.clone()),
+                    Tensor::f32(vec![spec.m as i64], s.clone()),
+                ],
+                Mode::Arc { omega, h, s } => vec![
+                    Tensor::f32(vec![bn as i64, d_pad as i64], xb),
+                    Tensor::f32(vec![d_pad as i64, spec.m as i64], omega.clone()),
+                    Tensor::i32(vec![spec.m as i64], h.clone()),
+                    Tensor::f32(vec![spec.m as i64], s.clone()),
+                ],
+                Mode::Poly { hs, ss, g } => vec![
+                    Tensor::f32(vec![bn as i64, d_pad as i64], xb),
+                    Tensor::i32(vec![cfg.poly_q as i64, d_pad as i64], hs.clone()),
+                    Tensor::f32(vec![cfg.poly_q as i64, d_pad as i64], ss.clone()),
+                    Tensor::f32(vec![cfg.t2_ts as i64, t as i64], g.clone()),
+                ],
+            };
+            let out = self.call(&art, inputs).ok()?;
+            // out[0] is [bn, t] row-major
+            let block = &out[0];
+            for b in 0..bn.min(n - j0) {
+                for c in 0..t {
+                    e[(c, j0 + b)] = block[b * t + c] as f64;
+                }
+            }
+            j0 += bn;
+        }
+        Some(e)
+    }
+
+    fn gram_xla(&self, kernel: Kernel, y: &Mat, x: &Data) -> Option<Mat> {
+        let cfg = self.cfg;
+        let d = x.dim();
+        let d_pad = self.pad_dim(d)?;
+        let ny = y.cols();
+        if ny > cfg.y_pad {
+            return None;
+        }
+        let (art, scale) = match kernel {
+            Kernel::Gauss { gamma } => (format!("gram_gauss_d{d_pad}"), gamma.sqrt()),
+            Kernel::Poly { q } if q == cfg.poly_q => (format!("gram_poly_d{d_pad}"), 1.0),
+            Kernel::ArcCos { degree } if degree == cfg.arccos_deg => {
+                (format!("gram_arccos_d{d_pad}"), 1.0)
+            }
+            _ => return None,
+        };
+        let ypacked = Self::pack_mat_points(y, cfg.y_pad, d_pad, scale);
+        let bn = cfg.block_n;
+        let n = x.len();
+        let mut out = Mat::zeros(ny, n);
+        let mut j0 = 0;
+        while j0 < n {
+            let xb = Self::pack_block(x, j0, bn, d_pad, scale);
+            let res = self
+                .call(
+                    &art,
+                    vec![
+                        Tensor::f32(vec![cfg.y_pad as i64, d_pad as i64], ypacked.clone()),
+                        Tensor::f32(vec![bn as i64, d_pad as i64], xb),
+                    ],
+                )
+                .ok()?;
+            let block = &res[0]; // [y_pad, bn]
+            for i in 0..ny {
+                for b in 0..bn.min(n - j0) {
+                    out[(i, j0 + b)] = block[i * bn + b] as f64;
+                }
+            }
+            j0 += bn;
+        }
+        Some(out)
+    }
+
+    fn leverage_xla(&self, z: &Mat, e: &Mat) -> Option<Vec<f64>> {
+        let cfg = self.cfg;
+        let t = cfg.t_embed;
+        if z.rows() != t || e.rows() != t {
+            return None;
+        }
+        let zinv_t = inv_upper(z).transpose();
+        let zt: Vec<f32> = zinv_t.to_f32();
+        let bn = cfg.block_n;
+        let n = e.cols();
+        let mut out = vec![0.0; n];
+        let mut j0 = 0;
+        while j0 < n {
+            // e block [t, bn] row-major, padded cols zero
+            let mut eb = vec![0f32; t * bn];
+            for i in 0..t {
+                for b in 0..bn.min(n - j0) {
+                    eb[i * bn + b] = e[(i, j0 + b)] as f32;
+                }
+            }
+            let res = self
+                .call(
+                    "leverage_norms",
+                    vec![
+                        Tensor::f32(vec![t as i64, t as i64], zt.clone()),
+                        Tensor::f32(vec![t as i64, bn as i64], eb),
+                    ],
+                )
+                .ok()?;
+            for b in 0..bn.min(n - j0) {
+                out[j0 + b] = res[0][b] as f64;
+            }
+            j0 += bn;
+        }
+        Some(out)
+    }
+
+    fn project_xla(&self, r_upper: &Mat, k_yx: &Mat, diag: &[f64]) -> Option<(Mat, Vec<f64>)> {
+        let cfg = self.cfg;
+        let ny = r_upper.rows();
+        if ny > cfg.y_pad || k_yx.rows() != ny {
+            return None;
+        }
+        let rinv_t = inv_upper(r_upper).transpose();
+        let mut rp = vec![0f32; cfg.y_pad * cfg.y_pad];
+        for i in 0..ny {
+            for j in 0..ny {
+                rp[i * cfg.y_pad + j] = rinv_t[(i, j)] as f32;
+            }
+        }
+        let bn = cfg.block_n;
+        let n = k_yx.cols();
+        let mut pi = Mat::zeros(ny, n);
+        let mut res = vec![0.0; n];
+        let mut j0 = 0;
+        while j0 < n {
+            let take = bn.min(n - j0);
+            let mut kb = vec![0f32; cfg.y_pad * bn];
+            for i in 0..ny {
+                for b in 0..take {
+                    kb[i * bn + b] = k_yx[(i, j0 + b)] as f32;
+                }
+            }
+            let mut db = vec![0f32; bn];
+            for b in 0..take {
+                db[b] = diag[j0 + b] as f32;
+            }
+            let out = self
+                .call(
+                    "project_residual",
+                    vec![
+                        Tensor::f32(vec![cfg.y_pad as i64, cfg.y_pad as i64], rp.clone()),
+                        Tensor::f32(vec![cfg.y_pad as i64, bn as i64], kb),
+                        Tensor::f32(vec![bn as i64], db),
+                    ],
+                )
+                .ok()?;
+            // out[0]: pi [y_pad, bn]; out[1]: res [bn]
+            for i in 0..ny {
+                for b in 0..take {
+                    pi[(i, j0 + b)] = out[0][i * bn + b] as f64;
+                }
+            }
+            for b in 0..take {
+                res[j0 + b] = out[1][b] as f64;
+            }
+            j0 += bn;
+        }
+        Some((pi, res))
+    }
+}
+
+impl Backend for XlaBackend {
+    fn embed(&self, spec: &EmbedSpec, x: &Data) -> Mat {
+        match self.embed_xla(spec, x) {
+            Some(e) => e,
+            None => {
+                self.fallback();
+                self.native.embed(spec, x)
+            }
+        }
+    }
+
+    fn gram(&self, kernel: Kernel, y: &Mat, x: &Data) -> Mat {
+        match self.gram_xla(kernel, y, x) {
+            Some(g) => g,
+            None => {
+                self.fallback();
+                self.native.gram(kernel, y, x)
+            }
+        }
+    }
+
+    fn leverage_norms(&self, z: &Mat, e: &Mat) -> Vec<f64> {
+        match self.leverage_xla(z, e) {
+            Some(v) => v,
+            None => {
+                self.fallback();
+                self.native.leverage_norms(z, e)
+            }
+        }
+    }
+
+    fn project_residual(&self, r_upper: &Mat, k_yx: &Mat, diag: &[f64]) -> (Mat, Vec<f64>) {
+        match self.project_xla(r_upper, k_yx, diag) {
+            Some(v) => v,
+            None => {
+                self.fallback();
+                self.native.project_residual(r_upper, k_yx, diag)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Service-thread body: compile-on-demand + execute.
+fn serve(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    exes: &mut std::collections::HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: &XlaStats,
+    call: &Call,
+) -> anyhow::Result<Vec<Vec<f32>>> {
+    if !exes.contains_key(&call.name) {
+        let art = manifest
+            .get(&call.name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact {}", call.name))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            art.path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        stats.compiles.fetch_add(1, Ordering::Relaxed);
+        exes.insert(call.name.clone(), exe);
+    }
+    let exe = &exes[&call.name];
+    let literals: Vec<xla::Literal> = call
+        .inputs
+        .iter()
+        .map(|t| -> anyhow::Result<xla::Literal> {
+            let lit = match &t.data {
+                TensorData::F32(v) => xla::Literal::vec1(v.as_slice()),
+                TensorData::I32(v) => xla::Literal::vec1(v.as_slice()),
+            };
+            Ok(lit.reshape(&t.shape)?)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True ⇒ always a tuple.
+    let parts = result.to_tuple()?;
+    parts
+        .into_iter()
+        .map(|p| Ok(p.to_vec::<f32>()?))
+        .collect()
+}

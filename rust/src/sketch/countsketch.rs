@@ -1,0 +1,226 @@
+//! CountSketch (Clarkson–Woodruff sparse embedding).
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::sparse::Csc;
+
+/// A CountSketch `S ∈ R^{t×m}`: one ±1 per input coordinate, landing
+/// in bucket `h[j]`. Applying costs O(nnz) — the "input sparsity time"
+/// property the paper leans on for sparse datasets.
+#[derive(Clone, Debug)]
+pub struct CountSketch {
+    t: usize,
+    h: Vec<u32>,
+    s: Vec<f64>,
+}
+
+impl CountSketch {
+    pub fn new(m: usize, t: usize, rng: &mut Rng) -> Self {
+        assert!(t > 0);
+        let h = (0..m).map(|_| rng.below(t) as u32).collect();
+        let s = (0..m).map(|_| rng.sign()).collect();
+        Self { t, h, s }
+    }
+
+    /// From explicit tables (for cross-checking against the XLA/Pallas
+    /// countsketch artifact, which receives h and s as inputs).
+    pub fn from_tables(t: usize, h: Vec<u32>, s: Vec<f64>) -> Self {
+        assert_eq!(h.len(), s.len());
+        assert!(h.iter().all(|&b| (b as usize) < t));
+        Self { t, h, s }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.h.len()
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.t
+    }
+
+    pub fn tables(&self) -> (&[u32], &[f64]) {
+        (&self.h, &self.s)
+    }
+
+    /// Sketch a single dense vector: `S·x`.
+    pub fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(x.len(), self.h.len());
+        let mut out = vec![0.0; self.t];
+        for (j, &v) in x.iter().enumerate() {
+            if v != 0.0 {
+                out[self.h[j] as usize] += self.s[j] * v;
+            }
+        }
+        out
+    }
+
+    /// Sketch a sparse vector given as (row, value) pairs.
+    pub fn apply_sparse_vec(&self, entries: impl Iterator<Item = (usize, f64)>) -> Vec<f64> {
+        let mut out = vec![0.0; self.t];
+        for (j, v) in entries {
+            out[self.h[j] as usize] += self.s[j] * v;
+        }
+        out
+    }
+
+    /// Feature-axis sketch of a `m×n` matrix: `S·A → t×n`.
+    pub fn apply_feature_axis(&self, a: &Mat) -> Mat {
+        assert_eq!(a.rows(), self.h.len());
+        let n = a.cols();
+        let mut out = Mat::zeros(self.t, n);
+        for i in 0..a.rows() {
+            let bucket = self.h[i] as usize;
+            let sign = self.s[i];
+            let arow = a.row(i);
+            let orow = out.row_mut(bucket);
+            for j in 0..n {
+                orow[j] += sign * arow[j];
+            }
+        }
+        out
+    }
+
+    /// Feature-axis sketch of a CSC matrix in O(nnz).
+    pub fn apply_feature_axis_sparse(&self, a: &Csc) -> Mat {
+        assert_eq!(a.rows(), self.h.len());
+        let n = a.cols();
+        let mut out = Mat::zeros(self.t, n);
+        for j in 0..n {
+            for (r, v) in a.col_iter(j) {
+                out[(self.h[r] as usize, j)] += self.s[r] * v;
+            }
+        }
+        out
+    }
+
+    /// Point-axis (right) sketch of an `r×n` matrix: `A·Sᵀ → r×t`.
+    /// This compresses the *number of points* — Alg. 1 / Alg. 3.
+    pub fn apply_point_axis(&self, a: &Mat) -> Mat {
+        assert_eq!(a.cols(), self.h.len());
+        let r = a.rows();
+        let mut out = Mat::zeros(r, self.t);
+        for i in 0..r {
+            let arow = a.row(i);
+            let orow = out.row_mut(i);
+            for (j, &v) in arow.iter().enumerate() {
+                if v != 0.0 {
+                    orow[self.h[j] as usize] += self.s[j] * v;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_equiv(cs: &CountSketch, m: usize) -> Mat {
+        // S as an explicit t×m matrix
+        Mat::from_fn(cs.t, m, |i, j| {
+            if cs.h[j] as usize == i {
+                cs.s[j]
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn apply_matches_dense_multiply() {
+        let mut rng = Rng::seed_from(1);
+        let (m, n, t) = (40, 7, 16);
+        let cs = CountSketch::new(m, t, &mut rng);
+        let s = dense_equiv(&cs, m);
+        let a = Mat::from_fn(m, n, |_, _| rng.normal());
+        let got = cs.apply_feature_axis(&a);
+        let want = s.matmul(&a);
+        assert!(got.max_abs_diff(&want) < 1e-12);
+        // vector path
+        let x: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let gv = cs.apply_vec(&x);
+        let wv = s.matvec(&x);
+        for i in 0..t {
+            assert!((gv[i] - wv[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sparse_matches_dense_path() {
+        let mut rng = Rng::seed_from(2);
+        let (m, n, t) = (30, 9, 8);
+        let cs = CountSketch::new(m, t, &mut rng);
+        let dense = Mat::from_fn(m, n, |i, j| {
+            if (i + j) % 5 == 0 {
+                rng.normal()
+            } else {
+                0.0
+            }
+        });
+        let sparse = Csc::from_dense(&dense);
+        let a = cs.apply_feature_axis(&dense);
+        let b = cs.apply_feature_axis_sparse(&sparse);
+        assert!(a.max_abs_diff(&b) < 1e-12);
+    }
+
+    #[test]
+    fn point_axis_matches_transpose_formulation() {
+        let mut rng = Rng::seed_from(3);
+        let (r, n, t) = (5, 50, 16);
+        let cs = CountSketch::new(n, t, &mut rng);
+        let a = Mat::from_fn(r, n, |_, _| rng.normal());
+        let got = cs.apply_point_axis(&a);
+        // A·Sᵀ == (S·Aᵀ)ᵀ
+        let want = cs.apply_feature_axis(&a.transpose()).transpose();
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn unbiased_inner_products() {
+        // E[⟨Sx, Sy⟩] = ⟨x, y⟩
+        let mut rng = Rng::seed_from(4);
+        let m = 64;
+        let x: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let exact: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let trials = 800;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let cs = CountSketch::new(m, 16, &mut rng);
+            let sx = cs.apply_vec(&x);
+            let sy = cs.apply_vec(&y);
+            acc += sx.iter().zip(&sy).map(|(a, b)| a * b).sum::<f64>();
+        }
+        acc /= trials as f64;
+        assert!((acc - exact).abs() < 0.6, "{acc} vs {exact}");
+    }
+
+    #[test]
+    fn norm_preserved_exactly_when_no_collisions() {
+        // t ≫ m ⇒ whp no collisions ⇒ ‖Sx‖ = ‖x‖ exactly when h is injective
+        let mut rng = Rng::seed_from(5);
+        let m = 4;
+        loop {
+            let cs = CountSketch::new(m, 64, &mut rng);
+            let mut hs = cs.h.clone();
+            hs.sort_unstable();
+            hs.dedup();
+            if hs.len() == m {
+                let x = vec![1.0, -2.0, 3.0, 0.5];
+                let sx = cs.apply_vec(&x);
+                let n1: f64 = x.iter().map(|v| v * v).sum();
+                let n2: f64 = sx.iter().map(|v| v * v).sum();
+                assert!((n1 - n2).abs() < 1e-12);
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn from_tables_roundtrip() {
+        let cs = CountSketch::from_tables(4, vec![0, 3, 3], vec![1.0, -1.0, 1.0]);
+        let out = cs.apply_vec(&[2.0, 5.0, 7.0]);
+        assert_eq!(out, vec![2.0, 0.0, 0.0, 2.0]);
+    }
+}

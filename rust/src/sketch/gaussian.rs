@@ -1,0 +1,103 @@
+//! Dense Gaussian (JLT) sketch.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// `G ∈ R^{t×m}` with iid N(0, 1/t) entries — an ε-subspace embedding
+/// at t = O(k/ε²) and the final stage of the Lemma-4 concatenation
+/// (CountSketch/TensorSketch down to O(k²), Gaussian down to O(k/ε)).
+#[derive(Clone, Debug)]
+pub struct GaussianSketch {
+    mat: Mat, // t×m
+}
+
+impl GaussianSketch {
+    pub fn new(m: usize, t: usize, rng: &mut Rng) -> Self {
+        let scale = 1.0 / (t as f64).sqrt();
+        Self {
+            mat: Mat::from_fn(t, m, |_, _| rng.normal() * scale),
+        }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.mat.cols()
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.mat.rows()
+    }
+
+    /// The raw t×m matrix (shipped to the XLA embed_poly artifact).
+    pub fn matrix(&self) -> &Mat {
+        &self.mat
+    }
+
+    /// Feature-axis: `G·A`, [m×n] → [t×n].
+    pub fn apply_feature_axis(&self, a: &Mat) -> Mat {
+        self.mat.matmul(a)
+    }
+
+    /// Point-axis: `A·Gᵀ`, [r×m] → [r×t].
+    pub fn apply_point_axis(&self, a: &Mat) -> Mat {
+        a.matmul_a_bt(&self.mat)
+    }
+
+    /// Sketch one vector.
+    pub fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        self.mat.matvec(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims() {
+        let mut rng = Rng::seed_from(1);
+        let g = GaussianSketch::new(50, 10, &mut rng);
+        assert_eq!(g.input_dim(), 50);
+        assert_eq!(g.output_dim(), 10);
+        let a = Mat::from_fn(50, 3, |_, _| rng.normal());
+        assert_eq!(g.apply_feature_axis(&a).rows(), 10);
+        let b = Mat::from_fn(3, 50, |_, _| rng.normal());
+        assert_eq!(g.apply_point_axis(&b).cols(), 10);
+    }
+
+    #[test]
+    fn norm_preserved_in_expectation() {
+        let mut rng = Rng::seed_from(2);
+        let m = 30;
+        let x: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let exact: f64 = x.iter().map(|v| v * v).sum();
+        let mut acc = 0.0;
+        let trials = 300;
+        for _ in 0..trials {
+            let g = GaussianSketch::new(m, 16, &mut rng);
+            acc += g.apply_vec(&x).iter().map(|v| v * v).sum::<f64>();
+        }
+        acc /= trials as f64;
+        assert!((acc - exact).abs() < 0.15 * exact, "{acc} vs {exact}");
+    }
+
+    #[test]
+    fn point_axis_consistent_with_feature_axis() {
+        let mut rng = Rng::seed_from(3);
+        let g = GaussianSketch::new(20, 8, &mut rng);
+        let a = Mat::from_fn(5, 20, |_, _| rng.normal());
+        let got = g.apply_point_axis(&a);
+        let want = g.apply_feature_axis(&a.transpose()).transpose();
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn subspace_embedding_on_low_rank() {
+        let mut rng = Rng::seed_from(4);
+        let u = Mat::from_fn(4, 2, |_, _| rng.normal());
+        let v = Mat::from_fn(2, 100, |_, _| rng.normal());
+        let a = u.matmul(&v); // rank 2, 100 points
+        let g = GaussianSketch::new(100, 48, &mut rng);
+        let sk = g.apply_point_axis(&a);
+        super::super::tests::check_right_embedding(&a, &sk, 0.6, &mut rng, 10);
+    }
+}

@@ -1,0 +1,112 @@
+//! Sketching / subspace-embedding substrate (paper §3, Lemma 1).
+//!
+//! The protocol composes four sketch families:
+//! - [`CountSketch`] — input-sparsity-time subspace embedding
+//!   (Clarkson–Woodruff); used on both the feature axis (kernel
+//!   embeddings) and the point axis (disLS/disLR right-sketches).
+//! - [`GaussianSketch`] — dense JLT; concatenated after CountSketch to
+//!   reach the optimal `O(k/ε)` dimension (Lemma 4's Ω·T).
+//! - [`Srht`] — subsampled randomized Hadamard transform, the
+//!   "fast Hadamard" alternative mentioned in Lemma 4.
+//! - [`TensorSketch`] — Pham–Pagh polynomial-kernel sketch (Lemma 4).
+//!
+//! Everything is deterministic from an [`Rng`] stream so worker-side
+//! sketches can be re-drawn from a broadcast seed instead of shipping
+//! the matrices (this is what keeps disLS at `O(stp)` words).
+
+mod countsketch;
+mod gaussian;
+mod srht;
+mod tensorsketch;
+
+pub use countsketch::CountSketch;
+pub use gaussian::GaussianSketch;
+pub use srht::Srht;
+pub use tensorsketch::TensorSketch;
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Right-sketch `A·T` where T is a CountSketch on the *point* axis:
+/// compresses `n` columns to `p` columns in O(n·rows) time. This is
+/// the `Tⁱ` of Alg. 1 step 1 and Alg. 3 step 1.
+pub fn right_countsketch(a: &Mat, p: usize, rng: &mut Rng) -> Mat {
+    let cs = CountSketch::new(a.cols(), p, rng);
+    cs.apply_point_axis(a)
+}
+
+/// Right-sketch with an ε-subspace-embedding pair: CountSketch to
+/// `4·p` then dense Gaussian down to `p` (concatenation per Lemma 1).
+pub fn right_cs_gauss(a: &Mat, p: usize, rng: &mut Rng) -> Mat {
+    let mid = (4 * p).min(a.cols().max(p));
+    let cs = right_countsketch(a, mid, rng);
+    let g = GaussianSketch::new(mid, p, rng);
+    g.apply_point_axis(&cs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shared check: S preserves column-space norms of Aᵀ (i.e.
+    /// ‖xᵀA‖ ≈ ‖xᵀAS‖ for right-sketches) to within distortion `eps`
+    /// on a handful of random directions.
+    pub(super) fn check_right_embedding(
+        a: &Mat,
+        sketched: &Mat,
+        eps: f64,
+        rng: &mut Rng,
+        trials: usize,
+    ) {
+        for _ in 0..trials {
+            let x: Vec<f64> = (0..a.rows()).map(|_| rng.normal()).collect();
+            let xa = a.transpose().matvec(&x);
+            let xas = sketched.transpose().matvec(&x);
+            let n1: f64 = xa.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let n2: f64 = xas.iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!(
+                (n1 - n2).abs() <= eps * n1.max(1e-12),
+                "distortion {} > {eps} (n1={n1}, n2={n2})",
+                (n1 - n2).abs() / n1.max(1e-12)
+            );
+        }
+    }
+
+    #[test]
+    fn right_countsketch_embeds_low_rank() {
+        let mut rng = Rng::seed_from(1);
+        // rank-4 matrix with many columns
+        let u = Mat::from_fn(6, 4, |_, _| rng.normal());
+        let v = Mat::from_fn(4, 400, |_, _| rng.normal());
+        let a = u.matmul(&v);
+        let sk = right_countsketch(&a, 128, &mut rng);
+        assert_eq!(sk.rows(), 6);
+        assert_eq!(sk.cols(), 128);
+        check_right_embedding(&a, &sk, 0.5, &mut rng, 10);
+    }
+
+    #[test]
+    fn right_cs_gauss_dims() {
+        let mut rng = Rng::seed_from(2);
+        let u = Mat::from_fn(5, 3, |_, _| rng.normal());
+        let v = Mat::from_fn(3, 300, |_, _| rng.normal());
+        let a = u.matmul(&v);
+        let sk = right_cs_gauss(&a, 96, &mut rng);
+        assert_eq!((sk.rows(), sk.cols()), (5, 96));
+        check_right_embedding(&a, &sk, 0.6, &mut rng, 10);
+    }
+
+    #[test]
+    fn right_sketch_preserves_frobenius_in_expectation() {
+        let mut rng = Rng::seed_from(3);
+        let a = Mat::from_fn(4, 200, |_, _| rng.normal());
+        let mut est = 0.0;
+        let trials = 30;
+        for _ in 0..trials {
+            est += right_countsketch(&a, 64, &mut rng).frob_norm_sq();
+        }
+        est /= trials as f64;
+        let exact = a.frob_norm_sq();
+        assert!((est - exact).abs() < 0.25 * exact, "{est} vs {exact}");
+    }
+}

@@ -1,0 +1,128 @@
+//! Subsampled Randomized Hadamard Transform (Ailon–Chazelle).
+//!
+//! `S = √(m/t)·P·H·D` — D random signs, H Walsh–Hadamard, P row
+//! sampling. The "fast Hadamard" option in the paper's Lemma 4 chain.
+//! Input dim is padded to the next power of two internally.
+
+use crate::linalg::{fft::fwht_inplace, Mat};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Srht {
+    m: usize,       // logical input dim
+    mpad: usize,    // power-of-two padded dim
+    signs: Vec<f64>,
+    rows: Vec<usize>, // t sampled coordinates of the transformed vector
+}
+
+impl Srht {
+    pub fn new(m: usize, t: usize, rng: &mut Rng) -> Self {
+        let mpad = m.next_power_of_two();
+        assert!(t <= mpad, "SRHT output {t} > padded input {mpad}");
+        let signs = (0..mpad).map(|_| rng.sign()).collect();
+        let rows = rng.sample_without_replacement(mpad, t);
+        Self { m, mpad, signs, rows }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.m
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Sketch one vector: O(m log m).
+    pub fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.m);
+        let mut buf = vec![0.0; self.mpad];
+        for (i, &v) in x.iter().enumerate() {
+            buf[i] = v * self.signs[i];
+        }
+        fwht_inplace(&mut buf);
+        // S = √(mpad/t)·P·(H/√mpad)·D — the two scales collapse to 1/√t
+        // on the unnormalized FWHT output.
+        let scale = 1.0 / (self.rows.len() as f64).sqrt();
+        self.rows.iter().map(|&r| buf[r] * scale).collect()
+    }
+
+    /// Feature-axis: `S·A`, [m×n] → [t×n].
+    pub fn apply_feature_axis(&self, a: &Mat) -> Mat {
+        assert_eq!(a.rows(), self.m);
+        let n = a.cols();
+        let mut out = Mat::zeros(self.rows.len(), n);
+        for j in 0..n {
+            let col = a.col(j);
+            let sk = self.apply_vec(&col);
+            out.set_col(j, &sk);
+        }
+        out
+    }
+
+    /// Point-axis: `A·Sᵀ`, [r×m] → [r×t].
+    pub fn apply_point_axis(&self, a: &Mat) -> Mat {
+        assert_eq!(a.cols(), self.m);
+        self.apply_feature_axis(&a.transpose()).transpose()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_with_padding() {
+        let mut rng = Rng::seed_from(1);
+        let s = Srht::new(100, 32, &mut rng); // pads to 128
+        assert_eq!(s.input_dim(), 100);
+        assert_eq!(s.output_dim(), 32);
+        assert_eq!(s.apply_vec(&vec![1.0; 100]).len(), 32);
+    }
+
+    #[test]
+    fn norm_preserved_in_expectation() {
+        let mut rng = Rng::seed_from(2);
+        let m = 64;
+        let x: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let exact: f64 = x.iter().map(|v| v * v).sum();
+        let mut acc = 0.0;
+        let trials = 400;
+        for _ in 0..trials {
+            let s = Srht::new(m, 16, &mut rng);
+            acc += s.apply_vec(&x).iter().map(|v| v * v).sum::<f64>();
+        }
+        acc /= trials as f64;
+        assert!((acc - exact).abs() < 0.15 * exact, "{acc} vs {exact}");
+    }
+
+    #[test]
+    fn full_sampling_is_orthonormal_rotation() {
+        // t = mpad ⇒ S is an orthonormal transform times √(m/t)=1:
+        // norms preserved exactly.
+        let mut rng = Rng::seed_from(3);
+        let m = 32;
+        let s = Srht::new(m, 32, &mut rng);
+        let x: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let sx = s.apply_vec(&x);
+        let n1: f64 = x.iter().map(|v| v * v).sum();
+        let n2: f64 = sx.iter().map(|v| v * v).sum();
+        assert!((n1 - n2).abs() < 1e-9 * n1, "{n1} vs {n2}");
+    }
+
+    #[test]
+    fn matrix_paths_match_vector_path() {
+        let mut rng = Rng::seed_from(4);
+        let s = Srht::new(20, 8, &mut rng);
+        let a = Mat::from_fn(20, 5, |_, _| rng.normal());
+        let fa = s.apply_feature_axis(&a);
+        for j in 0..5 {
+            let want = s.apply_vec(&a.col(j));
+            for i in 0..8 {
+                assert!((fa[(i, j)] - want[i]).abs() < 1e-12);
+            }
+        }
+        let b = Mat::from_fn(3, 20, |_, _| rng.normal());
+        let pb = s.apply_point_axis(&b);
+        assert_eq!((pb.rows(), pb.cols()), (3, 8));
+    }
+}

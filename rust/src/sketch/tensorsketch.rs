@@ -1,0 +1,172 @@
+//! TensorSketch (Pham–Pagh; Avron–Nguyen–Woodruff NIPS'14).
+//!
+//! Sketches the degree-q polynomial feature map x^{⊗q} in
+//! O(q·(nnz(x) + t log t)) per point via q independent CountSketches
+//! combined by circular convolution in the Fourier domain — the
+//! polynomial-kernel subspace embedding of the paper's Lemma 4.
+
+use crate::linalg::fft::{fft_inplace, C};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::sparse::Csc;
+
+use super::CountSketch;
+
+#[derive(Clone, Debug)]
+pub struct TensorSketch {
+    t: usize,
+    components: Vec<CountSketch>,
+}
+
+impl TensorSketch {
+    /// Degree-q TensorSketch over input dim `m`, output dim `t`
+    /// (must be a power of two for the radix-2 FFT).
+    pub fn new(m: usize, t: usize, q: usize, rng: &mut Rng) -> Self {
+        assert!(q >= 1);
+        assert!(t.is_power_of_two(), "tensorsketch dim {t} not a power of 2");
+        let components = (0..q).map(|_| CountSketch::new(m, t, rng)).collect();
+        Self { t, components }
+    }
+
+    pub fn degree(&self) -> usize {
+        self.components.len()
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.t
+    }
+
+    /// The per-component (h, s) tables — shipped to the XLA embed_poly
+    /// artifact so native and AOT paths share one sketch.
+    pub fn tables(&self) -> Vec<(&[u32], &[f64])> {
+        self.components.iter().map(|c| c.tables()).collect()
+    }
+
+    fn combine(&self, comps: Vec<Vec<f64>>) -> Vec<f64> {
+        let mut acc: Option<Vec<C>> = None;
+        for c in comps {
+            let mut f: Vec<C> = c.into_iter().map(|v| (v, 0.0)).collect();
+            fft_inplace(&mut f, false);
+            acc = Some(match acc {
+                None => f,
+                Some(a) => a
+                    .into_iter()
+                    .zip(f)
+                    .map(|(x, y)| (x.0 * y.0 - x.1 * y.1, x.0 * y.1 + x.1 * y.0))
+                    .collect(),
+            });
+        }
+        let mut spec = acc.unwrap();
+        fft_inplace(&mut spec, true);
+        spec.into_iter().map(|c| c.0).collect()
+    }
+
+    /// Sketch one dense vector.
+    pub fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        self.combine(self.components.iter().map(|c| c.apply_vec(x)).collect())
+    }
+
+    /// Sketch a sparse column in O(q·(nnz + t log t)).
+    pub fn apply_sparse_col(&self, a: &Csc, j: usize) -> Vec<f64> {
+        self.combine(
+            self.components
+                .iter()
+                .map(|c| c.apply_sparse_vec(a.col_iter(j)))
+                .collect(),
+        )
+    }
+
+    /// Sketch every column of a dense `m×n` matrix → `t×n`.
+    pub fn apply_feature_axis(&self, a: &Mat) -> Mat {
+        let n = a.cols();
+        let mut out = Mat::zeros(self.t, n);
+        for j in 0..n {
+            out.set_col(j, &self.apply_vec(&a.col(j)));
+        }
+        out
+    }
+
+    /// Sketch every column of a CSC matrix → `t×n`.
+    pub fn apply_feature_axis_sparse(&self, a: &Csc) -> Mat {
+        let n = a.cols();
+        let mut out = Mat::zeros(self.t, n);
+        for j in 0..n {
+            out.set_col(j, &self.apply_sparse_col(a, j));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dot;
+
+    #[test]
+    fn unbiased_for_polynomial_kernel() {
+        // E[⟨TS(x), TS(y)⟩] = ⟨x,y⟩^q
+        let mut rng = Rng::seed_from(1);
+        let m = 8;
+        let x: Vec<f64> = (0..m).map(|_| rng.normal() * 0.5).collect();
+        let y: Vec<f64> = (0..m).map(|_| rng.normal() * 0.5).collect();
+        for q in [2usize, 3] {
+            let exact = dot(&x, &y).powi(q as i32);
+            let trials = 500;
+            let mut acc = 0.0;
+            for _ in 0..trials {
+                let ts = TensorSketch::new(m, 64, q, &mut rng);
+                acc += dot(&ts.apply_vec(&x), &ts.apply_vec(&y));
+            }
+            acc /= trials as f64;
+            assert!((acc - exact).abs() < 0.25, "q={q}: {acc} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn degree1_equals_countsketch() {
+        let mut rng = Rng::seed_from(2);
+        let m = 16;
+        let ts = TensorSketch::new(m, 8, 1, &mut rng);
+        let x: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        let got = ts.apply_vec(&x);
+        let want = ts.components[0].apply_vec(&x);
+        for i in 0..8 {
+            assert!((got[i] - want[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sparse_matches_dense() {
+        let mut rng = Rng::seed_from(3);
+        let (m, n) = (20, 6);
+        let dense = Mat::from_fn(m, n, |i, j| if (i * 3 + j) % 4 == 0 { rng.normal() } else { 0.0 });
+        let sparse = Csc::from_dense(&dense);
+        let ts = TensorSketch::new(m, 16, 3, &mut rng);
+        let a = ts.apply_feature_axis(&dense);
+        let b = ts.apply_feature_axis_sparse(&sparse);
+        assert!(a.max_abs_diff(&b) < 1e-10);
+    }
+
+    #[test]
+    fn matches_python_oracle_semantics() {
+        // Same construction as compile/kernels/ref.py::tensorsketch —
+        // fixed tables, compare a hand-computed q=2 case. With
+        // h0 = h1 = [0,0], s = [1,1], TS(x) = conv(cs, cs) where
+        // cs = [x0+x1, 0, …] ⇒ TS = [(x0+x1)², 0, …].
+        let c0 = CountSketch::from_tables(4, vec![0, 0], vec![1.0, 1.0]);
+        let c1 = c0.clone();
+        let ts = TensorSketch { t: 4, components: vec![c0, c1] };
+        let out = ts.apply_vec(&[2.0, 3.0]);
+        assert!((out[0] - 25.0).abs() < 1e-9, "{out:?}");
+        for v in &out[1..] {
+            assert!(v.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two_dim() {
+        let mut rng = Rng::seed_from(4);
+        TensorSketch::new(8, 12, 2, &mut rng);
+    }
+}

@@ -1,0 +1,287 @@
+//! Compressed-sparse-column matrix substrate.
+//!
+//! The paper's communication bound is `Õ(sρk/ε + …)` where ρ is the
+//! *average nnz per point* — sparse datasets (bow, 20news) are where
+//! disKPCA shines. Data is column-per-point (`d × n`), so CSC makes
+//! per-point access O(nnz(point)) and the input-sparsity-time sketches
+//! (CountSketch/TensorSketch) run in O(nnz).
+
+use crate::linalg::Mat;
+
+/// CSC sparse matrix: `d` rows (features) × `n` columns (points).
+#[derive(Clone, Debug)]
+pub struct Csc {
+    rows: usize,
+    /// column j occupies indices `colptr[j]..colptr[j+1]`
+    colptr: Vec<usize>,
+    rowidx: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl Csc {
+    /// Build from per-column (row, value) lists.
+    pub fn from_columns(rows: usize, cols: Vec<Vec<(u32, f64)>>) -> Self {
+        let mut colptr = Vec::with_capacity(cols.len() + 1);
+        let mut rowidx = Vec::new();
+        let mut values = Vec::new();
+        colptr.push(0);
+        for mut col in cols {
+            col.sort_unstable_by_key(|&(r, _)| r);
+            for (r, v) in col {
+                assert!((r as usize) < rows, "row {r} out of bounds {rows}");
+                if v != 0.0 {
+                    rowidx.push(r);
+                    values.push(v);
+                }
+            }
+            colptr.push(rowidx.len());
+        }
+        Self { rows, colptr, rowidx, values }
+    }
+
+    /// Dense → CSC (drops exact zeros).
+    pub fn from_dense(m: &Mat) -> Self {
+        let cols = (0..m.cols())
+            .map(|j| {
+                (0..m.rows())
+                    .filter_map(|i| {
+                        let v = m[(i, j)];
+                        (v != 0.0).then_some((i as u32, v))
+                    })
+                    .collect()
+            })
+            .collect();
+        Self::from_columns(m.rows(), cols)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.colptr.len() - 1
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Average nnz per column — the paper's ρ.
+    pub fn avg_nnz_per_col(&self) -> f64 {
+        if self.cols() == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.cols() as f64
+        }
+    }
+
+    /// Iterate the (row, value) entries of column `j`.
+    pub fn col_iter(&self, j: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let lo = self.colptr[j];
+        let hi = self.colptr[j + 1];
+        self.rowidx[lo..hi]
+            .iter()
+            .zip(&self.values[lo..hi])
+            .map(|(&r, &v)| (r as usize, v))
+    }
+
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.colptr[j + 1] - self.colptr[j]
+    }
+
+    /// Squared euclidean norm of column `j`.
+    pub fn col_norm_sq(&self, j: usize) -> f64 {
+        self.col_iter(j).map(|(_, v)| v * v).sum()
+    }
+
+    /// Dot product of two columns (merge join on sorted row ids).
+    pub fn col_dot(&self, j1: usize, j2: usize) -> f64 {
+        let (lo1, hi1) = (self.colptr[j1], self.colptr[j1 + 1]);
+        let (lo2, hi2) = (self.colptr[j2], self.colptr[j2 + 1]);
+        let (mut a, mut b) = (lo1, lo2);
+        let mut acc = 0.0;
+        while a < hi1 && b < hi2 {
+            match self.rowidx[a].cmp(&self.rowidx[b]) {
+                std::cmp::Ordering::Less => a += 1,
+                std::cmp::Ordering::Greater => b += 1,
+                std::cmp::Ordering::Equal => {
+                    acc += self.values[a] * self.values[b];
+                    a += 1;
+                    b += 1;
+                }
+            }
+        }
+        acc
+    }
+
+    /// Dot of column `j` against a dense vector.
+    pub fn col_dot_dense(&self, j: usize, v: &[f64]) -> f64 {
+        debug_assert_eq!(v.len(), self.rows);
+        self.col_iter(j).map(|(r, x)| x * v[r]).sum()
+    }
+
+    /// Materialize column `j` densely.
+    pub fn col_dense(&self, j: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.rows];
+        for (r, v) in self.col_iter(j) {
+            out[r] = v;
+        }
+        out
+    }
+
+    /// Select columns (with repetition) into a dense `d × idx.len()` matrix.
+    pub fn select_cols_dense(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for (c, &j) in idx.iter().enumerate() {
+            for (r, v) in self.col_iter(j) {
+                out[(r, c)] = v;
+            }
+        }
+        out
+    }
+
+    /// Select a contiguous column range as a new Csc.
+    pub fn slice_cols(&self, start: usize, end: usize) -> Csc {
+        assert!(start <= end && end <= self.cols());
+        let lo = self.colptr[start];
+        let hi = self.colptr[end];
+        Csc {
+            rows: self.rows,
+            colptr: self.colptr[start..=end].iter().map(|p| p - lo).collect(),
+            rowidx: self.rowidx[lo..hi].to_vec(),
+            values: self.values[lo..hi].to_vec(),
+        }
+    }
+
+    /// Select arbitrary columns as a new Csc.
+    pub fn select_cols(&self, idx: &[usize]) -> Csc {
+        let cols = idx
+            .iter()
+            .map(|&j| self.col_iter(j).map(|(r, v)| (r as u32, v)).collect())
+            .collect();
+        Csc::from_columns(self.rows, cols)
+    }
+
+    /// Dense `Mᵀ · self` where M is `d × t`: returns `t × n`.
+    /// O(t · nnz).
+    pub fn premul_dense_t(&self, m: &Mat) -> Mat {
+        assert_eq!(m.rows(), self.rows);
+        let t = m.cols();
+        let n = self.cols();
+        let mut out = Mat::zeros(t, n);
+        for j in 0..n {
+            for (r, v) in self.col_iter(j) {
+                for k in 0..t {
+                    out[(k, j)] += m[(r, k)] * v;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols());
+        for j in 0..self.cols() {
+            for (r, v) in self.col_iter(j) {
+                out[(r, j)] = v;
+            }
+        }
+        out
+    }
+
+    pub fn frob_norm_sq(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_sparse(rng: &mut Rng, d: usize, n: usize, nnz_per_col: usize) -> Csc {
+        let cols = (0..n)
+            .map(|_| {
+                let rows = rng.sample_without_replacement(d, nnz_per_col);
+                rows.into_iter().map(|r| (r as u32, rng.normal())).collect()
+            })
+            .collect();
+        Csc::from_columns(d, cols)
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut rng = Rng::seed_from(1);
+        let s = rand_sparse(&mut rng, 10, 7, 3);
+        let d = s.to_dense();
+        let s2 = Csc::from_dense(&d);
+        assert!(s2.to_dense().max_abs_diff(&d) < 1e-15);
+        assert_eq!(s.nnz(), 21);
+        assert!((s.avg_nnz_per_col() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn col_ops_match_dense() {
+        let mut rng = Rng::seed_from(2);
+        let s = rand_sparse(&mut rng, 12, 6, 4);
+        let d = s.to_dense();
+        for j in 0..6 {
+            let dense_norm: f64 = d.col(j).iter().map(|v| v * v).sum();
+            assert!((s.col_norm_sq(j) - dense_norm).abs() < 1e-12);
+        }
+        for j1 in 0..6 {
+            for j2 in 0..6 {
+                let want: f64 = d.col(j1).iter().zip(d.col(j2)).map(|(a, b)| a * b).sum();
+                assert!((s.col_dot(j1, j2) - want).abs() < 1e-12);
+            }
+        }
+        let v: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        for j in 0..6 {
+            let want: f64 = d.col(j).iter().zip(&v).map(|(a, b)| a * b).sum();
+            assert!((s.col_dot_dense(j, &v) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn premul_matches_dense() {
+        let mut rng = Rng::seed_from(3);
+        let s = rand_sparse(&mut rng, 9, 5, 3);
+        let m = Mat::from_fn(9, 4, |_, _| rng.normal());
+        let got = s.premul_dense_t(&m);
+        let want = m.transpose().matmul(&s.to_dense());
+        assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn slicing_and_selection() {
+        let mut rng = Rng::seed_from(4);
+        let s = rand_sparse(&mut rng, 8, 10, 2);
+        let d = s.to_dense();
+        let sl = s.slice_cols(3, 7);
+        assert_eq!(sl.cols(), 4);
+        for j in 0..4 {
+            for (r, v) in sl.col_iter(j) {
+                assert_eq!(v, d[(r, j + 3)]);
+            }
+        }
+        let sel = s.select_cols(&[9, 0, 9]);
+        assert_eq!(sel.cols(), 3);
+        assert!((sel.col_norm_sq(0) - s.col_norm_sq(9)).abs() < 1e-15);
+        assert!((sel.col_norm_sq(2) - s.col_norm_sq(9)).abs() < 1e-15);
+        let seld = s.select_cols_dense(&[1, 1]);
+        assert_eq!(seld.cols(), 2);
+        for i in 0..8 {
+            assert_eq!(seld[(i, 0)], d[(i, 1)]);
+        }
+    }
+
+    #[test]
+    fn empty_columns_ok() {
+        let s = Csc::from_columns(5, vec![vec![], vec![(2, 1.5)], vec![]]);
+        assert_eq!(s.cols(), 3);
+        assert_eq!(s.nnz(), 1);
+        assert_eq!(s.col_nnz(0), 0);
+        assert_eq!(s.col_norm_sq(1), 2.25);
+        assert_eq!(s.col_dot(0, 1), 0.0);
+    }
+}

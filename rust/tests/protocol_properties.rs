@@ -1,0 +1,315 @@
+//! Property-based tests over coordinator invariants (hand-rolled
+//! random-input harness — proptest is unavailable offline; DESIGN.md
+//! §3). Each property runs across a sweep of random configurations
+//! derived from a fixed master seed, so failures are reproducible.
+
+use std::sync::Arc;
+
+use diskpca::comm::{codec, Message, PointSet};
+use diskpca::coordinator::{
+    batch_kpca, dis_css, dis_eval, dis_kpca, dis_kpca_boosted, run_cluster, Params, Worker,
+};
+use diskpca::data::{clusters, partition_power_law, zipf_sparse, Data};
+use diskpca::kernels::{gram, Kernel};
+use diskpca::linalg::Mat;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+fn random_kernel(rng: &mut Rng) -> Kernel {
+    match rng.below(4) {
+        0 => Kernel::Gauss { gamma: rng.uniform(0.1, 2.0) },
+        1 => Kernel::Poly { q: 2 + rng.below(3) as u32 },
+        2 => Kernel::ArcCos { degree: rng.below(3) as u32 },
+        _ => Kernel::Laplace { gamma: rng.uniform(0.1, 1.5) },
+    }
+}
+
+fn random_data(rng: &mut Rng) -> Data {
+    let d = 4 + rng.below(12);
+    let n = 60 + rng.below(120);
+    if rng.below(4) == 0 {
+        Data::Sparse(zipf_sparse(d * 8, n, 1 + d / 2, rng))
+    } else {
+        let k = 2 + rng.below(4);
+        Data::Dense(clusters(d, n, k, rng.uniform(0.1, 0.6), rng))
+    }
+}
+
+fn random_params(rng: &mut Rng) -> Params {
+    Params {
+        k: 2 + rng.below(4),
+        t: 8 + 8 * rng.below(3),
+        p: 24 + rng.below(40),
+        n_lev: 6 + rng.below(10),
+        n_adapt: 10 + rng.below(30),
+        w: 0,
+        m_rff: 128,
+        t2: 64,
+        seed: rng.next_u64(),
+    }
+}
+
+/// Property: for any config, the solution is orthonormal, its error
+/// is within [optimum, trace], and distributed eval == local eval.
+#[test]
+fn prop_solution_sound_across_configs() {
+    let mut rng = Rng::seed_from(0xfeed);
+    for trial in 0..8 {
+        let data = random_data(&mut rng);
+        let kernel = random_kernel(&mut rng);
+        let params = random_params(&mut rng);
+        let s = 2 + rng.below(4);
+        let shards = partition_power_law(&data, s, rng.next_u64());
+        let ((sol, err, trace), _) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |c| {
+                let sol = dis_kpca(c, kernel, &params);
+                let (e, t) = dis_eval(c);
+                (sol, e, t)
+            },
+        );
+        // orthonormal
+        let kyy = gram(kernel, &sol.y, &Data::Dense(sol.y.clone()));
+        let ltl = sol.coeffs.matmul_at_b(&kyy.matmul(&sol.coeffs));
+        let err_orth = ltl.max_abs_diff(&Mat::identity(sol.k()));
+        assert!(err_orth < 1e-3, "trial {trial}: LᵀL err {err_orth}");
+        // error bounds
+        assert!(err >= -1e-6 && err <= trace * (1.0 + 1e-9), "trial {trial}: {err} vs {trace}");
+        // distributed == local
+        let local = sol.eval_error(&data);
+        assert!(
+            (err - local).abs() <= 1e-6 * trace.max(1.0),
+            "trial {trial}: dis {err} local {local}"
+        );
+        // never beats the batch optimum
+        let opt = batch_kpca(&data.to_dense(), kernel, params.k, false, 3).opt_error;
+        assert!(err >= opt - 1e-6 * trace.max(1.0), "trial {trial}: {err} < opt {opt}");
+    }
+}
+
+/// Property: residual masses decrease monotonically as the broadcast
+/// set P grows (more span ⇒ smaller distances).
+#[test]
+fn prop_residuals_monotone_in_p() {
+    let mut rng = Rng::seed_from(0xbeef);
+    for _trial in 0..6 {
+        let data = random_data(&mut rng);
+        let kernel = random_kernel(&mut rng);
+        let mut worker = Worker::new(
+            data.clone(),
+            kernel,
+            Arc::new(NativeBackend::new()),
+        );
+        let n = data.len();
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let mut last = f64::INFINITY;
+        for take in [2usize, 8, 24] {
+            let take = take.min(n);
+            let pts = PointSet::from_data(&data, &idx[..take]);
+            let mass = match worker.handle(Message::ReqResiduals { pts }) {
+                Message::RespScalar(v) => v,
+                other => panic!("{other:?}"),
+            };
+            assert!(mass <= last + 1e-6, "residual grew: {mass} > {last}");
+            last = mass;
+        }
+    }
+}
+
+/// Property: every message survives a codec roundtrip with identical
+/// word count and tag (random payloads).
+#[test]
+fn prop_codec_roundtrip_random_messages() {
+    let mut rng = Rng::seed_from(0xc0dec);
+    for _ in 0..50 {
+        let r = 1 + rng.below(20);
+        let c = 1 + rng.below(20);
+        let m = Mat::from_fn(r, c, |_, _| rng.normal());
+        let sparse_cols: Vec<Vec<(u32, f64)>> = (0..rng.below(6))
+            .map(|_| (0..rng.below(5)).map(|_| (rng.below(50) as u32, rng.normal())).collect())
+            .collect();
+        let msgs = vec![
+            Message::RespMat(m.clone()),
+            Message::ReqScores { z: m.clone() },
+            Message::ReqFinal { coeffs: m.clone() },
+            Message::ReqKmeansStep { centers: m.clone() },
+            Message::ReqResiduals {
+                pts: PointSet::Sparse { d: 50, cols: sparse_cols.clone() },
+            },
+            Message::ReqSetSolution {
+                pts: PointSet::Dense(m.clone()),
+                coeffs: m.clone(),
+            },
+            Message::RespKmeans {
+                sums: m.clone(),
+                counts: (0..c).map(|_| rng.below(100)).collect(),
+                obj: rng.normal(),
+            },
+        ];
+        for msg in msgs {
+            let back = codec::decode(&codec::encode(&msg)).unwrap();
+            assert_eq!(back.tag(), msg.tag());
+            assert_eq!(back.words(), msg.words());
+        }
+    }
+}
+
+/// Property: partitioning preserves the multiset of points for any
+/// (n, s, seed).
+#[test]
+fn prop_partition_preserves_points() {
+    let mut rng = Rng::seed_from(0x9a27);
+    for _ in 0..10 {
+        let data = random_data(&mut rng);
+        let s = 1 + rng.below(8);
+        let shards = partition_power_law(&data, s, rng.next_u64());
+        assert_eq!(shards.len(), s);
+        assert_eq!(shards.iter().map(|x| x.len()).sum::<usize>(), data.len());
+        let total_nnz: usize = shards.iter().map(|x| x.nnz()).sum();
+        assert_eq!(total_nnz, data.nnz());
+    }
+}
+
+/// Property: the CSS certificate is sound for any config — the
+/// residual equals the single-machine kernel-trick recomputation, and
+/// the fraction lies in [0, 1].
+#[test]
+fn prop_css_certificate_sound() {
+    let mut rng = Rng::seed_from(0xc550);
+    for trial in 0..6 {
+        let data = random_data(&mut rng);
+        let kernel = random_kernel(&mut rng);
+        let params = random_params(&mut rng);
+        let s = 2 + rng.below(3);
+        let shards = partition_power_law(&data, s, rng.next_u64());
+        let (sol, _) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |c| dis_css(c, kernel, &params),
+        );
+        let frac = sol.residual_fraction();
+        assert!((0.0..=1.0).contains(&frac), "trial {trial}: frac {frac}");
+        // recompute single-machine
+        let y = sol.y.to_mat();
+        let kyy = gram(kernel, &y, &Data::Dense(y.clone()));
+        let (r, _) = diskpca::linalg::chol_psd(&kyy);
+        let kya = gram(kernel, &y, &data);
+        let pi = diskpca::linalg::solve_upper_transpose_mat(&r, &kya);
+        let norms = pi.col_norms_sq();
+        let local: f64 = diskpca::kernels::diag(kernel, &data)
+            .iter()
+            .zip(&norms)
+            .map(|(&d, &n)| (d - n).max(0.0))
+            .sum();
+        assert!(
+            (sol.residual - local).abs() <= 1e-4 * sol.trace.max(1.0),
+            "trial {trial}: dis {} vs local {local}",
+            sol.residual
+        );
+    }
+}
+
+/// Property: boosting returns the argmin attempt and installs it.
+#[test]
+fn prop_boost_returns_min_attempt() {
+    let mut rng = Rng::seed_from(0xb057);
+    for _trial in 0..4 {
+        let data = random_data(&mut rng);
+        let kernel = random_kernel(&mut rng);
+        let params = random_params(&mut rng);
+        let shards = partition_power_law(&data, 2 + rng.below(3), rng.next_u64());
+        let ((run, installed), _) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |c| {
+                let run = dis_kpca_boosted(c, kernel, &params, 3);
+                let (err, _) = dis_eval(c);
+                (run, err)
+            },
+        );
+        let min = run.errors.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(run.errors[run.winner], min);
+        assert!((installed - min).abs() <= 1e-5 * run.trace.max(1.0));
+    }
+}
+
+/// Property: degenerate shards — identical points, zero matrices, a
+/// single point — never panic and keep errors within bounds.
+#[test]
+fn prop_degenerate_data_survives() {
+    let mut rng = Rng::seed_from(0xdead);
+    let degenerates: Vec<Data> = vec![
+        // all points identical
+        Data::Dense(Mat::from_fn(5, 40, |i, _| (i as f64) * 0.3)),
+        // all zeros
+        Data::Dense(Mat::zeros(4, 30)),
+        // rank-1 data
+        {
+            let v: Vec<f64> = (0..6).map(|i| (i as f64 + 1.0) * 0.2).collect();
+            Data::Dense(Mat::from_fn(6, 50, |i, j| v[i] * ((j as f64) - 25.0) * 0.1))
+        },
+    ];
+    for data in degenerates {
+        for kernel in [
+            Kernel::Gauss { gamma: 0.5 },
+            Kernel::Poly { q: 2 },
+            Kernel::Laplace { gamma: 0.5 },
+        ] {
+            let params = Params {
+                k: 3,
+                t: 8,
+                p: 20,
+                n_lev: 5,
+                n_adapt: 8,
+                w: 0,
+                m_rff: 64,
+                t2: 32,
+                seed: rng.next_u64(),
+            };
+            let shards = partition_power_law(&data, 3, rng.next_u64());
+            let ((err, trace), _) = run_cluster(
+                shards,
+                kernel,
+                Arc::new(NativeBackend::new()),
+                move |c| {
+                    let _ = dis_kpca(c, kernel, &params);
+                    dis_eval(c)
+                },
+            );
+            assert!(err >= -1e-6, "err {err}");
+            assert!(err <= trace * (1.0 + 1e-6) + 1e-6, "err {err} trace {trace}");
+        }
+    }
+}
+
+/// Property: the word accounting is exact — total words equal the sum
+/// of the per-message `words()` on both directions (cross-checked by
+/// replaying the same run and summing by hand is impossible from
+/// outside, so we check internal consistency: table sums = total).
+#[test]
+fn prop_comm_table_sums_to_total() {
+    let mut rng = Rng::seed_from(0xacc1);
+    for _ in 0..4 {
+        let data = random_data(&mut rng);
+        let kernel = random_kernel(&mut rng);
+        let params = random_params(&mut rng);
+        let shards = partition_power_law(&data, 3, rng.next_u64());
+        let (_, stats) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |c| {
+                let _ = dis_kpca(c, kernel, &params);
+                dis_eval(c)
+            },
+        );
+        let table_total: usize = stats.table().iter().map(|(_, u, d)| u + d).sum();
+        assert_eq!(table_total, stats.total_words());
+        assert!(stats.message_count() > 0);
+    }
+}

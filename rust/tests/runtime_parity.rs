@@ -1,0 +1,159 @@
+//! Integration: XLA backend (AOT HLO artifacts ← L2 JAX ← L1 Pallas)
+//! vs the native rust oracle, and the full protocol on the XLA path.
+//!
+//! Requires `make artifacts` (skips politely otherwise).
+
+use std::sync::Arc;
+
+use diskpca::coordinator::{dis_eval, dis_kpca, run_cluster, Params};
+use diskpca::data::{partition_power_law, Data};
+use diskpca::embed::EmbedSpec;
+use diskpca::kernels::Kernel;
+use diskpca::linalg::{chol_psd, qr_thin, Mat};
+use diskpca::rng::Rng;
+use diskpca::runtime::{Backend, NativeBackend, XlaBackend};
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn xla() -> Option<XlaBackend> {
+    if !std::path::Path::new(&artifacts_dir()).join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaBackend::load(&artifacts_dir()).expect("backend load"))
+}
+
+fn rel_frob(a: &Mat, b: &Mat) -> f64 {
+    a.sub(b).frob_norm() / b.frob_norm().max(1e-12)
+}
+
+#[test]
+fn embed_parity_all_kernels() {
+    let Some(xla) = xla() else { return };
+    let native = NativeBackend::new();
+    let mut rng = Rng::seed_from(1);
+    // d=28 pads to 32; n=300 forces a ragged last block (300 = 256+44)
+    let x = Data::Dense(Mat::from_fn(28, 300, |_, _| rng.normal()));
+    for (kernel, name) in [
+        (Kernel::Gauss { gamma: 0.7 }, "gauss"),
+        (Kernel::Poly { q: 4 }, "poly"),
+        (Kernel::ArcCos { degree: 2 }, "arccos"),
+    ] {
+        let spec = EmbedSpec { kernel, m: 512, t2: 512, t: 64, seed: 33 };
+        let en = native.embed(&spec, &x);
+        let ex = xla.embed(&spec, &x);
+        assert_eq!((ex.rows(), ex.cols()), (64, 300));
+        let err = rel_frob(&ex, &en);
+        assert!(err < 2e-4, "{name} embed parity: rel err {err}");
+    }
+    assert_eq!(xla.stats.fallbacks.load(std::sync::atomic::Ordering::Relaxed), 0);
+}
+
+#[test]
+fn embed_sparse_input_parity() {
+    let Some(xla) = xla() else { return };
+    let native = NativeBackend::new();
+    let mut rng = Rng::seed_from(5);
+    let x = Data::Sparse(diskpca::data::zipf_sparse(100, 80, 12, &mut rng));
+    let spec = EmbedSpec { kernel: Kernel::Gauss { gamma: 0.3 }, m: 512, t2: 512, t: 64, seed: 9 };
+    let en = native.embed(&spec, &x);
+    let ex = xla.embed(&spec, &x);
+    assert!(rel_frob(&ex, &en) < 2e-4);
+}
+
+#[test]
+fn gram_parity_all_kernels() {
+    let Some(xla) = xla() else { return };
+    let native = NativeBackend::new();
+    let mut rng = Rng::seed_from(2);
+    let y = Mat::from_fn(90, 37, |_, _| rng.normal() * 0.4);
+    let x = Data::Dense(Mat::from_fn(90, 270, |_, _| rng.normal() * 0.4));
+    for kernel in [
+        Kernel::Gauss { gamma: 1.3 },
+        Kernel::Poly { q: 4 },
+        Kernel::ArcCos { degree: 2 },
+    ] {
+        let gn = native.gram(kernel, &y, &x);
+        let gx = xla.gram(kernel, &y, &x);
+        assert_eq!((gx.rows(), gx.cols()), (37, 270));
+        let err = rel_frob(&gx, &gn);
+        assert!(err < 5e-5, "{} gram parity: rel err {err}", kernel.name());
+    }
+}
+
+#[test]
+fn gram_fallback_for_unsupported_degree() {
+    let Some(xla) = xla() else { return };
+    let mut rng = Rng::seed_from(3);
+    let y = Mat::from_fn(10, 4, |_, _| rng.normal());
+    let x = Data::Dense(Mat::from_fn(10, 8, |_, _| rng.normal()));
+    let before = xla.stats.fallbacks.load(std::sync::atomic::Ordering::Relaxed);
+    // poly q=3 isn't in the artifact grid (q=4 baked) ⇒ native fallback
+    let g = xla.gram(Kernel::Poly { q: 3 }, &y, &x);
+    assert_eq!(g.rows(), 4);
+    let after = xla.stats.fallbacks.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(after, before + 1);
+}
+
+#[test]
+fn leverage_and_projection_parity() {
+    let Some(xla) = xla() else { return };
+    let native = NativeBackend::new();
+    let mut rng = Rng::seed_from(4);
+    // leverage: t = 64 (the artifact's t_embed)
+    let a = Mat::from_fn(200, 64, |_, _| rng.normal());
+    let (_, z) = qr_thin(&a);
+    let e = Mat::from_fn(64, 300, |_, _| rng.normal());
+    let ln = native.leverage_norms(&z, &e);
+    let lx = xla.leverage_norms(&z, &e);
+    for (i, (g, w)) in lx.iter().zip(&ln).enumerate() {
+        assert!((g - w).abs() < 1e-3 * w.max(1.0), "score {i}: {g} vs {w}");
+    }
+    // projection: |Y| = 50 pads to 512
+    let kernel = Kernel::Gauss { gamma: 0.6 };
+    let y = Mat::from_fn(12, 50, |_, _| rng.normal());
+    let kyy = diskpca::kernels::gram_sym(kernel, &y);
+    let (r, _) = chol_psd(&kyy);
+    let x = Data::Dense(Mat::from_fn(12, 120, |_, _| rng.normal()));
+    let kyx = diskpca::kernels::gram(kernel, &y, &x);
+    let diag = diskpca::kernels::diag(kernel, &x);
+    let (pin, resn) = native.project_residual(&r, &kyx, &diag);
+    let (pix, resx) = xla.project_residual(&r, &kyx, &diag);
+    assert!(rel_frob(&pix, &pin) < 1e-4, "pi parity {}", rel_frob(&pix, &pin));
+    for (a, b) in resx.iter().zip(&resn) {
+        assert!((a - b).abs() < 1e-4 * b.max(1.0), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn diskpca_end_to_end_on_xla_backend() {
+    let Some(xla) = xla() else { return };
+    let backend: Arc<dyn Backend> = Arc::new(xla);
+    let mut rng = Rng::seed_from(11);
+    let data = Data::Dense(diskpca::data::clusters(28, 400, 4, 0.15, &mut rng));
+    let shards = partition_power_law(&data, 4, 7);
+    let kernel = Kernel::Gauss { gamma: 0.8 };
+    let params = Params {
+        k: 4,
+        t: 64,
+        p: 96,
+        n_lev: 16,
+        n_adapt: 40,
+        w: 0,
+        m_rff: 512,
+        t2: 512,
+        seed: 21,
+    };
+    let ((sol, err, trace), _stats) = run_cluster(shards, kernel, backend, move |cluster| {
+        let sol = dis_kpca(cluster, kernel, &params);
+        let (err, trace) = dis_eval(cluster);
+        (sol, err, trace)
+    });
+    assert_eq!(sol.k(), 4);
+    assert!(err / trace < 0.35, "xla-path relative error {}", err / trace);
+    // exact single-machine eval of the same solution agrees (f32 slop)
+    let local = sol.eval_error(&data);
+    assert!((err - local).abs() < 1e-3 * trace, "dis {err} vs local {local}");
+}

@@ -1,0 +1,166 @@
+//! Integration: the full protocol over real TCP sockets must produce
+//! *bit-identical* decisions to the in-memory transport (the protocol
+//! is deterministic given the seed; the transport must be invisible).
+
+use std::sync::Arc;
+
+use diskpca::comm::{memory, tcp, Cluster, CommStats};
+use diskpca::coordinator::{
+    dis_css, dis_eval, dis_kpca, dis_krr, kmeans::distributed_kmeans, Params, Worker,
+};
+use diskpca::data::{clusters, partition_power_law, Data};
+use diskpca::kernels::Kernel;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+fn workload() -> (Vec<Data>, Kernel, Params) {
+    let mut rng = Rng::seed_from(4);
+    let data = Data::Dense(clusters(10, 220, 3, 0.2, &mut rng));
+    let shards = partition_power_law(&data, 4, 6);
+    let kernel = Kernel::Gauss { gamma: 0.7 };
+    let params = Params {
+        k: 3,
+        t: 16,
+        p: 32,
+        n_lev: 10,
+        n_adapt: 20,
+        w: 0,
+        m_rff: 256,
+        t2: 64,
+        seed: 12,
+    };
+    (shards, kernel, params)
+}
+
+fn run_memory() -> (f64, f64, usize, usize) {
+    let (shards, kernel, params) = workload();
+    let (links, endpoints) = memory::star(shards.len());
+    let cluster = Cluster::new(links, CommStats::new());
+    let handles: Vec<_> = shards
+        .into_iter()
+        .zip(endpoints)
+        .map(|(shard, ep)| {
+            let be = Arc::new(NativeBackend::new());
+            std::thread::spawn(move || Worker::new(shard, kernel, be).run(ep))
+        })
+        .collect();
+    let sol = dis_kpca(&cluster, kernel, &params);
+    let (err, trace) = dis_eval(&cluster);
+    let words = cluster.stats.total_words();
+    cluster.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (err, trace, sol.num_points(), words)
+}
+
+fn run_tcp() -> (f64, f64, usize, usize) {
+    let (shards, kernel, params) = workload();
+    let (links, endpoints) = tcp::star(shards.len()).unwrap();
+    let cluster = Cluster::new(links, CommStats::new());
+    let handles: Vec<_> = shards
+        .into_iter()
+        .zip(endpoints)
+        .map(|(shard, ep)| {
+            let be = Arc::new(NativeBackend::new());
+            std::thread::spawn(move || Worker::new(shard, kernel, be).run(ep))
+        })
+        .collect();
+    let sol = dis_kpca(&cluster, kernel, &params);
+    let (err, trace) = dis_eval(&cluster);
+    let words = cluster.stats.total_words();
+    cluster.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (err, trace, sol.num_points(), words)
+}
+
+#[test]
+fn tcp_and_memory_transports_agree_exactly() {
+    let (err_m, trace_m, ny_m, words_m) = run_memory();
+    let (err_t, trace_t, ny_t, words_t) = run_tcp();
+    assert_eq!(ny_m, ny_t, "different |Y| across transports");
+    assert_eq!(words_m, words_t, "different word accounting");
+    assert!((trace_m - trace_t).abs() < 1e-12);
+    // codec roundtrips through f64 bits ⇒ identical numerics
+    assert!(
+        (err_m - err_t).abs() < 1e-9 * trace_m,
+        "errors diverge: {err_m} vs {err_t}"
+    );
+}
+
+/// The extension messages (ReqKrrStats/ReqKrrEval/ReqScoresVec) must
+/// serialize identically too: run CSS + KRR over both transports.
+#[test]
+fn css_and_krr_over_tcp_match_memory() {
+    fn body(
+        cluster: &Cluster,
+        kernel: Kernel,
+        params: &Params,
+    ) -> (f64, f64, Vec<f64>) {
+        let css = dis_css(cluster, kernel, params);
+        let model = dis_krr(cluster, kernel, &css.y, 1e-3, 77);
+        (css.residual, model.train_mse, model.alpha)
+    }
+    fn spawn_and_run<E: diskpca::comm::Endpoint + Send + 'static>(
+        shards: Vec<Data>,
+        kernel: Kernel,
+        params: &Params,
+        links: Vec<Box<dyn diskpca::comm::WorkerLink>>,
+        endpoints: Vec<E>,
+    ) -> (f64, f64, Vec<f64>) {
+        let cluster = Cluster::new(links, CommStats::new());
+        let handles: Vec<_> = shards
+            .into_iter()
+            .zip(endpoints)
+            .map(|(shard, ep)| {
+                let be = Arc::new(NativeBackend::new());
+                std::thread::spawn(move || Worker::new(shard, kernel, be).run(ep))
+            })
+            .collect();
+        let out = body(&cluster, kernel, params);
+        cluster.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+        out
+    }
+    let (shards, kernel, params) = workload();
+    let (links, endpoints) = memory::star(shards.len());
+    let (res_m, mse_m, alpha_m) = spawn_and_run(shards, kernel, &params, links, endpoints);
+    let (shards, kernel, params) = workload();
+    let (links, endpoints) = tcp::star(shards.len()).unwrap();
+    let (res_t, mse_t, alpha_t) = spawn_and_run(shards, kernel, &params, links, endpoints);
+    assert!((res_m - res_t).abs() < 1e-9 * res_m.abs().max(1.0));
+    assert!((mse_m - mse_t).abs() < 1e-9 * mse_m.abs().max(1.0));
+    assert_eq!(alpha_m.len(), alpha_t.len());
+    for (a, b) in alpha_m.iter().zip(&alpha_t) {
+        assert!((a - b).abs() < 1e-9 * a.abs().max(1.0), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn kmeans_over_tcp() {
+    let (shards, kernel, params) = workload();
+    let n: usize = shards.iter().map(|s| s.len()).sum();
+    let (links, endpoints) = tcp::star(shards.len()).unwrap();
+    let cluster = Cluster::new(links, CommStats::new());
+    let handles: Vec<_> = shards
+        .into_iter()
+        .zip(endpoints)
+        .map(|(shard, ep)| {
+            let be = Arc::new(NativeBackend::new());
+            std::thread::spawn(move || Worker::new(shard, kernel, be).run(ep))
+        })
+        .collect();
+    let _ = dis_kpca(&cluster, kernel, &params);
+    let res = distributed_kmeans(&cluster, 3, 20, 7);
+    cluster.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(res.iters >= 1);
+    assert!(res.feature_space_obj(n).is_finite());
+    assert!(res.projected_obj >= 0.0);
+}
