@@ -1,0 +1,26 @@
+#!/usr/bin/env sh
+# CI gate for the rust tree: build, test, docs (warnings as errors),
+# formatting, and a fast bench smoke. Run from the repo root.
+set -eu
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo doc --no-deps (warnings denied)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "==> cargo fmt --check"
+    cargo fmt --check
+else
+    echo "==> cargo fmt unavailable (rustfmt component missing) — skipped"
+fi
+
+echo "==> bench smoke (DISKPCA_BENCH_FAST=1, single-thread sweep)"
+DISKPCA_BENCH_FAST=1 DISKPCA_BENCH_THREADS=1,2 cargo bench --bench sketches
+DISKPCA_BENCH_FAST=1 DISKPCA_BENCH_THREADS=1,2 cargo bench --bench linalg
+
+echo "CI OK"

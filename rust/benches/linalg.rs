@@ -1,8 +1,14 @@
 //! Master-side linear algebra benchmarks: the QR in disLS, the SVD in
 //! disLR, the eigensolvers behind batch KPCA — sized at the protocol's
 //! actual operating points.
+//!
+//! Swept over the `diskpca::par` pool sizes in `DISKPCA_BENCH_THREADS`
+//! (default `1,2,4`) — the matmul/QR/Gram rows are the thread-scaling
+//! headline; Jacobi eig/SVD and Cholesky stay serial by design and
+//! provide the flat baseline. Inputs are built once per suite so every
+//! thread count measures identical (bit-identical) work.
 
-use diskpca::bench_harness::{black_box, Bencher};
+use diskpca::bench_harness::{black_box, thread_sweep, Bencher};
 use diskpca::linalg::{chol_psd, eigh, qr_r_only, qr_thin, svd, top_eigh, top_k_left_singular, Mat};
 use diskpca::rng::Rng;
 
@@ -14,22 +20,13 @@ fn main() {
     let mut b = Bencher::new();
     let mut rng = Rng::seed_from(2);
 
+    // ---- inputs, built once, shared across the thread sweep ----
     // disLS master QR: (s·p)×t with s=100, p=250 → capped workload
     let stacked = randmat(&mut rng, 4000, 64);
-    b.bench("qr_r_only 4000x64 (disLS master)", || {
-        black_box(qr_r_only(&stacked))
-    });
     let a = randmat(&mut rng, 512, 128);
-    b.bench("qr_thin 512x128", || black_box(qr_thin(&a)));
-
-    // disLR master SVD: |Y|×(s·w) wide matrix via QR shrink
+    // disLR master SVD: |Y|×(s·w) wide matrix via Gram + top-eigh
     let pit = randmat(&mut rng, 250, 2000);
-    b.bench("top_k_left_singular 250x2000 k=10 (disLR)", || {
-        black_box(top_k_left_singular(&pit, 10))
-    });
     let sq = randmat(&mut rng, 200, 200);
-    b.bench("svd 200x200", || black_box(svd(&sq)));
-
     // K(Y,Y) cholesky at |Y| = 450
     let y = randmat(&mut rng, 450, 32);
     let spd = y.matmul_a_bt(&y);
@@ -37,8 +34,6 @@ fn main() {
     for i in 0..450 {
         spd_j[(i, i)] += 1.0;
     }
-    b.bench("chol_psd 450x450 (K_YY)", || black_box(chol_psd(&spd_j)));
-
     // batch-KPCA eigensolvers
     let k200 = {
         let m = randmat(&mut rng, 200, 200);
@@ -46,20 +41,33 @@ fn main() {
         s.scale(1.0 / 200.0);
         s
     };
-    b.bench("eigh(jacobi) 200x200", || black_box(eigh(&k200)));
     let k800 = {
         let m = randmat(&mut rng, 800, 64);
         m.matmul_a_bt(&m)
     };
-    let mut seed_rng = Rng::seed_from(3);
-    b.bench("top_eigh 800x800 k=10 (batch ground truth)", || {
-        black_box(top_eigh(&k800, 10, &mut seed_rng))
-    });
-
     // core matmul shape in the protocol hot loop
     let m1 = randmat(&mut rng, 450, 450);
     let m2 = randmat(&mut rng, 450, 256);
-    b.bench("matmul 450x450 * 450x256", || black_box(m1.matmul(&m2)));
+
+    for &t in &thread_sweep() {
+        diskpca::par::set_threads(t);
+
+        b.bench("qr_r_only 4000x64 (disLS master)", || {
+            black_box(qr_r_only(&stacked))
+        });
+        b.bench("qr_thin 512x128", || black_box(qr_thin(&a)));
+        b.bench("top_k_left_singular 250x2000 k=10 (disLR)", || {
+            black_box(top_k_left_singular(&pit, 10))
+        });
+        b.bench("svd 200x200", || black_box(svd(&sq)));
+        b.bench("chol_psd 450x450 (K_YY)", || black_box(chol_psd(&spd_j)));
+        b.bench("eigh(jacobi) 200x200", || black_box(eigh(&k200)));
+        let mut seed_rng = Rng::seed_from(3);
+        b.bench("top_eigh 800x800 k=10 (batch ground truth)", || {
+            black_box(top_eigh(&k800, 10, &mut seed_rng))
+        });
+        b.bench("matmul 450x450 * 450x256", || black_box(m1.matmul(&m2)));
+    }
 
     b.write_csv("results/bench_linalg.csv").unwrap();
 }

@@ -3,6 +3,10 @@
 //! the baselines at matched |Y|, and k-means (Fig 8). Driven at a
 //! reduced scale so `cargo bench` stays minutes, not hours; the
 //! figure-fidelity runs live in `diskpca fig4 …`.
+//!
+//! Set `DISKPCA_THREADS=N` to size the shared compute pool — the
+//! `threads` CSV column records it, and results are bit-identical for
+//! every N (only wall time and the Fig-7 busy-time split change).
 
 use std::sync::Arc;
 
@@ -19,7 +23,7 @@ use diskpca::rng::Rng;
 use diskpca::runtime::NativeBackend;
 
 fn params() -> Params {
-    Params { k: 10, t: 64, p: 128, n_lev: 30, n_adapt: 100, m_rff: 512, t2: 512, w: 0, seed: 5 }
+    Params { k: 10, t: 64, p: 128, n_lev: 30, n_adapt: 100, m_rff: 512, t2: 512, w: 0, seed: 5, threads: 0 }
 }
 
 fn workload(name: &str, scale: f64, workers: usize) -> (Vec<Data>, Data, Kernel) {

@@ -1,8 +1,14 @@
 //! Micro-benchmarks for the sketching substrate — the per-word cost
 //! of every compression the protocol performs. Feeds EXPERIMENTS.md
 //! §Perf (L3 hot paths).
+//!
+//! Every benchmark is swept over the `diskpca::par` pool sizes in
+//! `DISKPCA_BENCH_THREADS` (default `1,2,4`), turning the suite into a
+//! thread-scaling experiment; the `threads` CSV column tracks the
+//! curve. Inputs are built once, so each thread count measures the
+//! exact same (bit-identical) work.
 
-use diskpca::bench_harness::{black_box, Bencher};
+use diskpca::bench_harness::{black_box, thread_sweep, Bencher};
 use diskpca::linalg::Mat;
 use diskpca::rng::Rng;
 use diskpca::sketch::{CountSketch, GaussianSketch, Srht, TensorSketch};
@@ -12,47 +18,25 @@ fn main() {
     let mut b = Bencher::new();
     let mut rng = Rng::seed_from(1);
 
+    // ---- inputs, built once, shared across the thread sweep ----
     // feature-axis CountSketch: the disLS/disLR right-sketch shape
     let e = Mat::from_fn(64, 4096, |_, _| rng.normal());
     let cs_right = CountSketch::new(4096, 256, &mut rng);
-    b.bench("countsketch/point_axis 64x4096->64x256", || {
-        black_box(cs_right.apply_point_axis(&e))
-    });
-
     // feature-axis over dense features (RFF output -> E)
     let z = Mat::from_fn(512, 256, |_, _| rng.normal());
     let cs_feat = CountSketch::new(512, 64, &mut rng);
-    b.bench("countsketch/feature_axis 512x256->64x256", || {
-        black_box(cs_feat.apply_feature_axis(&z))
-    });
-
     // input-sparsity time on a Zipf-sparse shard
     let sparse = diskpca::data::zipf_sparse(4096, 512, 60, &mut rng);
     let cs_sparse = CountSketch::new(4096, 64, &mut rng);
-    b.bench("countsketch/sparse 4096x512 rho=60", || {
-        black_box(cs_sparse.apply_feature_axis_sparse(&sparse))
-    });
-
     // Gaussian sketch (the Lemma-4 tail stage)
     let g = GaussianSketch::new(512, 64, &mut rng);
     let ts_out = Mat::from_fn(512, 256, |_, _| rng.normal());
-    b.bench("gaussian/feature_axis 512x256->64x256", || {
-        black_box(g.apply_feature_axis(&ts_out))
-    });
-
     // SRHT
     let srht = Srht::new(512, 64, &mut rng);
     let x = Mat::from_fn(512, 128, |_, _| rng.normal());
-    b.bench("srht/feature_axis 512x128->64x128", || {
-        black_box(srht.apply_feature_axis(&x))
-    });
-
     // TensorSketch q=4 (polynomial kernel embed, dense + sparse)
     let ts = TensorSketch::new(784, 512, 4, &mut rng);
     let xd = Mat::from_fn(784, 64, |_, _| rng.normal());
-    b.bench("tensorsketch/dense q=4 784x64->512x64", || {
-        black_box(ts.apply_feature_axis(&xd))
-    });
     let ts_sp = TensorSketch::new(4096, 512, 4, &mut rng);
     let xs = Csc::from_dense(&Mat::from_fn(4096, 64, |i, j| {
         if (i + j) % 64 == 0 {
@@ -61,9 +45,32 @@ fn main() {
             0.0
         }
     }));
-    b.bench("tensorsketch/sparse q=4 4096x64 rho=64", || {
-        black_box(ts_sp.apply_feature_axis_sparse(&xs))
-    });
+
+    for &t in &thread_sweep() {
+        diskpca::par::set_threads(t);
+
+        b.bench("countsketch/point_axis 64x4096->64x256", || {
+            black_box(cs_right.apply_point_axis(&e))
+        });
+        b.bench("countsketch/feature_axis 512x256->64x256", || {
+            black_box(cs_feat.apply_feature_axis(&z))
+        });
+        b.bench("countsketch/sparse 4096x512 rho=60", || {
+            black_box(cs_sparse.apply_feature_axis_sparse(&sparse))
+        });
+        b.bench("gaussian/feature_axis 512x256->64x256", || {
+            black_box(g.apply_feature_axis(&ts_out))
+        });
+        b.bench("srht/feature_axis 512x128->64x128", || {
+            black_box(srht.apply_feature_axis(&x))
+        });
+        b.bench("tensorsketch/dense q=4 784x64->512x64", || {
+            black_box(ts.apply_feature_axis(&xd))
+        });
+        b.bench("tensorsketch/sparse q=4 4096x64 rho=64", || {
+            black_box(ts_sp.apply_feature_axis_sparse(&xs))
+        });
+    }
 
     b.write_csv("results/bench_sketches.csv").unwrap();
 }

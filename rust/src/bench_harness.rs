@@ -8,6 +8,9 @@ use std::time::{Duration, Instant};
 #[derive(Clone, Debug)]
 pub struct Sample {
     pub name: String,
+    /// [`crate::par`] pool size this sample ran with — recorded so
+    /// bench CSVs track the thread-scaling curve per operation.
+    pub threads: usize,
     pub iters: usize,
     pub median: Duration,
     pub mean: Duration,
@@ -26,8 +29,8 @@ impl std::fmt::Display for Sample {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{:<44} {:>10.3?} median  {:>10.3?} min  ±{:>8.3?} mad  ({} iters)",
-            self.name, self.median, self.min, self.mad, self.iters
+            "{:<44} t={:<2} {:>10.3?} median  {:>10.3?} min  ±{:>8.3?} mad  ({} iters)",
+            self.name, self.threads, self.median, self.min, self.mad, self.iters
         )
     }
 }
@@ -82,6 +85,7 @@ impl Bencher {
         let mad = devs[devs.len() / 2];
         let sample = Sample {
             name: name.to_string(),
+            threads: crate::par::threads(),
             iters: times.len(),
             median,
             mean,
@@ -93,16 +97,18 @@ impl Bencher {
         sample
     }
 
-    /// Write all samples as CSV (name,median_ns,mean_ns,min_ns,mad_ns,iters).
+    /// Write all samples as CSV
+    /// (name,threads,median_ns,mean_ns,min_ns,mad_ns,iters).
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
         if let Some(dir) = std::path::Path::new(path).parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let mut out = String::from("name,median_ns,mean_ns,min_ns,mad_ns,iters\n");
+        let mut out = String::from("name,threads,median_ns,mean_ns,min_ns,mad_ns,iters\n");
         for s in &self.samples {
             out.push_str(&format!(
-                "{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{}\n",
                 s.name,
+                s.threads,
                 s.median.as_nanos(),
                 s.mean.as_nanos(),
                 s.min.as_nanos(),
@@ -111,6 +117,26 @@ impl Bencher {
             ));
         }
         std::fs::write(path, out)
+    }
+}
+
+/// Thread counts for bench scaling sweeps: parsed from the
+/// `DISKPCA_BENCH_THREADS` environment variable (comma-separated),
+/// defaulting to `[1, 2, 4]`. Shared by the `sketches` and `linalg`
+/// bench suites so the sweep definition cannot diverge.
+pub fn thread_sweep() -> Vec<usize> {
+    let parsed: Vec<usize> = match std::env::var("DISKPCA_BENCH_THREADS") {
+        Ok(v) => v
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .filter(|&n| n >= 1)
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    if parsed.is_empty() {
+        vec![1, 2, 4]
+    } else {
+        parsed
     }
 }
 

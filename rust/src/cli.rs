@@ -68,6 +68,8 @@ COMMON FLAGS
   --backend native|xla         worker compute backend (default native)
   --scale F                    dataset size multiplier (default 0.1)
   --k N --t N --p N --n_lev N --n_adapt N --m_rff N --t2 N --seed N
+  --threads N                  compute-pool threads per process (default 1;
+                               results are bit-identical for every N)
   --workers N                  override the dataset's worker count
   --config FILE                load key=value config file
   --out DIR                    results directory (default results)

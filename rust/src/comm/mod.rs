@@ -7,7 +7,7 @@
 //! Figures 4–6/8 plot on the x-axis.
 //!
 //! Two transports implement the same star topology:
-//! - [`memory::Hub`] — in-process channels (default; experiments)
+//! - [`memory::star`] — in-process channels (default; experiments)
 //! - [`tcp`] — length-prefixed framed TCP over loopback, proving the
 //!   protocol genuinely serializes (see `codec`).
 
@@ -360,6 +360,42 @@ pub trait WorkerLink: Send {
 }
 
 /// Master-side view of the whole star.
+///
+/// Requests are sent with non-blocking channel/socket writes, so a
+/// [`Cluster::broadcast`] (or the per-worker send loop in the Alg. 1/3
+/// drivers) puts *every* worker to work before [`Cluster::gather`]
+/// blocks on the first reply — the workers' local phases overlap.
+///
+/// # Examples
+///
+/// ```
+/// use diskpca::comm::{memory, Cluster, CommStats, Message};
+///
+/// let (links, endpoints) = memory::star(2);
+/// let workers: Vec<_> = endpoints
+///     .into_iter()
+///     .map(|ep| {
+///         std::thread::spawn(move || loop {
+///             match ep.recv() {
+///                 Message::Quit => break,
+///                 Message::ReqCount => ep.send(Message::RespCount(3)),
+///                 _ => ep.send(Message::Ack),
+///             }
+///         })
+///     })
+///     .collect();
+///
+/// let cluster = Cluster::new(links, CommStats::new());
+/// cluster.set_round("demo");
+/// let replies = cluster.exchange(&Message::ReqCount);
+/// assert_eq!(replies.len(), 2);
+/// cluster.shutdown();
+/// for w in workers {
+///     w.join().unwrap();
+/// }
+/// // 2 one-word requests + 2 one-word replies + 2 one-word Quits
+/// assert_eq!(cluster.stats.total_words(), 6);
+/// ```
 pub struct Cluster {
     pub links: Vec<Box<dyn WorkerLink>>,
     pub stats: CommStats,

@@ -101,6 +101,7 @@ impl Config {
             m_rff: self.usize_or("m_rff", d.m_rff),
             t2: self.usize_or("t2", d.t2),
             seed: self.u64_or("seed", d.seed),
+            threads: self.usize_or("threads", d.threads),
         }
     }
 }

@@ -48,6 +48,7 @@ pub fn uniform_dis_lr(
     params: &Params,
     total_points: usize,
 ) -> KpcaSolution {
+    params.apply_threads();
     let y = dis_uniform_sample(cluster, total_points, params.seed);
     dis_low_rank(cluster, kernel, params, &y)
 }
@@ -103,6 +104,7 @@ pub fn uniform_batch_kpca(
     params: &Params,
     total_points: usize,
 ) -> KpcaSolution {
+    params.apply_threads();
     let sample = dis_uniform_sample(cluster, total_points, params.seed ^ 0xbbb);
     let pts = sample.to_mat();
     batch_kpca(&pts, kernel, params.k, false, params.seed).solution
@@ -249,6 +251,7 @@ mod tests {
             t2: 128,
             w: 0,
             seed: 17,
+            threads: 0,
         };
         let shards1 = partition_power_law(&data, 3, 7);
         let ((err_dis, _), _) = run_cluster(

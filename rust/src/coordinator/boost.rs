@@ -7,7 +7,7 @@
 //! derived seeds, evaluates each candidate with the exact distributed
 //! error round, and keeps the best. The communication multiplies by
 //! `reps` — the accounting picks this up automatically because every
-//! repetition's rounds go through the same [`CommStats`].
+//! repetition's rounds go through the same [`crate::comm::CommStats`].
 
 use crate::comm::Cluster;
 use crate::kernels::Kernel;
@@ -108,6 +108,7 @@ mod tests {
             m_rff: 256,
             t2: 128,
             seed: 77,
+            threads: 0,
         };
         let ((run, final_err), _) = run_cluster(
             shards,
@@ -147,6 +148,7 @@ mod tests {
             m_rff: 128,
             t2: 64,
             seed: 5,
+            threads: 0,
         };
         // single run error
         let shards = partition_power_law(&data, 3, 6);

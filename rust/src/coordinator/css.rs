@@ -48,7 +48,37 @@ impl CssSolution {
 /// Distributed kernel column subset selection (paper §5.3): leverage
 /// sampling + adaptive sampling, plus a certificate round measuring
 /// the span residual.
+///
+/// # Examples
+///
+/// ```
+/// use std::sync::Arc;
+/// use diskpca::coordinator::{dis_css, run_cluster, Params};
+/// use diskpca::data::{clusters, partition_power_law, Data};
+/// use diskpca::kernels::Kernel;
+/// use diskpca::rng::Rng;
+/// use diskpca::runtime::NativeBackend;
+///
+/// let mut rng = Rng::seed_from(2);
+/// let data = Data::Dense(clusters(6, 80, 4, 0.15, &mut rng));
+/// let shards = partition_power_law(&data, 2, 5);
+/// let kernel = Kernel::Gauss { gamma: 0.5 };
+/// let params = Params {
+///     k: 3, t: 8, p: 16, n_lev: 6, n_adapt: 10, m_rff: 128, t2: 64,
+///     ..Params::default()
+/// };
+/// let (css, _stats) = run_cluster(
+///     shards,
+///     kernel,
+///     Arc::new(NativeBackend::new()),
+///     move |cluster| dis_css(cluster, kernel, &params),
+/// );
+/// assert!(css.y.len() >= 1);
+/// // the certificate bounds the span residual as a mass fraction
+/// assert!((0.0..=1.0).contains(&css.residual_fraction()));
+/// ```
 pub fn dis_css(cluster: &Cluster, kernel: Kernel, params: &Params) -> CssSolution {
+    params.apply_threads();
     let spec = EmbedSpec {
         kernel,
         m: params.m_rff,
@@ -97,7 +127,7 @@ mod tests {
     }
 
     fn params(n_lev: usize, n_adapt: usize) -> Params {
-        Params { k: 5, t: 16, p: 40, n_lev, n_adapt, m_rff: 256, t2: 128, w: 0, seed: 11 }
+        Params { k: 5, t: 16, p: 40, n_lev, n_adapt, m_rff: 256, t2: 128, w: 0, seed: 11, threads: 0 }
     }
 
     #[test]

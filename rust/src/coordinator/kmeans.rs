@@ -168,6 +168,7 @@ mod tests {
             t2: 128,
             w: 0,
             seed: 23,
+            threads: 0,
         };
         let (result, stats) = run_cluster(
             shards,
@@ -203,6 +204,7 @@ mod tests {
             t2: 128,
             w: 0,
             seed: 3,
+            threads: 0,
         };
         // run twice with different iteration caps — more Lloyd steps
         // can't increase the (deterministic) objective

@@ -53,6 +53,40 @@ impl KrrModel {
 /// Fit distributed KRR on the representative set `y` with ridge λ and
 /// the teacher defined by `teacher_seed`. Two rounds: normal-equation
 /// aggregation, then a training-error round.
+///
+/// # Examples
+///
+/// ```
+/// use std::sync::Arc;
+/// use diskpca::coordinator::{dis_css, dis_krr, run_cluster, Params};
+/// use diskpca::data::{clusters, partition_power_law, Data};
+/// use diskpca::kernels::Kernel;
+/// use diskpca::rng::Rng;
+/// use diskpca::runtime::NativeBackend;
+///
+/// let mut rng = Rng::seed_from(3);
+/// let data = Data::Dense(clusters(5, 70, 3, 0.2, &mut rng));
+/// let shards = partition_power_law(&data, 2, 9);
+/// let kernel = Kernel::Gauss { gamma: 0.5 };
+/// let params = Params {
+///     k: 3, t: 8, p: 16, n_lev: 6, n_adapt: 8, m_rff: 128, t2: 64,
+///     ..Params::default()
+/// };
+/// let (model, _stats) = run_cluster(
+///     shards,
+///     kernel,
+///     Arc::new(NativeBackend::new()),
+///     move |cluster| {
+///         let css = dis_css(cluster, kernel, &params);
+///         dis_krr(cluster, kernel, &css.y, 1e-3, 7)
+///     },
+/// );
+/// assert_eq!(model.alpha.len(), model.y.cols());
+/// assert!(model.r_squared() <= 1.0);
+/// // predict on fresh points without any further communication
+/// let preds = model.predict(&diskpca::linalg::Mat::zeros(5, 4));
+/// assert_eq!(preds.len(), 4);
+/// ```
 pub fn dis_krr(
     cluster: &Cluster,
     kernel: Kernel,
@@ -136,7 +170,7 @@ mod tests {
     }
 
     fn params() -> Params {
-        Params { k: 6, t: 16, p: 40, n_lev: 12, n_adapt: 40, w: 0, m_rff: 256, t2: 128, seed: 31 }
+        Params { k: 6, t: 16, p: 40, n_lev: 12, n_adapt: 40, w: 0, m_rff: 256, t2: 128, seed: 31, threads: 0 }
     }
 
     #[test]

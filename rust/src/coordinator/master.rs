@@ -62,8 +62,11 @@ pub fn dis_leverage_scores(cluster: &Cluster, params: &Params) -> Vec<f64> {
         );
     }
     let sketches: Vec<Mat> = cluster.gather().into_iter().map(mat).collect();
-    // step 2: QR-factorize [E¹T¹, …, EˢTˢ]ᵀ = U·Z, broadcast Z.
-    let transposed: Vec<Mat> = sketches.iter().map(|sk| sk.transpose()).collect();
+    // step 2: QR-factorize [E¹T¹, …, EˢTˢ]ᵀ = U·Z, broadcast Z. The
+    // per-worker transposes are independent — fan them out on the pool.
+    let transposed: Vec<Mat> = crate::par::par_join(
+        sketches.iter().map(|sk| move || sk.transpose()).collect::<Vec<_>>(),
+    );
     let z = qr_r_only(&Mat::vcat_all(&transposed));
     // step 3: workers compute ℓ̃ⱼ = ‖((Zᵀ)⁻¹Eⁱ)_{:j}‖², reply masses.
     cluster
@@ -256,6 +259,35 @@ pub fn dis_low_rank(
 }
 
 /// Alg. 4 (disKPCA): the paper's headline algorithm.
+///
+/// # Examples
+///
+/// ```
+/// use std::sync::Arc;
+/// use diskpca::coordinator::{dis_kpca, run_cluster, Params};
+/// use diskpca::data::{clusters, partition_power_law, Data};
+/// use diskpca::kernels::Kernel;
+/// use diskpca::rng::Rng;
+/// use diskpca::runtime::NativeBackend;
+///
+/// let mut rng = Rng::seed_from(1);
+/// let data = Data::Dense(clusters(6, 90, 3, 0.2, &mut rng));
+/// let shards = partition_power_law(&data, 2, 3);
+/// let kernel = Kernel::Gauss { gamma: 0.6 };
+/// let params = Params {
+///     k: 2, t: 8, p: 16, n_lev: 6, n_adapt: 10, m_rff: 128, t2: 64,
+///     ..Params::default()
+/// };
+/// let (sol, stats) = run_cluster(
+///     shards,
+///     kernel,
+///     Arc::new(NativeBackend::new()),
+///     move |cluster| dis_kpca(cluster, kernel, &params),
+/// );
+/// assert_eq!(sol.k(), 2);                // k components, as (Y, C)
+/// assert!(sol.num_points() >= 1);        // |Y| sampled representatives
+/// assert!(stats.total_words() > 0);      // every round was accounted
+/// ```
 pub fn dis_kpca(cluster: &Cluster, kernel: Kernel, params: &Params) -> KpcaSolution {
     dis_kpca_mode(cluster, kernel, params, SamplingMode::Full)
 }
@@ -270,6 +302,7 @@ pub fn dis_kpca_mode(
     params: &Params,
     mode: SamplingMode,
 ) -> KpcaSolution {
+    params.apply_threads();
     let timing = std::env::var_os("DISKPCA_TIMING").is_some();
     let mut stamp = std::time::Instant::now();
     let mut lap = |label: &str| {

@@ -58,6 +58,10 @@ pub struct Params {
     pub t2: usize,
     /// master seed — every random choice derives from it.
     pub seed: u64,
+    /// compute threads for the [`crate::par`] pool (`--threads`).
+    /// 0 = leave the process-wide pool setting untouched. Results are
+    /// bit-identical for every value — only wall time changes.
+    pub threads: usize,
 }
 
 impl Default for Params {
@@ -72,6 +76,18 @@ impl Default for Params {
             m_rff: 512,
             t2: 512,
             seed: 0xd15c,
+            threads: 0,
+        }
+    }
+}
+
+impl Params {
+    /// Apply this config's thread count to the global [`crate::par`]
+    /// pool (no-op when `threads == 0`). Called at every protocol
+    /// entry point so `--threads` flows through to worker compute.
+    pub fn apply_threads(&self) {
+        if self.threads > 0 {
+            crate::par::set_threads(self.threads);
         }
     }
 }
@@ -118,6 +134,13 @@ impl KpcaSolution {
 /// Spawn `shards.len()` worker threads over the in-memory transport,
 /// run `body` against the cluster, join, and return the body's output
 /// plus the communication stats.
+///
+/// The master drivers fan every round out with non-blocking sends
+/// before gathering replies ([`crate::comm::Cluster::exchange`]), so
+/// all `s` workers execute their local phase concurrently; inside
+/// each phase the heavy math additionally runs on the shared
+/// [`crate::par`] pool. Round word counts are independent of both
+/// kinds of parallelism.
 pub fn run_cluster<T: Send + 'static>(
     shards: Vec<Data>,
     kernel: Kernel,
@@ -167,6 +190,7 @@ mod tests {
             m_rff: 256,
             t2: 128,
             seed: 7,
+            threads: 0,
         }
     }
 

@@ -48,6 +48,10 @@ impl Ctx {
         backend: Arc<dyn Backend>,
         backend_name: String,
     ) -> anyhow::Result<Self> {
+        // `--threads N` sizes the shared compute pool for every run
+        // driven from this context (native and XLA paths alike);
+        // absent or 0 leaves the pool (and DISKPCA_THREADS) untouched.
+        cfg.params().apply_threads();
         Ok(Self {
             scale: cfg.f64_or("scale", 0.1),
             backend,
@@ -213,6 +217,7 @@ mod tests {
             m_rff: 256,
             t2: 128,
             seed: 5,
+            threads: 0,
         }
     }
 

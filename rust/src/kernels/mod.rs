@@ -11,6 +11,21 @@ use crate::rng::Rng;
 /// Laplacian — another shift-invariant kernel with a Fourier random
 /// feature expansion (Cauchy spectral density), covered by Theorem 1's
 /// "other properly regularized kernels" remark.
+///
+/// # Examples
+///
+/// ```
+/// use diskpca::kernels::Kernel;
+///
+/// let k = Kernel::Gauss { gamma: 0.5 };
+/// let x = [1.0, 0.0];
+/// let y = [0.0, 1.0];
+/// assert!((k.eval(&x, &x) - 1.0).abs() < 1e-12);
+/// assert!((k.eval(&x, &y) - (-1.0f64).exp()).abs() < 1e-12);
+///
+/// let p = Kernel::Poly { q: 2 };
+/// assert!((p.eval(&[2.0, 0.0], &[3.0, 1.0]) - 36.0).abs() < 1e-12);
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Kernel {
     /// exp(-γ‖x−y‖²); the paper's σ via median trick, γ = 1/(2σ²).
@@ -97,6 +112,11 @@ fn arccos_from_parts(xy: f64, nx: f64, ny: f64, degree: u32) -> f64 {
 
 /// Gram block `K(Y, X)` with Y dense (d×|Y|) and X a data shard:
 /// returns |Y|×n. Sparse shards use O(nnz) dot products.
+///
+/// Row-parallel on the [`crate::par`] pool for large blocks; every
+/// output entry is computed by exactly one chunk with the same
+/// operations as the serial loop, so results are bit-identical for
+/// any thread count.
 pub fn gram(kernel: Kernel, y: &Mat, x: &Data) -> Mat {
     let ny = y.cols();
     let n = x.len();
@@ -107,29 +127,51 @@ pub fn gram(kernel: Kernel, y: &Mat, x: &Data) -> Mat {
     let ycols: Vec<Vec<f64>> = (0..ny).map(|j| y.col(j)).collect();
     let ynorms: Vec<f64> = ycols.iter().map(|c| dot(c, c)).collect();
     let mut out = Mat::zeros(ny, n);
+    if ny == 0 || n == 0 {
+        return out;
+    }
     match x {
         Data::Dense(xd) => {
             // one blocked matmul for all inner products (§Perf), then a
             // fused elementwise kernel map — mirrors the L1 tiling.
             let dots = y.matmul_at_b(xd); // ny×n
             let xnorms = xd.col_norms_sq();
-            for i in 0..ny {
-                let yn = ynorms[i];
-                let drow = dots.row(i);
-                let orow_base = i * n;
-                for j in 0..n {
-                    out.data_mut()[orow_base + j] =
-                        gram_entry(kernel, drow[j], yn, xnorms[j]);
+            let body = |i0: usize, chunk: &mut [f64]| {
+                let rows = chunk.len() / n;
+                for r in 0..rows {
+                    let i = i0 + r;
+                    let yn = ynorms[i];
+                    let drow = dots.row(i);
+                    let orow = &mut chunk[r * n..(r + 1) * n];
+                    for j in 0..n {
+                        orow[j] = gram_entry(kernel, drow[j], yn, xnorms[j]);
+                    }
                 }
+            };
+            if crate::linalg::parallel_worthwhile(ny * n, 8) {
+                crate::par::par_chunks(out.data_mut(), n, body);
+            } else {
+                body(0, out.data_mut());
             }
         }
         Data::Sparse(xs) => {
-            for j in 0..n {
-                let xn = xs.col_norm_sq(j);
-                for i in 0..ny {
-                    let xy = xs.col_dot_dense(j, &ycols[i]);
-                    out[(i, j)] = gram_entry(kernel, xy, ynorms[i], xn);
+            // one O(nnz) norm pass, shared by every chunk
+            let xnorms: Vec<f64> = (0..n).map(|j| xs.col_norm_sq(j)).collect();
+            let body = |i0: usize, chunk: &mut [f64]| {
+                let rows = chunk.len() / n;
+                for j in 0..n {
+                    let xn = xnorms[j];
+                    for r in 0..rows {
+                        let i = i0 + r;
+                        let xy = xs.col_dot_dense(j, &ycols[i]);
+                        chunk[r * n + j] = gram_entry(kernel, xy, ynorms[i], xn);
+                    }
                 }
+            };
+            if crate::linalg::parallel_worthwhile(ny * n, 16) {
+                crate::par::par_chunks(out.data_mut(), n, body);
+            } else {
+                body(0, out.data_mut());
             }
         }
     }
@@ -178,27 +220,49 @@ fn gram_laplace(gamma: f64, y: &Mat, x: &Data) -> Mat {
     let n = x.len();
     let ycols: Vec<Vec<f64>> = (0..ny).map(|j| y.col(j)).collect();
     let mut out = Mat::zeros(ny, n);
+    if ny == 0 || n == 0 {
+        return out;
+    }
+    let d = y.rows();
     match x {
         Data::Dense(xd) => {
-            for j in 0..n {
-                let xc = xd.col(j);
-                for i in 0..ny {
-                    let d1 = l1_dist(&xc, &ycols[i]);
-                    out[(i, j)] = (-gamma * d1).exp();
+            // materialize the shard columns once (not once per chunk)
+            let xcols: Vec<Vec<f64>> = (0..n).map(|j| xd.col(j)).collect();
+            let body = |i0: usize, chunk: &mut [f64]| {
+                let rows = chunk.len() / n;
+                for (j, xc) in xcols.iter().enumerate() {
+                    for r in 0..rows {
+                        let d1 = l1_dist(xc, &ycols[i0 + r]);
+                        chunk[r * n + j] = (-gamma * d1).exp();
+                    }
                 }
+            };
+            if crate::linalg::parallel_worthwhile(ny * n, d) {
+                crate::par::par_chunks(out.data_mut(), n, body);
+            } else {
+                body(0, out.data_mut());
             }
         }
         Data::Sparse(xs) => {
             let ybase: Vec<f64> = ycols.iter().map(|c| c.iter().map(|v| v.abs()).sum()).collect();
-            for j in 0..n {
-                for i in 0..ny {
-                    let yc = &ycols[i];
-                    let mut d1 = ybase[i];
-                    for (r, v) in xs.col_iter(j) {
-                        d1 += (v - yc[r]).abs() - yc[r].abs();
+            let body = |i0: usize, chunk: &mut [f64]| {
+                let rows = chunk.len() / n;
+                for j in 0..n {
+                    for r in 0..rows {
+                        let i = i0 + r;
+                        let yc = &ycols[i];
+                        let mut d1 = ybase[i];
+                        for (rr, v) in xs.col_iter(j) {
+                            d1 += (v - yc[rr]).abs() - yc[rr].abs();
+                        }
+                        chunk[r * n + j] = (-gamma * d1.max(0.0)).exp();
                     }
-                    out[(i, j)] = (-gamma * d1.max(0.0)).exp();
                 }
+            };
+            if crate::linalg::parallel_worthwhile(ny * n, 16) {
+                crate::par::par_chunks(out.data_mut(), n, body);
+            } else {
+                body(0, out.data_mut());
             }
         }
     }
@@ -247,13 +311,25 @@ pub fn rff_features(params: &RffParams, x: &Data) -> Mat {
     let n = x.len();
     let scale = (2.0 / m as f64).sqrt();
     let mut out = project_all(&params.omega, x);
-    for i in 0..m {
-        let b = params.b[i];
-        for v in out.row_mut(i) {
-            *v = scale * (*v + b).cos();
-        }
+    if n == 0 {
+        return out;
     }
-    let _ = n;
+    let b = &params.b;
+    // Row-parallel cos map (each feature row is independent).
+    let body = |i0: usize, chunk: &mut [f64]| {
+        let rows = chunk.len() / n;
+        for r in 0..rows {
+            let bb = b[i0 + r];
+            for v in &mut chunk[r * n..(r + 1) * n] {
+                *v = scale * (*v + bb).cos();
+            }
+        }
+    };
+    if crate::linalg::parallel_worthwhile(m * n, 8) {
+        crate::par::par_chunks(out.data_mut(), n, body);
+    } else {
+        body(0, out.data_mut());
+    }
     out
 }
 
@@ -279,12 +355,23 @@ pub fn arccos_params(d: usize, m: usize, rng: &mut Rng) -> Mat {
 
 pub fn arccos_features(omega: &Mat, degree: u32, x: &Data) -> Mat {
     let m = omega.cols();
+    let n = x.len();
     let scale = (2.0 / m as f64).sqrt();
     let mut out = project_all(omega, x);
-    for v in out.data_mut() {
-        // Θ(wᵀx)·(wᵀx)^deg — degree 0 is the pure indicator
-        // (a.powi(0) would wrongly turn clamped zeros into ones).
-        *v = if *v > 0.0 { scale * v.powi(degree as i32) } else { 0.0 };
+    if n == 0 {
+        return out;
+    }
+    let body = |_i0: usize, chunk: &mut [f64]| {
+        for v in chunk {
+            // Θ(wᵀx)·(wᵀx)^deg — degree 0 is the pure indicator
+            // (a.powi(0) would wrongly turn clamped zeros into ones).
+            *v = if *v > 0.0 { scale * v.powi(degree as i32) } else { 0.0 };
+        }
+    };
+    if crate::linalg::parallel_worthwhile(m * n, 4) {
+        crate::par::par_chunks(out.data_mut(), n, body);
+    } else {
+        body(0, out.data_mut());
     }
     out
 }
@@ -298,13 +385,27 @@ fn project_all(omega: &Mat, x: &Data) -> Mat {
             let m = omega.cols();
             let n = xs.cols();
             let mut out = Mat::zeros(m, n);
-            for j in 0..n {
-                for (r, v) in xs.col_iter(j) {
-                    let orow = omega.row(r);
-                    for i in 0..m {
-                        out[(i, j)] += orow[i] * v;
+            if m == 0 || n == 0 {
+                return out;
+            }
+            // Row-parallel: each thread walks the whole sparse shard
+            // but accumulates only its feature rows, in the same nnz
+            // order as the serial loop (bit-identical).
+            let body = |i0: usize, chunk: &mut [f64]| {
+                let rows = chunk.len() / n;
+                for j in 0..n {
+                    for (r, v) in xs.col_iter(j) {
+                        let orow = omega.row(r);
+                        for rr in 0..rows {
+                            chunk[rr * n + j] += orow[i0 + rr] * v;
+                        }
                     }
                 }
+            };
+            if crate::linalg::parallel_worthwhile(m * n, 4) {
+                crate::par::par_chunks(out.data_mut(), n, body);
+            } else {
+                body(0, out.data_mut());
             }
             out
         }

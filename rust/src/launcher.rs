@@ -44,6 +44,7 @@ pub fn master(cfg: &Config) -> anyhow::Result<()> {
     let s = cfg.usize_or("workers", 2);
     let kernel = kernel_from_flags(cfg)?;
     let params = cfg.params();
+    params.apply_threads();
     eprintln!("master: waiting for {s} workers on {addr} …");
     let links = tcp::listen(addr, s)?;
     let cluster = Cluster::new(links, CommStats::new());
@@ -80,6 +81,9 @@ pub fn worker(cfg: &Config) -> anyhow::Result<()> {
         data::io::load(path)?
     };
     let kernel = kernel_from_flags(cfg)?;
+    // worker processes size their own pool from --threads (absent or
+    // 0 leaves the pool and DISKPCA_THREADS untouched)
+    cfg.params().apply_threads();
     let backend = backend_from_name(
         cfg.str_or("backend", "native"),
         cfg.str_or("artifacts", "artifacts"),

@@ -15,8 +15,65 @@
 //!   HLO-text artifacts (`make artifacts`) and executed from rust via
 //!   PJRT ([`runtime`]). Python never runs on the request path.
 //!
-//! Start at [`coordinator`] for the headline algorithm, or
-//! `examples/quickstart.rs` for a runnable tour.
+//! `docs/ARCHITECTURE.md` maps every paper algorithm and figure to the
+//! modules below and draws the master↔worker dataflow.
+//!
+//! ## Module map
+//!
+//! | Layer | Module | Role (paper reference) |
+//! |---|---|---|
+//! | protocol | [`coordinator`] | Algs. 1–4 drivers, worker state machine, baselines, k-means/KRR/CSS extensions |
+//! | protocol | [`comm`] | star transports (in-memory, TCP) + per-word accounting (§4 cost model) |
+//! | protocol | [`embed`] | kernel subspace embeddings `E = S(φ(A))` (§5.1, Lemmas 4–5) |
+//! | compute | [`kernels`] | κ(x,y), Gram blocks, random-feature expansions (§3) |
+//! | compute | [`sketch`] | CountSketch / Gaussian / SRHT / TensorSketch (Lemma 1) |
+//! | compute | [`linalg`] | dense QR/Cholesky/SVD/eig + leverage scores |
+//! | compute | [`sparse`] | CSC shards, `O(nnz)` paths (§4's ρ-dependence) |
+//! | compute | [`par`] | shared thread pool — deterministic parallel Gram/sketch/matmul hot paths |
+//! | compute | [`runtime`] | [`runtime::Backend`]: native f64 vs XLA/PJRT artifacts |
+//! | harness | [`data`] | Table-1 dataset analogues, partitioners, disk I/O |
+//! | harness | [`experiments`] | one driver per paper table/figure (§6) |
+//! | harness | [`rng`] | xoshiro PRNG, alias tables, shared-seed sampling |
+//! | harness | [`config`] / [`cli`] / [`launcher`] | flags, `key = value` configs, multi-process deployment |
+//! | harness | [`bench_harness`] / [`json`] | offline micro-bench runner, minimal JSON |
+//!
+//! ## Quick start
+//!
+//! Run the end-to-end tour (`cargo run --release --example quickstart`)
+//! or, in code:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use diskpca::coordinator::{dis_eval, dis_kpca, run_cluster, Params};
+//! use diskpca::data::{clusters, partition_power_law, Data};
+//! use diskpca::kernels::Kernel;
+//! use diskpca::rng::Rng;
+//! use diskpca::runtime::NativeBackend;
+//!
+//! let mut rng = Rng::seed_from(7);
+//! let data = Data::Dense(clusters(8, 120, 3, 0.2, &mut rng));
+//! let shards = partition_power_law(&data, 3, 42);
+//! let kernel = Kernel::Gauss { gamma: 0.5 };
+//! let params = Params { k: 3, t: 16, p: 32, n_lev: 8, n_adapt: 16, ..Params::default() };
+//! let ((sol, err, trace), stats) = run_cluster(
+//!     shards,
+//!     kernel,
+//!     Arc::new(NativeBackend::new()),
+//!     move |cluster| {
+//!         let sol = dis_kpca(cluster, kernel, &params);
+//!         let (err, trace) = dis_eval(cluster);
+//!         (sol, err, trace)
+//!     },
+//! );
+//! assert_eq!(sol.k(), 3);
+//! assert!(err >= 0.0 && err <= trace);
+//! assert!(stats.total_words() > 0);
+//! ```
+//!
+//! Start at [`coordinator`] for the headline algorithm; [`par`] for
+//! the `--threads` scaling knob.
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod bench_harness;
 pub mod cli;
@@ -30,6 +87,7 @@ pub mod json;
 pub mod kernels;
 pub mod launcher;
 pub mod linalg;
+pub mod par;
 pub mod rng;
 pub mod runtime;
 pub mod sketch;

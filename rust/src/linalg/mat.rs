@@ -115,61 +115,109 @@ impl Mat {
         Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
     }
 
-    /// `self * other` — blocked i-k-j loop order (row-major friendly).
+    /// `self * other` — blocked i-k-j loop order (row-major friendly),
+    /// row-parallel on the [`crate::par`] pool for large products.
+    ///
+    /// Each output row is produced by exactly one chunk with the same
+    /// k-blocked accumulation order as the serial loop, so results are
+    /// bit-identical for any thread count.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul dims {}x{} * {}x{}",
             self.rows, self.cols, other.rows, other.cols);
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(m, n);
+        if m == 0 || n == 0 {
+            return out;
+        }
         const BK: usize = 64;
-        for kb in (0..k).step_by(BK) {
-            let kend = (kb + BK).min(k);
-            for i in 0..m {
-                let arow = self.row(i);
-                let orow_base = i * n;
-                for kk in kb..kend {
-                    let a = arow[kk];
+        let body = |row0: usize, chunk: &mut [f64]| {
+            let rows = chunk.len() / n;
+            for kb in (0..k).step_by(BK) {
+                let kend = (kb + BK).min(k);
+                for r in 0..rows {
+                    let arow = self.row(row0 + r);
+                    let orow = &mut chunk[r * n..(r + 1) * n];
+                    for kk in kb..kend {
+                        let a = arow[kk];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let brow = other.row(kk);
+                        for j in 0..n {
+                            orow[j] += a * brow[j];
+                        }
+                    }
+                }
+            }
+        };
+        if parallel_worthwhile(m * n, k) {
+            crate::par::par_chunks(&mut out.data, n, body);
+        } else {
+            body(0, &mut out.data);
+        }
+        out
+    }
+
+    /// `selfᵀ * other` without materializing the transpose. Row-
+    /// parallel over the m output rows (bit-identical to serial: every
+    /// out row accumulates over kk in the same ascending order).
+    pub fn matmul_at_b(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        if m == 0 || n == 0 {
+            return out;
+        }
+        let body = |row0: usize, chunk: &mut [f64]| {
+            let rows = chunk.len() / n;
+            for kk in 0..k {
+                let arow = self.row(kk);
+                let brow = other.row(kk);
+                for r in 0..rows {
+                    let a = arow[row0 + r];
                     if a == 0.0 {
                         continue;
                     }
-                    let brow = other.row(kk);
-                    let orow = &mut out.data[orow_base..orow_base + n];
+                    let orow = &mut chunk[r * n..(r + 1) * n];
                     for j in 0..n {
                         orow[j] += a * brow[j];
                     }
                 }
             }
+        };
+        if parallel_worthwhile(m * n, k) {
+            crate::par::par_chunks(&mut out.data, n, body);
+        } else {
+            body(0, &mut out.data);
         }
         out
     }
 
-    /// `selfᵀ * other` without materializing the transpose.
-    pub fn matmul_at_b(&self, other: &Mat) -> Mat {
-        assert_eq!(self.rows, other.rows);
-        let (k, m, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        for kk in 0..k {
-            let arow = self.row(kk);
-            let brow = other.row(kk);
-            for i in 0..m {
-                let a = arow[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
-        out
-    }
-
-    /// `self * otherᵀ`.
+    /// `self * otherᵀ` — row-parallel dots (one chunk per block of
+    /// output rows; bit-identical for any thread count).
     pub fn matmul_a_bt(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.cols);
-        let (m, n) = (self.rows, other.rows);
-        Mat::from_fn(m, n, |i, j| dot(self.row(i), other.row(j)))
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        if m == 0 || n == 0 {
+            return out;
+        }
+        let body = |row0: usize, chunk: &mut [f64]| {
+            let rows = chunk.len() / n;
+            for r in 0..rows {
+                let arow = self.row(row0 + r);
+                let orow = &mut chunk[r * n..(r + 1) * n];
+                for (j, o) in orow.iter_mut().enumerate() {
+                    *o = dot(arow, other.row(j));
+                }
+            }
+        };
+        if parallel_worthwhile(m * n, k) {
+            crate::par::par_chunks(&mut out.data, n, body);
+        } else {
+            body(0, &mut out.data);
+        }
+        out
     }
 
     /// `self * selfᵀ` exploiting symmetry (half the dot products) and
@@ -182,24 +230,60 @@ impl Mat {
         let m = self.rows;
         let n = self.cols;
         let mut out = Mat::zeros(m, m);
+        if m == 0 {
+            return out;
+        }
         const BR: usize = 16; // row-block: 2·16 rows of a k-chunk stay in L1/L2
         const BK: usize = 1024; // k-chunk: 8 KiB per row slice
-        for kb in (0..n).step_by(BK) {
-            let kend = (kb + BK).min(n);
-            for bi in (0..m).step_by(BR) {
-                let iend = (bi + BR).min(m);
-                for bj in (bi..m).step_by(BR) {
-                    let jend = (bj + BR).min(m);
-                    for i in bi..iend {
-                        let ri = &self.row(i)[kb..kend];
-                        let j0 = bj.max(i);
-                        for j in j0..jend {
-                            let rj = &self.row(j)[kb..kend];
-                            out.data[i * m + j] += dot(ri, rj);
+        // Upper-triangle accumulation over a contiguous row range.
+        // Per-entry the sum runs over kb-chunks in ascending order —
+        // identical for any row partitioning, so the parallel split
+        // below is bit-identical to the serial pass.
+        let body = |r0: usize, chunk: &mut [f64]| {
+            let rows = chunk.len() / m;
+            for kb in (0..n).step_by(BK) {
+                let kend = (kb + BK).min(n);
+                for bi in (0..rows).step_by(BR) {
+                    let iend = (bi + BR).min(rows);
+                    for bj in ((r0 + bi)..m).step_by(BR) {
+                        let jend = (bj + BR).min(m);
+                        for i in bi..iend {
+                            let gi = r0 + i;
+                            let ri = &self.row(gi)[kb..kend];
+                            let j0 = bj.max(gi);
+                            for j in j0..jend {
+                                let rj = &self.row(j)[kb..kend];
+                                chunk[i * m + j] += dot(ri, rj);
+                            }
                         }
                     }
                 }
             }
+        };
+        let nt = crate::par::threads();
+        if nt > 1 && m.saturating_mul(m).saturating_mul(n.max(1)) / 2 >= PAR_FLOPS_MIN {
+            // Row i of the upper triangle costs ~(m - i) dots: balance
+            // chunks by triangle weight, not by row count.
+            let nt = nt.min(m);
+            let total = m * (m + 1) / 2;
+            let target = (total + nt - 1) / nt;
+            let mut rows_per: Vec<usize> = Vec::with_capacity(nt);
+            let (mut acc, mut cnt) = (0usize, 0usize);
+            for i in 0..m {
+                acc += m - i;
+                cnt += 1;
+                if acc >= target && rows_per.len() + 1 < nt {
+                    rows_per.push(cnt);
+                    acc = 0;
+                    cnt = 0;
+                }
+            }
+            if cnt > 0 {
+                rows_per.push(cnt);
+            }
+            crate::par::par_chunks_with(&mut out.data, m, &rows_per, &body);
+        } else {
+            body(0, &mut out.data);
         }
         // mirror the upper triangle
         for i in 0..m {
@@ -352,6 +436,17 @@ impl Mat {
             data: data.iter().map(|&x| x as f64).collect(),
         }
     }
+}
+
+/// Minimum flop count before a matrix op engages the [`crate::par`]
+/// pool — below this, enqueue/latch overhead beats the speedup.
+pub(crate) const PAR_FLOPS_MIN: usize = 1 << 15;
+
+/// Should an op with `out_elems` outputs and an inner dimension of
+/// `inner` run on the pool? (Numerics are identical either way.)
+#[inline]
+pub(crate) fn parallel_worthwhile(out_elems: usize, inner: usize) -> bool {
+    crate::par::threads() > 1 && out_elems.saturating_mul(inner.max(1)) >= PAR_FLOPS_MIN
 }
 
 /// Dense dot product.

@@ -4,37 +4,101 @@
 //! paper Alg. 1 step 2), for the implicit Gram–Schmidt / Cholesky of
 //! K(Y,Y) (Appendix A), and inside the randomized eigensolver.
 
-use super::{mat::dot, Mat};
+use super::{mat::dot, Mat, PAR_FLOPS_MIN};
+
+/// Phase 1 of applying `H = I − β·v·vᵀ` to the trailing block of `a`
+/// rooted at `(row0, col0)`: the per-column scalars `β·vᵀa[:,j]`.
+///
+/// Column-parallel on big panels; each column's reduction keeps the
+/// serial i-ascending order, so the result is bit-identical to the
+/// scalar loop for any thread count.
+fn householder_dots(a: &Mat, v: &[f64], row0: usize, col0: usize, beta: f64) -> Vec<f64> {
+    let (m, n) = (a.rows(), a.cols());
+    let ncols = n - col0;
+    let compute = |j0: usize, j1: usize| -> Vec<f64> {
+        let mut out = Vec::with_capacity(j1 - j0);
+        for j in j0..j1 {
+            let mut s = 0.0;
+            for i in row0..m {
+                s += v[i - row0] * a[(i, j)];
+            }
+            out.push(s * beta);
+        }
+        out
+    };
+    let nt = crate::par::threads();
+    if nt > 1 && ncols >= 2 && (m - row0).saturating_mul(ncols) >= PAR_FLOPS_MIN {
+        let nt = nt.min(ncols);
+        let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(nt);
+        let mut at = col0;
+        for i in 0..nt {
+            let take = (n - at + (nt - i) - 1) / (nt - i);
+            ranges.push((at, at + take));
+            at += take;
+        }
+        let cref = &compute;
+        crate::par::par_join(
+            ranges
+                .into_iter()
+                .map(|(a0, b0)| move || cref(a0, b0))
+                .collect::<Vec<_>>(),
+        )
+        .into_iter()
+        .flatten()
+        .collect()
+    } else {
+        compute(col0, n)
+    }
+}
+
+/// Phase 2: the rank-1 update `a[i,j] −= s[j−col0]·v[i−row0]` over the
+/// trailing block. Row-parallel; exactly one fused multiply-subtract
+/// per element, so results match the scalar loop bit-for-bit.
+fn householder_update(a: &mut Mat, v: &[f64], s: &[f64], row0: usize, col0: usize) {
+    let (m, n) = (a.rows(), a.cols());
+    let ncols = n - col0;
+    let tail = &mut a.data_mut()[row0 * n..];
+    let body = |rr0: usize, chunk: &mut [f64]| {
+        let rows = chunk.len() / n;
+        for rr in 0..rows {
+            let vi = v[rr0 + rr];
+            let row = &mut chunk[rr * n + col0..rr * n + n];
+            for (j, x) in row.iter_mut().enumerate() {
+                *x -= s[j] * vi;
+            }
+        }
+    };
+    if crate::par::threads() > 1 && (m - row0).saturating_mul(ncols) >= PAR_FLOPS_MIN {
+        crate::par::par_chunks(tail, n, body);
+    } else {
+        body(0, tail);
+    }
+}
 
 /// Thin QR of an m×n matrix with m ≥ n: returns `(Q: m×n, R: n×n)`
 /// with `A = Q·R`, Q having orthonormal columns, R upper-triangular.
+///
+/// Panel updates run through the two-phase Householder application
+/// above, so large factorizations use the [`crate::par`] pool while
+/// staying bit-identical to the single-threaded result.
 pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
     let (m, n) = (a.rows(), a.cols());
     assert!(m >= n, "qr_thin needs m >= n, got {m}x{n}");
     let mut r = a.clone();
-    // Store Householder vectors in-place below the diagonal; betas aside.
+    // Store Householder vectors aside along with their betas.
     let mut betas = vec![0.0f64; n];
     let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
     for k in 0..n {
         // Build the Householder vector for column k.
-        let mut x: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
+        let x: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
         let alpha = -x[0].signum() * x.iter().map(|v| v * v).sum::<f64>().sqrt();
-        let mut v = x.clone();
+        let mut v = x;
         v[0] -= alpha;
         let vnorm_sq: f64 = v.iter().map(|t| t * t).sum();
         let beta = if vnorm_sq > 0.0 { 2.0 / vnorm_sq } else { 0.0 };
         // Apply H = I - beta v vᵀ to the trailing block of R.
-        for j in k..n {
-            let mut s = 0.0;
-            for i in k..m {
-                s += v[i - k] * r[(i, j)];
-            }
-            s *= beta;
-            for i in k..m {
-                r[(i, j)] -= s * v[i - k];
-            }
-        }
-        x.clear();
+        let s = householder_dots(&r, &v, k, k, beta);
+        householder_update(&mut r, &v, &s, k, k);
         betas[k] = beta;
         vs.push(v);
     }
@@ -48,16 +112,8 @@ pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
         if beta == 0.0 {
             continue;
         }
-        for j in 0..n {
-            let mut s = 0.0;
-            for i in k..m {
-                s += v[i - k] * q[(i, j)];
-            }
-            s *= beta;
-            for i in k..m {
-                q[(i, j)] -= s * v[i - k];
-            }
-        }
+        let s = householder_dots(&q, v, k, 0, beta);
+        householder_update(&mut q, v, &s, k, 0);
     }
     (q, rmat)
 }
@@ -94,16 +150,8 @@ pub fn qr_r_only(a: &Mat) -> Mat {
             continue;
         }
         let beta = 2.0 / vnorm_sq;
-        for j in k..n {
-            let mut s = 0.0;
-            for i in k..m {
-                s += v[i - k] * r[(i, j)];
-            }
-            s *= beta;
-            for i in k..m {
-                r[(i, j)] -= s * v[i - k];
-            }
-        }
+        let s = householder_dots(&r, &v, k, k, beta);
+        householder_update(&mut r, &v, &s, k, k);
     }
     Mat::from_fn(n, n, |i, j| if j >= i { r[(i, j)] } else { 0.0 })
 }

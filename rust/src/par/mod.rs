@@ -1,0 +1,505 @@
+//! Shared parallel compute engine for the worker/master hot paths.
+//!
+//! The paper's premise is that *communication*, not local computation,
+//! is the scarce resource: every worker computes Gram blocks, random
+//! feature expansions and sketches over its own partition, and only
+//! ships `O(ρk/ε + k²/ε³)` words. For the benchmarks to measure the
+//! comm-bound system the paper analyzes, the local phases must come
+//! off the critical path — this module provides the thread pool that
+//! does it, used by [`crate::kernels`], [`crate::sketch`],
+//! [`crate::linalg`] and (through those) every
+//! [`crate::runtime::Backend`].
+//!
+//! # Design
+//!
+//! - A **persistent pool** of detached worker threads sharing one job
+//!   queue (mutex + condvar). Parallel regions enqueue jobs, then the
+//!   calling thread *helps drain the queue* until its own region
+//!   completes — so regions are cheap (no per-call thread spawn) and
+//!   deadlock-free even if no pool thread could be spawned.
+//! - **Determinism by construction**: the primitives only split work
+//!   across *independent output elements*; no floating-point reduction
+//!   is ever reassociated. Every call therefore produces results
+//!   **bit-identical** to the single-threaded path, for any thread
+//!   count — `--threads 1` output matches the original serial code
+//!   exactly, and `tests/par_engine.rs` pins 1-vs-N equality all the
+//!   way up to `dis_kpca`.
+//! - **No nesting blowup**: pool threads run nested parallel calls
+//!   serially (the outer region already owns the parallelism).
+//! - **Panic propagation**: a panicking job is caught, carried through
+//!   the region latch, and re-raised on the calling thread.
+//!
+//! The pool size comes from [`set_threads`] (wired to `--threads` /
+//! `Params::threads`) or the `DISKPCA_THREADS` environment variable,
+//! and defaults to 1 so unconfigured runs match the historical serial
+//! behavior bit-for-bit.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use crate::linalg::Mat;
+
+// ------------------------------------------------------------------
+// Pool configuration
+// ------------------------------------------------------------------
+
+/// Configured parallelism; 0 = not yet resolved (lazily read from the
+/// `DISKPCA_THREADS` environment variable, default 1).
+static POOL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// True on pool worker threads and while executing a stolen job —
+    /// nested parallel calls then run serially.
+    static IN_POOL: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+fn in_pool() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+/// Set the pool size for subsequent parallel regions (clamped to ≥ 1).
+/// Wired to `--threads` and `Params::threads`; safe to call repeatedly
+/// (benchmarks sweep it). Already-spawned pool threads are reused.
+pub fn set_threads(n: usize) {
+    POOL_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Current pool size. Resolves the `DISKPCA_THREADS` environment
+/// variable on first use; defaults to 1 (serial — bit-identical to the
+/// historical single-threaded code).
+pub fn threads() -> usize {
+    let t = POOL_THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let n = std::env::var("DISKPCA_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or(1);
+    let _ = POOL_THREADS.compare_exchange(0, n, Ordering::Relaxed, Ordering::Relaxed);
+    POOL_THREADS.load(Ordering::Relaxed)
+}
+
+fn effective_threads() -> usize {
+    if in_pool() {
+        1
+    } else {
+        threads()
+    }
+}
+
+// ------------------------------------------------------------------
+// The pool itself
+// ------------------------------------------------------------------
+
+/// A type-erased job. Lifetime-erased by the region machinery; the
+/// region latch guarantees completion before borrowed data expires.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    /// Signals "queue non-empty" to sleeping pool workers.
+    work_cv: Condvar,
+    /// Number of pool threads successfully spawned so far.
+    spawned: Mutex<usize>,
+}
+
+fn shared() -> &'static Arc<Shared> {
+    static SHARED: OnceLock<Arc<Shared>> = OnceLock::new();
+    SHARED.get_or_init(|| {
+        Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            spawned: Mutex::new(0),
+        })
+    })
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    IN_POOL.with(|c| c.set(true));
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                match q.pop_front() {
+                    Some(j) => break j,
+                    None => q = shared.work_cv.wait(q).unwrap(),
+                }
+            }
+        };
+        job();
+    }
+}
+
+/// Lazily grow the pool toward `target` worker threads. Spawn failures
+/// are tolerated: the calling thread drains its own queue if need be.
+fn ensure_workers(target: usize) {
+    let sh = shared();
+    let mut spawned = sh.spawned.lock().unwrap();
+    while *spawned < target {
+        let arc = Arc::clone(sh);
+        let name = format!("diskpca-par-{}", *spawned);
+        match std::thread::Builder::new().name(name).spawn(move || worker_loop(arc)) {
+            Ok(_) => *spawned += 1,
+            Err(_) => break,
+        }
+    }
+}
+
+/// Completion latch for one parallel region; carries the first panic.
+struct Latch {
+    state: Mutex<LatchState>,
+    done_cv: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch {
+            state: Mutex::new(LatchState { remaining: n, panic: None }),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    fn complete(&self, panic: Option<Box<dyn std::any::Any + Send>>) {
+        let mut s = self.state.lock().unwrap();
+        s.remaining -= 1;
+        if s.panic.is_none() {
+            if let Some(p) = panic {
+                s.panic = Some(p);
+            }
+        }
+        self.done_cv.notify_all();
+    }
+}
+
+/// Run a set of lifetime-scoped jobs to completion on the pool. The
+/// calling thread participates by stealing queued jobs; returns only
+/// once every job has finished, re-raising the first panic.
+fn run_region<'scope>(jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+    let n = jobs.len();
+    if n == 0 {
+        return;
+    }
+    let sh = shared();
+    ensure_workers(threads().saturating_sub(1));
+    let latch = Arc::new(Latch::new(n));
+    {
+        let mut q = sh.queue.lock().unwrap();
+        for job in jobs {
+            let latch = Arc::clone(&latch);
+            let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                let saved = IN_POOL.with(|c| c.replace(true));
+                let result = catch_unwind(AssertUnwindSafe(job));
+                IN_POOL.with(|c| c.set(saved));
+                latch.complete(result.err());
+            });
+            // SAFETY: the latch wait below guarantees every job has
+            // finished executing before this function returns, so the
+            // 'scope borrows inside the job never dangle.
+            let wrapped: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(wrapped)
+            };
+            q.push_back(wrapped);
+        }
+        sh.work_cv.notify_all();
+    }
+    // Help drain the queue until our region completes. Jobs stolen
+    // here may belong to other regions — running them is harmless and
+    // keeps the system deadlock-free even with zero pool threads.
+    loop {
+        {
+            let s = latch.state.lock().unwrap();
+            if s.remaining == 0 {
+                break;
+            }
+        }
+        let job = sh.queue.lock().unwrap().pop_front();
+        match job {
+            Some(j) => j(),
+            None => {
+                // Queue empty ⇒ our remaining jobs are running on
+                // other threads; sleep until the latch trips.
+                let mut s = latch.state.lock().unwrap();
+                while s.remaining != 0 {
+                    s = latch.done_cv.wait(s).unwrap();
+                }
+                break;
+            }
+        }
+    }
+    let mut s = latch.state.lock().unwrap();
+    if let Some(p) = s.panic.take() {
+        drop(s);
+        resume_unwind(p);
+    }
+}
+
+// ------------------------------------------------------------------
+// Public primitives
+// ------------------------------------------------------------------
+
+/// Split `data` into contiguous per-thread chunks of whole `stride`-
+/// sized rows and run `f(first_row_index, chunk)` for each chunk in
+/// parallel.
+///
+/// Because every output row is written by exactly one closure call,
+/// results are **bit-identical for any thread count** — there is no
+/// floating-point reassociation. Panics in `f` propagate to the
+/// caller.
+///
+/// # Examples
+///
+/// ```
+/// let mut v = vec![0u64; 6];
+/// diskpca::par::par_chunks(&mut v, 2, |row0, chunk| {
+///     for (r, row) in chunk.chunks_mut(2).enumerate() {
+///         row[0] = (row0 + r) as u64;
+///         row[1] = 10 * (row0 + r) as u64;
+///     }
+/// });
+/// assert_eq!(v, [0, 0, 1, 10, 2, 20]);
+/// ```
+pub fn par_chunks<T, F>(data: &mut [T], stride: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    assert!(stride > 0, "par_chunks: stride must be positive");
+    assert_eq!(data.len() % stride, 0, "par_chunks: len {} not a multiple of stride {stride}", data.len());
+    let rows = data.len() / stride;
+    let nt = effective_threads().min(rows);
+    if nt <= 1 {
+        f(0, data);
+        return;
+    }
+    let mut rows_per: Vec<usize> = Vec::with_capacity(nt);
+    let mut assigned = 0usize;
+    for i in 0..nt {
+        let take = (rows - assigned + (nt - i) - 1) / (nt - i);
+        rows_per.push(take);
+        assigned += take;
+    }
+    par_chunks_with(data, stride, &rows_per, &f);
+}
+
+/// [`par_chunks`] with explicit per-chunk row counts (must sum to the
+/// row count) — used when work per row is uneven, e.g. the triangular
+/// row weights of [`Mat::gram_self`]. Chunk boundaries never affect
+/// results, only load balance.
+pub fn par_chunks_with<T, F>(data: &mut [T], stride: usize, rows_per_chunk: &[usize], f: &F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    assert!(stride > 0, "par_chunks_with: stride must be positive");
+    let rows = data.len() / stride;
+    assert_eq!(data.len() % stride, 0, "par_chunks_with: len not a multiple of stride");
+    assert_eq!(
+        rows_per_chunk.iter().sum::<usize>(),
+        rows,
+        "par_chunks_with: chunk rows must cover all rows"
+    );
+    // honour the nested-serial invariant: pool threads never enqueue
+    if rows_per_chunk.len() <= 1 || in_pool() {
+        f(0, data);
+        return;
+    }
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(rows_per_chunk.len());
+    let mut rest = data;
+    let mut row0 = 0usize;
+    for &take in rows_per_chunk {
+        if take == 0 {
+            continue;
+        }
+        let (chunk, tail) = rest.split_at_mut(take * stride);
+        rest = tail;
+        let base = row0;
+        jobs.push(Box::new(move || f(base, chunk)));
+        row0 += take;
+    }
+    run_region(jobs);
+}
+
+/// Run independent closures on the pool and collect their results in
+/// task order. Order is deterministic regardless of which thread runs
+/// which task; panics propagate.
+///
+/// # Examples
+///
+/// ```
+/// let squares = diskpca::par::par_join((0..5).map(|i| move || i * i).collect::<Vec<_>>());
+/// assert_eq!(squares, [0, 1, 4, 9, 16]);
+/// ```
+pub fn par_join<R, F>(tasks: Vec<F>) -> Vec<R>
+where
+    R: Send,
+    F: FnOnce() -> R + Send,
+{
+    let n = tasks.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if effective_threads() <= 1 || n == 1 {
+        return tasks.into_iter().map(|t| t()).collect();
+    }
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(None);
+    }
+    {
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n);
+        for (slot, task) in out.iter_mut().zip(tasks) {
+            jobs.push(Box::new(move || {
+                *slot = Some(task());
+            }));
+        }
+        run_region(jobs);
+    }
+    out.into_iter().map(|o| o.expect("par_join: task did not complete")).collect()
+}
+
+/// Assemble a `rows×cols` matrix from column blocks computed in
+/// parallel: `f(j0, j1)` must return the `rows×(j1-j0)` block holding
+/// columns `j0..j1`. Per-column results are unaffected by the block
+/// split, so output is bit-identical for any thread count.
+pub fn par_col_blocks<F>(rows: usize, cols: usize, f: F) -> Mat
+where
+    F: Fn(usize, usize) -> Mat + Sync,
+{
+    if cols == 0 {
+        return Mat::zeros(rows, 0);
+    }
+    let nt = effective_threads().min(cols);
+    if nt <= 1 {
+        let m = f(0, cols);
+        assert_eq!((m.rows(), m.cols()), (rows, cols), "par_col_blocks: bad block shape");
+        return m;
+    }
+    let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(nt);
+    let mut j0 = 0usize;
+    for i in 0..nt {
+        let take = (cols - j0 + (nt - i) - 1) / (nt - i);
+        ranges.push((j0, j0 + take));
+        j0 += take;
+    }
+    let fref = &f;
+    let blocks = par_join(
+        ranges
+            .into_iter()
+            .map(|(a, b)| move || fref(a, b))
+            .collect::<Vec<_>>(),
+    );
+    let mut total = 0usize;
+    for blk in &blocks {
+        assert_eq!(blk.rows(), rows, "par_col_blocks: block has wrong row count");
+        total += blk.cols();
+    }
+    assert_eq!(total, cols, "par_col_blocks: blocks do not cover all columns");
+    Mat::hcat_all(&blocks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_exactly_once() {
+        set_threads(4);
+        let mut v = vec![0usize; 7 * 3];
+        par_chunks(&mut v, 3, |row0, chunk| {
+            for (r, row) in chunk.chunks_mut(3).enumerate() {
+                for x in row.iter_mut() {
+                    *x += row0 + r + 1; // +1 so untouched rows are detectable
+                }
+            }
+        });
+        for i in 0..7 {
+            for j in 0..3 {
+                assert_eq!(v[i * 3 + j], i + 1, "row {i}");
+            }
+        }
+        set_threads(1);
+    }
+
+    #[test]
+    fn join_preserves_order() {
+        set_threads(3);
+        let tasks: Vec<_> = (0..17).map(|i| move || i * 10).collect();
+        let got = par_join(tasks);
+        assert_eq!(got, (0..17).map(|i| i * 10).collect::<Vec<_>>());
+        set_threads(1);
+    }
+
+    #[test]
+    fn panics_propagate_from_chunks() {
+        set_threads(4);
+        let result = std::panic::catch_unwind(|| {
+            let mut v = vec![0.0f64; 64];
+            // the chunk holding the final row panics — exactly one
+            // chunk fires under every partition, incl. the serial one
+            par_chunks(&mut v, 8, |row0, chunk| {
+                if row0 + chunk.len() / 8 == 8 {
+                    panic!("worker chunk failed");
+                }
+            });
+        });
+        assert!(result.is_err(), "panic must cross the pool boundary");
+        set_threads(1);
+        // pool must still be usable afterwards
+        set_threads(2);
+        let ok = par_join(vec![|| 1, || 2]);
+        assert_eq!(ok, vec![1, 2]);
+        set_threads(1);
+    }
+
+    #[test]
+    fn col_blocks_reassemble() {
+        set_threads(4);
+        let m = par_col_blocks(3, 10, |j0, j1| {
+            Mat::from_fn(3, j1 - j0, |i, j| (i * 100 + j0 + j) as f64)
+        });
+        assert_eq!((m.rows(), m.cols()), (3, 10));
+        for i in 0..3 {
+            for j in 0..10 {
+                assert_eq!(m[(i, j)], (i * 100 + j) as f64);
+            }
+        }
+        set_threads(1);
+    }
+
+    #[test]
+    fn nested_regions_run_serially_without_deadlock() {
+        set_threads(4);
+        let outer = par_join(
+            (0..4)
+                .map(|i| {
+                    move || {
+                        let mut v = vec![0usize; 16];
+                        par_chunks(&mut v, 4, |r0, c| {
+                            for x in c.iter_mut() {
+                                *x = r0 + i;
+                            }
+                        });
+                        v.iter().sum::<usize>()
+                    }
+                })
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(outer.len(), 4);
+        set_threads(1);
+    }
+}

@@ -4,7 +4,7 @@
 //! wrap the L1 Pallas kernels) are compiled on the PJRT CPU client and
 //! cached. The `xla` crate's client is `Rc`-based (!Send), so a single
 //! **device service thread** owns the client + executables and worker
-//! threads submit [`Call`]s over a channel — the same shape as one
+//! threads submit `Call`s over a channel — the same shape as one
 //! shared accelerator per host.
 //!
 //! Inputs are padded to the artifact grid (zero feature-rows never

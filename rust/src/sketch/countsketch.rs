@@ -64,49 +64,102 @@ impl CountSketch {
     }
 
     /// Feature-axis sketch of a `m×n` matrix: `S·A → t×n`.
+    ///
+    /// Bucket-parallel on the [`crate::par`] pool for large inputs: an
+    /// inverted bucket→rows index lets each output row be accumulated
+    /// independently, in the same ascending input-row order as the
+    /// serial loop — results are bit-identical for any thread count.
     pub fn apply_feature_axis(&self, a: &Mat) -> Mat {
         assert_eq!(a.rows(), self.h.len());
+        let m = a.rows();
         let n = a.cols();
         let mut out = Mat::zeros(self.t, n);
-        for i in 0..a.rows() {
-            let bucket = self.h[i] as usize;
-            let sign = self.s[i];
-            let arow = a.row(i);
-            let orow = out.row_mut(bucket);
-            for j in 0..n {
-                orow[j] += sign * arow[j];
+        if n == 0 || m == 0 {
+            return out;
+        }
+        if crate::linalg::parallel_worthwhile(m * n, 2) {
+            let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); self.t];
+            for (i, &b) in self.h.iter().enumerate() {
+                buckets[b as usize].push(i as u32);
+            }
+            let body = |b0: usize, chunk: &mut [f64]| {
+                let rows = chunk.len() / n;
+                for r in 0..rows {
+                    let orow = &mut chunk[r * n..(r + 1) * n];
+                    for &i in &buckets[b0 + r] {
+                        let sign = self.s[i as usize];
+                        let arow = a.row(i as usize);
+                        for j in 0..n {
+                            orow[j] += sign * arow[j];
+                        }
+                    }
+                }
+            };
+            crate::par::par_chunks(out.data_mut(), n, body);
+        } else {
+            for i in 0..m {
+                let bucket = self.h[i] as usize;
+                let sign = self.s[i];
+                let arow = a.row(i);
+                let orow = out.row_mut(bucket);
+                for j in 0..n {
+                    orow[j] += sign * arow[j];
+                }
             }
         }
         out
     }
 
-    /// Feature-axis sketch of a CSC matrix in O(nnz).
+    /// Feature-axis sketch of a CSC matrix in O(nnz). Column-block
+    /// parallel (columns are independent, so the split is exact).
     pub fn apply_feature_axis_sparse(&self, a: &Csc) -> Mat {
         assert_eq!(a.rows(), self.h.len());
         let n = a.cols();
-        let mut out = Mat::zeros(self.t, n);
-        for j in 0..n {
-            for (r, v) in a.col_iter(j) {
-                out[(self.h[r] as usize, j)] += self.s[r] * v;
+        let build = |j0: usize, j1: usize| {
+            let mut blk = Mat::zeros(self.t, j1 - j0);
+            for j in j0..j1 {
+                for (r, v) in a.col_iter(j) {
+                    blk[(self.h[r] as usize, j - j0)] += self.s[r] * v;
+                }
             }
+            blk
+        };
+        // per-column cost ~ nnz/col (unknown up front): rough gate
+        if crate::linalg::parallel_worthwhile(n, 256) {
+            crate::par::par_col_blocks(self.t, n, build)
+        } else {
+            build(0, n)
         }
-        out
     }
 
     /// Point-axis (right) sketch of an `r×n` matrix: `A·Sᵀ → r×t`.
     /// This compresses the *number of points* — Alg. 1 / Alg. 3.
+    /// Row-parallel (each output row depends on one input row only).
     pub fn apply_point_axis(&self, a: &Mat) -> Mat {
         assert_eq!(a.cols(), self.h.len());
         let r = a.rows();
+        let n = a.cols();
         let mut out = Mat::zeros(r, self.t);
-        for i in 0..r {
-            let arow = a.row(i);
-            let orow = out.row_mut(i);
-            for (j, &v) in arow.iter().enumerate() {
-                if v != 0.0 {
-                    orow[self.h[j] as usize] += self.s[j] * v;
+        if r == 0 {
+            return out;
+        }
+        let t = self.t;
+        let body = |i0: usize, chunk: &mut [f64]| {
+            let rows = chunk.len() / t;
+            for rr in 0..rows {
+                let arow = a.row(i0 + rr);
+                let orow = &mut chunk[rr * t..(rr + 1) * t];
+                for (j, &v) in arow.iter().enumerate() {
+                    if v != 0.0 {
+                        orow[self.h[j] as usize] += self.s[j] * v;
+                    }
                 }
             }
+        };
+        if crate::linalg::parallel_worthwhile(r * n, 2) {
+            crate::par::par_chunks(out.data_mut(), t, body);
+        } else {
+            body(0, out.data_mut());
         }
         out
     }

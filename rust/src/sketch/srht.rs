@@ -46,17 +46,28 @@ impl Srht {
         self.rows.iter().map(|&r| buf[r] * scale).collect()
     }
 
-    /// Feature-axis: `S·A`, [m×n] → [t×n].
+    /// Feature-axis: `S·A`, [m×n] → [t×n]. Column-parallel on the
+    /// [`crate::par`] pool (one FWHT per column; columns independent,
+    /// so results are bit-identical for any thread count).
     pub fn apply_feature_axis(&self, a: &Mat) -> Mat {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
-        let mut out = Mat::zeros(self.rows.len(), n);
-        for j in 0..n {
-            let col = a.col(j);
-            let sk = self.apply_vec(&col);
-            out.set_col(j, &sk);
+        let t = self.rows.len();
+        let build = |j0: usize, j1: usize| {
+            let mut blk = Mat::zeros(t, j1 - j0);
+            for j in j0..j1 {
+                let col = a.col(j);
+                let sk = self.apply_vec(&col);
+                blk.set_col(j - j0, &sk);
+            }
+            blk
+        };
+        // per-column cost ~ mpad·log(mpad): skip the pool on tiny inputs
+        if crate::linalg::parallel_worthwhile(n, self.mpad * 16) {
+            crate::par::par_col_blocks(t, n, build)
+        } else {
+            build(0, n)
         }
-        out
     }
 
     /// Point-axis: `A·Sᵀ`, [r×m] → [r×t].

@@ -77,23 +77,43 @@ impl TensorSketch {
     }
 
     /// Sketch every column of a dense `m×n` matrix → `t×n`.
+    ///
+    /// Columns are independent (q CountSketches + FFT convolution per
+    /// point), so the [`crate::par`] pool splits them into blocks —
+    /// per-column results are bit-identical for any thread count.
     pub fn apply_feature_axis(&self, a: &Mat) -> Mat {
         let n = a.cols();
-        let mut out = Mat::zeros(self.t, n);
-        for j in 0..n {
-            out.set_col(j, &self.apply_vec(&a.col(j)));
+        let build = |j0: usize, j1: usize| {
+            let mut blk = Mat::zeros(self.t, j1 - j0);
+            for j in j0..j1 {
+                blk.set_col(j - j0, &self.apply_vec(&a.col(j)));
+            }
+            blk
+        };
+        // per-column cost ~ q·(m + t·log t): skip the pool when tiny
+        if crate::linalg::parallel_worthwhile(n, self.t * 32) {
+            crate::par::par_col_blocks(self.t, n, build)
+        } else {
+            build(0, n)
         }
-        out
     }
 
-    /// Sketch every column of a CSC matrix → `t×n`.
+    /// Sketch every column of a CSC matrix → `t×n` (column-parallel,
+    /// O(q·(nnz + t log t)) per column).
     pub fn apply_feature_axis_sparse(&self, a: &Csc) -> Mat {
         let n = a.cols();
-        let mut out = Mat::zeros(self.t, n);
-        for j in 0..n {
-            out.set_col(j, &self.apply_sparse_col(a, j));
+        let build = |j0: usize, j1: usize| {
+            let mut blk = Mat::zeros(self.t, j1 - j0);
+            for j in j0..j1 {
+                blk.set_col(j - j0, &self.apply_sparse_col(a, j));
+            }
+            blk
+        };
+        if crate::linalg::parallel_worthwhile(n, self.t * 32) {
+            crate::par::par_col_blocks(self.t, n, build)
+        } else {
+            build(0, n)
         }
-        out
     }
 }
 

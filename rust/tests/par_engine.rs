@@ -1,0 +1,237 @@
+//! Parallel-engine integration tests.
+//!
+//! The `diskpca::par` pool promises *bit-identical* results for every
+//! thread count — parallelism only ever splits independent output
+//! elements, never reassociates a floating-point reduction. These
+//! tests pin that promise on every parallelized hot path, all the way
+//! up to the full `dis_kpca` protocol, plus panic propagation.
+//!
+//! Note on the global pool: the thread count is process-wide and these
+//! tests run concurrently under `cargo test`. The bit-identity tests
+//! are safe *because* of the property under test — results do not
+//! depend on the pool size, so a racing `set_threads` cannot change
+//! any asserted value — and the panic test triggers on the chunk
+//! holding the final row, which exists under every partition.
+
+use std::sync::Arc;
+
+use diskpca::coordinator::{dis_eval, dis_kpca, run_cluster, Params};
+use diskpca::data::{clusters, partition_power_law, zipf_sparse, Data};
+use diskpca::kernels::{self, Kernel};
+use diskpca::linalg::{qr_r_only, qr_thin, Mat};
+use diskpca::par;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+use diskpca::sketch::{CountSketch, Srht, TensorSketch};
+use diskpca::sparse::Csc;
+
+/// Evaluate `f` under a 1-thread pool and a 4-thread pool and assert
+/// the two matrices agree to the last bit.
+fn assert_threads_invariant(name: &str, f: impl Fn() -> Mat) {
+    par::set_threads(1);
+    let serial = f();
+    par::set_threads(4);
+    let parallel = f();
+    par::set_threads(1);
+    assert_eq!(
+        (serial.rows(), serial.cols()),
+        (parallel.rows(), parallel.cols()),
+        "{name}: shape mismatch"
+    );
+    assert!(serial.data() == parallel.data(), "{name}: bits differ between 1 and 4 threads");
+}
+
+fn randmat(rng: &mut Rng, m: usize, n: usize) -> Mat {
+    Mat::from_fn(m, n, |_, _| rng.normal())
+}
+
+#[test]
+fn matmul_family_thread_invariant() {
+    let mut rng = Rng::seed_from(101);
+    let a = randmat(&mut rng, 90, 80);
+    let b = randmat(&mut rng, 80, 70);
+    assert_threads_invariant("matmul", || a.matmul(&b));
+
+    let tall = randmat(&mut rng, 600, 48);
+    let tall2 = randmat(&mut rng, 600, 52);
+    assert_threads_invariant("matmul_at_b", || tall.matmul_at_b(&tall2));
+
+    let wide1 = randmat(&mut rng, 120, 300);
+    let wide2 = randmat(&mut rng, 90, 300);
+    assert_threads_invariant("matmul_a_bt", || wide1.matmul_a_bt(&wide2));
+
+    let g = randmat(&mut rng, 150, 400);
+    assert_threads_invariant("gram_self", || g.gram_self());
+}
+
+#[test]
+fn gram_blocks_thread_invariant_and_match_serial_reference() {
+    let mut rng = Rng::seed_from(102);
+    let d = 6;
+    let y = randmat(&mut rng, d, 48);
+    let dense = randmat(&mut rng, d, 600);
+    let sparse = Csc::from_dense(&Mat::from_fn(d, 600, |i, j| {
+        if (i + j) % 3 == 0 {
+            rng.normal()
+        } else {
+            0.0
+        }
+    }));
+    for kernel in [
+        Kernel::Gauss { gamma: 0.4 },
+        Kernel::Poly { q: 3 },
+        Kernel::ArcCos { degree: 2 },
+        Kernel::Laplace { gamma: 0.3 },
+    ] {
+        let xd = Data::Dense(dense.clone());
+        let yd = y.clone();
+        assert_threads_invariant(&format!("gram dense {}", kernel.name()), move || {
+            kernels::gram(kernel, &yd, &xd)
+        });
+        let xs = Data::Sparse(sparse.clone());
+        let ys = y.clone();
+        assert_threads_invariant(&format!("gram sparse {}", kernel.name()), move || {
+            kernels::gram(kernel, &ys, &xs)
+        });
+    }
+    // parallel gram entries must equal the scalar κ(x, y) reference
+    par::set_threads(4);
+    let k = Kernel::Gauss { gamma: 0.4 };
+    let g = kernels::gram(k, &y, &Data::Dense(dense.clone()));
+    for i in [0usize, 13, 47] {
+        for j in [0usize, 99, 599] {
+            let want = k.eval(&y.col(i), &dense.col(j));
+            assert!((g[(i, j)] - want).abs() < 1e-12, "entry ({i},{j})");
+        }
+    }
+    par::set_threads(1);
+}
+
+#[test]
+fn feature_maps_thread_invariant() {
+    let mut rng = Rng::seed_from(103);
+    let d = 10;
+    let x = Data::Dense(randmat(&mut rng, d, 128));
+    let rff = kernels::rff_params(d, 512, 0.5, &mut rng);
+    assert_threads_invariant("rff_features", || kernels::rff_features(&rff, &x));
+
+    let omega = kernels::arccos_params(d, 512, &mut rng);
+    assert_threads_invariant("arccos_features", || kernels::arccos_features(&omega, 2, &x));
+
+    let xs = Data::Sparse(zipf_sparse(512, 200, 30, &mut rng));
+    let omega_sp = kernels::arccos_params(512, 256, &mut rng);
+    assert_threads_invariant("arccos_features sparse", || {
+        kernels::arccos_features(&omega_sp, 1, &xs)
+    });
+}
+
+#[test]
+fn sketches_thread_invariant() {
+    let mut rng = Rng::seed_from(104);
+    let e = randmat(&mut rng, 64, 4096);
+    let cs_point = CountSketch::new(4096, 256, &mut rng);
+    assert_threads_invariant("countsketch point_axis", || cs_point.apply_point_axis(&e));
+
+    let z = randmat(&mut rng, 512, 256);
+    let cs_feat = CountSketch::new(512, 64, &mut rng);
+    assert_threads_invariant("countsketch feature_axis", || cs_feat.apply_feature_axis(&z));
+
+    let sp = zipf_sparse(512, 300, 40, &mut rng);
+    let cs_sp = CountSketch::new(512, 64, &mut rng);
+    assert_threads_invariant("countsketch sparse", || cs_sp.apply_feature_axis_sparse(&sp));
+
+    let ts = TensorSketch::new(96, 128, 3, &mut rng);
+    let xd = randmat(&mut rng, 96, 40);
+    assert_threads_invariant("tensorsketch dense", || ts.apply_feature_axis(&xd));
+    let xsp = Csc::from_dense(&Mat::from_fn(96, 40, |i, j| {
+        if (i * 5 + j) % 7 == 0 {
+            1.0 + (i + j) as f64 * 0.01
+        } else {
+            0.0
+        }
+    }));
+    assert_threads_invariant("tensorsketch sparse", || ts.apply_feature_axis_sparse(&xsp));
+
+    let srht = Srht::new(200, 64, &mut rng);
+    let xr = randmat(&mut rng, 200, 48);
+    assert_threads_invariant("srht feature_axis", || srht.apply_feature_axis(&xr));
+}
+
+#[test]
+fn qr_thread_invariant() {
+    let mut rng = Rng::seed_from(105);
+    let a = randmat(&mut rng, 500, 150);
+    assert_threads_invariant("qr_thin Q", || qr_thin(&a).0);
+    assert_threads_invariant("qr_thin R", || qr_thin(&a).1);
+    // tall path (CholeskyQR via matmul_at_b)
+    let tall = randmat(&mut rng, 4000, 64);
+    assert_threads_invariant("qr_r_only tall", || qr_r_only(&tall));
+    // Householder path (m <= 4n) with panels above the parallel cutoff
+    let mid = randmat(&mut rng, 500, 140);
+    assert_threads_invariant("qr_r_only householder", || qr_r_only(&mid));
+}
+
+#[test]
+fn par_chunks_propagates_worker_panics() {
+    par::set_threads(4);
+    let caught = std::panic::catch_unwind(|| {
+        let mut buf = vec![0.0f64; 32 * 8];
+        // panic in whichever chunk holds the final row — fires exactly
+        // once under every partition (serial included), so the test is
+        // immune to concurrent set_threads calls from sibling tests
+        par::par_chunks(&mut buf, 8, |row0, chunk| {
+            if row0 + chunk.len() / 8 == 32 {
+                panic!("deliberate failure in chunk starting at row {row0}");
+            }
+        });
+    });
+    assert!(caught.is_err(), "panic inside par_chunks must reach the caller");
+    par::set_threads(1);
+    // the pool must remain fully usable after a propagated panic
+    par::set_threads(2);
+    let sums = par::par_join((0..8).map(|i| move || i + 1).collect::<Vec<_>>());
+    assert_eq!(sums, (1..=8).collect::<Vec<_>>());
+    par::set_threads(1);
+}
+
+#[test]
+fn dis_kpca_identical_across_thread_counts() {
+    let mut rng = Rng::seed_from(42);
+    let data = Data::Dense(clusters(8, 240, 4, 0.2, &mut rng));
+    let kernel = Kernel::Gauss { gamma: 0.7 };
+    let params = Params {
+        k: 4,
+        t: 16,
+        p: 40,
+        n_lev: 12,
+        n_adapt: 24,
+        w: 0,
+        m_rff: 256,
+        t2: 128,
+        seed: 7,
+        threads: 0,
+    };
+    let mut runs = Vec::new();
+    for threads in [1usize, 4] {
+        par::set_threads(threads);
+        let shards = partition_power_law(&data, 4, 1);
+        let ((sol, err, trace), stats) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| {
+                let sol = dis_kpca(cluster, kernel, &params);
+                let (err, trace) = dis_eval(cluster);
+                (sol, err, trace)
+            },
+        );
+        runs.push((sol, err, trace, stats.total_words()));
+    }
+    par::set_threads(1);
+    let (s1, e1, t1, w1) = &runs[0];
+    let (s4, e4, t4, w4) = &runs[1];
+    assert!(s1.y.data() == s4.y.data(), "representative points differ across thread counts");
+    assert!(s1.coeffs.data() == s4.coeffs.data(), "coefficients differ across thread counts");
+    assert!(e1 == e4 && t1 == t4, "eval differs: {e1}/{t1} vs {e4}/{t4}");
+    assert_eq!(w1, w4, "communication words must not depend on threads");
+}

@@ -46,6 +46,7 @@ fn random_params(rng: &mut Rng) -> Params {
         m_rff: 128,
         t2: 64,
         seed: rng.next_u64(),
+        threads: 0,
     }
 }
 
@@ -270,6 +271,7 @@ fn prop_degenerate_data_survives() {
                 m_rff: 64,
                 t2: 32,
                 seed: rng.next_u64(),
+                threads: 0,
             };
             let shards = partition_power_law(&data, 3, rng.next_u64());
             let ((err, trace), _) = run_cluster(

@@ -28,6 +28,7 @@ fn workload() -> (Vec<Data>, Kernel, Params) {
         m_rff: 256,
         t2: 64,
         seed: 12,
+        threads: 0,
     };
     (shards, kernel, params)
 }

@@ -1,0 +1,104 @@
+//! Minimal offline shim for the `anyhow` crate.
+//!
+//! Covers exactly the API surface `diskpca` uses: [`Result`],
+//! [`Error`], and the `anyhow!` / `bail!` / `ensure!` macros. Errors
+//! carry a formatted message only — no backtraces, no downcasting,
+//! no context chains.
+
+use std::fmt;
+
+/// A message-carrying error type. Like the real `anyhow::Error`, it
+/// deliberately does **not** implement `std::error::Error`, which is
+/// what makes the blanket `From` conversion below coherent.
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(message.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] as the
+/// default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_and_conversions() {
+        fn io_fail() -> crate::Result<()> {
+            std::fs::read("/definitely/not/a/real/path/3141")?;
+            Ok(())
+        }
+        assert!(io_fail().is_err());
+
+        fn bails(x: i32) -> crate::Result<i32> {
+            crate::ensure!(x > 0, "need positive, got {x}");
+            if x > 10 {
+                crate::bail!("too big: {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(bails(5).unwrap(), 5);
+        assert!(bails(-1).is_err());
+        assert!(format!("{}", bails(11).unwrap_err()).contains("too big"));
+
+        let msg = String::from("plain");
+        let e = crate::anyhow!(msg);
+        assert_eq!(format!("{e}"), "plain");
+    }
+}
