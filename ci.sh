@@ -1,6 +1,8 @@
 #!/usr/bin/env sh
-# CI gate for the rust tree: build, test, docs (warnings as errors),
-# formatting, and a fast bench smoke. Run from the repo root.
+# CI gate for the rust tree: build, test, lints, docs (warnings as
+# errors), formatting, and a fast bench smoke with a regression diff.
+# Run from the repo root. `.github/workflows/ci.yml` runs exactly this
+# script on every push/PR.
 set -eu
 
 echo "==> cargo build --release"
@@ -8,6 +10,13 @@ cargo build --release
 
 echo "==> cargo test -q"
 cargo test -q
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "==> cargo clippy --all-targets (-D warnings; bug-finding groups — see [lints] in Cargo.toml)"
+    cargo clippy --all-targets --quiet -- -D warnings
+else
+    echo "==> cargo clippy unavailable (clippy component missing) — skipped"
+fi
 
 echo "==> cargo doc --no-deps (warnings denied)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
@@ -22,5 +31,14 @@ fi
 echo "==> bench smoke (DISKPCA_BENCH_FAST=1, single-thread sweep)"
 DISKPCA_BENCH_FAST=1 DISKPCA_BENCH_THREADS=1,2 cargo bench --bench sketches
 DISKPCA_BENCH_FAST=1 DISKPCA_BENCH_THREADS=1,2 cargo bench --bench linalg
+
+# Streaming bench: emits BENCH_streaming.json (median ns per row,
+# resident + chunked variants) and diffs it against the checked-in
+# baseline in bench_baseline/, printing a WARNING for any row >25%
+# slower. Warn-only — shared runners are too noisy for a hard
+# wall-time gate; copy BENCH_streaming.json over the baseline when a
+# slowdown is intended.
+echo "==> streaming bench smoke + baseline diff (warn-only, threshold 25%)"
+DISKPCA_BENCH_FAST=1 cargo bench --bench streaming
 
 echo "CI OK"

@@ -23,7 +23,7 @@ use diskpca::rng::Rng;
 use diskpca::runtime::NativeBackend;
 
 fn params() -> Params {
-    Params { k: 10, t: 64, p: 128, n_lev: 30, n_adapt: 100, m_rff: 512, t2: 512, w: 0, seed: 5, threads: 0 }
+    Params { k: 10, t: 64, p: 128, n_lev: 30, n_adapt: 100, m_rff: 512, t2: 512, w: 0, seed: 5, threads: 0, chunk_rows: 0 }
 }
 
 fn workload(name: &str, scale: f64, workers: usize) -> (Vec<Data>, Data, Kernel) {

@@ -1,0 +1,140 @@
+//! Streaming-vs-resident worker benchmarks (`cargo bench --bench
+//! streaming`).
+//!
+//! Emits `BENCH_streaming.json` (median ns per row, including the
+//! chunked variants) and diffs it against the checked-in baseline in
+//! `bench_baseline/BENCH_streaming.json`, printing a warning for any
+//! row more than 25% slower. Warnings never fail the run — shared CI
+//! machines are too noisy for a hard gate; the JSON artifact is the
+//! trend record. Override the baseline path with
+//! `DISKPCA_BENCH_BASELINE`, the output path with
+//! `DISKPCA_BENCH_OUT`.
+
+use std::sync::Arc;
+
+use diskpca::bench_harness::{black_box, Bencher};
+use diskpca::comm::Message;
+use diskpca::coordinator::{dis_eval, dis_kpca, run_cluster_chunked, Params, Worker};
+use diskpca::data::{clusters, partition_power_law, Data};
+use diskpca::embed::EmbedSpec;
+use diskpca::kernels::Kernel;
+use diskpca::linalg::Mat;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+const REGRESSION_THRESHOLD: f64 = 1.25;
+
+fn shard(n: usize) -> Data {
+    let mut rng = Rng::seed_from(11);
+    Data::Dense(clusters(24, n, 4, 0.2, &mut rng))
+}
+
+fn mat(m: Message) -> Mat {
+    match m {
+        Message::RespMat(v) => v,
+        other => panic!("{other:?}"),
+    }
+}
+
+/// One worker per (label, chunk) variant, driven directly through the
+/// per-point protocol rounds that the streaming rework touched.
+fn bench_worker_rounds(b: &mut Bencher, n: usize) {
+    let kernel = Kernel::Gauss { gamma: 0.4 };
+    let spec = EmbedSpec { kernel, m: 256, t2: 128, t: 32, seed: 5 };
+    for (label, chunk) in [("resident", 0usize), ("chunk64", 64), ("chunk512", 512)] {
+        let mut w = Worker::new_chunked(shard(n), kernel, Arc::new(NativeBackend::new()), chunk);
+        w.handle(Message::ReqEmbed { spec });
+        b.bench(&format!("sketch_embed/{label}"), || {
+            black_box(w.handle(Message::ReqSketchEmbed { p: 64, seed: 7 }))
+        });
+        let et = mat(w.handle(Message::ReqSketchEmbed { p: 64, seed: 7 }));
+        let z = diskpca::linalg::qr_r_only(&et.transpose());
+        b.bench(&format!("leverage_scores/{label}"), || {
+            black_box(w.handle(Message::ReqScores { z: z.clone() }))
+        });
+        w.handle(Message::ReqScores { z: z.clone() });
+        let pts = match w.handle(Message::ReqSampleLeverage { count: 24, seed: 9 }) {
+            Message::RespPoints(p) => p,
+            other => panic!("{other:?}"),
+        };
+        b.bench(&format!("residual_pass/{label}"), || {
+            black_box(w.handle(Message::ReqResiduals { pts: pts.clone() }))
+        });
+        b.bench(&format!("project_sketch/{label}"), || {
+            black_box(w.handle(Message::ReqProjectSketch { pts: pts.clone(), w: 48, seed: 13 }))
+        });
+        let ny = pts.len();
+        w.handle(Message::ReqFinal {
+            coeffs: Mat::from_fn(ny, 4, |i, j| if i == j { 1.0 } else { 0.0 }),
+        });
+        b.bench(&format!("eval_error/{label}"), || {
+            black_box(w.handle(Message::ReqEvalError))
+        });
+    }
+}
+
+/// Full protocol end-to-end per chunk variant.
+fn bench_dis_kpca(b: &mut Bencher, n: usize) {
+    let mut rng = Rng::seed_from(3);
+    let data = Data::Dense(clusters(16, n, 4, 0.2, &mut rng));
+    let kernel = Kernel::Gauss { gamma: 0.5 };
+    let params = Params {
+        k: 4,
+        t: 16,
+        p: 40,
+        n_lev: 12,
+        n_adapt: 24,
+        m_rff: 256,
+        t2: 128,
+        ..Params::default()
+    };
+    for (label, chunk) in [("resident", 0usize), ("chunk64", 64), ("chunk512", 512)] {
+        b.bench(&format!("dis_kpca/{label}"), || {
+            let shards = partition_power_law(&data, 4, 1);
+            let ((err, trace), _) = run_cluster_chunked(
+                shards,
+                kernel,
+                Arc::new(NativeBackend::new()),
+                chunk,
+                move |cluster| {
+                    let _ = dis_kpca(cluster, kernel, &params);
+                    dis_eval(cluster)
+                },
+            );
+            black_box((err, trace))
+        });
+    }
+}
+
+fn main() {
+    let fast = std::env::var("DISKPCA_BENCH_FAST").is_ok();
+    let n = if fast { 400 } else { 2000 };
+    let mut b = Bencher::new();
+    bench_worker_rounds(&mut b, n);
+    bench_dis_kpca(&mut b, n.min(800));
+
+    let out = std::env::var("DISKPCA_BENCH_OUT").unwrap_or_else(|_| "BENCH_streaming.json".into());
+    b.write_median_json(&out).expect("write bench json");
+    println!("wrote {out} ({} rows)", b.samples.len());
+
+    let baseline_path = std::env::var("DISKPCA_BENCH_BASELINE")
+        .unwrap_or_else(|_| "bench_baseline/BENCH_streaming.json".into());
+    match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => {
+            let warnings = b.regressions_vs(&text, REGRESSION_THRESHOLD);
+            if warnings.is_empty() {
+                println!("no regressions > 25% vs {baseline_path}");
+            } else {
+                for w in &warnings {
+                    println!("WARNING: bench regression: {w}");
+                }
+                println!(
+                    "({} warning(s) vs {baseline_path}; informational only — update the baseline \
+                     by copying {out} over it when a slowdown is intended)",
+                    warnings.len()
+                );
+            }
+        }
+        Err(e) => println!("baseline {baseline_path} unavailable ({e}) — skipping diff"),
+    }
+}

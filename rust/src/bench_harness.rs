@@ -97,6 +97,55 @@ impl Bencher {
         sample
     }
 
+    /// Write the samples as a flat `{name: median_ns}` JSON object —
+    /// the format `BENCH_streaming.json` uses so CI can diff a run
+    /// against the checked-in baseline.
+    pub fn write_median_json(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let pairs: Vec<(&str, crate::json::Value)> = self
+            .samples
+            .iter()
+            .map(|s| (s.name.as_str(), crate::json::num(s.median.as_nanos() as f64)))
+            .collect();
+        std::fs::write(path, crate::json::write(&crate::json::obj(pairs)))
+    }
+
+    /// Diff this run's medians against a baseline JSON written by
+    /// [`Bencher::write_median_json`]. Returns one human-readable
+    /// warning line per row slower than `threshold`× its baseline
+    /// (plus notes for rows missing from the baseline). Wall-clock
+    /// noise means callers should *warn*, not fail, on these.
+    pub fn regressions_vs(&self, baseline_json: &str, threshold: f64) -> Vec<String> {
+        let baseline = match crate::json::parse(baseline_json) {
+            Ok(v) => v,
+            Err(e) => return vec![format!("baseline unreadable: {e}")],
+        };
+        let mut out = Vec::new();
+        for s in &self.samples {
+            match baseline.get(&s.name).and_then(|v| v.as_f64()) {
+                Some(base_ns) if base_ns > 0.0 => {
+                    let new_ns = s.median.as_nanos() as f64;
+                    if new_ns > base_ns * threshold {
+                        out.push(format!(
+                            "{}: median {:.2}ms vs baseline {:.2}ms ({:+.0}%, threshold {:+.0}%)",
+                            s.name,
+                            new_ns / 1e6,
+                            base_ns / 1e6,
+                            (new_ns / base_ns - 1.0) * 100.0,
+                            (threshold - 1.0) * 100.0,
+                        ));
+                    }
+                }
+                _ => out.push(format!("{}: no baseline entry (new bench row?)", s.name)),
+            }
+        }
+        out
+    }
+
     /// Write all samples as CSV
     /// (name,threads,median_ns,mean_ns,min_ns,mad_ns,iters).
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
@@ -163,6 +212,31 @@ mod tests {
         assert!(s.iters >= 3);
         assert!(s.min <= s.median && s.median <= s.mean * 3);
         assert_eq!(b.samples.len(), 1);
+    }
+
+    #[test]
+    fn median_json_roundtrip_and_regression_diff() {
+        let mut b = Bencher { budget: Duration::from_millis(5), max_iters: 3, samples: vec![] };
+        b.bench("row_a", || std::thread::sleep(Duration::from_micros(50)));
+        b.bench("row_b", || 1);
+        let path = std::env::temp_dir().join("diskpca_bench_medians.json");
+        b.write_median_json(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // self-diff: nothing regresses against itself
+        assert!(b.regressions_vs(&text, 1.25).is_empty(), "{:?}", b.regressions_vs(&text, 1.25));
+        // a baseline 100× faster flags every row
+        let fast = r#"{"row_a": 1.0, "row_b": 1.0}"#;
+        assert_eq!(b.regressions_vs(fast, 1.25).len(), 2);
+        // missing rows are reported, not ignored
+        let partial = crate::json::write(&crate::json::obj(vec![(
+            "row_a",
+            crate::json::num(1e18),
+        )]));
+        let notes = b.regressions_vs(&partial, 1.25);
+        assert_eq!(notes.len(), 1);
+        assert!(notes[0].contains("row_b"));
+        // garbage baseline degrades to a single warning
+        assert_eq!(b.regressions_vs("not json", 1.25).len(), 1);
     }
 
     #[test]

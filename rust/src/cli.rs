@@ -70,6 +70,12 @@ COMMON FLAGS
   --k N --t N --p N --n_lev N --n_adapt N --m_rff N --t2 N --seed N
   --threads N                  compute-pool threads per process (default 1;
                                results are bit-identical for every N)
+  --chunk-rows N               stream worker passes over N-point chunks so
+                               worker memory tracks N, not the shard size
+                               (default 0 = resident; results are
+                               bit-identical for every N). `shard` writes
+                               chunked .dkps stores when set; `worker` maps
+                               .dkps shards out-of-core
   --workers N                  override the dataset's worker count
   --config FILE                load key=value config file
   --out DIR                    results directory (default results)

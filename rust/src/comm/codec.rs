@@ -102,6 +102,11 @@ impl Writer {
         self.u64(s.seed);
     }
 
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
     pub fn finish(self) -> Vec<u8> {
         self.buf
     }
@@ -185,6 +190,14 @@ impl<'a> Reader<'a> {
             t: self.u64()? as usize,
             seed: self.u64()?,
         })
+    }
+
+    fn str(&mut self) -> Result<String, CodecError> {
+        let n = self.u64()? as usize;
+        let end = self.at.checked_add(n).ok_or(CodecError::Truncated)?;
+        let bytes = self.buf.get(self.at..end).ok_or(CodecError::Truncated)?;
+        self.at = end;
+        Ok(String::from_utf8_lossy(bytes).into_owned())
     }
 }
 
@@ -296,6 +309,10 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.u8(26);
             w.mat(alpha);
         }
+        RespError(msg) => {
+            w.u8(27);
+            w.str(msg);
+        }
     }
     w.finish()
 }
@@ -343,6 +360,7 @@ pub fn decode(buf: &[u8]) -> Result<Message, CodecError> {
             RespKrr { g, b, tnorm }
         }
         26 => ReqKrrEval { alpha: r.mat()? },
+        27 => RespError(r.str()?),
         t => return Err(CodecError::BadTag(t)),
     };
     Ok(msg)
@@ -457,6 +475,19 @@ mod tests {
                 Kernel::Laplace { gamma } => assert_eq!(gamma, 0.75),
                 other => panic!("{other:?}"),
             },
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_message() {
+        match roundtrip(Message::RespError("worker failed: shard store truncated".into())) {
+            Message::RespError(msg) => assert_eq!(msg, "worker failed: shard store truncated"),
+            other => panic!("{other:?}"),
+        }
+        // empty message survives too
+        match roundtrip(Message::RespError(String::new())) {
+            Message::RespError(msg) => assert!(msg.is_empty()),
             other => panic!("{other:?}"),
         }
     }

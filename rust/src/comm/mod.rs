@@ -181,6 +181,10 @@ pub enum Message {
     /// KRR normal-equation pieces: g = K_YA·K_AY, b = K_YA·t (|Y|×1),
     /// tnorm = ‖t‖².
     RespKrr { g: Mat, b: Mat, tnorm: f64 },
+    /// A worker-side failure (protocol misuse, shard-store IO error,
+    /// panic in a handler) carried back to the master with context —
+    /// instead of the worker dying silently mid-protocol.
+    RespError(String),
     Ack,
 }
 
@@ -210,6 +214,10 @@ impl Message {
             RespCount(_) => 1,
             RespPoints(p) => p.words(),
             RespKmeans { sums, counts, .. } => sums.rows() * sums.cols() + counts.len() + 1,
+            // error strings abort the run; they never count against
+            // the protocol's word budget, but give them their wire
+            // cost so accounting stays an upper bound.
+            RespError(msg) => msg.len().div_ceil(8).max(1),
             Ack => 1,
         }
     }
@@ -243,6 +251,7 @@ impl Message {
             RespCount(_) => "RespCount",
             RespPoints(_) => "RespPoints",
             RespKmeans { .. } => "RespKmeans",
+            RespError(_) => "RespError",
             Ack => "Ack",
         }
     }

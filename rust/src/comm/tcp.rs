@@ -10,21 +10,37 @@ use std::sync::Mutex;
 
 use super::{codec, Message, WorkerLink};
 
-fn write_frame(stream: &mut TcpStream, msg: &Message) -> std::io::Result<()> {
+/// Ceiling on a single frame's payload. A corrupt or hostile length
+/// prefix must produce a decode error, not a multi-GiB allocation —
+/// the largest legitimate frames (dense point sets) stay far below
+/// this.
+pub const MAX_FRAME_BYTES: u64 = 1 << 31;
+
+/// Write one length-prefixed codec frame.
+pub fn write_frame(stream: &mut TcpStream, msg: &Message) -> std::io::Result<()> {
     let bytes = codec::encode(msg);
     stream.write_all(&(bytes.len() as u64).to_le_bytes())?;
     stream.write_all(&bytes)?;
     stream.flush()
 }
 
-fn read_frame(stream: &mut TcpStream) -> std::io::Result<Message> {
+/// Read one length-prefixed codec frame. Fails (without panicking or
+/// allocating unboundedly) on a truncated frame, an oversized length
+/// prefix, or a payload the codec rejects.
+pub fn read_frame(stream: &mut TcpStream) -> std::io::Result<Message> {
     let mut len = [0u8; 8];
     stream.read_exact(&mut len)?;
-    let n = u64::from_le_bytes(len) as usize;
-    let mut buf = vec![0u8; n];
+    let n = u64::from_le_bytes(len);
+    if n > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {n} exceeds the {MAX_FRAME_BYTES}-byte cap (corrupt prefix?)"),
+        ));
+    }
+    let mut buf = vec![0u8; n as usize];
     stream.read_exact(&mut buf)?;
     codec::decode(&buf).map_err(|e| {
-        std::io::Error::new(std::io::ErrorKind::InvalidData, format!("{e:?}"))
+        std::io::Error::new(std::io::ErrorKind::InvalidData, format!("codec rejected frame: {e:?}"))
     })
 }
 
@@ -35,11 +51,15 @@ pub struct TcpLink {
 
 impl WorkerLink for TcpLink {
     fn send(&self, msg: Message) {
-        write_frame(&mut self.stream.lock().unwrap(), &msg).expect("tcp send");
+        write_frame(&mut self.stream.lock().unwrap(), &msg).unwrap_or_else(|e| {
+            panic!("tcp send to worker failed ({}): {e}", msg.tag())
+        });
     }
 
     fn recv(&self) -> Message {
-        read_frame(&mut self.stream.lock().unwrap()).expect("tcp recv")
+        read_frame(&mut self.stream.lock().unwrap()).unwrap_or_else(|e| {
+            panic!("tcp recv from worker failed (worker died mid-protocol?): {e}")
+        })
     }
 }
 
@@ -49,12 +69,25 @@ pub struct TcpWorkerEndpoint {
 }
 
 impl TcpWorkerEndpoint {
+    /// Fallible receive — the multi-process worker loop uses this to
+    /// report a lost master with context instead of aborting.
+    pub fn try_recv(&mut self) -> std::io::Result<Message> {
+        read_frame(&mut self.stream)
+    }
+
+    /// Fallible send (see [`TcpWorkerEndpoint::try_recv`]).
+    pub fn try_send(&mut self, msg: Message) -> std::io::Result<()> {
+        write_frame(&mut self.stream, &msg)
+    }
+
     pub fn recv(&mut self) -> Message {
-        read_frame(&mut self.stream).expect("tcp recv")
+        self.try_recv()
+            .unwrap_or_else(|e| panic!("tcp recv from master failed mid-protocol: {e}"))
     }
 
     pub fn send(&mut self, msg: Message) {
-        write_frame(&mut self.stream, &msg).expect("tcp send")
+        self.try_send(msg)
+            .unwrap_or_else(|e| panic!("tcp send to master failed mid-protocol: {e}"))
     }
 }
 

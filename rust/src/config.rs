@@ -102,6 +102,9 @@ impl Config {
             t2: self.usize_or("t2", d.t2),
             seed: self.u64_or("seed", d.seed),
             threads: self.usize_or("threads", d.threads),
+            // the CLI flag is `--chunk-rows`; accept the underscore
+            // spelling too for config files
+            chunk_rows: self.usize_or("chunk-rows", self.usize_or("chunk_rows", d.chunk_rows)),
         }
     }
 }
@@ -145,6 +148,16 @@ mod tests {
         assert_eq!(p.n_adapt, 77);
         assert_eq!(p.seed, 3);
         assert_eq!(p.p, 250); // default preserved
+        assert_eq!(p.chunk_rows, 0); // resident by default
+    }
+
+    #[test]
+    fn chunk_rows_both_spellings() {
+        let cfg = Config::parse("chunk_rows = 128\n").unwrap();
+        assert_eq!(cfg.params().chunk_rows, 128);
+        // the CLI flag spelling wins when both are present
+        let cfg = Config::parse("chunk_rows = 128\nchunk-rows = 64\n").unwrap();
+        assert_eq!(cfg.params().chunk_rows, 64);
     }
 
     #[test]

@@ -252,6 +252,7 @@ mod tests {
             w: 0,
             seed: 17,
             threads: 0,
+            chunk_rows: 0,
         };
         let shards1 = partition_power_law(&data, 3, 7);
         let ((err_dis, _), _) = run_cluster(

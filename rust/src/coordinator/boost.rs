@@ -109,6 +109,7 @@ mod tests {
             t2: 128,
             seed: 77,
             threads: 0,
+            chunk_rows: 0,
         };
         let ((run, final_err), _) = run_cluster(
             shards,
@@ -149,6 +150,7 @@ mod tests {
             t2: 64,
             seed: 5,
             threads: 0,
+            chunk_rows: 0,
         };
         // single run error
         let shards = partition_power_law(&data, 3, 6);

@@ -169,6 +169,7 @@ mod tests {
             w: 0,
             seed: 23,
             threads: 0,
+            chunk_rows: 0,
         };
         let (result, stats) = run_cluster(
             shards,
@@ -205,6 +206,7 @@ mod tests {
             w: 0,
             seed: 3,
             threads: 0,
+            chunk_rows: 0,
         };
         // run twice with different iteration caps — more Lloyd steps
         // can't increase the (deterministic) objective

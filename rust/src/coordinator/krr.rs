@@ -170,7 +170,7 @@ mod tests {
     }
 
     fn params() -> Params {
-        Params { k: 6, t: 16, p: 40, n_lev: 12, n_adapt: 40, w: 0, m_rff: 256, t2: 128, seed: 31, threads: 0 }
+        Params { k: 6, t: 16, p: 40, n_lev: 12, n_adapt: 40, w: 0, m_rff: 256, t2: 128, seed: 31, threads: 0, chunk_rows: 0 }
     }
 
     #[test]

@@ -9,10 +9,13 @@ use crate::rng::{multinomial, Rng};
 
 use super::{KpcaSolution, Params};
 
-/// Unwrap helpers.
+/// Unwrap helpers. A [`Message::RespError`] carries a worker-side
+/// failure description — re-raise it verbatim so the master's abort
+/// names the actual worker problem instead of a bare type mismatch.
 fn scalar(m: Message) -> f64 {
     match m {
         Message::RespScalar(v) => v,
+        Message::RespError(e) => panic!("worker reported error: {e}"),
         other => panic!("expected RespScalar, got {}", other.tag()),
     }
 }
@@ -20,6 +23,7 @@ fn scalar(m: Message) -> f64 {
 fn mat(m: Message) -> Mat {
     match m {
         Message::RespMat(v) => v,
+        Message::RespError(e) => panic!("worker reported error: {e}"),
         other => panic!("expected RespMat, got {}", other.tag()),
     }
 }
@@ -27,6 +31,7 @@ fn mat(m: Message) -> Mat {
 fn points(m: Message) -> PointSet {
     match m {
         Message::RespPoints(v) => v,
+        Message::RespError(e) => panic!("worker reported error: {e}"),
         other => panic!("expected RespPoints, got {}", other.tag()),
     }
 }
@@ -34,7 +39,16 @@ fn points(m: Message) -> PointSet {
 pub(super) fn count(m: Message) -> usize {
     match m {
         Message::RespCount(v) => v,
+        Message::RespError(e) => panic!("worker reported error: {e}"),
         other => panic!("expected RespCount, got {}", other.tag()),
+    }
+}
+
+fn ack(m: Message) {
+    match m {
+        Message::Ack => {}
+        Message::RespError(e) => panic!("worker reported error: {e}"),
+        other => panic!("expected Ack, got {}", other.tag()),
     }
 }
 
@@ -42,8 +56,8 @@ pub(super) fn count(m: Message) -> usize {
 /// E^i = S(φ(Aⁱ)) locally.
 pub fn dis_embed(cluster: &Cluster, spec: EmbedSpec) {
     cluster.set_round("1-embed");
-    for ack in cluster.exchange(&Message::ReqEmbed { spec }) {
-        assert!(matches!(ack, Message::Ack));
+    for reply in cluster.exchange(&Message::ReqEmbed { spec }) {
+        ack(reply);
     }
 }
 
@@ -242,8 +256,8 @@ pub fn dis_low_rank(
     let (w_mat, _sv) = top_k_left_singular(&pit, k);
     lap("svd");
     // step 3: broadcast W; workers cache LᵀΦ(Aⁱ) = WᵀΠⁱ.
-    for ack in cluster.exchange(&Message::ReqFinal { coeffs: w_mat.clone() }) {
-        assert!(matches!(ack, Message::Ack));
+    for reply in cluster.exchange(&Message::ReqFinal { coeffs: w_mat.clone() }) {
+        ack(reply);
     }
     lap("final");
     // Master-side coefficients C = R⁻¹W so that L = φ(Y)·C.
@@ -370,7 +384,7 @@ pub fn dis_set_solution(cluster: &Cluster, sol: &KpcaSolution) {
         pts: PointSet::Dense(sol.y.clone()),
         coeffs: sol.coeffs.clone(),
     };
-    for ack in cluster.exchange(&msg) {
-        assert!(matches!(ack, Message::Ack));
+    for reply in cluster.exchange(&msg) {
+        ack(reply);
     }
 }

@@ -62,6 +62,13 @@ pub struct Params {
     /// 0 = leave the process-wide pool setting untouched. Results are
     /// bit-identical for every value — only wall time changes.
     pub threads: usize,
+    /// worker streaming chunk width in points (`--chunk-rows`).
+    /// 0 = resident path (full intermediates cached in memory); N > 0
+    /// makes every worker per-point pass fold over N-point chunks, so
+    /// worker matrix memory is bounded by N instead of the shard
+    /// size. Results are bit-identical for every value — see
+    /// [`worker`] module docs.
+    pub chunk_rows: usize,
 }
 
 impl Default for Params {
@@ -77,6 +84,7 @@ impl Default for Params {
             t2: 512,
             seed: 0xd15c,
             threads: 0,
+            chunk_rows: 0,
         }
     }
 }
@@ -147,6 +155,21 @@ pub fn run_cluster<T: Send + 'static>(
     backend: Arc<dyn Backend>,
     body: impl FnOnce(&Cluster) -> T,
 ) -> (T, CommStats) {
+    run_cluster_chunked(shards, kernel, backend, 0, body)
+}
+
+/// [`run_cluster`] with streaming workers: `chunk_rows > 0` makes
+/// every worker fold its per-point passes over `chunk_rows`-point
+/// chunks (`Params::chunk_rows` / `--chunk-rows`). `0` is the
+/// resident path; results and per-round comm words are bit-identical
+/// for every value.
+pub fn run_cluster_chunked<T: Send + 'static>(
+    shards: Vec<Data>,
+    kernel: Kernel,
+    backend: Arc<dyn Backend>,
+    chunk_rows: usize,
+    body: impl FnOnce(&Cluster) -> T,
+) -> (T, CommStats) {
     let s = shards.len();
     let (links, endpoints) = memory::star(s);
     let stats = CommStats::new();
@@ -156,7 +179,7 @@ pub fn run_cluster<T: Send + 'static>(
         .zip(endpoints)
         .map(|(shard, ep)| {
             let be = backend.clone();
-            std::thread::spawn(move || Worker::new(shard, kernel, be).run(ep))
+            std::thread::spawn(move || Worker::new_chunked(shard, kernel, be, chunk_rows).run(ep))
         })
         .collect();
     let out = body(&cluster);
@@ -191,6 +214,7 @@ mod tests {
             t2: 128,
             seed: 7,
             threads: 0,
+            chunk_rows: 0,
         }
     }
 

@@ -5,11 +5,39 @@
 //! its leverage scores, its residual distances, its Π^i, and finally
 //! its projected coordinates). All heavy math is dispatched through
 //! the [`Backend`] so the same worker runs native or XLA.
+//!
+//! # Resident vs streaming execution
+//!
+//! With `chunk_rows == 0` over an in-memory shard the worker runs the
+//! historical **resident** path: E^i (t×nᵢ) and Π^i (|Y|×nᵢ) are
+//! materialized once and cached between rounds. With `chunk_rows > 0`
+//! (or a disk-backed [`ShardSource::Store`]) it runs the **streaming**
+//! path: every per-point pass — sketch application, Gram blocks
+//! against Y, leverage and residual scans, evaluation — *folds over
+//! ascending column chunks*, so peak matrix memory is bounded by the
+//! chunk size rather than the shard size. Only O(nᵢ) vectors (scores,
+//! residuals, KRR targets) stay resident.
+//!
+//! With the native backend the two paths are **bit-identical** for
+//! everything `dis_kpca` touches: every chunked operation is
+//! per-column independent, and every cross-point reduction
+//! (point-axis CountSketch accumulation, scalar masses, eval sums) is
+//! folded element-by-element in the same ascending point order as the
+//! resident code, so no floating-point sum is ever reassociated.
+//! `tests/streaming_parity.rs` pins this from single sketch applies
+//! up to full `dis_kpca` over TCP. Two documented caveats: the KRR
+//! normal-equation matrix `g`, whose resident path uses a
+//! differently-associated blocked matmul (the streamed `g` is still
+//! deterministic and chunk-size-invariant); and the XLA backend,
+//! which streaming dispatches per chunk — its static-shape padding
+//! means f32 rounding may vary with the chunk size (native, the
+//! parity oracle, does not).
 
 use std::sync::Arc;
 
-use crate::comm::{Message, PointSet};
-use crate::data::Data;
+use crate::comm::Message;
+use crate::data::{Data, ShardSource};
+use crate::embed::EmbedSpec;
 use crate::kernels::{diag as kernel_diag, Kernel};
 use crate::linalg::{chol_psd, Mat};
 use crate::rng::{AliasTable, Rng};
@@ -34,47 +62,111 @@ pub fn thread_cpu_time() -> std::time::Duration {
 /// require an otherwise-idle machine).
 #[cfg(not(target_os = "linux"))]
 pub fn thread_cpu_time() -> std::time::Duration {
-    use std::time::Instant;
     use std::sync::OnceLock;
+    use std::time::Instant;
     static EPOCH: OnceLock<Instant> = OnceLock::new();
     EPOCH.get_or_init(Instant::now).elapsed()
 }
 
+/// How a streaming worker reconstructs LᵀΦ(chunk) on demand instead
+/// of caching the full k×nᵢ projection.
+enum StreamSolution {
+    /// disLR output L = Q·W: LᵀΦ(x) = Wᵀ·R⁻ᵀ·K(Y, x).
+    Factored { y: Mat, r_upper: Mat, coeffs: Mat },
+    /// Directly installed L = φ(Y)·C: LᵀΦ(x) = Cᵀ·K(Y, x).
+    Direct { y: Mat, coeffs: Mat },
+}
+
+/// KRR round state — resident caches the full K(Y, Aⁱ); streaming
+/// keeps only Y and the O(nᵢ) target vector.
+enum KrrState {
+    Resident { k_ya: Mat, targets: Vec<f64> },
+    Streamed { y: Mat, targets: Vec<f64> },
+}
+
 pub struct Worker {
-    shard: Data,
+    source: ShardSource,
+    /// Streaming chunk width in points; `0` over a resident shard
+    /// selects the resident path. Disk-backed sources always stream
+    /// (`0` ⇒ one chunk per stored block).
+    chunk_rows: usize,
     kernel: Kernel,
     backend: Arc<dyn Backend>,
-    // ---- protocol state ----
+    // ---- resident-path caches ----
     /// E^i = S(φ(Aⁱ)) — t×nᵢ (Alg. 4 step 1).
     embedded: Option<Mat>,
-    /// generalized leverage scores of the local columns (Alg. 1).
-    scores: Option<Vec<f64>>,
-    /// squared residual distances to span φ(P) (Alg. 2).
-    residuals: Option<Vec<f64>>,
     /// Π^i = Qᵀφ(Aⁱ) — |Y|×nᵢ (Alg. 3 step 1).
     pi: Option<Mat>,
     /// LᵀΦ(Aⁱ) — k×nᵢ once a solution is installed.
     projected: Option<Mat>,
-    /// KRR state: (K(Y,Aⁱ), teacher targets) from ReqKrrStats.
-    krr: Option<(Mat, Vec<f64>)>,
+    // ---- streaming-path state (all O(chunk) or O(|Y|)) ----
+    /// Embedding spec cached by ReqEmbed; the embedding is recomputed
+    /// per chunk through [`Backend::embed`] (Alg. 4 step 1), so the
+    /// XLA backend stays on its hot path under streaming too.
+    embed_spec: Option<EmbedSpec>,
+    /// (Y, chol factor of K(Y,Y)) cached by ReqProjectSketch.
+    stream_basis: Option<(Mat, Mat)>,
+    stream_solution: Option<StreamSolution>,
+    // ---- O(nᵢ) state shared by both paths ----
+    /// generalized leverage scores of the local columns (Alg. 1).
+    scores: Option<Vec<f64>>,
+    /// squared residual distances to span φ(P) (Alg. 2).
+    residuals: Option<Vec<f64>>,
+    /// KRR state from ReqKrrStats.
+    krr: Option<KrrState>,
     /// cumulative compute time (Fig-7 critical-path metric).
     busy: std::time::Duration,
 }
 
 impl Worker {
+    /// Resident worker over an in-memory shard (the historical path).
     pub fn new(shard: Data, kernel: Kernel, backend: Arc<dyn Backend>) -> Self {
+        Self::with_source(ShardSource::Resident(shard), kernel, backend, 0)
+    }
+
+    /// In-memory shard, streamed in `chunk_rows`-point chunks
+    /// (`0` = resident).
+    pub fn new_chunked(
+        shard: Data,
+        kernel: Kernel,
+        backend: Arc<dyn Backend>,
+        chunk_rows: usize,
+    ) -> Self {
+        Self::with_source(ShardSource::Resident(shard), kernel, backend, chunk_rows)
+    }
+
+    /// Worker over any [`ShardSource`] — the out-of-core entry point.
+    pub fn with_source(
+        source: ShardSource,
+        kernel: Kernel,
+        backend: Arc<dyn Backend>,
+        chunk_rows: usize,
+    ) -> Self {
         Self {
-            shard,
+            source,
+            chunk_rows,
             kernel,
             backend,
             embedded: None,
-            scores: None,
-            residuals: None,
             pi: None,
             projected: None,
+            embed_spec: None,
+            stream_basis: None,
+            stream_solution: None,
+            scores: None,
+            residuals: None,
             krr: None,
             busy: std::time::Duration::ZERO,
         }
+    }
+
+    fn streaming(&self) -> bool {
+        self.chunk_rows > 0 || matches!(self.source, ShardSource::Store(_))
+    }
+
+    /// The in-memory shard (resident path only).
+    fn shard(&self) -> &Data {
+        self.source.resident().expect("resident path requires an in-memory shard")
     }
 
     /// Serve requests until `Quit` — works over any transport.
@@ -88,20 +180,74 @@ impl Worker {
         }
     }
 
-    /// Handle one request (public for tcp workers + unit tests).
+    /// Handle one request (public for tcp workers + unit tests). A
+    /// panicking handler (protocol misuse, shard-store IO failure) is
+    /// caught and surfaced to the master as [`Message::RespError`]
+    /// instead of killing the worker with no context.
     pub fn handle(&mut self, req: Message) -> Message {
         let t0 = thread_cpu_time();
-        let resp = self.dispatch(req);
+        let tag = req.tag();
+        let resp =
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.dispatch(req))) {
+                Ok(resp) => resp,
+                Err(payload) => {
+                    let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                        (*s).to_string()
+                    } else if let Some(s) = payload.downcast_ref::<String>() {
+                        s.clone()
+                    } else {
+                        "non-string panic payload".to_string()
+                    };
+                    Message::RespError(format!("worker failed handling {tag}: {msg}"))
+                }
+            };
         self.busy += thread_cpu_time().saturating_sub(t0);
         resp
     }
 
     fn dispatch(&mut self, req: Message) -> Message {
         match req {
-            Message::ReqCount => Message::RespCount(self.shard.len()),
+            // ---- path-independent requests ----
+            Message::ReqCount => Message::RespCount(self.source.len()),
             Message::ReqBusyTime => Message::RespScalar(self.busy.as_secs_f64()),
+            Message::ReqScoresVec => {
+                let scores = self.scores.as_ref().expect("ReqScores first");
+                let mut m = Mat::zeros(1, scores.len());
+                for (j, &v) in scores.iter().enumerate() {
+                    m[(0, j)] = v;
+                }
+                Message::RespMat(m)
+            }
+            Message::ReqSampleLeverage { count, seed } => {
+                let scores = self.scores.clone().expect("ReqScores first");
+                self.sample_weighted(&scores, count, seed)
+            }
+            Message::ReqSampleAdaptive { count, seed } => {
+                let res = self.residuals.clone().expect("ReqResiduals first");
+                self.sample_weighted(&res, count, seed)
+            }
+            Message::ReqSampleUniform { count, seed } => {
+                let n = self.source.len();
+                let mut rng = Rng::seed_from(seed);
+                let idx: Vec<usize> = if count >= n {
+                    (0..n).collect()
+                } else {
+                    rng.sample_without_replacement(n, count)
+                };
+                Message::RespPoints(self.source.point_set(&idx))
+            }
+            Message::Quit => Message::Ack,
+            // ---- per-point passes: resident or streamed ----
+            other if self.streaming() => self.dispatch_streaming(other),
+            other => self.dispatch_resident(other),
+        }
+    }
+
+    /// The historical path: full intermediates cached in memory.
+    fn dispatch_resident(&mut self, req: Message) -> Message {
+        match req {
             Message::ReqEmbed { spec } => {
-                self.embedded = Some(self.backend.embed(&spec, &self.shard));
+                self.embedded = Some(self.backend.embed(&spec, self.shard()));
                 Message::Ack
             }
             Message::ReqSketchEmbed { p, seed } => {
@@ -117,18 +263,11 @@ impl Worker {
                 self.scores = Some(scores);
                 Message::RespScalar(total)
             }
-            Message::ReqScoresVec => {
-                let scores = self.scores.as_ref().expect("ReqScores first");
-                let mut m = Mat::zeros(1, scores.len());
-                for (j, &v) in scores.iter().enumerate() {
-                    m[(0, j)] = v;
-                }
-                Message::RespMat(m)
-            }
             Message::ReqKrrStats { pts, teacher_seed } => {
                 let y = pts.to_mat();
-                let k_ya = self.backend.gram(self.kernel, &y, &self.shard);
-                let targets = self.teacher_targets(teacher_seed);
+                let k_ya = self.backend.gram(self.kernel, &y, self.shard());
+                let v = teacher_vector(self.source.dim(), teacher_seed);
+                let targets = teacher_targets_chunk(self.shard(), &v);
                 // g = K_YA·K_AY (|Y|×|Y|), b = K_YA·t (|Y|×1)
                 let g = k_ya.matmul_a_bt(&k_ya);
                 let mut b = Mat::zeros(y.cols(), 1);
@@ -137,11 +276,16 @@ impl Worker {
                     b[(i, 0)] = row.iter().zip(&targets).map(|(&k, &t)| k * t).sum();
                 }
                 let tnorm = targets.iter().map(|&t| t * t).sum();
-                self.krr = Some((k_ya, targets));
+                self.krr = Some(KrrState::Resident { k_ya, targets });
                 Message::RespKrr { g, b, tnorm }
             }
             Message::ReqKrrEval { alpha } => {
-                let (k_ya, targets) = self.krr.as_ref().expect("ReqKrrStats first");
+                let (k_ya, targets) = match self.krr.as_ref().expect("ReqKrrStats first") {
+                    KrrState::Resident { k_ya, targets } => (k_ya, targets),
+                    KrrState::Streamed { .. } => {
+                        unreachable!("streamed KRR state on the resident path")
+                    }
+                };
                 // pred = αᵀ·K_YA (1×nᵢ)
                 let pred = alpha.matmul_at_b(k_ya);
                 let err: f64 = (0..targets.len())
@@ -152,19 +296,11 @@ impl Worker {
                     .sum();
                 Message::RespScalar(err)
             }
-            Message::ReqSampleLeverage { count, seed } => {
-                let scores = self.scores.clone().expect("ReqScores first");
-                self.sample_weighted(&scores, count, seed)
-            }
             Message::ReqResiduals { pts } => {
                 let res = self.compute_residuals(&pts.to_mat());
                 let total = res.iter().sum();
                 self.residuals = Some(res);
                 Message::RespScalar(total)
-            }
-            Message::ReqSampleAdaptive { count, seed } => {
-                let res = self.residuals.clone().expect("ReqResiduals first");
-                self.sample_weighted(&res, count, seed)
             }
             Message::ReqProjectSketch { pts, w, seed } => {
                 let y = pts.to_mat();
@@ -184,13 +320,13 @@ impl Worker {
             Message::ReqSetSolution { pts, coeffs } => {
                 // L = φ(Y)·C ⇒ Lᵀφ(A) = Cᵀ·K(Y, A)
                 let y = pts.to_mat();
-                let k_ya = self.backend.gram(self.kernel, &y, &self.shard);
+                let k_ya = self.backend.gram(self.kernel, &y, self.shard());
                 self.projected = Some(coeffs.matmul_at_b(&k_ya));
                 Message::Ack
             }
             Message::ReqEvalError => {
                 let proj = self.projected.as_ref().expect("no solution installed");
-                let diag = kernel_diag(self.kernel, &self.shard);
+                let diag = kernel_diag(self.kernel, self.shard());
                 let norms = proj.col_norms_sq();
                 let err: f64 = diag
                     .iter()
@@ -200,17 +336,7 @@ impl Worker {
                 Message::RespScalar(err)
             }
             Message::ReqEvalTrace => {
-                Message::RespScalar(kernel_diag(self.kernel, &self.shard).iter().sum())
-            }
-            Message::ReqSampleUniform { count, seed } => {
-                let n = self.shard.len();
-                let mut rng = Rng::seed_from(seed);
-                let idx: Vec<usize> = if count >= n {
-                    (0..n).collect()
-                } else {
-                    rng.sample_without_replacement(n, count)
-                };
-                Message::RespPoints(PointSet::from_data(&self.shard, &idx))
+                Message::RespScalar(crate::kernels::diag_sum(self.kernel, self.shard()))
             }
             Message::ReqSampleProjected { count, seed } => {
                 let proj = self.projected.as_ref().expect("no solution installed");
@@ -226,27 +352,194 @@ impl Worker {
                 let mut sums = Mat::zeros(kdim, c);
                 let mut counts = vec![0usize; c];
                 let mut obj = 0.0;
-                for j in 0..proj.cols() {
-                    let mut best = (f64::INFINITY, 0usize);
-                    for ci in 0..c {
-                        let mut d2 = 0.0;
-                        for r in 0..kdim {
-                            let d = proj[(r, j)] - centers[(r, ci)];
-                            d2 += d * d;
-                        }
-                        if d2 < best.0 {
-                            best = (d2, ci);
-                        }
-                    }
-                    obj += best.0;
-                    counts[best.1] += 1;
-                    for r in 0..kdim {
-                        sums[(r, best.1)] += proj[(r, j)];
-                    }
-                }
+                kmeans_fold(proj, &centers, &mut sums, &mut counts, &mut obj);
                 Message::RespKmeans { sums, counts, obj }
             }
-            Message::Quit => Message::Ack,
+            other => panic!("worker got unexpected {other:?}"),
+        }
+    }
+
+    /// The out-of-core path: every per-point pass folds over ascending
+    /// column chunks. See the module docs for the bit-identity
+    /// argument; every arm mirrors its resident twin's per-column
+    /// operations and fold order exactly.
+    fn dispatch_streaming(&mut self, req: Message) -> Message {
+        match req {
+            Message::ReqEmbed { spec } => {
+                // Only the spec is cached; the embedding is recomputed
+                // chunk-by-chunk through the backend on demand and
+                // never materialized whole. Tables re-derive from the
+                // spec's seed, so per-chunk columns equal the resident
+                // embedding's columns.
+                self.embed_spec = Some(spec);
+                Message::Ack
+            }
+            Message::ReqSketchEmbed { p, seed } => {
+                let spec = self.embed_spec.as_ref().expect("ReqEmbed first");
+                let backend = &self.backend;
+                let mut rng = Rng::seed_from(seed);
+                let cs = CountSketch::new(self.source.len(), p, &mut rng);
+                let mut out = Mat::zeros(spec.t, p);
+                self.source.for_each_chunk(self.chunk_rows, |j0, chunk| {
+                    cs.accumulate_point_axis(&backend.embed(spec, chunk), j0, &mut out);
+                });
+                Message::RespMat(out)
+            }
+            Message::ReqScores { z } => {
+                let spec = self.embed_spec.as_ref().expect("ReqEmbed first");
+                let backend = &self.backend;
+                let mut scores = Vec::with_capacity(self.source.len());
+                self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
+                    scores.extend(backend.leverage_norms(&z, &backend.embed(spec, chunk)));
+                });
+                let total = scores.iter().sum();
+                self.scores = Some(scores);
+                Message::RespScalar(total)
+            }
+            Message::ReqResiduals { pts } => {
+                let y = pts.to_mat();
+                let r = self.chol_basis(&y);
+                let backend = &self.backend;
+                let kernel = self.kernel;
+                let mut res = Vec::with_capacity(self.source.len());
+                self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
+                    let k_ya = backend.gram(kernel, &y, chunk);
+                    let diag = kernel_diag(kernel, chunk);
+                    res.extend(backend.project_residual(&r, &k_ya, &diag).1);
+                });
+                let total = res.iter().sum();
+                self.residuals = Some(res);
+                Message::RespScalar(total)
+            }
+            Message::ReqProjectSketch { pts, w, seed } => {
+                let y = pts.to_mat();
+                let r = self.chol_basis(&y);
+                let mut rng = Rng::seed_from(seed);
+                let cs = CountSketch::new(self.source.len(), w, &mut rng);
+                let mut out = Mat::zeros(y.cols(), w);
+                {
+                    let backend = &self.backend;
+                    let kernel = self.kernel;
+                    self.source.for_each_chunk(self.chunk_rows, |j0, chunk| {
+                        let k_ya = backend.gram(kernel, &y, chunk);
+                        let diag = kernel_diag(kernel, chunk);
+                        let (pi, _) = backend.project_residual(&r, &k_ya, &diag);
+                        cs.accumulate_point_axis(&pi, j0, &mut out);
+                    });
+                }
+                self.stream_basis = Some((y, r));
+                Message::RespMat(out)
+            }
+            Message::ReqFinal { coeffs } => {
+                let (y, r) = self.stream_basis.clone().expect("ReqProjectSketch first");
+                self.stream_solution = Some(StreamSolution::Factored { y, r_upper: r, coeffs });
+                Message::Ack
+            }
+            Message::ReqSetSolution { pts, coeffs } => {
+                self.stream_solution = Some(StreamSolution::Direct { y: pts.to_mat(), coeffs });
+                Message::Ack
+            }
+            Message::ReqEvalError => {
+                let sol = self.stream_solution.as_ref().expect("no solution installed");
+                let backend = &self.backend;
+                let kernel = self.kernel;
+                let mut err = 0.0;
+                self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
+                    let proj = projected_chunk(backend.as_ref(), kernel, sol, chunk);
+                    let norms = proj.col_norms_sq();
+                    for (&d, &n) in kernel_diag(kernel, chunk).iter().zip(&norms) {
+                        err += (d - n).max(0.0);
+                    }
+                });
+                Message::RespScalar(err)
+            }
+            Message::ReqEvalTrace => {
+                let kernel = self.kernel;
+                let mut trace = 0.0;
+                self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
+                    for v in kernel_diag(kernel, chunk) {
+                        trace += v;
+                    }
+                });
+                Message::RespScalar(trace)
+            }
+            Message::ReqSampleProjected { count, seed } => {
+                let sol = self.stream_solution.as_ref().expect("no solution installed");
+                let n = self.source.len();
+                let mut rng = Rng::seed_from(seed);
+                let idx: Vec<usize> = (0..count.min(n)).map(|_| rng.below(n)).collect();
+                let sel = self.source.select(&idx);
+                Message::RespMat(projected_chunk(self.backend.as_ref(), self.kernel, sol, &sel))
+            }
+            Message::ReqKmeansStep { centers } => {
+                let sol = self.stream_solution.as_ref().expect("no solution installed");
+                let (kdim, c) = (centers.rows(), centers.cols());
+                let backend = &self.backend;
+                let kernel = self.kernel;
+                let mut sums = Mat::zeros(kdim, c);
+                let mut counts = vec![0usize; c];
+                let mut obj = 0.0;
+                self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
+                    let proj = projected_chunk(backend.as_ref(), kernel, sol, chunk);
+                    assert_eq!(proj.rows(), kdim);
+                    kmeans_fold(&proj, &centers, &mut sums, &mut counts, &mut obj);
+                });
+                Message::RespKmeans { sums, counts, obj }
+            }
+            Message::ReqKrrStats { pts, teacher_seed } => {
+                let y = pts.to_mat();
+                let ny = y.cols();
+                let v = teacher_vector(self.source.dim(), teacher_seed);
+                let backend = &self.backend;
+                let kernel = self.kernel;
+                let mut g = Mat::zeros(ny, ny);
+                let mut b = Mat::zeros(ny, 1);
+                let mut tnorm = 0.0;
+                let mut targets = Vec::with_capacity(self.source.len());
+                self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
+                    let k_ya = backend.gram(kernel, &y, chunk);
+                    let t_chunk = teacher_targets_chunk(chunk, &v);
+                    // Per-point rank-1 accumulation in ascending global
+                    // point order: deterministic and chunk-size
+                    // invariant. `b`/`tnorm` fold in exactly the
+                    // resident order; `g` is the one quantity whose
+                    // resident twin (a blocked matmul) associates its
+                    // sums differently — see the module docs.
+                    for (j, &t) in t_chunk.iter().enumerate() {
+                        for i in 0..ny {
+                            let kij = k_ya[(i, j)];
+                            for i2 in 0..ny {
+                                g[(i, i2)] += kij * k_ya[(i2, j)];
+                            }
+                            b[(i, 0)] += kij * t;
+                        }
+                        tnorm += t * t;
+                    }
+                    targets.extend(t_chunk);
+                });
+                self.krr = Some(KrrState::Streamed { y, targets });
+                Message::RespKrr { g, b, tnorm }
+            }
+            Message::ReqKrrEval { alpha } => {
+                let (y, targets) = match self.krr.as_ref().expect("ReqKrrStats first") {
+                    KrrState::Streamed { y, targets } => (y, targets),
+                    KrrState::Resident { .. } => {
+                        unreachable!("resident KRR state on the streaming path")
+                    }
+                };
+                let backend = &self.backend;
+                let kernel = self.kernel;
+                let mut err = 0.0;
+                self.source.for_each_chunk(self.chunk_rows, |j0, chunk| {
+                    let k_ya = backend.gram(kernel, y, chunk);
+                    let pred = alpha.matmul_at_b(&k_ya);
+                    for j in 0..chunk.len() {
+                        let e = pred[(0, j)] - targets[j0 + j];
+                        err += e * e;
+                    }
+                });
+                Message::RespScalar(err)
+            }
             other => panic!("worker got unexpected {other:?}"),
         }
     }
@@ -256,74 +549,133 @@ impl Worker {
     /// cost words), returned in the shard's natural encoding.
     fn sample_weighted(&mut self, weights: &[f64], count: usize, seed: u64) -> Message {
         if weights.is_empty() || count == 0 {
-            return Message::RespPoints(PointSet::from_data(&self.shard, &[]));
+            return Message::RespPoints(self.source.point_set(&[]));
         }
         let mut rng = Rng::seed_from(seed);
         let table = AliasTable::new(weights);
         let mut idx = table.draw_many(&mut rng, count);
         idx.sort_unstable();
         idx.dedup();
-        Message::RespPoints(PointSet::from_data(&self.shard, &idx))
+        Message::RespPoints(self.source.point_set(&idx))
+    }
+
+    /// Upper-triangular Cholesky factor of K(Y, Y) — the shared first
+    /// step of both the resident `project` and every streamed
+    /// projection pass (identical construction, so factors agree
+    /// bit-for-bit).
+    fn chol_basis(&self, y: &Mat) -> Mat {
+        let k_yy = crate::kernels::gram(self.kernel, y, &Data::Dense(y.clone()));
+        chol_psd(&k_yy).0
     }
 
     /// Π = R⁻ᵀK(Y, Aⁱ) and residuals, via kernel trick + implicit
-    /// Gram–Schmidt (paper Appendix A).
+    /// Gram–Schmidt (paper Appendix A). Resident path only.
     fn project(&self, y: &Mat) -> (Mat, Vec<f64>) {
-        let k_yy = crate::kernels::gram(self.kernel, y, &Data::Dense(y.clone()));
-        let (r, _jitter) = chol_psd(&k_yy);
-        let k_ya = self.backend.gram(self.kernel, y, &self.shard);
-        let diag = kernel_diag(self.kernel, &self.shard);
+        let r = self.chol_basis(y);
+        let k_ya = self.backend.gram(self.kernel, y, self.shard());
+        let diag = kernel_diag(self.kernel, self.shard());
         self.backend.project_residual(&r, &k_ya, &diag)
     }
 
     fn compute_residuals(&self, p: &Mat) -> Vec<f64> {
         self.project(p).1
     }
+}
 
-    /// Synthetic teacher targets tⱼ = cos(vᵀxⱼ), v ~ N(0, I/√d) from
-    /// the shared seed — a fixed nonlinear function every worker can
-    /// evaluate locally, so KRR has ground truth without label
-    /// plumbing.
-    fn teacher_targets(&self, seed: u64) -> Vec<f64> {
-        let d = self.shard.dim();
-        let mut rng = Rng::seed_from(seed);
-        let scale = 1.0 / (d as f64).sqrt();
-        let v: Vec<f64> = (0..d).map(|_| rng.normal() * scale).collect();
-        (0..self.shard.len())
-            .map(|j| {
-                let mut a = 0.0;
-                match &self.shard {
-                    Data::Dense(m) => {
-                        let c = m.col(j);
-                        for r in 0..d {
-                            a += v[r] * c[r];
-                        }
-                    }
-                    Data::Sparse(s) => {
-                        for (r, val) in s.col_iter(j) {
-                            a += v[r] * val;
-                        }
+/// LᵀΦ(x) for a column chunk under a streamed solution. Per-column
+/// identical to the resident path's cached projection.
+fn projected_chunk(backend: &dyn Backend, kernel: Kernel, sol: &StreamSolution, x: &Data) -> Mat {
+    match sol {
+        StreamSolution::Factored { y, r_upper, coeffs } => {
+            let k_ya = backend.gram(kernel, y, x);
+            let diag = kernel_diag(kernel, x);
+            let (pi, _) = backend.project_residual(r_upper, &k_ya, &diag);
+            coeffs.matmul_at_b(&pi)
+        }
+        StreamSolution::Direct { y, coeffs } => {
+            let k_ya = backend.gram(kernel, y, x);
+            coeffs.matmul_at_b(&k_ya)
+        }
+    }
+}
+
+/// One k-means assignment pass over projected columns, folding into
+/// shared accumulators — the same per-point operations in the same
+/// ascending order whether called once (resident) or per chunk.
+fn kmeans_fold(proj: &Mat, centers: &Mat, sums: &mut Mat, counts: &mut [usize], obj: &mut f64) {
+    let (kdim, c) = (centers.rows(), centers.cols());
+    for j in 0..proj.cols() {
+        let mut best = (f64::INFINITY, 0usize);
+        for ci in 0..c {
+            let mut d2 = 0.0;
+            for r in 0..kdim {
+                let d = proj[(r, j)] - centers[(r, ci)];
+                d2 += d * d;
+            }
+            if d2 < best.0 {
+                best = (d2, ci);
+            }
+        }
+        *obj += best.0;
+        counts[best.1] += 1;
+        for r in 0..kdim {
+            sums[(r, best.1)] += proj[(r, j)];
+        }
+    }
+}
+
+/// The teacher direction v ~ N(0, I/√d) from the shared seed.
+fn teacher_vector(d: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::seed_from(seed);
+    let scale = 1.0 / (d as f64).sqrt();
+    (0..d).map(|_| rng.normal() * scale).collect()
+}
+
+/// Synthetic teacher targets tⱼ = cos(vᵀxⱼ) for a column chunk — a
+/// fixed nonlinear function every worker can evaluate locally, so KRR
+/// has ground truth without label plumbing. Per-column, so chunked
+/// evaluation matches the whole-shard pass bit-for-bit.
+fn teacher_targets_chunk(x: &Data, v: &[f64]) -> Vec<f64> {
+    let d = x.dim();
+    (0..x.len())
+        .map(|j| {
+            let mut a = 0.0;
+            match x {
+                Data::Dense(m) => {
+                    let c = m.col(j);
+                    for r in 0..d {
+                        a += v[r] * c[r];
                     }
                 }
-                a.cos()
-            })
-            .collect()
-    }
+                Data::Sparse(s) => {
+                    for (r, val) in s.col_iter(j) {
+                        a += v[r] * val;
+                    }
+                }
+            }
+            a.cos()
+        })
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::embed::EmbedSpec;
+    use crate::comm::PointSet;
     use crate::runtime::NativeBackend;
 
     fn mk_worker(n: usize) -> Worker {
+        mk_worker_chunked(n, 0)
+    }
+
+    fn mk_worker_chunked(n: usize, chunk_rows: usize) -> Worker {
         let mut rng = Rng::seed_from(1);
         let shard = Data::Dense(Mat::from_fn(6, n, |_, _| rng.normal()));
-        Worker::new(
+        Worker::new_chunked(
             shard,
             Kernel::Gauss { gamma: 0.5 },
             Arc::new(NativeBackend::new()),
+            chunk_rows,
         )
     }
 
@@ -388,12 +740,129 @@ mod tests {
         assert!((trace - 30.0).abs() < 1e-9); // gauss diag = 1 each
     }
 
+    /// Resident vs streamed: the full request sequence must produce
+    /// bit-identical replies for every chunk size (the tentpole
+    /// invariant; `tests/streaming_parity.rs` extends this to full
+    /// `dis_kpca` over both transports).
+    #[test]
+    fn streaming_replies_bit_identical_to_resident() {
+        let n = 30;
+        for chunk in [1, 7, 30, 64] {
+            let mut res = mk_worker(n);
+            let mut stream = mk_worker_chunked(n, chunk);
+            assert!(stream.streaming() && !res.streaming());
+            let spec = EmbedSpec {
+                kernel: Kernel::Gauss { gamma: 0.5 },
+                m: 256,
+                t2: 64,
+                t: 16,
+                seed: 3,
+            };
+            let mut lockstep = |req: Message| -> (Message, Message) {
+                let a = res.handle(req.clone());
+                let b = stream.handle(req);
+                (a, b)
+            };
+            lockstep(Message::ReqEmbed { spec });
+            let (a, b) = lockstep(Message::ReqSketchEmbed { p: 20, seed: 5 });
+            let et = match (a, b) {
+                (Message::RespMat(x), Message::RespMat(y)) => {
+                    assert!(x.data() == y.data(), "sketch-embed bits differ (chunk={chunk})");
+                    x
+                }
+                other => panic!("{other:?}"),
+            };
+            let z = crate::linalg::qr_r_only(&et.transpose());
+            let (a, b) = lockstep(Message::ReqScores { z });
+            match (a, b) {
+                (Message::RespScalar(x), Message::RespScalar(y)) => {
+                    assert_eq!(x.to_bits(), y.to_bits(), "score mass differs (chunk={chunk})")
+                }
+                other => panic!("{other:?}"),
+            }
+            let (a, b) = lockstep(Message::ReqScoresVec);
+            match (a, b) {
+                (Message::RespMat(x), Message::RespMat(y)) => assert!(x.data() == y.data()),
+                other => panic!("{other:?}"),
+            }
+            let (a, b) = lockstep(Message::ReqSampleLeverage { count: 6, seed: 7 });
+            let pts = match (a, b) {
+                (Message::RespPoints(x), Message::RespPoints(y)) => {
+                    assert!(x.to_mat().data() == y.to_mat().data());
+                    x
+                }
+                other => panic!("{other:?}"),
+            };
+            let (a, b) = lockstep(Message::ReqResiduals { pts: pts.clone() });
+            match (a, b) {
+                (Message::RespScalar(x), Message::RespScalar(y)) => {
+                    assert_eq!(x.to_bits(), y.to_bits(), "residual mass differs (chunk={chunk})")
+                }
+                other => panic!("{other:?}"),
+            }
+            let ny = pts.len();
+            let (a, b) = lockstep(Message::ReqProjectSketch { pts, w: 12, seed: 11 });
+            match (a, b) {
+                (Message::RespMat(x), Message::RespMat(y)) => assert!(x.data() == y.data()),
+                other => panic!("{other:?}"),
+            }
+            let wmat = Mat::from_fn(ny, 2, |i, j| if i == j { 1.0 } else { 0.0 });
+            lockstep(Message::ReqFinal { coeffs: wmat });
+            for req in [Message::ReqEvalError, Message::ReqEvalTrace] {
+                let (a, b) = lockstep(req);
+                match (a, b) {
+                    (Message::RespScalar(x), Message::RespScalar(y)) => {
+                        assert_eq!(x.to_bits(), y.to_bits(), "eval differs (chunk={chunk})")
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            let (a, b) = lockstep(Message::ReqSampleProjected { count: 4, seed: 2 });
+            match (a, b) {
+                (Message::RespMat(x), Message::RespMat(y)) => assert!(x.data() == y.data()),
+                other => panic!("{other:?}"),
+            }
+            let (a, b) = lockstep(Message::ReqKmeansStep {
+                centers: Mat::from_fn(2, 3, |i, j| (i + j) as f64 * 0.1),
+            });
+            match (a, b) {
+                (
+                    Message::RespKmeans { sums: s1, counts: c1, obj: o1 },
+                    Message::RespKmeans { sums: s2, counts: c2, obj: o2 },
+                ) => {
+                    assert!(s1.data() == s2.data());
+                    assert_eq!(c1, c2);
+                    assert_eq!(o1.to_bits(), o2.to_bits());
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn protocol_misuse_surfaces_error_instead_of_killing_worker() {
+        let mut w = mk_worker(10);
+        // ReqScores before ReqEmbed used to panic the worker thread
+        match w.handle(Message::ReqScores { z: Mat::identity(4) }) {
+            Message::RespError(msg) => {
+                assert!(msg.contains("ReqEmbed first"), "unhelpful error: {msg}")
+            }
+            other => panic!("expected RespError, got {other:?}"),
+        }
+        // the worker survives and keeps serving
+        assert!(matches!(w.handle(Message::ReqCount), Message::RespCount(10)));
+    }
+
     #[test]
     fn residuals_zero_when_sampled_points_cover_shard() {
         let mut w = mk_worker(8);
         // P = the entire shard ⇒ all residuals ≈ 0
         let all: Vec<usize> = (0..8).collect();
-        let pts = PointSet::from_data(&w.shard, &all);
+        let pts = match w.handle(Message::ReqSampleUniform { count: 8, seed: 1 }) {
+            Message::RespPoints(p) => p,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(pts.len(), all.len());
         let mass = match w.handle(Message::ReqResiduals { pts }) {
             Message::RespScalar(v) => v,
             other => panic!("{other:?}"),
@@ -487,6 +956,40 @@ mod tests {
             other => panic!("{other:?}"),
         };
         assert!((sse - tnorm).abs() < 1e-9 * tnorm.max(1.0), "{sse} vs {tnorm}");
+    }
+
+    /// Streamed KRR agrees with resident to FP tolerance (exactly for
+    /// b/tnorm/eval; `g` only reassociates) and is chunk-invariant.
+    #[test]
+    fn krr_streamed_matches_resident_and_chunk_invariant() {
+        let run = |chunk: usize| {
+            let mut w = mk_worker_chunked(25, chunk);
+            let y = match w.handle(Message::ReqSampleUniform { count: 6, seed: 4 }) {
+                Message::RespPoints(p) => p,
+                other => panic!("{other:?}"),
+            };
+            let ny = y.len();
+            let (g, b, tnorm) = match w.handle(Message::ReqKrrStats { pts: y, teacher_seed: 9 }) {
+                Message::RespKrr { g, b, tnorm } => (g, b, tnorm),
+                other => panic!("{other:?}"),
+            };
+            let sse = match w.handle(Message::ReqKrrEval { alpha: Mat::zeros(ny, 1) }) {
+                Message::RespScalar(v) => v,
+                other => panic!("{other:?}"),
+            };
+            (g, b, tnorm, sse)
+        };
+        let (g0, b0, t0, s0) = run(0);
+        let (g7, b7, t7, s7) = run(7);
+        let (g99, b99, ..) = run(99);
+        // streamed-vs-streamed: bit-identical for every chunk size
+        assert!(g7.data() == g99.data(), "streamed g must be chunk-invariant");
+        assert!(b7.data() == b99.data());
+        // streamed-vs-resident: b/tnorm/sse bitwise, g to tolerance
+        assert!(b0.data() == b7.data(), "b must match resident bitwise");
+        assert_eq!(t0.to_bits(), t7.to_bits());
+        assert_eq!(s0.to_bits(), s7.to_bits());
+        assert!(g0.max_abs_diff(&g7) < 1e-9 * (1.0 + g0.frob_norm()));
     }
 
     #[test]

@@ -12,9 +12,11 @@
 mod generators;
 pub mod io;
 mod matrix;
+pub mod shard_store;
 
 pub use generators::*;
 pub use matrix::Data;
+pub use shard_store::{ShardSource, ShardStore};
 
 use crate::rng::{power_law_sizes, Rng};
 

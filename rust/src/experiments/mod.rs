@@ -15,7 +15,7 @@ use std::time::Instant;
 
 use crate::config::Config;
 use crate::coordinator::{
-    self, dis_eval, dis_kpca, dis_set_solution, run_cluster, Params,
+    self, dis_eval, dis_kpca, dis_set_solution, run_cluster_chunked, Params,
 };
 use crate::data::{by_name, Data, DatasetSpec};
 use crate::kernels::{median_trick_gamma, Kernel};
@@ -150,8 +150,10 @@ pub fn run_method(
     let backend = ctx.backend.clone();
     let params = *params;
     let t0 = Instant::now();
+    // `--chunk-rows` flows through to the in-process workers: every
+    // experiment driver can run its workers out-of-core-style.
     let ((err, trace, num_points), stats) =
-        run_cluster(shards, kernel, backend, move |cluster| {
+        run_cluster_chunked(shards, kernel, backend, params.chunk_rows, move |cluster| {
             let sol = match method {
                 Method::DisKpca => dis_kpca(cluster, kernel, &params),
                 Method::UniformDisLr => {
@@ -218,6 +220,7 @@ mod tests {
             t2: 128,
             seed: 5,
             threads: 0,
+            chunk_rows: 0,
         }
     }
 

@@ -279,6 +279,15 @@ pub fn diag(kernel: Kernel, x: &Data) -> Vec<f64> {
     (0..x.len()).map(|j| kernel.diag(x.col_norm_sq(j))).collect()
 }
 
+/// Σⱼ κ(xⱼ, xⱼ) — a sequential left-to-right fold over the whole
+/// shard. NOTE: f64 addition is not associative, so chunked callers
+/// must NOT sum per-chunk partials of this; the streaming eval path
+/// instead folds [`diag`] values one element at a time across chunks,
+/// which reproduces this whole-shard fold bit for bit.
+pub fn diag_sum(kernel: Kernel, x: &Data) -> f64 {
+    (0..x.len()).map(|j| kernel.diag(x.col_norm_sq(j))).sum()
+}
+
 // ------------------------------------------------------------------
 // Random feature expansions (paper §3 "Kernels and Random Features")
 // ------------------------------------------------------------------

@@ -69,38 +69,72 @@ pub fn master(cfg: &Config) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `diskpca worker`: load a shard, serve the protocol.
+/// `diskpca worker`: load a shard, serve the protocol. A `.dkps`
+/// shard store is mapped out-of-core (worker matrix memory tracks the
+/// chunk/block size, not the shard size); `.bin`/`.csv` shards load
+/// resident and stream only when `--chunk-rows` is set.
 pub fn worker(cfg: &Config) -> anyhow::Result<()> {
     let addr = cfg.str_or("connect", "127.0.0.1:7700");
     let path = cfg
         .get("data")
-        .ok_or_else(|| anyhow::anyhow!("worker needs --data <file.bin|file.csv>"))?;
-    let shard = if path.ends_with(".csv") {
-        data::io::load_csv(path)?
+        .ok_or_else(|| anyhow::anyhow!("worker needs --data <file.bin|file.csv|file.dkps>"))?;
+    let params = cfg.params();
+    let source = if path.ends_with(".dkps") {
+        data::ShardSource::Store(data::ShardStore::open(path)?)
+    } else if path.ends_with(".csv") {
+        data::ShardSource::Resident(data::io::load_csv(path)?)
     } else {
-        data::io::load(path)?
+        data::ShardSource::Resident(data::io::load(path)?)
     };
     let kernel = kernel_from_flags(cfg)?;
     // worker processes size their own pool from --threads (absent or
     // 0 leaves the pool and DISKPCA_THREADS untouched)
-    cfg.params().apply_threads();
+    params.apply_threads();
     let backend = backend_from_name(
         cfg.str_or("backend", "native"),
         cfg.str_or("artifacts", "artifacts"),
     )?;
     eprintln!(
-        "worker: {} points of dim {} → {addr} (backend {})",
-        shard.len(),
-        shard.dim(),
-        backend.name()
+        "worker: {} points of dim {} → {addr} (backend {}, {})",
+        source.len(),
+        source.dim(),
+        backend.name(),
+        match (&source, params.chunk_rows) {
+            (data::ShardSource::Store(_), 0) => "streaming block-sized chunks".to_string(),
+            (_, 0) => "resident".to_string(),
+            (_, c) => format!("streaming {c}-point chunks"),
+        }
     );
-    let endpoint = tcp::connect(addr)?;
-    Worker::new(shard, kernel, backend).run(endpoint);
-    eprintln!("worker: done");
+    let mut endpoint = tcp::connect(addr)?;
+    let mut worker = Worker::with_source(source, kernel, backend, params.chunk_rows);
+    // Drive the loop here (rather than `Worker::run`) so a dropped
+    // connection surfaces as an error with protocol context instead
+    // of aborting the process mid-protocol.
+    let mut served = 0usize;
+    loop {
+        let req = endpoint.try_recv().map_err(|e| {
+            anyhow::anyhow!("connection to master lost after {served} requests: {e}")
+        })?;
+        if matches!(req, crate::comm::Message::Quit) {
+            break;
+        }
+        let resp = worker.handle(req);
+        if let crate::comm::Message::RespError(msg) = &resp {
+            eprintln!("worker: request failed (reported to master): {msg}");
+        }
+        endpoint.try_send(resp).map_err(|e| {
+            anyhow::anyhow!("connection to master lost while replying (request {served}): {e}")
+        })?;
+        served += 1;
+    }
+    eprintln!("worker: done ({served} requests served)");
     Ok(())
 }
 
-/// `diskpca shard <dataset>`: write power-law shards to disk.
+/// `diskpca shard <dataset>`: write power-law shards to disk. With
+/// `--chunk-rows N` each shard is written as a chunked `.dkps` store
+/// (N-point blocks) that `diskpca worker` maps out-of-core; without
+/// it, the legacy resident `.bin` format.
 pub fn shard(cfg: &Config, dataset: &str) -> anyhow::Result<()> {
     let scale = cfg.f64_or("scale", 0.1);
     let seed = cfg.u64_or("seed", 0xd15c);
@@ -108,13 +142,24 @@ pub fn shard(cfg: &Config, dataset: &str) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
     let parts = cfg.usize_or("parts", spec.s);
     let out = cfg.str_or("out", "shards");
+    let chunk_rows = cfg.params().chunk_rows;
     std::fs::create_dir_all(out)?;
     let global = spec.generate(seed);
     let shards = data::partition_power_law(&global, parts, seed);
     for (i, sh) in shards.iter().enumerate() {
-        let path = format!("{out}/{dataset}_{i:03}.bin");
-        data::io::save(sh, &path)?;
-        println!("{path}: {} points", sh.len());
+        if chunk_rows > 0 {
+            let path = format!("{out}/{dataset}_{i:03}.dkps");
+            data::shard_store::write(sh, &path, chunk_rows)?;
+            println!(
+                "{path}: {} points in {} blocks of ≤{chunk_rows}",
+                sh.len(),
+                sh.len().div_ceil(chunk_rows)
+            );
+        } else {
+            let path = format!("{out}/{dataset}_{i:03}.bin");
+            data::io::save(sh, &path)?;
+            println!("{path}: {} points", sh.len());
+        }
     }
     Ok(())
 }
@@ -122,6 +167,8 @@ pub fn shard(cfg: &Config, dataset: &str) -> anyhow::Result<()> {
 /// In-process end-to-end check of the multi-process path (used by the
 /// integration test and `examples/multiprocess.rs`): spawns worker
 /// *threads* that connect through real sockets to a listening master.
+/// Honours `--chunk-rows` (streamed workers) and propagates worker
+/// and master failures as errors with context instead of aborting.
 pub fn selftest(cfg: &Config) -> anyhow::Result<(f64, f64)> {
     let s = cfg.usize_or("workers", 3);
     let kernel = kernel_from_flags(cfg)?;
@@ -146,22 +193,52 @@ pub fn selftest(cfg: &Config) -> anyhow::Result<(f64, f64)> {
         Ok(res)
     });
     std::thread::sleep(std::time::Duration::from_millis(100));
+    let chunk_rows = params.chunk_rows;
     let worker_threads: Vec<_> = shards
         .into_iter()
-        .map(|sh| {
+        .enumerate()
+        .map(|(i, sh)| {
             let addr = addr.clone();
-            std::thread::spawn(move || {
+            std::thread::spawn(move || -> anyhow::Result<()> {
                 let be = Arc::new(crate::runtime::NativeBackend::new());
-                let ep = tcp::connect(&addr).expect("connect");
-                Worker::new(sh, kernel, be).run(ep);
+                let ep = tcp::connect(&addr)
+                    .map_err(|e| anyhow::anyhow!("worker {i}: connect to {addr} failed: {e}"))?;
+                Worker::new_chunked(sh, kernel, be, chunk_rows).run(ep);
+                Ok(())
             })
         })
         .collect();
-    let res = master_thread.join().expect("master panicked")?;
-    for w in worker_threads {
-        w.join().expect("worker panicked");
+    let res = master_thread
+        .join()
+        .map_err(|p| anyhow::anyhow!("master thread panicked: {}", panic_text(&p)))?;
+    let mut worker_errs = Vec::new();
+    for (i, w) in worker_threads.into_iter().enumerate() {
+        match w.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => worker_errs.push(format!("worker {i}: {e}")),
+            Err(p) => worker_errs.push(format!("worker {i} panicked: {}", panic_text(&p))),
+        }
     }
-    Ok(res)
+    // The master outcome decides; a worker that errored after the
+    // master already failed is secondary context.
+    match res {
+        Ok(res) => {
+            anyhow::ensure!(worker_errs.is_empty(), "workers failed: {}", worker_errs.join("; "));
+            Ok(res)
+        }
+        Err(e) if worker_errs.is_empty() => Err(e),
+        Err(e) => Err(anyhow::anyhow!("{e} (worker errors: {})", worker_errs.join("; "))),
+    }
+}
+
+fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 #[cfg(test)]
@@ -209,5 +286,49 @@ mod tests {
             let d = crate::data::io::load(&p).unwrap();
             assert_eq!(d.dim(), 9);
         }
+    }
+
+    #[test]
+    fn shard_writes_chunked_stores() {
+        let mut cfg = Config::new();
+        let dir = std::env::temp_dir().join("diskpca_shards_dkps");
+        cfg.set("out", dir.to_str().unwrap());
+        cfg.set("parts", "2");
+        cfg.set("scale", "0.02");
+        cfg.set("chunk-rows", "16");
+        shard(&cfg, "protein_like").unwrap();
+        for i in 0..2 {
+            let p = dir.join(format!("protein_like_{i:03}.dkps"));
+            assert!(p.exists(), "{p:?} missing");
+            let s = crate::data::ShardStore::open(&p).unwrap();
+            assert_eq!(s.dim(), 9);
+            assert_eq!(s.block_points(), 16);
+            assert_eq!(s.num_blocks(), s.len().div_ceil(16));
+        }
+    }
+
+    #[test]
+    fn multiprocess_selftest_chunked_matches_resident() {
+        let mk = |chunk: &str| {
+            let mut cfg = Config::new();
+            cfg.set("workers", "3");
+            cfg.set("kernel", "gauss");
+            cfg.set("gamma", "0.6");
+            cfg.set("k", "3");
+            cfg.set("t", "16");
+            cfg.set("p", "32");
+            cfg.set("n_lev", "8");
+            cfg.set("n_adapt", "12");
+            cfg.set("m_rff", "128");
+            cfg.set("t2", "64");
+            if !chunk.is_empty() {
+                cfg.set("chunk-rows", chunk);
+            }
+            cfg
+        };
+        let (err0, trace0) = selftest(&mk("")).unwrap();
+        let (err64, trace64) = selftest(&mk("64")).unwrap();
+        assert_eq!(err0.to_bits(), err64.to_bits(), "streamed TCP run must be bit-identical");
+        assert_eq!(trace0.to_bits(), trace64.to_bits());
     }
 }

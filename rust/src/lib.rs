@@ -31,7 +31,7 @@
 //! | compute | [`sparse`] | CSC shards, `O(nnz)` paths (§4's ρ-dependence) |
 //! | compute | [`par`] | shared thread pool — deterministic parallel Gram/sketch/matmul hot paths |
 //! | compute | [`runtime`] | [`runtime::Backend`]: native f64 vs XLA/PJRT artifacts |
-//! | harness | [`data`] | Table-1 dataset analogues, partitioners, disk I/O |
+//! | harness | [`data`] | Table-1 dataset analogues, partitioners, disk I/O, out-of-core shard stores ([`data::shard_store`]) |
 //! | harness | [`experiments`] | one driver per paper table/figure (§6) |
 //! | harness | [`rng`] | xoshiro PRNG, alias tables, shared-seed sampling |
 //! | harness | [`config`] / [`cli`] / [`launcher`] | flags, `key = value` configs, multi-process deployment |
@@ -71,7 +71,9 @@
 //! ```
 //!
 //! Start at [`coordinator`] for the headline algorithm; [`par`] for
-//! the `--threads` scaling knob.
+//! the `--threads` scaling knob; [`data::shard_store`] +
+//! [`coordinator::worker`] for the `--chunk-rows` out-of-core
+//! streaming path (bit-identical to resident for every chunk size).
 
 #![deny(rustdoc::broken_intra_doc_links)]
 

@@ -6,6 +6,31 @@
 //! or the native kernels in `crate::kernels`, both over `f32`.
 
 use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// High-water mark of the largest single [`Mat`] buffer allocated
+/// since the last [`reset_peak_mat_elems`] (in f64 elements,
+/// process-wide). Instrumentation for the out-of-core worker tests:
+/// under `--chunk-rows` a worker's peak must track the chunk size, not
+/// the shard size. The relaxed `fetch_max` costs a few ns per
+/// allocation — invisible next to the O(rows·cols) zero-fill.
+static PEAK_MAT_ELEMS: AtomicUsize = AtomicUsize::new(0);
+
+#[inline]
+fn note_mat_alloc(elems: usize) {
+    PEAK_MAT_ELEMS.fetch_max(elems, Ordering::Relaxed);
+}
+
+/// Largest single matrix allocation (elements) since the last reset.
+pub fn peak_mat_elems() -> usize {
+    PEAK_MAT_ELEMS.load(Ordering::Relaxed)
+}
+
+/// Reset the allocation high-water mark (tests bracket a protocol
+/// phase with reset/read).
+pub fn reset_peak_mat_elems() {
+    PEAK_MAT_ELEMS.store(0, Ordering::Relaxed);
+}
 
 /// Row-major dense matrix.
 #[derive(Clone, PartialEq)]
@@ -51,6 +76,7 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
 
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Self {
+        note_mat_alloc(rows * cols);
         Self { rows, cols, data: vec![0.0; rows * cols] }
     }
 
@@ -67,6 +93,7 @@ impl Mat {
     /// Wrap an existing row-major buffer.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols);
+        note_mat_alloc(data.len());
         Self { rows, cols, data }
     }
 

@@ -132,6 +132,29 @@ impl CountSketch {
         }
     }
 
+    /// Accumulate the point-axis sketch of a *column chunk* into
+    /// `out` (r×t): column `j` of `a` is treated as global column
+    /// `col0 + j`, so folding ascending chunks reproduces
+    /// [`CountSketch::apply_point_axis`] on the full matrix **bit for
+    /// bit** — per output entry the additions happen in the same
+    /// ascending global-column order (with the same `v != 0` skip),
+    /// so no floating-point sum is reassociated. This is the streaming
+    /// worker's replacement for materializing `A` whole.
+    pub fn accumulate_point_axis(&self, a: &Mat, col0: usize, out: &mut Mat) {
+        assert!(col0 + a.cols() <= self.h.len(), "chunk exceeds sketch input dim");
+        assert_eq!(out.cols(), self.t);
+        assert_eq!(out.rows(), a.rows());
+        for i in 0..a.rows() {
+            let arow = a.row(i);
+            let orow = out.row_mut(i);
+            for (j, &v) in arow.iter().enumerate() {
+                if v != 0.0 {
+                    orow[self.h[col0 + j] as usize] += self.s[col0 + j] * v;
+                }
+            }
+        }
+    }
+
     /// Point-axis (right) sketch of an `r×n` matrix: `A·Sᵀ → r×t`.
     /// This compresses the *number of points* — Alg. 1 / Alg. 3.
     /// Row-parallel (each output row depends on one input row only).
@@ -227,6 +250,26 @@ mod tests {
         // A·Sᵀ == (S·Aᵀ)ᵀ
         let want = cs.apply_feature_axis(&a.transpose()).transpose();
         assert!(got.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn accumulate_chunks_bit_identical_to_full_apply() {
+        let mut rng = Rng::seed_from(7);
+        let (r, n, t) = (6, 53, 16);
+        let cs = CountSketch::new(n, t, &mut rng);
+        let a = Mat::from_fn(r, n, |i, j| if (i + j) % 4 == 0 { 0.0 } else { rng.normal() });
+        let full = cs.apply_point_axis(&a);
+        for chunk in [1, 7, 16, 53, 100] {
+            let mut out = Mat::zeros(r, t);
+            let mut at = 0;
+            while at < n {
+                let end = (at + chunk).min(n);
+                let sub = Mat::from_fn(r, end - at, |i, j| a[(i, at + j)]);
+                cs.accumulate_point_axis(&sub, at, &mut out);
+                at = end;
+            }
+            assert!(out.data() == full.data(), "chunk={chunk}: bits differ");
+        }
     }
 
     #[test]

@@ -1,0 +1,138 @@
+//! TCP framing / codec edge cases and worker-error surfacing.
+//!
+//! The happy path is covered by `tcp_protocol.rs`; these tests pin the
+//! failure modes that used to be `expect(...)`-only: truncated frames,
+//! absurd length prefixes (which must error out instead of attempting
+//! a multi-GiB allocation), codec garbage inside a well-framed
+//! payload, and worker-side failures crossing the wire as
+//! `RespError` with context instead of a dead socket.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use diskpca::comm::tcp::{self, MAX_FRAME_BYTES};
+use diskpca::comm::Message;
+use diskpca::coordinator::Worker;
+use diskpca::data::Data;
+use diskpca::kernels::Kernel;
+use diskpca::linalg::Mat;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+/// Write raw bytes to a fresh loopback connection, return the
+/// server-side stream to read the frame from.
+fn pair_with_payload(payload: &[u8]) -> TcpStream {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut client = TcpStream::connect(addr).unwrap();
+    let (server, _) = listener.accept().unwrap();
+    client.write_all(payload).unwrap();
+    drop(client); // close so reads past the payload hit EOF, not a hang
+    server
+}
+
+#[test]
+fn truncated_frame_is_an_error_not_a_hang_or_panic() {
+    // promise 64 bytes, deliver 10
+    let mut bytes = 64u64.to_le_bytes().to_vec();
+    bytes.extend_from_slice(&[1u8; 10]);
+    let mut server = pair_with_payload(&bytes);
+    let err = tcp::read_frame(&mut server).expect_err("truncated frame must fail");
+    assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+}
+
+#[test]
+fn truncated_length_prefix_is_an_error() {
+    let mut server = pair_with_payload(&[1, 2, 3]); // 3 of 8 prefix bytes
+    assert!(tcp::read_frame(&mut server).is_err());
+}
+
+#[test]
+fn oversized_length_prefix_rejected_without_allocating() {
+    for n in [MAX_FRAME_BYTES + 1, u64::MAX] {
+        let mut server = pair_with_payload(&n.to_le_bytes());
+        let err = tcp::read_frame(&mut server).expect_err("oversized prefix must fail");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("cap"), "unhelpful error: {err}");
+    }
+}
+
+#[test]
+fn codec_garbage_in_wellformed_frame_propagates_decode_error() {
+    // valid framing, nonsense payload: tag 200 does not exist
+    let payload = [200u8, 1, 2, 3];
+    let mut bytes = (payload.len() as u64).to_le_bytes().to_vec();
+    bytes.extend_from_slice(&payload);
+    let mut server = pair_with_payload(&bytes);
+    let err = tcp::read_frame(&mut server).expect_err("bad tag must fail");
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    assert!(err.to_string().contains("BadTag"), "decode error lost: {err}");
+
+    // truncated *payload* (valid tag, missing matrix body) — the
+    // codec's Truncated error must propagate the same way
+    let payload = [2u8, 9]; // ReqScores with a mangled Mat header
+    let mut bytes = (payload.len() as u64).to_le_bytes().to_vec();
+    bytes.extend_from_slice(&payload);
+    let mut server = pair_with_payload(&bytes);
+    let err = tcp::read_frame(&mut server).expect_err("truncated payload must fail");
+    assert!(err.to_string().contains("Truncated"), "decode error lost: {err}");
+}
+
+#[test]
+fn worker_error_crosses_the_wire_with_context() {
+    let (links, endpoints) = tcp::star(1).unwrap();
+    let handles: Vec<_> = endpoints
+        .into_iter()
+        .map(|ep| {
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from(1);
+                let shard = Data::Dense(Mat::from_fn(4, 12, |_, _| rng.normal()));
+                let be = Arc::new(NativeBackend::new());
+                Worker::new(shard, Kernel::Gauss { gamma: 0.5 }, be).run(ep);
+            })
+        })
+        .collect();
+    // protocol misuse: scores before embed. The worker must answer
+    // with RespError (and survive), not die and strand the master.
+    links[0].send(Message::ReqScores { z: Mat::identity(4) });
+    match links[0].recv() {
+        Message::RespError(msg) => {
+            assert!(msg.contains("ReqEmbed first"), "context lost: {msg}");
+            assert!(msg.contains("ReqScores"), "failing request not named: {msg}");
+        }
+        other => panic!("expected RespError over TCP, got {other:?}"),
+    }
+    // worker still serves afterwards
+    links[0].send(Message::ReqCount);
+    assert!(matches!(links[0].recv(), Message::RespCount(12)));
+    links[0].send(Message::Quit);
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn roundtrip_over_sockets_preserves_error_payload() {
+    let (links, endpoints) = tcp::star(1).unwrap();
+    let handles: Vec<_> = endpoints
+        .into_iter()
+        .map(|mut ep| {
+            std::thread::spawn(move || loop {
+                match ep.recv() {
+                    Message::Quit => break,
+                    _ => ep.send(Message::RespError("shard store: block 3 unreadable".into())),
+                }
+            })
+        })
+        .collect();
+    links[0].send(Message::ReqCount);
+    match links[0].recv() {
+        Message::RespError(msg) => assert_eq!(msg, "shard store: block 3 unreadable"),
+        other => panic!("{other:?}"),
+    }
+    links[0].send(Message::Quit);
+    for h in handles {
+        h.join().unwrap();
+    }
+}

@@ -210,6 +210,7 @@ fn dis_kpca_identical_across_thread_counts() {
         t2: 128,
         seed: 7,
         threads: 0,
+        chunk_rows: 0,
     };
     let mut runs = Vec::new();
     for threads in [1usize, 4] {

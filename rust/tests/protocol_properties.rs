@@ -47,6 +47,7 @@ fn random_params(rng: &mut Rng) -> Params {
         t2: 64,
         seed: rng.next_u64(),
         threads: 0,
+        chunk_rows: 0,
     }
 }
 
@@ -272,6 +273,7 @@ fn prop_degenerate_data_survives() {
                 t2: 32,
                 seed: rng.next_u64(),
                 threads: 0,
+                chunk_rows: 0,
             };
             let shards = partition_power_law(&data, 3, rng.next_u64());
             let ((err, trace), _) = run_cluster(

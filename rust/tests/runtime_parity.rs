@@ -146,6 +146,7 @@ fn diskpca_end_to_end_on_xla_backend() {
         t2: 512,
         seed: 21,
         threads: 0,
+        chunk_rows: 0,
     };
     let ((sol, err, trace), _stats) = run_cluster(shards, kernel, backend, move |cluster| {
         let sol = dis_kpca(cluster, kernel, &params);

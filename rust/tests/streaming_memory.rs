@@ -1,0 +1,98 @@
+//! The out-of-core memory claim, pinned: under `--chunk-rows` a
+//! worker's peak resident **matrix** allocation is bounded by the
+//! chunk size (and n-independent table/reply dims), not the shard
+//! size.
+//!
+//! This lives in its own integration binary on purpose: the
+//! allocation high-water mark (`linalg::peak_mat_elems`) is
+//! process-global, and any sibling test allocating shard-sized
+//! matrices on a parallel test thread would pollute the reading.
+
+use std::sync::Arc;
+
+use diskpca::comm::Message;
+use diskpca::coordinator::Worker;
+use diskpca::data::Data;
+use diskpca::embed::EmbedSpec;
+use diskpca::kernels::Kernel;
+use diskpca::linalg::{peak_mat_elems, reset_peak_mat_elems, Mat};
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+fn mat(m: Message) -> Mat {
+    match m {
+        Message::RespMat(v) => v,
+        other => panic!("{other:?}"),
+    }
+}
+
+fn scalar(m: Message) -> f64 {
+    match m {
+        Message::RespScalar(v) => v,
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn worker_peak_matrix_allocation_bounded_by_chunk_not_shard() {
+    // n ≫ chunk: drive one worker through the full per-point protocol
+    // and watch the allocation high-water mark. The resident path
+    // must materialize E (t×n); the streamed path must stay bounded
+    // by dims independent of n.
+    let n = 600;
+    let (t, p, w_cols, chunk) = (16usize, 24usize, 24usize, 8usize);
+    let mut rng = Rng::seed_from(6);
+    let shard = Data::Dense(Mat::from_fn(6, n, |_, _| rng.normal()));
+    let kernel = Kernel::Gauss { gamma: 0.5 };
+    let spec = EmbedSpec { kernel, m: 128, t2: 64, t, seed: 3 };
+
+    let drive = |w: &mut Worker| -> usize {
+        reset_peak_mat_elems();
+        w.handle(Message::ReqEmbed { spec });
+        let et = mat(w.handle(Message::ReqSketchEmbed { p, seed: 5 }));
+        let z = diskpca::linalg::qr_r_only(&et.transpose());
+        scalar(w.handle(Message::ReqScores { z }));
+        let pts = match w.handle(Message::ReqSampleLeverage { count: 8, seed: 7 }) {
+            Message::RespPoints(v) => v,
+            other => panic!("{other:?}"),
+        };
+        scalar(w.handle(Message::ReqResiduals { pts: pts.clone() }));
+        let ny = pts.len();
+        mat(w.handle(Message::ReqProjectSketch { pts, w: w_cols, seed: 11 }));
+        let coeffs = Mat::from_fn(ny, 2, |i, j| if i == j { 1.0 } else { 0.0 });
+        w.handle(Message::ReqFinal { coeffs });
+        scalar(w.handle(Message::ReqEvalError));
+        scalar(w.handle(Message::ReqEvalTrace));
+        peak_mat_elems()
+    };
+
+    let mut resident = Worker::new(shard.clone(), kernel, Arc::new(NativeBackend::new()));
+    let resident_peak = drive(&mut resident);
+    assert!(
+        resident_peak >= t * n,
+        "resident worker should materialize E (t·n = {}), saw peak {resident_peak}",
+        t * n
+    );
+
+    let mut streamed =
+        Worker::new_chunked(shard.clone(), kernel, Arc::new(NativeBackend::new()), chunk);
+    let streamed_peak = drive(&mut streamed);
+    // Biggest legitimate streamed allocations: the per-chunk RFF
+    // feature block (m×chunk), the Ω table (d×m), the t×p sketch
+    // reply, and |Y|-sized blocks — all independent of n. Assert a
+    // hard ceiling well below the resident t×n / m×n footprints.
+    let ceiling = 128 * chunk + 6 * 128 + t * p + 256;
+    assert!(
+        streamed_peak <= ceiling,
+        "streamed peak {streamed_peak} exceeds chunk-bounded ceiling {ceiling}"
+    );
+    assert!(
+        streamed_peak * 4 < resident_peak,
+        "streamed peak {streamed_peak} not meaningfully below resident {resident_peak}"
+    );
+
+    // and the streamed worker still agrees with the resident one
+    let a = scalar(resident.handle(Message::ReqEvalError));
+    let b = scalar(streamed.handle(Message::ReqEvalError));
+    assert_eq!(a.to_bits(), b.to_bits());
+}

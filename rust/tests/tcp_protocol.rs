@@ -29,6 +29,7 @@ fn workload() -> (Vec<Data>, Kernel, Params) {
         t2: 64,
         seed: 12,
         threads: 0,
+        chunk_rows: 0,
     };
     (shards, kernel, params)
 }
