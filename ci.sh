@@ -32,13 +32,16 @@ echo "==> bench smoke (DISKPCA_BENCH_FAST=1, single-thread sweep)"
 DISKPCA_BENCH_FAST=1 DISKPCA_BENCH_THREADS=1,2 cargo bench --bench sketches
 DISKPCA_BENCH_FAST=1 DISKPCA_BENCH_THREADS=1,2 cargo bench --bench linalg
 
-# Streaming bench: emits BENCH_streaming.json (median ns per row,
-# resident + chunked variants) and diffs it against the checked-in
-# baseline in bench_baseline/, printing a WARNING for any row >25%
-# slower. Warn-only — shared runners are too noisy for a hard
-# wall-time gate; copy BENCH_streaming.json over the baseline when a
-# slowdown is intended.
+# Streaming + protocol benches: each emits a BENCH_*.json (median ns
+# per row) and diffs it against its checked-in baseline in
+# bench_baseline/, printing a WARNING for any row >25% slower.
+# Warn-only — shared runners are too noisy for a hard wall-time gate;
+# copy the fresh BENCH_*.json over the baseline when a slowdown is
+# intended. The protocol rows track broadcast/gather fan-out, so
+# session-layer refactors are trend-recorded.
 echo "==> streaming bench smoke + baseline diff (warn-only, threshold 25%)"
 DISKPCA_BENCH_FAST=1 cargo bench --bench streaming
+echo "==> protocol bench smoke + baseline diff (warn-only, threshold 25%)"
+DISKPCA_BENCH_FAST=1 cargo bench --bench protocol
 
 echo "CI OK"

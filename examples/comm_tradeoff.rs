@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     for n_adapt in [50usize, 100, 200, 400] {
         for method in [Method::DisKpca, Method::UniformDisLr] {
             let params = Params { n_adapt, ..ctx.cfg.params() };
-            let r = run_method(&ctx, &spec, &data, kernel, &params, method);
+            let r = run_method(&ctx, &spec, &data, kernel, &params, method)?;
             println!(
                 "{:<20} {:>8} {:>6} {:>12} {:>12.5}",
                 r.method, n_adapt, r.num_points, r.comm_words, r.err_per_point

@@ -16,11 +16,11 @@
 
 use std::sync::Arc;
 
+use diskpca::comm::request;
 use diskpca::coordinator::{
     baselines::dis_uniform_sample, dis_css, dis_kpca_boosted, dis_krr, reps_for_confidence,
     run_cluster, Params,
 };
-use diskpca::comm::Message;
 use diskpca::data::{clusters, partition_power_law, Data};
 use diskpca::kernels::{median_trick_gamma, Kernel};
 use diskpca::rng::Rng;
@@ -49,16 +49,13 @@ fn main() {
         kernel,
         Arc::new(NativeBackend::new()),
         move |cluster| {
-            let css = dis_css(cluster, kernel, &params);
+            let css = dis_css(cluster, kernel, &params).expect("worker failure");
             // uniform selection of the same size, certified the same way
-            let uni = dis_uniform_sample(cluster, css.y.len(), 99);
+            let uni = dis_uniform_sample(cluster, css.y.len(), 99).expect("worker failure");
             let uni_residual: f64 = cluster
-                .exchange(&Message::ReqResiduals { pts: uni })
+                .broadcast(request::Residuals { pts: uni })
+                .expect("worker failure")
                 .into_iter()
-                .map(|m| match m {
-                    Message::RespScalar(v) => v,
-                    other => panic!("unexpected {}", other.tag()),
-                })
                 .sum();
             (css, uni_residual)
         },
@@ -76,8 +73,8 @@ fn main() {
         kernel,
         Arc::new(NativeBackend::new()),
         move |cluster| {
-            let css = dis_css(cluster, kernel, &params);
-            dis_krr(cluster, kernel, &css.y, 1e-3, 2026)
+            let css = dis_css(cluster, kernel, &params).expect("worker failure");
+            dis_krr(cluster, kernel, &css.y, 1e-3, 2026).expect("worker failure")
         },
     );
     println!("\n== downstream: kernel ridge regression on Y ==");
@@ -93,7 +90,7 @@ fn main() {
         shards,
         kernel,
         Arc::new(NativeBackend::new()),
-        move |cluster| dis_kpca_boosted(cluster, kernel, &params, reps),
+        move |cluster| dis_kpca_boosted(cluster, kernel, &params, reps).expect("worker failure"),
     );
     println!("\n== boosted disKPCA (δ = {delta}, {reps} repetitions) ==");
     for (i, e) in run.errors.iter().enumerate() {

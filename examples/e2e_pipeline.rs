@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
             let mut params = ctx.cfg.params();
             params.n_adapt = n_adapt;
             for method in Method::all() {
-                let r = run_method(&ctx, &spec, &data, kernel, &params, method);
+                let r = run_method(&ctx, &spec, &data, kernel, &params, method)?;
                 println!(
                     "{:<20} {:>6} {:>12} {:>12.5} {:>9.2}",
                     format!("{} (Ŷ={n_adapt})", r.method),

@@ -61,8 +61,8 @@ fn main() {
         kernel,
         Arc::new(NativeBackend::new()),
         move |cluster| {
-            let sol = dis_kpca(cluster, kernel, &params);
-            let (err, trace) = dis_eval(cluster);
+            let sol = dis_kpca(cluster, kernel, &params).expect("worker failure");
+            let (err, trace) = dis_eval(cluster).expect("worker failure");
             (sol, err, trace)
         },
     );

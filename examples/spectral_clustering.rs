@@ -37,12 +37,12 @@ fn main() {
             Arc::new(NativeBackend::new()),
             move |cluster| {
                 let sol = if use_diskpca {
-                    dis_kpca(cluster, kernel, &params)
+                    dis_kpca(cluster, kernel, &params).expect("worker failure")
                 } else {
-                    uniform_dis_lr(cluster, kernel, &params, total)
+                    uniform_dis_lr(cluster, kernel, &params, total).expect("worker failure")
                 };
-                dis_set_solution(cluster, &sol);
-                distributed_kmeans(cluster, 6, 40, 123)
+                dis_set_solution(cluster, &sol).expect("worker failure");
+                distributed_kmeans(cluster, 6, 40, 123).expect("worker failure")
             },
         );
         println!(

@@ -22,9 +22,9 @@ fn main() -> anyhow::Result<()> {
     let kernel = Kernel::Gauss { gamma: 0.6 };
 
     // TCP star on loopback.
-    let (links, endpoints) = tcp::star(s)?;
+    let (star, endpoints) = tcp::star(s)?;
     let stats = CommStats::new();
-    let cluster = Cluster::new(links, stats.clone());
+    let cluster = Cluster::new(star, stats.clone());
     let backend = Arc::new(NativeBackend::new());
     let handles: Vec<_> = shards
         .into_iter()
@@ -36,8 +36,8 @@ fn main() -> anyhow::Result<()> {
         .collect();
 
     let params = Params { k: 6, n_lev: 20, n_adapt: 60, ..Params::default() };
-    let sol = dis_kpca(&cluster, kernel, &params);
-    let (err, trace) = dis_eval(&cluster);
+    let sol = dis_kpca(&cluster, kernel, &params)?;
+    let (err, trace) = dis_eval(&cluster)?;
     cluster.shutdown();
     for h in handles {
         h.join().unwrap();

@@ -7,6 +7,15 @@
 //! Set `DISKPCA_THREADS=N` to size the shared compute pool — the
 //! `threads` CSV column records it, and results are bit-identical for
 //! every N (only wall time and the Fig-7 busy-time split change).
+//!
+//! Emits `BENCH_protocol.json` (median ns per row) and diffs it
+//! against the checked-in baseline in
+//! `bench_baseline/BENCH_protocol.json`, warning on any row more than
+//! 25% slower — the same warn-only regression gate the streaming
+//! bench uses, so broadcast/gather refactors leave a trend record.
+//! `DISKPCA_BENCH_FAST=1` (the CI smoke) also shrinks the workload
+//! scale; the checked-in baseline is calibrated for that fast mode.
+//! Override paths with `DISKPCA_BENCH_BASELINE` / `DISKPCA_BENCH_OUT`.
 
 use std::sync::Arc;
 
@@ -22,8 +31,22 @@ use diskpca::kernels::{median_trick_gamma, Kernel};
 use diskpca::rng::Rng;
 use diskpca::runtime::NativeBackend;
 
+const REGRESSION_THRESHOLD: f64 = 1.25;
+
 fn params() -> Params {
-    Params { k: 10, t: 64, p: 128, n_lev: 30, n_adapt: 100, m_rff: 512, t2: 512, w: 0, seed: 5, threads: 0, chunk_rows: 0 }
+    Params {
+        k: 10,
+        t: 64,
+        p: 128,
+        n_lev: 30,
+        n_adapt: 100,
+        m_rff: 512,
+        t2: 512,
+        w: 0,
+        seed: 5,
+        threads: 0,
+        chunk_rows: 0,
+    }
 }
 
 fn workload(name: &str, scale: f64, workers: usize) -> (Vec<Data>, Data, Kernel) {
@@ -39,29 +62,32 @@ fn workload(name: &str, scale: f64, workers: usize) -> (Vec<Data>, Data, Kernel)
 fn main() {
     let mut b = Bencher::new();
     let backend = Arc::new(NativeBackend::new());
+    // CI smoke shrinks the dataset scale; row names stay identical so
+    // the baseline diff lines up (the baseline is fast-mode numbers).
+    let scale = if std::env::var("DISKPCA_BENCH_FAST").is_ok() { 0.02 } else { 0.08 };
 
     // ---- full disKPCA, per dataset family (fig4/5/6 workloads) ----
     for (name, family) in [
-        ("susy_like", "fig5"),
+        ("susy_like", "fig4"),
         ("mnist8m_like", "fig5"),
         ("news20_like", "fig6"),
     ] {
-        let (shards, _, kernel) = workload(name, 0.08, 8);
+        let (shards, _, kernel) = workload(name, scale, 8);
         let p = params();
         let be = backend.clone();
         b.bench(&format!("{family}/diskpca[{name}] s=8"), move || {
             let shards = shards.clone();
             let be = be.clone();
             black_box(run_cluster(shards, kernel, be, move |c| {
-                let sol = dis_kpca(c, kernel, &p);
-                dis_eval(c);
+                let sol = dis_kpca(c, kernel, &p).unwrap();
+                dis_eval(c).unwrap();
                 sol.num_points()
             }))
         });
     }
 
     // ---- per-round decomposition on one workload ----
-    let (shards, _, kernel) = workload("mnist8m_like", 0.08, 8);
+    let (shards, _, kernel) = workload("mnist8m_like", scale, 8);
     let p = params();
     let spec = EmbedSpec { kernel, m: p.m_rff, t2: p.t2, t: p.t, seed: p.seed };
     let be = backend.clone();
@@ -70,8 +96,8 @@ fn main() {
         let shards = sh2.clone();
         let be = be.clone();
         black_box(run_cluster(shards, kernel, be, move |c| {
-            dis_embed(c, spec);
-            dis_leverage_scores(c, &p).len()
+            dis_embed(c, spec).unwrap();
+            dis_leverage_scores(c, &p).unwrap().len()
         }))
     });
     let be = backend.clone();
@@ -80,10 +106,10 @@ fn main() {
         let shards = sh3.clone();
         let be = be.clone();
         black_box(run_cluster(shards, kernel, be, move |c| {
-            dis_embed(c, spec);
-            let masses = dis_leverage_scores(c, &p);
-            let y = rep_sample(c, &p, &masses);
-            dis_low_rank(c, kernel, &p, &y).num_points()
+            dis_embed(c, spec).unwrap();
+            let masses = dis_leverage_scores(c, &p).unwrap();
+            let y = rep_sample(c, &p, &masses).unwrap();
+            dis_low_rank(c, kernel, &p, &y).unwrap().num_points()
         }))
     });
 
@@ -95,7 +121,7 @@ fn main() {
         let shards = sh4.clone();
         let be = be.clone();
         black_box(run_cluster(shards, kernel, be, move |c| {
-            uniform_dis_lr(c, kernel, &p, total).num_points()
+            uniform_dis_lr(c, kernel, &p, total).unwrap().num_points()
         }))
     });
     let be = backend.clone();
@@ -104,8 +130,8 @@ fn main() {
         let shards = sh5.clone();
         let be = be.clone();
         black_box(run_cluster(shards, kernel, be, move |c| {
-            let sol = uniform_batch_kpca(c, kernel, &p, total);
-            dis_set_solution(c, &sol);
+            let sol = uniform_batch_kpca(c, kernel, &p, total).unwrap();
+            dis_set_solution(c, &sol).unwrap();
             sol.num_points()
         }))
     });
@@ -117,8 +143,8 @@ fn main() {
         let shards = sh6.clone();
         let be = be.clone();
         black_box(run_cluster(shards, kernel, be, move |c| {
-            let _ = dis_kpca(c, kernel, &p);
-            distributed_kmeans(c, 10, 15, 99).iters
+            let _ = dis_kpca(c, kernel, &p).unwrap();
+            distributed_kmeans(c, 10, 15, 99).unwrap().iters
         }))
     });
 
@@ -129,7 +155,7 @@ fn main() {
         let shards = sh7.clone();
         let be = be.clone();
         black_box(run_cluster(shards, kernel, be, move |c| {
-            diskpca::coordinator::dis_css(c, kernel, &p).y.len()
+            diskpca::coordinator::dis_css(c, kernel, &p).unwrap().y.len()
         }))
     });
     let be = backend.clone();
@@ -137,13 +163,13 @@ fn main() {
         let shards = shards.clone();
         let be = be.clone();
         black_box(run_cluster(shards, kernel, be, move |c| {
-            let css = diskpca::coordinator::dis_css(c, kernel, &p);
-            diskpca::coordinator::dis_krr(c, kernel, &css.y, 1e-3, 7).alpha.len()
+            let css = diskpca::coordinator::dis_css(c, kernel, &p).unwrap();
+            diskpca::coordinator::dis_krr(c, kernel, &css.y, 1e-3, 7).unwrap().alpha.len()
         }))
     });
 
     // ---- extension: laplace kernel end-to-end (native gram path) ----
-    let (lshards, ldata, _) = workload("susy_like", 0.08, 8);
+    let (lshards, ldata, _) = workload("susy_like", scale, 8);
     let mut lrng = Rng::seed_from(29);
     let lkernel = Kernel::Laplace {
         gamma: diskpca::kernels::median_trick_gamma_l1(&ldata, 1.0, 128, &mut lrng),
@@ -153,9 +179,35 @@ fn main() {
         let shards = lshards.clone();
         let be = be.clone();
         black_box(run_cluster(shards, lkernel, be, move |c| {
-            dis_kpca(c, lkernel, &p).num_points()
+            dis_kpca(c, lkernel, &p).unwrap().num_points()
         }))
     });
 
     b.write_csv("results/bench_protocol.csv").unwrap();
+
+    // ---- median JSON + warn-only regression diff vs baseline ----
+    let out = std::env::var("DISKPCA_BENCH_OUT").unwrap_or_else(|_| "BENCH_protocol.json".into());
+    b.write_median_json(&out).expect("write bench json");
+    println!("wrote {out} ({} rows)", b.samples.len());
+
+    let baseline_path = std::env::var("DISKPCA_BENCH_BASELINE")
+        .unwrap_or_else(|_| "bench_baseline/BENCH_protocol.json".into());
+    match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => {
+            let warnings = b.regressions_vs(&text, REGRESSION_THRESHOLD);
+            if warnings.is_empty() {
+                println!("no regressions > 25% vs {baseline_path}");
+            } else {
+                for w in &warnings {
+                    println!("WARNING: bench regression: {w}");
+                }
+                println!(
+                    "({} warning(s) vs {baseline_path}; informational only — update the baseline \
+                     by copying {out} over it when a slowdown is intended)",
+                    warnings.len()
+                );
+            }
+        }
+        Err(e) => println!("baseline {baseline_path} unavailable ({e}) — skipping diff"),
+    }
 }

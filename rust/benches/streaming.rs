@@ -97,8 +97,8 @@ fn bench_dis_kpca(b: &mut Bencher, n: usize) {
                 Arc::new(NativeBackend::new()),
                 chunk,
                 move |cluster| {
-                    let _ = dis_kpca(cluster, kernel, &params);
-                    dis_eval(cluster)
+                    let _ = dis_kpca(cluster, kernel, &params).unwrap();
+                    dis_eval(cluster).unwrap()
                 },
             );
             black_box((err, trace))

@@ -1,10 +1,12 @@
 //! Transport benchmarks: in-memory vs TCP star, codec throughput —
 //! verifies the coordinator (L3) is not the bottleneck vs compute.
+//! Also times the session layer's encode-once broadcast against a
+//! per-link re-encode, the deep-clone fan-out it replaced.
 
 use std::sync::Arc;
 
 use diskpca::bench_harness::{black_box, Bencher};
-use diskpca::comm::{codec, memory, tcp, Cluster, CommStats, Message};
+use diskpca::comm::{codec, memory, request, tcp, Cluster, CommStats, Message, Payload};
 use diskpca::coordinator::Worker;
 use diskpca::data::Data;
 use diskpca::kernels::Kernel;
@@ -14,8 +16,8 @@ use diskpca::runtime::NativeBackend;
 
 fn spawn_memory(s: usize, n_per: usize) -> (Cluster, Vec<std::thread::JoinHandle<()>>) {
     let mut rng = Rng::seed_from(1);
-    let (links, endpoints) = memory::star(s);
-    let cluster = Cluster::new(links, CommStats::new());
+    let (star, endpoints) = memory::star(s);
+    let cluster = Cluster::new(star, CommStats::new());
     let handles = endpoints
         .into_iter()
         .map(|ep| {
@@ -29,8 +31,8 @@ fn spawn_memory(s: usize, n_per: usize) -> (Cluster, Vec<std::thread::JoinHandle
 
 fn spawn_tcp(s: usize, n_per: usize) -> (Cluster, Vec<std::thread::JoinHandle<()>>) {
     let mut rng = Rng::seed_from(1);
-    let (links, endpoints) = tcp::star(s).unwrap();
-    let cluster = Cluster::new(links, CommStats::new());
+    let (star, endpoints) = tcp::star(s).unwrap();
+    let cluster = Cluster::new(star, CommStats::new());
     let handles = endpoints
         .into_iter()
         .map(|ep| {
@@ -53,21 +55,33 @@ fn main() {
     let bytes = codec::encode(&msg);
     b.bench("codec/decode RespMat 64x250", || black_box(codec::decode(&bytes).unwrap()));
 
+    // encode-once payload vs per-link re-encode at s=8 fan-out
+    let z = Mat::from_fn(64, 64, |i, j| (i * 64 + j) as f64);
+    b.bench("payload/encode-once fanout s=8", || {
+        let payload = Payload::new(Message::ReqScores { z: z.clone() });
+        for _ in 0..8 {
+            black_box(payload.encoded().len());
+        }
+    });
+    b.bench("payload/re-encode fanout s=8 (old cost)", || {
+        for _ in 0..8 {
+            black_box(codec::encode(&Message::ReqScores { z: z.clone() }).len());
+        }
+    });
+
     // request/reply round-trip latency, 8 workers
     for (name, (cluster, handles)) in [
         ("memory", spawn_memory(8, 64)),
         ("tcp", spawn_tcp(8, 64)),
     ] {
         b.bench(&format!("star[{name}]/count roundtrip s=8"), || {
-            black_box(cluster.exchange(&Message::ReqCount).len())
+            black_box(cluster.broadcast(request::Count).unwrap().len())
         });
-        // payload-heavy broadcast: 64×64 coeff-sized matrices
-        let z = Mat::from_fn(64, 64, |i, j| (i * 64 + j) as f64);
+        // payload-heavy broadcast: the workers have no embed state, so
+        // time the scalar trace round plus one matrix-sized encode
         b.bench(&format!("star[{name}]/scores broadcast 64x64 s=8"), || {
-            // ReqEvalTrace replies scalars; ReqScores needs embed state,
-            // so use the trace round with a dummy matrix encode cost
             black_box(codec::encode(&Message::ReqScores { z: z.clone() }));
-            black_box(cluster.exchange(&Message::ReqEvalTrace).len())
+            black_box(cluster.broadcast(request::EvalTrace).unwrap().len())
         });
         cluster.shutdown();
         for h in handles {

@@ -79,6 +79,14 @@ COMMON FLAGS
   --workers N                  override the dataset's worker count
   --config FILE                load key=value config file
   --out DIR                    results directory (default results)
+
+EXIT CODES (master / worker deployment subcommands)
+  0  success
+  1  environment error (flags, data files, bind/connect)
+  2  usage error (unknown command)
+  3  protocol failure — a worker died, reported an error, or replied
+     garbage mid-round; the error names the worker and the round, and
+     the master releases surviving workers before exiting
 ";
 
 #[cfg(test)]

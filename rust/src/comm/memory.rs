@@ -1,90 +1,163 @@
 //! In-process star transport over std mpsc channels.
+//!
+//! Requests travel as `Arc<Message>` — a broadcast clones the `Arc`,
+//! never the payload, so the master does zero deep copies regardless
+//! of fan-out (a worker that must own a shared payload clones it on
+//! its own thread). Replies from every worker funnel into one shared
+//! completion-order queue ([`crate::comm::Star::replies`]), tagged
+//! with the worker index; a worker endpoint that drops mid-protocol
+//! pushes a hang-up marker so the master sees a typed link failure
+//! instead of waiting forever.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+use std::sync::Arc;
 
-use super::{Message, WorkerLink};
+use super::{Message, Payload, ReplyEvent, Star, WorkerLink};
 
-/// Worker-side endpoint: blocking request stream + reply sender.
+/// Worker-side endpoint: blocking request stream + reply sender into
+/// the master's shared completion-order queue.
 pub struct WorkerEndpoint {
-    rx: Receiver<Message>,
-    tx: Sender<Message>,
+    index: usize,
+    rx: Receiver<Arc<Message>>,
+    tx: Sender<ReplyEvent>,
 }
 
 impl WorkerEndpoint {
-    /// Block for the next request.
-    pub fn recv(&self) -> Message {
-        self.rx.recv().expect("master hung up")
+    /// Block for the next request. `Err` means the master hung up.
+    pub fn recv(&self) -> Result<Message, String> {
+        self.rx
+            .recv()
+            .map(|m| Arc::try_unwrap(m).unwrap_or_else(|shared| (*shared).clone()))
+            .map_err(|_| "master hung up (request channel closed)".to_string())
     }
 
-    /// Send a reply to the master.
-    pub fn send(&self, msg: Message) {
-        let _ = self.tx.send(msg);
+    /// Send a reply to the master. `Err` means the master hung up —
+    /// surfaced to the caller (like the TCP path) instead of being
+    /// dropped on the floor.
+    pub fn send(&self, msg: Message) -> Result<(), String> {
+        self.tx
+            .send((self.index, Ok(msg)))
+            .map_err(|_| "master hung up (reply queue closed)".to_string())
+    }
+
+    /// This endpoint's worker index in the star.
+    pub fn index(&self) -> usize {
+        self.index
+    }
+}
+
+impl Drop for WorkerEndpoint {
+    /// A worker that dies mid-protocol (thread exit, panic outside the
+    /// handler) leaves a hang-up marker in the reply queue, so a
+    /// gather awaiting this worker fails fast with the worker index
+    /// instead of hanging. Harmless on clean shutdown: after `Quit`
+    /// the master never gathers again.
+    fn drop(&mut self) {
+        let _ = self
+            .tx
+            .send((self.index, Err("worker hung up before replying".to_string())));
     }
 }
 
 struct MemLink {
-    tx: Sender<Message>,
-    rx: Mutex<Receiver<Message>>,
+    tx: Sender<Arc<Message>>,
 }
 
 impl WorkerLink for MemLink {
-    fn send(&self, msg: Message) {
-        self.tx.send(msg).expect("worker hung up");
-    }
-
-    fn recv(&self) -> Message {
-        self.rx.lock().unwrap().recv().expect("worker hung up")
+    fn send(&self, payload: &Payload) -> Result<(), String> {
+        self.tx
+            .send(payload.shared())
+            .map_err(|_| "worker hung up (request channel closed)".to_string())
     }
 }
 
-/// Create a star of `s` in-memory links: returns (master links,
-/// worker endpoints) — hand each endpoint to one worker thread.
-pub fn star(s: usize) -> (Vec<Box<dyn WorkerLink>>, Vec<WorkerEndpoint>) {
+/// Create a star of `s` in-memory links: returns the master half
+/// (send links + shared reply queue) and the worker endpoints — hand
+/// each endpoint to one worker thread.
+pub fn star(s: usize) -> (Star, Vec<WorkerEndpoint>) {
+    let (reply_tx, reply_rx) = channel::<ReplyEvent>();
     let mut links: Vec<Box<dyn WorkerLink>> = Vec::with_capacity(s);
     let mut endpoints = Vec::with_capacity(s);
-    for _ in 0..s {
-        let (req_tx, req_rx) = channel();
-        let (resp_tx, resp_rx) = channel();
-        links.push(Box::new(MemLink { tx: req_tx, rx: Mutex::new(resp_rx) }));
-        endpoints.push(WorkerEndpoint { rx: req_rx, tx: resp_tx });
+    for index in 0..s {
+        let (req_tx, req_rx) = channel::<Arc<Message>>();
+        links.push(Box::new(MemLink { tx: req_tx }));
+        endpoints.push(WorkerEndpoint { index, rx: req_rx, tx: reply_tx.clone() });
     }
-    (links, endpoints)
+    (Star { links, replies: reply_rx }, endpoints)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::{Cluster, CommStats};
+    use crate::comm::{request, Cluster, CommError, CommStats};
     use std::thread;
 
     #[test]
     fn echo_roundtrip() {
-        let (links, endpoints) = star(3);
+        let (star, endpoints) = star(3);
         let handles: Vec<_> = endpoints
             .into_iter()
             .map(|ep| {
                 thread::spawn(move || loop {
                     match ep.recv() {
-                        Message::Quit => break,
-                        Message::ReqCount => ep.send(Message::RespCount(7)),
-                        _ => ep.send(Message::Ack),
+                        Ok(Message::Quit) | Err(_) => break,
+                        Ok(Message::ReqCount) => ep.send(Message::RespCount(7)).unwrap(),
+                        Ok(_) => ep.send(Message::Ack).unwrap(),
                     }
                 })
             })
             .collect();
-        let cluster = Cluster::new(links, CommStats::new());
+        let cluster = Cluster::new(star, CommStats::new());
         cluster.set_round("test");
-        let replies = cluster.exchange(&Message::ReqCount);
-        assert_eq!(replies.len(), 3);
-        for r in replies {
-            assert!(matches!(r, Message::RespCount(7)));
-        }
+        let replies = cluster.broadcast(request::Count).unwrap();
+        assert_eq!(replies, vec![7, 7, 7]);
         // 3 requests (1 word) + 3 replies (1 word)
         assert_eq!(cluster.stats.total_words(), 6);
         cluster.shutdown();
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn worker_send_surfaces_master_hangup() {
+        let (star, mut endpoints) = star(1);
+        let ep = endpoints.remove(0);
+        drop(star); // master gone: links + reply queue dropped
+        assert!(ep.send(Message::Ack).is_err(), "send into a dead master must error");
+        assert!(ep.recv().is_err(), "recv from a dead master must error");
+    }
+
+    #[test]
+    fn dropped_endpoint_leaves_hangup_marker() {
+        let (star, endpoints) = star(2);
+        let cluster = Cluster::new(star, CommStats::new());
+        cluster.set_round("r");
+        // worker 1 dies without serving; worker 0 answers
+        let mut eps = endpoints.into_iter();
+        let ep0 = eps.next().unwrap();
+        let h = thread::spawn(move || loop {
+            match ep0.recv() {
+                Ok(Message::Quit) | Err(_) => break,
+                Ok(_) => ep0.send(Message::RespCount(1)).unwrap(),
+            }
+        });
+        drop(eps.next().unwrap());
+        let err = cluster.broadcast(request::Count).unwrap_err();
+        match err {
+            CommError::Link { worker: 1, round, detail } => {
+                assert_eq!(round, "r");
+                assert!(detail.contains("hung up"), "{detail}");
+            }
+            other => panic!("expected Link error for worker 1, got {other:?}"),
+        }
+        // a mid-gather abort poisons the cluster: further exchanges
+        // refuse instead of risking stale-reply misattribution
+        match cluster.broadcast(request::Count).unwrap_err() {
+            CommError::Poisoned { round } => assert_eq!(round, "r"),
+            other => panic!("expected Poisoned, got {other:?}"),
+        }
+        cluster.shutdown();
+        h.join().unwrap();
     }
 }

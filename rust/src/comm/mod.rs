@@ -6,6 +6,31 @@
 //! protocol round and direction — these totals are exactly what
 //! Figures 4–6/8 plot on the x-axis.
 //!
+//! # The typed session core
+//!
+//! Drivers never touch raw [`Message`]s. Each protocol request is a
+//! type implementing [`Request`] with an associated response type
+//! ([`request::SketchEmbed`] → [`crate::linalg::Mat`],
+//! [`request::Scores`] → `f64`, [`request::SampleLeverage`] →
+//! [`PointSet`], …), so a mismatched reply is a compile error on the
+//! master and a compile error on the worker ([`request::Handle`]) —
+//! not a runtime panic. The master-side entry points are
+//! [`Cluster::call`], [`Cluster::broadcast`] and [`Cluster::scatter`]
+//! (or the round-scoped [`Session`] sugar); every one returns
+//! `Result<_, CommError>` carrying the worker index and round label
+//! of whatever failed.
+//!
+//! Fan-out is **encode-once**: a broadcast builds one [`Payload`] —
+//! the message behind an `Arc`, serialized at most once — and every
+//! link shares it instead of receiving its own deep clone.
+//! Fan-in is **completion-order**: all transports push decoded
+//! replies (or link-failure markers) onto one shared queue as they
+//! arrive, so one slow worker no longer serializes the accounting of
+//! the other s−1; [`Cluster`] reduces the queue back into
+//! deterministic worker order before handing results to the driver,
+//! which keeps results and per-round word counts bit-identical to the
+//! strict-order protocol.
+//!
 //! Two transports implement the same star topology:
 //! - [`memory::star`] — in-process channels (default; experiments)
 //! - [`tcp`] — length-prefixed framed TCP over loopback, proving the
@@ -13,10 +38,16 @@
 
 pub mod codec;
 pub mod memory;
+pub mod request;
 pub mod tcp;
 
+pub use request::{Handle, KmeansPart, KrrPart, Request};
+
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
 
 use crate::embed::EmbedSpec;
 use crate::linalg::Mat;
@@ -183,7 +214,8 @@ pub enum Message {
     RespKrr { g: Mat, b: Mat, tnorm: f64 },
     /// A worker-side failure (protocol misuse, shard-store IO error,
     /// panic in a handler) carried back to the master with context —
-    /// instead of the worker dying silently mid-protocol.
+    /// instead of the worker dying silently mid-protocol. The session
+    /// layer converts it into [`CommError::Worker`].
     RespError(String),
     Ack,
 }
@@ -254,6 +286,155 @@ impl Message {
             RespError(_) => "RespError",
             Ack => "Ack",
         }
+    }
+}
+
+/// A typed protocol failure: every variant names the round it happened
+/// in, and all but a whole-round timeout name the worker.
+///
+/// The session layer raises these instead of panicking, so a worker
+/// failure aborts the round with context (`dis_kpca` and friends
+/// return `Result<_, CommError>`) and the launcher can release the
+/// remaining workers.
+///
+/// Recoverability differs by variant: [`CommError::Worker`] and
+/// [`CommError::Mismatch`] are raised *after* the round's replies
+/// were fully collected, so the cluster can keep serving further
+/// rounds (the worker itself survived). [`CommError::Link`] and
+/// [`CommError::Timeout`] abort mid-gather and leave replies from the
+/// failed round undrained — after one of those the [`Cluster`] must
+/// only be shut down, or later rounds will see misattributed
+/// "unsolicited reply" failures.
+#[derive(Debug, Clone)]
+pub enum CommError {
+    /// The worker executed the handler and reported a failure
+    /// ([`Message::RespError`]): protocol misuse, shard-store IO
+    /// error, or a caught panic, with the worker's own description.
+    Worker { worker: usize, round: String, detail: String },
+    /// The link itself failed: the worker hung up mid-round, an IO
+    /// error, or an undecodable frame.
+    Link { worker: usize, round: String, detail: String },
+    /// The reply decoded fine but was the wrong variant for the
+    /// request — a protocol bug, caught by the [`Request`] typing.
+    Mismatch { worker: usize, round: String, expected: &'static str, got: &'static str },
+    /// No reply arrived within the configured window
+    /// ([`Cluster::set_reply_timeout`]); `pending` lists the workers
+    /// still owing a reply.
+    Timeout { round: String, pending: Vec<usize> },
+    /// The replies were well-formed but collectively violated a
+    /// protocol invariant (e.g. every worker returned an empty
+    /// sample) — a driver-level abort, with no single worker to
+    /// blame.
+    Protocol { round: String, detail: String },
+    /// An earlier round aborted mid-gather (a `Link`/`Timeout`
+    /// failure), leaving undrained replies; the cluster now refuses
+    /// further exchanges — shut it down and rebuild.
+    Poisoned { round: String },
+}
+
+impl CommError {
+    /// The worker this error names (first pending one for a timeout;
+    /// none for whole-round failures).
+    pub fn worker(&self) -> Option<usize> {
+        match self {
+            CommError::Worker { worker, .. }
+            | CommError::Link { worker, .. }
+            | CommError::Mismatch { worker, .. } => Some(*worker),
+            CommError::Timeout { pending, .. } => pending.first().copied(),
+            CommError::Protocol { .. } | CommError::Poisoned { .. } => None,
+        }
+    }
+
+    /// The protocol round label active when the error was raised (for
+    /// [`CommError::Poisoned`], the round that poisoned the cluster).
+    pub fn round(&self) -> &str {
+        match self {
+            CommError::Worker { round, .. }
+            | CommError::Link { round, .. }
+            | CommError::Mismatch { round, .. }
+            | CommError::Timeout { round, .. }
+            | CommError::Protocol { round, .. }
+            | CommError::Poisoned { round } => round,
+        }
+    }
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Worker { worker, round, detail } => {
+                write!(f, "worker {worker} reported an error in round {round}: {detail}")
+            }
+            CommError::Link { worker, round, detail } => {
+                write!(f, "link to worker {worker} failed in round {round}: {detail}")
+            }
+            CommError::Mismatch { worker, round, expected, got } => write!(
+                f,
+                "worker {worker} replied {got} where {expected} was expected in round {round}"
+            ),
+            CommError::Timeout { round, pending } => {
+                write!(f, "round {round} timed out waiting for workers {pending:?}")
+            }
+            CommError::Protocol { round, detail } => {
+                write!(f, "round {round} violated a protocol invariant: {detail}")
+            }
+            CommError::Poisoned { round } => write!(
+                f,
+                "cluster unusable: round {round} aborted mid-gather earlier (shut down and rebuild)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+/// One reply event from a transport: worker index plus the decoded
+/// message, or a link-failure description (hang-up, IO, decode).
+pub type ReplyEvent = (usize, Result<Message, String>);
+
+/// Why a queue wait ended without an event (internal to `collect`):
+/// the optional reply bound elapsed, or every reply sender dropped.
+enum QueueWaitError {
+    Timeout,
+    Disconnected,
+}
+
+/// A request payload prepared once and shared across links.
+///
+/// The message sits behind an `Arc` (in-memory links clone the `Arc`,
+/// not the matrices) and the wire encoding is produced lazily at most
+/// once per payload (TCP links all write the same byte buffer). This
+/// is what makes [`Cluster::broadcast`] encode-once instead of
+/// deep-cloning the payload s times.
+pub struct Payload {
+    msg: Arc<Message>,
+    words: usize,
+    bytes: OnceLock<Vec<u8>>,
+}
+
+impl Payload {
+    pub fn new(msg: Message) -> Self {
+        let words = msg.words();
+        Self { msg: Arc::new(msg), words, bytes: OnceLock::new() }
+    }
+
+    pub fn message(&self) -> &Message {
+        &self.msg
+    }
+
+    /// Shared handle for in-memory links (no deep clone).
+    pub fn shared(&self) -> Arc<Message> {
+        Arc::clone(&self.msg)
+    }
+
+    /// Word cost, computed once at construction.
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// Wire bytes — encoded on first use, shared by every TCP link.
+    pub fn encoded(&self) -> &[u8] {
+        self.bytes.get_or_init(|| codec::encode(&self.msg))
     }
 }
 
@@ -331,73 +512,91 @@ impl CommStats {
 }
 
 /// Worker-side view of its link to the master, transport-agnostic —
-/// `Worker::run` is generic over this.
+/// `Worker::run` is generic over this. Both directions are fallible:
+/// a lost master surfaces as an `Err` the worker loop can act on
+/// (stop serving) instead of a panic or a silently dropped reply.
 pub trait Endpoint: Send {
     /// Block for the next request from the master.
-    fn recv_req(&mut self) -> Message;
+    fn recv_req(&mut self) -> Result<Message, String>;
     /// Send one response back.
-    fn send_resp(&mut self, msg: Message);
+    fn send_resp(&mut self, msg: Message) -> Result<(), String>;
 }
 
 impl Endpoint for memory::WorkerEndpoint {
-    fn recv_req(&mut self) -> Message {
+    fn recv_req(&mut self) -> Result<Message, String> {
         self.recv()
     }
 
-    fn send_resp(&mut self, msg: Message) {
+    fn send_resp(&mut self, msg: Message) -> Result<(), String> {
         self.send(msg)
     }
 }
 
 impl Endpoint for tcp::TcpWorkerEndpoint {
-    fn recv_req(&mut self) -> Message {
-        self.recv()
+    fn recv_req(&mut self) -> Result<Message, String> {
+        self.try_recv().map_err(|e| e.to_string())
     }
 
-    fn send_resp(&mut self, msg: Message) {
-        self.send(msg)
+    fn send_resp(&mut self, msg: Message) -> Result<(), String> {
+        self.try_send(&msg).map_err(|e| e.to_string())
     }
 }
 
-/// A master-side handle to one worker: paired send/recv with
-/// accounting. Both in-memory and TCP transports implement this.
+/// A master-side *send* handle to one worker. Replies do not come back
+/// through the link: every transport pushes them onto the shared
+/// completion-order queue carried by [`Star::replies`].
 pub trait WorkerLink: Send {
-    /// Send a request to the worker (counted as master→worker words).
-    fn send(&self, msg: Message);
-    /// Block for the worker's reply (counted as worker→master words).
-    fn recv(&self) -> Message;
+    /// Ship one request frame (non-blocking w.r.t. the worker's
+    /// compute). The payload is shared — implementations must not
+    /// deep-clone it ([`Payload::shared`] / [`Payload::encoded`]).
+    fn send(&self, payload: &Payload) -> Result<(), String>;
+}
+
+/// The master half of a star transport: one send link per worker plus
+/// the shared reply queue their responses arrive on (in completion
+/// order, tagged with the worker index).
+pub struct Star {
+    pub links: Vec<Box<dyn WorkerLink>>,
+    pub replies: Receiver<ReplyEvent>,
 }
 
 /// Master-side view of the whole star.
 ///
 /// Requests are sent with non-blocking channel/socket writes, so a
-/// [`Cluster::broadcast`] (or the per-worker send loop in the Alg. 1/3
-/// drivers) puts *every* worker to work before [`Cluster::gather`]
-/// blocks on the first reply — the workers' local phases overlap.
+/// [`Cluster::broadcast`] (or the per-worker [`Cluster::scatter`] in
+/// the Alg. 1/3 drivers) puts *every* worker to work before the
+/// gather blocks on the first reply — the workers' local phases
+/// overlap. Replies are accepted in completion order from the shared
+/// queue and reduced back into worker order, so a slow worker delays
+/// only its own slot, never the accounting of the other s−1.
+///
+/// Dropping a `Cluster` sends `Quit` to every still-reachable worker
+/// (idempotent with [`Cluster::shutdown`]), so TCP workers are
+/// released even when a driver aborts early with a [`CommError`].
 ///
 /// # Examples
 ///
 /// ```
-/// use diskpca::comm::{memory, Cluster, CommStats, Message};
+/// use diskpca::comm::{memory, request, Cluster, CommStats, Message};
 ///
-/// let (links, endpoints) = memory::star(2);
+/// let (star, endpoints) = memory::star(2);
 /// let workers: Vec<_> = endpoints
 ///     .into_iter()
 ///     .map(|ep| {
 ///         std::thread::spawn(move || loop {
-///             match ep.recv() {
+///             match ep.recv().unwrap() {
 ///                 Message::Quit => break,
-///                 Message::ReqCount => ep.send(Message::RespCount(3)),
-///                 _ => ep.send(Message::Ack),
+///                 Message::ReqCount => ep.send(Message::RespCount(3)).unwrap(),
+///                 _ => ep.send(Message::Ack).unwrap(),
 ///             }
 ///         })
 ///     })
 ///     .collect();
 ///
-/// let cluster = Cluster::new(links, CommStats::new());
+/// let cluster = Cluster::new(star, CommStats::new());
 /// cluster.set_round("demo");
-/// let replies = cluster.exchange(&Message::ReqCount);
-/// assert_eq!(replies.len(), 2);
+/// let counts = cluster.broadcast(request::Count).unwrap();
+/// assert_eq!(counts, vec![3, 3]);
 /// cluster.shutdown();
 /// for w in workers {
 ///     w.join().unwrap();
@@ -406,15 +605,47 @@ pub trait WorkerLink: Send {
 /// assert_eq!(cluster.stats.total_words(), 6);
 /// ```
 pub struct Cluster {
-    pub links: Vec<Box<dyn WorkerLink>>,
+    links: Vec<Box<dyn WorkerLink>>,
     pub stats: CommStats,
     /// Current protocol-round label applied to accounting.
     round: Arc<Mutex<String>>,
+    /// Shared completion-order reply queue (all transports feed it).
+    replies: Mutex<Receiver<ReplyEvent>>,
+    /// Optional per-reply wait bound. `None` (the default) waits
+    /// indefinitely — dead links are already detected promptly via
+    /// hang-up markers, and legitimate streaming rounds over huge
+    /// out-of-core shards can take arbitrarily long. Opt in for
+    /// environments that prefer a hard abort
+    /// (`DISKPCA_COMM_TIMEOUT_SECS` / [`Cluster::set_reply_timeout`]).
+    timeout: Mutex<Option<Duration>>,
+    /// Set to the round label of the first mid-gather abort
+    /// (`Link`/`Timeout` raised inside a gather): undrained replies
+    /// could be misattributed to later rounds, so further exchanges
+    /// refuse with [`CommError::Poisoned`].
+    poisoned: Mutex<Option<String>>,
+    /// Set once `Quit` has been fanned out (by [`Cluster::shutdown`]
+    /// or the drop guard).
+    shut: AtomicBool,
 }
 
 impl Cluster {
-    pub fn new(links: Vec<Box<dyn WorkerLink>>, stats: CommStats) -> Self {
-        Self { links, stats, round: Arc::new(Mutex::new("init".into())) }
+    pub fn new(star: Star, stats: CommStats) -> Self {
+        // `0` means "no bound", matching the conventional disable
+        // value — not an instantly-expiring window.
+        let timeout = std::env::var("DISKPCA_COMM_TIMEOUT_SECS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .filter(|&secs| secs > 0)
+            .map(Duration::from_secs);
+        Self {
+            links: star.links,
+            stats,
+            round: Arc::new(Mutex::new("init".into())),
+            replies: Mutex::new(star.replies),
+            timeout: Mutex::new(timeout),
+            poisoned: Mutex::new(None),
+            shut: AtomicBool::new(false),
+        }
     }
 
     pub fn num_workers(&self) -> usize {
@@ -429,42 +660,233 @@ impl Cluster {
         self.round.lock().unwrap().clone()
     }
 
-    /// Send to one worker (accounted).
-    pub fn send(&self, worker: usize, msg: Message) {
-        self.stats.record(&self.round(), false, msg.words());
-        self.links[worker].send(msg);
+    /// Label the upcoming exchanges with a round name and get a scoped
+    /// handle — sugar over [`Cluster::set_round`] for the drivers.
+    pub fn session(&self, round: &str) -> Session<'_> {
+        self.set_round(round);
+        Session { cluster: self }
     }
 
-    /// Receive one reply (accounted).
-    pub fn recv(&self, worker: usize) -> Message {
-        let msg = self.links[worker].recv();
-        self.stats.record(&self.round(), true, msg.words());
-        msg
+    /// Bound how long a gather waits for any single reply event. The
+    /// default is no bound (see the `timeout` field docs);
+    /// `DISKPCA_COMM_TIMEOUT_SECS` is the environment equivalent.
+    pub fn set_reply_timeout(&self, timeout: Duration) {
+        *self.timeout.lock().unwrap() = Some(timeout);
     }
 
-    /// Broadcast the same request to all workers.
-    pub fn broadcast(&self, msg: &Message) {
-        for w in 0..self.links.len() {
-            self.send(w, msg.clone());
+    /// Mark the cluster unusable after a mid-gather abort and pass
+    /// the error through.
+    fn poison(&self, err: CommError) -> CommError {
+        let mut poisoned = self.poisoned.lock().unwrap();
+        if poisoned.is_none() {
+            *poisoned = Some(err.round().to_string());
+        }
+        err
+    }
+
+    /// Refuse new exchanges once a gather has been aborted mid-round.
+    fn check_usable(&self) -> Result<(), CommError> {
+        match self.poisoned.lock().unwrap().clone() {
+            Some(round) => Err(CommError::Poisoned { round }),
+            None => Ok(()),
         }
     }
 
-    /// Collect one reply from every worker (in worker order).
-    pub fn gather(&self) -> Vec<Message> {
-        (0..self.links.len()).map(|w| self.recv(w)).collect()
+    fn send_payload(&self, worker: usize, payload: &Payload, round: &str) -> Result<(), CommError> {
+        self.links[worker].send(payload).map_err(|detail| {
+            // a partially-sent round leaves the other workers' replies
+            // undrained, exactly like a mid-gather abort
+            self.poison(CommError::Link { worker, round: round.to_string(), detail })
+        })?;
+        self.stats.record(round, false, payload.words());
+        Ok(())
     }
 
-    /// Broadcast + gather.
-    pub fn exchange(&self, msg: &Message) -> Vec<Message> {
-        self.broadcast(msg);
-        self.gather()
+    /// Pop replies for `pending` (a list of worker indices) off the
+    /// shared queue in completion order, account each as it arrives,
+    /// and return them reduced into `pending`'s order.
+    fn collect(&self, pending: &[usize]) -> Result<Vec<Message>, CommError> {
+        let round = self.round();
+        let timeout = *self.timeout.lock().unwrap();
+        let mut slot_of = vec![None; self.links.len()];
+        for (slot, &w) in pending.iter().enumerate() {
+            slot_of[w] = Some(slot);
+        }
+        let mut out: Vec<Option<Message>> = pending.iter().map(|_| None).collect();
+        let mut remaining = pending.len();
+        let rx = self.replies.lock().unwrap();
+        while remaining > 0 {
+            let popped = match timeout {
+                Some(bound) => rx.recv_timeout(bound).map_err(|e| match e {
+                    RecvTimeoutError::Timeout => QueueWaitError::Timeout,
+                    RecvTimeoutError::Disconnected => QueueWaitError::Disconnected,
+                }),
+                None => rx.recv().map_err(|_| QueueWaitError::Disconnected),
+            };
+            let (worker, event) = match popped {
+                Ok(ev) => ev,
+                Err(e) => {
+                    let still: Vec<usize> = pending
+                        .iter()
+                        .enumerate()
+                        .filter(|&(slot, _)| out[slot].is_none())
+                        .map(|(_, &w)| w)
+                        .collect();
+                    return Err(self.poison(match e {
+                        QueueWaitError::Timeout => {
+                            CommError::Timeout { round, pending: still }
+                        }
+                        // Every reply sender is gone: the transport
+                        // itself died, not the clock — report a link
+                        // failure on the first worker still owing a
+                        // reply, not a timeout.
+                        QueueWaitError::Disconnected => CommError::Link {
+                            worker: still.first().copied().unwrap_or(0),
+                            round,
+                            detail: "reply queue disconnected (all workers gone)".into(),
+                        },
+                    }));
+                }
+            };
+            let msg = event.map_err(|detail| {
+                self.poison(CommError::Link { worker, round: round.clone(), detail })
+            })?;
+            self.stats.record(&round, true, msg.words());
+            let slot = slot_of.get(worker).copied().flatten().ok_or_else(|| {
+                self.poison(CommError::Link {
+                    worker,
+                    round: round.clone(),
+                    detail: format!("unsolicited {} reply", msg.tag()),
+                })
+            })?;
+            if out[slot].replace(msg).is_some() {
+                return Err(self.poison(CommError::Link {
+                    worker,
+                    round,
+                    detail: "duplicate reply in one round".into(),
+                }));
+            }
+            remaining -= 1;
+        }
+        Ok(out.into_iter().map(|m| m.expect("all slots filled")).collect())
     }
 
-    /// Shut down all workers.
+    fn parse<R: Request>(&self, worker: usize, msg: Message) -> Result<R::Response, CommError> {
+        if let Message::RespError(detail) = msg {
+            return Err(CommError::Worker { worker, round: self.round(), detail });
+        }
+        let got = msg.tag();
+        R::decode(msg).map_err(|_| CommError::Mismatch {
+            worker,
+            round: self.round(),
+            expected: R::EXPECTS,
+            got,
+        })
+    }
+
+    /// Send one typed request to one worker and await its reply.
+    /// Must not overlap another outstanding exchange.
+    pub fn call<R: Request>(&self, worker: usize, req: R) -> Result<R::Response, CommError> {
+        self.check_usable()?;
+        let round = self.round();
+        let payload = Payload::new(req.into_message());
+        self.send_payload(worker, &payload, &round)?;
+        // Drop the master's strong ref before waiting so the worker's
+        // `Arc::try_unwrap` takes the zero-copy path.
+        drop(payload);
+        let mut msgs = self.collect(&[worker])?;
+        self.parse::<R>(worker, msgs.remove(0))
+    }
+
+    /// Send the same typed request to every worker (encode-once) and
+    /// return the replies in worker order.
+    pub fn broadcast<R: Request>(&self, req: R) -> Result<Vec<R::Response>, CommError> {
+        self.check_usable()?;
+        let round = self.round();
+        let payload = Payload::new(req.into_message());
+        for w in 0..self.links.len() {
+            self.send_payload(w, &payload, &round)?;
+        }
+        // Release the master's strong ref before blocking on replies:
+        // the last in-memory receiver then owns the message outright
+        // (`Arc::try_unwrap`) instead of deep-cloning it.
+        drop(payload);
+        let pending: Vec<usize> = (0..self.links.len()).collect();
+        self.collect(&pending)?
+            .into_iter()
+            .enumerate()
+            .map(|(w, m)| self.parse::<R>(w, m))
+            .collect()
+    }
+
+    /// Send worker-specific requests (`reqs[i]` → worker i; the Alg.
+    /// 1/2/3 per-worker-seed rounds) and return replies in worker
+    /// order.
+    pub fn scatter<R: Request>(&self, reqs: Vec<R>) -> Result<Vec<R::Response>, CommError> {
+        self.check_usable()?;
+        assert_eq!(reqs.len(), self.links.len(), "one request per worker");
+        let round = self.round();
+        for (w, req) in reqs.into_iter().enumerate() {
+            let payload = Payload::new(req.into_message());
+            self.send_payload(w, &payload, &round)?;
+        }
+        let pending: Vec<usize> = (0..self.links.len()).collect();
+        self.collect(&pending)?
+            .into_iter()
+            .enumerate()
+            .map(|(w, m)| self.parse::<R>(w, m))
+            .collect()
+    }
+
+    /// Shut down all workers (best-effort, idempotent — links whose
+    /// worker already died are skipped, not fatal).
     pub fn shutdown(&self) {
-        for w in 0..self.links.len() {
-            self.send(w, Message::Quit);
+        if self.shut.swap(true, Ordering::SeqCst) {
+            return;
         }
+        let payload = Payload::new(Message::Quit);
+        let round = self.round();
+        for link in &self.links {
+            if link.send(&payload).is_ok() {
+                self.stats.record(&round, false, payload.words());
+            }
+        }
+    }
+}
+
+impl Drop for Cluster {
+    /// Release workers even on an early error return — the drop guard
+    /// makes `Quit` reach every still-connected worker when a driver
+    /// aborts a round with `?`.
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// A round-scoped handle returned by [`Cluster::session`]: the same
+/// typed exchanges, with the round label already applied.
+pub struct Session<'a> {
+    cluster: &'a Cluster,
+}
+
+impl Session<'_> {
+    pub fn num_workers(&self) -> usize {
+        self.cluster.num_workers()
+    }
+
+    /// See [`Cluster::call`].
+    pub fn call<R: Request>(&self, worker: usize, req: R) -> Result<R::Response, CommError> {
+        self.cluster.call(worker, req)
+    }
+
+    /// See [`Cluster::broadcast`].
+    pub fn broadcast<R: Request>(&self, req: R) -> Result<Vec<R::Response>, CommError> {
+        self.cluster.broadcast(req)
+    }
+
+    /// See [`Cluster::scatter`].
+    pub fn scatter<R: Request>(&self, reqs: Vec<R>) -> Result<Vec<R::Response>, CommError> {
+        self.cluster.scatter(reqs)
     }
 }
 
@@ -522,5 +944,135 @@ mod tests {
         assert_eq!(t.len(), 2);
         s.reset();
         assert_eq!(s.total_words(), 0);
+    }
+
+    #[test]
+    fn payload_encodes_once_and_shares() {
+        let payload = Payload::new(Message::RespMat(Mat::zeros(3, 3)));
+        assert_eq!(payload.words(), 9);
+        let a = payload.encoded().as_ptr();
+        let b = payload.encoded().as_ptr();
+        assert_eq!(a, b, "second encode must reuse the first buffer");
+        let m1 = payload.shared();
+        let m2 = payload.shared();
+        assert!(Arc::ptr_eq(&m1, &m2));
+    }
+
+    #[test]
+    fn comm_error_context_accessors() {
+        let e = CommError::Worker { worker: 2, round: "5-disLR".into(), detail: "boom".into() };
+        assert_eq!(e.worker(), Some(2));
+        assert_eq!(e.round(), "5-disLR");
+        assert!(e.to_string().contains("worker 2"));
+        assert!(e.to_string().contains("5-disLR"));
+        let t = CommError::Timeout { round: "x".into(), pending: vec![1, 3] };
+        assert_eq!(t.worker(), Some(1));
+        let m = CommError::Mismatch {
+            worker: 0,
+            round: "r".into(),
+            expected: "RespMat",
+            got: "RespScalar",
+        };
+        assert!(m.to_string().contains("RespMat"));
+        assert!(m.to_string().contains("RespScalar"));
+    }
+
+    #[test]
+    fn broadcast_reduces_completion_order_to_worker_order() {
+        use std::time::Duration;
+        let (star, endpoints) = memory::star(3);
+        let workers: Vec<_> = endpoints
+            .into_iter()
+            .enumerate()
+            .map(|(i, ep)| {
+                std::thread::spawn(move || loop {
+                    match ep.recv() {
+                        Ok(Message::Quit) | Err(_) => break,
+                        Ok(Message::ReqCount) => {
+                            // worker 0 replies last: completion order is
+                            // 1, 2, 0 but the caller must see 0, 1, 2.
+                            if i == 0 {
+                                std::thread::sleep(Duration::from_millis(50));
+                            }
+                            ep.send(Message::RespCount(10 + i)).unwrap();
+                        }
+                        Ok(_) => ep.send(Message::Ack).unwrap(),
+                    }
+                })
+            })
+            .collect();
+        let cluster = Cluster::new(star, CommStats::new());
+        cluster.set_round("order");
+        let counts = cluster.broadcast(request::Count).unwrap();
+        assert_eq!(counts, vec![10, 11, 12]);
+        cluster.shutdown();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn resp_error_surfaces_as_typed_worker_error() {
+        let (star, endpoints) = memory::star(2);
+        let workers: Vec<_> = endpoints
+            .into_iter()
+            .enumerate()
+            .map(|(i, ep)| {
+                std::thread::spawn(move || loop {
+                    match ep.recv() {
+                        Ok(Message::Quit) | Err(_) => break,
+                        Ok(_) if i == 1 => {
+                            ep.send(Message::RespError("shard unreadable".into())).unwrap()
+                        }
+                        Ok(_) => ep.send(Message::RespCount(5)).unwrap(),
+                    }
+                })
+            })
+            .collect();
+        let cluster = Cluster::new(star, CommStats::new());
+        cluster.set_round("9-krr");
+        let err = cluster.broadcast(request::Count).unwrap_err();
+        match &err {
+            CommError::Worker { worker, round, detail } => {
+                assert_eq!(*worker, 1);
+                assert_eq!(round, "9-krr");
+                assert!(detail.contains("shard unreadable"));
+            }
+            other => panic!("expected Worker error, got {other:?}"),
+        }
+        cluster.shutdown();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn mismatched_reply_is_typed_not_a_panic() {
+        let (star, endpoints) = memory::star(1);
+        let workers: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                std::thread::spawn(move || loop {
+                    match ep.recv() {
+                        Ok(Message::Quit) | Err(_) => break,
+                        Ok(_) => ep.send(Message::Ack).unwrap(),
+                    }
+                })
+            })
+            .collect();
+        let cluster = Cluster::new(star, CommStats::new());
+        cluster.set_round("t");
+        let err = cluster.broadcast(request::Count).unwrap_err();
+        match err {
+            CommError::Mismatch { worker: 0, expected, got, .. } => {
+                assert_eq!(expected, "RespCount");
+                assert_eq!(got, "Ack");
+            }
+            other => panic!("{other:?}"),
+        }
+        cluster.shutdown();
+        for w in workers {
+            w.join().unwrap();
+        }
     }
 }

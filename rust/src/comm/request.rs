@@ -1,0 +1,337 @@
+//! Typed protocol requests: the compile-time pairing of each request
+//! with its response type.
+//!
+//! Every master→worker request is a struct implementing [`Request`],
+//! whose `Response` associated type fixes what the worker must send
+//! back. The master decodes replies through [`Request::decode`]
+//! (a wrong variant becomes [`crate::comm::CommError::Mismatch`], not
+//! a panic), and the worker produces them through
+//! [`Request::encode_response`] via the [`Handle`] trait — so a
+//! handler returning the wrong type is a compile error on *both*
+//! sides of the wire. The wire format itself is unchanged: every
+//! request lowers to the same [`Message`] variant the codec has
+//! always shipped.
+//!
+//! [`Handle`] is the worker-side registration point: the worker
+//! implements `Handle<R>` once per request type, and both the
+//! resident and streaming execution paths live inside that single
+//! handler (see `coordinator::worker`).
+
+use crate::embed::EmbedSpec;
+use crate::linalg::Mat;
+
+use super::{Message, PointSet};
+
+/// A typed protocol request: lowers to one [`Message`] variant and
+/// knows how to decode (master side) and encode (worker side) the
+/// paired response.
+pub trait Request: Send + 'static {
+    /// What the worker replies with.
+    type Response: Send + 'static;
+    /// Tag of the expected response variant (for mismatch errors).
+    const EXPECTS: &'static str;
+    /// Lower to the wire message.
+    fn into_message(self) -> Message;
+    /// Master side: extract the typed response, or hand back the
+    /// message unconsumed on a variant mismatch.
+    fn decode(resp: Message) -> Result<Self::Response, Message>;
+    /// Worker side: wrap the typed response for the wire.
+    fn encode_response(resp: Self::Response) -> Message;
+}
+
+/// Worker-side handler registration: one impl per [`Request`] type.
+/// The response type is pinned by the request, so resident and
+/// streaming paths (which share each impl) cannot drift apart or
+/// reply with the wrong variant.
+pub trait Handle<R: Request> {
+    fn handle_req(&mut self, req: R) -> R::Response;
+}
+
+/// One worker's k-means assignment partials
+/// ([`Message::RespKmeans`]).
+#[derive(Clone, Debug)]
+pub struct KmeansPart {
+    /// kdim×c per-cluster coordinate sums.
+    pub sums: Mat,
+    /// per-cluster assignment counts.
+    pub counts: Vec<usize>,
+    /// Σⱼ minᶜ ‖zⱼ − c‖² over the local points.
+    pub obj: f64,
+}
+
+/// One worker's KRR normal-equation partials ([`Message::RespKrr`]).
+#[derive(Clone, Debug)]
+pub struct KrrPart {
+    /// g = K_YA·K_AY (|Y|×|Y|).
+    pub g: Mat,
+    /// b = K_YA·t (|Y|×1).
+    pub b: Mat,
+    /// ‖t‖².
+    pub tnorm: f64,
+}
+
+/// Requests with payload fields and a single-payload response variant.
+macro_rules! payload_request {
+    ($(#[$m:meta])* $name:ident { $($field:ident: $fty:ty),+ $(,)? }
+     => $reqv:ident, $respv:ident -> $resp:ty) => {
+        $(#[$m])*
+        #[derive(Clone, Debug)]
+        pub struct $name {
+            $(pub $field: $fty,)+
+        }
+        impl Request for $name {
+            type Response = $resp;
+            const EXPECTS: &'static str = stringify!($respv);
+            fn into_message(self) -> Message {
+                Message::$reqv { $($field: self.$field),+ }
+            }
+            fn decode(resp: Message) -> Result<Self::Response, Message> {
+                match resp {
+                    Message::$respv(v) => Ok(v),
+                    other => Err(other),
+                }
+            }
+            fn encode_response(resp: Self::Response) -> Message {
+                Message::$respv(resp)
+            }
+        }
+    };
+}
+
+/// Requests with payload fields that are acknowledged, not answered.
+macro_rules! ack_request {
+    ($(#[$m:meta])* $name:ident { $($field:ident: $fty:ty),+ $(,)? } => $reqv:ident) => {
+        $(#[$m])*
+        #[derive(Clone, Debug)]
+        pub struct $name {
+            $(pub $field: $fty,)+
+        }
+        impl Request for $name {
+            type Response = ();
+            const EXPECTS: &'static str = "Ack";
+            fn into_message(self) -> Message {
+                Message::$reqv { $($field: self.$field),+ }
+            }
+            fn decode(resp: Message) -> Result<Self::Response, Message> {
+                match resp {
+                    Message::Ack => Ok(()),
+                    other => Err(other),
+                }
+            }
+            fn encode_response(_resp: Self::Response) -> Message {
+                Message::Ack
+            }
+        }
+    };
+}
+
+/// Field-less requests with a single-payload response variant.
+macro_rules! unit_request {
+    ($(#[$m:meta])* $name:ident => $reqv:ident, $respv:ident -> $resp:ty) => {
+        $(#[$m])*
+        #[derive(Clone, Copy, Debug)]
+        pub struct $name;
+        impl Request for $name {
+            type Response = $resp;
+            const EXPECTS: &'static str = stringify!($respv);
+            fn into_message(self) -> Message {
+                Message::$reqv
+            }
+            fn decode(resp: Message) -> Result<Self::Response, Message> {
+                match resp {
+                    Message::$respv(v) => Ok(v),
+                    other => Err(other),
+                }
+            }
+            fn encode_response(resp: Self::Response) -> Message {
+                Message::$respv(resp)
+            }
+        }
+    };
+}
+
+ack_request! {
+    /// Alg. 4 step 1: build E^i = S(φ(Aⁱ)) from the shared spec.
+    Embed { spec: EmbedSpec } => ReqEmbed
+}
+
+ack_request! {
+    /// Alg. 3 step 3: cache the solution L = Q·W from the top-k
+    /// coefficients (Π already held from [`ProjectSketch`]).
+    Final { coeffs: Mat } => ReqFinal
+}
+
+ack_request! {
+    /// Install an arbitrary solution L = φ(Y)·C (baselines).
+    SetSolution { pts: PointSet, coeffs: Mat } => ReqSetSolution
+}
+
+payload_request! {
+    /// Alg. 1 step 1: right-sketch E^i to p columns.
+    SketchEmbed { p: usize, seed: u64 } => ReqSketchEmbed, RespMat -> Mat
+}
+
+payload_request! {
+    /// Alg. 1 steps 2–3: receive Z, compute local leverage scores,
+    /// reply with the total mass.
+    Scores { z: Mat } => ReqScores, RespScalar -> f64
+}
+
+payload_request! {
+    /// Alg. 2 step 1: draw `count` leverage-weighted points.
+    SampleLeverage { count: usize, seed: u64 } => ReqSampleLeverage, RespPoints -> PointSet
+}
+
+payload_request! {
+    /// Alg. 2 steps 2–3: receive P, reply with the total squared
+    /// residual distance to span φ(P).
+    Residuals { pts: PointSet } => ReqResiduals, RespScalar -> f64
+}
+
+payload_request! {
+    /// Alg. 2 step 3: draw `count` residual-weighted points.
+    SampleAdaptive { count: usize, seed: u64 } => ReqSampleAdaptive, RespPoints -> PointSet
+}
+
+payload_request! {
+    /// Alg. 3 step 1: project onto span φ(Y), right-sketch to w
+    /// columns.
+    ProjectSketch { pts: PointSet, w: usize, seed: u64 } => ReqProjectSketch, RespMat -> Mat
+}
+
+payload_request! {
+    /// Uniform sample of the projected (k-dim) local points (k-means
+    /// seeding).
+    SampleProjected { count: usize, seed: u64 } => ReqSampleProjected, RespMat -> Mat
+}
+
+payload_request! {
+    /// Draw `count` uniform local points (baselines).
+    SampleUniform { count: usize, seed: u64 } => ReqSampleUniform, RespPoints -> PointSet
+}
+
+payload_request! {
+    /// Evaluate a KRR coefficient vector: Σⱼ (K(Aⁱ,Y)α − t)².
+    KrrEval { alpha: Mat } => ReqKrrEval, RespScalar -> f64
+}
+
+unit_request! {
+    /// Partial ‖φ(Aⁱ) − LLᵀφ(Aⁱ)‖² for the cached solution.
+    EvalError => ReqEvalError, RespScalar -> f64
+}
+
+unit_request! {
+    /// Partial Σⱼ κ(xⱼ,xⱼ).
+    EvalTrace => ReqEvalTrace, RespScalar -> f64
+}
+
+unit_request! {
+    /// Number of local points.
+    Count => ReqCount, RespCount -> usize
+}
+
+unit_request! {
+    /// Cumulative compute-busy seconds (Fig-7 critical path).
+    BusyTime => ReqBusyTime, RespScalar -> f64
+}
+
+unit_request! {
+    /// Full per-point leverage-score vector (offline API, O(nᵢ)
+    /// words).
+    ScoresVec => ReqScoresVec, RespMat -> Mat
+}
+
+/// One k-means assignment step against shared centers.
+#[derive(Clone, Debug)]
+pub struct KmeansStep {
+    pub centers: Mat,
+}
+
+impl Request for KmeansStep {
+    type Response = KmeansPart;
+    const EXPECTS: &'static str = "RespKmeans";
+
+    fn into_message(self) -> Message {
+        Message::ReqKmeansStep { centers: self.centers }
+    }
+
+    fn decode(resp: Message) -> Result<Self::Response, Message> {
+        match resp {
+            Message::RespKmeans { sums, counts, obj } => Ok(KmeansPart { sums, counts, obj }),
+            other => Err(other),
+        }
+    }
+
+    fn encode_response(resp: Self::Response) -> Message {
+        Message::RespKmeans { sums: resp.sums, counts: resp.counts, obj: resp.obj }
+    }
+}
+
+/// KRR normal-equation round: receive Y + teacher seed, reply the
+/// local (g, b, ‖t‖²) pieces.
+#[derive(Clone, Debug)]
+pub struct KrrStats {
+    pub pts: PointSet,
+    pub teacher_seed: u64,
+}
+
+impl Request for KrrStats {
+    type Response = KrrPart;
+    const EXPECTS: &'static str = "RespKrr";
+
+    fn into_message(self) -> Message {
+        Message::ReqKrrStats { pts: self.pts, teacher_seed: self.teacher_seed }
+    }
+
+    fn decode(resp: Message) -> Result<Self::Response, Message> {
+        match resp {
+            Message::RespKrr { g, b, tnorm } => Ok(KrrPart { g, b, tnorm }),
+            other => Err(other),
+        }
+    }
+
+    fn encode_response(resp: Self::Response) -> Message {
+        Message::RespKrr { g: resp.g, b: resp.b, tnorm: resp.tnorm }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_lowers_to_matching_message() {
+        let m = SketchEmbed { p: 4, seed: 9 }.into_message();
+        assert!(matches!(m, Message::ReqSketchEmbed { p: 4, seed: 9 }));
+        assert!(matches!(Count.into_message(), Message::ReqCount));
+        assert!(matches!(
+            Scores { z: Mat::zeros(2, 2) }.into_message(),
+            Message::ReqScores { .. }
+        ));
+    }
+
+    #[test]
+    fn decode_accepts_paired_variant_only() {
+        assert_eq!(Count::decode(Message::RespCount(7)).unwrap(), 7);
+        assert!(Count::decode(Message::Ack).is_err());
+        assert!(Scores::decode(Message::RespScalar(1.5)).unwrap() == 1.5);
+        assert!(Scores::decode(Message::RespCount(1)).is_err());
+        // ack requests
+        Final::decode(Message::Ack).unwrap();
+        assert!(Final::decode(Message::RespScalar(0.0)).is_err());
+    }
+
+    #[test]
+    fn encode_decode_are_inverse_on_the_response_side() {
+        let part = KmeansPart { sums: Mat::zeros(2, 3), counts: vec![1, 2, 3], obj: 4.5 };
+        let back = KmeansStep::decode(KmeansStep::encode_response(part)).unwrap();
+        assert_eq!(back.counts, vec![1, 2, 3]);
+        assert_eq!(back.obj, 4.5);
+        let krr = KrrPart { g: Mat::zeros(2, 2), b: Mat::zeros(2, 1), tnorm: 2.0 };
+        let back = KrrStats::decode(KrrStats::encode_response(krr)).unwrap();
+        assert_eq!(back.tnorm, 2.0);
+        // the mismatch path hands the message back unconsumed
+        let err = KrrStats::decode(Message::Ack).unwrap_err();
+        assert_eq!(err.tag(), "Ack");
+    }
+}

@@ -3,12 +3,22 @@
 //! Functionally identical to the in-memory star; exists to prove the
 //! protocol genuinely serializes (no shared-memory cheating) and to
 //! measure wire bytes against the word-accounting model.
+//!
+//! Master-side links are send-only and write the broadcast's
+//! **pre-encoded** byte buffer ([`crate::comm::Payload::encoded`]) —
+//! one serialization per fan-out, not one per worker. Each link owns a
+//! dedicated reader thread that decodes reply frames as they arrive
+//! and pushes them onto the shared completion-order queue
+//! ([`crate::comm::Star::replies`]); a socket that dies mid-protocol
+//! pushes a failure marker carrying the worker index, so the master
+//! fails the round with context instead of blocking on a dead peer.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;
 
-use super::{codec, Message, WorkerLink};
+use super::{codec, Message, Payload, ReplyEvent, Star, WorkerLink};
 
 /// Ceiling on a single frame's payload. A corrupt or hostile length
 /// prefix must produce a decode error, not a multi-GiB allocation —
@@ -16,12 +26,16 @@ use super::{codec, Message, WorkerLink};
 /// this.
 pub const MAX_FRAME_BYTES: u64 = 1 << 31;
 
-/// Write one length-prefixed codec frame.
-pub fn write_frame(stream: &mut TcpStream, msg: &Message) -> std::io::Result<()> {
-    let bytes = codec::encode(msg);
+/// Write one length-prefixed frame of already-encoded codec bytes.
+pub fn write_frame_bytes(stream: &mut TcpStream, bytes: &[u8]) -> std::io::Result<()> {
     stream.write_all(&(bytes.len() as u64).to_le_bytes())?;
-    stream.write_all(&bytes)?;
+    stream.write_all(bytes)?;
     stream.flush()
+}
+
+/// Encode and write one length-prefixed codec frame.
+pub fn write_frame(stream: &mut TcpStream, msg: &Message) -> std::io::Result<()> {
+    write_frame_bytes(stream, &codec::encode(msg))
 }
 
 /// Read one length-prefixed codec frame. Fails (without panicking or
@@ -44,23 +58,53 @@ pub fn read_frame(stream: &mut TcpStream) -> std::io::Result<Message> {
     })
 }
 
-/// Master-side link over TCP.
+/// Master-side send link over TCP (replies arrive via the per-link
+/// reader thread feeding the shared queue — see the module docs).
 pub struct TcpLink {
     stream: Mutex<TcpStream>,
 }
 
 impl WorkerLink for TcpLink {
-    fn send(&self, msg: Message) {
-        write_frame(&mut self.stream.lock().unwrap(), &msg).unwrap_or_else(|e| {
-            panic!("tcp send to worker failed ({}): {e}", msg.tag())
-        });
+    fn send(&self, payload: &Payload) -> Result<(), String> {
+        write_frame_bytes(&mut self.stream.lock().unwrap(), payload.encoded())
+            .map_err(|e| format!("tcp send failed ({}): {e}", payload.message().tag()))
     }
+}
 
-    fn recv(&self) -> Message {
-        read_frame(&mut self.stream.lock().unwrap()).unwrap_or_else(|e| {
-            panic!("tcp recv from worker failed (worker died mid-protocol?): {e}")
-        })
+/// Per-link reader: decode reply frames as they arrive and push them
+/// onto the shared queue; on EOF or a decode failure, push one
+/// failure marker and stop. (EOF after `Quit` is the clean-shutdown
+/// case — the marker then sits unread, which is harmless.)
+fn reply_pump(worker: usize, mut stream: TcpStream, tx: Sender<ReplyEvent>) {
+    loop {
+        match read_frame(&mut stream) {
+            Ok(msg) => {
+                if tx.send((worker, Ok(msg))).is_err() {
+                    return; // master gone
+                }
+            }
+            Err(e) => {
+                let detail = format!("recv failed (worker died mid-protocol?): {e}");
+                let _ = tx.send((worker, Err(detail)));
+                return;
+            }
+        }
     }
+}
+
+/// Build the master half of the star from accepted sockets: one
+/// send-only [`TcpLink`] plus one reader thread per worker, all
+/// feeding a single completion-order reply queue.
+fn master_star(streams: Vec<TcpStream>) -> std::io::Result<Star> {
+    let (reply_tx, reply_rx) = channel::<ReplyEvent>();
+    let mut links: Vec<Box<dyn WorkerLink>> = Vec::with_capacity(streams.len());
+    for (worker, stream) in streams.into_iter().enumerate() {
+        let reader = stream.try_clone()?;
+        let tx = reply_tx.clone();
+        std::thread::spawn(move || reply_pump(worker, reader, tx));
+        links.push(Box::new(TcpLink { stream: Mutex::new(stream) }));
+    }
+    Ok(Star { links, replies: reply_rx })
 }
 
 /// Worker-side endpoint over TCP (mirrors `memory::WorkerEndpoint`).
@@ -69,49 +113,39 @@ pub struct TcpWorkerEndpoint {
 }
 
 impl TcpWorkerEndpoint {
-    /// Fallible receive — the multi-process worker loop uses this to
-    /// report a lost master with context instead of aborting.
+    /// Fallible receive — worker loops use this to report a lost
+    /// master with context instead of aborting.
     pub fn try_recv(&mut self) -> std::io::Result<Message> {
         read_frame(&mut self.stream)
     }
 
     /// Fallible send (see [`TcpWorkerEndpoint::try_recv`]).
-    pub fn try_send(&mut self, msg: Message) -> std::io::Result<()> {
-        write_frame(&mut self.stream, &msg)
-    }
-
-    pub fn recv(&mut self) -> Message {
-        self.try_recv()
-            .unwrap_or_else(|e| panic!("tcp recv from master failed mid-protocol: {e}"))
-    }
-
-    pub fn send(&mut self, msg: Message) {
-        self.try_send(msg)
-            .unwrap_or_else(|e| panic!("tcp send to master failed mid-protocol: {e}"))
+    pub fn try_send(&mut self, msg: &Message) -> std::io::Result<()> {
+        write_frame(&mut self.stream, msg)
     }
 }
 
 /// Bind a loopback listener and connect `s` worker sockets; returns
-/// master links + worker endpoints, paired by worker index.
-pub fn star(s: usize) -> std::io::Result<(Vec<Box<dyn WorkerLink>>, Vec<TcpWorkerEndpoint>)> {
+/// the master star + worker endpoints, paired by worker index.
+pub fn star(s: usize) -> std::io::Result<(Star, Vec<TcpWorkerEndpoint>)> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     // Connect worker sockets; accept order == connect order on loopback
     // is not guaranteed, so handshake with an index byte.
-    let mut endpoints_unordered = Vec::with_capacity(s);
+    let mut master_side_streams = Vec::with_capacity(s);
     let connector = std::thread::spawn(move || -> std::io::Result<Vec<TcpStream>> {
         (0..s).map(|_| TcpStream::connect(addr)).collect()
     });
-    let mut master_side = Vec::with_capacity(s);
+    let mut accepted = Vec::with_capacity(s);
     for _ in 0..s {
         let (stream, _) = listener.accept()?;
         stream.set_nodelay(true)?;
-        master_side.push(stream);
+        accepted.push(stream);
     }
     let worker_side = connector.join().expect("connector panicked")?;
-    for (i, mut m) in master_side.into_iter().enumerate() {
+    for (i, mut m) in accepted.into_iter().enumerate() {
         m.write_all(&(i as u64).to_le_bytes())?;
-        endpoints_unordered.push(m);
+        master_side_streams.push(m);
     }
     let mut workers: Vec<Option<TcpWorkerEndpoint>> = (0..s).map(|_| None).collect();
     for mut w in worker_side {
@@ -120,26 +154,23 @@ pub fn star(s: usize) -> std::io::Result<(Vec<Box<dyn WorkerLink>>, Vec<TcpWorke
         w.read_exact(&mut idx)?;
         workers[u64::from_le_bytes(idx) as usize] = Some(TcpWorkerEndpoint { stream: w });
     }
-    let links: Vec<Box<dyn WorkerLink>> = endpoints_unordered
-        .into_iter()
-        .map(|stream| Box::new(TcpLink { stream: Mutex::new(stream) }) as Box<dyn WorkerLink>)
-        .collect();
-    Ok((links, workers.into_iter().map(|w| w.unwrap()).collect()))
+    let star = master_star(master_side_streams)?;
+    Ok((star, workers.into_iter().map(|w| w.unwrap()).collect()))
 }
 
 /// Multi-process deployment: master binds `addr` and accepts exactly
 /// `s` worker connections (`diskpca master`). Worker order = accept
 /// order; workers are symmetric so no index handshake is needed.
-pub fn listen(addr: &str, s: usize) -> std::io::Result<Vec<Box<dyn WorkerLink>>> {
+pub fn listen(addr: &str, s: usize) -> std::io::Result<Star> {
     let listener = TcpListener::bind(addr)?;
-    let mut links: Vec<Box<dyn WorkerLink>> = Vec::with_capacity(s);
+    let mut streams = Vec::with_capacity(s);
     for _ in 0..s {
         let (stream, peer) = listener.accept()?;
         stream.set_nodelay(true)?;
         eprintln!("master: worker connected from {peer}");
-        links.push(Box::new(TcpLink { stream: Mutex::new(stream) }));
+        streams.push(stream);
     }
-    Ok(links)
+    master_star(streams)
 }
 
 /// Worker side of a multi-process deployment (`diskpca worker`).
@@ -152,37 +183,35 @@ pub fn connect(addr: &str) -> std::io::Result<TcpWorkerEndpoint> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::{Cluster, CommStats};
+    use crate::comm::{request, Cluster, CommError, CommStats};
     use crate::linalg::Mat;
     use std::thread;
 
     #[test]
     fn tcp_roundtrip_with_payloads() {
-        let (links, endpoints) = star(2).unwrap();
+        let (star, endpoints) = star(2).unwrap();
         let handles: Vec<_> = endpoints
             .into_iter()
             .map(|mut ep| {
                 thread::spawn(move || loop {
-                    match ep.recv() {
-                        Message::Quit => break,
-                        Message::ReqScores { z } => {
+                    match ep.try_recv() {
+                        Ok(Message::Quit) | Err(_) => break,
+                        Ok(Message::ReqScores { z }) => {
                             // echo the frobenius norm back
-                            ep.send(Message::RespScalar(z.frob_norm_sq()))
+                            ep.try_send(&Message::RespScalar(z.frob_norm_sq())).unwrap()
                         }
-                        _ => ep.send(Message::Ack),
+                        Ok(_) => ep.try_send(&Message::Ack).unwrap(),
                     }
                 })
             })
             .collect();
-        let cluster = Cluster::new(links, CommStats::new());
+        let cluster = Cluster::new(star, CommStats::new());
         cluster.set_round("tcp");
         let z = Mat::from_fn(4, 4, |i, j| (i + j) as f64);
-        let replies = cluster.exchange(&Message::ReqScores { z: z.clone() });
-        for r in replies {
-            match r {
-                Message::RespScalar(v) => assert!((v - z.frob_norm_sq()).abs() < 1e-12),
-                other => panic!("{other:?}"),
-            }
+        let want = z.frob_norm_sq();
+        let replies = cluster.broadcast(request::Scores { z }).unwrap();
+        for v in replies {
+            assert!((v - want).abs() < 1e-12);
         }
         // words: 2×16 (requests) + 2×1 (replies)
         assert_eq!(cluster.stats.total_words(), 34);
@@ -190,5 +219,35 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn dead_socket_fails_the_round_with_worker_index() {
+        let (star, mut endpoints) = star(2).unwrap();
+        // worker 0 serves; worker 1's socket dies immediately
+        let ep0 = endpoints.remove(0);
+        let h = thread::spawn(move || {
+            let mut ep0 = ep0;
+            loop {
+                match ep0.try_recv() {
+                    Ok(Message::Quit) | Err(_) => break,
+                    Ok(_) => ep0.try_send(&Message::RespCount(4)).unwrap(),
+                }
+            }
+        });
+        drop(endpoints.remove(0));
+        let cluster = Cluster::new(star, CommStats::new());
+        cluster.set_round("fault");
+        cluster.set_reply_timeout(std::time::Duration::from_secs(30));
+        let err = cluster.broadcast(request::Count).unwrap_err();
+        match err {
+            // the send can still succeed into the OS buffer, in which
+            // case the reader thread reports the broken link; or the
+            // send itself fails — either way worker 1 is named.
+            CommError::Link { worker: 1, round, .. } => assert_eq!(round, "fault"),
+            other => panic!("expected Link error for worker 1, got {other:?}"),
+        }
+        cluster.shutdown();
+        h.join().unwrap();
     }
 }

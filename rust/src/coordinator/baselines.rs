@@ -5,39 +5,39 @@
 //! - **batch KPCA** — single-machine ground truth (Figs 2–3), plus the
 //!   optimum rank-k error for relative-error reporting.
 
-use crate::comm::{Cluster, Message, PointSet};
+use crate::comm::request as rq;
+use crate::comm::{Cluster, CommError, PointSet};
 use crate::data::Data;
 use crate::kernels::{gram_sym, Kernel};
 use crate::linalg::{eigh, top_eigh, Mat};
 use crate::rng::{multinomial, Rng};
 
-use super::master::{count, dis_low_rank};
+use super::master::dis_low_rank;
 use super::{KpcaSolution, Params};
 
 /// Gather a uniform sample of `total` points across workers
 /// (allocation ∝ nᵢ — i.e. a uniform sample of the global dataset).
-pub fn dis_uniform_sample(cluster: &Cluster, total: usize, seed: u64) -> PointSet {
-    cluster.set_round("3-uniform");
-    let counts: Vec<f64> = cluster
-        .exchange(&Message::ReqCount)
-        .into_iter()
-        .map(|m| count(m) as f64)
-        .collect();
+pub fn dis_uniform_sample(
+    cluster: &Cluster,
+    total: usize,
+    seed: u64,
+) -> Result<PointSet, CommError> {
+    let sx = cluster.session("3-uniform");
+    let counts: Vec<f64> = sx.broadcast(rq::Count)?.into_iter().map(|c| c as f64).collect();
     let mut rng = Rng::seed_from(seed ^ 0x0111f);
     let alloc = multinomial(&mut rng, &counts, total);
-    for (i, &c) in alloc.iter().enumerate() {
-        cluster.send(i, Message::ReqSampleUniform { count: c, seed: seed ^ (0xbb + i as u64) });
-    }
-    let parts: Vec<PointSet> = cluster
-        .gather()
+    let parts: Vec<PointSet> = sx
+        .scatter(
+            alloc
+                .iter()
+                .enumerate()
+                .map(|(i, &c)| rq::SampleUniform { count: c, seed: seed ^ (0xbb + i as u64) })
+                .collect(),
+        )?
         .into_iter()
-        .map(|m| match m {
-            Message::RespPoints(p) => p,
-            other => panic!("expected points, got {}", other.tag()),
-        })
         .filter(|p| !p.is_empty())
         .collect();
-    PointSet::concat(&parts)
+    Ok(PointSet::concat(&parts))
 }
 
 /// Baseline 1: uniform sampling of Y, then the same distributed
@@ -47,9 +47,9 @@ pub fn uniform_dis_lr(
     kernel: Kernel,
     params: &Params,
     total_points: usize,
-) -> KpcaSolution {
+) -> Result<KpcaSolution, CommError> {
     params.apply_threads();
-    let y = dis_uniform_sample(cluster, total_points, params.seed);
+    let y = dis_uniform_sample(cluster, total_points, params.seed)?;
     dis_low_rank(cluster, kernel, params, &y)
 }
 
@@ -103,11 +103,11 @@ pub fn uniform_batch_kpca(
     kernel: Kernel,
     params: &Params,
     total_points: usize,
-) -> KpcaSolution {
+) -> Result<KpcaSolution, CommError> {
     params.apply_threads();
-    let sample = dis_uniform_sample(cluster, total_points, params.seed ^ 0xbbb);
+    let sample = dis_uniform_sample(cluster, total_points, params.seed ^ 0xbbb)?;
     let pts = sample.to_mat();
-    batch_kpca(&pts, kernel, params.k, false, params.seed).solution
+    Ok(batch_kpca(&pts, kernel, params.k, false, params.seed).solution)
 }
 
 /// Single-machine exact evaluation helper: relative error of a
@@ -197,8 +197,8 @@ mod tests {
             kernel,
             Arc::new(NativeBackend::new()),
             move |cluster| {
-                let _sol = uniform_dis_lr(cluster, kernel, &params, 30);
-                dis_eval(cluster)
+                let _sol = uniform_dis_lr(cluster, kernel, &params, 30).unwrap();
+                dis_eval(cluster).unwrap()
             },
         );
         assert!(err > 0.0 && err < trace);
@@ -218,9 +218,9 @@ mod tests {
             kernel,
             Arc::new(NativeBackend::new()),
             move |cluster| {
-                let sol = uniform_batch_kpca(cluster, kernel, &params, 40);
-                dis_set_solution(cluster, &sol);
-                dis_eval(cluster)
+                let sol = uniform_batch_kpca(cluster, kernel, &params, 40).unwrap();
+                dis_set_solution(cluster, &sol).unwrap();
+                dis_eval(cluster).unwrap()
             },
         );
         assert!(err > 0.0 && err < trace, "err {err} trace {trace}");
@@ -260,8 +260,8 @@ mod tests {
             kernel,
             Arc::new(NativeBackend::new()),
             move |cluster| {
-                let _ = super::super::dis_kpca(cluster, kernel, &params);
-                dis_eval(cluster)
+                let _ = super::super::dis_kpca(cluster, kernel, &params).unwrap();
+                dis_eval(cluster).unwrap()
             },
         );
         let shards2 = partition_power_law(&data, 3, 7);
@@ -270,8 +270,8 @@ mod tests {
             kernel,
             Arc::new(NativeBackend::new()),
             move |cluster| {
-                let _ = uniform_dis_lr(cluster, kernel, &params, 24);
-                dis_eval(cluster)
+                let _ = uniform_dis_lr(cluster, kernel, &params, 24).unwrap();
+                dis_eval(cluster).unwrap()
             },
         );
         // not a tight theorem — but with matched |Y| the informed

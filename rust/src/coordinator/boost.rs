@@ -9,7 +9,7 @@
 //! `reps` — the accounting picks this up automatically because every
 //! repetition's rounds go through the same [`crate::comm::CommStats`].
 
-use crate::comm::Cluster;
+use crate::comm::{Cluster, CommError};
 use crate::kernels::Kernel;
 
 use super::master::{dis_eval, dis_kpca, dis_set_solution};
@@ -44,7 +44,7 @@ pub fn dis_kpca_boosted(
     kernel: Kernel,
     params: &Params,
     reps: usize,
-) -> BoostedRun {
+) -> Result<BoostedRun, CommError> {
     assert!(reps >= 1);
     let mut best: Option<(f64, KpcaSolution)> = None;
     let mut errors = Vec::with_capacity(reps);
@@ -55,25 +55,25 @@ pub fn dis_kpca_boosted(
             seed: params.seed.wrapping_add(0x9e3779b97f4a7c15u64.wrapping_mul(r as u64 + 1)),
             ..*params
         };
-        let sol = dis_kpca(cluster, kernel, &attempt);
-        let (err, tr) = dis_eval(cluster);
+        let sol = dis_kpca(cluster, kernel, &attempt)?;
+        let (err, tr) = dis_eval(cluster)?;
         errors.push(err);
         trace = tr;
         if best.as_ref().map_or(true, |(b, _)| err < *b) {
             best = Some((err, sol));
         }
     }
-    let (_, solution) = best.unwrap();
+    let (_, solution) = best.expect("reps >= 1 attempts ran");
     // leave the winner installed on the workers (the last attempt may
     // not be the winner).
-    dis_set_solution(cluster, &solution);
+    dis_set_solution(cluster, &solution)?;
     let winner = errors
         .iter()
         .enumerate()
         .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
         .unwrap()
         .0;
-    BoostedRun { solution, errors, winner, trace }
+    Ok(BoostedRun { solution, errors, winner, trace })
 }
 
 #[cfg(test)]
@@ -116,8 +116,8 @@ mod tests {
             kernel,
             Arc::new(NativeBackend::new()),
             move |cluster| {
-                let run = dis_kpca_boosted(cluster, kernel, &params, 3);
-                let (err, _) = dis_eval(cluster);
+                let run = dis_kpca_boosted(cluster, kernel, &params, 3).unwrap();
+                let (err, _) = dis_eval(cluster).unwrap();
                 (run, err)
             },
         );
@@ -159,8 +159,8 @@ mod tests {
             kernel,
             Arc::new(NativeBackend::new()),
             move |cluster| {
-                let _ = dis_kpca(cluster, kernel, &params);
-                dis_eval(cluster).0
+                let _ = dis_kpca(cluster, kernel, &params).unwrap();
+                dis_eval(cluster).unwrap().0
             },
         );
         // boosted (first attempt uses a derived seed, so compare via
@@ -170,7 +170,7 @@ mod tests {
             shards,
             kernel,
             Arc::new(NativeBackend::new()),
-            move |cluster| dis_kpca_boosted(cluster, kernel, &params, 4),
+            move |cluster| dis_kpca_boosted(cluster, kernel, &params, 4).unwrap(),
         );
         let boosted = run.errors[run.winner];
         // across 4 independent attempts, the min is very unlikely to

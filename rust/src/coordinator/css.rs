@@ -13,7 +13,8 @@
 //! residual ‖φ(A) − proj_{span φ(Y)} φ(A)‖² — obtained with one extra
 //! O(s) round.
 
-use crate::comm::{Cluster, Message, PointSet};
+use crate::comm::request as rq;
+use crate::comm::{Cluster, CommError, PointSet};
 use crate::embed::EmbedSpec;
 use crate::kernels::Kernel;
 
@@ -73,11 +74,16 @@ impl CssSolution {
 ///     Arc::new(NativeBackend::new()),
 ///     move |cluster| dis_css(cluster, kernel, &params),
 /// );
+/// let css = css.unwrap();    // a worker failure would be Err
 /// assert!(css.y.len() >= 1);
 /// // the certificate bounds the span residual as a mass fraction
 /// assert!((0.0..=1.0).contains(&css.residual_fraction()));
 /// ```
-pub fn dis_css(cluster: &Cluster, kernel: Kernel, params: &Params) -> CssSolution {
+pub fn dis_css(
+    cluster: &Cluster,
+    kernel: Kernel,
+    params: &Params,
+) -> Result<CssSolution, CommError> {
     params.apply_threads();
     let spec = EmbedSpec {
         kernel,
@@ -86,29 +92,15 @@ pub fn dis_css(cluster: &Cluster, kernel: Kernel, params: &Params) -> CssSolutio
         t: params.t,
         seed: params.seed ^ 0xeb3d,
     };
-    dis_embed(cluster, spec);
-    let masses = dis_leverage_scores(cluster, params);
-    let y = rep_sample(cluster, params, &masses);
+    dis_embed(cluster, spec)?;
+    let masses = dis_leverage_scores(cluster, params)?;
+    let y = rep_sample(cluster, params, &masses)?;
     // certificate: exact residual of the full span (one scalar per
     // worker — reuses the adaptive-sampling residual machinery).
-    cluster.set_round("7-cssCert");
-    let residual: f64 = cluster
-        .exchange(&Message::ReqResiduals { pts: y.clone() })
-        .into_iter()
-        .map(|m| match m {
-            Message::RespScalar(v) => v,
-            other => panic!("expected RespScalar, got {}", other.tag()),
-        })
-        .sum();
-    let trace: f64 = cluster
-        .exchange(&Message::ReqEvalTrace)
-        .into_iter()
-        .map(|m| match m {
-            Message::RespScalar(v) => v,
-            other => panic!("expected RespScalar, got {}", other.tag()),
-        })
-        .sum();
-    CssSolution { y, residual, trace }
+    let sx = cluster.session("7-cssCert");
+    let residual: f64 = sx.broadcast(rq::Residuals { pts: y.clone() })?.into_iter().sum();
+    let trace: f64 = sx.broadcast(rq::EvalTrace)?.into_iter().sum();
+    Ok(CssSolution { y, residual, trace })
 }
 
 #[cfg(test)]
@@ -140,7 +132,7 @@ mod tests {
             shards,
             kernel,
             Arc::new(NativeBackend::new()),
-            move |cluster| dis_css(cluster, kernel, &p),
+            move |cluster| dis_css(cluster, kernel, &p).unwrap(),
         );
         // recompute the residual single-machine via the kernel trick
         let y = sol.y.to_mat();
@@ -174,7 +166,7 @@ mod tests {
                 shards,
                 kernel,
                 Arc::new(NativeBackend::new()),
-                move |cluster| dis_css(cluster, kernel, &p),
+                move |cluster| dis_css(cluster, kernel, &p).unwrap(),
             );
             fracs.push(sol.residual_fraction());
         }
@@ -192,7 +184,7 @@ mod tests {
             shards,
             kernel,
             Arc::new(NativeBackend::new()),
-            move |cluster| dis_css(cluster, kernel, &p),
+            move |cluster| dis_css(cluster, kernel, &p).unwrap(),
         );
         assert!(sol.residual_fraction() < 0.05, "{}", sol.residual_fraction());
     }
@@ -208,7 +200,7 @@ mod tests {
             shards,
             kernel,
             Arc::new(NativeBackend::new()),
-            move |cluster| dis_css(cluster, kernel, &p),
+            move |cluster| dis_css(cluster, kernel, &p).unwrap(),
         );
         assert!(sol.residual >= 0.0 && sol.residual <= sol.trace * (1.0 + 1e-9));
         // sparse selection stays sparse on the wire

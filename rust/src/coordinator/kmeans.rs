@@ -12,7 +12,8 @@
 //! i.e. `kpca residual + projected k-means objective` — both terms are
 //! computed distributedly.
 
-use crate::comm::{Cluster, Message};
+use crate::comm::request as rq;
+use crate::comm::{Cluster, CommError};
 use crate::linalg::Mat;
 use crate::rng::Rng;
 
@@ -43,24 +44,22 @@ pub fn distributed_kmeans(
     c: usize,
     max_iters: usize,
     seed: u64,
-) -> KmeansResult {
-    cluster.set_round("7-kmeans");
+) -> Result<KmeansResult, CommError> {
+    let sx = cluster.session("7-kmeans");
     let mut rng = Rng::seed_from(seed ^ 0x4a3a);
     // ---- seeding: oversample projected points, pick c spread ones ----
     let over = (3 * c).max(c + 2);
-    let s = cluster.num_workers();
-    for i in 0..s {
-        cluster.send(
-            i,
-            Message::ReqSampleProjected { count: over.div_ceil(s), seed: seed ^ (0x5eed + i as u64) },
-        );
-    }
+    let s = sx.num_workers();
+    let parts: Vec<Mat> = sx.scatter(
+        (0..s)
+            .map(|i| rq::SampleProjected {
+                count: over.div_ceil(s),
+                seed: seed ^ (0x5eed + i as u64),
+            })
+            .collect(),
+    )?;
     let mut pool: Option<Mat> = None;
-    for m in cluster.gather() {
-        let part = match m {
-            Message::RespMat(p) => p,
-            other => panic!("expected RespMat, got {}", other.tag()),
-        };
+    for part in parts {
         if part.cols() == 0 {
             continue;
         }
@@ -69,7 +68,10 @@ pub fn distributed_kmeans(
             Some(acc) => acc.hcat(&part),
         });
     }
-    let pool = pool.expect("no projected samples");
+    let pool = pool.ok_or_else(|| CommError::Protocol {
+        round: "7-kmeans".into(),
+        detail: "every worker returned an empty projected sample (no data to seed centers)".into(),
+    })?;
     // greedy farthest-point from the pool (k-means++ flavoured, exact
     // distances over the small pool)
     let mut chosen = vec![rng.below(pool.cols())];
@@ -98,22 +100,17 @@ pub fn distributed_kmeans(
     let mut obj = f64::INFINITY;
     let mut iters = 0;
     for it in 0..max_iters {
-        let replies = cluster.exchange(&Message::ReqKmeansStep { centers: centers.clone() });
+        let replies = sx.broadcast(rq::KmeansStep { centers: centers.clone() })?;
         let kdim = centers.rows();
         let mut sums = Mat::zeros(kdim, centers.cols());
         let mut counts = vec![0usize; centers.cols()];
         obj = 0.0;
-        for m in replies {
-            match m {
-                Message::RespKmeans { sums: s, counts: cts, obj: o } => {
-                    sums.add_assign(&s);
-                    for (a, b) in counts.iter_mut().zip(&cts) {
-                        *a += b;
-                    }
-                    obj += o;
-                }
-                other => panic!("expected RespKmeans, got {}", other.tag()),
+        for part in replies {
+            sums.add_assign(&part.sums);
+            for (a, b) in counts.iter_mut().zip(&part.counts) {
+                *a += b;
             }
+            obj += part.obj;
         }
         for ci in 0..centers.cols() {
             if counts[ci] > 0 {
@@ -130,16 +127,9 @@ pub fn distributed_kmeans(
     }
 
     // residual term via the standard eval round
-    let residual = cluster
-        .exchange(&Message::ReqEvalError)
-        .into_iter()
-        .map(|m| match m {
-            Message::RespScalar(v) => v,
-            other => panic!("{}", other.tag()),
-        })
-        .sum();
+    let residual = sx.broadcast(rq::EvalError)?.into_iter().sum();
 
-    KmeansResult { centers, projected_obj: obj, residual, iters }
+    Ok(KmeansResult { centers, projected_obj: obj, residual, iters })
 }
 
 #[cfg(test)]
@@ -176,8 +166,8 @@ mod tests {
             kernel,
             Arc::new(NativeBackend::new()),
             move |cluster| {
-                let _sol = dis_kpca(cluster, kernel, &params);
-                distributed_kmeans(cluster, 3, 25, 31)
+                let _sol = dis_kpca(cluster, kernel, &params).unwrap();
+                distributed_kmeans(cluster, 3, 25, 31).unwrap()
             },
         );
         assert!(result.iters >= 1);
@@ -218,8 +208,8 @@ mod tests {
                 kernel,
                 Arc::new(NativeBackend::new()),
                 move |cluster| {
-                    let _ = dis_kpca(cluster, kernel, &params);
-                    distributed_kmeans(cluster, 4, iters, 77)
+                    let _ = dis_kpca(cluster, kernel, &params).unwrap();
+                    distributed_kmeans(cluster, 4, iters, 77).unwrap()
                 },
             );
             objs.push(res.projected_obj);

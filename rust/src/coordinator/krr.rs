@@ -13,7 +13,8 @@
 //! synthetic teacher tⱼ = cos(vᵀxⱼ) every worker derives from a shared
 //! seed, giving ground truth without label plumbing.
 
-use crate::comm::{Cluster, Message, PointSet};
+use crate::comm::request as rq;
+use crate::comm::{Cluster, CommError, PointSet};
 use crate::kernels::{gram, Kernel};
 use crate::linalg::{chol_psd, solve_lower, solve_upper, Mat};
 
@@ -77,10 +78,11 @@ impl KrrModel {
 ///     kernel,
 ///     Arc::new(NativeBackend::new()),
 ///     move |cluster| {
-///         let css = dis_css(cluster, kernel, &params);
+///         let css = dis_css(cluster, kernel, &params)?;
 ///         dis_krr(cluster, kernel, &css.y, 1e-3, 7)
 ///     },
 /// );
+/// let model = model.unwrap();    // a worker failure would be Err
 /// assert_eq!(model.alpha.len(), model.y.cols());
 /// assert!(model.r_squared() <= 1.0);
 /// // predict on fresh points without any further communication
@@ -93,24 +95,16 @@ pub fn dis_krr(
     y: &PointSet,
     lambda: f64,
     teacher_seed: u64,
-) -> KrrModel {
-    cluster.set_round("9-krr");
+) -> Result<KrrModel, CommError> {
+    let sx = cluster.session("9-krr");
     let ny = y.len();
     let mut g_sum = Mat::zeros(ny, ny);
     let mut b_sum = Mat::zeros(ny, 1);
     let mut tnorm_sum = 0.0;
-    for resp in cluster.exchange(&Message::ReqKrrStats {
-        pts: y.clone(),
-        teacher_seed,
-    }) {
-        match resp {
-            Message::RespKrr { g, b, tnorm } => {
-                g_sum.add_assign(&g);
-                b_sum.add_assign(&b);
-                tnorm_sum += tnorm;
-            }
-            other => panic!("expected RespKrr, got {}", other.tag()),
-        }
+    for part in sx.broadcast(rq::KrrStats { pts: y.clone(), teacher_seed })? {
+        g_sum.add_assign(&part.g);
+        b_sum.add_assign(&part.b);
+        tnorm_sum += part.tnorm;
     }
     // (G + λ K_YY) α = b, solved via Cholesky (PSD + ridge).
     let y_mat = y.to_mat();
@@ -128,30 +122,16 @@ pub fn dis_krr(
     // training-error round
     let mut alpha_mat = Mat::zeros(ny, 1);
     alpha_mat.set_col(0, &alpha);
-    let sse: f64 = cluster
-        .exchange(&Message::ReqKrrEval { alpha: alpha_mat })
-        .into_iter()
-        .map(|m| match m {
-            Message::RespScalar(v) => v,
-            other => panic!("expected RespScalar, got {}", other.tag()),
-        })
-        .sum();
-    let n: usize = cluster
-        .exchange(&Message::ReqCount)
-        .into_iter()
-        .map(|m| match m {
-            Message::RespCount(v) => v,
-            other => panic!("expected RespCount, got {}", other.tag()),
-        })
-        .sum();
+    let sse: f64 = sx.broadcast(rq::KrrEval { alpha: alpha_mat })?.into_iter().sum();
+    let n: usize = sx.broadcast(rq::Count)?.into_iter().sum();
     let nf = (n as f64).max(1.0);
-    KrrModel {
+    Ok(KrrModel {
         kernel,
         y: y_mat,
         alpha,
         train_mse: sse / nf,
         target_power: tnorm_sum / nf,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -184,8 +164,8 @@ mod tests {
             kernel,
             Arc::new(NativeBackend::new()),
             move |cluster| {
-                let css = dis_css(cluster, kernel, &p);
-                dis_krr(cluster, kernel, &css.y, 1e-3, 99)
+                let css = dis_css(cluster, kernel, &p).unwrap();
+                dis_krr(cluster, kernel, &css.y, 1e-3, 99).unwrap()
             },
         );
         // teacher cos(vᵀx) is smooth ⇒ Gaussian KRR on ~50 centers
@@ -207,8 +187,8 @@ mod tests {
             kernel,
             Arc::new(NativeBackend::new()),
             move |cluster| {
-                let css = dis_css(cluster, kernel, &p);
-                dis_krr(cluster, kernel, &css.y, 1e-3, seed)
+                let css = dis_css(cluster, kernel, &p).unwrap();
+                dis_krr(cluster, kernel, &css.y, 1e-3, seed).unwrap()
             },
         );
         // fresh points from the same distribution; teacher recomputed
@@ -242,8 +222,8 @@ mod tests {
                 kernel,
                 Arc::new(NativeBackend::new()),
                 move |cluster| {
-                    let css = dis_css(cluster, kernel, &p);
-                    dis_krr(cluster, kernel, &css.y, lambda, 5)
+                    let css = dis_css(cluster, kernel, &p).unwrap();
+                    dis_krr(cluster, kernel, &css.y, lambda, 5).unwrap()
                 },
             );
             norms.push(model.alpha.iter().map(|a| a * a).sum::<f64>().sqrt());

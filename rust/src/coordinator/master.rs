@@ -1,7 +1,15 @@
 //! Master-side protocol drivers: disLS (Alg. 1), RepSample (Alg. 2),
 //! disLR (Alg. 3) and the full disKPCA (Alg. 4).
+//!
+//! Every driver speaks the typed session API
+//! ([`crate::comm::Cluster::broadcast`] /
+//! [`crate::comm::Cluster::scatter`]) and returns
+//! `Result<_, CommError>`: a worker failure — a reported error, a
+//! hang-up, a mismatched reply — aborts the round with the worker
+//! index and round label attached instead of panicking the master.
 
-use crate::comm::{Cluster, Message, PointSet};
+use crate::comm::request as rq;
+use crate::comm::{Cluster, CommError, PointSet};
 use crate::embed::EmbedSpec;
 use crate::kernels::{gram, Kernel};
 use crate::linalg::{chol_psd, qr_r_only, solve_upper, top_k_left_singular, Mat};
@@ -9,73 +17,26 @@ use crate::rng::{multinomial, Rng};
 
 use super::{KpcaSolution, Params};
 
-/// Unwrap helpers. A [`Message::RespError`] carries a worker-side
-/// failure description — re-raise it verbatim so the master's abort
-/// names the actual worker problem instead of a bare type mismatch.
-fn scalar(m: Message) -> f64 {
-    match m {
-        Message::RespScalar(v) => v,
-        Message::RespError(e) => panic!("worker reported error: {e}"),
-        other => panic!("expected RespScalar, got {}", other.tag()),
-    }
-}
-
-fn mat(m: Message) -> Mat {
-    match m {
-        Message::RespMat(v) => v,
-        Message::RespError(e) => panic!("worker reported error: {e}"),
-        other => panic!("expected RespMat, got {}", other.tag()),
-    }
-}
-
-fn points(m: Message) -> PointSet {
-    match m {
-        Message::RespPoints(v) => v,
-        Message::RespError(e) => panic!("worker reported error: {e}"),
-        other => panic!("expected RespPoints, got {}", other.tag()),
-    }
-}
-
-pub(super) fn count(m: Message) -> usize {
-    match m {
-        Message::RespCount(v) => v,
-        Message::RespError(e) => panic!("worker reported error: {e}"),
-        other => panic!("expected RespCount, got {}", other.tag()),
-    }
-}
-
-fn ack(m: Message) {
-    match m {
-        Message::Ack => {}
-        Message::RespError(e) => panic!("worker reported error: {e}"),
-        other => panic!("expected Ack, got {}", other.tag()),
-    }
-}
-
 /// Alg. 4 step 1: broadcast the shared embedding spec; workers build
 /// E^i = S(φ(Aⁱ)) locally.
-pub fn dis_embed(cluster: &Cluster, spec: EmbedSpec) {
-    cluster.set_round("1-embed");
-    for reply in cluster.exchange(&Message::ReqEmbed { spec }) {
-        ack(reply);
-    }
+pub fn dis_embed(cluster: &Cluster, spec: EmbedSpec) -> Result<(), CommError> {
+    cluster.session("1-embed").broadcast(rq::Embed { spec })?;
+    Ok(())
 }
 
 /// Alg. 1 (disLS): returns per-worker leverage-score masses. Workers
 /// hold their individual scores; the master only ever sees the t×p
 /// sketches, the t×t factor Z, and one scalar per worker.
-pub fn dis_leverage_scores(cluster: &Cluster, params: &Params) -> Vec<f64> {
-    cluster.set_round("2-disLS");
-    let s = cluster.num_workers();
+pub fn dis_leverage_scores(cluster: &Cluster, params: &Params) -> Result<Vec<f64>, CommError> {
+    let sx = cluster.session("2-disLS");
+    let s = sx.num_workers();
     // step 1: per-worker right-sketch E^i T^i (distinct seeds ⇒ the
     // block-diagonal T of Lemma 6).
-    for i in 0..s {
-        cluster.send(
-            i,
-            Message::ReqSketchEmbed { p: params.p, seed: params.seed ^ (0x515 + i as u64) },
-        );
-    }
-    let sketches: Vec<Mat> = cluster.gather().into_iter().map(mat).collect();
+    let sketches: Vec<Mat> = sx.scatter(
+        (0..s)
+            .map(|i| rq::SketchEmbed { p: params.p, seed: params.seed ^ (0x515 + i as u64) })
+            .collect(),
+    )?;
     // step 2: QR-factorize [E¹T¹, …, EˢTˢ]ᵀ = U·Z, broadcast Z. The
     // per-worker transposes are independent — fan them out on the pool.
     let transposed: Vec<Mat> = crate::par::par_join(
@@ -83,11 +44,7 @@ pub fn dis_leverage_scores(cluster: &Cluster, params: &Params) -> Vec<f64> {
     );
     let z = qr_r_only(&Mat::vcat_all(&transposed));
     // step 3: workers compute ℓ̃ⱼ = ‖((Zᵀ)⁻¹Eⁱ)_{:j}‖², reply masses.
-    cluster
-        .exchange(&Message::ReqScores { z })
-        .into_iter()
-        .map(scalar)
-        .collect()
+    sx.broadcast(rq::Scores { z })
 }
 
 /// Alg. 1 with an ε-accurate sketch (§5.2 closing remark): an
@@ -97,7 +54,11 @@ pub fn dis_leverage_scores(cluster: &Cluster, params: &Params) -> Vec<f64> {
 /// per-worker totals as [`dis_leverage_scores`], and the full vectors
 /// can be pulled with [`dis_leverage_vectors`] (an O(n)-word offline
 /// API, not part of the disKPCA budget).
-pub fn dis_leverage_scores_eps(cluster: &Cluster, params: &Params, eps: f64) -> Vec<f64> {
+pub fn dis_leverage_scores_eps(
+    cluster: &Cluster,
+    params: &Params,
+    eps: f64,
+) -> Result<Vec<f64>, CommError> {
     assert!(eps > 0.0 && eps <= 1.0);
     let p_eps = leverage_sketch_width(params.t, eps);
     let boosted = Params { p: p_eps.max(params.p), ..*params };
@@ -116,16 +77,13 @@ pub fn leverage_sketch_width(t: usize, eps: f64) -> usize {
 /// Pull the full per-point leverage-score vectors from every worker
 /// (order: worker 0's points, worker 1's, …). O(n) words — offline
 /// validation/debug API, never used by disKPCA itself.
-pub fn dis_leverage_vectors(cluster: &Cluster) -> Vec<Vec<f64>> {
-    cluster.set_round("offline-scores");
-    cluster
-        .exchange(&Message::ReqScoresVec)
+pub fn dis_leverage_vectors(cluster: &Cluster) -> Result<Vec<Vec<f64>>, CommError> {
+    Ok(cluster
+        .session("offline-scores")
+        .broadcast(rq::ScoresVec)?
         .into_iter()
-        .map(|m| {
-            let v = mat(m);
-            v.row(0).to_vec()
-        })
-        .collect()
+        .map(|v| v.row(0).to_vec())
+        .collect())
 }
 
 /// Which parts of RepSample to run — the DESIGN.md ablation axis.
@@ -144,7 +102,11 @@ pub enum SamplingMode {
 /// Alg. 2 (RepSample): leverage sampling + adaptive sampling.
 /// Returns the representative set Y (dense d×|Y|) — already known to
 /// every worker because the requests carried it.
-pub fn rep_sample(cluster: &Cluster, params: &Params, masses: &[f64]) -> PointSet {
+pub fn rep_sample(
+    cluster: &Cluster,
+    params: &Params,
+    masses: &[f64],
+) -> Result<PointSet, CommError> {
     rep_sample_mode(cluster, params, masses, SamplingMode::Full)
 }
 
@@ -154,7 +116,7 @@ pub fn rep_sample_mode(
     params: &Params,
     masses: &[f64],
     mode: SamplingMode,
-) -> PointSet {
+) -> Result<PointSet, CommError> {
     match mode {
         SamplingMode::Full => rep_sample_impl(cluster, params, masses, params.n_lev, true),
         SamplingMode::LeverageOnly => {
@@ -166,7 +128,7 @@ pub fn rep_sample_mode(
                 cluster,
                 params.n_lev,
                 params.seed ^ 0xab1a,
-            );
+            )?;
             adaptive_stage(cluster, params, p_set)
         }
     }
@@ -178,44 +140,51 @@ fn rep_sample_impl(
     masses: &[f64],
     n_lev: usize,
     adaptive: bool,
-) -> PointSet {
+) -> Result<PointSet, CommError> {
     let mut rng = Rng::seed_from(params.seed ^ 0x5a3);
     // ---- step 1: leverage-weighted sample of O(k log k) points ----
-    cluster.set_round("3-levSample");
+    let sx = cluster.session("3-levSample");
     let alloc = multinomial(&mut rng, masses, n_lev);
-    for (i, &c) in alloc.iter().enumerate() {
-        cluster.send(
-            i,
-            Message::ReqSampleLeverage { count: c, seed: params.seed ^ (0x1e7 + i as u64) },
-        );
-    }
-    let parts: Vec<PointSet> = cluster.gather().into_iter().map(points).collect();
+    let parts: Vec<PointSet> = sx.scatter(
+        alloc
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| rq::SampleLeverage {
+                count: c,
+                seed: params.seed ^ (0x1e7 + i as u64),
+            })
+            .collect(),
+    )?;
     let p_set = PointSet::concat(&parts);
     if !adaptive {
-        return p_set;
+        return Ok(p_set);
     }
     adaptive_stage(cluster, params, p_set)
 }
 
 /// Steps 2–3 of Alg. 2: broadcast P, sample ∝ residual distance².
-fn adaptive_stage(cluster: &Cluster, params: &Params, p_set: PointSet) -> PointSet {
+fn adaptive_stage(
+    cluster: &Cluster,
+    params: &Params,
+    p_set: PointSet,
+) -> Result<PointSet, CommError> {
     let mut rng = Rng::seed_from(params.seed ^ 0xa5a3);
-    cluster.set_round("4-adaptive");
-    let res_masses: Vec<f64> = cluster
-        .exchange(&Message::ReqResiduals { pts: p_set.clone() })
-        .into_iter()
-        .map(scalar)
-        .collect();
+    let sx = cluster.session("4-adaptive");
+    let res_masses: Vec<f64> = sx.broadcast(rq::Residuals { pts: p_set.clone() })?;
     let alloc = multinomial(&mut rng, &res_masses, params.n_adapt);
-    for (i, &c) in alloc.iter().enumerate() {
-        cluster.send(
-            i,
-            Message::ReqSampleAdaptive { count: c, seed: params.seed ^ (0xada + i as u64) },
-        );
-    }
+    let extra: Vec<PointSet> = sx.scatter(
+        alloc
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| rq::SampleAdaptive {
+                count: c,
+                seed: params.seed ^ (0xada + i as u64),
+            })
+            .collect(),
+    )?;
     let mut all = vec![p_set];
-    all.extend(cluster.gather().into_iter().map(points).filter(|p| !p.is_empty()));
-    PointSet::concat(&all)
+    all.extend(extra.into_iter().filter(|p| !p.is_empty()));
+    Ok(PointSet::concat(&all))
 }
 
 /// Alg. 3 (disLR): compute the best rank-k approximation in span φ(Y).
@@ -225,8 +194,8 @@ pub fn dis_low_rank(
     kernel: Kernel,
     params: &Params,
     y: &PointSet,
-) -> KpcaSolution {
-    cluster.set_round("5-disLR");
+) -> Result<KpcaSolution, CommError> {
+    let sx = cluster.session("5-disLR");
     let timing = std::env::var_os("DISKPCA_TIMING").is_some();
     let mut stamp = std::time::Instant::now();
     let mut lap = |label: &str| {
@@ -235,20 +204,18 @@ pub fn dis_low_rank(
         }
         stamp = std::time::Instant::now();
     };
-    let s = cluster.num_workers();
+    let s = sx.num_workers();
     let w_cols = if params.w == 0 { y.len() } else { params.w };
     // step 1: workers project + right-sketch.
-    for i in 0..s {
-        cluster.send(
-            i,
-            Message::ReqProjectSketch {
+    let sketches: Vec<Mat> = sx.scatter(
+        (0..s)
+            .map(|i| rq::ProjectSketch {
                 pts: y.clone(),
                 w: w_cols,
                 seed: params.seed ^ (0xd15 + i as u64),
-            },
-        );
-    }
-    let sketches: Vec<Mat> = cluster.gather().into_iter().map(mat).collect();
+            })
+            .collect(),
+    )?;
     lap("project");
     // step 2: concatenate ΠT = [Π¹T¹ … ΠˢTˢ]; top-k left vectors W.
     let pit = Mat::hcat_all(&sketches);
@@ -256,9 +223,7 @@ pub fn dis_low_rank(
     let (w_mat, _sv) = top_k_left_singular(&pit, k);
     lap("svd");
     // step 3: broadcast W; workers cache LᵀΦ(Aⁱ) = WᵀΠⁱ.
-    for reply in cluster.exchange(&Message::ReqFinal { coeffs: w_mat.clone() }) {
-        ack(reply);
-    }
+    sx.broadcast(rq::Final { coeffs: w_mat.clone() })?;
     lap("final");
     // Master-side coefficients C = R⁻¹W so that L = φ(Y)·C.
     let y_mat = y.to_mat();
@@ -269,7 +234,7 @@ pub fn dis_low_rank(
         coeffs.set_col(j, &solve_upper(&r, &w_mat.col(j)));
     }
     lap("coeffs");
-    KpcaSolution { kernel, y: y_mat, coeffs }
+    Ok(KpcaSolution { kernel, y: y_mat, coeffs })
 }
 
 /// Alg. 4 (disKPCA): the paper's headline algorithm.
@@ -298,11 +263,16 @@ pub fn dis_low_rank(
 ///     Arc::new(NativeBackend::new()),
 ///     move |cluster| dis_kpca(cluster, kernel, &params),
 /// );
+/// let sol = sol.unwrap();               // a worker failure would be Err
 /// assert_eq!(sol.k(), 2);                // k components, as (Y, C)
 /// assert!(sol.num_points() >= 1);        // |Y| sampled representatives
 /// assert!(stats.total_words() > 0);      // every round was accounted
 /// ```
-pub fn dis_kpca(cluster: &Cluster, kernel: Kernel, params: &Params) -> KpcaSolution {
+pub fn dis_kpca(
+    cluster: &Cluster,
+    kernel: Kernel,
+    params: &Params,
+) -> Result<KpcaSolution, CommError> {
     dis_kpca_mode(cluster, kernel, params, SamplingMode::Full)
 }
 
@@ -315,7 +285,7 @@ pub fn dis_kpca_mode(
     kernel: Kernel,
     params: &Params,
     mode: SamplingMode,
-) -> KpcaSolution {
+) -> Result<KpcaSolution, CommError> {
     params.apply_threads();
     let timing = std::env::var_os("DISKPCA_TIMING").is_some();
     let mut stamp = std::time::Instant::now();
@@ -334,57 +304,41 @@ pub fn dis_kpca_mode(
     };
     let y = if mode == SamplingMode::AdaptiveOnly {
         // no embedding/leverage rounds at all in this ablation
-        rep_sample_mode(cluster, params, &[], mode)
+        rep_sample_mode(cluster, params, &[], mode)?
     } else {
-        dis_embed(cluster, spec);
+        dis_embed(cluster, spec)?;
         lap("embed");
-        let masses = dis_leverage_scores(cluster, params);
+        let masses = dis_leverage_scores(cluster, params)?;
         lap("disLS");
-        rep_sample_mode(cluster, params, &masses, mode)
+        rep_sample_mode(cluster, params, &masses, mode)?
     };
     lap("repSample");
-    let sol = dis_low_rank(cluster, kernel, params, &y);
+    let sol = dis_low_rank(cluster, kernel, params, &y)?;
     lap("disLR");
-    sol
+    Ok(sol)
 }
 
 /// Distributed evaluation: (‖φ(A) − LLᵀφ(A)‖², tr K) for the solution
 /// currently installed on the workers.
-pub fn dis_eval(cluster: &Cluster) -> (f64, f64) {
-    cluster.set_round("6-eval");
-    let err = cluster
-        .exchange(&Message::ReqEvalError)
-        .into_iter()
-        .map(scalar)
-        .sum();
-    let trace = cluster
-        .exchange(&Message::ReqEvalTrace)
-        .into_iter()
-        .map(scalar)
-        .sum();
-    (err, trace)
+pub fn dis_eval(cluster: &Cluster) -> Result<(f64, f64), CommError> {
+    let sx = cluster.session("6-eval");
+    let err = sx.broadcast(rq::EvalError)?.into_iter().sum();
+    let trace = sx.broadcast(rq::EvalTrace)?.into_iter().sum();
+    Ok((err, trace))
 }
 
 /// Per-worker cumulative compute seconds (Fig-7 critical path: on a
 /// single-core testbed, `max` over workers simulates the parallel
 /// runtime an s-machine cluster would see).
-pub fn dis_busy_times(cluster: &Cluster) -> Vec<f64> {
-    cluster.set_round("8-stats");
-    cluster
-        .exchange(&Message::ReqBusyTime)
-        .into_iter()
-        .map(scalar)
-        .collect()
+pub fn dis_busy_times(cluster: &Cluster) -> Result<Vec<f64>, CommError> {
+    cluster.session("8-stats").broadcast(rq::BusyTime)
 }
 
 /// Install an externally computed solution (baselines) on all workers.
-pub fn dis_set_solution(cluster: &Cluster, sol: &KpcaSolution) {
-    cluster.set_round("5-setSolution");
-    let msg = Message::ReqSetSolution {
+pub fn dis_set_solution(cluster: &Cluster, sol: &KpcaSolution) -> Result<(), CommError> {
+    cluster.session("5-setSolution").broadcast(rq::SetSolution {
         pts: PointSet::Dense(sol.y.clone()),
         coeffs: sol.coeffs.clone(),
-    };
-    for reply in cluster.exchange(&msg) {
-        ack(reply);
-    }
+    })?;
+    Ok(())
 }

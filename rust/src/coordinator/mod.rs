@@ -6,6 +6,11 @@
 //! - [`baselines`] — uniform+disLR, uniform+batch-KPCA, batch KPCA
 //! - [`kmeans`] — distributed k-means / spectral clustering (§6.6)
 //! - [`run_cluster`] — spawn worker threads + run a master closure
+//!
+//! Every `dis_*` entry point returns
+//! `Result<_, `[`crate::comm::CommError`]`>`: a worker failure aborts
+//! the round with the worker index and round label attached, and the
+//! cluster's drop guard releases the remaining workers.
 
 pub mod baselines;
 pub mod boost;
@@ -144,11 +149,11 @@ impl KpcaSolution {
 /// plus the communication stats.
 ///
 /// The master drivers fan every round out with non-blocking sends
-/// before gathering replies ([`crate::comm::Cluster::exchange`]), so
-/// all `s` workers execute their local phase concurrently; inside
-/// each phase the heavy math additionally runs on the shared
-/// [`crate::par`] pool. Round word counts are independent of both
-/// kinds of parallelism.
+/// before gathering replies ([`crate::comm::Cluster::broadcast`] /
+/// [`crate::comm::Cluster::scatter`]), so all `s` workers execute
+/// their local phase concurrently; inside each phase the heavy math
+/// additionally runs on the shared [`crate::par`] pool. Round word
+/// counts are independent of both kinds of parallelism.
 pub fn run_cluster<T: Send + 'static>(
     shards: Vec<Data>,
     kernel: Kernel,
@@ -170,10 +175,9 @@ pub fn run_cluster_chunked<T: Send + 'static>(
     chunk_rows: usize,
     body: impl FnOnce(&Cluster) -> T,
 ) -> (T, CommStats) {
-    let s = shards.len();
-    let (links, endpoints) = memory::star(s);
+    let (star, endpoints) = memory::star(shards.len());
     let stats = CommStats::new();
-    let cluster = Cluster::new(links, stats.clone());
+    let cluster = Cluster::new(star, stats.clone());
     let handles: Vec<_> = shards
         .into_iter()
         .zip(endpoints)
@@ -229,8 +233,8 @@ mod tests {
             kernel,
             Arc::new(NativeBackend::new()),
             move |cluster| {
-                let sol = dis_kpca(cluster, kernel, &params);
-                let (err, trace) = dis_eval(cluster);
+                let sol = dis_kpca(cluster, kernel, &params).unwrap();
+                let (err, trace) = dis_eval(cluster).unwrap();
                 (sol, err, trace)
             },
         );
@@ -263,8 +267,8 @@ mod tests {
             kernel,
             Arc::new(NativeBackend::new()),
             move |cluster| {
-                let _sol = dis_kpca(cluster, kernel, &params);
-                dis_eval(cluster)
+                let _sol = dis_kpca(cluster, kernel, &params).unwrap();
+                dis_eval(cluster).unwrap()
             },
         );
         assert!(err >= 0.0 && err < trace, "err {err} trace {trace}");
@@ -283,8 +287,8 @@ mod tests {
             kernel,
             Arc::new(NativeBackend::new()),
             move |cluster| {
-                let _ = dis_kpca(cluster, kernel, &params);
-                dis_eval(cluster)
+                let _ = dis_kpca(cluster, kernel, &params).unwrap();
+                dis_eval(cluster).unwrap()
             },
         );
         assert!(err >= -1e-6 && err < trace);
@@ -306,8 +310,8 @@ mod tests {
             kernel,
             Arc::new(NativeBackend::new()),
             move |cluster| {
-                let _sol = dis_kpca(cluster, kernel, &params);
-                dis_eval(cluster)
+                let _sol = dis_kpca(cluster, kernel, &params).unwrap();
+                dis_eval(cluster).unwrap()
             },
         );
         assert!(err >= 0.0 && err < trace, "err {err} trace {trace}");
@@ -337,9 +341,9 @@ mod tests {
                     t: params.t,
                     seed: params.seed ^ 0xeb3d,
                 };
-                dis_embed(cluster, spec);
-                let _ = master::dis_leverage_scores_eps(cluster, &params, eps);
-                master::dis_leverage_vectors(cluster)
+                dis_embed(cluster, spec).unwrap();
+                let _ = master::dis_leverage_scores_eps(cluster, &params, eps).unwrap();
+                master::dis_leverage_vectors(cluster).unwrap()
             },
         );
         // exact scores of E = [E¹ … Eˢ], rebuilt locally
@@ -381,8 +385,8 @@ mod tests {
                 kernel,
                 Arc::new(NativeBackend::new()),
                 move |cluster| {
-                    let _ = dis_kpca(cluster, kernel, &params);
-                    dis_eval(cluster)
+                    let _ = dis_kpca(cluster, kernel, &params).unwrap();
+                    dis_eval(cluster).unwrap()
                 },
             );
             errs.push(err);
@@ -400,7 +404,7 @@ mod tests {
             shards,
             kernel,
             Arc::new(NativeBackend::new()),
-            move |cluster| dis_kpca(cluster, kernel, &params),
+            move |cluster| dis_kpca(cluster, kernel, &params).unwrap(),
         );
         // LᵀL = Cᵀ K(Y,Y) C must be ≈ I
         let kyy = crate::kernels::gram(kernel, &sol.y, &Data::Dense(sol.y.clone()));
@@ -422,8 +426,8 @@ mod tests {
             Arc::new(NativeBackend::new()),
             move |cluster| {
                 assert_eq!(cluster.num_workers(), 1);
-                let _ = dis_kpca(cluster, kernel, &params);
-                dis_eval(cluster)
+                let _ = dis_kpca(cluster, kernel, &params).unwrap();
+                dis_eval(cluster).unwrap()
             },
         );
         assert!(err >= 0.0 && err < trace);
@@ -439,7 +443,7 @@ mod tests {
             vec![data.slice_cols(0, 45), data.slice_cols(45, 90)],
             kernel,
             Arc::new(NativeBackend::new()),
-            move |cluster| dis_kpca(cluster, kernel, &params),
+            move |cluster| dis_kpca(cluster, kernel, &params).unwrap(),
         );
         assert_eq!(sol.k(), 1);
     }
@@ -457,8 +461,8 @@ mod tests {
             kernel,
             Arc::new(NativeBackend::new()),
             move |cluster| {
-                let _ = dis_kpca(cluster, kernel, &params);
-                dis_eval(cluster)
+                let _ = dis_kpca(cluster, kernel, &params).unwrap();
+                dis_eval(cluster).unwrap()
             },
         );
         // 12 points, |Y| can cover everything ⇒ tiny error
@@ -482,8 +486,8 @@ mod tests {
                 kernel,
                 Arc::new(NativeBackend::new()),
                 move |cluster| {
-                    let _ = super::dis_kpca_mode(cluster, kernel, &params, mode);
-                    dis_eval(cluster)
+                    let _ = super::dis_kpca_mode(cluster, kernel, &params, mode).unwrap();
+                    dis_eval(cluster).unwrap()
                 },
             );
             assert!(err >= 0.0 && err <= trace);
@@ -504,7 +508,7 @@ mod tests {
                 shards,
                 kernel,
                 Arc::new(NativeBackend::new()),
-                move |cluster| dis_kpca(cluster, kernel, &params),
+                move |cluster| dis_kpca(cluster, kernel, &params).unwrap(),
             );
             sols.push(sol);
         }

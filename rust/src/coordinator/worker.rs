@@ -6,6 +6,19 @@
 //! its projected coordinates). All heavy math is dispatched through
 //! the [`Backend`] so the same worker runs native or XLA.
 //!
+//! # Handler registration
+//!
+//! Each protocol request registers exactly one handler: an
+//! `impl Handle<R> for Worker` (the typed trait from
+//! [`crate::comm::request`]), whose return type is pinned to the
+//! request's response type — a handler replying with the wrong
+//! variant is a compile error. The resident and the streaming
+//! execution paths live *inside* each handler (one
+//! `if self.streaming()` branch), so the two paths share a single
+//! registration point and cannot drift apart. [`Worker::handle`]
+//! lowers an incoming [`Message`] to its typed request and wraps the
+//! typed response back into the wire message.
+//!
 //! # Resident vs streaming execution
 //!
 //! With `chunk_rows == 0` over an in-memory shard the worker runs the
@@ -35,7 +48,8 @@
 
 use std::sync::Arc;
 
-use crate::comm::Message;
+use crate::comm::request as rq;
+use crate::comm::{Handle, KmeansPart, KrrPart, Message, PointSet, Request};
 use crate::data::{Data, ShardSource};
 use crate::embed::EmbedSpec;
 use crate::kernels::{diag as kernel_diag, Kernel};
@@ -169,14 +183,23 @@ impl Worker {
         self.source.resident().expect("resident path requires an in-memory shard")
     }
 
-    /// Serve requests until `Quit` — works over any transport.
+    /// Serve requests until `Quit` — works over any transport. A lost
+    /// master ends the loop cleanly (the transport surfaced it as an
+    /// `Err`); the multi-process launcher runs its own loop to attach
+    /// richer context before exiting.
     pub fn run(mut self, mut endpoint: impl crate::comm::Endpoint) {
         loop {
-            let req = endpoint.recv_req();
+            let req = match endpoint.recv_req() {
+                Ok(req) => req,
+                Err(_) => return, // master hung up: stop serving
+            };
             if matches!(req, Message::Quit) {
-                break;
+                return;
             }
-            endpoint.send_resp(self.handle(req));
+            let resp = self.handle(req);
+            if endpoint.send_resp(resp).is_err() {
+                return; // master hung up mid-reply
+            }
         }
     }
 
@@ -205,341 +228,54 @@ impl Worker {
         resp
     }
 
+    /// Run the registered [`Handle`] impl for a typed request and wrap
+    /// its (type-checked) response for the wire.
+    fn respond<R: Request>(&mut self, req: R) -> Message
+    where
+        Worker: Handle<R>,
+    {
+        R::encode_response(self.handle_req(req))
+    }
+
+    /// Lower the wire message to its typed request — the single
+    /// registration point shared by the resident and streaming paths
+    /// (each handler branches internally).
     fn dispatch(&mut self, req: Message) -> Message {
         match req {
-            // ---- path-independent requests ----
-            Message::ReqCount => Message::RespCount(self.source.len()),
-            Message::ReqBusyTime => Message::RespScalar(self.busy.as_secs_f64()),
-            Message::ReqScoresVec => {
-                let scores = self.scores.as_ref().expect("ReqScores first");
-                let mut m = Mat::zeros(1, scores.len());
-                for (j, &v) in scores.iter().enumerate() {
-                    m[(0, j)] = v;
-                }
-                Message::RespMat(m)
-            }
+            Message::ReqEmbed { spec } => self.respond(rq::Embed { spec }),
+            Message::ReqSketchEmbed { p, seed } => self.respond(rq::SketchEmbed { p, seed }),
+            Message::ReqScores { z } => self.respond(rq::Scores { z }),
             Message::ReqSampleLeverage { count, seed } => {
-                let scores = self.scores.clone().expect("ReqScores first");
-                self.sample_weighted(&scores, count, seed)
+                self.respond(rq::SampleLeverage { count, seed })
             }
+            Message::ReqResiduals { pts } => self.respond(rq::Residuals { pts }),
             Message::ReqSampleAdaptive { count, seed } => {
-                let res = self.residuals.clone().expect("ReqResiduals first");
-                self.sample_weighted(&res, count, seed)
+                self.respond(rq::SampleAdaptive { count, seed })
             }
+            Message::ReqProjectSketch { pts, w, seed } => {
+                self.respond(rq::ProjectSketch { pts, w, seed })
+            }
+            Message::ReqFinal { coeffs } => self.respond(rq::Final { coeffs }),
+            Message::ReqSetSolution { pts, coeffs } => {
+                self.respond(rq::SetSolution { pts, coeffs })
+            }
+            Message::ReqSampleProjected { count, seed } => {
+                self.respond(rq::SampleProjected { count, seed })
+            }
+            Message::ReqEvalError => self.respond(rq::EvalError),
+            Message::ReqEvalTrace => self.respond(rq::EvalTrace),
             Message::ReqSampleUniform { count, seed } => {
-                let n = self.source.len();
-                let mut rng = Rng::seed_from(seed);
-                let idx: Vec<usize> = if count >= n {
-                    (0..n).collect()
-                } else {
-                    rng.sample_without_replacement(n, count)
-                };
-                Message::RespPoints(self.source.point_set(&idx))
+                self.respond(rq::SampleUniform { count, seed })
             }
+            Message::ReqKmeansStep { centers } => self.respond(rq::KmeansStep { centers }),
+            Message::ReqScoresVec => self.respond(rq::ScoresVec),
+            Message::ReqKrrStats { pts, teacher_seed } => {
+                self.respond(rq::KrrStats { pts, teacher_seed })
+            }
+            Message::ReqKrrEval { alpha } => self.respond(rq::KrrEval { alpha }),
+            Message::ReqCount => self.respond(rq::Count),
+            Message::ReqBusyTime => self.respond(rq::BusyTime),
             Message::Quit => Message::Ack,
-            // ---- per-point passes: resident or streamed ----
-            other if self.streaming() => self.dispatch_streaming(other),
-            other => self.dispatch_resident(other),
-        }
-    }
-
-    /// The historical path: full intermediates cached in memory.
-    fn dispatch_resident(&mut self, req: Message) -> Message {
-        match req {
-            Message::ReqEmbed { spec } => {
-                self.embedded = Some(self.backend.embed(&spec, self.shard()));
-                Message::Ack
-            }
-            Message::ReqSketchEmbed { p, seed } => {
-                let e = self.embedded.as_ref().expect("ReqEmbed first");
-                let mut rng = Rng::seed_from(seed);
-                let cs = CountSketch::new(e.cols(), p, &mut rng);
-                Message::RespMat(cs.apply_point_axis(e))
-            }
-            Message::ReqScores { z } => {
-                let e = self.embedded.as_ref().expect("ReqEmbed first");
-                let scores = self.backend.leverage_norms(&z, e);
-                let total = scores.iter().sum();
-                self.scores = Some(scores);
-                Message::RespScalar(total)
-            }
-            Message::ReqKrrStats { pts, teacher_seed } => {
-                let y = pts.to_mat();
-                let k_ya = self.backend.gram(self.kernel, &y, self.shard());
-                let v = teacher_vector(self.source.dim(), teacher_seed);
-                let targets = teacher_targets_chunk(self.shard(), &v);
-                // g = K_YA·K_AY (|Y|×|Y|), b = K_YA·t (|Y|×1)
-                let g = k_ya.matmul_a_bt(&k_ya);
-                let mut b = Mat::zeros(y.cols(), 1);
-                for i in 0..y.cols() {
-                    let row = k_ya.row(i);
-                    b[(i, 0)] = row.iter().zip(&targets).map(|(&k, &t)| k * t).sum();
-                }
-                let tnorm = targets.iter().map(|&t| t * t).sum();
-                self.krr = Some(KrrState::Resident { k_ya, targets });
-                Message::RespKrr { g, b, tnorm }
-            }
-            Message::ReqKrrEval { alpha } => {
-                let (k_ya, targets) = match self.krr.as_ref().expect("ReqKrrStats first") {
-                    KrrState::Resident { k_ya, targets } => (k_ya, targets),
-                    KrrState::Streamed { .. } => {
-                        unreachable!("streamed KRR state on the resident path")
-                    }
-                };
-                // pred = αᵀ·K_YA (1×nᵢ)
-                let pred = alpha.matmul_at_b(k_ya);
-                let err: f64 = (0..targets.len())
-                    .map(|j| {
-                        let e = pred[(0, j)] - targets[j];
-                        e * e
-                    })
-                    .sum();
-                Message::RespScalar(err)
-            }
-            Message::ReqResiduals { pts } => {
-                let res = self.compute_residuals(&pts.to_mat());
-                let total = res.iter().sum();
-                self.residuals = Some(res);
-                Message::RespScalar(total)
-            }
-            Message::ReqProjectSketch { pts, w, seed } => {
-                let y = pts.to_mat();
-                let pi = self.project(&y).0;
-                let mut rng = Rng::seed_from(seed);
-                let cs = CountSketch::new(pi.cols(), w, &mut rng);
-                let sketched = cs.apply_point_axis(&pi);
-                self.pi = Some(pi);
-                Message::RespMat(sketched)
-            }
-            Message::ReqFinal { coeffs } => {
-                // L = Q·W ⇒ Lᵀφ(A) = Wᵀ·Π (Π cached from ReqProjectSketch)
-                let pi = self.pi.as_ref().expect("ReqProjectSketch first");
-                self.projected = Some(coeffs.matmul_at_b(pi));
-                Message::Ack
-            }
-            Message::ReqSetSolution { pts, coeffs } => {
-                // L = φ(Y)·C ⇒ Lᵀφ(A) = Cᵀ·K(Y, A)
-                let y = pts.to_mat();
-                let k_ya = self.backend.gram(self.kernel, &y, self.shard());
-                self.projected = Some(coeffs.matmul_at_b(&k_ya));
-                Message::Ack
-            }
-            Message::ReqEvalError => {
-                let proj = self.projected.as_ref().expect("no solution installed");
-                let diag = kernel_diag(self.kernel, self.shard());
-                let norms = proj.col_norms_sq();
-                let err: f64 = diag
-                    .iter()
-                    .zip(&norms)
-                    .map(|(&d, &n)| (d - n).max(0.0))
-                    .sum();
-                Message::RespScalar(err)
-            }
-            Message::ReqEvalTrace => {
-                Message::RespScalar(crate::kernels::diag_sum(self.kernel, self.shard()))
-            }
-            Message::ReqSampleProjected { count, seed } => {
-                let proj = self.projected.as_ref().expect("no solution installed");
-                let n = proj.cols();
-                let mut rng = Rng::seed_from(seed);
-                let idx: Vec<usize> = (0..count.min(n)).map(|_| rng.below(n)).collect();
-                Message::RespMat(proj.select_cols(&idx))
-            }
-            Message::ReqKmeansStep { centers } => {
-                let proj = self.projected.as_ref().expect("no solution installed");
-                let (kdim, c) = (centers.rows(), centers.cols());
-                assert_eq!(proj.rows(), kdim);
-                let mut sums = Mat::zeros(kdim, c);
-                let mut counts = vec![0usize; c];
-                let mut obj = 0.0;
-                kmeans_fold(proj, &centers, &mut sums, &mut counts, &mut obj);
-                Message::RespKmeans { sums, counts, obj }
-            }
-            other => panic!("worker got unexpected {other:?}"),
-        }
-    }
-
-    /// The out-of-core path: every per-point pass folds over ascending
-    /// column chunks. See the module docs for the bit-identity
-    /// argument; every arm mirrors its resident twin's per-column
-    /// operations and fold order exactly.
-    fn dispatch_streaming(&mut self, req: Message) -> Message {
-        match req {
-            Message::ReqEmbed { spec } => {
-                // Only the spec is cached; the embedding is recomputed
-                // chunk-by-chunk through the backend on demand and
-                // never materialized whole. Tables re-derive from the
-                // spec's seed, so per-chunk columns equal the resident
-                // embedding's columns.
-                self.embed_spec = Some(spec);
-                Message::Ack
-            }
-            Message::ReqSketchEmbed { p, seed } => {
-                let spec = self.embed_spec.as_ref().expect("ReqEmbed first");
-                let backend = &self.backend;
-                let mut rng = Rng::seed_from(seed);
-                let cs = CountSketch::new(self.source.len(), p, &mut rng);
-                let mut out = Mat::zeros(spec.t, p);
-                self.source.for_each_chunk(self.chunk_rows, |j0, chunk| {
-                    cs.accumulate_point_axis(&backend.embed(spec, chunk), j0, &mut out);
-                });
-                Message::RespMat(out)
-            }
-            Message::ReqScores { z } => {
-                let spec = self.embed_spec.as_ref().expect("ReqEmbed first");
-                let backend = &self.backend;
-                let mut scores = Vec::with_capacity(self.source.len());
-                self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
-                    scores.extend(backend.leverage_norms(&z, &backend.embed(spec, chunk)));
-                });
-                let total = scores.iter().sum();
-                self.scores = Some(scores);
-                Message::RespScalar(total)
-            }
-            Message::ReqResiduals { pts } => {
-                let y = pts.to_mat();
-                let r = self.chol_basis(&y);
-                let backend = &self.backend;
-                let kernel = self.kernel;
-                let mut res = Vec::with_capacity(self.source.len());
-                self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
-                    let k_ya = backend.gram(kernel, &y, chunk);
-                    let diag = kernel_diag(kernel, chunk);
-                    res.extend(backend.project_residual(&r, &k_ya, &diag).1);
-                });
-                let total = res.iter().sum();
-                self.residuals = Some(res);
-                Message::RespScalar(total)
-            }
-            Message::ReqProjectSketch { pts, w, seed } => {
-                let y = pts.to_mat();
-                let r = self.chol_basis(&y);
-                let mut rng = Rng::seed_from(seed);
-                let cs = CountSketch::new(self.source.len(), w, &mut rng);
-                let mut out = Mat::zeros(y.cols(), w);
-                {
-                    let backend = &self.backend;
-                    let kernel = self.kernel;
-                    self.source.for_each_chunk(self.chunk_rows, |j0, chunk| {
-                        let k_ya = backend.gram(kernel, &y, chunk);
-                        let diag = kernel_diag(kernel, chunk);
-                        let (pi, _) = backend.project_residual(&r, &k_ya, &diag);
-                        cs.accumulate_point_axis(&pi, j0, &mut out);
-                    });
-                }
-                self.stream_basis = Some((y, r));
-                Message::RespMat(out)
-            }
-            Message::ReqFinal { coeffs } => {
-                let (y, r) = self.stream_basis.clone().expect("ReqProjectSketch first");
-                self.stream_solution = Some(StreamSolution::Factored { y, r_upper: r, coeffs });
-                Message::Ack
-            }
-            Message::ReqSetSolution { pts, coeffs } => {
-                self.stream_solution = Some(StreamSolution::Direct { y: pts.to_mat(), coeffs });
-                Message::Ack
-            }
-            Message::ReqEvalError => {
-                let sol = self.stream_solution.as_ref().expect("no solution installed");
-                let backend = &self.backend;
-                let kernel = self.kernel;
-                let mut err = 0.0;
-                self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
-                    let proj = projected_chunk(backend.as_ref(), kernel, sol, chunk);
-                    let norms = proj.col_norms_sq();
-                    for (&d, &n) in kernel_diag(kernel, chunk).iter().zip(&norms) {
-                        err += (d - n).max(0.0);
-                    }
-                });
-                Message::RespScalar(err)
-            }
-            Message::ReqEvalTrace => {
-                let kernel = self.kernel;
-                let mut trace = 0.0;
-                self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
-                    for v in kernel_diag(kernel, chunk) {
-                        trace += v;
-                    }
-                });
-                Message::RespScalar(trace)
-            }
-            Message::ReqSampleProjected { count, seed } => {
-                let sol = self.stream_solution.as_ref().expect("no solution installed");
-                let n = self.source.len();
-                let mut rng = Rng::seed_from(seed);
-                let idx: Vec<usize> = (0..count.min(n)).map(|_| rng.below(n)).collect();
-                let sel = self.source.select(&idx);
-                Message::RespMat(projected_chunk(self.backend.as_ref(), self.kernel, sol, &sel))
-            }
-            Message::ReqKmeansStep { centers } => {
-                let sol = self.stream_solution.as_ref().expect("no solution installed");
-                let (kdim, c) = (centers.rows(), centers.cols());
-                let backend = &self.backend;
-                let kernel = self.kernel;
-                let mut sums = Mat::zeros(kdim, c);
-                let mut counts = vec![0usize; c];
-                let mut obj = 0.0;
-                self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
-                    let proj = projected_chunk(backend.as_ref(), kernel, sol, chunk);
-                    assert_eq!(proj.rows(), kdim);
-                    kmeans_fold(&proj, &centers, &mut sums, &mut counts, &mut obj);
-                });
-                Message::RespKmeans { sums, counts, obj }
-            }
-            Message::ReqKrrStats { pts, teacher_seed } => {
-                let y = pts.to_mat();
-                let ny = y.cols();
-                let v = teacher_vector(self.source.dim(), teacher_seed);
-                let backend = &self.backend;
-                let kernel = self.kernel;
-                let mut g = Mat::zeros(ny, ny);
-                let mut b = Mat::zeros(ny, 1);
-                let mut tnorm = 0.0;
-                let mut targets = Vec::with_capacity(self.source.len());
-                self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
-                    let k_ya = backend.gram(kernel, &y, chunk);
-                    let t_chunk = teacher_targets_chunk(chunk, &v);
-                    // Per-point rank-1 accumulation in ascending global
-                    // point order: deterministic and chunk-size
-                    // invariant. `b`/`tnorm` fold in exactly the
-                    // resident order; `g` is the one quantity whose
-                    // resident twin (a blocked matmul) associates its
-                    // sums differently — see the module docs.
-                    for (j, &t) in t_chunk.iter().enumerate() {
-                        for i in 0..ny {
-                            let kij = k_ya[(i, j)];
-                            for i2 in 0..ny {
-                                g[(i, i2)] += kij * k_ya[(i2, j)];
-                            }
-                            b[(i, 0)] += kij * t;
-                        }
-                        tnorm += t * t;
-                    }
-                    targets.extend(t_chunk);
-                });
-                self.krr = Some(KrrState::Streamed { y, targets });
-                Message::RespKrr { g, b, tnorm }
-            }
-            Message::ReqKrrEval { alpha } => {
-                let (y, targets) = match self.krr.as_ref().expect("ReqKrrStats first") {
-                    KrrState::Streamed { y, targets } => (y, targets),
-                    KrrState::Resident { .. } => {
-                        unreachable!("resident KRR state on the streaming path")
-                    }
-                };
-                let backend = &self.backend;
-                let kernel = self.kernel;
-                let mut err = 0.0;
-                self.source.for_each_chunk(self.chunk_rows, |j0, chunk| {
-                    let k_ya = backend.gram(kernel, y, chunk);
-                    let pred = alpha.matmul_at_b(&k_ya);
-                    for j in 0..chunk.len() {
-                        let e = pred[(0, j)] - targets[j0 + j];
-                        err += e * e;
-                    }
-                });
-                Message::RespScalar(err)
-            }
             other => panic!("worker got unexpected {other:?}"),
         }
     }
@@ -547,16 +283,16 @@ impl Worker {
     /// Weighted sample of local points (with replacement, then
     /// deduplicated — duplicates add nothing to span φ(Y) but would
     /// cost words), returned in the shard's natural encoding.
-    fn sample_weighted(&mut self, weights: &[f64], count: usize, seed: u64) -> Message {
+    fn sample_weighted(&mut self, weights: &[f64], count: usize, seed: u64) -> PointSet {
         if weights.is_empty() || count == 0 {
-            return Message::RespPoints(self.source.point_set(&[]));
+            return self.source.point_set(&[]);
         }
         let mut rng = Rng::seed_from(seed);
         let table = AliasTable::new(weights);
         let mut idx = table.draw_many(&mut rng, count);
         idx.sort_unstable();
         idx.dedup();
-        Message::RespPoints(self.source.point_set(&idx))
+        self.source.point_set(&idx)
     }
 
     /// Upper-triangular Cholesky factor of K(Y, Y) — the shared first
@@ -579,6 +315,371 @@ impl Worker {
 
     fn compute_residuals(&self, p: &Mat) -> Vec<f64> {
         self.project(p).1
+    }
+}
+
+// ---- path-independent handlers ------------------------------------
+
+impl Handle<rq::Count> for Worker {
+    fn handle_req(&mut self, _req: rq::Count) -> usize {
+        self.source.len()
+    }
+}
+
+impl Handle<rq::BusyTime> for Worker {
+    fn handle_req(&mut self, _req: rq::BusyTime) -> f64 {
+        self.busy.as_secs_f64()
+    }
+}
+
+impl Handle<rq::ScoresVec> for Worker {
+    fn handle_req(&mut self, _req: rq::ScoresVec) -> Mat {
+        let scores = self.scores.as_ref().expect("ReqScores first");
+        let mut m = Mat::zeros(1, scores.len());
+        for (j, &v) in scores.iter().enumerate() {
+            m[(0, j)] = v;
+        }
+        m
+    }
+}
+
+impl Handle<rq::SampleLeverage> for Worker {
+    fn handle_req(&mut self, req: rq::SampleLeverage) -> PointSet {
+        let scores = self.scores.clone().expect("ReqScores first");
+        self.sample_weighted(&scores, req.count, req.seed)
+    }
+}
+
+impl Handle<rq::SampleAdaptive> for Worker {
+    fn handle_req(&mut self, req: rq::SampleAdaptive) -> PointSet {
+        let res = self.residuals.clone().expect("ReqResiduals first");
+        self.sample_weighted(&res, req.count, req.seed)
+    }
+}
+
+impl Handle<rq::SampleUniform> for Worker {
+    fn handle_req(&mut self, req: rq::SampleUniform) -> PointSet {
+        let n = self.source.len();
+        let mut rng = Rng::seed_from(req.seed);
+        let idx: Vec<usize> = if req.count >= n {
+            (0..n).collect()
+        } else {
+            rng.sample_without_replacement(n, req.count)
+        };
+        self.source.point_set(&idx)
+    }
+}
+
+// ---- per-point passes: each handler holds its resident twin and its
+// streaming fold side by side (see the module docs for the
+// bit-identity argument; every streamed arm mirrors the resident
+// per-column operations and fold order exactly) -----------------------
+
+impl Handle<rq::Embed> for Worker {
+    fn handle_req(&mut self, req: rq::Embed) {
+        if self.streaming() {
+            // Only the spec is cached; the embedding is recomputed
+            // chunk-by-chunk through the backend on demand and never
+            // materialized whole. Tables re-derive from the spec's
+            // seed, so per-chunk columns equal the resident
+            // embedding's columns.
+            self.embed_spec = Some(req.spec);
+        } else {
+            self.embedded = Some(self.backend.embed(&req.spec, self.shard()));
+        }
+    }
+}
+
+impl Handle<rq::SketchEmbed> for Worker {
+    fn handle_req(&mut self, rq::SketchEmbed { p, seed }: rq::SketchEmbed) -> Mat {
+        if self.streaming() {
+            let spec = self.embed_spec.as_ref().expect("ReqEmbed first");
+            let backend = &self.backend;
+            let mut rng = Rng::seed_from(seed);
+            let cs = CountSketch::new(self.source.len(), p, &mut rng);
+            let mut out = Mat::zeros(spec.t, p);
+            self.source.for_each_chunk(self.chunk_rows, |j0, chunk| {
+                cs.accumulate_point_axis(&backend.embed(spec, chunk), j0, &mut out);
+            });
+            out
+        } else {
+            let e = self.embedded.as_ref().expect("ReqEmbed first");
+            let mut rng = Rng::seed_from(seed);
+            let cs = CountSketch::new(e.cols(), p, &mut rng);
+            cs.apply_point_axis(e)
+        }
+    }
+}
+
+impl Handle<rq::Scores> for Worker {
+    fn handle_req(&mut self, rq::Scores { z }: rq::Scores) -> f64 {
+        let scores = if self.streaming() {
+            let spec = self.embed_spec.as_ref().expect("ReqEmbed first");
+            let backend = &self.backend;
+            let mut scores = Vec::with_capacity(self.source.len());
+            self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
+                scores.extend(backend.leverage_norms(&z, &backend.embed(spec, chunk)));
+            });
+            scores
+        } else {
+            let e = self.embedded.as_ref().expect("ReqEmbed first");
+            self.backend.leverage_norms(&z, e)
+        };
+        let total = scores.iter().sum();
+        self.scores = Some(scores);
+        total
+    }
+}
+
+impl Handle<rq::Residuals> for Worker {
+    fn handle_req(&mut self, rq::Residuals { pts }: rq::Residuals) -> f64 {
+        let res = if self.streaming() {
+            let y = pts.to_mat();
+            let r = self.chol_basis(&y);
+            let backend = &self.backend;
+            let kernel = self.kernel;
+            let mut res = Vec::with_capacity(self.source.len());
+            self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
+                let k_ya = backend.gram(kernel, &y, chunk);
+                let diag = kernel_diag(kernel, chunk);
+                res.extend(backend.project_residual(&r, &k_ya, &diag).1);
+            });
+            res
+        } else {
+            self.compute_residuals(&pts.to_mat())
+        };
+        let total = res.iter().sum();
+        self.residuals = Some(res);
+        total
+    }
+}
+
+impl Handle<rq::ProjectSketch> for Worker {
+    fn handle_req(&mut self, rq::ProjectSketch { pts, w, seed }: rq::ProjectSketch) -> Mat {
+        if self.streaming() {
+            let y = pts.to_mat();
+            let r = self.chol_basis(&y);
+            let mut rng = Rng::seed_from(seed);
+            let cs = CountSketch::new(self.source.len(), w, &mut rng);
+            let mut out = Mat::zeros(y.cols(), w);
+            {
+                let backend = &self.backend;
+                let kernel = self.kernel;
+                self.source.for_each_chunk(self.chunk_rows, |j0, chunk| {
+                    let k_ya = backend.gram(kernel, &y, chunk);
+                    let diag = kernel_diag(kernel, chunk);
+                    let (pi, _) = backend.project_residual(&r, &k_ya, &diag);
+                    cs.accumulate_point_axis(&pi, j0, &mut out);
+                });
+            }
+            self.stream_basis = Some((y, r));
+            out
+        } else {
+            let y = pts.to_mat();
+            let pi = self.project(&y).0;
+            let mut rng = Rng::seed_from(seed);
+            let cs = CountSketch::new(pi.cols(), w, &mut rng);
+            let sketched = cs.apply_point_axis(&pi);
+            self.pi = Some(pi);
+            sketched
+        }
+    }
+}
+
+impl Handle<rq::Final> for Worker {
+    fn handle_req(&mut self, rq::Final { coeffs }: rq::Final) {
+        if self.streaming() {
+            let (y, r) = self.stream_basis.clone().expect("ReqProjectSketch first");
+            self.stream_solution = Some(StreamSolution::Factored { y, r_upper: r, coeffs });
+        } else {
+            // L = Q·W ⇒ Lᵀφ(A) = Wᵀ·Π (Π cached from ReqProjectSketch)
+            let pi = self.pi.as_ref().expect("ReqProjectSketch first");
+            self.projected = Some(coeffs.matmul_at_b(pi));
+        }
+    }
+}
+
+impl Handle<rq::SetSolution> for Worker {
+    fn handle_req(&mut self, rq::SetSolution { pts, coeffs }: rq::SetSolution) {
+        if self.streaming() {
+            self.stream_solution = Some(StreamSolution::Direct { y: pts.to_mat(), coeffs });
+        } else {
+            // L = φ(Y)·C ⇒ Lᵀφ(A) = Cᵀ·K(Y, A)
+            let y = pts.to_mat();
+            let k_ya = self.backend.gram(self.kernel, &y, self.shard());
+            self.projected = Some(coeffs.matmul_at_b(&k_ya));
+        }
+    }
+}
+
+impl Handle<rq::EvalError> for Worker {
+    fn handle_req(&mut self, _req: rq::EvalError) -> f64 {
+        if self.streaming() {
+            let sol = self.stream_solution.as_ref().expect("no solution installed");
+            let backend = &self.backend;
+            let kernel = self.kernel;
+            let mut err = 0.0;
+            self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
+                let proj = projected_chunk(backend.as_ref(), kernel, sol, chunk);
+                let norms = proj.col_norms_sq();
+                for (&d, &n) in kernel_diag(kernel, chunk).iter().zip(&norms) {
+                    err += (d - n).max(0.0);
+                }
+            });
+            err
+        } else {
+            let proj = self.projected.as_ref().expect("no solution installed");
+            let diag = kernel_diag(self.kernel, self.shard());
+            let norms = proj.col_norms_sq();
+            diag.iter()
+                .zip(&norms)
+                .map(|(&d, &n)| (d - n).max(0.0))
+                .sum()
+        }
+    }
+}
+
+impl Handle<rq::EvalTrace> for Worker {
+    fn handle_req(&mut self, _req: rq::EvalTrace) -> f64 {
+        if self.streaming() {
+            let kernel = self.kernel;
+            let mut trace = 0.0;
+            self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
+                for v in kernel_diag(kernel, chunk) {
+                    trace += v;
+                }
+            });
+            trace
+        } else {
+            crate::kernels::diag_sum(self.kernel, self.shard())
+        }
+    }
+}
+
+impl Handle<rq::SampleProjected> for Worker {
+    fn handle_req(&mut self, rq::SampleProjected { count, seed }: rq::SampleProjected) -> Mat {
+        if self.streaming() {
+            let sol = self.stream_solution.as_ref().expect("no solution installed");
+            let n = self.source.len();
+            let mut rng = Rng::seed_from(seed);
+            let idx: Vec<usize> = (0..count.min(n)).map(|_| rng.below(n)).collect();
+            let sel = self.source.select(&idx);
+            projected_chunk(self.backend.as_ref(), self.kernel, sol, &sel)
+        } else {
+            let proj = self.projected.as_ref().expect("no solution installed");
+            let n = proj.cols();
+            let mut rng = Rng::seed_from(seed);
+            let idx: Vec<usize> = (0..count.min(n)).map(|_| rng.below(n)).collect();
+            proj.select_cols(&idx)
+        }
+    }
+}
+
+impl Handle<rq::KmeansStep> for Worker {
+    fn handle_req(&mut self, rq::KmeansStep { centers }: rq::KmeansStep) -> KmeansPart {
+        let (kdim, c) = (centers.rows(), centers.cols());
+        let mut sums = Mat::zeros(kdim, c);
+        let mut counts = vec![0usize; c];
+        let mut obj = 0.0;
+        if self.streaming() {
+            let sol = self.stream_solution.as_ref().expect("no solution installed");
+            let backend = &self.backend;
+            let kernel = self.kernel;
+            self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
+                let proj = projected_chunk(backend.as_ref(), kernel, sol, chunk);
+                assert_eq!(proj.rows(), kdim);
+                kmeans_fold(&proj, &centers, &mut sums, &mut counts, &mut obj);
+            });
+        } else {
+            let proj = self.projected.as_ref().expect("no solution installed");
+            assert_eq!(proj.rows(), kdim);
+            kmeans_fold(proj, &centers, &mut sums, &mut counts, &mut obj);
+        }
+        KmeansPart { sums, counts, obj }
+    }
+}
+
+impl Handle<rq::KrrStats> for Worker {
+    fn handle_req(&mut self, rq::KrrStats { pts, teacher_seed }: rq::KrrStats) -> KrrPart {
+        let y = pts.to_mat();
+        if self.streaming() {
+            let ny = y.cols();
+            let v = teacher_vector(self.source.dim(), teacher_seed);
+            let backend = &self.backend;
+            let kernel = self.kernel;
+            let mut g = Mat::zeros(ny, ny);
+            let mut b = Mat::zeros(ny, 1);
+            let mut tnorm = 0.0;
+            let mut targets = Vec::with_capacity(self.source.len());
+            self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
+                let k_ya = backend.gram(kernel, &y, chunk);
+                let t_chunk = teacher_targets_chunk(chunk, &v);
+                // Per-point rank-1 accumulation in ascending global
+                // point order: deterministic and chunk-size
+                // invariant. `b`/`tnorm` fold in exactly the
+                // resident order; `g` is the one quantity whose
+                // resident twin (a blocked matmul) associates its
+                // sums differently — see the module docs.
+                for (j, &t) in t_chunk.iter().enumerate() {
+                    for i in 0..ny {
+                        let kij = k_ya[(i, j)];
+                        for i2 in 0..ny {
+                            g[(i, i2)] += kij * k_ya[(i2, j)];
+                        }
+                        b[(i, 0)] += kij * t;
+                    }
+                    tnorm += t * t;
+                }
+                targets.extend(t_chunk);
+            });
+            self.krr = Some(KrrState::Streamed { y, targets });
+            KrrPart { g, b, tnorm }
+        } else {
+            let k_ya = self.backend.gram(self.kernel, &y, self.shard());
+            let v = teacher_vector(self.source.dim(), teacher_seed);
+            let targets = teacher_targets_chunk(self.shard(), &v);
+            // g = K_YA·K_AY (|Y|×|Y|), b = K_YA·t (|Y|×1)
+            let g = k_ya.matmul_a_bt(&k_ya);
+            let mut b = Mat::zeros(y.cols(), 1);
+            for i in 0..y.cols() {
+                let row = k_ya.row(i);
+                b[(i, 0)] = row.iter().zip(&targets).map(|(&k, &t)| k * t).sum();
+            }
+            let tnorm = targets.iter().map(|&t| t * t).sum();
+            self.krr = Some(KrrState::Resident { k_ya, targets });
+            KrrPart { g, b, tnorm }
+        }
+    }
+}
+
+impl Handle<rq::KrrEval> for Worker {
+    fn handle_req(&mut self, rq::KrrEval { alpha }: rq::KrrEval) -> f64 {
+        match self.krr.as_ref().expect("ReqKrrStats first") {
+            KrrState::Resident { k_ya, targets } => {
+                // pred = αᵀ·K_YA (1×nᵢ)
+                let pred = alpha.matmul_at_b(k_ya);
+                (0..targets.len())
+                    .map(|j| {
+                        let e = pred[(0, j)] - targets[j];
+                        e * e
+                    })
+                    .sum()
+            }
+            KrrState::Streamed { y, targets } => {
+                let backend = &self.backend;
+                let kernel = self.kernel;
+                let mut err = 0.0;
+                self.source.for_each_chunk(self.chunk_rows, |j0, chunk| {
+                    let k_ya = backend.gram(kernel, y, chunk);
+                    let pred = alpha.matmul_at_b(&k_ya);
+                    for j in 0..chunk.len() {
+                        let e = pred[(0, j)] - targets[j0 + j];
+                        err += e * e;
+                    }
+                });
+                err
+            }
+        }
     }
 }
 

@@ -78,7 +78,7 @@ pub fn fig_small_vs_batch(ctx: &Ctx, family: &str, fig_id: &str) -> anyhow::Resu
         ]);
         for n_adapt in sweep(ctx, "25,50,100,200") {
             let params = params_with(ctx, n_adapt);
-            let r = run_method(ctx, &spec, &data, kernel, &params, Method::DisKpca);
+            let r = run_method(ctx, &spec, &data, kernel, &params, Method::DisKpca)?;
             rep.row(vec![
                 name.into(),
                 r.method.into(),
@@ -120,7 +120,7 @@ pub fn fig_comm_tradeoff(
                 if method == Method::UniformBatch && params.n_lev + params.n_adapt > 300 {
                     continue;
                 }
-                let r = run_method(ctx, &spec, &data, kernel, &params, method);
+                let r = run_method(ctx, &spec, &data, kernel, &params, method)?;
                 rep.row(vec![
                     (*name).into(),
                     r.method.into(),
@@ -182,11 +182,12 @@ pub fn fig7(ctx: &Ctx) -> anyhow::Result<()> {
                     shards,
                     kernel,
                     backend,
-                    move |cluster| {
-                        let _ = dis_kpca(cluster, kernel, &p2);
+                    move |cluster| -> Result<Vec<f64>, crate::comm::CommError> {
+                        let _ = dis_kpca(cluster, kernel, &p2)?;
                         crate::coordinator::master::dis_busy_times(cluster)
                     },
                 );
+                let busy = busy?;
                 let crit = busy.iter().cloned().fold(0.0f64, f64::max);
                 let total: f64 = busy.iter().sum();
                 let speedup = base.map(|b: f64| b / crit).unwrap_or(1.0);
@@ -236,16 +237,24 @@ pub fn fig8(ctx: &Ctx) -> anyhow::Result<()> {
                 let total = params.n_lev + params.n_adapt;
                 let kc = ctx.cfg.usize_or("clusters", params.k);
                 let seed = ctx.seed;
-                let ((res, _sol_pts), stats) =
-                    run_cluster(shards, kernel, backend, move |cluster| {
+                let (body, stats) = run_cluster(
+                    shards,
+                    kernel,
+                    backend,
+                    move |cluster| -> Result<
+                        (crate::coordinator::kmeans::KmeansResult, usize),
+                        crate::comm::CommError,
+                    > {
                         let sol = match method {
-                            Method::DisKpca => dis_kpca(cluster, kernel, &params),
-                            _ => uniform_dis_lr(cluster, kernel, &params, total),
+                            Method::DisKpca => dis_kpca(cluster, kernel, &params)?,
+                            _ => uniform_dis_lr(cluster, kernel, &params, total)?,
                         };
-                        dis_set_solution(cluster, &sol);
-                        let res = distributed_kmeans(cluster, kc, 30, seed ^ 0x833);
-                        (res, sol.num_points())
-                    });
+                        dis_set_solution(cluster, &sol)?;
+                        let res = distributed_kmeans(cluster, kc, 30, seed ^ 0x833)?;
+                        Ok((res, sol.num_points()))
+                    },
+                );
+                let (res, _sol_pts) = body?;
                 rep.row(vec![
                     name.into(),
                     family.into(),
@@ -281,25 +290,29 @@ pub fn css_report(ctx: &Ctx, dataset: &str) -> anyhow::Result<()> {
         let shards = spec.partition(&data, ctx.seed ^ 0x9a91);
         let backend = ctx.backend.clone();
         let seed = ctx.seed;
-        let ((css, unif_frac, r2), stats) =
-            run_cluster(shards, kernel, backend, move |cluster| {
-                let css = dis_css(cluster, kernel, &params);
+        let (body, stats) = run_cluster(
+            shards,
+            kernel,
+            backend,
+            move |cluster| -> Result<
+                (crate::coordinator::CssSolution, f64, f64),
+                crate::comm::CommError,
+            > {
+                let css = dis_css(cluster, kernel, &params)?;
                 let unif = crate::coordinator::baselines::dis_uniform_sample(
                     cluster,
                     css.y.len(),
                     seed ^ 0xc55,
-                );
+                )?;
                 let unif_resid: f64 = cluster
-                    .exchange(&crate::comm::Message::ReqResiduals { pts: unif })
+                    .broadcast(crate::comm::request::Residuals { pts: unif })?
                     .into_iter()
-                    .map(|m| match m {
-                        crate::comm::Message::RespScalar(v) => v,
-                        other => panic!("unexpected {}", other.tag()),
-                    })
                     .sum();
-                let model = dis_krr(cluster, kernel, &css.y, 1e-3, seed ^ 0x3a3);
-                (css.clone(), unif_resid / css.trace, model.r_squared())
-            });
+                let model = dis_krr(cluster, kernel, &css.y, 1e-3, seed ^ 0x3a3)?;
+                Ok((css.clone(), unif_resid / css.trace, model.r_squared()))
+            },
+        );
+        let (css, unif_frac, r2) = body?;
         rep.row(vec![
             n_adapt.to_string(),
             css.y.len().to_string(),
@@ -328,6 +341,7 @@ pub fn bench_comm(ctx: &Ctx, dataset: &str) -> anyhow::Result<()> {
     let (sol, stats) = run_cluster(shards, kernel, backend, move |cluster| {
         dis_kpca(cluster, kernel, &p2)
     });
+    let sol = sol?;
     let mut rep = Report::new(
         &format!("per-round communication on {dataset} (s={}, |Y|={})", spec.s, sol.num_points()),
         &["round", "to_master", "to_workers", "total"],
@@ -379,12 +393,17 @@ pub fn ablation(ctx: &Ctx, dataset: &str) -> anyhow::Result<()> {
         let backend = ctx.backend.clone();
         let params = ctx.cfg.params();
         let n = data.len();
-        let ((err, trace, ny), stats) =
-            crate::coordinator::run_cluster(shards, kernel, backend, move |cluster| {
-                let sol = dis_kpca_mode(cluster, kernel, &params, mode);
-                let (err, trace) = dis_eval(cluster);
-                (err, trace, sol.num_points())
-            });
+        let (body, stats) = crate::coordinator::run_cluster(
+            shards,
+            kernel,
+            backend,
+            move |cluster| -> Result<(f64, f64, usize), crate::comm::CommError> {
+                let sol = dis_kpca_mode(cluster, kernel, &params, mode)?;
+                let (err, trace) = dis_eval(cluster)?;
+                Ok((err, trace, sol.num_points()))
+            },
+        );
+        let (err, trace, ny) = body?;
         rep.row(vec![
             name.into(),
             ny.to_string(),
@@ -414,7 +433,7 @@ pub fn run_one(ctx: &Ctx, dataset: &str) -> anyhow::Result<()> {
         kernel.name(),
         ctx.backend_name,
     );
-    let r = run_method(ctx, &spec, &data, kernel, &params, Method::DisKpca);
+    let r = run_method(ctx, &spec, &data, kernel, &params, Method::DisKpca)?;
     println!(
         "|Y|={}  err/n={}  rel_err={:.4}  comm={} words  wall={:.2}s",
         r.num_points,

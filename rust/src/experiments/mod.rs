@@ -143,7 +143,7 @@ pub fn run_method(
     kernel: Kernel,
     params: &Params,
     method: Method,
-) -> RunResult {
+) -> anyhow::Result<RunResult> {
     let shards = spec.partition(data, ctx.seed ^ 0x9a91);
     let n = data.len();
     let total_points = params.n_lev + params.n_adapt;
@@ -152,24 +152,30 @@ pub fn run_method(
     let t0 = Instant::now();
     // `--chunk-rows` flows through to the in-process workers: every
     // experiment driver can run its workers out-of-core-style.
-    let ((err, trace, num_points), stats) =
-        run_cluster_chunked(shards, kernel, backend, params.chunk_rows, move |cluster| {
+    let (body_result, stats) = run_cluster_chunked(
+        shards,
+        kernel,
+        backend,
+        params.chunk_rows,
+        move |cluster| -> Result<(f64, f64, usize), crate::comm::CommError> {
             let sol = match method {
-                Method::DisKpca => dis_kpca(cluster, kernel, &params),
+                Method::DisKpca => dis_kpca(cluster, kernel, &params)?,
                 Method::UniformDisLr => {
-                    coordinator::uniform_dis_lr(cluster, kernel, &params, total_points)
+                    coordinator::uniform_dis_lr(cluster, kernel, &params, total_points)?
                 }
                 Method::UniformBatch => {
                     let sol =
-                        coordinator::uniform_batch_kpca(cluster, kernel, &params, total_points);
-                    dis_set_solution(cluster, &sol);
+                        coordinator::uniform_batch_kpca(cluster, kernel, &params, total_points)?;
+                    dis_set_solution(cluster, &sol)?;
                     sol
                 }
             };
-            let (err, trace) = dis_eval(cluster);
-            (err, trace, sol.num_points())
-        });
-    RunResult {
+            let (err, trace) = dis_eval(cluster)?;
+            Ok((err, trace, sol.num_points()))
+        },
+    );
+    let (err, trace, num_points) = body_result?;
+    Ok(RunResult {
         method: method.name(),
         err,
         trace,
@@ -177,7 +183,7 @@ pub fn run_method(
         comm_words: stats.total_words(),
         num_points,
         wall_secs: t0.elapsed().as_secs_f64(),
-    }
+    })
 }
 
 /// The closed-form communication model from Theorem 1's accounting —
@@ -231,7 +237,7 @@ mod tests {
         let data = spec.generate(c.seed);
         let kernel = c.kernel("gauss", &data);
         for m in Method::all() {
-            let r = run_method(&c, &spec, &data, kernel, &small_params(), m);
+            let r = run_method(&c, &spec, &data, kernel, &small_params(), m).unwrap();
             assert!(r.err >= 0.0 && r.err <= r.trace * 1.001, "{m:?}: {r:?}");
             assert!(r.comm_words > 0);
             assert!(r.num_points > 0);
@@ -245,7 +251,7 @@ mod tests {
         let data = spec.generate(c.seed);
         let kernel = c.kernel("gauss", &data);
         let p = small_params();
-        let r = run_method(&c, &spec, &data, kernel, &p, Method::DisKpca);
+        let r = run_method(&c, &spec, &data, kernel, &p, Method::DisKpca).unwrap();
         let y = r.num_points;
         let model = comm_model_words(spec.s, p.t, p.p, y, y, p.k, spec.d as f64);
         // within 3× of the closed form (eval round + alloc scalars on top)

@@ -17,15 +17,80 @@
 //!
 //! `diskpca shard <dataset> --out dir --parts N` writes power-law
 //! shards of a registry dataset to disk for the above.
+//!
+//! # Failure semantics and exit codes
+//!
+//! The deployment subcommands separate *protocol* failures (a worker
+//! died, reported an error, or replied garbage mid-round — a
+//! [`CommError`] with worker + round context) from *environment*
+//! failures (bad flags, unreadable shards, bind/connect errors).
+//! [`LaunchError::exit_code`] maps them to distinct process exit
+//! codes so orchestration scripts can tell "retry the job" from "fix
+//! the config". On a protocol failure the master's [`Cluster`] drop
+//! guard still fans `Quit` out to every surviving worker, so remote
+//! worker processes exit instead of waiting on a dead coordinator.
 
 use std::sync::Arc;
 
-use crate::comm::{tcp, Cluster, CommStats};
+use crate::comm::{tcp, Cluster, CommError, CommStats};
 use crate::config::Config;
 use crate::coordinator::{dis_eval, dis_kpca, Worker};
 use crate::data::{self, Data};
 use crate::kernels::Kernel;
 use crate::runtime::backend_from_name;
+
+/// Exit code for a protocol-layer failure ([`LaunchError::Protocol`]).
+pub const EXIT_PROTOCOL: i32 = 3;
+/// Exit code for an environment/setup failure ([`LaunchError::Env`]).
+pub const EXIT_ENV: i32 = 1;
+
+/// A deployment subcommand failure, split by which exit code it maps
+/// to (see the module docs).
+#[derive(Debug)]
+pub enum LaunchError {
+    /// The protocol aborted: carries the worker index + round context.
+    Protocol(CommError),
+    /// Setup/IO/config failure before or around the protocol.
+    Env(String),
+}
+
+impl LaunchError {
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            LaunchError::Protocol(_) => EXIT_PROTOCOL,
+            LaunchError::Env(_) => EXIT_ENV,
+        }
+    }
+}
+
+impl std::fmt::Display for LaunchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LaunchError::Protocol(e) => write!(f, "protocol failure: {e}"),
+            LaunchError::Env(e) => f.write_str(e),
+        }
+    }
+}
+
+impl std::error::Error for LaunchError {}
+
+impl From<CommError> for LaunchError {
+    fn from(e: CommError) -> Self {
+        LaunchError::Protocol(e)
+    }
+}
+
+impl From<std::io::Error> for LaunchError {
+    fn from(e: std::io::Error) -> Self {
+        LaunchError::Env(e.to_string())
+    }
+}
+
+impl From<anyhow::Error> for LaunchError {
+    fn from(e: anyhow::Error) -> Self {
+        LaunchError::Env(e.to_string())
+    }
+}
 
 /// Kernel from explicit flags (a worker process has no data-dependent
 /// median trick — γ must be pinned so all nodes agree).
@@ -39,18 +104,21 @@ pub fn kernel_from_flags(cfg: &Config) -> anyhow::Result<Kernel> {
 }
 
 /// `diskpca master`: accept workers, run disKPCA, print the result.
-pub fn master(cfg: &Config) -> anyhow::Result<()> {
+/// A protocol failure returns [`LaunchError::Protocol`] — and the
+/// cluster's drop guard has already sent `Quit` to the surviving
+/// workers by the time this returns.
+pub fn master(cfg: &Config) -> Result<(), LaunchError> {
     let addr = cfg.str_or("listen", "127.0.0.1:7700");
     let s = cfg.usize_or("workers", 2);
     let kernel = kernel_from_flags(cfg)?;
     let params = cfg.params();
     params.apply_threads();
     eprintln!("master: waiting for {s} workers on {addr} …");
-    let links = tcp::listen(addr, s)?;
-    let cluster = Cluster::new(links, CommStats::new());
+    let star = tcp::listen(addr, s)?;
+    let cluster = Cluster::new(star, CommStats::new());
     let t0 = std::time::Instant::now();
-    let sol = dis_kpca(&cluster, kernel, &params);
-    let (err, trace) = dis_eval(&cluster);
+    let sol = dis_kpca(&cluster, kernel, &params)?;
+    let (err, trace) = dis_eval(&cluster)?;
     cluster.shutdown();
     println!(
         "disKPCA done: |Y|={} rel_err={:.4} comm={} words wall={:.2}s",
@@ -73,11 +141,11 @@ pub fn master(cfg: &Config) -> anyhow::Result<()> {
 /// shard store is mapped out-of-core (worker matrix memory tracks the
 /// chunk/block size, not the shard size); `.bin`/`.csv` shards load
 /// resident and stream only when `--chunk-rows` is set.
-pub fn worker(cfg: &Config) -> anyhow::Result<()> {
+pub fn worker(cfg: &Config) -> Result<(), LaunchError> {
     let addr = cfg.str_or("connect", "127.0.0.1:7700");
-    let path = cfg
-        .get("data")
-        .ok_or_else(|| anyhow::anyhow!("worker needs --data <file.bin|file.csv|file.dkps>"))?;
+    let path = cfg.get("data").ok_or_else(|| {
+        LaunchError::Env("worker needs --data <file.bin|file.csv|file.dkps>".into())
+    })?;
     let params = cfg.params();
     let source = if path.ends_with(".dkps") {
         data::ShardSource::Store(data::ShardStore::open(path)?)
@@ -110,10 +178,16 @@ pub fn worker(cfg: &Config) -> anyhow::Result<()> {
     // Drive the loop here (rather than `Worker::run`) so a dropped
     // connection surfaces as an error with protocol context instead
     // of aborting the process mid-protocol.
+    // Once the protocol is running, a lost master is a *protocol*
+    // failure (exit 3, the documented retry signal) — only setup
+    // problems above are environment errors.
     let mut served = 0usize;
     loop {
         let req = endpoint.try_recv().map_err(|e| {
-            anyhow::anyhow!("connection to master lost after {served} requests: {e}")
+            LaunchError::Protocol(CommError::Protocol {
+                round: "serving".into(),
+                detail: format!("connection to master lost after {served} requests: {e}"),
+            })
         })?;
         if matches!(req, crate::comm::Message::Quit) {
             break;
@@ -122,8 +196,11 @@ pub fn worker(cfg: &Config) -> anyhow::Result<()> {
         if let crate::comm::Message::RespError(msg) = &resp {
             eprintln!("worker: request failed (reported to master): {msg}");
         }
-        endpoint.try_send(resp).map_err(|e| {
-            anyhow::anyhow!("connection to master lost while replying (request {served}): {e}")
+        endpoint.try_send(&resp).map_err(|e| {
+            LaunchError::Protocol(CommError::Protocol {
+                round: "serving".into(),
+                detail: format!("connection to master lost while replying (request {served}): {e}"),
+            })
         })?;
         served += 1;
     }
@@ -168,8 +245,9 @@ pub fn shard(cfg: &Config, dataset: &str) -> anyhow::Result<()> {
 /// integration test and `examples/multiprocess.rs`): spawns worker
 /// *threads* that connect through real sockets to a listening master.
 /// Honours `--chunk-rows` (streamed workers) and propagates worker
-/// and master failures as errors with context instead of aborting.
-pub fn selftest(cfg: &Config) -> anyhow::Result<(f64, f64)> {
+/// and master failures as [`LaunchError`]s with context instead of
+/// aborting.
+pub fn selftest(cfg: &Config) -> Result<(f64, f64), LaunchError> {
     let s = cfg.usize_or("workers", 3);
     let kernel = kernel_from_flags(cfg)?;
     let params = cfg.params();
@@ -179,16 +257,16 @@ pub fn selftest(cfg: &Config) -> anyhow::Result<(f64, f64)> {
 
     let scale = cfg.f64_or("scale", 0.05);
     let spec = data::by_name(cfg.str_or("dataset", "protein_like"), scale)
-        .ok_or_else(|| anyhow::anyhow!("dataset"))?;
+        .ok_or_else(|| LaunchError::Env("unknown dataset".into()))?;
     let global = spec.generate(cfg.u64_or("seed", 1));
     let shards = data::partition_power_law(&global, s, 1);
 
     let addr2 = addr.clone();
-    let master_thread = std::thread::spawn(move || -> anyhow::Result<(f64, f64)> {
-        let links = tcp::listen(&addr2, s)?;
-        let cluster = Cluster::new(links, CommStats::new());
-        let _ = dis_kpca(&cluster, kernel, &params);
-        let res = dis_eval(&cluster);
+    let master_thread = std::thread::spawn(move || -> Result<(f64, f64), LaunchError> {
+        let star = tcp::listen(&addr2, s)?;
+        let cluster = Cluster::new(star, CommStats::new());
+        let _ = dis_kpca(&cluster, kernel, &params)?;
+        let res = dis_eval(&cluster)?;
         cluster.shutdown();
         Ok(res)
     });
@@ -199,10 +277,10 @@ pub fn selftest(cfg: &Config) -> anyhow::Result<(f64, f64)> {
         .enumerate()
         .map(|(i, sh)| {
             let addr = addr.clone();
-            std::thread::spawn(move || -> anyhow::Result<()> {
+            std::thread::spawn(move || -> Result<(), String> {
                 let be = Arc::new(crate::runtime::NativeBackend::new());
                 let ep = tcp::connect(&addr)
-                    .map_err(|e| anyhow::anyhow!("worker {i}: connect to {addr} failed: {e}"))?;
+                    .map_err(|e| format!("worker {i}: connect to {addr} failed: {e}"))?;
                 Worker::new_chunked(sh, kernel, be, chunk_rows).run(ep);
                 Ok(())
             })
@@ -210,7 +288,7 @@ pub fn selftest(cfg: &Config) -> anyhow::Result<(f64, f64)> {
         .collect();
     let res = master_thread
         .join()
-        .map_err(|p| anyhow::anyhow!("master thread panicked: {}", panic_text(&p)))?;
+        .map_err(|p| LaunchError::Env(format!("master thread panicked: {}", panic_text(&p))))?;
     let mut worker_errs = Vec::new();
     for (i, w) in worker_threads.into_iter().enumerate() {
         match w.join() {
@@ -223,11 +301,22 @@ pub fn selftest(cfg: &Config) -> anyhow::Result<(f64, f64)> {
     // master already failed is secondary context.
     match res {
         Ok(res) => {
-            anyhow::ensure!(worker_errs.is_empty(), "workers failed: {}", worker_errs.join("; "));
-            Ok(res)
+            if worker_errs.is_empty() {
+                Ok(res)
+            } else {
+                Err(LaunchError::Env(format!("workers failed: {}", worker_errs.join("; "))))
+            }
         }
         Err(e) if worker_errs.is_empty() => Err(e),
-        Err(e) => Err(anyhow::anyhow!("{e} (worker errors: {})", worker_errs.join("; "))),
+        // keep the Protocol classification (exit 3) — the worker
+        // errors are secondary context, not a reclassification
+        Err(LaunchError::Protocol(e)) => Err(LaunchError::Protocol(CommError::Protocol {
+            round: e.round().to_string(),
+            detail: format!("{e} (worker errors: {})", worker_errs.join("; ")),
+        })),
+        Err(LaunchError::Env(e)) => {
+            Err(LaunchError::Env(format!("{e} (worker errors: {})", worker_errs.join("; "))))
+        }
     }
 }
 
@@ -253,6 +342,15 @@ mod tests {
         assert!(matches!(kernel_from_flags(&cfg).unwrap(), Kernel::Poly { q: 3 }));
         cfg.set("kernel", "nope");
         assert!(kernel_from_flags(&cfg).is_err());
+    }
+
+    #[test]
+    fn launch_error_exit_codes() {
+        let p = LaunchError::Protocol(CommError::Timeout { round: "x".into(), pending: vec![0] });
+        assert_eq!(p.exit_code(), EXIT_PROTOCOL);
+        assert!(p.to_string().contains("protocol failure"));
+        let e = LaunchError::Env("bad flag".into());
+        assert_eq!(e.exit_code(), EXIT_ENV);
     }
 
     #[test]

@@ -55,8 +55,8 @@ fn main() -> anyhow::Result<()> {
         "css" => experiments::css_report(&ctx, dataset)?,
         "bench-comm" => experiments::bench_comm(&ctx, dataset)?,
         "ablation" => experiments::ablation(&ctx, dataset)?,
-        "master" => diskpca::launcher::master(&parsed.config)?,
-        "worker" => diskpca::launcher::worker(&parsed.config)?,
+        "master" => exit_on_launch_error(diskpca::launcher::master(&parsed.config)),
+        "worker" => exit_on_launch_error(diskpca::launcher::worker(&parsed.config)),
         "shard" => diskpca::launcher::shard(&parsed.config, dataset)?,
         other => {
             eprintln!("unknown command `{other}`\n\n{}", cli::USAGE);
@@ -64,4 +64,15 @@ fn main() -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// The deployment subcommands map failures to distinct exit codes
+/// (see `cli::USAGE`): protocol failures — a worker died or reported
+/// an error mid-round — exit with `launcher::EXIT_PROTOCOL`;
+/// environment failures with `launcher::EXIT_ENV`.
+fn exit_on_launch_error(result: Result<(), diskpca::launcher::LaunchError>) {
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(e.exit_code());
+    }
 }

@@ -12,7 +12,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
 use diskpca::comm::tcp::{self, MAX_FRAME_BYTES};
-use diskpca::comm::Message;
+use diskpca::comm::{request, Cluster, CommError, CommStats, Message};
 use diskpca::coordinator::Worker;
 use diskpca::data::Data;
 use diskpca::kernels::Kernel;
@@ -81,7 +81,7 @@ fn codec_garbage_in_wellformed_frame_propagates_decode_error() {
 
 #[test]
 fn worker_error_crosses_the_wire_with_context() {
-    let (links, endpoints) = tcp::star(1).unwrap();
+    let (star, endpoints) = tcp::star(1).unwrap();
     let handles: Vec<_> = endpoints
         .into_iter()
         .map(|ep| {
@@ -93,20 +93,23 @@ fn worker_error_crosses_the_wire_with_context() {
             })
         })
         .collect();
+    let cluster = Cluster::new(star, CommStats::new());
+    cluster.set_round("2-disLS");
     // protocol misuse: scores before embed. The worker must answer
-    // with RespError (and survive), not die and strand the master.
-    links[0].send(Message::ReqScores { z: Mat::identity(4) });
-    match links[0].recv() {
-        Message::RespError(msg) => {
-            assert!(msg.contains("ReqEmbed first"), "context lost: {msg}");
-            assert!(msg.contains("ReqScores"), "failing request not named: {msg}");
+    // with RespError (and survive), surfaced as a typed Worker error
+    // naming the worker and round — not a dead socket or a panic.
+    let err = cluster.call(0, request::Scores { z: Mat::identity(4) }).unwrap_err();
+    match &err {
+        CommError::Worker { worker: 0, round, detail } => {
+            assert_eq!(round, "2-disLS");
+            assert!(detail.contains("ReqEmbed first"), "context lost: {detail}");
+            assert!(detail.contains("ReqScores"), "failing request not named: {detail}");
         }
-        other => panic!("expected RespError over TCP, got {other:?}"),
+        other => panic!("expected Worker error over TCP, got {other:?}"),
     }
     // worker still serves afterwards
-    links[0].send(Message::ReqCount);
-    assert!(matches!(links[0].recv(), Message::RespCount(12)));
-    links[0].send(Message::Quit);
+    assert_eq!(cluster.call(0, request::Count).unwrap(), 12);
+    cluster.shutdown();
     for h in handles {
         h.join().unwrap();
     }
@@ -114,24 +117,30 @@ fn worker_error_crosses_the_wire_with_context() {
 
 #[test]
 fn roundtrip_over_sockets_preserves_error_payload() {
-    let (links, endpoints) = tcp::star(1).unwrap();
+    let (star, endpoints) = tcp::star(1).unwrap();
     let handles: Vec<_> = endpoints
         .into_iter()
         .map(|mut ep| {
             std::thread::spawn(move || loop {
-                match ep.recv() {
-                    Message::Quit => break,
-                    _ => ep.send(Message::RespError("shard store: block 3 unreadable".into())),
+                match ep.try_recv() {
+                    Ok(Message::Quit) | Err(_) => break,
+                    Ok(_) => ep
+                        .try_send(&Message::RespError("shard store: block 3 unreadable".into()))
+                        .unwrap(),
                 }
             })
         })
         .collect();
-    links[0].send(Message::ReqCount);
-    match links[0].recv() {
-        Message::RespError(msg) => assert_eq!(msg, "shard store: block 3 unreadable"),
+    let cluster = Cluster::new(star, CommStats::new());
+    cluster.set_round("io");
+    let err = cluster.call(0, request::Count).unwrap_err();
+    match err {
+        CommError::Worker { worker: 0, detail, .. } => {
+            assert_eq!(detail, "shard store: block 3 unreadable")
+        }
         other => panic!("{other:?}"),
     }
-    links[0].send(Message::Quit);
+    cluster.shutdown();
     for h in handles {
         h.join().unwrap();
     }

@@ -1,0 +1,178 @@
+//! Fault injection: kill one worker mid-round on both transports and
+//! pin the failure contract of the typed session core —
+//!
+//! 1. `dis_kpca` returns `Err(CommError)` (no panic),
+//! 2. the error names the dead worker and the round it died in,
+//! 3. the master does not hang (bounded by the reply timeout, but the
+//!    hang-up markers fire long before it),
+//! 4. the surviving workers receive `Quit` and shut down cleanly.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use diskpca::comm::{memory, tcp, Cluster, CommError, CommStats, Endpoint, Message};
+use diskpca::coordinator::{dis_kpca, Params, Worker};
+use diskpca::data::{clusters, partition_power_law, Data};
+use diskpca::kernels::Kernel;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+fn workload(s: usize) -> (Vec<Data>, Kernel, Params) {
+    let mut rng = Rng::seed_from(11);
+    let data = Data::Dense(clusters(8, 150, 3, 0.2, &mut rng));
+    let shards = partition_power_law(&data, s, 2);
+    let kernel = Kernel::Gauss { gamma: 0.6 };
+    let params = Params {
+        k: 3,
+        t: 16,
+        p: 32,
+        n_lev: 8,
+        n_adapt: 12,
+        m_rff: 128,
+        t2: 64,
+        seed: 5,
+        ..Params::default()
+    };
+    (shards, kernel, params)
+}
+
+/// Serve `die_after` requests, then exit without replying to the
+/// next one — a worker dying mid-round with a request in hand.
+fn doomed_worker(
+    mut endpoint: impl Endpoint,
+    shard: Data,
+    kernel: Kernel,
+    die_after: usize,
+) {
+    let mut worker = Worker::new(shard, kernel, Arc::new(NativeBackend::new()));
+    let mut served = 0usize;
+    loop {
+        let req = match endpoint.recv_req() {
+            Ok(req) => req,
+            Err(_) => return,
+        };
+        if matches!(req, Message::Quit) {
+            return;
+        }
+        if served == die_after {
+            return; // die holding an unanswered request
+        }
+        let resp = worker.handle(req);
+        if endpoint.send_resp(resp).is_err() {
+            return;
+        }
+        served += 1;
+    }
+}
+
+/// Requests each worker sees under dis_kpca: ReqEmbed (round
+/// "1-embed"), ReqSketchEmbed + ReqScores ("2-disLS"), … — dying
+/// after 2 served requests drops the worker inside round "2-disLS".
+const DIE_AFTER: usize = 2;
+const DEAD_WORKER: usize = 1;
+const EXPECT_ROUND: &str = "2-disLS";
+
+fn assert_names_worker_and_round(err: &CommError) {
+    assert_eq!(
+        err.worker(),
+        Some(DEAD_WORKER),
+        "error must name the dead worker: {err}"
+    );
+    assert_eq!(err.round(), EXPECT_ROUND, "error must name the round: {err}");
+    assert!(matches!(err, CommError::Link { .. }), "expected a link failure, got {err:?}");
+    // the rendered message carries both, for logs/exit paths
+    let text = err.to_string();
+    assert!(text.contains("worker 1"), "{text}");
+    assert!(text.contains(EXPECT_ROUND), "{text}");
+}
+
+#[test]
+fn memory_worker_death_mid_round_aborts_with_context() {
+    let (shards, kernel, params) = workload(3);
+    let (star, endpoints) = memory::star(shards.len());
+    let cluster = Cluster::new(star, CommStats::new());
+    // a genuine deadlock would otherwise stall the test binary
+    cluster.set_reply_timeout(Duration::from_secs(60));
+    let handles: Vec<_> = shards
+        .into_iter()
+        .zip(endpoints)
+        .enumerate()
+        .map(|(i, (shard, ep))| {
+            std::thread::spawn(move || {
+                if i == DEAD_WORKER {
+                    doomed_worker(ep, shard, kernel, DIE_AFTER);
+                } else {
+                    Worker::new(shard, kernel, Arc::new(NativeBackend::new())).run(ep);
+                }
+            })
+        })
+        .collect();
+    let err = dis_kpca(&cluster, kernel, &params).unwrap_err();
+    assert_names_worker_and_round(&err);
+    // survivors shut down cleanly on Quit — join() would hang forever
+    // if the protocol left them blocked mid-round
+    cluster.shutdown();
+    for h in handles {
+        h.join().expect("worker thread panicked");
+    }
+}
+
+#[test]
+fn tcp_worker_death_mid_round_aborts_with_context() {
+    let (shards, kernel, params) = workload(3);
+    let (star, endpoints) = tcp::star(shards.len()).unwrap();
+    let cluster = Cluster::new(star, CommStats::new());
+    cluster.set_reply_timeout(Duration::from_secs(60));
+    let handles: Vec<_> = shards
+        .into_iter()
+        .zip(endpoints)
+        .enumerate()
+        .map(|(i, (shard, ep))| {
+            std::thread::spawn(move || {
+                if i == DEAD_WORKER {
+                    doomed_worker(ep, shard, kernel, DIE_AFTER);
+                } else {
+                    Worker::new(shard, kernel, Arc::new(NativeBackend::new())).run(ep);
+                }
+            })
+        })
+        .collect();
+    let err = dis_kpca(&cluster, kernel, &params).unwrap_err();
+    assert_names_worker_and_round(&err);
+    cluster.shutdown();
+    for h in handles {
+        h.join().expect("worker thread panicked");
+    }
+}
+
+/// The drop guard alone must release TCP workers after an aborted
+/// round — no explicit `shutdown()` call.
+#[test]
+fn drop_guard_releases_workers_after_abort() {
+    let (shards, kernel, params) = workload(3);
+    let (star, endpoints) = tcp::star(shards.len()).unwrap();
+    let handles: Vec<_> = shards
+        .into_iter()
+        .zip(endpoints)
+        .enumerate()
+        .map(|(i, (shard, ep))| {
+            std::thread::spawn(move || {
+                if i == DEAD_WORKER {
+                    doomed_worker(ep, shard, kernel, DIE_AFTER);
+                } else {
+                    Worker::new(shard, kernel, Arc::new(NativeBackend::new())).run(ep);
+                }
+            })
+        })
+        .collect();
+    {
+        let cluster = Cluster::new(star, CommStats::new());
+        cluster.set_reply_timeout(Duration::from_secs(60));
+        let err = dis_kpca(&cluster, kernel, &params).unwrap_err();
+        assert_eq!(err.worker(), Some(DEAD_WORKER));
+        // cluster dropped here → drop guard sends Quit to survivors
+    }
+    for h in handles {
+        h.join().expect("worker thread panicked");
+    }
+}

@@ -221,8 +221,8 @@ fn dis_kpca_identical_across_thread_counts() {
             kernel,
             Arc::new(NativeBackend::new()),
             move |cluster| {
-                let sol = dis_kpca(cluster, kernel, &params);
-                let (err, trace) = dis_eval(cluster);
+                let sol = dis_kpca(cluster, kernel, &params).unwrap();
+                let (err, trace) = dis_eval(cluster).unwrap();
                 (sol, err, trace)
             },
         );

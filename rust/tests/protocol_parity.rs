@@ -1,0 +1,139 @@
+//! Transport/refactor parity: the typed session core (encode-once
+//! broadcast, completion-order gather) must leave protocol *outputs*
+//! untouched. For s ∈ {1, 4} and both transports (in-memory star,
+//! TCP loopback), `dis_kpca`, `dis_css` and `dis_krr` must produce
+//! bit-identical results and identical per-round `CommStats` word
+//! tables — the protocol is deterministic given the seed, and neither
+//! the transport nor the gather order may be observable.
+
+use std::sync::Arc;
+
+use diskpca::comm::{memory, tcp, Cluster, CommStats, Endpoint, Star};
+use diskpca::coordinator::{dis_css, dis_eval, dis_kpca, dis_krr, Params, Worker};
+use diskpca::data::{clusters, partition_power_law, Data};
+use diskpca::kernels::Kernel;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+fn workload(s: usize) -> (Vec<Data>, Kernel, Params) {
+    let mut rng = Rng::seed_from(6);
+    let data = Data::Dense(clusters(9, 160, 3, 0.2, &mut rng));
+    let shards = partition_power_law(&data, s, 4);
+    let kernel = Kernel::Gauss { gamma: 0.7 };
+    let params = Params {
+        k: 3,
+        t: 16,
+        p: 32,
+        n_lev: 8,
+        n_adapt: 14,
+        m_rff: 128,
+        t2: 64,
+        seed: 21,
+        ..Params::default()
+    };
+    (shards, kernel, params)
+}
+
+/// Everything parity compares: solution bits, eval bits, CSS and KRR
+/// outputs, and the full per-round word table.
+struct Outcome {
+    y_bits: Vec<u64>,
+    coeff_bits: Vec<u64>,
+    err: u64,
+    trace: u64,
+    css_residual: u64,
+    krr_alpha_bits: Vec<u64>,
+    table: Vec<(String, usize, usize)>,
+}
+
+fn drive<E: Endpoint + Send + 'static>(
+    shards: Vec<Data>,
+    kernel: Kernel,
+    params: Params,
+    star: Star,
+    endpoints: Vec<E>,
+) -> Outcome {
+    let stats = CommStats::new();
+    let cluster = Cluster::new(star, stats.clone());
+    let handles: Vec<_> = shards
+        .into_iter()
+        .zip(endpoints)
+        .map(|(shard, ep)| {
+            let be = Arc::new(NativeBackend::new());
+            std::thread::spawn(move || Worker::new(shard, kernel, be).run(ep))
+        })
+        .collect();
+    let sol = dis_kpca(&cluster, kernel, &params).unwrap();
+    let (err, trace) = dis_eval(&cluster).unwrap();
+    let css = dis_css(&cluster, kernel, &params).unwrap();
+    let krr = dis_krr(&cluster, kernel, &css.y, 1e-3, 99).unwrap();
+    cluster.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+    Outcome {
+        y_bits: sol.y.data().iter().map(|v| v.to_bits()).collect(),
+        coeff_bits: sol.coeffs.data().iter().map(|v| v.to_bits()).collect(),
+        err: err.to_bits(),
+        trace: trace.to_bits(),
+        css_residual: css.residual.to_bits(),
+        krr_alpha_bits: krr.alpha.iter().map(|v| v.to_bits()).collect(),
+        table: stats.table(),
+    }
+}
+
+fn run_memory(s: usize) -> Outcome {
+    let (shards, kernel, params) = workload(s);
+    let (star, endpoints) = memory::star(shards.len());
+    drive(shards, kernel, params, star, endpoints)
+}
+
+fn run_tcp(s: usize) -> Outcome {
+    let (shards, kernel, params) = workload(s);
+    let (star, endpoints) = tcp::star(shards.len()).unwrap();
+    drive(shards, kernel, params, star, endpoints)
+}
+
+fn assert_outcomes_identical(a: &Outcome, b: &Outcome, label: &str) {
+    assert_eq!(a.y_bits, b.y_bits, "{label}: representative points differ");
+    assert_eq!(a.coeff_bits, b.coeff_bits, "{label}: coefficients differ");
+    assert_eq!(a.err, b.err, "{label}: eval error differs");
+    assert_eq!(a.trace, b.trace, "{label}: trace differs");
+    assert_eq!(a.css_residual, b.css_residual, "{label}: CSS certificate differs");
+    assert_eq!(a.krr_alpha_bits, b.krr_alpha_bits, "{label}: KRR coefficients differ");
+    assert_eq!(a.table, b.table, "{label}: per-round word tables differ");
+}
+
+#[test]
+fn transports_bit_identical_s4() {
+    let mem = run_memory(4);
+    let tcp_run = run_tcp(4);
+    assert_outcomes_identical(&mem, &tcp_run, "s=4 memory vs tcp");
+    // and deterministic across repeat runs of the same transport
+    let mem2 = run_memory(4);
+    assert_outcomes_identical(&mem, &mem2, "s=4 memory repeat");
+}
+
+#[test]
+fn transports_bit_identical_s1() {
+    let mem = run_memory(1);
+    let tcp_run = run_tcp(1);
+    assert_outcomes_identical(&mem, &tcp_run, "s=1 memory vs tcp");
+    let tcp2 = run_tcp(1);
+    assert_outcomes_identical(&tcp_run, &tcp2, "s=1 tcp repeat");
+}
+
+/// The word tables must also be invariant in *content*: every
+/// protocol round shows up with nonzero traffic in both directions
+/// where the algorithm sends any.
+#[test]
+fn word_table_covers_all_rounds() {
+    let out = run_memory(4);
+    let rounds: Vec<&str> = out.table.iter().map(|(r, _, _)| r.as_str()).collect();
+    for expect in [
+        "1-embed", "2-disLS", "3-levSample", "4-adaptive", "5-disLR", "6-eval", "7-cssCert",
+        "9-krr",
+    ] {
+        assert!(rounds.contains(&expect), "round {expect} missing from {rounds:?}");
+    }
+}

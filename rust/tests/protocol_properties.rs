@@ -67,8 +67,8 @@ fn prop_solution_sound_across_configs() {
             kernel,
             Arc::new(NativeBackend::new()),
             move |c| {
-                let sol = dis_kpca(c, kernel, &params);
-                let (e, t) = dis_eval(c);
+                let sol = dis_kpca(c, kernel, &params).unwrap();
+                let (e, t) = dis_eval(c).unwrap();
                 (sol, e, t)
             },
         );
@@ -191,7 +191,7 @@ fn prop_css_certificate_sound() {
             shards,
             kernel,
             Arc::new(NativeBackend::new()),
-            move |c| dis_css(c, kernel, &params),
+            move |c| dis_css(c, kernel, &params).unwrap(),
         );
         let frac = sol.residual_fraction();
         assert!((0.0..=1.0).contains(&frac), "trial {trial}: frac {frac}");
@@ -229,8 +229,8 @@ fn prop_boost_returns_min_attempt() {
             kernel,
             Arc::new(NativeBackend::new()),
             move |c| {
-                let run = dis_kpca_boosted(c, kernel, &params, 3);
-                let (err, _) = dis_eval(c);
+                let run = dis_kpca_boosted(c, kernel, &params, 3).unwrap();
+                let (err, _) = dis_eval(c).unwrap();
                 (run, err)
             },
         );
@@ -281,8 +281,8 @@ fn prop_degenerate_data_survives() {
                 kernel,
                 Arc::new(NativeBackend::new()),
                 move |c| {
-                    let _ = dis_kpca(c, kernel, &params);
-                    dis_eval(c)
+                    let _ = dis_kpca(c, kernel, &params).unwrap();
+                    dis_eval(c).unwrap()
                 },
             );
             assert!(err >= -1e-6, "err {err}");
@@ -308,12 +308,147 @@ fn prop_comm_table_sums_to_total() {
             kernel,
             Arc::new(NativeBackend::new()),
             move |c| {
-                let _ = dis_kpca(c, kernel, &params);
-                dis_eval(c)
+                let _ = dis_kpca(c, kernel, &params).unwrap();
+                dis_eval(c).unwrap()
             },
         );
         let table_total: usize = stats.table().iter().map(|(_, u, d)| u + d).sum();
         assert_eq!(table_total, stats.total_words());
         assert!(stats.message_count() > 0);
+    }
+}
+
+/// Compile-time exhaustive index over `Message` variants: adding a
+/// variant without extending `canonical_messages` below breaks this
+/// match, which is the point — the codec coverage test can then never
+/// silently miss a frame.
+fn variant_index(m: &Message) -> usize {
+    use Message::*;
+    match m {
+        ReqEmbed { .. } => 0,
+        ReqSketchEmbed { .. } => 1,
+        ReqScores { .. } => 2,
+        ReqSampleLeverage { .. } => 3,
+        ReqResiduals { .. } => 4,
+        ReqSampleAdaptive { .. } => 5,
+        ReqProjectSketch { .. } => 6,
+        ReqFinal { .. } => 7,
+        ReqEvalError => 8,
+        ReqEvalTrace => 9,
+        ReqSampleUniform { .. } => 10,
+        ReqKmeansStep { .. } => 11,
+        ReqCount => 12,
+        Quit => 13,
+        RespMat(_) => 14,
+        RespScalar(_) => 15,
+        RespCount(_) => 16,
+        RespPoints(_) => 17,
+        RespKmeans { .. } => 18,
+        Ack => 19,
+        ReqSetSolution { .. } => 20,
+        ReqSampleProjected { .. } => 21,
+        ReqBusyTime => 22,
+        ReqScoresVec => 23,
+        ReqKrrStats { .. } => 24,
+        RespKrr { .. } => 25,
+        ReqKrrEval { .. } => 26,
+        RespError(_) => 27,
+    }
+}
+
+/// One canonical instance of every `Message` variant, with both dense
+/// and sparse point payloads represented.
+fn canonical_messages() -> Vec<Message> {
+    let mut rng = Rng::seed_from(0xa11);
+    let m = Mat::from_fn(3, 4, |_, _| rng.normal());
+    let tall = Mat::from_fn(5, 2, |_, _| rng.normal());
+    let dense = PointSet::Dense(Mat::from_fn(4, 3, |_, _| rng.normal()));
+    let sparse = PointSet::Sparse {
+        d: 40,
+        cols: vec![vec![(0, 1.5), (7, -2.0)], vec![], vec![(39, 0.25)]],
+    };
+    let spec = diskpca::embed::EmbedSpec {
+        kernel: diskpca::kernels::Kernel::Laplace { gamma: 0.4 },
+        m: 256,
+        t2: 128,
+        t: 32,
+        seed: 77,
+    };
+    vec![
+        Message::ReqEmbed { spec },
+        Message::ReqSketchEmbed { p: 9, seed: 2 },
+        Message::ReqScores { z: m.clone() },
+        Message::ReqSampleLeverage { count: 3, seed: 4 },
+        Message::ReqResiduals { pts: sparse.clone() },
+        Message::ReqSampleAdaptive { count: 5, seed: 6 },
+        Message::ReqProjectSketch { pts: dense.clone(), w: 7, seed: 8 },
+        Message::ReqFinal { coeffs: tall.clone() },
+        Message::ReqEvalError,
+        Message::ReqEvalTrace,
+        Message::ReqSampleUniform { count: 9, seed: 10 },
+        Message::ReqKmeansStep { centers: m.clone() },
+        Message::ReqCount,
+        Message::Quit,
+        Message::RespMat(m.clone()),
+        Message::RespScalar(-0.5),
+        Message::RespCount(11),
+        Message::RespPoints(sparse),
+        Message::RespKmeans { sums: m.clone(), counts: vec![2, 0, 5, 1], obj: 3.25 },
+        Message::Ack,
+        Message::ReqSetSolution { pts: dense, coeffs: tall.clone() },
+        Message::ReqSampleProjected { count: 12, seed: 13 },
+        Message::ReqBusyTime,
+        Message::ReqScoresVec,
+        Message::ReqKrrStats {
+            pts: PointSet::Dense(Mat::from_fn(2, 2, |i, j| (i * 2 + j) as f64)),
+            teacher_seed: 14,
+        },
+        Message::RespKrr { g: m.clone(), b: tall, tnorm: 6.5 },
+        Message::ReqKrrEval { alpha: Mat::from_fn(4, 1, |i, _| i as f64 * 0.1) },
+        Message::RespError("block 3 unreadable".into()),
+    ]
+}
+
+/// Property: EVERY wire frame variant — requests, responses,
+/// `RespError` included — round-trips the codec with an identical
+/// byte encoding (payload equality without needing `PartialEq`) and
+/// an invariant word count across encode/decode.
+#[test]
+fn codec_roundtrip_covers_every_variant() {
+    let msgs = canonical_messages();
+    // exhaustiveness: one of each variant, none forgotten
+    let mut seen: Vec<usize> = msgs.iter().map(variant_index).collect();
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen, (0..28).collect::<Vec<_>>(), "canonical list must cover all 28 variants");
+    for msg in msgs {
+        let bytes = codec::encode(&msg);
+        let back = codec::decode(&bytes).unwrap_or_else(|e| panic!("{}: {e:?}", msg.tag()));
+        assert_eq!(back.tag(), msg.tag(), "variant changed across the wire");
+        assert_eq!(back.words(), msg.words(), "{}: words() not invariant", msg.tag());
+        assert_eq!(variant_index(&back), variant_index(&msg));
+        // re-encoding the decoded message must reproduce the exact
+        // bytes — i.e. every payload field survived bit-for-bit.
+        assert_eq!(codec::encode(&back), bytes, "{}: lossy roundtrip", msg.tag());
+    }
+}
+
+/// Property: truncating a valid frame at any byte boundary yields a
+/// decode error (never a panic or a bogus message) for every variant.
+#[test]
+fn codec_rejects_truncation_of_every_variant() {
+    for msg in canonical_messages() {
+        let bytes = codec::encode(&msg);
+        for cut in [0, 1, bytes.len().saturating_sub(1)] {
+            if cut >= bytes.len() {
+                continue;
+            }
+            assert!(
+                codec::decode(&bytes[..cut]).is_err(),
+                "{}: truncation at {cut}/{} decoded",
+                msg.tag(),
+                bytes.len()
+            );
+        }
     }
 }

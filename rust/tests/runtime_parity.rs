@@ -149,8 +149,8 @@ fn diskpca_end_to_end_on_xla_backend() {
         chunk_rows: 0,
     };
     let ((sol, err, trace), _stats) = run_cluster(shards, kernel, backend, move |cluster| {
-        let sol = dis_kpca(cluster, kernel, &params);
-        let (err, trace) = dis_eval(cluster);
+        let sol = dis_kpca(cluster, kernel, &params).unwrap();
+        let (err, trace) = dis_eval(cluster).unwrap();
         (sol, err, trace)
     });
     assert_eq!(sol.k(), 4);

@@ -53,8 +53,8 @@ fn run_once(
         Arc::new(NativeBackend::new()),
         chunk_rows,
         move |cluster| {
-            let sol = dis_kpca(cluster, kernel, &p);
-            let (err, trace) = dis_eval(cluster);
+            let sol = dis_kpca(cluster, kernel, &p).unwrap();
+            let (err, trace) = dis_eval(cluster).unwrap();
             (sol, err, trace)
         },
     );
@@ -110,8 +110,8 @@ fn poly_kernel_streaming_parity() {
             Arc::new(NativeBackend::new()),
             chunk,
             move |cluster| {
-                let sol = dis_kpca(cluster, kernel, &p);
-                let (err, trace) = dis_eval(cluster);
+                let sol = dis_kpca(cluster, kernel, &p).unwrap();
+                let (err, trace) = dis_eval(cluster).unwrap();
                 (sol.y, sol.coeffs, err, trace)
             },
         )
@@ -147,9 +147,9 @@ fn disk_backed_store_matches_resident_end_to_end() {
             ShardSource::Store(ShardStore::open(&path).unwrap())
         })
         .collect();
-    let (links, endpoints) = diskpca::comm::memory::star(sources.len());
+    let (star, endpoints) = diskpca::comm::memory::star(sources.len());
     let stats = diskpca::comm::CommStats::new();
-    let cluster = diskpca::comm::Cluster::new(links, stats.clone());
+    let cluster = diskpca::comm::Cluster::new(star, stats.clone());
     let handles: Vec<_> = sources
         .into_iter()
         .zip(endpoints)
@@ -159,8 +159,8 @@ fn disk_backed_store_matches_resident_end_to_end() {
             })
         })
         .collect();
-    let sol = dis_kpca(&cluster, kernel, &p);
-    let (err, trace) = dis_eval(&cluster);
+    let sol = dis_kpca(&cluster, kernel, &p).unwrap();
+    let (err, trace) = dis_eval(&cluster).unwrap();
     cluster.shutdown();
     for h in handles {
         h.join().unwrap();

@@ -36,8 +36,8 @@ fn workload() -> (Vec<Data>, Kernel, Params) {
 
 fn run_memory() -> (f64, f64, usize, usize) {
     let (shards, kernel, params) = workload();
-    let (links, endpoints) = memory::star(shards.len());
-    let cluster = Cluster::new(links, CommStats::new());
+    let (star, endpoints) = memory::star(shards.len());
+    let cluster = Cluster::new(star, CommStats::new());
     let handles: Vec<_> = shards
         .into_iter()
         .zip(endpoints)
@@ -46,8 +46,8 @@ fn run_memory() -> (f64, f64, usize, usize) {
             std::thread::spawn(move || Worker::new(shard, kernel, be).run(ep))
         })
         .collect();
-    let sol = dis_kpca(&cluster, kernel, &params);
-    let (err, trace) = dis_eval(&cluster);
+    let sol = dis_kpca(&cluster, kernel, &params).unwrap();
+    let (err, trace) = dis_eval(&cluster).unwrap();
     let words = cluster.stats.total_words();
     cluster.shutdown();
     for h in handles {
@@ -58,8 +58,8 @@ fn run_memory() -> (f64, f64, usize, usize) {
 
 fn run_tcp() -> (f64, f64, usize, usize) {
     let (shards, kernel, params) = workload();
-    let (links, endpoints) = tcp::star(shards.len()).unwrap();
-    let cluster = Cluster::new(links, CommStats::new());
+    let (star, endpoints) = tcp::star(shards.len()).unwrap();
+    let cluster = Cluster::new(star, CommStats::new());
     let handles: Vec<_> = shards
         .into_iter()
         .zip(endpoints)
@@ -68,8 +68,8 @@ fn run_tcp() -> (f64, f64, usize, usize) {
             std::thread::spawn(move || Worker::new(shard, kernel, be).run(ep))
         })
         .collect();
-    let sol = dis_kpca(&cluster, kernel, &params);
-    let (err, trace) = dis_eval(&cluster);
+    let sol = dis_kpca(&cluster, kernel, &params).unwrap();
+    let (err, trace) = dis_eval(&cluster).unwrap();
     let words = cluster.stats.total_words();
     cluster.shutdown();
     for h in handles {
@@ -101,18 +101,18 @@ fn css_and_krr_over_tcp_match_memory() {
         kernel: Kernel,
         params: &Params,
     ) -> (f64, f64, Vec<f64>) {
-        let css = dis_css(cluster, kernel, params);
-        let model = dis_krr(cluster, kernel, &css.y, 1e-3, 77);
+        let css = dis_css(cluster, kernel, params).unwrap();
+        let model = dis_krr(cluster, kernel, &css.y, 1e-3, 77).unwrap();
         (css.residual, model.train_mse, model.alpha)
     }
     fn spawn_and_run<E: diskpca::comm::Endpoint + Send + 'static>(
         shards: Vec<Data>,
         kernel: Kernel,
         params: &Params,
-        links: Vec<Box<dyn diskpca::comm::WorkerLink>>,
+        star: diskpca::comm::Star,
         endpoints: Vec<E>,
     ) -> (f64, f64, Vec<f64>) {
-        let cluster = Cluster::new(links, CommStats::new());
+        let cluster = Cluster::new(star, CommStats::new());
         let handles: Vec<_> = shards
             .into_iter()
             .zip(endpoints)
@@ -129,11 +129,11 @@ fn css_and_krr_over_tcp_match_memory() {
         out
     }
     let (shards, kernel, params) = workload();
-    let (links, endpoints) = memory::star(shards.len());
-    let (res_m, mse_m, alpha_m) = spawn_and_run(shards, kernel, &params, links, endpoints);
+    let (star, endpoints) = memory::star(shards.len());
+    let (res_m, mse_m, alpha_m) = spawn_and_run(shards, kernel, &params, star, endpoints);
     let (shards, kernel, params) = workload();
-    let (links, endpoints) = tcp::star(shards.len()).unwrap();
-    let (res_t, mse_t, alpha_t) = spawn_and_run(shards, kernel, &params, links, endpoints);
+    let (star, endpoints) = tcp::star(shards.len()).unwrap();
+    let (res_t, mse_t, alpha_t) = spawn_and_run(shards, kernel, &params, star, endpoints);
     assert!((res_m - res_t).abs() < 1e-9 * res_m.abs().max(1.0));
     assert!((mse_m - mse_t).abs() < 1e-9 * mse_m.abs().max(1.0));
     assert_eq!(alpha_m.len(), alpha_t.len());
@@ -146,8 +146,8 @@ fn css_and_krr_over_tcp_match_memory() {
 fn kmeans_over_tcp() {
     let (shards, kernel, params) = workload();
     let n: usize = shards.iter().map(|s| s.len()).sum();
-    let (links, endpoints) = tcp::star(shards.len()).unwrap();
-    let cluster = Cluster::new(links, CommStats::new());
+    let (star, endpoints) = tcp::star(shards.len()).unwrap();
+    let cluster = Cluster::new(star, CommStats::new());
     let handles: Vec<_> = shards
         .into_iter()
         .zip(endpoints)
@@ -156,8 +156,8 @@ fn kmeans_over_tcp() {
             std::thread::spawn(move || Worker::new(shard, kernel, be).run(ep))
         })
         .collect();
-    let _ = dis_kpca(&cluster, kernel, &params);
-    let res = distributed_kmeans(&cluster, 3, 20, 7);
+    let _ = dis_kpca(&cluster, kernel, &params).unwrap();
+    let res = distributed_kmeans(&cluster, 3, 20, 7).unwrap();
     cluster.shutdown();
     for h in handles {
         h.join().unwrap();
