@@ -43,5 +43,13 @@ echo "==> streaming bench smoke + baseline diff (warn-only, threshold 25%)"
 DISKPCA_BENCH_FAST=1 cargo bench --bench streaming
 echo "==> protocol bench smoke + baseline diff (warn-only, threshold 25%)"
 DISKPCA_BENCH_FAST=1 cargo bench --bench protocol
+echo "==> serve bench smoke + baseline diff (warn-only, threshold 25%)"
+DISKPCA_BENCH_FAST=1 cargo bench --bench serve
+
+# Serve-layer smoke: the example runs a real multi-job session and
+# asserts the warm-state invariant (second same-spec job performs zero
+# 1-embed communication, solution unchanged) plus transform parity.
+echo "==> serve example smoke (multi-job warm-state session)"
+cargo run --release --example serve_jobs
 
 echo "CI OK"

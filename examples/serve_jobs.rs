@@ -1,0 +1,138 @@
+//! Multi-job serving session walkthrough (`cargo run --release
+//! --example serve_jobs`) — also the CI smoke for the serve layer.
+//!
+//! One persistent in-process cluster runs four jobs and a query batch:
+//!
+//! 1. a cold disKPCA fit (pays the `1-embed` round),
+//! 2. a warm fit with an identical `EmbedSpec` (zero `1-embed` words
+//!    and a bit-identical solution — both asserted),
+//! 3. a cold fit under a different seed (new spec ⇒ re-embed),
+//! 4. a CSS job (warm against job 3's spec) + a KRR job on its columns,
+//!
+//! then projects fresh points through the installed solution with
+//! `Service::transform` and cross-checks against the master-side
+//! `KpcaSolution::project`.
+
+use std::sync::Arc;
+
+use diskpca::coordinator::Params;
+use diskpca::data::{by_name, partition_power_law, Data};
+use diskpca::kernels::{median_trick_gamma, Kernel};
+use diskpca::linalg::Mat;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+use diskpca::serve::Service;
+
+fn main() {
+    let scale = 0.05;
+    let spec = by_name("susy_like", scale).expect("registry dataset");
+    let data = spec.generate(11);
+    let mut rng = Rng::seed_from(13);
+    let gamma = median_trick_gamma(&data, 0.2, 128, &mut rng);
+    let kernel = Kernel::Gauss { gamma };
+    let shards = partition_power_law(&data, 4, 17);
+    let params = Params {
+        k: 6,
+        t: 32,
+        p: 64,
+        n_lev: 16,
+        n_adapt: 40,
+        m_rff: 256,
+        t2: 128,
+        seed: 5,
+        ..Params::default()
+    };
+
+    println!("== serve session: 4 workers, susy_like ×{scale}, gauss γ={gamma:.3} ==\n");
+    let mut svc = Service::in_process(shards, kernel, Arc::new(NativeBackend::new()), 0);
+
+    // ---- job 0: cold fit ----
+    let cold = svc.run_kpca(&params).unwrap();
+    let cold_words = cold.job.stats.total_words();
+    let cold_embed = cold.job.stats.round_words("1-embed");
+    println!(
+        "job0 (cold kpca):  |Y|={:<3} words={:<7} 1-embed={}",
+        cold.output.num_points(),
+        cold_words,
+        cold_embed
+    );
+    assert!(!cold.embed_reused);
+    assert!(cold_embed > 0);
+
+    // ---- job 1: warm fit — identical spec, 1-embed skipped ----
+    let warm = svc.run_kpca(&params).unwrap();
+    let warm_words = warm.job.stats.total_words();
+    println!(
+        "job1 (warm kpca):  |Y|={:<3} words={:<7} 1-embed={} (skipped: same EmbedSpec)",
+        warm.output.num_points(),
+        warm_words,
+        warm.job.stats.round_words("1-embed")
+    );
+    assert!(warm.embed_reused, "identical spec must reuse the installed embedding");
+    assert_eq!(
+        warm.job.stats.round_words("1-embed"),
+        0,
+        "warm job performed 1-embed communication"
+    );
+    // the acceptance invariant: the skip is invisible in the solution
+    assert!(warm.output.y.data() == cold.output.y.data());
+    assert!(warm.output.coeffs.data() == cold.output.coeffs.data());
+
+    // ---- job 2: different seed ⇒ different spec ⇒ cold again ----
+    let other = svc.run_kpca(&Params { seed: 6, ..params }).unwrap();
+    println!(
+        "job2 (cold kpca):  |Y|={:<3} words={:<7} 1-embed={} (new spec: seed changed)",
+        other.output.num_points(),
+        other.job.stats.total_words(),
+        other.job.stats.round_words("1-embed")
+    );
+    assert!(!other.embed_reused);
+    assert!(other.job.stats.round_words("1-embed") > 0);
+
+    // ---- jobs 3–4: CSS + KRR downstream on the same cluster ----
+    let css = svc.run_css(&Params { seed: 6, ..params }).unwrap();
+    println!(
+        "job3 (warm css):   |Y|={:<3} words={:<7} residual_frac={:.4}",
+        css.output.y.len(),
+        css.job.stats.total_words(),
+        css.output.residual_fraction()
+    );
+    assert!(css.embed_reused, "css after job2 shares seed-6 warm state");
+    let krr = svc.run_krr(&css.output.y, 1e-3, 99).unwrap();
+    println!(
+        "job4 (krr):        |α|={:<3} words={:<7} R²={:.4}",
+        krr.output.alpha.len(),
+        krr.job.stats.total_words(),
+        krr.output.r_squared()
+    );
+
+    // ---- query serving: fresh points through the live solution ----
+    // CSS and KRR install no projection solution, so the one serving
+    // queries is still job2's disLR output.
+    let n_query = 512;
+    let batch = Mat::from_fn(data.dim(), n_query, |_, _| rng.normal());
+    let t0 = std::time::Instant::now();
+    let served = svc.transform(&batch).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    let local = other.output.project(&Data::Dense(batch));
+    let diff = served.max_abs_diff(&local);
+    println!(
+        "\ntransform: {n_query} points → {}×{} in {:.1} ms ({:.0} points/s), \
+         max|served − local| = {diff:.2e}",
+        served.rows(),
+        served.cols(),
+        dt * 1e3,
+        n_query as f64 / dt.max(1e-9)
+    );
+    assert!(diff < 1e-6, "served projection diverged from the solution: {diff}");
+
+    // ---- the economics ----
+    println!("\nwarm-state economics (same-spec fit): {cold_words} → {warm_words} words");
+    assert!(warm_words < cold_words, "warm job must ship fewer words than the cold one");
+    println!("\nlifetime table (jobs namespaced, queries under svc:):");
+    for (round, up, down) in svc.stats().table() {
+        println!("  {round:<22} up {up:>9}  down {down:>9}");
+    }
+    svc.shutdown();
+    println!("\nok");
+}

@@ -1,0 +1,137 @@
+//! Serving-layer benchmarks: what a persistent multi-job cluster buys
+//! over relaunching, and what the batched projection path sustains.
+//!
+//! Rows:
+//! - `serve/session-cold` — spawn a service, run one fit, tear down
+//!   (the per-job cost a relaunch-per-fit deployment pays every time).
+//! - `serve/job-cold` / `serve/job-warm` — one fit on a persistent
+//!   service, with a fresh `EmbedSpec` (re-embed) vs the installed one
+//!   (the `1-embed` round skipped + worker-side embed cache hits).
+//! - `serve/transform[...]` — batched projection of fresh points
+//!   through the installed solution, whole-batch and chunk-bounded.
+//!
+//! Emits `BENCH_serve.json` and diffs it against
+//! `bench_baseline/BENCH_serve.json` with the repo's warn-only >25%
+//! threshold. `DISKPCA_BENCH_FAST=1` (the CI smoke) shrinks the
+//! workload; the checked-in baseline is calibrated for fast mode.
+//! Override paths with `DISKPCA_BENCH_BASELINE` / `DISKPCA_BENCH_OUT`.
+
+use std::sync::Arc;
+
+use diskpca::bench_harness::{black_box, Bencher};
+use diskpca::coordinator::Params;
+use diskpca::data::{by_name, Data};
+use diskpca::kernels::{median_trick_gamma, Kernel};
+use diskpca::linalg::Mat;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+use diskpca::serve::Service;
+
+const REGRESSION_THRESHOLD: f64 = 1.25;
+
+fn params() -> Params {
+    Params {
+        k: 8,
+        t: 32,
+        p: 64,
+        n_lev: 20,
+        n_adapt: 60,
+        m_rff: 256,
+        t2: 128,
+        w: 0,
+        seed: 5,
+        threads: 0,
+        chunk_rows: 0,
+    }
+}
+
+fn workload(scale: f64, workers: usize) -> (Vec<Data>, Data, Kernel) {
+    let mut spec = by_name("susy_like", scale).unwrap();
+    spec.s = workers;
+    let data = spec.generate(11);
+    let mut rng = Rng::seed_from(13);
+    let gamma = median_trick_gamma(&data, 0.2, 128, &mut rng);
+    let shards = spec.partition(&data, 17);
+    (shards, data, Kernel::Gauss { gamma })
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let backend = Arc::new(NativeBackend::new());
+    let scale = if std::env::var("DISKPCA_BENCH_FAST").is_ok() { 0.02 } else { 0.08 };
+    let (shards, data, kernel) = workload(scale, 4);
+    let p = params();
+
+    // ---- cold session: spawn + fit + tear down, every iteration ----
+    {
+        let shards = shards.clone();
+        let be = backend.clone();
+        b.bench("serve/session-cold[kpca] s=4", move || {
+            let mut svc = Service::in_process(shards.clone(), kernel, be.clone(), 0);
+            let n = svc.run_kpca(&p).unwrap().output.num_points();
+            svc.shutdown();
+            black_box(n)
+        });
+    }
+
+    // ---- persistent service: cold vs warm fits ----
+    let mut svc = Service::in_process(shards.clone(), kernel, backend.clone(), 0);
+    svc.run_kpca(&p).unwrap(); // spin up the session
+    // a fresh seed every iteration ⇒ a new EmbedSpec ⇒ full re-embed
+    let mut cold_seed = 1000u64;
+    b.bench("serve/job-cold[kpca] s=4", || {
+        cold_seed += 1;
+        black_box(
+            svc.run_kpca(&Params { seed: cold_seed, ..p })
+                .unwrap()
+                .output
+                .num_points(),
+        )
+    });
+    svc.run_kpca(&p).unwrap(); // reinstall the shared spec
+    b.bench("serve/job-warm[kpca] s=4", || {
+        let report = svc.run_kpca(&p).unwrap();
+        assert!(report.embed_reused, "warm bench must hit the warm path");
+        black_box(report.output.num_points())
+    });
+
+    // ---- batched projection serving ----
+    let mut rng = Rng::seed_from(29);
+    let batch = Mat::from_fn(data.dim(), 512, |_, _| rng.normal());
+    b.bench("serve/transform[512] s=4", || {
+        black_box(svc.transform(&batch).unwrap().cols())
+    });
+    svc.set_transform_chunk(64);
+    b.bench("serve/transform-chunked[512,cols=64] s=4", || {
+        black_box(svc.transform(&batch).unwrap().cols())
+    });
+    svc.shutdown();
+
+    b.write_csv("results/bench_serve.csv").unwrap();
+
+    // ---- median JSON + warn-only regression diff vs baseline ----
+    let out = std::env::var("DISKPCA_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    b.write_median_json(&out).expect("write bench json");
+    println!("wrote {out} ({} rows)", b.samples.len());
+
+    let baseline_path = std::env::var("DISKPCA_BENCH_BASELINE")
+        .unwrap_or_else(|_| "bench_baseline/BENCH_serve.json".into());
+    match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => {
+            let warnings = b.regressions_vs(&text, REGRESSION_THRESHOLD);
+            if warnings.is_empty() {
+                println!("no regressions > 25% vs {baseline_path}");
+            } else {
+                for w in &warnings {
+                    println!("WARNING: bench regression: {w}");
+                }
+                println!(
+                    "({} warning(s) vs {baseline_path}; informational only — update the baseline \
+                     by copying {out} over it when a slowdown is intended)",
+                    warnings.len()
+                );
+            }
+        }
+        Err(e) => println!("baseline {baseline_path} unavailable ({e}) — skipping diff"),
+    }
+}

@@ -61,6 +61,11 @@ COMMANDS
   shard      write power-law shards of a dataset to disk
   master     multi-process master:  diskpca master --listen 0.0.0.0:7700 --workers 4 --kernel gauss --gamma 0.5
   worker     multi-process worker:  diskpca worker --connect host:7700 --data shard.bin --kernel gauss --gamma 0.5
+  serve      persistent multi-job session: run --jobs N fits on one cluster
+             (warm EmbedSpec reuse skips the 1-embed round), then serve a
+             --transform-point projection batch. In-process by default;
+             with --listen/--workers it drives external `diskpca worker`s:
+             diskpca serve susy_like --jobs 4 --transform 1024
   help       this message
 
 COMMON FLAGS
@@ -77,6 +82,11 @@ COMMON FLAGS
                                chunked .dkps stores when set; `worker` maps
                                .dkps shards out-of-core
   --workers N                  override the dataset's worker count
+  --jobs N                     serve: fits to run on the session (default 3)
+  --transform N                serve: query points to project (default 256)
+  --embed-cache-mb N           worker/serve: embed warm-cache byte budget in
+                               MiB (default 64, env DISKPCA_EMBED_CACHE_MB;
+                               0 disables caching)
   --config FILE                load key=value config file
   --out DIR                    results directory (default results)
 

@@ -313,6 +313,10 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.u8(27);
             w.str(msg);
         }
+        ReqProjectPoints { pts } => {
+            w.u8(28);
+            w.points(pts);
+        }
     }
     w.finish()
 }
@@ -361,6 +365,7 @@ pub fn decode(buf: &[u8]) -> Result<Message, CodecError> {
         }
         26 => ReqKrrEval { alpha: r.mat()? },
         27 => RespError(r.str()?),
+        28 => ReqProjectPoints { pts: r.points()? },
         t => return Err(CodecError::BadTag(t)),
     };
     Ok(msg)
@@ -457,6 +462,27 @@ mod tests {
         }
         match roundtrip(Message::ReqKrrEval { alpha: b.clone() }) {
             Message::ReqKrrEval { alpha } => assert!(mats_eq(&alpha, &b)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_project_points() {
+        let mut rng = Rng::seed_from(3);
+        let pts = PointSet::Dense(Mat::from_fn(4, 6, |_, _| rng.normal()));
+        match roundtrip(Message::ReqProjectPoints { pts: pts.clone() }) {
+            Message::ReqProjectPoints { pts: p } => {
+                assert!(mats_eq(&p.to_mat(), &pts.to_mat()))
+            }
+            other => panic!("{other:?}"),
+        }
+        // empty batches (fewer query points than workers) must survive
+        let empty = PointSet::Dense(Mat::zeros(4, 0));
+        match roundtrip(Message::ReqProjectPoints { pts: empty }) {
+            Message::ReqProjectPoints { pts: p } => {
+                assert_eq!(p.len(), 0);
+                assert_eq!(p.dim(), 4);
+            }
             other => panic!("{other:?}"),
         }
     }

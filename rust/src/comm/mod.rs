@@ -128,6 +128,43 @@ impl PointSet {
         }
     }
 
+    /// [`PointSet::concat`] with exact-duplicate columns removed
+    /// (bitwise comparison, first occurrence kept, order preserved).
+    ///
+    /// RepSample assembles Y through this: per-worker samples are
+    /// already deduplicated, but two workers can hold (and draw) the
+    /// same point, and the adaptive stage can re-draw a point already
+    /// in P — an exact duplicate makes K(Y,Y) exactly singular, so
+    /// `dis_low_rank`'s triangular solve emits junk coefficients.
+    /// Duplicates add nothing to span φ(Y); dropping them is lossless.
+    pub fn concat_dedup(sets: &[PointSet]) -> PointSet {
+        let cat = PointSet::concat(sets);
+        let mut seen = std::collections::HashSet::new();
+        let mut keep: Vec<usize> = Vec::with_capacity(cat.len());
+        for j in 0..cat.len() {
+            let key: Vec<u64> = match &cat {
+                PointSet::Dense(m) => (0..m.rows()).map(|i| m[(i, j)].to_bits()).collect(),
+                PointSet::Sparse { cols, .. } => cols[j]
+                    .iter()
+                    .flat_map(|&(r, v)| [r as u64, v.to_bits()])
+                    .collect(),
+            };
+            if seen.insert(key) {
+                keep.push(j);
+            }
+        }
+        if keep.len() == cat.len() {
+            return cat;
+        }
+        match cat {
+            PointSet::Dense(m) => PointSet::Dense(m.select_cols(&keep)),
+            PointSet::Sparse { d, cols } => PointSet::Sparse {
+                d,
+                cols: keep.into_iter().map(|j| cols[j].clone()).collect(),
+            },
+        }
+    }
+
     /// Extract selected columns of a [`crate::data::Data`] shard as a
     /// PointSet in the shard's natural encoding.
     pub fn from_data(x: &crate::data::Data, idx: &[usize]) -> PointSet {
@@ -195,6 +232,12 @@ pub enum Message {
     ReqKrrStats { pts: PointSet, teacher_seed: u64 },
     /// Evaluate a KRR coefficient vector α: reply Σⱼ (K(Aⁱ,Y)α − t)².
     ReqKrrEval { alpha: Mat },
+    /// Serving-path query: project a batch of *new* points through the
+    /// installed solution, reply LᵀΦ(batch) (k×|batch|). Any worker
+    /// can answer (the result depends only on the installed solution,
+    /// not the shard), so the serve layer spreads batches across the
+    /// star for throughput.
+    ReqProjectPoints { pts: PointSet },
     /// Number of local points.
     ReqCount,
     /// Cumulative compute-busy seconds on this worker (for the Fig-7
@@ -240,6 +283,7 @@ impl Message {
             ReqKmeansStep { centers } => centers.rows() * centers.cols(),
             ReqKrrStats { pts, .. } => pts.words() + 1,
             ReqKrrEval { alpha } => alpha.rows() * alpha.cols(),
+            ReqProjectPoints { pts } => pts.words(),
             RespKrr { g, b, .. } => g.rows() * g.cols() + b.rows() * b.cols() + 1,
             RespMat(m) => m.rows() * m.cols(),
             RespScalar(_) => 1,
@@ -274,6 +318,7 @@ impl Message {
             ReqScoresVec => "ReqScoresVec",
             ReqKrrStats { .. } => "ReqKrrStats",
             ReqKrrEval { .. } => "ReqKrrEval",
+            ReqProjectPoints { .. } => "ReqProjectPoints",
             RespKrr { .. } => "RespKrr",
             ReqCount => "ReqCount",
             ReqBusyTime => "ReqBusyTime",
@@ -609,6 +654,16 @@ pub struct Cluster {
     pub stats: CommStats,
     /// Current protocol-round label applied to accounting.
     round: Arc<Mutex<String>>,
+    /// Job-namespace prefix prepended to every round label in the
+    /// lifetime `stats` (and in error context) — the serve layer sets
+    /// `"job3:"` so two jobs on one cluster can never alias each
+    /// other's accounting rows. Empty (the default) is a no-op.
+    round_prefix: Mutex<String>,
+    /// Optional per-job stats sink: when set, every exchange is
+    /// *also* recorded here under the bare (unprefixed) round label,
+    /// so a job's table is directly comparable to a fresh
+    /// single-job cluster's.
+    job_stats: Mutex<Option<CommStats>>,
     /// Shared completion-order reply queue (all transports feed it).
     replies: Mutex<Receiver<ReplyEvent>>,
     /// Optional per-reply wait bound. `None` (the default) waits
@@ -641,6 +696,8 @@ impl Cluster {
             links: star.links,
             stats,
             round: Arc::new(Mutex::new("init".into())),
+            round_prefix: Mutex::new(String::new()),
+            job_stats: Mutex::new(None),
             replies: Mutex::new(star.replies),
             timeout: Mutex::new(timeout),
             poisoned: Mutex::new(None),
@@ -656,8 +713,41 @@ impl Cluster {
         *self.round.lock().unwrap() = name.to_string();
     }
 
+    /// Bare (unprefixed) label of the current round.
     fn round(&self) -> String {
         self.round.lock().unwrap().clone()
+    }
+
+    /// Set the job-namespace prefix applied to every subsequent round
+    /// label in the lifetime stats and in error context (`""` clears).
+    pub fn set_round_prefix(&self, prefix: &str) {
+        *self.round_prefix.lock().unwrap() = prefix.to_string();
+    }
+
+    /// Install (or clear) a per-job stats sink: exchanges are recorded
+    /// there under bare round labels in addition to the lifetime
+    /// [`Cluster::stats`].
+    pub fn set_job_stats(&self, stats: Option<CommStats>) {
+        *self.job_stats.lock().unwrap() = stats;
+    }
+
+    /// `prefix + round` — the label the lifetime stats and errors see.
+    fn qualify(&self, round: &str) -> String {
+        let prefix = self.round_prefix.lock().unwrap();
+        if prefix.is_empty() {
+            round.to_string()
+        } else {
+            format!("{prefix}{round}")
+        }
+    }
+
+    /// Record one message into the lifetime stats (prefixed label) and
+    /// the per-job sink, when set (bare label).
+    fn record(&self, round: &str, to_master: bool, words: usize) {
+        self.stats.record(&self.qualify(round), to_master, words);
+        if let Some(job) = self.job_stats.lock().unwrap().as_ref() {
+            job.record(round, to_master, words);
+        }
     }
 
     /// Label the upcoming exchanges with a round name and get a scoped
@@ -696,9 +786,9 @@ impl Cluster {
         self.links[worker].send(payload).map_err(|detail| {
             // a partially-sent round leaves the other workers' replies
             // undrained, exactly like a mid-gather abort
-            self.poison(CommError::Link { worker, round: round.to_string(), detail })
+            self.poison(CommError::Link { worker, round: self.qualify(round), detail })
         })?;
-        self.stats.record(round, false, payload.words());
+        self.record(round, false, payload.words());
         Ok(())
     }
 
@@ -707,6 +797,7 @@ impl Cluster {
     /// and return them reduced into `pending`'s order.
     fn collect(&self, pending: &[usize]) -> Result<Vec<Message>, CommError> {
         let round = self.round();
+        let full = self.qualify(&round);
         let timeout = *self.timeout.lock().unwrap();
         let mut slot_of = vec![None; self.links.len()];
         for (slot, &w) in pending.iter().enumerate() {
@@ -734,7 +825,7 @@ impl Cluster {
                         .collect();
                     return Err(self.poison(match e {
                         QueueWaitError::Timeout => {
-                            CommError::Timeout { round, pending: still }
+                            CommError::Timeout { round: full, pending: still }
                         }
                         // Every reply sender is gone: the transport
                         // itself died, not the clock — report a link
@@ -742,27 +833,27 @@ impl Cluster {
                         // reply, not a timeout.
                         QueueWaitError::Disconnected => CommError::Link {
                             worker: still.first().copied().unwrap_or(0),
-                            round,
+                            round: full,
                             detail: "reply queue disconnected (all workers gone)".into(),
                         },
                     }));
                 }
             };
             let msg = event.map_err(|detail| {
-                self.poison(CommError::Link { worker, round: round.clone(), detail })
+                self.poison(CommError::Link { worker, round: full.clone(), detail })
             })?;
-            self.stats.record(&round, true, msg.words());
+            self.record(&round, true, msg.words());
             let slot = slot_of.get(worker).copied().flatten().ok_or_else(|| {
                 self.poison(CommError::Link {
                     worker,
-                    round: round.clone(),
+                    round: full.clone(),
                     detail: format!("unsolicited {} reply", msg.tag()),
                 })
             })?;
             if out[slot].replace(msg).is_some() {
                 return Err(self.poison(CommError::Link {
                     worker,
-                    round,
+                    round: full,
                     detail: "duplicate reply in one round".into(),
                 }));
             }
@@ -773,12 +864,12 @@ impl Cluster {
 
     fn parse<R: Request>(&self, worker: usize, msg: Message) -> Result<R::Response, CommError> {
         if let Message::RespError(detail) = msg {
-            return Err(CommError::Worker { worker, round: self.round(), detail });
+            return Err(CommError::Worker { worker, round: self.qualify(&self.round()), detail });
         }
         let got = msg.tag();
         R::decode(msg).map_err(|_| CommError::Mismatch {
             worker,
-            round: self.round(),
+            round: self.qualify(&self.round()),
             expected: R::EXPECTS,
             got,
         })
@@ -848,7 +939,7 @@ impl Cluster {
         let round = self.round();
         for link in &self.links {
             if link.send(&payload).is_ok() {
-                self.stats.record(&round, false, payload.words());
+                self.record(&round, false, payload.words());
             }
         }
     }
@@ -921,6 +1012,27 @@ mod tests {
         let mixed = PointSet::concat(&[c, PointSet::Dense(Mat::zeros(4, 1))]);
         assert!(matches!(mixed, PointSet::Dense(_)));
         assert_eq!(mixed.len(), 4);
+    }
+
+    #[test]
+    fn pointset_concat_dedup_drops_exact_duplicates() {
+        // row-major: a has columns (1,3), (2,4); b has (1,3), (5,6)
+        let a = PointSet::Dense(Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]));
+        let b = PointSet::Dense(Mat::from_vec(2, 2, vec![1.0, 5.0, 3.0, 6.0]));
+        let c = PointSet::concat_dedup(&[a, b]);
+        assert_eq!(c.len(), 3, "shared column (1,3) must appear once");
+        let m = c.to_mat();
+        assert_eq!((m[(0, 0)], m[(1, 0)]), (1.0, 3.0));
+        assert_eq!((m[(0, 1)], m[(1, 1)]), (2.0, 4.0));
+        assert_eq!((m[(0, 2)], m[(1, 2)]), (5.0, 6.0));
+        // sparse: identical (row, value) lists are duplicates
+        let s1 = PointSet::Sparse { d: 8, cols: vec![vec![(1, 2.0)], vec![(3, 4.0)]] };
+        let s2 = PointSet::Sparse { d: 8, cols: vec![vec![(1, 2.0)]] };
+        let cs = PointSet::concat_dedup(&[s1, s2]);
+        assert_eq!(cs.len(), 2);
+        // near-duplicates (different bits) are kept
+        let d1 = PointSet::Dense(Mat::from_vec(1, 2, vec![1.0, 1.0 + 1e-15]));
+        assert_eq!(PointSet::concat_dedup(&[d1]).len(), 2);
     }
 
     #[test]
@@ -1005,6 +1117,44 @@ mod tests {
         cluster.set_round("order");
         let counts = cluster.broadcast(request::Count).unwrap();
         assert_eq!(counts, vec![10, 11, 12]);
+        cluster.shutdown();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn round_prefix_namespaces_global_stats_and_job_sink_stays_bare() {
+        let (star, endpoints) = memory::star(2);
+        let workers: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                std::thread::spawn(move || loop {
+                    match ep.recv() {
+                        Ok(Message::Quit) | Err(_) => break,
+                        Ok(Message::ReqCount) => ep.send(Message::RespCount(1)).unwrap(),
+                        Ok(_) => ep.send(Message::Ack).unwrap(),
+                    }
+                })
+            })
+            .collect();
+        let cluster = Cluster::new(star, CommStats::new());
+        let job = CommStats::new();
+        cluster.set_round_prefix("job7:");
+        cluster.set_job_stats(Some(job.clone()));
+        cluster.set_round("demo");
+        cluster.broadcast(request::Count).unwrap();
+        // lifetime stats see the namespaced label, the job sink the bare one
+        assert_eq!(cluster.stats.round_words("job7:demo"), 4);
+        assert_eq!(cluster.stats.round_words("demo"), 0);
+        assert_eq!(job.round_words("demo"), 4);
+        assert_eq!(job.round_words("job7:demo"), 0);
+        // clearing the job scope stops its accounting, not the cluster's
+        cluster.set_job_stats(None);
+        cluster.set_round_prefix("");
+        cluster.broadcast(request::Count).unwrap();
+        assert_eq!(cluster.stats.round_words("demo"), 4);
+        assert_eq!(job.total_words(), 4);
         cluster.shutdown();
         for w in workers {
             w.join().unwrap();

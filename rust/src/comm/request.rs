@@ -215,6 +215,12 @@ payload_request! {
     KrrEval { alpha: Mat } => ReqKrrEval, RespScalar -> f64
 }
 
+payload_request! {
+    /// Serving-path query: project a batch of new points through the
+    /// installed solution, reply LᵀΦ(batch) (k×|batch|).
+    ProjectPoints { pts: PointSet } => ReqProjectPoints, RespMat -> Mat
+}
+
 unit_request! {
     /// Partial ‖φ(Aⁱ) − LLᵀφ(Aⁱ)‖² for the cached solution.
     EvalError => ReqEvalError, RespScalar -> f64

@@ -37,7 +37,8 @@ pub fn dis_uniform_sample(
         .into_iter()
         .filter(|p| !p.is_empty())
         .collect();
-    Ok(PointSet::concat(&parts))
+    // cross-worker duplicates would make K(Y,Y) singular in disLR
+    Ok(PointSet::concat_dedup(&parts))
 }
 
 /// Baseline 1: uniform sampling of Y, then the same distributed

@@ -70,7 +70,9 @@ pub fn dis_kpca_boosted(
     let winner = errors
         .iter()
         .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        // total_cmp: a NaN attempt error (degenerate shard) must not
+        // panic the winner selection
+        .min_by(|a, b| a.1.total_cmp(b.1))
         .unwrap()
         .0;
     Ok(BoostedRun { solution, errors, winner, trace })

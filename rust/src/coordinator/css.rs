@@ -15,7 +15,6 @@
 
 use crate::comm::request as rq;
 use crate::comm::{Cluster, CommError, PointSet};
-use crate::embed::EmbedSpec;
 use crate::kernels::Kernel;
 
 use super::master::{dis_embed, dis_leverage_scores, rep_sample};
@@ -84,15 +83,23 @@ pub fn dis_css(
     kernel: Kernel,
     params: &Params,
 ) -> Result<CssSolution, CommError> {
+    dis_css_warm(cluster, kernel, params, false)
+}
+
+/// [`dis_css`] with an explicit warm-start flag (serve layer):
+/// `embed_installed = true` skips the `1-embed` broadcast — the caller
+/// asserts every worker holds E^i for exactly
+/// [`super::master::embed_spec_for`]`(kernel, params)`.
+pub fn dis_css_warm(
+    cluster: &Cluster,
+    kernel: Kernel,
+    params: &Params,
+    embed_installed: bool,
+) -> Result<CssSolution, CommError> {
     params.apply_threads();
-    let spec = EmbedSpec {
-        kernel,
-        m: params.m_rff,
-        t2: params.t2,
-        t: params.t,
-        seed: params.seed ^ 0xeb3d,
-    };
-    dis_embed(cluster, spec)?;
+    if !embed_installed {
+        dis_embed(cluster, super::master::embed_spec_for(kernel, params))?;
+    }
     let masses = dis_leverage_scores(cluster, params)?;
     let y = rep_sample(cluster, params, &masses)?;
     // certificate: exact residual of the full span (one scalar per
@@ -187,6 +194,29 @@ mod tests {
             move |cluster| dis_css(cluster, kernel, &p).unwrap(),
         );
         assert!(sol.residual_fraction() < 0.05, "{}", sol.residual_fraction());
+    }
+
+    /// Regression: the full-coverage scenario where P already spans
+    /// every shard *exactly* — with identical points, κ(x,x) = κ(y,x)
+    /// = 1 and every residual clamps to exactly 0.0, so the adaptive
+    /// stage's total mass is zero. The allocation must fall back to a
+    /// deterministic uniform split (not an undefined one), and dedup
+    /// must collapse the resulting duplicate draws back to {x}.
+    #[test]
+    fn css_full_coverage_zero_mass_uses_uniform_fallback() {
+        let data = Data::Dense(Mat::from_fn(5, 30, |i, _| (i as f64) * 0.2 - 0.4));
+        let shards = partition_power_law(&data, 3, 7);
+        let kernel = Kernel::Gauss { gamma: 0.6 };
+        let p = params(6, 12);
+        let (sol, _) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| dis_css(cluster, kernel, &p).unwrap(),
+        );
+        assert_eq!(sol.y.len(), 1, "identical points must collapse to one representative");
+        assert!(sol.residual.abs() < 1e-9, "residual {}", sol.residual);
+        assert!(sol.residual_fraction() < 1e-9);
     }
 
     #[test]

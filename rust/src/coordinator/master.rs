@@ -24,6 +24,19 @@ pub fn dis_embed(cluster: &Cluster, spec: EmbedSpec) -> Result<(), CommError> {
     Ok(())
 }
 
+/// The embedding spec `dis_kpca`/`dis_css` derive from `params` —
+/// shared here so the serve layer can key warm-state reuse on the
+/// exact spec the drivers would broadcast.
+pub fn embed_spec_for(kernel: Kernel, params: &Params) -> EmbedSpec {
+    EmbedSpec {
+        kernel,
+        m: params.m_rff,
+        t2: params.t2,
+        t: params.t,
+        seed: params.seed ^ 0xeb3d,
+    }
+}
+
 /// Alg. 1 (disLS): returns per-worker leverage-score masses. Workers
 /// hold their individual scores; the master only ever sees the t×p
 /// sketches, the t×t factor Z, and one scalar per worker.
@@ -134,6 +147,22 @@ pub fn rep_sample_mode(
     }
 }
 
+/// Per-worker masses as sampling weights, guarded for degenerate
+/// protocols: when the total is zero (the leverage/P stage already
+/// spans every shard, so all residuals clamp to exactly 0) or any
+/// mass is non-finite (NaN-poisoned shard), allocation by the raw
+/// vector is undefined — fall back to a uniform split across workers.
+/// Healthy masses pass through untouched (bit-identical allocation).
+fn masses_or_uniform(masses: &[f64]) -> Vec<f64> {
+    let degenerate =
+        masses.iter().any(|m| !m.is_finite()) || masses.iter().sum::<f64>() <= 0.0;
+    if degenerate {
+        vec![1.0; masses.len()]
+    } else {
+        masses.to_vec()
+    }
+}
+
 fn rep_sample_impl(
     cluster: &Cluster,
     params: &Params,
@@ -144,7 +173,7 @@ fn rep_sample_impl(
     let mut rng = Rng::seed_from(params.seed ^ 0x5a3);
     // ---- step 1: leverage-weighted sample of O(k log k) points ----
     let sx = cluster.session("3-levSample");
-    let alloc = multinomial(&mut rng, masses, n_lev);
+    let alloc = multinomial(&mut rng, &masses_or_uniform(masses), n_lev);
     let parts: Vec<PointSet> = sx.scatter(
         alloc
             .iter()
@@ -155,7 +184,10 @@ fn rep_sample_impl(
             })
             .collect(),
     )?;
-    let p_set = PointSet::concat(&parts);
+    // dedup: two workers can draw the same point (per-worker samples
+    // are only locally deduplicated) — an exact duplicate in Y makes
+    // K(Y,Y) singular downstream.
+    let p_set = PointSet::concat_dedup(&parts);
     if !adaptive {
         return Ok(p_set);
     }
@@ -171,7 +203,10 @@ fn adaptive_stage(
     let mut rng = Rng::seed_from(params.seed ^ 0xa5a3);
     let sx = cluster.session("4-adaptive");
     let res_masses: Vec<f64> = sx.broadcast(rq::Residuals { pts: p_set.clone() })?;
-    let alloc = multinomial(&mut rng, &res_masses, params.n_adapt);
+    // Zero total mass is reachable (P already spans every shard — the
+    // full-coverage CSS scenario) and NaN masses are reachable from a
+    // poisoned shard; both would make the allocation undefined.
+    let alloc = multinomial(&mut rng, &masses_or_uniform(&res_masses), params.n_adapt);
     let extra: Vec<PointSet> = sx.scatter(
         alloc
             .iter()
@@ -184,7 +219,10 @@ fn adaptive_stage(
     )?;
     let mut all = vec![p_set];
     all.extend(extra.into_iter().filter(|p| !p.is_empty()));
-    Ok(PointSet::concat(&all))
+    // dedup: an adaptive draw can repeat a point already in P (and
+    // cross-worker duplicates survive local dedup) — see
+    // [`PointSet::concat_dedup`].
+    Ok(PointSet::concat_dedup(&all))
 }
 
 /// Alg. 3 (disLR): compute the best rank-k approximation in span φ(Y).
@@ -286,6 +324,23 @@ pub fn dis_kpca_mode(
     params: &Params,
     mode: SamplingMode,
 ) -> Result<KpcaSolution, CommError> {
+    dis_kpca_warm(cluster, kernel, params, mode, false)
+}
+
+/// [`dis_kpca_mode`] with an explicit warm-start flag (the serve
+/// layer's entry point). `embed_installed = true` asserts every worker
+/// already holds E^i for exactly [`embed_spec_for`]`(kernel, params)`
+/// — the `1-embed` broadcast is then skipped *entirely* (zero words in
+/// that round). Bit-identity-safe: the embedding is a deterministic
+/// function of (spec, shard), so a worker's cached E^i equals what the
+/// skipped round would have rebuilt.
+pub fn dis_kpca_warm(
+    cluster: &Cluster,
+    kernel: Kernel,
+    params: &Params,
+    mode: SamplingMode,
+    embed_installed: bool,
+) -> Result<KpcaSolution, CommError> {
     params.apply_threads();
     let timing = std::env::var_os("DISKPCA_TIMING").is_some();
     let mut stamp = std::time::Instant::now();
@@ -295,18 +350,14 @@ pub fn dis_kpca_mode(
         }
         stamp = std::time::Instant::now();
     };
-    let spec = EmbedSpec {
-        kernel,
-        m: params.m_rff,
-        t2: params.t2,
-        t: params.t,
-        seed: params.seed ^ 0xeb3d,
-    };
+    let spec = embed_spec_for(kernel, params);
     let y = if mode == SamplingMode::AdaptiveOnly {
         // no embedding/leverage rounds at all in this ablation
         rep_sample_mode(cluster, params, &[], mode)?
     } else {
-        dis_embed(cluster, spec)?;
+        if !embed_installed {
+            dis_embed(cluster, spec)?;
+        }
         lap("embed");
         let masses = dis_leverage_scores(cluster, params)?;
         lap("disLS");
@@ -341,4 +392,21 @@ pub fn dis_set_solution(cluster: &Cluster, sol: &KpcaSolution) -> Result<(), Com
         coeffs: sol.coeffs.clone(),
     })?;
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression: zero-total and NaN mass vectors must fall back to a
+    /// deterministic uniform allocation; healthy masses pass through
+    /// bit-identically.
+    #[test]
+    fn masses_or_uniform_guards_degenerate_vectors() {
+        assert_eq!(masses_or_uniform(&[1.5, 2.5, 0.0]), vec![1.5, 2.5, 0.0]);
+        assert_eq!(masses_or_uniform(&[0.0, 0.0, 0.0]), vec![1.0, 1.0, 1.0]);
+        assert_eq!(masses_or_uniform(&[f64::NAN, 3.0]), vec![1.0, 1.0]);
+        assert_eq!(masses_or_uniform(&[f64::INFINITY, 1.0]), vec![1.0, 1.0]);
+        assert_eq!(masses_or_uniform(&[-1.0, 0.5]), vec![1.0, 1.0]);
+    }
 }

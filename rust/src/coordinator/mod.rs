@@ -23,12 +23,12 @@ pub mod worker;
 
 pub use baselines::{batch_kpca, uniform_batch_kpca, uniform_dis_lr, BatchKpca};
 pub use boost::{dis_kpca_boosted, reps_for_confidence, BoostedRun};
-pub use css::{dis_css, CssSolution};
+pub use css::{dis_css, dis_css_warm, CssSolution};
 pub use krr::{dis_krr, KrrModel};
 pub use master::{
-    dis_embed, dis_eval, dis_kpca, dis_kpca_mode, dis_leverage_scores, dis_leverage_scores_eps,
-    dis_leverage_vectors, dis_low_rank, dis_set_solution, leverage_sketch_width, rep_sample,
-    rep_sample_mode, SamplingMode,
+    dis_embed, dis_eval, dis_kpca, dis_kpca_mode, dis_kpca_warm, dis_leverage_scores,
+    dis_leverage_scores_eps, dis_leverage_vectors, dis_low_rank, dis_set_solution,
+    embed_spec_for, leverage_sketch_width, rep_sample, rep_sample_mode, SamplingMode,
 };
 pub use worker::Worker;
 
@@ -467,6 +467,37 @@ mod tests {
         );
         // 12 points, |Y| can cover everything ⇒ tiny error
         assert!(err <= trace * 0.6 + 1e-9, "err {err} trace {trace}");
+    }
+
+    /// Regression: every worker holding literally identical points
+    /// forces cross-worker duplicate draws — before the
+    /// [`crate::comm::PointSet::concat_dedup`] fix, Y contained exact
+    /// duplicate columns, K(Y,Y) was exactly singular, and disLR's
+    /// triangular solve emitted junk coefficients.
+    #[test]
+    fn duplicate_representatives_are_deduped_and_coeffs_finite() {
+        let col = [0.3, -0.1, 0.7, 0.2];
+        let data = Data::Dense(Mat::from_fn(4, 24, |i, _| col[i]));
+        let shards = vec![data.slice_cols(0, 12), data.slice_cols(12, 24)];
+        let kernel = Kernel::Gauss { gamma: 0.7 };
+        let params = Params { k: 2, n_lev: 6, n_adapt: 8, ..small_params() };
+        let ((sol, err, trace), _) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| {
+                let sol = dis_kpca(cluster, kernel, &params).unwrap();
+                let (err, trace) = dis_eval(cluster).unwrap();
+                (sol, err, trace)
+            },
+        );
+        // all points identical ⇒ Y collapses to a single representative
+        assert_eq!(sol.num_points(), 1, "duplicate columns survived in Y");
+        assert!(
+            sol.coeffs.data().iter().all(|v| v.is_finite()),
+            "non-finite disLR coefficients from a singular K(Y,Y)"
+        );
+        assert!(err >= -1e-9 && err <= trace * (1.0 + 1e-9), "err {err} trace {trace}");
     }
 
     #[test]

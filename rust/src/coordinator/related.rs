@@ -94,7 +94,9 @@ pub fn pivoted_cholesky_kpca(
         let (jmax, &dmax) = diag
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            // total_cmp: NaN residual diagonals (NaN-poisoned shard)
+            // must not panic the pivot search
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap();
         if dmax <= 1e-12 {
             break;

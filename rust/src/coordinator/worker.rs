@@ -98,6 +98,85 @@ enum KrrState {
     Streamed { y: Mat, targets: Vec<f64> },
 }
 
+/// Warm-state cache of resident embeddings E^i = S(φ(Aⁱ)), keyed by
+/// the [`EmbedSpec`] (hash key for lookup, full equality re-checked on
+/// every hit). Jobs on a persistent serve cluster that alternate
+/// between a few specs skip the embedding recompute entirely; eviction
+/// is least-recently-used, bounded by a byte budget
+/// (`DISKPCA_EMBED_CACHE_MB`). The default is deliberately modest
+/// (64 MiB): the cache also sees one-shot multi-spec runs (boosting
+/// sweeps a fresh spec per attempt and never revisits one), where
+/// retained entries are dead weight — serve deployments that want
+/// more warmth raise the budget explicitly (`--embed-cache-mb`).
+///
+/// The entries are `Arc`s shared with the worker's installed
+/// embedding, so a cached-and-installed embedding costs its bytes
+/// once.
+struct EmbedCache {
+    /// (key, spec, embedding, last-use tick)
+    entries: Vec<(u64, EmbedSpec, Arc<Mat>, u64)>,
+    budget_bytes: usize,
+    tick: u64,
+    hits: usize,
+    misses: usize,
+}
+
+impl EmbedCache {
+    fn new(budget_bytes: usize) -> Self {
+        Self { entries: Vec::new(), budget_bytes, tick: 0, hits: 0, misses: 0 }
+    }
+
+    fn bytes(&self) -> usize {
+        self.entries.iter().map(|(_, _, e, _)| e.rows() * e.cols() * 8).sum()
+    }
+
+    fn get(&mut self, spec: &EmbedSpec) -> Option<Arc<Mat>> {
+        let key = spec.cache_key();
+        self.tick += 1;
+        for (k, s, e, used) in self.entries.iter_mut() {
+            if *k == key && s == spec {
+                *used = self.tick;
+                self.hits += 1;
+                return Some(Arc::clone(e));
+            }
+        }
+        self.misses += 1;
+        None
+    }
+
+    fn put(&mut self, spec: EmbedSpec, e: Arc<Mat>) {
+        let bytes = e.rows() * e.cols() * 8;
+        if bytes > self.budget_bytes {
+            return; // a single over-budget entry is never cached
+        }
+        self.tick += 1;
+        self.entries.push((spec.cache_key(), spec, e, self.tick));
+        self.evict_to_budget();
+    }
+
+    /// Drop least-recently-used entries until within the byte budget.
+    fn evict_to_budget(&mut self) {
+        while self.bytes() > self.budget_bytes {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (_, _, _, used))| *used)
+                .map(|(i, _)| i)
+                .expect("nonempty while over budget");
+            self.entries.remove(lru);
+        }
+    }
+}
+
+fn embed_cache_budget_from_env() -> usize {
+    let mb = std::env::var("DISKPCA_EMBED_CACHE_MB")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(64);
+    mb.saturating_mul(1 << 20)
+}
+
 pub struct Worker {
     source: ShardSource,
     /// Streaming chunk width in points; `0` over a resident shard
@@ -107,8 +186,12 @@ pub struct Worker {
     kernel: Kernel,
     backend: Arc<dyn Backend>,
     // ---- resident-path caches ----
-    /// E^i = S(φ(Aⁱ)) — t×nᵢ (Alg. 4 step 1).
-    embedded: Option<Mat>,
+    /// E^i = S(φ(Aⁱ)) — t×nᵢ (Alg. 4 step 1). Shared with
+    /// `embed_cache` so multi-job reinstalls are free.
+    embedded: Option<Arc<Mat>>,
+    /// Warm-state cache of embeddings across jobs (resident path; the
+    /// streaming path never materializes E^i so has nothing to cache).
+    embed_cache: EmbedCache,
     /// Π^i = Qᵀφ(Aⁱ) — |Y|×nᵢ (Alg. 3 step 1).
     pi: Option<Mat>,
     /// LᵀΦ(Aⁱ) — k×nᵢ once a solution is installed.
@@ -118,8 +201,12 @@ pub struct Worker {
     /// per chunk through [`Backend::embed`] (Alg. 4 step 1), so the
     /// XLA backend stays on its hot path under streaming too.
     embed_spec: Option<EmbedSpec>,
-    /// (Y, chol factor of K(Y,Y)) cached by ReqProjectSketch.
+    /// (Y, chol factor of K(Y,Y)) cached by ReqProjectSketch — on
+    /// *both* paths since the serve layer landed: resident workers
+    /// need it to install a queryable `StreamSolution` too.
     stream_basis: Option<(Mat, Mat)>,
+    /// The installed solution in new-point-projectable form — the
+    /// state ReqProjectPoints queries (both paths).
     stream_solution: Option<StreamSolution>,
     // ---- O(nᵢ) state shared by both paths ----
     /// generalized leverage scores of the local columns (Alg. 1).
@@ -162,6 +249,7 @@ impl Worker {
             kernel,
             backend,
             embedded: None,
+            embed_cache: EmbedCache::new(embed_cache_budget_from_env()),
             pi: None,
             projected: None,
             embed_spec: None,
@@ -176,6 +264,20 @@ impl Worker {
 
     fn streaming(&self) -> bool {
         self.chunk_rows > 0 || matches!(self.source, ShardSource::Store(_))
+    }
+
+    /// Bound the embed warm-cache (bytes). `0` disables caching.
+    /// Overrides the `DISKPCA_EMBED_CACHE_MB` default.
+    pub fn set_embed_cache_budget(&mut self, bytes: usize) {
+        self.embed_cache.budget_bytes = bytes;
+        self.embed_cache.evict_to_budget();
+    }
+
+    /// (entries, bytes, hits, misses) of the embed warm cache — for
+    /// eviction tests and serve-mode introspection.
+    pub fn embed_cache_stats(&self) -> (usize, usize, usize, usize) {
+        let c = &self.embed_cache;
+        (c.entries.len(), c.bytes(), c.hits, c.misses)
     }
 
     /// The in-memory shard (resident path only).
@@ -273,6 +375,7 @@ impl Worker {
                 self.respond(rq::KrrStats { pts, teacher_seed })
             }
             Message::ReqKrrEval { alpha } => self.respond(rq::KrrEval { alpha }),
+            Message::ReqProjectPoints { pts } => self.respond(rq::ProjectPoints { pts }),
             Message::ReqCount => self.respond(rq::Count),
             Message::ReqBusyTime => self.respond(rq::BusyTime),
             Message::Quit => Message::Ack,
@@ -305,12 +408,15 @@ impl Worker {
     }
 
     /// Π = R⁻ᵀK(Y, Aⁱ) and residuals, via kernel trick + implicit
-    /// Gram–Schmidt (paper Appendix A). Resident path only.
-    fn project(&self, y: &Mat) -> (Mat, Vec<f64>) {
+    /// Gram–Schmidt (paper Appendix A). Resident path only. Also
+    /// returns the basis factor R so callers can retain (Y, R) for
+    /// later new-point projection ([`rq::ProjectPoints`]).
+    fn project(&self, y: &Mat) -> (Mat, Vec<f64>, Mat) {
         let r = self.chol_basis(y);
         let k_ya = self.backend.gram(self.kernel, y, self.shard());
         let diag = kernel_diag(self.kernel, self.shard());
-        self.backend.project_residual(&r, &k_ya, &diag)
+        let (pi, res) = self.backend.project_residual(&r, &k_ya, &diag);
+        (pi, res, r)
     }
 
     fn compute_residuals(&self, p: &Mat) -> Vec<f64> {
@@ -385,7 +491,19 @@ impl Handle<rq::Embed> for Worker {
             // embedding's columns.
             self.embed_spec = Some(req.spec);
         } else {
-            self.embedded = Some(self.backend.embed(&req.spec, self.shard()));
+            // Warm-state reuse: a spec seen before (jobs alternating
+            // between a few specs on a persistent cluster) skips the
+            // recompute. Bit-safe — the embedding is a deterministic
+            // function of (spec, shard) and the shard never changes.
+            let e = match self.embed_cache.get(&req.spec) {
+                Some(e) => e,
+                None => {
+                    let e = Arc::new(self.backend.embed(&req.spec, self.shard()));
+                    self.embed_cache.put(req.spec, Arc::clone(&e));
+                    e
+                }
+            };
+            self.embedded = Some(e);
         }
     }
 }
@@ -403,7 +521,7 @@ impl Handle<rq::SketchEmbed> for Worker {
             });
             out
         } else {
-            let e = self.embedded.as_ref().expect("ReqEmbed first");
+            let e: &Mat = self.embedded.as_ref().expect("ReqEmbed first");
             let mut rng = Rng::seed_from(seed);
             let cs = CountSketch::new(e.cols(), p, &mut rng);
             cs.apply_point_axis(e)
@@ -422,7 +540,7 @@ impl Handle<rq::Scores> for Worker {
             });
             scores
         } else {
-            let e = self.embedded.as_ref().expect("ReqEmbed first");
+            let e: &Mat = self.embedded.as_ref().expect("ReqEmbed first");
             self.backend.leverage_norms(&z, e)
         };
         let total = scores.iter().sum();
@@ -476,11 +594,14 @@ impl Handle<rq::ProjectSketch> for Worker {
             out
         } else {
             let y = pts.to_mat();
-            let pi = self.project(&y).0;
+            let (pi, _res, r) = self.project(&y);
             let mut rng = Rng::seed_from(seed);
             let cs = CountSketch::new(pi.cols(), w, &mut rng);
             let sketched = cs.apply_point_axis(&pi);
             self.pi = Some(pi);
+            // retain (Y, R) so ReqFinal can install a queryable
+            // solution on the resident path too (serving new points)
+            self.stream_basis = Some((y, r));
             sketched
         }
     }
@@ -488,14 +609,15 @@ impl Handle<rq::ProjectSketch> for Worker {
 
 impl Handle<rq::Final> for Worker {
     fn handle_req(&mut self, rq::Final { coeffs }: rq::Final) {
-        if self.streaming() {
-            let (y, r) = self.stream_basis.clone().expect("ReqProjectSketch first");
-            self.stream_solution = Some(StreamSolution::Factored { y, r_upper: r, coeffs });
-        } else {
+        if !self.streaming() {
             // L = Q·W ⇒ Lᵀφ(A) = Wᵀ·Π (Π cached from ReqProjectSketch)
             let pi = self.pi.as_ref().expect("ReqProjectSketch first");
             self.projected = Some(coeffs.matmul_at_b(pi));
         }
+        // both paths: install the factored form so ReqProjectPoints
+        // can project *new* points through the solution
+        let (y, r) = self.stream_basis.clone().expect("ReqProjectSketch first");
+        self.stream_solution = Some(StreamSolution::Factored { y, r_upper: r, coeffs });
     }
 }
 
@@ -508,7 +630,42 @@ impl Handle<rq::SetSolution> for Worker {
             let y = pts.to_mat();
             let k_ya = self.backend.gram(self.kernel, &y, self.shard());
             self.projected = Some(coeffs.matmul_at_b(&k_ya));
+            self.stream_solution = Some(StreamSolution::Direct { y, coeffs });
         }
+    }
+}
+
+impl Handle<rq::ProjectPoints> for Worker {
+    /// Serving-path query: LᵀΦ(batch) for a batch of *new* points,
+    /// independent of the local shard. Streaming workers fold the
+    /// batch over `chunk_rows`-column slices (the PR-2 fold, applied
+    /// to the query instead of the shard), so worker memory tracks the
+    /// chunk, not the batch; per-column operations are identical, so
+    /// results are bit-identical for every chunk size.
+    fn handle_req(&mut self, rq::ProjectPoints { pts }: rq::ProjectPoints) -> Mat {
+        let sol = self.stream_solution.as_ref().expect("no solution installed");
+        let k = match sol {
+            StreamSolution::Factored { coeffs, .. } | StreamSolution::Direct { coeffs, .. } => {
+                coeffs.cols()
+            }
+        };
+        let batch = Data::Dense(pts.to_mat());
+        let n = batch.len();
+        let step = if self.chunk_rows > 0 { self.chunk_rows } else { n.max(1) };
+        let mut out = Mat::zeros(k, n);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + step).min(n);
+            let chunk = batch.slice_cols(j0, j1);
+            let proj = projected_chunk(self.backend.as_ref(), self.kernel, sol, &chunk);
+            for j in j0..j1 {
+                for i in 0..k {
+                    out[(i, j)] = proj[(i, j - j0)];
+                }
+            }
+            j0 = j1;
+        }
+        out
     }
 }
 
@@ -1091,6 +1248,116 @@ mod tests {
         assert_eq!(t0.to_bits(), t7.to_bits());
         assert_eq!(s0.to_bits(), s7.to_bits());
         assert!(g0.max_abs_diff(&g7) < 1e-9 * (1.0 + g0.frob_norm()));
+    }
+
+    #[test]
+    fn embed_cache_reuses_and_evicts_lru_by_byte_budget() {
+        let mut w = mk_worker(20);
+        let spec1 =
+            EmbedSpec { kernel: Kernel::Gauss { gamma: 0.5 }, m: 128, t2: 64, t: 8, seed: 1 };
+        let spec2 = EmbedSpec { seed: 2, ..spec1 };
+        let entry_bytes = 8 * 20 * 8; // t×nᵢ f64s
+        w.handle(Message::ReqEmbed { spec: spec1 });
+        w.handle(Message::ReqEmbed { spec: spec2 });
+        let (len, bytes, hits, misses) = w.embed_cache_stats();
+        assert_eq!((len, bytes, hits, misses), (2, 2 * entry_bytes, 0, 2));
+        // re-install spec1: a warm hit, embedding bit-identical to the
+        // first build (shared Arc — not merely equal)
+        w.handle(Message::ReqEmbed { spec: spec1 });
+        assert_eq!(w.embed_cache_stats().2, 1, "second install must hit the cache");
+        // shrinking the budget to one entry evicts the LRU (spec2)
+        w.set_embed_cache_budget(entry_bytes);
+        assert_eq!(w.embed_cache_stats().0, 1);
+        w.handle(Message::ReqEmbed { spec: spec2 });
+        let (len, _, _, misses) = w.embed_cache_stats();
+        assert_eq!((len, misses), (1, 3), "evicted spec must re-miss");
+        // the cache never held more than the budget
+        assert!(w.embed_cache_stats().1 <= entry_bytes);
+        // zero budget disables caching entirely
+        w.set_embed_cache_budget(0);
+        w.handle(Message::ReqEmbed { spec: spec1 });
+        assert_eq!(w.embed_cache_stats().0, 0);
+        // worker still serves with an uncached embedding installed
+        assert!(matches!(
+            w.handle(Message::ReqSketchEmbed { p: 12, seed: 5 }),
+            Message::RespMat(_)
+        ));
+    }
+
+    /// The serving query path: new points project identically whether
+    /// the worker is resident or streams the batch in chunks, and the
+    /// result matches the solution's own projection identity.
+    #[test]
+    fn project_points_resident_and_chunked_bit_identical() {
+        let run = |chunk: usize| {
+            let mut w = mk_worker_chunked(30, chunk);
+            let spec = EmbedSpec {
+                kernel: Kernel::Gauss { gamma: 0.5 },
+                m: 256,
+                t2: 64,
+                t: 16,
+                seed: 3,
+            };
+            w.handle(Message::ReqEmbed { spec });
+            let et = match w.handle(Message::ReqSketchEmbed { p: 20, seed: 5 }) {
+                Message::RespMat(m) => m,
+                other => panic!("{other:?}"),
+            };
+            let z = crate::linalg::qr_r_only(&et.transpose());
+            w.handle(Message::ReqScores { z });
+            let pts = match w.handle(Message::ReqSampleLeverage { count: 6, seed: 7 }) {
+                Message::RespPoints(p) => p,
+                other => panic!("{other:?}"),
+            };
+            let ny = pts.len();
+            w.handle(Message::ReqProjectSketch { pts, w: 12, seed: 11 });
+            let wmat = Mat::from_fn(ny, 2, |i, j| if i == j { 1.0 } else { 0.0 });
+            w.handle(Message::ReqFinal { coeffs: wmat });
+            // fresh query points, never seen by the protocol
+            let mut rng = Rng::seed_from(77);
+            let batch = PointSet::Dense(Mat::from_fn(6, 9, |_, _| rng.normal()));
+            match w.handle(Message::ReqProjectPoints { pts: batch }) {
+                Message::RespMat(m) => m,
+                other => panic!("{other:?}"),
+            }
+        };
+        let resident = run(0);
+        assert_eq!((resident.rows(), resident.cols()), (2, 9));
+        for chunk in [1, 4, 9, 64] {
+            let streamed = run(chunk);
+            assert!(
+                resident.data() == streamed.data(),
+                "ProjectPoints differs at chunk={chunk}"
+            );
+        }
+    }
+
+    #[test]
+    fn project_points_works_after_set_solution() {
+        let mut w = mk_worker(20);
+        let y = match w.handle(Message::ReqSampleUniform { count: 4, seed: 1 }) {
+            Message::RespPoints(p) => p,
+            other => panic!("{other:?}"),
+        };
+        let ny = y.len();
+        let coeffs = Mat::from_fn(ny, 2, |i, j| if i == j { 1.0 } else { 0.0 });
+        w.handle(Message::ReqSetSolution { pts: y, coeffs });
+        let mut rng = Rng::seed_from(5);
+        let batch = PointSet::Dense(Mat::from_fn(6, 3, |_, _| rng.normal()));
+        let proj = match w.handle(Message::ReqProjectPoints { pts: batch }) {
+            Message::RespMat(m) => m,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!((proj.rows(), proj.cols()), (2, 3));
+        assert!(proj.data().iter().all(|v| v.is_finite()));
+        // empty batch → k×0, not an error
+        let empty = match w.handle(Message::ReqProjectPoints {
+            pts: PointSet::Dense(Mat::zeros(6, 0)),
+        }) {
+            Message::RespMat(m) => m,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!((empty.rows(), empty.cols()), (2, 0));
     }
 
     #[test]

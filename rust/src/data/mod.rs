@@ -303,8 +303,8 @@ mod tests {
             .iter()
             .flat_map(|s| (0..s.len()).map(|j| s.col_norm_sq(j)).collect::<Vec<_>>())
             .collect();
-        global.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        parts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        global.sort_by(f64::total_cmp);
+        parts.sort_by(f64::total_cmp);
         for (g, p) in global.iter().zip(&parts) {
             assert!((g - p).abs() < 1e-12);
         }

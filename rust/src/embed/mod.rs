@@ -20,7 +20,11 @@ use crate::rng::Rng;
 use crate::sketch::{CountSketch, GaussianSketch, TensorSketch};
 
 /// Broadcastable description of a kernel subspace embedding.
-#[derive(Clone, Copy, Debug)]
+///
+/// Equality is field-wise: two equal specs derive bit-identical
+/// random tables, hence bit-identical embeddings of the same shard —
+/// the invariant the serve layer's warm-state reuse rests on.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct EmbedSpec {
     pub kernel: Kernel,
     /// random-feature count m (gauss/arccos; paper uses 2000).
@@ -37,6 +41,27 @@ impl EmbedSpec {
     /// Words needed to broadcast this spec (for comm accounting).
     pub fn words(&self) -> usize {
         6
+    }
+
+    /// Stable 64-bit key over every field (FNV-1a over the field
+    /// bits). Used to *index* warm-state caches; correctness always
+    /// re-checks full [`PartialEq`] equality on a key hit, so a hash
+    /// collision costs a recompute, never a wrong reuse.
+    pub fn cache_key(&self) -> u64 {
+        fn mix(h: u64, v: u64) -> u64 {
+            (h ^ v).wrapping_mul(0x100000001b3)
+        }
+        let (kt, kp) = match self.kernel {
+            Kernel::Gauss { gamma } => (1u64, gamma.to_bits()),
+            Kernel::Poly { q } => (2, q as u64),
+            Kernel::ArcCos { degree } => (3, degree as u64),
+            Kernel::Laplace { gamma } => (4, gamma.to_bits()),
+        };
+        let mut h = 0xcbf29ce484222325u64;
+        for v in [kt, kp, self.m as u64, self.t2 as u64, self.t as u64, self.seed] {
+            h = mix(h, v);
+        }
+        h
     }
 }
 
@@ -186,6 +211,25 @@ mod tests {
         // relative Frobenius error instead of the max entry
         let rel = approx.sub(&exact).frob_norm() / exact.frob_norm();
         assert!(rel < 0.3, "rel frob err {rel}");
+    }
+
+    #[test]
+    fn cache_key_distinguishes_specs() {
+        let base = spec(Kernel::Gauss { gamma: 0.5 }, 16);
+        let copy = base;
+        assert_eq!(base.cache_key(), copy.cache_key());
+        assert_eq!(base, copy);
+        for other in [
+            EmbedSpec { seed: base.seed + 1, ..base },
+            EmbedSpec { t: base.t + 1, ..base },
+            EmbedSpec { m: base.m + 1, ..base },
+            EmbedSpec { kernel: Kernel::Gauss { gamma: 0.51 }, ..base },
+            EmbedSpec { kernel: Kernel::Laplace { gamma: 0.5 }, ..base },
+            spec(Kernel::Poly { q: 2 }, 16),
+        ] {
+            assert_ne!(base.cache_key(), other.cache_key(), "{other:?}");
+            assert_ne!(base, other);
+        }
     }
 
     #[test]

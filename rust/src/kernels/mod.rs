@@ -443,7 +443,9 @@ pub fn median_trick_gamma(x: &Data, c: f64, sample: usize, rng: &mut Rng) -> f64
         }
     }
     assert!(!d2s.is_empty(), "median trick needs ≥2 points");
-    d2s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN distances (NaN-poisoned input columns) sort to
+    // the end deterministically instead of panicking.
+    d2s.sort_by(f64::total_cmp);
     let med = d2s[d2s.len() / 2].sqrt();
     let sigma = (c * med).max(1e-12);
     1.0 / (2.0 * sigma * sigma)
@@ -470,7 +472,7 @@ pub fn median_trick_gamma_l1(x: &Data, c: f64, sample: usize, rng: &mut Rng) -> 
         }
     }
     assert!(!d1s.is_empty(), "median trick needs ≥2 points");
-    d1s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    d1s.sort_by(f64::total_cmp);
     let med = d1s[d1s.len() / 2];
     1.0 / (c * med).max(1e-12)
 }
@@ -673,5 +675,21 @@ mod tests {
         let g2 = median_trick_gamma(&Data::Dense(x2), 0.2, 40, &mut rng);
         // doubling distances quarters gamma
         assert!((g1 / g2 - 4.0).abs() < 0.2, "{g1} {g2}");
+    }
+
+    /// Regression: a NaN coordinate used to panic the pairwise-distance
+    /// sort (`partial_cmp(..).unwrap()`); NaN distances must now sort
+    /// deterministically and leave a finite positive γ as long as the
+    /// median pair is finite.
+    #[test]
+    fn median_trick_nan_coordinate_does_not_panic() {
+        let mut rng = Rng::seed_from(9);
+        let mut m = Mat::from_fn(4, 10, |_, _| rng.normal());
+        m[(1, 3)] = f64::NAN;
+        let d = Data::Dense(m);
+        let g = median_trick_gamma(&d, 0.2, 16, &mut rng);
+        assert!(g > 0.0 && g.is_finite(), "gamma {g}");
+        let g1 = median_trick_gamma_l1(&d, 1.0, 16, &mut rng);
+        assert!(g1 > 0.0 && g1.is_finite(), "gamma_l1 {g1}");
     }
 }

@@ -175,6 +175,14 @@ pub fn worker(cfg: &Config) -> Result<(), LaunchError> {
     );
     let mut endpoint = tcp::connect(addr)?;
     let mut worker = Worker::with_source(source, kernel, backend, params.chunk_rows);
+    // serve-mode knob: bound the embed warm cache (0 disables). The
+    // env default is DISKPCA_EMBED_CACHE_MB.
+    if let Some(mb) = cfg.get("embed-cache-mb") {
+        let mb: usize = mb
+            .parse()
+            .map_err(|_| LaunchError::Env(format!("--embed-cache-mb {mb}: not a usize")))?;
+        worker.set_embed_cache_budget(mb.saturating_mul(1 << 20));
+    }
     // Drive the loop here (rather than `Worker::run`) so a dropped
     // connection surfaces as an error with protocol context instead
     // of aborting the process mid-protocol.
@@ -205,6 +213,113 @@ pub fn worker(cfg: &Config) -> Result<(), LaunchError> {
         served += 1;
     }
     eprintln!("worker: done ({served} requests served)");
+    Ok(())
+}
+
+/// `diskpca serve [dataset]`: a persistent multi-job serving session.
+///
+/// With `--listen addr --workers N` the master waits for external
+/// `diskpca worker` processes (same flags as `master`); without
+/// `--listen` it spawns an in-process cluster over power-law shards of
+/// the registry dataset. Either way it then runs `--jobs` disKPCA fits
+/// through the [`crate::serve::Service`] — the first cold, the rest
+/// warm (identical [`crate::embed::EmbedSpec`], so the `1-embed`
+/// round is skipped with zero words) — and finishes with a
+/// `--transform`-point projection batch through the installed
+/// solution, printing per-job word tables and the warm-reuse drop.
+pub fn serve(cfg: &Config, dataset: &str) -> Result<(), LaunchError> {
+    let kernel = kernel_from_flags(cfg)?;
+    let params = cfg.params();
+    params.apply_threads();
+    let jobs = cfg.usize_or("jobs", 3).max(1);
+    let n_transform = cfg.usize_or("transform", 256);
+    let scale = cfg.f64_or("scale", 0.05);
+    let spec = data::by_name(cfg.str_or("dataset", dataset), scale)
+        .ok_or_else(|| LaunchError::Env(format!("unknown dataset {dataset}")))?;
+
+    let mut service = if let Some(addr) = cfg.get("listen") {
+        let s = cfg.usize_or("workers", 2);
+        eprintln!("serve: waiting for {s} workers on {addr} …");
+        let star = tcp::listen(addr, s)?;
+        crate::serve::Service::new(Cluster::new(star, CommStats::new()), kernel)
+    } else {
+        let s = cfg.usize_or("workers", spec.s);
+        let global = spec.generate(cfg.u64_or("seed", 1));
+        let shards = data::partition_power_law(&global, s, 1);
+        let backend = backend_from_name(
+            cfg.str_or("backend", "native"),
+            cfg.str_or("artifacts", "artifacts"),
+        )?;
+        let cache_bytes = match cfg.get("embed-cache-mb") {
+            Some(mb) => Some(
+                mb.parse::<usize>()
+                    .map_err(|_| {
+                        LaunchError::Env(format!("--embed-cache-mb {mb}: not a usize"))
+                    })?
+                    .saturating_mul(1 << 20),
+            ),
+            None => None,
+        };
+        crate::serve::Service::in_process_opts(
+            shards,
+            kernel,
+            backend,
+            params.chunk_rows,
+            cache_bytes,
+        )
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut first_words = 0usize;
+    for j in 0..jobs {
+        let report = service.run_kpca(&params)?;
+        let words = report.job.stats.total_words();
+        if j == 0 {
+            first_words = words;
+        }
+        println!(
+            "job {j}: |Y|={} words={} embed_words={} {}",
+            report.output.num_points(),
+            words,
+            report.job.stats.round_words("1-embed"),
+            if report.embed_reused { "(warm: 1-embed skipped)" } else { "(cold)" }
+        );
+        for (round, up, down) in report.job.stats.table() {
+            println!("    {round:<14} up {up:>10}  down {down:>10}");
+        }
+    }
+    if jobs > 1 {
+        let warm_words = service.stats().total_words() / jobs; // rough per-job mean
+        println!(
+            "warm reuse: first job {first_words} words, \
+             mean {warm_words} words/job over {jobs} jobs"
+        );
+    }
+
+    if n_transform > 0 {
+        let mut rng = crate::rng::Rng::seed_from(cfg.u64_or("seed", 1) ^ 0x7ab5);
+        let batch =
+            crate::linalg::Mat::from_fn(spec.d, n_transform, |_, _| rng.normal());
+        let tq = std::time::Instant::now();
+        let proj = service.transform(&batch)?;
+        let dt = tq.elapsed().as_secs_f64();
+        println!(
+            "transform: {} points → {}×{} in {:.1} ms ({:.0} points/s, {} words)",
+            n_transform,
+            proj.rows(),
+            proj.cols(),
+            dt * 1e3,
+            n_transform as f64 / dt.max(1e-9),
+            service.stats().round_words("svc:10-transform"),
+        );
+    }
+    println!(
+        "serve session done: {} jobs, {} total words, wall {:.2}s",
+        jobs,
+        service.stats().total_words(),
+        t0.elapsed().as_secs_f64()
+    );
+    service.shutdown();
     Ok(())
 }
 
@@ -368,6 +483,24 @@ mod tests {
         cfg.set("t2", "64");
         let (err, trace) = selftest(&cfg).unwrap();
         assert!(err >= 0.0 && err < trace, "{err} vs {trace}");
+    }
+
+    #[test]
+    fn serve_in_process_session_runs_jobs_and_transform() {
+        let mut cfg = Config::new();
+        cfg.set("kernel", "gauss");
+        cfg.set("gamma", "0.6");
+        cfg.set("jobs", "2");
+        cfg.set("transform", "32");
+        cfg.set("scale", "0.02");
+        cfg.set("k", "3");
+        cfg.set("t", "16");
+        cfg.set("p", "32");
+        cfg.set("n_lev", "8");
+        cfg.set("n_adapt", "12");
+        cfg.set("m_rff", "128");
+        cfg.set("t2", "64");
+        serve(&cfg, "protein_like").unwrap();
     }
 
     #[test]

@@ -24,6 +24,7 @@
 //! |---|---|---|
 //! | protocol | [`coordinator`] | Algs. 1–4 drivers, worker state machine, baselines, k-means/KRR/CSS extensions |
 //! | protocol | [`comm`] | star transports (in-memory, TCP) + per-word accounting (§4 cost model) |
+//! | protocol | [`serve`] | multi-job sessions on a persistent cluster: warm-state reuse, per-job accounting, batched projection serving |
 //! | protocol | [`embed`] | kernel subspace embeddings `E = S(φ(A))` (§5.1, Lemmas 4–5) |
 //! | compute | [`kernels`] | κ(x,y), Gram blocks, random-feature expansions (§3) |
 //! | compute | [`sketch`] | CountSketch / Gaussian / SRHT / TensorSketch (Lemma 1) |
@@ -73,7 +74,9 @@
 //! Start at [`coordinator`] for the headline algorithm; [`par`] for
 //! the `--threads` scaling knob; [`data::shard_store`] +
 //! [`coordinator::worker`] for the `--chunk-rows` out-of-core
-//! streaming path (bit-identical to resident for every chunk size).
+//! streaming path (bit-identical to resident for every chunk size);
+//! [`serve`] for multi-job sessions with warm-state reuse and the
+//! batched projection/query path (`diskpca serve`).
 
 #![deny(rustdoc::broken_intra_doc_links)]
 
@@ -92,5 +95,6 @@ pub mod linalg;
 pub mod par;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sketch;
 pub mod sparse;

@@ -65,7 +65,9 @@ pub fn eigh(a: &Mat) -> (Vec<f64>, Mat) {
     }
     let mut vals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| vals[j].partial_cmp(&vals[i]).unwrap());
+    // total_cmp: a NaN-poisoned spectrum (degenerate input) must sort
+    // deterministically instead of panicking the master mid-protocol.
+    order.sort_by(|&i, &j| vals[j].total_cmp(&vals[i]));
     let vecs = v.select_cols(&order);
     vals = order.iter().map(|&i| vals[i]).collect();
     (vals, vecs)
@@ -139,6 +141,21 @@ mod tests {
         for i in 1..vals.len() {
             assert!(vals[i - 1] >= vals[i] - 1e-12);
         }
+    }
+
+    /// Regression: a NaN-poisoned input used to panic the eigenvalue
+    /// sort (`partial_cmp(..).unwrap()` on a NaN); it must now return
+    /// (NaN values, deterministic order) instead of killing the master.
+    #[test]
+    fn eigh_nan_input_does_not_panic() {
+        let mut a = Mat::from_vec(3, 3, vec![2.0, 1.0, 0.0, 1.0, 2.0, 0.0, 0.0, 0.0, 1.0]);
+        a[(0, 0)] = f64::NAN;
+        a[(0, 1)] = f64::NAN;
+        a[(1, 0)] = f64::NAN;
+        let (vals, vecs) = eigh(&a);
+        assert_eq!(vals.len(), 3);
+        assert_eq!((vecs.rows(), vecs.cols()), (3, 3));
+        assert!(vals.iter().any(|v| v.is_nan()));
     }
 
     #[test]

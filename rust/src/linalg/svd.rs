@@ -72,13 +72,66 @@ pub fn svd(a: &Mat) -> (Mat, Vec<f64>, Mat) {
             }
         }
     }
-    // Sort descending.
+    // Rank-deficient inputs leave σ≈0 columns of W at (near-)zero —
+    // unnormalizable, so U would not be orthonormal and
+    // `top_k_left_singular` could hand disLR junk directions.
+    // Complete the basis: replace each such column with a unit vector
+    // orthogonal to every other column (Gram–Schmidt over standard
+    // basis candidates, largest surviving norm wins — deterministic).
+    complete_orthonormal_basis(&mut u, &sv);
+    // Sort descending. total_cmp: NaN-poisoned values (degenerate
+    // input) must sort deterministically instead of panicking.
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| sv[j].partial_cmp(&sv[i]).unwrap());
+    order.sort_by(|&i, &j| sv[j].total_cmp(&sv[i]));
     let u = u.select_cols(&order);
     let v = v.select_cols(&order);
     sv = order.iter().map(|&i| sv[i]).collect();
     (u, sv, v)
+}
+
+/// Replace the σ ≤ 1e-300 columns of `u` (m×n, m ≥ n) with unit
+/// vectors orthogonal to all other columns, so U is orthonormal even
+/// for rank-deficient inputs. The kept columns are untouched —
+/// full-rank inputs are bit-identical to the uncompleted result.
+fn complete_orthonormal_basis(u: &mut Mat, sv: &[f64]) {
+    let (m, n) = (u.rows(), u.cols());
+    for j in 0..n {
+        if sv[j] > 1e-300 {
+            continue;
+        }
+        // Best standard-basis candidate: project out every *other*
+        // column (normalized ones and already-completed ones alike)
+        // and keep the candidate with the largest residual norm.
+        let mut best: Option<(f64, Vec<f64>)> = None;
+        for cand in 0..m {
+            let mut v = vec![0.0; m];
+            v[cand] = 1.0;
+            for c in 0..n {
+                if c == j || (c > j && sv[c] <= 1e-300) {
+                    // skip self and not-yet-completed zero columns
+                    continue;
+                }
+                let mut dot = 0.0;
+                for i in 0..m {
+                    dot += u[(i, c)] * v[i];
+                }
+                for i in 0..m {
+                    v[i] -= dot * u[(i, c)];
+                }
+            }
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if best.as_ref().map_or(true, |(b, _)| norm > *b) {
+                best = Some((norm, v));
+            }
+        }
+        if let Some((norm, v)) = best {
+            if norm > 1e-8 {
+                for i in 0..m {
+                    u[(i, j)] = v[i] / norm;
+                }
+            }
+        }
+    }
 }
 
 /// Top-k left singular vectors of `A` (m×n) — what disLR's master
@@ -162,6 +215,51 @@ mod tests {
         let (_, s, _) = svd(&a);
         assert!(s[2] < 1e-9 * s[0]);
         check_svd(&a, 1e-9);
+    }
+
+    /// Regression: exactly-zero singular values used to leave their U
+    /// columns unnormalized (zero vectors), so U was not orthonormal
+    /// for rank-deficient inputs and `top_k_left_singular` could hand
+    /// disLR junk directions. The basis must now be completed.
+    #[test]
+    fn svd_rank_deficient_u_is_orthonormal() {
+        // exact zero columns survive Jacobi untouched (every rotation
+        // against them is skipped), hitting the completion path
+        let mut a = Mat::zeros(6, 4);
+        a[(0, 0)] = 3.0;
+        a[(1, 1)] = 2.0;
+        let (u, s, v) = svd(&a);
+        assert!((s[0] - 3.0).abs() < 1e-12);
+        assert!((s[1] - 2.0).abs() < 1e-12);
+        assert!(s[2].abs() < 1e-12 && s[3].abs() < 1e-12);
+        let utu = u.matmul_at_b(&u);
+        assert!(
+            utu.max_abs_diff(&Mat::identity(4)) < 1e-9,
+            "UᵀU err {} — zero-σ columns left unnormalized",
+            utu.max_abs_diff(&Mat::identity(4))
+        );
+        // reconstruction unaffected: completed columns carry σ = 0
+        let mut us = u.clone();
+        for j in 0..4 {
+            for i in 0..6 {
+                us[(i, j)] *= s[j];
+            }
+        }
+        assert!(us.matmul_a_bt(&v).max_abs_diff(&a) < 1e-9);
+        // the all-zero matrix completes to an exact orthonormal basis
+        let (u0, s0, _) = svd(&Mat::zeros(5, 3));
+        assert!(s0.iter().all(|&x| x == 0.0));
+        assert!(u0.matmul_at_b(&u0).max_abs_diff(&Mat::identity(3)) < 1e-12);
+    }
+
+    /// Regression: NaN entries used to panic the singular-value sort.
+    #[test]
+    fn svd_nan_input_does_not_panic() {
+        let mut a = Mat::from_fn(4, 3, |i, j| (i + 2 * j) as f64 * 0.5);
+        a[(2, 1)] = f64::NAN;
+        let (u, s, _) = svd(&a);
+        assert_eq!(s.len(), 3);
+        assert_eq!((u.rows(), u.cols()), (4, 3));
     }
 
     #[test]

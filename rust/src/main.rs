@@ -57,6 +57,7 @@ fn main() -> anyhow::Result<()> {
         "ablation" => experiments::ablation(&ctx, dataset)?,
         "master" => exit_on_launch_error(diskpca::launcher::master(&parsed.config)),
         "worker" => exit_on_launch_error(diskpca::launcher::worker(&parsed.config)),
+        "serve" => exit_on_launch_error(diskpca::launcher::serve(&parsed.config, dataset)),
         "shard" => diskpca::launcher::shard(&parsed.config, dataset)?,
         other => {
             eprintln!("unknown command `{other}`\n\n{}", cli::USAGE);

@@ -1,0 +1,516 @@
+//! Multi-job serving layer: many KPCA/CSS/KRR jobs on one persistent
+//! cluster, plus a batched projection path for query traffic.
+//!
+//! The paper's disKPCA produces a compact solution (Y, C) precisely so
+//! it can be *used* cheaply afterwards — but a cluster that must be
+//! relaunched per fit cannot serve traffic. A [`Service`] wraps a
+//! live [`Cluster`] and runs jobs against it sequentially, with three
+//! properties the one-shot drivers don't have:
+//!
+//! 1. **Job isolation.** Every job gets a [`JobCtx`]: its round labels
+//!    are namespaced (`job3:1-embed`) in the cluster's lifetime
+//!    [`CommStats`], so two jobs can never alias each other's
+//!    accounting rows, and a private per-job [`CommStats`] records the
+//!    *bare* labels — directly comparable, row for row, to a fresh
+//!    single-job cluster's table (pinned by `tests/serve_parity.rs`).
+//! 2. **Warm-state reuse.** The service tracks which [`EmbedSpec`] is
+//!    installed on the workers. A job whose spec matches skips the
+//!    `1-embed` broadcast entirely — zero words in that round — and
+//!    each worker additionally keeps an LRU embedding cache (byte
+//!    budget, `DISKPCA_EMBED_CACHE_MB`) so jobs *alternating* between
+//!    specs skip the recompute even when the round must be resent.
+//!    Reuse is bit-identity-safe: the embedding is a deterministic
+//!    function of (spec, shard), so a warm job's solution equals a
+//!    cold cluster's bit for bit.
+//! 3. **Query serving.** [`Service::transform`] projects batches of
+//!    *new* points through the installed solution: batches are split
+//!    across the star (any worker can answer — the result depends
+//!    only on the solution) and streamed in bounded column chunks;
+//!    streaming workers additionally fold each sub-batch through the
+//!    out-of-core chunk loop, so worker memory tracks the chunk size.
+//!
+//! Jobs run strictly sequentially (`&mut self`), which is what makes
+//! the namespacing airtight without worker-side job tags; sharded
+//! tenants and async dispatch layer on top of this in later work.
+//!
+//! # Examples
+//!
+//! ```
+//! use std::sync::Arc;
+//! use diskpca::coordinator::Params;
+//! use diskpca::data::{clusters, partition_power_law, Data};
+//! use diskpca::kernels::Kernel;
+//! use diskpca::rng::Rng;
+//! use diskpca::runtime::NativeBackend;
+//! use diskpca::serve::Service;
+//!
+//! let mut rng = Rng::seed_from(7);
+//! let data = Data::Dense(clusters(6, 90, 3, 0.2, &mut rng));
+//! let shards = partition_power_law(&data, 2, 3);
+//! let kernel = Kernel::Gauss { gamma: 0.6 };
+//! let params = Params {
+//!     k: 2, t: 8, p: 16, n_lev: 6, n_adapt: 10, m_rff: 128, t2: 64,
+//!     ..Params::default()
+//! };
+//! let mut svc = Service::in_process(shards, kernel, Arc::new(NativeBackend::new()), 0);
+//!
+//! let cold = svc.run_kpca(&params).unwrap();
+//! assert!(!cold.embed_reused);
+//! assert!(cold.job.stats.round_words("1-embed") > 0);
+//!
+//! // same spec ⇒ the second job skips the embed round entirely
+//! let warm = svc.run_kpca(&Params { n_adapt: 20, ..params }).unwrap();
+//! assert!(warm.embed_reused);
+//! assert_eq!(warm.job.stats.round_words("1-embed"), 0);
+//!
+//! // serve fresh points through the installed solution
+//! let batch = diskpca::linalg::Mat::from_fn(6, 5, |_, _| rng.normal());
+//! let proj = svc.transform(&batch).unwrap();
+//! assert_eq!((proj.rows(), proj.cols()), (2, 5));
+//! svc.shutdown();
+//! ```
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::comm::request as rq;
+use crate::comm::{memory, Cluster, CommError, CommStats, PointSet};
+use crate::coordinator::{
+    dis_css_warm, dis_eval, dis_kpca_warm, dis_krr, embed_spec_for, CssSolution, KpcaSolution,
+    KrrModel, Params, SamplingMode, Worker,
+};
+use crate::data::Data;
+use crate::embed::EmbedSpec;
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+use crate::runtime::Backend;
+
+/// Identity and accounting scope of one job on a [`Service`] cluster.
+#[derive(Clone, Debug)]
+pub struct JobCtx {
+    /// Monotone job index on this service.
+    pub id: usize,
+    /// Round-label namespace this job's exchanges carry in the
+    /// cluster's lifetime stats (e.g. `"job3:"`).
+    pub label: String,
+    /// This job's own word counters, recorded under *bare* round
+    /// labels — row-for-row comparable to a fresh single-job cluster.
+    pub stats: CommStats,
+}
+
+/// A completed job: its output plus its isolated accounting.
+#[derive(Clone, Debug)]
+pub struct JobReport<T> {
+    pub job: JobCtx,
+    pub output: T,
+    /// Whether the `1-embed` round was skipped via warm-state reuse
+    /// (always `false` for jobs that never embed, e.g. KRR).
+    pub embed_reused: bool,
+}
+
+/// A job service over a persistent [`Cluster`]: run many fits without
+/// relaunching workers, reuse worker-resident warm state across jobs,
+/// and serve projection queries. See the module docs.
+pub struct Service {
+    cluster: Cluster,
+    kernel: Kernel,
+    /// In-process worker threads (empty when serving over an external
+    /// transport); joined on shutdown/drop.
+    handles: Vec<JoinHandle<()>>,
+    /// The [`EmbedSpec`] currently installed on every worker, when
+    /// known — the key for skipping the `1-embed` round.
+    warm_embed: Option<EmbedSpec>,
+    next_job: usize,
+    /// Per-worker column bound for one transform scatter round.
+    batch_cols: usize,
+}
+
+impl Service {
+    /// Serve over an already-connected cluster (e.g. [`crate::comm::tcp`]
+    /// workers). The workers' `kernel` must match.
+    pub fn new(cluster: Cluster, kernel: Kernel) -> Self {
+        cluster.set_round_prefix("svc:");
+        Self {
+            cluster,
+            kernel,
+            handles: Vec::new(),
+            warm_embed: None,
+            next_job: 0,
+            batch_cols: 1024,
+        }
+    }
+
+    /// Spawn an in-process serving cluster over the memory transport —
+    /// the [`crate::coordinator::run_cluster`] topology, kept alive for
+    /// many jobs. `chunk_rows > 0` makes the workers stream
+    /// out-of-core (see the worker docs). Workers keep the default
+    /// embed warm-cache budget; see [`Service::in_process_opts`].
+    pub fn in_process(
+        shards: Vec<Data>,
+        kernel: Kernel,
+        backend: Arc<dyn Backend>,
+        chunk_rows: usize,
+    ) -> Self {
+        Self::in_process_opts(shards, kernel, backend, chunk_rows, None)
+    }
+
+    /// [`Service::in_process`] with an explicit per-worker embed
+    /// warm-cache byte budget (`None` keeps the
+    /// `DISKPCA_EMBED_CACHE_MB` default, `Some(0)` disables caching) —
+    /// what `diskpca serve --embed-cache-mb` sets.
+    pub fn in_process_opts(
+        shards: Vec<Data>,
+        kernel: Kernel,
+        backend: Arc<dyn Backend>,
+        chunk_rows: usize,
+        embed_cache_bytes: Option<usize>,
+    ) -> Self {
+        let (star, endpoints) = memory::star(shards.len());
+        let handles: Vec<JoinHandle<()>> = shards
+            .into_iter()
+            .zip(endpoints)
+            .map(|(shard, ep)| {
+                let be = backend.clone();
+                std::thread::spawn(move || {
+                    let mut worker = Worker::new_chunked(shard, kernel, be, chunk_rows);
+                    if let Some(bytes) = embed_cache_bytes {
+                        worker.set_embed_cache_budget(bytes);
+                    }
+                    worker.run(ep)
+                })
+            })
+            .collect();
+        let mut svc = Self::new(Cluster::new(star, CommStats::new()), kernel);
+        svc.handles = handles;
+        svc
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.cluster.num_workers()
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// Jobs run so far (monotone id source).
+    pub fn jobs_run(&self) -> usize {
+        self.next_job
+    }
+
+    /// Lifetime stats of the whole service — every job appears under
+    /// its namespaced labels, queries under `svc:`.
+    pub fn stats(&self) -> &CommStats {
+        &self.cluster.stats
+    }
+
+    /// The underlying cluster (advanced use; prefer the job API —
+    /// exchanges made here are accounted under the ambient `svc:`
+    /// namespace and invalidate no warm state).
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// Bound the per-worker column width of one transform scatter
+    /// round (default 1024): larger batches stream through in
+    /// `workers × cols` chunks.
+    pub fn set_transform_chunk(&mut self, cols: usize) {
+        self.batch_cols = cols.max(1);
+    }
+
+    /// Open a job scope: namespace the round labels and install the
+    /// per-job stats sink.
+    fn begin(&mut self) -> JobCtx {
+        let id = self.next_job;
+        self.next_job += 1;
+        let label = format!("job{id}:");
+        let stats = CommStats::new();
+        self.cluster.set_round_prefix(&label);
+        self.cluster.set_job_stats(Some(stats.clone()));
+        JobCtx { id, label, stats }
+    }
+
+    /// Close the job scope: back to the ambient `svc:` namespace.
+    fn finish(&self) {
+        self.cluster.set_job_stats(None);
+        self.cluster.set_round_prefix("svc:");
+    }
+
+    /// Run one disKPCA job (Alg. 4), reusing the installed embedding
+    /// when this job's [`EmbedSpec`] matches — the reused job performs
+    /// **zero** `1-embed` communication and its solution is
+    /// bit-identical to a cold run.
+    pub fn run_kpca(&mut self, params: &Params) -> Result<JobReport<KpcaSolution>, CommError> {
+        self.run_kpca_mode(params, SamplingMode::Full)
+    }
+
+    /// [`Service::run_kpca`] with an ablated sampling stage.
+    pub fn run_kpca_mode(
+        &mut self,
+        params: &Params,
+        mode: SamplingMode,
+    ) -> Result<JobReport<KpcaSolution>, CommError> {
+        let embeds = mode != SamplingMode::AdaptiveOnly;
+        let spec = embed_spec_for(self.kernel, params);
+        let reuse = embeds && self.warm_embed == Some(spec);
+        let job = self.begin();
+        let res = dis_kpca_warm(&self.cluster, self.kernel, params, mode, reuse);
+        self.finish();
+        self.note_embed_outcome(embeds, spec, &res);
+        let output = res?;
+        Ok(JobReport { job, output, embed_reused: reuse })
+    }
+
+    /// Run one kernel CSS job (§5.3), with the same warm-embed reuse.
+    pub fn run_css(&mut self, params: &Params) -> Result<JobReport<CssSolution>, CommError> {
+        let spec = embed_spec_for(self.kernel, params);
+        let reuse = self.warm_embed == Some(spec);
+        let job = self.begin();
+        let res = dis_css_warm(&self.cluster, self.kernel, params, reuse);
+        self.finish();
+        self.note_embed_outcome(true, spec, &res);
+        let output = res?;
+        Ok(JobReport { job, output, embed_reused: reuse })
+    }
+
+    /// Run one distributed KRR job on a representative set (no
+    /// embedding rounds — warm state is untouched).
+    pub fn run_krr(
+        &mut self,
+        y: &PointSet,
+        lambda: f64,
+        teacher_seed: u64,
+    ) -> Result<JobReport<KrrModel>, CommError> {
+        let job = self.begin();
+        let res = dis_krr(&self.cluster, self.kernel, y, lambda, teacher_seed);
+        self.finish();
+        let output = res?;
+        Ok(JobReport { job, output, embed_reused: false })
+    }
+
+    /// Evaluate the installed solution (`(error, trace)`, Alg. 4's
+    /// quality metric) as its own job.
+    pub fn run_eval(&mut self) -> Result<JobReport<(f64, f64)>, CommError> {
+        let job = self.begin();
+        let res = dis_eval(&self.cluster);
+        self.finish();
+        let output = res?;
+        Ok(JobReport { job, output, embed_reused: false })
+    }
+
+    /// Run an arbitrary driver sequence as one job (e.g. fit + eval in
+    /// a single accounting scope). The body may install any worker
+    /// state, so the warm-embed key is conservatively invalidated.
+    pub fn run_job<T>(
+        &mut self,
+        body: impl FnOnce(&Cluster) -> Result<T, CommError>,
+    ) -> Result<JobReport<T>, CommError> {
+        let job = self.begin();
+        let res = body(&self.cluster);
+        self.finish();
+        self.warm_embed = None;
+        let output = res?;
+        Ok(JobReport { job, output, embed_reused: false })
+    }
+
+    /// Track what the workers hold after a job that embeds: on
+    /// success the job's spec is installed; on failure the state is
+    /// unknown — drop the key so the next job re-embeds (harmless).
+    fn note_embed_outcome<T, E>(&mut self, embeds: bool, spec: EmbedSpec, res: &Result<T, E>) {
+        if !embeds {
+            return;
+        }
+        self.warm_embed = match res {
+            Ok(_) => Some(spec),
+            Err(_) => None,
+        };
+    }
+
+    /// Project a batch of new points (d×n, columns are points) through
+    /// the solution installed by the most recent fit job: returns the
+    /// k×n coordinates LᵀΦ(batch).
+    ///
+    /// The batch is scattered across the workers in worker-order
+    /// column ranges (any worker computes the same answer — the
+    /// projection depends only on the installed solution) and large
+    /// batches stream through in `workers ×` [`Service::set_transform_chunk`]
+    /// super-chunks, so neither master nor workers ever hold more
+    /// than a bounded slice in flight. Exchanges are accounted under
+    /// `svc:10-transform`.
+    ///
+    /// An empty batch returns an empty `0×0` matrix without any
+    /// communication — the solution's `k` is unknown master-side
+    /// until a worker replies, so the k×0 shape cannot be produced.
+    pub fn transform(&mut self, batch: &Mat) -> Result<Mat, CommError> {
+        let n = batch.cols();
+        let s = self.cluster.num_workers();
+        if n == 0 {
+            return Ok(Mat::zeros(0, 0));
+        }
+        self.cluster.set_round("10-transform");
+        let mut out: Option<Mat> = None;
+        let super_cols = self.batch_cols * s;
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + super_cols).min(n);
+            let cols = j1 - j0;
+            // split [j0, j1) over workers as evenly as possible
+            let bounds: Vec<usize> = (0..=s).map(|w| j0 + cols * w / s).collect();
+            let reqs: Vec<rq::ProjectPoints> = (0..s)
+                .map(|w| {
+                    let idx: Vec<usize> = (bounds[w]..bounds[w + 1]).collect();
+                    rq::ProjectPoints { pts: PointSet::Dense(batch.select_cols(&idx)) }
+                })
+                .collect();
+            let parts = self.cluster.scatter(reqs)?;
+            for (w, part) in parts.iter().enumerate() {
+                let out_m = out.get_or_insert_with(|| Mat::zeros(part.rows(), n));
+                for (jj, j) in (bounds[w]..bounds[w + 1]).enumerate() {
+                    for i in 0..part.rows() {
+                        out_m[(i, j)] = part[(i, jj)];
+                    }
+                }
+            }
+            j0 = j1;
+        }
+        Ok(out.expect("n > 0 produced at least one scatter"))
+    }
+
+    /// Quit the workers and join in-process worker threads. Dropping
+    /// the service does the same; this form just makes the point
+    /// explicit at call sites.
+    pub fn shutdown(self) {}
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.cluster.shutdown();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{clusters, partition_power_law};
+    use crate::rng::Rng;
+    use crate::runtime::NativeBackend;
+
+    fn service(s: usize) -> (Service, Data, Params) {
+        let mut rng = Rng::seed_from(11);
+        let data = Data::Dense(clusters(7, 140, 3, 0.2, &mut rng));
+        let shards = partition_power_law(&data, s, 5);
+        let kernel = Kernel::Gauss { gamma: 0.6 };
+        let params = Params {
+            k: 3,
+            t: 16,
+            p: 32,
+            n_lev: 8,
+            n_adapt: 14,
+            m_rff: 128,
+            t2: 64,
+            seed: 21,
+            ..Params::default()
+        };
+        let svc = Service::in_process(shards, kernel, Arc::new(NativeBackend::new()), 0);
+        (svc, data, params)
+    }
+
+    #[test]
+    fn warm_job_skips_embed_round_with_identical_solution() {
+        let (mut svc, _, params) = service(3);
+        let cold = svc.run_kpca(&params).unwrap();
+        assert!(!cold.embed_reused);
+        assert!(cold.job.stats.round_words("1-embed") > 0);
+        let warm = svc.run_kpca(&params).unwrap();
+        assert!(warm.embed_reused);
+        assert_eq!(
+            warm.job.stats.round_words("1-embed"),
+            0,
+            "warm job must perform zero 1-embed communication"
+        );
+        assert!(warm.job.stats.total_words() < cold.job.stats.total_words());
+        // identical params ⇒ bit-identical solution despite the skip
+        assert!(cold.output.y.data() == warm.output.y.data());
+        assert!(cold.output.coeffs.data() == warm.output.coeffs.data());
+        // lifetime stats kept the jobs apart by namespace
+        assert!(svc.stats().round_words("job0:1-embed") > 0);
+        assert_eq!(svc.stats().round_words("job1:1-embed"), 0);
+        assert!(svc.stats().round_words("job1:2-disLS") > 0);
+    }
+
+    #[test]
+    fn different_spec_invalidates_warm_state() {
+        let (mut svc, _, params) = service(2);
+        svc.run_kpca(&params).unwrap();
+        let other = Params { seed: params.seed + 1, ..params };
+        let cold = svc.run_kpca(&other).unwrap();
+        assert!(!cold.embed_reused);
+        assert!(cold.job.stats.round_words("1-embed") > 0);
+        // returning to the first spec re-sends the round (master-side
+        // tracking is last-installed; the worker-side cache still
+        // saves the recompute)
+        let back = svc.run_kpca(&params).unwrap();
+        assert!(!back.embed_reused);
+        assert!(back.job.stats.round_words("1-embed") > 0);
+    }
+
+    #[test]
+    fn css_and_krr_jobs_share_the_warm_cluster() {
+        let (mut svc, _, params) = service(2);
+        let css = svc.run_css(&params).unwrap();
+        assert!(!css.embed_reused);
+        // same spec: the CSS warm state carries over to a KPCA job
+        let kpca = svc.run_kpca(&params).unwrap();
+        assert!(kpca.embed_reused);
+        let krr = svc.run_krr(&css.output.y, 1e-3, 9).unwrap();
+        assert_eq!(krr.output.alpha.len(), css.output.y.len());
+        assert!(!krr.embed_reused);
+        assert_eq!(svc.jobs_run(), 3);
+    }
+
+    #[test]
+    fn transform_matches_solution_projection() {
+        let (mut svc, _, params) = service(3);
+        let sol = svc.run_kpca(&params).unwrap().output;
+        let mut rng = Rng::seed_from(99);
+        let batch = Mat::from_fn(7, 23, |_, _| rng.normal());
+        let served = svc.transform(&batch).unwrap();
+        assert_eq!((served.rows(), served.cols()), (sol.k(), 23));
+        // master-side projection associates differently (C = R⁻¹W is
+        // pre-multiplied), so compare to tolerance, not bits
+        let local = sol.project(&Data::Dense(batch.clone()));
+        assert!(
+            served.max_abs_diff(&local) < 1e-6,
+            "served vs local diff {}",
+            served.max_abs_diff(&local)
+        );
+        // chunked dispatch must not change results
+        svc.set_transform_chunk(3);
+        let chunked = svc.transform(&batch).unwrap();
+        assert!(chunked.data() == served.data(), "chunked transform differs");
+        // words accounted under the ambient svc: namespace
+        assert!(svc.stats().round_words("svc:10-transform") > 0);
+    }
+
+    #[test]
+    fn run_job_composes_drivers_in_one_scope() {
+        let (mut svc, data, params) = service(2);
+        let kernel = svc.kernel();
+        let report = svc
+            .run_job(move |cluster| {
+                let sol = crate::coordinator::dis_kpca(cluster, kernel, &params)?;
+                let (err, trace) = dis_eval(cluster)?;
+                Ok((sol, err, trace))
+            })
+            .unwrap();
+        let (sol, err, trace) = report.output;
+        assert!(err >= 0.0 && err <= trace);
+        assert!((sol.eval_error(&data) - err).abs() < 1e-6 * trace);
+        for round in ["1-embed", "2-disLS", "5-disLR", "6-eval"] {
+            assert!(report.job.stats.round_words(round) > 0, "{round} missing");
+        }
+    }
+}

@@ -353,6 +353,7 @@ fn variant_index(m: &Message) -> usize {
         RespKrr { .. } => 25,
         ReqKrrEval { .. } => 26,
         RespError(_) => 27,
+        ReqProjectPoints { .. } => 28,
     }
 }
 
@@ -406,6 +407,9 @@ fn canonical_messages() -> Vec<Message> {
         Message::RespKrr { g: m.clone(), b: tall, tnorm: 6.5 },
         Message::ReqKrrEval { alpha: Mat::from_fn(4, 1, |i, _| i as f64 * 0.1) },
         Message::RespError("block 3 unreadable".into()),
+        Message::ReqProjectPoints {
+            pts: PointSet::Dense(Mat::from_fn(3, 5, |i, j| (i + j) as f64)),
+        },
     ]
 }
 
@@ -420,7 +424,7 @@ fn codec_roundtrip_covers_every_variant() {
     let mut seen: Vec<usize> = msgs.iter().map(variant_index).collect();
     seen.sort_unstable();
     seen.dedup();
-    assert_eq!(seen, (0..28).collect::<Vec<_>>(), "canonical list must cover all 28 variants");
+    assert_eq!(seen, (0..29).collect::<Vec<_>>(), "canonical list must cover all 29 variants");
     for msg in msgs {
         let bytes = codec::encode(&msg);
         let back = codec::decode(&bytes).unwrap_or_else(|e| panic!("{}: {e:?}", msg.tag()));

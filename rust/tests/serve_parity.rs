@@ -1,0 +1,273 @@
+//! Serve-layer parity: a persistent multi-job [`Service`] must be
+//! *invisible* in the results. N jobs run sequentially on one serve
+//! cluster must be bit-identical — solution bits and per-job word
+//! tables, row for row — to N fresh single-job clusters, on both the
+//! in-memory and TCP transports. And a warm job (identical
+//! `EmbedSpec`) must skip the `1-embed` round with zero words while
+//! still producing the cold cluster's exact solution — the
+//! acceptance invariant of the serving layer.
+
+use std::sync::Arc;
+
+use diskpca::comm::{memory, tcp, Cluster, CommStats, Endpoint, Star};
+use diskpca::coordinator::{dis_kpca, Params, Worker};
+use diskpca::data::{clusters, partition_power_law, Data};
+use diskpca::kernels::Kernel;
+use diskpca::linalg::Mat;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+use diskpca::serve::Service;
+
+fn workload(s: usize) -> (Vec<Data>, Kernel, Params) {
+    let mut rng = Rng::seed_from(6);
+    let data = Data::Dense(clusters(9, 160, 3, 0.2, &mut rng));
+    let shards = partition_power_law(&data, s, 4);
+    let kernel = Kernel::Gauss { gamma: 0.7 };
+    let params = Params {
+        k: 3,
+        t: 16,
+        p: 32,
+        n_lev: 8,
+        n_adapt: 14,
+        m_rff: 128,
+        t2: 64,
+        seed: 21,
+        ..Params::default()
+    };
+    (shards, kernel, params)
+}
+
+/// What parity compares per job: solution bits + the word table.
+#[derive(Debug, PartialEq)]
+struct JobOutcome {
+    y_bits: Vec<u64>,
+    coeff_bits: Vec<u64>,
+    table: Vec<(String, usize, usize)>,
+}
+
+fn outcome(
+    sol: &diskpca::coordinator::KpcaSolution,
+    table: Vec<(String, usize, usize)>,
+) -> JobOutcome {
+    JobOutcome {
+        y_bits: sol.y.data().iter().map(|v| v.to_bits()).collect(),
+        coeff_bits: sol.coeffs.data().iter().map(|v| v.to_bits()).collect(),
+        table,
+    }
+}
+
+/// One fresh single-job cluster: spawn, fit, snapshot the table
+/// *before* shutdown (so the Quit words don't skew the comparison),
+/// tear down.
+fn fresh_run<E: Endpoint + Send + 'static>(
+    shards: Vec<Data>,
+    kernel: Kernel,
+    params: Params,
+    star: Star,
+    endpoints: Vec<E>,
+) -> JobOutcome {
+    let stats = CommStats::new();
+    let cluster = Cluster::new(star, stats.clone());
+    let handles: Vec<_> = shards
+        .into_iter()
+        .zip(endpoints)
+        .map(|(shard, ep)| {
+            let be = Arc::new(NativeBackend::new());
+            std::thread::spawn(move || Worker::new(shard, kernel, be).run(ep))
+        })
+        .collect();
+    let sol = dis_kpca(&cluster, kernel, &params).unwrap();
+    let table = stats.table();
+    cluster.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+    outcome(&sol, table)
+}
+
+fn fresh_memory(s: usize, params: Params) -> JobOutcome {
+    let (shards, kernel, _) = workload(s);
+    let (star, endpoints) = memory::star(shards.len());
+    fresh_run(shards, kernel, params, star, endpoints)
+}
+
+fn fresh_tcp(s: usize, params: Params) -> JobOutcome {
+    let (shards, kernel, _) = workload(s);
+    let (star, endpoints) = tcp::star(shards.len()).unwrap();
+    fresh_run(shards, kernel, params, star, endpoints)
+}
+
+/// A serve cluster over TCP loopback: worker threads on real sockets.
+fn tcp_service(
+    shards: Vec<Data>,
+    kernel: Kernel,
+) -> (Service, Vec<std::thread::JoinHandle<()>>) {
+    let (star, endpoints) = tcp::star(shards.len()).unwrap();
+    let handles: Vec<_> = shards
+        .into_iter()
+        .zip(endpoints)
+        .map(|(shard, ep)| {
+            let be = Arc::new(NativeBackend::new());
+            std::thread::spawn(move || Worker::new(shard, kernel, be).run(ep))
+        })
+        .collect();
+    (Service::new(Cluster::new(star, CommStats::new()), kernel), handles)
+}
+
+/// N sequential jobs (distinct seeds ⇒ each pays its own embed round)
+/// on one serve cluster == N fresh clusters, bit for bit, table row
+/// for table row.
+fn multi_job_parity(tcp_transport: bool) {
+    let s = 4;
+    let (shards, kernel, base) = workload(s);
+    let seeds = [21u64, 22, 23];
+
+    let (mut svc, handles) = if tcp_transport {
+        tcp_service(shards, kernel)
+    } else {
+        (
+            Service::in_process(shards, kernel, Arc::new(NativeBackend::new()), 0),
+            Vec::new(),
+        )
+    };
+    let served: Vec<JobOutcome> = seeds
+        .iter()
+        .map(|&seed| {
+            let report = svc.run_kpca(&Params { seed, ..base }).unwrap();
+            assert!(!report.embed_reused, "distinct seeds must not reuse embeds");
+            outcome(&report.output, report.job.stats.table())
+        })
+        .collect();
+    // the lifetime stats kept every job apart by namespace
+    for (j, _) in seeds.iter().enumerate() {
+        assert!(
+            svc.stats().round_words(&format!("job{j}:1-embed")) > 0,
+            "job{j} missing from the namespaced lifetime table"
+        );
+    }
+    svc.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    for (i, (&seed, got)) in seeds.iter().zip(&served).enumerate() {
+        let fresh = if tcp_transport {
+            fresh_tcp(s, Params { seed, ..base })
+        } else {
+            fresh_memory(s, Params { seed, ..base })
+        };
+        assert_eq!(
+            got, &fresh,
+            "job {i} (seed {seed}) differs from a fresh single-job cluster"
+        );
+    }
+}
+
+#[test]
+fn multi_job_parity_memory() {
+    multi_job_parity(false);
+}
+
+#[test]
+fn multi_job_parity_tcp() {
+    multi_job_parity(true);
+}
+
+/// The acceptance invariant: a second job with an identical
+/// `EmbedSpec` on a warm cluster performs **zero** `1-embed`
+/// communication (asserted on its per-job `CommStats`) while its
+/// solution stays bit-identical to a cold-cluster run.
+fn warm_reuse(tcp_transport: bool) {
+    let s = 4;
+    let (shards, kernel, params) = workload(s);
+    let (mut svc, handles) = if tcp_transport {
+        tcp_service(shards, kernel)
+    } else {
+        (
+            Service::in_process(shards, kernel, Arc::new(NativeBackend::new()), 0),
+            Vec::new(),
+        )
+    };
+    let cold = svc.run_kpca(&params).unwrap();
+    let warm = svc.run_kpca(&params).unwrap();
+    assert!(!cold.embed_reused && warm.embed_reused);
+    assert!(cold.job.stats.round_words("1-embed") > 0);
+    assert_eq!(
+        warm.job.stats.round_words("1-embed"),
+        0,
+        "warm job performed 1-embed communication"
+    );
+    assert!(
+        warm.job.stats.total_words() < cold.job.stats.total_words(),
+        "warm job must ship strictly fewer words"
+    );
+    let served_cold = outcome(&cold.output, cold.job.stats.table());
+    let served_warm_bits = outcome(&warm.output, Vec::new());
+    svc.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // both jobs equal a fresh cold cluster's solution bit for bit
+    let fresh = if tcp_transport {
+        fresh_tcp(s, params)
+    } else {
+        fresh_memory(s, params)
+    };
+    assert_eq!(served_cold.y_bits, fresh.y_bits);
+    assert_eq!(served_cold.coeff_bits, fresh.coeff_bits);
+    assert_eq!(served_cold.table, fresh.table, "cold job table differs from fresh");
+    assert_eq!(
+        served_warm_bits.y_bits, fresh.y_bits,
+        "warm solution diverged from the cold cluster's"
+    );
+    assert_eq!(served_warm_bits.coeff_bits, fresh.coeff_bits);
+}
+
+#[test]
+fn warm_reuse_zero_embed_words_memory() {
+    warm_reuse(false);
+}
+
+#[test]
+fn warm_reuse_zero_embed_words_tcp() {
+    warm_reuse(true);
+}
+
+/// Query serving over both transports: transform answers match the
+/// returned solution's own projection, independent of transport and
+/// batch chunking.
+#[test]
+fn transform_parity_across_transports() {
+    let s = 3;
+    let (shards, kernel, params) = workload(s);
+    let mut rng = Rng::seed_from(123);
+    let batch = Mat::from_fn(9, 40, |_, _| rng.normal());
+
+    let mut mem_svc = Service::in_process(
+        shards.clone(),
+        kernel,
+        Arc::new(NativeBackend::new()),
+        0,
+    );
+    let sol = mem_svc.run_kpca(&params).unwrap().output;
+    let mem_proj = mem_svc.transform(&batch).unwrap();
+    mem_svc.shutdown();
+
+    let (mut tcp_svc, handles) = tcp_service(shards, kernel);
+    tcp_svc.run_kpca(&params).unwrap();
+    tcp_svc.set_transform_chunk(7); // chunked dispatch must not matter
+    let tcp_proj = tcp_svc.transform(&batch).unwrap();
+    tcp_svc.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    assert!(mem_proj.data() == tcp_proj.data(), "transform differs across transports");
+    let local = sol.project(&Data::Dense(batch));
+    assert!(
+        mem_proj.max_abs_diff(&local) < 1e-6,
+        "served projection diverged: {}",
+        mem_proj.max_abs_diff(&local)
+    );
+}
