@@ -39,6 +39,8 @@ DISKPCA_BENCH_FAST=1 DISKPCA_BENCH_THREADS=1,2 cargo bench --bench linalg
 # copy the fresh BENCH_*.json over the baseline when a slowdown is
 # intended. The protocol rows track broadcast/gather fan-out, so
 # session-layer refactors are trend-recorded.
+echo "==> gemm bench smoke + baseline diff (warn-only, threshold 25%; GFLOP/s per row)"
+DISKPCA_BENCH_FAST=1 DISKPCA_BENCH_THREADS=1,4 cargo bench --bench gemm
 echo "==> streaming bench smoke + baseline diff (warn-only, threshold 25%)"
 DISKPCA_BENCH_FAST=1 cargo bench --bench streaming
 echo "==> protocol bench smoke + baseline diff (warn-only, threshold 25%)"

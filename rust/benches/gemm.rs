@@ -1,0 +1,84 @@
+//! GEMM engine benchmarks (`cargo bench --bench gemm`) — wall time
+//! *and* GFLOP/s per shape and thread count for the packed
+//! register-tiled engine behind `Mat::{matmul, matmul_at_b,
+//! matmul_a_bt, gram_self}`.
+//!
+//! Emits `BENCH_gemm.json` (median ns per row, plus a
+//! `"<row>#gflops"` throughput key per row) and diffs the wall-time
+//! rows against the checked-in baseline in
+//! `bench_baseline/BENCH_gemm.json`, printing a warning for any row
+//! more than 25% slower. Warnings never fail the run — see
+//! `bench_baseline/README.md`. Override the baseline path with
+//! `DISKPCA_BENCH_BASELINE`, the output path with `DISKPCA_BENCH_OUT`,
+//! the thread sweep with `DISKPCA_BENCH_THREADS` (the checked-in
+//! baseline covers threads 1, 2 and 4).
+
+use diskpca::bench_harness::{black_box, thread_sweep, Bencher};
+use diskpca::linalg::Mat;
+use diskpca::rng::Rng;
+
+const REGRESSION_THRESHOLD: f64 = 1.25;
+
+fn randmat(rng: &mut Rng, m: usize, n: usize) -> Mat {
+    Mat::from_fn(m, n, |_, _| rng.normal())
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::seed_from(17);
+
+    // shapes at the protocol's operating points: a mid-size square
+    // (master solves), the K(Y,Y)-scale product behind projections,
+    // and the wide disLR stack (|Y|×s·w gram).
+    let shapes: &[(usize, usize, usize)] = &[(128, 128, 128), (450, 450, 256), (250, 2000, 250)];
+
+    for &t in &thread_sweep() {
+        diskpca::par::set_threads(t);
+        for &(m, k, n) in shapes {
+            let a = randmat(&mut rng, m, k);
+            let bm = randmat(&mut rng, k, n);
+            let at = randmat(&mut rng, k, m);
+            let bt = randmat(&mut rng, n, k);
+            let mm = (2 * m * k * n) as f64;
+            b.bench_flops(&format!("matmul {m}x{k}x{n} t{t}"), mm, || {
+                black_box(a.matmul(&bm))
+            });
+            b.bench_flops(&format!("matmul_at_b {m}x{k}x{n} t{t}"), mm, || {
+                black_box(at.matmul_at_b(&bm))
+            });
+            b.bench_flops(&format!("matmul_a_bt {m}x{k}x{n} t{t}"), mm, || {
+                black_box(a.matmul_a_bt(&bt))
+            });
+            // symmetric: m·m·k multiply-adds (upper triangle × 2)
+            b.bench_flops(&format!("gram_self {m}x{k} t{t}"), (m * m * k) as f64, || {
+                black_box(a.gram_self())
+            });
+        }
+    }
+    diskpca::par::set_threads(1);
+
+    let out = std::env::var("DISKPCA_BENCH_OUT").unwrap_or_else(|_| "BENCH_gemm.json".into());
+    b.write_median_json(&out).expect("write bench json");
+    println!("wrote {out} ({} rows)", b.samples.len());
+
+    let baseline_path = std::env::var("DISKPCA_BENCH_BASELINE")
+        .unwrap_or_else(|_| "bench_baseline/BENCH_gemm.json".into());
+    match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => {
+            let warnings = b.regressions_vs(&text, REGRESSION_THRESHOLD);
+            if warnings.is_empty() {
+                println!("no regressions > 25% vs {baseline_path}");
+            } else {
+                for w in &warnings {
+                    println!("WARNING: bench regression: {w}");
+                }
+                println!(
+                    "({} warning(s) vs {baseline_path}; informational only — update the baseline \
+                     by copying {out} over it when a slowdown is intended)",
+                    warnings.len()
+                );
+            }
+        }
+        Err(e) => println!("baseline {baseline_path} unavailable ({e}) — skipping diff"),
+    }
+}

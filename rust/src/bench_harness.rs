@@ -17,6 +17,11 @@ pub struct Sample {
     pub min: Duration,
     /// median absolute deviation — stability indicator.
     pub mad: Duration,
+    /// Throughput in GFLOP/s (from the median), when the bench row
+    /// declared its flop count via [`Bencher::bench_flops`] — so the
+    /// `BENCH_*.json` trajectory tracks throughput, not just wall
+    /// time.
+    pub gflops: Option<f64>,
 }
 
 impl Sample {
@@ -31,7 +36,11 @@ impl std::fmt::Display for Sample {
             f,
             "{:<44} t={:<2} {:>10.3?} median  {:>10.3?} min  ±{:>8.3?} mad  ({} iters)",
             self.name, self.threads, self.median, self.min, self.mad, self.iters
-        )
+        )?;
+        if let Some(g) = self.gflops {
+            write!(f, "  {g:>7.2} GF/s")?;
+        }
+        Ok(())
     }
 }
 
@@ -91,27 +100,50 @@ impl Bencher {
             mean,
             min,
             mad,
+            gflops: None,
         };
         println!("{sample}");
         self.samples.push(sample.clone());
         sample
     }
 
+    /// [`Bencher::bench`] for a row with a known flop count: records
+    /// the achieved GFLOP/s (from the median) on the sample, so the
+    /// JSON/CSV artifacts track throughput alongside wall time.
+    pub fn bench_flops<T>(&mut self, name: &str, flops: f64, f: impl FnMut() -> T) -> Sample {
+        let mut sample = self.bench(name, f);
+        let g = flops / sample.median.as_secs_f64().max(1e-12) / 1e9;
+        sample.gflops = Some(g);
+        if let Some(last) = self.samples.last_mut() {
+            last.gflops = Some(g);
+        }
+        println!("    {name}: {g:.2} GFLOP/s");
+        sample
+    }
+
     /// Write the samples as a flat `{name: median_ns}` JSON object —
     /// the format `BENCH_streaming.json` uses so CI can diff a run
-    /// against the checked-in baseline.
+    /// against the checked-in baseline. Rows recorded via
+    /// [`Bencher::bench_flops`] additionally emit a `"<name>#gflops"`
+    /// key with the achieved throughput; [`Bencher::regressions_vs`]
+    /// diffs only the wall-time keys, so the throughput keys are pure
+    /// trend record.
     pub fn write_median_json(&self, path: &str) -> std::io::Result<()> {
         if let Some(dir) = std::path::Path::new(path).parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)?;
             }
         }
-        let pairs: Vec<(&str, crate::json::Value)> = self
-            .samples
-            .iter()
-            .map(|s| (s.name.as_str(), crate::json::num(s.median.as_nanos() as f64)))
-            .collect();
-        std::fs::write(path, crate::json::write(&crate::json::obj(pairs)))
+        let mut pairs: Vec<(String, crate::json::Value)> = Vec::new();
+        for s in &self.samples {
+            pairs.push((s.name.clone(), crate::json::num(s.median.as_nanos() as f64)));
+            if let Some(g) = s.gflops {
+                pairs.push((format!("{}#gflops", s.name), crate::json::num(g)));
+            }
+        }
+        let borrowed: Vec<(&str, crate::json::Value)> =
+            pairs.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+        std::fs::write(path, crate::json::write(&crate::json::obj(borrowed)))
     }
 
     /// Diff this run's medians against a baseline JSON written by
@@ -152,17 +184,18 @@ impl Bencher {
         if let Some(dir) = std::path::Path::new(path).parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let mut out = String::from("name,threads,median_ns,mean_ns,min_ns,mad_ns,iters\n");
+        let mut out = String::from("name,threads,median_ns,mean_ns,min_ns,mad_ns,iters,gflops\n");
         for s in &self.samples {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{}\n",
                 s.name,
                 s.threads,
                 s.median.as_nanos(),
                 s.mean.as_nanos(),
                 s.min.as_nanos(),
                 s.mad.as_nanos(),
-                s.iters
+                s.iters,
+                s.gflops.map(|g| format!("{g:.3}")).unwrap_or_default()
             ));
         }
         std::fs::write(path, out)
@@ -237,6 +270,27 @@ mod tests {
         assert!(notes[0].contains("row_b"));
         // garbage baseline degrades to a single warning
         assert_eq!(b.regressions_vs("not json", 1.25).len(), 1);
+    }
+
+    #[test]
+    fn bench_flops_records_throughput_and_emits_gflops_keys() {
+        let mut b = Bencher { budget: Duration::from_millis(5), max_iters: 3, samples: vec![] };
+        let s = b.bench_flops("flops_row", 1e6, || {
+            let mut acc = 0.0f64;
+            for i in 0..1000 {
+                acc += (i as f64) * 1.5;
+            }
+            acc
+        });
+        assert!(s.gflops.unwrap() > 0.0);
+        let path = std::env::temp_dir().join("diskpca_bench_gflops.json");
+        b.write_median_json(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::json::parse(&text).unwrap();
+        assert!(v.get("flops_row").and_then(|x| x.as_f64()).unwrap() > 0.0);
+        assert!(v.get("flops_row#gflops").and_then(|x| x.as_f64()).unwrap() > 0.0);
+        // the wall-time regression diff ignores the throughput keys
+        assert!(b.regressions_vs(&text, 1.25).is_empty());
     }
 
     #[test]

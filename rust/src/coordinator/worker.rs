@@ -52,7 +52,7 @@ use crate::comm::request as rq;
 use crate::comm::{Handle, KmeansPart, KrrPart, Message, PointSet, Request};
 use crate::data::{Data, ShardSource};
 use crate::embed::EmbedSpec;
-use crate::kernels::{diag as kernel_diag, Kernel};
+use crate::kernels::{diag as kernel_diag, diag_into as kernel_diag_into, Kernel};
 use crate::linalg::{chol_psd, Mat};
 use crate::rng::{AliasTable, Rng};
 use crate::runtime::Backend;
@@ -80,6 +80,22 @@ pub fn thread_cpu_time() -> std::time::Duration {
     use std::time::Instant;
     static EPOCH: OnceLock<Instant> = OnceLock::new();
     EPOCH.get_or_init(Instant::now).elapsed()
+}
+
+/// Reusable buffers threaded through one streaming pass's chunk loop —
+/// allocated once per pass, not once per chunk. This is the worker's
+/// slice of the allocation-free streaming story; the heavyweight
+/// per-chunk reuse lives below it: [`crate::runtime::NativeBackend`]
+/// keeps a warm embed-table cache (tables built once per pass, not
+/// per chunk), the sketches hold their inverted bucket indexes /
+/// FFT buffers across applies, and the packed GEMM engine
+/// ([`crate::linalg::gemm`]) reuses its per-thread pack arenas — a
+/// chunk loop runs on one thread, so every chunk hits the same warm
+/// arena.
+#[derive(Default)]
+struct ChunkScratch {
+    /// κ(xⱼ,xⱼ) of the current chunk.
+    diag: Vec<f64>,
 }
 
 /// How a streaming worker reconstructs LᵀΦ(chunk) on demand instead
@@ -557,10 +573,11 @@ impl Handle<rq::Residuals> for Worker {
             let backend = &self.backend;
             let kernel = self.kernel;
             let mut res = Vec::with_capacity(self.source.len());
+            let mut scratch = ChunkScratch::default();
             self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
                 let k_ya = backend.gram(kernel, &y, chunk);
-                let diag = kernel_diag(kernel, chunk);
-                res.extend(backend.project_residual(&r, &k_ya, &diag).1);
+                kernel_diag_into(kernel, chunk, &mut scratch.diag);
+                res.extend(backend.project_residual(&r, &k_ya, &scratch.diag).1);
             });
             res
         } else {
@@ -583,10 +600,11 @@ impl Handle<rq::ProjectSketch> for Worker {
             {
                 let backend = &self.backend;
                 let kernel = self.kernel;
+                let mut scratch = ChunkScratch::default();
                 self.source.for_each_chunk(self.chunk_rows, |j0, chunk| {
                     let k_ya = backend.gram(kernel, &y, chunk);
-                    let diag = kernel_diag(kernel, chunk);
-                    let (pi, _) = backend.project_residual(&r, &k_ya, &diag);
+                    kernel_diag_into(kernel, chunk, &mut scratch.diag);
+                    let (pi, _) = backend.project_residual(&r, &k_ya, &scratch.diag);
                     cs.accumulate_point_axis(&pi, j0, &mut out);
                 });
             }
@@ -653,11 +671,12 @@ impl Handle<rq::ProjectPoints> for Worker {
         let n = batch.len();
         let step = if self.chunk_rows > 0 { self.chunk_rows } else { n.max(1) };
         let mut out = Mat::zeros(k, n);
+        let mut scratch = ChunkScratch::default();
         let mut j0 = 0;
         while j0 < n {
             let j1 = (j0 + step).min(n);
             let chunk = batch.slice_cols(j0, j1);
-            let proj = projected_chunk(self.backend.as_ref(), self.kernel, sol, &chunk);
+            let proj = projected_chunk(self.backend.as_ref(), self.kernel, sol, &chunk, &mut scratch);
             for j in j0..j1 {
                 for i in 0..k {
                     out[(i, j)] = proj[(i, j - j0)];
@@ -676,10 +695,13 @@ impl Handle<rq::EvalError> for Worker {
             let backend = &self.backend;
             let kernel = self.kernel;
             let mut err = 0.0;
+            let mut scratch = ChunkScratch::default();
             self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
-                let proj = projected_chunk(backend.as_ref(), kernel, sol, chunk);
+                let proj = projected_chunk(backend.as_ref(), kernel, sol, chunk, &mut scratch);
                 let norms = proj.col_norms_sq();
-                for (&d, &n) in kernel_diag(kernel, chunk).iter().zip(&norms) {
+                // projected_chunk's contract: scratch.diag now holds
+                // this chunk's κ(x,x), whatever the solution variant
+                for (&d, &n) in scratch.diag.iter().zip(&norms) {
                     err += (d - n).max(0.0);
                 }
             });
@@ -721,7 +743,8 @@ impl Handle<rq::SampleProjected> for Worker {
             let mut rng = Rng::seed_from(seed);
             let idx: Vec<usize> = (0..count.min(n)).map(|_| rng.below(n)).collect();
             let sel = self.source.select(&idx);
-            projected_chunk(self.backend.as_ref(), self.kernel, sol, &sel)
+            let mut scratch = ChunkScratch::default();
+            projected_chunk(self.backend.as_ref(), self.kernel, sol, &sel, &mut scratch)
         } else {
             let proj = self.projected.as_ref().expect("no solution installed");
             let n = proj.cols();
@@ -742,8 +765,9 @@ impl Handle<rq::KmeansStep> for Worker {
             let sol = self.stream_solution.as_ref().expect("no solution installed");
             let backend = &self.backend;
             let kernel = self.kernel;
+            let mut scratch = ChunkScratch::default();
             self.source.for_each_chunk(self.chunk_rows, |_, chunk| {
-                let proj = projected_chunk(backend.as_ref(), kernel, sol, chunk);
+                let proj = projected_chunk(backend.as_ref(), kernel, sol, chunk, &mut scratch);
                 assert_eq!(proj.rows(), kdim);
                 kmeans_fold(&proj, &centers, &mut sums, &mut counts, &mut obj);
             });
@@ -841,13 +865,24 @@ impl Handle<rq::KrrEval> for Worker {
 }
 
 /// LᵀΦ(x) for a column chunk under a streamed solution. Per-column
-/// identical to the resident path's cached projection.
-fn projected_chunk(backend: &dyn Backend, kernel: Kernel, sol: &StreamSolution, x: &Data) -> Mat {
+/// identical to the resident path's cached projection; `scratch` is
+/// the pass-scoped [`ChunkScratch`], reused across chunks.
+///
+/// Contract: on return `scratch.diag` holds κ(xⱼ,xⱼ) for **this**
+/// chunk, for every solution variant — callers (the eval fold) may
+/// rely on it without knowing which arm ran.
+fn projected_chunk(
+    backend: &dyn Backend,
+    kernel: Kernel,
+    sol: &StreamSolution,
+    x: &Data,
+    scratch: &mut ChunkScratch,
+) -> Mat {
+    kernel_diag_into(kernel, x, &mut scratch.diag);
     match sol {
         StreamSolution::Factored { y, r_upper, coeffs } => {
             let k_ya = backend.gram(kernel, y, x);
-            let diag = kernel_diag(kernel, x);
-            let (pi, _) = backend.project_residual(r_upper, &k_ya, &diag);
+            let (pi, _) = backend.project_residual(r_upper, &k_ya, &scratch.diag);
             coeffs.matmul_at_b(&pi)
         }
         StreamSolution::Direct { y, coeffs } => {

@@ -132,8 +132,9 @@ pub fn gram(kernel: Kernel, y: &Mat, x: &Data) -> Mat {
     }
     match x {
         Data::Dense(xd) => {
-            // one blocked matmul for all inner products (§Perf), then a
-            // fused elementwise kernel map — mirrors the L1 tiling.
+            // one matmul for all inner products — the packed
+            // register-tiled engine (`linalg::gemm`) — then a fused
+            // elementwise kernel map; mirrors the L1 tiling.
             let dots = y.matmul_at_b(xd); // ny×n
             let xnorms = xd.col_norms_sq();
             let body = |i0: usize, chunk: &mut [f64]| {
@@ -276,7 +277,17 @@ pub fn gram_sym(kernel: Kernel, y: &Mat) -> Mat {
 
 /// κ(x_j, x_j) for every point of a shard.
 pub fn diag(kernel: Kernel, x: &Data) -> Vec<f64> {
-    (0..x.len()).map(|j| kernel.diag(x.col_norm_sq(j))).collect()
+    let mut out = Vec::new();
+    diag_into(kernel, x, &mut out);
+    out
+}
+
+/// [`diag`] into a caller-owned buffer (cleared first) — the streaming
+/// worker's chunk loop reuses one buffer across all chunks of a pass
+/// instead of allocating per chunk. Values identical to [`diag`].
+pub fn diag_into(kernel: Kernel, x: &Data, out: &mut Vec<f64>) {
+    out.clear();
+    out.extend((0..x.len()).map(|j| kernel.diag(x.col_norm_sq(j))));
 }
 
 /// Σⱼ κ(xⱼ, xⱼ) — a sequential left-to-right fold over the whole
@@ -385,8 +396,9 @@ pub fn arccos_features(omega: &Mat, degree: u32, x: &Data) -> Mat {
     out
 }
 
-/// ΩᵀX for a whole shard — m×n. Dense: one blocked matmul; sparse:
-/// O(nnz·m) with contiguous Ω-row accumulation.
+/// ΩᵀX for a whole shard — m×n. Dense: one packed register-tiled
+/// matmul (`linalg::gemm`); sparse: O(nnz·m) with contiguous Ω-row
+/// accumulation.
 fn project_all(omega: &Mat, x: &Data) -> Mat {
     match x {
         Data::Dense(xd) => omega.matmul_at_b(xd),

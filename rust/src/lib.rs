@@ -28,7 +28,7 @@
 //! | protocol | [`embed`] | kernel subspace embeddings `E = S(φ(A))` (§5.1, Lemmas 4–5) |
 //! | compute | [`kernels`] | κ(x,y), Gram blocks, random-feature expansions (§3) |
 //! | compute | [`sketch`] | CountSketch / Gaussian / SRHT / TensorSketch (Lemma 1) |
-//! | compute | [`linalg`] | dense QR/Cholesky/SVD/eig + leverage scores |
+//! | compute | [`linalg`] | packed register-tiled GEMM engine ([`linalg::gemm`]), dense QR/Cholesky/SVD/eig + leverage scores |
 //! | compute | [`sparse`] | CSC shards, `O(nnz)` paths (§4's ρ-dependence) |
 //! | compute | [`par`] | shared thread pool — deterministic parallel Gram/sketch/matmul hot paths |
 //! | compute | [`runtime`] | [`runtime::Backend`]: native f64 vs XLA/PJRT artifacts |

@@ -1,0 +1,620 @@
+//! Packed, register-tiled GEMM engine for the dense matmul family.
+//!
+//! Every round of the paper's Algorithms 1–3 bottoms out in the
+//! [`Mat::matmul`]/[`Mat::matmul_at_b`]/[`Mat::matmul_a_bt`] family
+//! (subspace-embedding applies, Gram inner-product blocks, projection
+//! passes). This module replaces their scalar k-blocked triple loops
+//! with the classic pack-and-microkernel structure: the B operand is
+//! packed once into `NR`-wide column panels, each worker packs its
+//! `MR`-row A tile into a k-major strip, and an unrolled `MR`×`NR`
+//! microkernel keeps the whole accumulator tile in registers while it
+//! sweeps k — O(`MR`·`NR`) flops per O(`MR`+`NR`) loads instead of
+//! one output row of memory traffic per k step.
+//!
+//! # Bit-identity contract
+//!
+//! The engine is a *drop-in* for the historical loops — results are
+//! bit-identical for every shape, tile size and thread count:
+//!
+//! - Each output element keeps **one** accumulation chain, traversing
+//!   k in **ascending order** — exactly the order of the retained
+//!   [`reference`] loops. Tiling partitions *output elements*, never a
+//!   reduction, so no floating-point sum is reassociated (the same
+//!   invariant the [`crate::par`] pool pins).
+//! - The microkernel reproduces the reference loops' `a == 0.0` skip
+//!   **exactly** (see [`Mat::matmul`] for why the skip is observable
+//!   semantics, not an optimization detail).
+//! - Ragged edges are handled by zero-padding the *packed* operands:
+//!   padded A lanes are skipped by the `a == 0.0` test and padded B
+//!   lanes land in accumulator columns that are never written back,
+//!   so padding cannot perturb (or even observe) a real output.
+//! - [`dot4`] serves the dot-product-associated paths
+//!   ([`Mat::matmul_a_bt`], [`Mat::gram_self`], whose per-element sums
+//!   use [`dot`]'s four-lane split): it computes four dots in one pass
+//!   over the shared left operand with *per-element arithmetic
+//!   identical to [`dot`]*.
+//!
+//! `tests/gemm_parity.rs` pins all of this against the [`reference`]
+//! loops bit-for-bit, including NaN/∞ inputs and ragged shapes.
+//!
+//! # Scratch arenas
+//!
+//! Packing buffers live in a reusable [`Scratch`] arena. The zero-
+//! allocation steady state comes from two thread-local homes:
+//! the *calling* thread's arena holds the shared B panels for the
+//! duration of a parallel region, and each participating thread packs
+//! its A tiles into its own arena. Re-entrant use (a pool thread
+//! stealing a job that itself multiplies) falls back to a fresh
+//! buffer instead of aliasing, so the arenas are always safe to
+//! borrow. Streaming workers get per-chunk reuse for free: every
+//! chunk of a [`crate::coordinator`] worker's fold runs on the same
+//! thread, hence hits the same warm arena.
+
+use std::cell::RefCell;
+
+use super::mat::{dot, parallel_worthwhile, Mat};
+
+/// Microkernel tile rows (A panel height).
+pub const MR: usize = 4;
+/// Microkernel tile columns (B panel width).
+pub const NR: usize = 8;
+
+/// Below this `m·n·k` flop count the packed path's pack passes cost
+/// more than they save; dispatch runs the [`reference`] loops instead
+/// (bit-identical either way — this is purely a latency knob).
+const PACKED_MIN_FLOPS: usize = 1 << 13;
+
+/// Reusable packing arena holding the shared B column panels for one
+/// product (read-only while a parallel region runs; the per-thread A
+/// tile strips live in a separate thread-local). The buffer grows to
+/// the high-water mark of the shapes seen and is then reused
+/// allocation-free — the steady state for a streaming worker's chunk
+/// loop or a bench sweep.
+#[derive(Default)]
+pub struct Scratch {
+    bpack: Vec<f64>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+thread_local! {
+    /// Caller-side arena (B panels). Held borrowed across the whole
+    /// parallel region.
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::new());
+    /// Microkernel-side arena (A tile strips) — a separate cell so a
+    /// caller that both packs B *and* executes its own chunk never
+    /// self-conflicts.
+    static APACK: RefCell<Vec<f64>> = RefCell::new(Vec::new());
+}
+
+/// Ceiling on what a thread-local arena keeps *between* products
+/// (elements; 32 MiB of f64). Reuse exists for the steady state of
+/// chunk-sized products — a one-off shard-sized B pack must not pin a
+/// shard-sized buffer on the thread forever, so oversized arenas are
+/// dropped on the way out (the next big product simply re-allocates,
+/// i.e. the historical behavior).
+const SCRATCH_RETAIN_ELEMS: usize = 4 << 20;
+
+/// Run `f` with this thread's [`Scratch`] arena. Falls back to a
+/// fresh arena if the thread-local one is already borrowed (re-entrant
+/// multiply from a stolen pool job) — correctness never depends on
+/// reuse. Arenas that grew past `SCRATCH_RETAIN_ELEMS` are released
+/// after `f` returns.
+pub fn with_thread_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    SCRATCH.with(|c| match c.try_borrow_mut() {
+        Ok(mut s) => {
+            let r = f(&mut s);
+            if s.bpack.capacity() > SCRATCH_RETAIN_ELEMS {
+                s.bpack = Vec::new();
+            }
+            r
+        }
+        Err(_) => f(&mut Scratch::new()),
+    })
+}
+
+fn with_apack<R>(f: impl FnOnce(&mut Vec<f64>) -> R) -> R {
+    APACK.with(|c| match c.try_borrow_mut() {
+        Ok(mut b) => {
+            let r = f(&mut b);
+            if b.capacity() > SCRATCH_RETAIN_ELEMS {
+                *b = Vec::new();
+            }
+            r
+        }
+        Err(_) => f(&mut Vec::new()),
+    })
+}
+
+// ------------------------------------------------------------------
+// Packing
+// ------------------------------------------------------------------
+
+/// Pack `b` (k×n) into `NR`-wide column panels: panel `p` covers
+/// columns `p·NR..`, stored k-major so the microkernel reads one
+/// contiguous `NR`-slice per k step. Ragged final panel is
+/// zero-padded (pad lanes are never written back).
+fn pack_b(b: &Mat, bpack: &mut Vec<f64>) {
+    let k = b.rows();
+    let n = b.cols();
+    let npad = (n + NR - 1) / NR * NR;
+    bpack.clear();
+    bpack.resize(npad * k, 0.0);
+    for kk in 0..k {
+        let brow = b.row(kk);
+        let mut jp = 0;
+        while jp < n {
+            let jw = NR.min(n - jp);
+            let at = jp * k + kk * NR;
+            bpack[at..at + jw].copy_from_slice(&brow[jp..jp + jw]);
+            jp += NR;
+        }
+    }
+}
+
+/// Pack `MR` rows of `a` starting at `row0` into a k-major strip
+/// (`apack[kk·MR + r] = a[row0+r][kk]`), zero-padding rows past `mw`.
+/// Used by `C = A·B` (tile = A rows).
+fn pack_a_rows(a: &Mat, row0: usize, mw: usize, apack: &mut [f64]) {
+    let k = a.cols();
+    for r in 0..mw {
+        let arow = a.row(row0 + r);
+        for kk in 0..k {
+            apack[kk * MR + r] = arow[kk];
+        }
+    }
+    for r in mw..MR {
+        for kk in 0..k {
+            apack[kk * MR + r] = 0.0;
+        }
+    }
+}
+
+/// Pack `MR` *columns* of `a` starting at `col0` into the same
+/// k-major strip (`apack[kk·MR + r] = a[kk][col0+r]`). Used by
+/// `C = Aᵀ·B` (tile = A columns) — this is where packing pays most:
+/// the strided column gather happens once per tile instead of once
+/// per k sweep.
+fn pack_a_cols(a: &Mat, col0: usize, mw: usize, apack: &mut [f64]) {
+    let k = a.rows();
+    for kk in 0..k {
+        let arow = a.row(kk);
+        let dst = &mut apack[kk * MR..kk * MR + MR];
+        for r in 0..mw {
+            dst[r] = arow[col0 + r];
+        }
+        for d in dst[mw..MR].iter_mut() {
+            *d = 0.0;
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// Microkernel
+// ------------------------------------------------------------------
+
+/// The register tile: `MR`×`NR` accumulators swept over k in ascending
+/// order. Per output element this is a single accumulation chain with
+/// the `a != 0.0` skip — the exact arithmetic of the reference loops,
+/// just with the tile held in registers. The fixed-size local arrays
+/// let the compiler keep `acc` in vector registers and unroll the
+/// column loop.
+#[inline(always)]
+fn microkernel(k: usize, apack: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR]) {
+    debug_assert!(apack.len() >= k * MR);
+    debug_assert!(bpanel.len() >= k * NR);
+    for kk in 0..k {
+        let a = &apack[kk * MR..kk * MR + MR];
+        let b = &bpanel[kk * NR..kk * NR + NR];
+        for r in 0..MR {
+            let av = a[r];
+            if av != 0.0 {
+                for c in 0..NR {
+                    acc[r][c] += av * b[c];
+                }
+            }
+        }
+    }
+}
+
+/// Sweep one block of output rows: pack each `MR`-row A tile once,
+/// then run the microkernel against every B panel, writing the live
+/// `mw`×`jw` corner of each accumulator tile back to `chunk`.
+fn panel_body<F: Fn(usize, usize, &mut [f64])>(
+    row0: usize,
+    chunk: &mut [f64],
+    n: usize,
+    k: usize,
+    bpack: &[f64],
+    pack_tile: &F,
+) {
+    let rows = chunk.len() / n;
+    with_apack(|apack| {
+        // grow-only: pack_a_rows/pack_a_cols overwrite every lane of
+        // the strip (padding included), so stale contents are fine
+        if apack.len() < k * MR {
+            apack.resize(k * MR, 0.0);
+        }
+        let mut bi = 0;
+        while bi < rows {
+            let mw = MR.min(rows - bi);
+            pack_tile(row0 + bi, mw, apack);
+            let mut jp = 0;
+            while jp < n {
+                let jw = NR.min(n - jp);
+                let bpanel = &bpack[jp * k..jp * k + k * NR];
+                let mut acc = [[0.0f64; NR]; MR];
+                microkernel(k, apack, bpanel, &mut acc);
+                for r in 0..mw {
+                    let at = (bi + r) * n + jp;
+                    let orow = &mut chunk[at..at + jw];
+                    for (c, o) in orow.iter_mut().enumerate() {
+                        *o = acc[r][c];
+                    }
+                }
+                jp += NR;
+            }
+            bi += MR;
+        }
+    });
+}
+
+// ------------------------------------------------------------------
+// Entry points (wired from `Mat`)
+// ------------------------------------------------------------------
+
+/// `a · b` — dispatch: reference loops below `PACKED_MIN_FLOPS`,
+/// packed microkernel (row-parallel on the [`crate::par`] pool) above.
+/// Both paths are bit-identical.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "matmul dims {}x{} * {}x{}",
+        a.rows(),
+        a.cols(),
+        b.rows(),
+        b.cols()
+    );
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    if m == 0 || n == 0 {
+        return Mat::zeros(m, n);
+    }
+    if m.saturating_mul(n).saturating_mul(k.max(1)) < PACKED_MIN_FLOPS {
+        return reference::matmul(a, b);
+    }
+    with_thread_scratch(|s| matmul_with(a, b, s))
+}
+
+/// Packed `a · b` using an explicit [`Scratch`] arena (the dispatch
+/// path reuses the thread-local arena; tests and benches call this
+/// directly to force the packed engine on any shape).
+pub fn matmul_with(a: &Mat, b: &Mat, scratch: &mut Scratch) -> Mat {
+    assert_eq!(a.cols(), b.rows());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return out;
+    }
+    pack_b(b, &mut scratch.bpack);
+    let bpack = &scratch.bpack[..];
+    let pack_tile = |row0: usize, mw: usize, apack: &mut [f64]| pack_a_rows(a, row0, mw, apack);
+    let body =
+        |row0: usize, chunk: &mut [f64]| panel_body(row0, chunk, n, k, bpack, &pack_tile);
+    if parallel_worthwhile(m * n, k) {
+        crate::par::par_chunks(out.data_mut(), n, body);
+    } else {
+        body(0, out.data_mut());
+    }
+    out
+}
+
+/// `aᵀ · b` without materializing the transpose — see [`matmul`].
+pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows());
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    if m == 0 || n == 0 {
+        return Mat::zeros(m, n);
+    }
+    if m.saturating_mul(n).saturating_mul(k.max(1)) < PACKED_MIN_FLOPS {
+        return reference::matmul_at_b(a, b);
+    }
+    with_thread_scratch(|s| matmul_at_b_with(a, b, s))
+}
+
+/// Packed `aᵀ · b` with an explicit [`Scratch`] arena.
+pub fn matmul_at_b_with(a: &Mat, b: &Mat, scratch: &mut Scratch) -> Mat {
+    assert_eq!(a.rows(), b.rows());
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return out;
+    }
+    pack_b(b, &mut scratch.bpack);
+    let bpack = &scratch.bpack[..];
+    let pack_tile = |col0: usize, mw: usize, apack: &mut [f64]| pack_a_cols(a, col0, mw, apack);
+    let body =
+        |row0: usize, chunk: &mut [f64]| panel_body(row0, chunk, n, k, bpack, &pack_tile);
+    if parallel_worthwhile(m * n, k) {
+        crate::par::par_chunks(out.data_mut(), n, body);
+    } else {
+        body(0, out.data_mut());
+    }
+    out
+}
+
+/// `a · bᵀ` — register-tiled over four output columns per pass via
+/// [`dot4`] (per-element arithmetic identical to the reference's
+/// per-element [`dot`], so bit-identity holds without a dispatch
+/// threshold).
+pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols());
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let mut out = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let body = |row0: usize, chunk: &mut [f64]| {
+        let rows = chunk.len() / n;
+        for r in 0..rows {
+            let arow = a.row(row0 + r);
+            let orow = &mut chunk[r * n..(r + 1) * n];
+            let mut j = 0;
+            while j + 4 <= n {
+                let d = dot4(arow, [b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3)]);
+                orow[j..j + 4].copy_from_slice(&d);
+                j += 4;
+            }
+            while j < n {
+                orow[j] = dot(arow, b.row(j));
+                j += 1;
+            }
+        }
+    };
+    if parallel_worthwhile(m * n, k) {
+        crate::par::par_chunks(out.data_mut(), n, body);
+    } else {
+        body(0, out.data_mut());
+    }
+    out
+}
+
+/// Four dot products sharing one pass over `a`, each with arithmetic
+/// *identical* to [`dot`] (four-lane split, `(s0+s1)+(s2+s3)` combine,
+/// sequential tail). One traversal of `a` serves four right-hand
+/// sides, and the 16 live lane accumulators give the compiler a full
+/// register tile to vectorize.
+pub fn dot4(a: &[f64], bs: [&[f64]; 4]) -> [f64; 4] {
+    let n = a.len();
+    debug_assert!(bs.iter().all(|b| b.len() == n));
+    let chunks = n / 4;
+    let mut s = [[0.0f64; 4]; 4];
+    for c in 0..chunks {
+        let i = 4 * c;
+        let (a0, a1, a2, a3) = (a[i], a[i + 1], a[i + 2], a[i + 3]);
+        for (sj, b) in s.iter_mut().zip(bs.iter()) {
+            sj[0] += a0 * b[i];
+            sj[1] += a1 * b[i + 1];
+            sj[2] += a2 * b[i + 2];
+            sj[3] += a3 * b[i + 3];
+        }
+    }
+    let mut out = [0.0f64; 4];
+    for j in 0..4 {
+        let b = bs[j];
+        let mut acc = (s[j][0] + s[j][1]) + (s[j][2] + s[j][3]);
+        for i in 4 * chunks..n {
+            acc += a[i] * b[i];
+        }
+        out[j] = acc;
+    }
+    out
+}
+
+// ------------------------------------------------------------------
+// Reference loops
+// ------------------------------------------------------------------
+
+/// The pre-engine serial loops, retained verbatim: the bit-identity
+/// oracle for `tests/gemm_parity.rs` and the small-matrix fast path
+/// of the dispatchers above. Do not "optimize" these — their exact
+/// accumulation order and `a == 0.0` skip *are* the specification.
+pub mod reference {
+    use super::super::mat::{dot, Mat};
+
+    /// Serial k-blocked `a · b` (single chain per element, ascending
+    /// k, `a == 0.0` terms skipped).
+    pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+        assert_eq!(a.cols(), b.rows());
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mut out = Mat::zeros(m, n);
+        if m == 0 || n == 0 {
+            return out;
+        }
+        const BK: usize = 64;
+        let data = out.data_mut();
+        for kb in (0..k).step_by(BK) {
+            let kend = (kb + BK).min(k);
+            for r in 0..m {
+                let arow = a.row(r);
+                let orow = &mut data[r * n..(r + 1) * n];
+                for kk in kb..kend {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(kk);
+                    for j in 0..n {
+                        orow[j] += av * brow[j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Serial `aᵀ · b` (ascending k, `a == 0.0` skip).
+    pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+        assert_eq!(a.rows(), b.rows());
+        let (k, m, n) = (a.rows(), a.cols(), b.cols());
+        let mut out = Mat::zeros(m, n);
+        if m == 0 || n == 0 {
+            return out;
+        }
+        let data = out.data_mut();
+        for kk in 0..k {
+            let arow = a.row(kk);
+            let brow = b.row(kk);
+            for r in 0..m {
+                let av = arow[r];
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut data[r * n..(r + 1) * n];
+                for j in 0..n {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Serial `a · bᵀ` (per-element [`dot`]).
+    pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+        assert_eq!(a.cols(), b.cols());
+        let (m, n) = (a.rows(), b.rows());
+        let mut out = Mat::zeros(m, n);
+        if m == 0 || n == 0 {
+            return out;
+        }
+        let data = out.data_mut();
+        for r in 0..m {
+            let arow = a.row(r);
+            let orow = &mut data[r * n..(r + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = dot(arow, b.row(j));
+            }
+        }
+        out
+    }
+
+    /// Serial `a · aᵀ` with the same BR/BK blocking and per-chunk
+    /// [`dot`] accumulation as [`Mat::gram_self`].
+    pub fn gram_self(a: &Mat) -> Mat {
+        let m = a.rows();
+        let n = a.cols();
+        let mut out = Mat::zeros(m, m);
+        if m == 0 {
+            return out;
+        }
+        const BR: usize = 16;
+        const BK: usize = 1024;
+        {
+            let data = out.data_mut();
+            for kb in (0..n).step_by(BK) {
+                let kend = (kb + BK).min(n);
+                for bi in (0..m).step_by(BR) {
+                    let iend = (bi + BR).min(m);
+                    for bj in (bi..m).step_by(BR) {
+                        let jend = (bj + BR).min(m);
+                        for i in bi..iend {
+                            let ri = &a.row(i)[kb..kend];
+                            let j0 = bj.max(i);
+                            for j in j0..jend {
+                                let rj = &a.row(j)[kb..kend];
+                                data[i * m + j] += dot(ri, rj);
+                            }
+                        }
+                    }
+                }
+            }
+            for i in 0..m {
+                for j in (i + 1)..m {
+                    data[j * m + i] = data[i * m + j];
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits_equal(a: &Mat, b: &Mat) -> bool {
+        (a.rows(), a.cols()) == (b.rows(), b.cols())
+            && a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    fn testmat(seed: u64, m: usize, n: usize) -> Mat {
+        let mut rng = crate::rng::Rng::seed_from(seed);
+        Mat::from_fn(m, n, |i, j| {
+            if (i * 7 + j) % 3 == 0 {
+                0.0
+            } else {
+                rng.normal()
+            }
+        })
+    }
+
+    #[test]
+    fn packed_matches_reference_on_mixed_shapes() {
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (4, 8, 8), (5, 9, 9), (17, 33, 26)] {
+            let a = testmat(1, m, k);
+            let b = testmat(2, k, n);
+            let got = with_thread_scratch(|s| matmul_with(&a, &b, s));
+            let want = reference::matmul(&a, &b);
+            assert!(bits_equal(&got, &want), "matmul {m}x{k}x{n}");
+            let at = testmat(3, k, m);
+            let got = with_thread_scratch(|s| matmul_at_b_with(&at, &b, s));
+            let want = reference::matmul_at_b(&at, &b);
+            assert!(bits_equal(&got, &want), "matmul_at_b {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn dot4_matches_dot_bitwise() {
+        for n in [0usize, 1, 3, 4, 5, 8, 31, 64, 129] {
+            let a = testmat(5, 1, n);
+            let b = testmat(6, 4, n);
+            let got = dot4(a.row(0), [b.row(0), b.row(1), b.row(2), b.row(3)]);
+            for j in 0..4 {
+                let want = dot(a.row(0), b.row(j));
+                assert_eq!(got[j].to_bits(), want.to_bits(), "n={n} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_dims_are_fine() {
+        for &(m, k, n) in &[(0, 4, 4), (4, 0, 4), (4, 4, 0), (0, 0, 0)] {
+            let a = Mat::zeros(m, k);
+            let b = Mat::zeros(k, n);
+            let got = matmul(&a, &b);
+            assert_eq!((got.rows(), got.cols()), (m, n));
+            let got = with_thread_scratch(|s| matmul_with(&a, &b, s));
+            assert_eq!((got.rows(), got.cols()), (m, n));
+            assert!(got.data().iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_observationally_pure() {
+        // same scratch across differently-shaped products — stale
+        // panel contents must never leak into a later result
+        let mut s = Scratch::new();
+        let a1 = testmat(7, 11, 29);
+        let b1 = testmat(8, 29, 13);
+        let r1 = matmul_with(&a1, &b1, &mut s);
+        let a2 = testmat(9, 5, 6);
+        let b2 = testmat(10, 6, 3);
+        let r2 = matmul_with(&a2, &b2, &mut s);
+        assert!(bits_equal(&r1, &reference::matmul(&a1, &b1)));
+        assert!(bits_equal(&r2, &reference::matmul(&a2, &b2)));
+    }
+}

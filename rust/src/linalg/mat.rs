@@ -142,109 +142,45 @@ impl Mat {
         Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
     }
 
-    /// `self * other` — blocked i-k-j loop order (row-major friendly),
-    /// row-parallel on the [`crate::par`] pool for large products.
+    /// `self * other` via the packed register-tiled engine in
+    /// [`crate::linalg::gemm`] (row-parallel on the [`crate::par`]
+    /// pool for large products; small ones run the retained reference
+    /// loops — bit-identical either way).
     ///
-    /// Each output row is produced by exactly one chunk with the same
-    /// k-blocked accumulation order as the serial loop, so results are
-    /// bit-identical for any thread count.
+    /// # Zero-skip semantics (pinned)
+    ///
+    /// The axpy-style pair — `matmul` and [`Mat::matmul_at_b`] —
+    /// **skips terms whose `self` factor is exactly `±0.0`**. This is
+    /// observable semantics, not an optimization detail: a true GEMM
+    /// computes `0.0 * b + acc`, which turns `b ∈ {∞, NaN}` into NaN
+    /// and can flip the sign of an exact `-0.0` accumulator, while
+    /// the skip leaves the accumulator untouched. The skip is part of
+    /// these two methods' contract: every implementation (reference
+    /// loops, packed microkernel) must reproduce it exactly —
+    /// `tests/gemm_parity.rs` pins old-vs-new bitwise on NaN/∞
+    /// inputs. The dot-based pair ([`Mat::matmul_a_bt`],
+    /// [`Mat::gram_self`]) has **no** skip — `dot` multiplies every
+    /// term, so a `0.0 · ∞` there is NaN, exactly as it always was;
+    /// the same parity suite pins that behavior too.
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul dims {}x{} * {}x{}",
-            self.rows, self.cols, other.rows, other.cols);
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        if m == 0 || n == 0 {
-            return out;
-        }
-        const BK: usize = 64;
-        let body = |row0: usize, chunk: &mut [f64]| {
-            let rows = chunk.len() / n;
-            for kb in (0..k).step_by(BK) {
-                let kend = (kb + BK).min(k);
-                for r in 0..rows {
-                    let arow = self.row(row0 + r);
-                    let orow = &mut chunk[r * n..(r + 1) * n];
-                    for kk in kb..kend {
-                        let a = arow[kk];
-                        if a == 0.0 {
-                            continue;
-                        }
-                        let brow = other.row(kk);
-                        for j in 0..n {
-                            orow[j] += a * brow[j];
-                        }
-                    }
-                }
-            }
-        };
-        if parallel_worthwhile(m * n, k) {
-            crate::par::par_chunks(&mut out.data, n, body);
-        } else {
-            body(0, &mut out.data);
-        }
-        out
+        super::gemm::matmul(self, other)
     }
 
-    /// `selfᵀ * other` without materializing the transpose. Row-
-    /// parallel over the m output rows (bit-identical to serial: every
-    /// out row accumulates over kk in the same ascending order).
+    /// `selfᵀ * other` without materializing the transpose, via the
+    /// packed engine ([`crate::linalg::gemm`]): per output element the
+    /// sum runs over kk in the same ascending order as the historical
+    /// serial loop, with the same zero-skip (see [`Mat::matmul`]), so
+    /// results are bit-identical for any tile size and thread count.
     pub fn matmul_at_b(&self, other: &Mat) -> Mat {
-        assert_eq!(self.rows, other.rows);
-        let (k, m, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        if m == 0 || n == 0 {
-            return out;
-        }
-        let body = |row0: usize, chunk: &mut [f64]| {
-            let rows = chunk.len() / n;
-            for kk in 0..k {
-                let arow = self.row(kk);
-                let brow = other.row(kk);
-                for r in 0..rows {
-                    let a = arow[row0 + r];
-                    if a == 0.0 {
-                        continue;
-                    }
-                    let orow = &mut chunk[r * n..(r + 1) * n];
-                    for j in 0..n {
-                        orow[j] += a * brow[j];
-                    }
-                }
-            }
-        };
-        if parallel_worthwhile(m * n, k) {
-            crate::par::par_chunks(&mut out.data, n, body);
-        } else {
-            body(0, &mut out.data);
-        }
-        out
+        super::gemm::matmul_at_b(self, other)
     }
 
-    /// `self * otherᵀ` — row-parallel dots (one chunk per block of
-    /// output rows; bit-identical for any thread count).
+    /// `self * otherᵀ` — register-tiled row dots
+    /// ([`crate::linalg::gemm::dot4`]: four output columns per pass,
+    /// per-element arithmetic identical to [`dot`]; row-parallel,
+    /// bit-identical for any thread count).
     pub fn matmul_a_bt(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.cols);
-        let (m, k, n) = (self.rows, self.cols, other.rows);
-        let mut out = Mat::zeros(m, n);
-        if m == 0 || n == 0 {
-            return out;
-        }
-        let body = |row0: usize, chunk: &mut [f64]| {
-            let rows = chunk.len() / n;
-            for r in 0..rows {
-                let arow = self.row(row0 + r);
-                let orow = &mut chunk[r * n..(r + 1) * n];
-                for (j, o) in orow.iter_mut().enumerate() {
-                    *o = dot(arow, other.row(j));
-                }
-            }
-        };
-        if parallel_worthwhile(m * n, k) {
-            crate::par::par_chunks(&mut out.data, n, body);
-        } else {
-            body(0, &mut out.data);
-        }
-        out
+        super::gemm::matmul_a_bt(self, other)
     }
 
     /// `self * selfᵀ` exploiting symmetry (half the dot products) and
@@ -278,9 +214,28 @@ impl Mat {
                             let gi = r0 + i;
                             let ri = &self.row(gi)[kb..kend];
                             let j0 = bj.max(gi);
-                            for j in j0..jend {
-                                let rj = &self.row(j)[kb..kend];
-                                chunk[i * m + j] += dot(ri, rj);
+                            // four j's per pass over ri (gemm::dot4 —
+                            // per-element arithmetic identical to dot,
+                            // so per-entry sums are unchanged bitwise)
+                            let mut j = j0;
+                            while j + 4 <= jend {
+                                let d = super::gemm::dot4(
+                                    ri,
+                                    [
+                                        &self.row(j)[kb..kend],
+                                        &self.row(j + 1)[kb..kend],
+                                        &self.row(j + 2)[kb..kend],
+                                        &self.row(j + 3)[kb..kend],
+                                    ],
+                                );
+                                for l in 0..4 {
+                                    chunk[i * m + j + l] += d[l];
+                                }
+                                j += 4;
+                            }
+                            while j < jend {
+                                chunk[i * m + j] += dot(ri, &self.row(j)[kb..kend]);
+                                j += 1;
                             }
                         }
                     }

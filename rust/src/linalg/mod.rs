@@ -6,6 +6,7 @@ mod mat;
 pub mod chol;
 pub mod eig;
 pub mod fft;
+pub mod gemm;
 pub mod qr;
 mod svd;
 

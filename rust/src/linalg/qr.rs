@@ -11,18 +11,32 @@ use super::{mat::dot, Mat, PAR_FLOPS_MIN};
 ///
 /// Column-parallel on big panels; each column's reduction keeps the
 /// serial i-ascending order, so the result is bit-identical to the
-/// scalar loop for any thread count.
+/// scalar loop for any thread count. Columns are walked four at a
+/// time with one register accumulator each, so the panel is streamed
+/// row-contiguously (one pass per 4 columns) instead of one strided
+/// column gather per output — same per-column accumulation chain,
+/// ~4× fewer row fetches.
 fn householder_dots(a: &Mat, v: &[f64], row0: usize, col0: usize, beta: f64) -> Vec<f64> {
     let (m, n) = (a.rows(), a.cols());
     let ncols = n - col0;
     let compute = |j0: usize, j1: usize| -> Vec<f64> {
-        let mut out = Vec::with_capacity(j1 - j0);
-        for j in j0..j1 {
-            let mut s = 0.0;
+        let mut out = vec![0.0; j1 - j0];
+        let data = a.data();
+        let mut j = j0;
+        while j < j1 {
+            let jw = 4.min(j1 - j);
+            let mut s = [0.0f64; 4];
             for i in row0..m {
-                s += v[i - row0] * a[(i, j)];
+                let vi = v[i - row0];
+                let arow = &data[i * n + j..i * n + j + jw];
+                for (c, &x) in arow.iter().enumerate() {
+                    s[c] += vi * x;
+                }
             }
-            out.push(s * beta);
+            for c in 0..jw {
+                out[j - j0 + c] = s[c] * beta;
+            }
+            j += jw;
         }
         out
     };

@@ -2,25 +2,127 @@
 //! graphs in `python/compile/model.py` — `tests/runtime_parity.rs`
 //! pins the two against each other through the XLA backend.
 
+use std::sync::{Arc, Mutex};
+
 use crate::data::Data;
-use crate::embed::{embed, EmbedSpec};
+use crate::embed::{EmbedSpec, EmbedTables};
 use crate::kernels::{gram, Kernel};
 use crate::linalg::{solve_upper_transpose_mat, Mat};
 
 use super::Backend;
 
+/// Warm embed-table cache entries kept per backend. Streaming workers
+/// alternate between at most a couple of live specs at a time, so a
+/// handful of slots suffices; eviction is least-recently-used.
+const TABLE_CACHE_CAP: usize = 4;
+
+/// Byte budget for the warm table cache (`DISKPCA_TABLE_CACHE_MB`,
+/// default 128 MiB, `0` disables caching). The cache exists to stop a
+/// chunk loop from rebuilding tables *per chunk*; it must not convert
+/// a memory-bounded worker's transient table set (peak: one) into
+/// several permanently resident d×m matrices. A single set larger
+/// than the budget is returned uncached — exactly the historical
+/// build-per-call behavior.
+fn table_cache_budget_from_env() -> usize {
+    let mb = std::env::var("DISKPCA_TABLE_CACHE_MB")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(128);
+    mb.saturating_mul(1 << 20)
+}
+
+/// Approximate resident bytes of one materialized table set — the
+/// d×m / t₂×t matrices dominate; per-coordinate sketch tables ride
+/// along.
+fn tables_bytes(t: &EmbedTables) -> usize {
+    let cs_bytes = |cs: &crate::sketch::CountSketch| cs.input_dim() * (4 + 8 + 8);
+    match t {
+        EmbedTables::Rff { params, cs } => {
+            params.omega.rows() * params.omega.cols() * 8 + params.b.len() * 8 + cs_bytes(cs)
+        }
+        EmbedTables::ArcCos { omega, cs, .. } => omega.rows() * omega.cols() * 8 + cs_bytes(cs),
+        EmbedTables::Poly { ts, g } => {
+            let g_bytes = g.matrix().rows() * g.matrix().cols() * 8;
+            let ts_bytes: usize = ts.tables().iter().map(|(h, s)| h.len() * 4 + s.len() * 8).sum();
+            g_bytes + ts_bytes
+        }
+    }
+}
+
 #[derive(Default)]
-pub struct NativeBackend;
+pub struct NativeBackend {
+    /// Warm cache of materialized embedding tables, keyed by
+    /// `(spec, input dim)`. The tables (d×m frequency matrix,
+    /// CountSketch/TensorSketch/Gaussian tables) are **deterministic**
+    /// in the key, so a cache hit is bit-identical to a rebuild — but
+    /// a streaming worker's chunk loop calls [`Backend::embed`] once
+    /// per chunk, and rebuilding the tables per chunk used to dwarf
+    /// the actual per-chunk arithmetic (the dominant term in the
+    /// chunked-vs-resident `sketch_embed` gap). Bounded by entry
+    /// count *and* a byte budget (`DISKPCA_TABLE_CACHE_MB`), so
+    /// multi-spec serve workloads cannot pin unbounded table sets
+    /// resident.
+    tables: Mutex<Vec<((EmbedSpec, usize), Arc<EmbedTables>)>>,
+}
 
 impl NativeBackend {
     pub fn new() -> Self {
-        Self
+        Self::default()
+    }
+
+    fn lock_cache(&self) -> std::sync::MutexGuard<'_, Vec<((EmbedSpec, usize), Arc<EmbedTables>)>> {
+        match self.tables.lock() {
+            Ok(g) => g,
+            // a poisoned lock only means some other handler panicked
+            // mid-lookup; the cache itself is always in a valid state
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// The materialized tables for `(spec, d)` — warm on repeat calls.
+    ///
+    /// The lock is held only for lookup/insert, never across the
+    /// expensive `EmbedTables::build` — a cold start with s in-process
+    /// workers builds in parallel (at worst a few threads race one
+    /// deterministic build and the insert re-check keeps a single
+    /// winner).
+    fn warm_tables(&self, spec: &EmbedSpec, d: usize) -> Arc<EmbedTables> {
+        {
+            let mut cache = self.lock_cache();
+            if let Some(pos) = cache.iter().position(|(k, _)| k.0 == *spec && k.1 == d) {
+                let hit = cache.remove(pos);
+                let t = Arc::clone(&hit.1);
+                cache.push(hit); // most-recently-used at the back
+                return t;
+            }
+        }
+        let t = Arc::new(EmbedTables::build(spec, d));
+        let budget = table_cache_budget_from_env();
+        if tables_bytes(&t) > budget {
+            return t; // over-budget sets are never cached
+        }
+        let mut cache = self.lock_cache();
+        if let Some(pos) = cache.iter().position(|(k, _)| k.0 == *spec && k.1 == d) {
+            // a racing thread finished the same build first — share its
+            // copy (bit-identical by construction) instead of forking
+            let hit = cache.remove(pos);
+            let theirs = Arc::clone(&hit.1);
+            cache.push(hit);
+            return theirs;
+        }
+        cache.push(((*spec, d), Arc::clone(&t)));
+        while cache.len() > TABLE_CACHE_CAP
+            || cache.iter().map(|(_, e)| tables_bytes(e)).sum::<usize>() > budget
+        {
+            cache.remove(0); // least-recently-used is at the front
+        }
+        t
     }
 }
 
 impl Backend for NativeBackend {
     fn embed(&self, spec: &EmbedSpec, x: &Data) -> Mat {
-        embed(spec, x)
+        self.warm_tables(spec, x.dim()).apply(x)
     }
 
     fn gram(&self, kernel: Kernel, y: &Mat, x: &Data) -> Mat {
@@ -93,6 +195,41 @@ mod tests {
         for v in &res {
             assert!(*v >= 0.0 && *v <= 1.0 + 1e-9);
         }
+    }
+
+    /// The warm table cache must be (a) a real cache — the second
+    /// identical embed call reuses the same table object — and (b)
+    /// invisible: embeddings bit-identical to a cold build, with
+    /// distinct specs/dims kept apart.
+    #[test]
+    fn embed_table_cache_is_warm_and_bit_invisible() {
+        let mut rng = Rng::seed_from(4);
+        let x = Data::Dense(Mat::from_fn(6, 9, |_, _| rng.normal()));
+        let spec = crate::embed::EmbedSpec {
+            kernel: Kernel::Gauss { gamma: 0.5 },
+            m: 64,
+            t2: 32,
+            t: 8,
+            seed: 11,
+        };
+        let be = NativeBackend::new();
+        let cold = NativeBackend::new().embed(&spec, &x);
+        let e1 = be.embed(&spec, &x);
+        let e2 = be.embed(&spec, &x);
+        assert!(e1.data() == cold.data(), "cache must not change the embedding");
+        assert!(e1.data() == e2.data());
+        let t1 = be.warm_tables(&spec, 6);
+        let t2 = be.warm_tables(&spec, 6);
+        assert!(Arc::ptr_eq(&t1, &t2), "second lookup must hit the cache");
+        // a different dim is a different table set
+        let t3 = be.warm_tables(&spec, 5);
+        assert!(!Arc::ptr_eq(&t1, &t3));
+        // a different spec likewise, and the cache stays bounded
+        for seed in 0..10u64 {
+            let s = crate::embed::EmbedSpec { seed, ..spec };
+            let _ = be.warm_tables(&s, 6);
+        }
+        assert!(be.tables.lock().unwrap().len() <= super::TABLE_CACHE_CAP);
     }
 
     #[test]

@@ -12,14 +12,44 @@ pub struct CountSketch {
     t: usize,
     h: Vec<u32>,
     s: Vec<f64>,
+    /// CSR-style inverted index bucket → input rows: bucket `b` owns
+    /// `bucket_rows[bucket_start[b]..bucket_start[b+1]]`, rows in
+    /// ascending input order. Deterministic in `(t, h)`, so it is
+    /// built **once at construction** and shared by every
+    /// [`CountSketch::apply_feature_axis`] call (it used to be rebuilt
+    /// per call, which dominated the chunked sketch paths).
+    bucket_start: Vec<u32>,
+    bucket_rows: Vec<u32>,
+}
+
+/// Counting-sort inversion of the bucket table: ascending input rows
+/// within each bucket, matching the serial apply loop's visit order.
+fn build_buckets(t: usize, h: &[u32]) -> (Vec<u32>, Vec<u32>) {
+    assert!(h.len() <= u32::MAX as usize, "countsketch input dim overflows index");
+    let mut start = vec![0u32; t + 1];
+    for &b in h {
+        start[b as usize + 1] += 1;
+    }
+    for b in 0..t {
+        start[b + 1] += start[b];
+    }
+    let mut pos: Vec<u32> = start[..t].to_vec();
+    let mut rows = vec![0u32; h.len()];
+    for (i, &b) in h.iter().enumerate() {
+        let p = &mut pos[b as usize];
+        rows[*p as usize] = i as u32;
+        *p += 1;
+    }
+    (start, rows)
 }
 
 impl CountSketch {
     pub fn new(m: usize, t: usize, rng: &mut Rng) -> Self {
         assert!(t > 0);
-        let h = (0..m).map(|_| rng.below(t) as u32).collect();
+        let h: Vec<u32> = (0..m).map(|_| rng.below(t) as u32).collect();
         let s = (0..m).map(|_| rng.sign()).collect();
-        Self { t, h, s }
+        let (bucket_start, bucket_rows) = build_buckets(t, &h);
+        Self { t, h, s, bucket_start, bucket_rows }
     }
 
     /// From explicit tables (for cross-checking against the XLA/Pallas
@@ -27,7 +57,8 @@ impl CountSketch {
     pub fn from_tables(t: usize, h: Vec<u32>, s: Vec<f64>) -> Self {
         assert_eq!(h.len(), s.len());
         assert!(h.iter().all(|&b| (b as usize) < t));
-        Self { t, h, s }
+        let (bucket_start, bucket_rows) = build_buckets(t, &h);
+        Self { t, h, s, bucket_start, bucket_rows }
     }
 
     pub fn input_dim(&self) -> usize {
@@ -44,31 +75,58 @@ impl CountSketch {
 
     /// Sketch a single dense vector: `S·x`.
     pub fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
-        debug_assert_eq!(x.len(), self.h.len());
         let mut out = vec![0.0; self.t];
+        self.apply_vec_into(x, &mut out);
+        out
+    }
+
+    /// [`CountSketch::apply_vec`] into a caller-owned buffer —
+    /// allocation-free across a column batch (TensorSketch reuses one
+    /// buffer per block). Overwrites `out` entirely.
+    pub(crate) fn apply_vec_into(&self, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.h.len());
+        debug_assert_eq!(out.len(), self.t);
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
         for (j, &v) in x.iter().enumerate() {
             if v != 0.0 {
                 out[self.h[j] as usize] += self.s[j] * v;
             }
         }
-        out
     }
 
     /// Sketch a sparse vector given as (row, value) pairs.
     pub fn apply_sparse_vec(&self, entries: impl Iterator<Item = (usize, f64)>) -> Vec<f64> {
         let mut out = vec![0.0; self.t];
+        self.apply_sparse_vec_into(entries, &mut out);
+        out
+    }
+
+    /// [`CountSketch::apply_sparse_vec`] into a caller-owned buffer.
+    /// Overwrites `out` entirely.
+    pub(crate) fn apply_sparse_vec_into(
+        &self,
+        entries: impl Iterator<Item = (usize, f64)>,
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(out.len(), self.t);
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
         for (j, v) in entries {
             out[self.h[j] as usize] += self.s[j] * v;
         }
-        out
     }
 
     /// Feature-axis sketch of a `m×n` matrix: `S·A → t×n`.
     ///
-    /// Bucket-parallel on the [`crate::par`] pool for large inputs: an
-    /// inverted bucket→rows index lets each output row be accumulated
-    /// independently, in the same ascending input-row order as the
-    /// serial loop — results are bit-identical for any thread count.
+    /// Bucket-parallel on the [`crate::par`] pool for large inputs:
+    /// the inverted bucket→rows index **precomputed at construction**
+    /// lets each output row be accumulated independently, in the same
+    /// ascending input-row order as the serial loop — results are
+    /// bit-identical for any thread count, and repeated applies (the
+    /// streaming worker's per-chunk folds) pay no index rebuild.
     pub fn apply_feature_axis(&self, a: &Mat) -> Mat {
         assert_eq!(a.rows(), self.h.len());
         let m = a.rows();
@@ -78,15 +136,13 @@ impl CountSketch {
             return out;
         }
         if crate::linalg::parallel_worthwhile(m * n, 2) {
-            let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); self.t];
-            for (i, &b) in self.h.iter().enumerate() {
-                buckets[b as usize].push(i as u32);
-            }
             let body = |b0: usize, chunk: &mut [f64]| {
                 let rows = chunk.len() / n;
                 for r in 0..rows {
                     let orow = &mut chunk[r * n..(r + 1) * n];
-                    for &i in &buckets[b0 + r] {
+                    let lo = self.bucket_start[b0 + r] as usize;
+                    let hi = self.bucket_start[b0 + r + 1] as usize;
+                    for &i in &self.bucket_rows[lo..hi] {
                         let sign = self.s[i as usize];
                         let arow = a.row(i as usize);
                         for j in 0..n {
@@ -318,5 +374,40 @@ mod tests {
         let cs = CountSketch::from_tables(4, vec![0, 3, 3], vec![1.0, -1.0, 1.0]);
         let out = cs.apply_vec(&[2.0, 5.0, 7.0]);
         assert_eq!(out, vec![2.0, 0.0, 0.0, 2.0]);
+        // tables() → from_tables() reproduces the sketch (and its
+        // precomputed inverted index) exactly
+        let (h, s) = cs.tables();
+        let cs2 = CountSketch::from_tables(4, h.to_vec(), s.to_vec());
+        assert_eq!(cs2.bucket_start, cs.bucket_start);
+        assert_eq!(cs2.bucket_rows, cs.bucket_rows);
+        assert_eq!(cs2.apply_vec(&[2.0, 5.0, 7.0]), out);
+    }
+
+    /// The construction-time inverted index must list every input row
+    /// exactly once, grouped by bucket, ascending within each bucket —
+    /// the order the bit-identity contract of `apply_feature_axis`
+    /// depends on.
+    #[test]
+    fn inverted_index_is_exact_and_ascending() {
+        let mut rng = Rng::seed_from(8);
+        let (m, t) = (97, 16);
+        let cs = CountSketch::new(m, t, &mut rng);
+        assert_eq!(cs.bucket_start.len(), t + 1);
+        assert_eq!(cs.bucket_start[0], 0);
+        assert_eq!(cs.bucket_start[t] as usize, m);
+        assert_eq!(cs.bucket_rows.len(), m);
+        let mut seen = vec![false; m];
+        for b in 0..t {
+            let rows = &cs.bucket_rows[cs.bucket_start[b] as usize..cs.bucket_start[b + 1] as usize];
+            for w in rows.windows(2) {
+                assert!(w[0] < w[1], "bucket {b} not ascending");
+            }
+            for &i in rows {
+                assert_eq!(cs.h[i as usize] as usize, b, "row {i} in wrong bucket");
+                assert!(!seen[i as usize], "row {i} listed twice");
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&v| v), "some row missing from the index");
     }
 }

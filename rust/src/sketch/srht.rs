@@ -34,30 +34,52 @@ impl Srht {
 
     /// Sketch one vector: O(m log m).
     pub fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut buf = Vec::new();
+        let mut out = vec![0.0; self.rows.len()];
+        self.apply_vec_with(x, &mut buf, &mut out);
+        out
+    }
+
+    /// [`Srht::apply_vec`] into caller-owned buffers: `buf` is the
+    /// padded FWHT workspace, reused allocation-free across a column
+    /// batch; `out` receives the t sampled coordinates (overwritten
+    /// entirely). Values are bit-identical to [`Srht::apply_vec`].
+    fn apply_vec_with(&self, x: &[f64], buf: &mut Vec<f64>, out: &mut [f64]) {
         assert_eq!(x.len(), self.m);
-        let mut buf = vec![0.0; self.mpad];
+        debug_assert_eq!(out.len(), self.rows.len());
+        buf.clear();
+        buf.resize(self.mpad, 0.0);
         for (i, &v) in x.iter().enumerate() {
             buf[i] = v * self.signs[i];
         }
-        fwht_inplace(&mut buf);
+        fwht_inplace(buf);
         // S = √(mpad/t)·P·(H/√mpad)·D — the two scales collapse to 1/√t
         // on the unnormalized FWHT output.
         let scale = 1.0 / (self.rows.len() as f64).sqrt();
-        self.rows.iter().map(|&r| buf[r] * scale).collect()
+        for (o, &r) in out.iter_mut().zip(self.rows.iter()) {
+            *o = buf[r] * scale;
+        }
     }
 
     /// Feature-axis: `S·A`, [m×n] → [t×n]. Column-parallel on the
     /// [`crate::par`] pool (one FWHT per column; columns independent,
-    /// so results are bit-identical for any thread count).
+    /// so results are bit-identical for any thread count). The padded
+    /// FWHT workspace, column gather and output row are each allocated
+    /// once per block and reused across its columns.
     pub fn apply_feature_axis(&self, a: &Mat) -> Mat {
         assert_eq!(a.rows(), self.m);
         let n = a.cols();
         let t = self.rows.len();
         let build = |j0: usize, j1: usize| {
             let mut blk = Mat::zeros(t, j1 - j0);
+            let mut buf = Vec::with_capacity(self.mpad);
+            let mut col = vec![0.0; self.m];
+            let mut sk = vec![0.0; t];
             for j in j0..j1 {
-                let col = a.col(j);
-                let sk = self.apply_vec(&col);
+                for (i, c) in col.iter_mut().enumerate() {
+                    *c = a[(i, j)];
+                }
+                self.apply_vec_with(&col, &mut buf, &mut sk);
                 blk.set_col(j - j0, &sk);
             }
             blk

@@ -42,51 +42,81 @@ impl TensorSketch {
         self.components.iter().map(|c| c.tables()).collect()
     }
 
-    fn combine(&self, comps: Vec<Vec<f64>>) -> Vec<f64> {
-        let mut acc: Option<Vec<C>> = None;
-        for c in comps {
-            let mut f: Vec<C> = c.into_iter().map(|v| (v, 0.0)).collect();
-            fft_inplace(&mut f, false);
-            acc = Some(match acc {
-                None => f,
-                Some(a) => a
-                    .into_iter()
-                    .zip(f)
-                    .map(|(x, y)| (x.0 * y.0 - x.1 * y.1, x.0 * y.1 + x.1 * y.0))
-                    .collect(),
-            });
+    /// Sketch one point, writing the result to `out`: each component
+    /// CountSketch is produced by `fill` into a reused buffer, its
+    /// spectrum is folded into the running product in **ascending
+    /// component order** (the historical per-point order, so results
+    /// are bit-identical — the scratch only removes the per-point
+    /// allocations, which used to dominate chunked column batches).
+    fn sketch_into(
+        &self,
+        mut fill: impl FnMut(&CountSketch, &mut [f64]),
+        scratch: &mut TsScratch,
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(out.len(), self.t);
+        for (ci, cs) in self.components.iter().enumerate() {
+            fill(cs, &mut scratch.comp);
+            for (f, &v) in scratch.freq.iter_mut().zip(scratch.comp.iter()) {
+                *f = (v, 0.0);
+            }
+            fft_inplace(&mut scratch.freq, false);
+            if ci == 0 {
+                scratch.acc.copy_from_slice(&scratch.freq);
+            } else {
+                for (x, &y) in scratch.acc.iter_mut().zip(scratch.freq.iter()) {
+                    *x = (x.0 * y.0 - x.1 * y.1, x.0 * y.1 + x.1 * y.0);
+                }
+            }
         }
-        let mut spec = acc.unwrap();
-        fft_inplace(&mut spec, true);
-        spec.into_iter().map(|c| c.0).collect()
+        scratch.freq.copy_from_slice(&scratch.acc);
+        fft_inplace(&mut scratch.freq, true);
+        for (o, c) in out.iter_mut().zip(scratch.freq.iter()) {
+            *o = c.0;
+        }
     }
 
     /// Sketch one dense vector.
     pub fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
-        self.combine(self.components.iter().map(|c| c.apply_vec(x)).collect())
+        let mut scratch = TsScratch::new(self.t);
+        let mut out = vec![0.0; self.t];
+        self.sketch_into(|cs, buf| cs.apply_vec_into(x, buf), &mut scratch, &mut out);
+        out
     }
 
     /// Sketch a sparse column in O(q·(nnz + t log t)).
     pub fn apply_sparse_col(&self, a: &Csc, j: usize) -> Vec<f64> {
-        self.combine(
-            self.components
-                .iter()
-                .map(|c| c.apply_sparse_vec(a.col_iter(j)))
-                .collect(),
-        )
+        let mut scratch = TsScratch::new(self.t);
+        let mut out = vec![0.0; self.t];
+        self.sketch_into(
+            |cs, buf| cs.apply_sparse_vec_into(a.col_iter(j), buf),
+            &mut scratch,
+            &mut out,
+        );
+        out
     }
 
     /// Sketch every column of a dense `m×n` matrix → `t×n`.
     ///
     /// Columns are independent (q CountSketches + FFT convolution per
     /// point), so the [`crate::par`] pool splits them into blocks —
-    /// per-column results are bit-identical for any thread count.
+    /// per-column results are bit-identical for any thread count. One
+    /// [`TsScratch`] (complex FFT buffers + component buffer + column
+    /// gather) serves a whole block: zero allocations per point.
     pub fn apply_feature_axis(&self, a: &Mat) -> Mat {
         let n = a.cols();
+        let m = a.rows();
         let build = |j0: usize, j1: usize| {
             let mut blk = Mat::zeros(self.t, j1 - j0);
+            let mut scratch = TsScratch::new(self.t);
+            let mut col = vec![0.0; m];
+            let mut out = vec![0.0; self.t];
             for j in j0..j1 {
-                blk.set_col(j - j0, &self.apply_vec(&a.col(j)));
+                for (i, c) in col.iter_mut().enumerate() {
+                    *c = a[(i, j)];
+                }
+                self.sketch_into(|cs, buf| cs.apply_vec_into(&col, buf), &mut scratch, &mut out);
+                blk.set_col(j - j0, &out);
             }
             blk
         };
@@ -99,13 +129,20 @@ impl TensorSketch {
     }
 
     /// Sketch every column of a CSC matrix → `t×n` (column-parallel,
-    /// O(q·(nnz + t log t)) per column).
+    /// O(q·(nnz + t log t)) per column, scratch reused per block).
     pub fn apply_feature_axis_sparse(&self, a: &Csc) -> Mat {
         let n = a.cols();
         let build = |j0: usize, j1: usize| {
             let mut blk = Mat::zeros(self.t, j1 - j0);
+            let mut scratch = TsScratch::new(self.t);
+            let mut out = vec![0.0; self.t];
             for j in j0..j1 {
-                blk.set_col(j - j0, &self.apply_sparse_col(a, j));
+                self.sketch_into(
+                    |cs, buf| cs.apply_sparse_vec_into(a.col_iter(j), buf),
+                    &mut scratch,
+                    &mut out,
+                );
+                blk.set_col(j - j0, &out);
             }
             blk
         };
@@ -114,6 +151,24 @@ impl TensorSketch {
         } else {
             build(0, n)
         }
+    }
+}
+
+/// Reusable per-batch buffers for the FFT-domain combine — one
+/// allocation set per column block instead of several per point.
+struct TsScratch {
+    /// one component's CountSketch output (t).
+    comp: Vec<f64>,
+    /// scratch spectrum: forward FFT of `comp`, then the inverse-FFT
+    /// workspace (t).
+    freq: Vec<C>,
+    /// running product spectrum across components (t).
+    acc: Vec<C>,
+}
+
+impl TsScratch {
+    fn new(t: usize) -> Self {
+        Self { comp: vec![0.0; t], freq: vec![(0.0, 0.0); t], acc: vec![(0.0, 0.0); t] }
     }
 }
 

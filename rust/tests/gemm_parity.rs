@@ -1,0 +1,227 @@
+//! GEMM engine parity suite.
+//!
+//! The packed register-tiled engine (`diskpca::linalg::gemm`) promises
+//! results **bit-identical** to the retained reference loops for every
+//! shape, tile raggedness, input pattern (including explicit zeros,
+//! NaN and ±∞ — the zero-skip semantics pinned in `Mat::matmul`'s
+//! docs) and thread count. This suite sweeps all of it and finishes
+//! with the same protocol-level determinism check `par_engine.rs`
+//! pins, now running on top of the packed engine.
+
+use std::sync::Arc;
+
+use diskpca::coordinator::{dis_eval, dis_kpca, run_cluster, Params};
+use diskpca::data::{clusters, partition_power_law, Data};
+use diskpca::kernels::Kernel;
+use diskpca::linalg::{dot, gemm, Mat};
+use diskpca::par;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+/// Bitwise equality — NaN payloads included (`==` on f64 would treat
+/// NaN ≠ NaN and -0.0 == 0.0, both wrong for this contract).
+fn bits_equal(a: &Mat, b: &Mat) -> bool {
+    (a.rows(), a.cols()) == (b.rows(), b.cols())
+        && a.data().iter().zip(b.data()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Sparse-ish test matrix: every third entry an explicit 0.0 so the
+/// zero-skip path fires throughout.
+fn testmat(rng: &mut Rng, m: usize, n: usize) -> Mat {
+    Mat::from_fn(m, n, |i, j| if (i * n + j) % 3 == 0 { 0.0 } else { rng.normal() })
+}
+
+/// Ragged-shape property sweep: the packed engine vs. the reference
+/// loops, bit for bit, over every combination of dimensions around
+/// the MR/NR tile boundaries (plus empty and wide).
+#[test]
+fn packed_engine_matches_reference_over_ragged_shapes() {
+    let mut dims = vec![
+        0,
+        1,
+        gemm::MR - 1,
+        gemm::MR,
+        gemm::MR + 1,
+        gemm::NR - 1,
+        gemm::NR,
+        gemm::NR + 1,
+        3 * gemm::NR + 2,
+    ];
+    dims.dedup();
+    let mut rng = Rng::seed_from(1);
+    for &m in &dims {
+        for &k in &dims {
+            for &n in &dims {
+                let a = testmat(&mut rng, m, k);
+                let b = testmat(&mut rng, k, n);
+                let got = gemm::with_thread_scratch(|s| gemm::matmul_with(&a, &b, s));
+                let want = gemm::reference::matmul(&a, &b);
+                assert!(bits_equal(&got, &want), "matmul {m}x{k}x{n}");
+                // dispatch path (may pick either implementation) must
+                // agree too
+                assert!(bits_equal(&a.matmul(&b), &want), "matmul dispatch {m}x{k}x{n}");
+
+                let at = testmat(&mut rng, k, m);
+                let got = gemm::with_thread_scratch(|s| gemm::matmul_at_b_with(&at, &b, s));
+                let want = gemm::reference::matmul_at_b(&at, &b);
+                assert!(bits_equal(&got, &want), "matmul_at_b {m}x{k}x{n}");
+                assert!(bits_equal(&at.matmul_at_b(&b), &want), "at_b dispatch {m}x{k}x{n}");
+
+                let bt = testmat(&mut rng, n, k);
+                let want = gemm::reference::matmul_a_bt(&a, &bt);
+                assert!(bits_equal(&a.matmul_a_bt(&bt), &want), "matmul_a_bt {m}x{k}x{n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn gram_self_matches_reference_over_ragged_shapes() {
+    let mut rng = Rng::seed_from(2);
+    for &(m, k) in &[(0, 4), (1, 1), (3, 9), (5, 17), (16, 1024), (17, 1025), (33, 40)] {
+        let a = testmat(&mut rng, m, k);
+        let want = gemm::reference::gram_self(&a);
+        assert!(bits_equal(&a.gram_self(), &want), "gram_self {m}x{k}");
+    }
+}
+
+/// The engine's parallel split must not change a single bit, for any
+/// pool size — same invariant `par_engine.rs` pins, now over the
+/// packed paths (shapes big enough to engage packing and the pool).
+#[test]
+fn packed_engine_thread_invariant() {
+    let mut rng = Rng::seed_from(3);
+    let a = testmat(&mut rng, 90, 80);
+    let b = testmat(&mut rng, 80, 70);
+    let want_ab = gemm::reference::matmul(&a, &b);
+    let at = testmat(&mut rng, 80, 90);
+    let want_atb = gemm::reference::matmul_at_b(&at, &b);
+    let w1 = testmat(&mut rng, 60, 300);
+    let w2 = testmat(&mut rng, 50, 300);
+    let want_abt = gemm::reference::matmul_a_bt(&w1, &w2);
+    let g = testmat(&mut rng, 70, 200);
+    let want_g = gemm::reference::gram_self(&g);
+    for threads in [1usize, 4] {
+        par::set_threads(threads);
+        assert!(bits_equal(&a.matmul(&b), &want_ab), "matmul threads={threads}");
+        assert!(bits_equal(&at.matmul_at_b(&b), &want_atb), "at_b threads={threads}");
+        assert!(bits_equal(&w1.matmul_a_bt(&w2), &want_abt), "a_bt threads={threads}");
+        assert!(bits_equal(&g.gram_self(), &want_g), "gram threads={threads}");
+    }
+    par::set_threads(1);
+}
+
+/// Regression for the pinned zero-skip semantics: on NaN/±∞ inputs the
+/// packed engine must agree with the reference loops **bitwise** — a
+/// true GEMM (no skip) would differ, because 0·∞ = NaN.
+#[test]
+fn nonfinite_inputs_agree_bitwise_with_reference() {
+    let mut rng = Rng::seed_from(4);
+    let (m, k, n) = (13, 19, 11);
+    let mut a = testmat(&mut rng, m, k);
+    let mut b = testmat(&mut rng, k, n);
+    let specials = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.0, 0.0];
+    for (idx, &v) in specials.iter().enumerate() {
+        a[(idx, idx)] = v;
+        b[(idx + 1, idx)] = v;
+    }
+    // a zero row in A against an all-∞ row in B: the skip keeps the
+    // output row exactly 0.0 where a true GEMM would produce NaN
+    for j in 0..k {
+        a[(5, j)] = 0.0;
+    }
+    for j in 0..n {
+        b[(3, j)] = f64::INFINITY;
+    }
+
+    let packed = gemm::with_thread_scratch(|s| gemm::matmul_with(&a, &b, s));
+    let reference = gemm::reference::matmul(&a, &b);
+    assert!(bits_equal(&packed, &reference), "matmul NaN/inf parity");
+    for j in 0..n {
+        assert_eq!(packed[(5, j)].to_bits(), 0.0f64.to_bits(), "zero-skip row poisoned at {j}");
+    }
+    // NaN actually propagated somewhere (the test would be vacuous if
+    // the specials all landed on skipped terms)
+    assert!(packed.data().iter().any(|v| v.is_nan()));
+
+    let at = a.transpose();
+    let packed = gemm::with_thread_scratch(|s| gemm::matmul_at_b_with(&at, &b, s));
+    let reference = gemm::reference::matmul_at_b(&at, &b);
+    assert!(bits_equal(&packed, &reference), "matmul_at_b NaN/inf parity");
+
+    let bt = b.transpose();
+    let want = gemm::reference::matmul_a_bt(&a, &bt);
+    assert!(bits_equal(&a.matmul_a_bt(&bt), &want), "matmul_a_bt NaN/inf parity");
+
+    let mut g = testmat(&mut rng, 9, 21);
+    g[(2, 3)] = f64::NAN;
+    g[(7, 0)] = f64::NEG_INFINITY;
+    let want = gemm::reference::gram_self(&g);
+    assert!(bits_equal(&g.gram_self(), &want), "gram_self NaN/inf parity");
+}
+
+/// `dot4` is the other microkernel: per-element arithmetic identical
+/// to `dot`, for every length class (4-lane body + ragged tail).
+#[test]
+fn dot4_matches_dot_bitwise_including_nonfinite() {
+    let mut rng = Rng::seed_from(5);
+    for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 63, 64, 65, 200] {
+        let mut a = testmat(&mut rng, 1, n);
+        let mut b = testmat(&mut rng, 4, n);
+        if n >= 3 {
+            a[(0, 1)] = f64::NAN;
+            b[(2, 2)] = f64::INFINITY;
+        }
+        let got = gemm::dot4(a.row(0), [b.row(0), b.row(1), b.row(2), b.row(3)]);
+        for j in 0..4 {
+            let want = dot(a.row(0), b.row(j));
+            assert_eq!(got[j].to_bits(), want.to_bits(), "n={n} j={j}");
+        }
+    }
+}
+
+/// End-to-end determinism on top of the packed engine — mirrors
+/// `par_engine.rs::dis_kpca_identical_across_thread_counts`: the full
+/// protocol (whose every round now runs through the microkernel) must
+/// produce identical solutions, eval numbers and per-round comm words
+/// for every thread count.
+#[test]
+fn dis_kpca_identical_across_thread_counts_on_packed_engine() {
+    let mut rng = Rng::seed_from(42);
+    let data = Data::Dense(clusters(8, 160, 4, 0.2, &mut rng));
+    let kernel = Kernel::Gauss { gamma: 0.7 };
+    let params = Params {
+        k: 4,
+        t: 16,
+        p: 40,
+        n_lev: 12,
+        n_adapt: 24,
+        m_rff: 256,
+        t2: 128,
+        seed: 7,
+        ..Params::default()
+    };
+    let mut runs = Vec::new();
+    for threads in [1usize, 4] {
+        par::set_threads(threads);
+        let shards = partition_power_law(&data, 3, 1);
+        let ((sol, err, trace), stats) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| {
+                let sol = dis_kpca(cluster, kernel, &params).unwrap();
+                let (err, trace) = dis_eval(cluster).unwrap();
+                (sol, err, trace)
+            },
+        );
+        runs.push((sol, err, trace, stats.total_words()));
+    }
+    par::set_threads(1);
+    let (s1, e1, t1, w1) = &runs[0];
+    let (s4, e4, t4, w4) = &runs[1];
+    assert!(s1.y.data() == s4.y.data(), "representative points differ across thread counts");
+    assert!(s1.coeffs.data() == s4.coeffs.data(), "coefficients differ across thread counts");
+    assert!(e1 == e4 && t1 == t4, "eval differs: {e1}/{t1} vs {e4}/{t4}");
+    assert_eq!(w1, w4, "communication words must not depend on threads");
+}
