@@ -11,6 +11,20 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+# Elastic fault-tolerance matrix: kill-at-every-round × transport ×
+# streaming, plus the seeded soak and checkpoint replay properties.
+# Runs as its own step (already covered by `cargo test` above only if
+# nothing hangs) under a hard timeout: a recovery bug here shows up as
+# a deadlocked revive/settle loop, and the timeout turns that hang
+# into a CI failure instead of a stalled runner. `timeout` is
+# coreutils; if the runner lacks it, run un-timed rather than skip.
+echo "==> fault-injection matrix (hard timeout 900s)"
+if command -v timeout >/dev/null 2>&1; then
+    timeout 900 cargo test -q --test fault_injection --test elastic_soak --test checkpoint_properties
+else
+    cargo test -q --test fault_injection --test elastic_soak --test checkpoint_properties
+fi
+
 if cargo clippy --version >/dev/null 2>&1; then
     echo "==> cargo clippy --all-targets (-D warnings; bug-finding groups — see [lints] in Cargo.toml)"
     cargo clippy --all-targets --quiet -- -D warnings
@@ -47,6 +61,8 @@ echo "==> protocol bench smoke + baseline diff (warn-only, threshold 25%)"
 DISKPCA_BENCH_FAST=1 cargo bench --bench protocol
 echo "==> serve bench smoke + baseline diff (warn-only, threshold 25%)"
 DISKPCA_BENCH_FAST=1 cargo bench --bench serve
+echo "==> elastic bench smoke + baseline diff (warn-only, threshold 25%; tree vs flat gather)"
+DISKPCA_BENCH_FAST=1 cargo bench --bench elastic
 
 # Serve-layer smoke: the example runs a real multi-job session and
 # asserts the warm-state invariant (second same-spec job performs zero

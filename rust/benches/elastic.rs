@@ -1,0 +1,124 @@
+//! Elastic-runtime benchmarks: what the tree (TSQR) gather saves the
+//! master at wide fan-in, measured two ways.
+//!
+//! Rows:
+//! - `gather/flat-merge s=N` — the flat mode's master cost: one QR of
+//!   all N stacked p×t sketch transposes (O(s) rows in one factorize).
+//! - `gather/tree-merge s=N` — tree mode's master cost: pairwise QR
+//!   reduction of N t×t R factors (O(log s) critical path).
+//! - `gather/disLS[memory,*] s=32` — the whole `2-disLS` round on a
+//!   live 32-worker memory star under each gather mode, so the word
+//!   savings (t×t vs t×p replies) show up as wall time too.
+//!
+//! Emits `BENCH_elastic.json` and diffs it against
+//! `bench_baseline/BENCH_elastic.json` with the repo's warn-only >25%
+//! threshold. `DISKPCA_BENCH_FAST=1` (the CI smoke) trims iterations
+//! via the harness; the fan-in sweep stays s ∈ {32, 64, 128} in both
+//! modes — the sweep *is* the subject here.
+
+use std::sync::Arc;
+
+use diskpca::bench_harness::{black_box, Bencher};
+use diskpca::comm::{memory, Cluster, CommStats};
+use diskpca::coordinator::{
+    dis_embed, dis_leverage_scores_z, embed_spec_for, tsqr_merge, GatherMode, Params, Worker,
+};
+use diskpca::data::Data;
+use diskpca::kernels::Kernel;
+use diskpca::linalg::{qr_r_only, Mat};
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+const REGRESSION_THRESHOLD: f64 = 1.25;
+const T: usize = 32;
+const P: usize = 64;
+
+fn params() -> Params {
+    Params {
+        k: 4,
+        t: 16,
+        p: 64,
+        n_lev: 8,
+        n_adapt: 16,
+        m_rff: 128,
+        t2: 64,
+        seed: 3,
+        ..Params::default()
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::seed_from(7);
+
+    // ---- master-side merge cost, flat vs tree, at wide fan-in ----
+    for s in [32usize, 64, 128] {
+        let sketches: Vec<Mat> = (0..s)
+            .map(|_| Mat::from_fn(T, P, |_, _| rng.normal()))
+            .collect();
+        let transposed: Vec<Mat> = sketches.iter().map(Mat::transpose).collect();
+        let rs: Vec<Mat> = transposed.iter().map(qr_r_only).collect();
+        b.bench(&format!("gather/flat-merge s={s} t={T} p={P}"), || {
+            black_box(qr_r_only(&Mat::vcat_all(&transposed)).rows())
+        });
+        b.bench(&format!("gather/tree-merge s={s} t={T}"), || {
+            black_box(tsqr_merge(rs.clone()).rows())
+        });
+    }
+
+    // ---- whole 2-disLS round on a live 32-worker memory star ----
+    let s = 32;
+    let p = params();
+    let kernel = Kernel::Gauss { gamma: 0.8 };
+    let mut rng = Rng::seed_from(9);
+    let (star, endpoints) = memory::star(s);
+    let cluster = Cluster::new(star, CommStats::new());
+    let handles: Vec<_> = endpoints
+        .into_iter()
+        .map(|ep| {
+            let shard = Data::Dense(Mat::from_fn(8, 24, |_, _| rng.normal()));
+            let be = Arc::new(NativeBackend::new());
+            std::thread::spawn(move || Worker::new(shard, kernel, be).run(ep))
+        })
+        .collect();
+    dis_embed(&cluster, embed_spec_for(kernel, &p)).unwrap();
+    for (mode, name) in [(GatherMode::Flat, "flat"), (GatherMode::Tree, "tree")] {
+        let modal = Params { gather: mode, ..p };
+        b.bench(&format!("gather/disLS[memory,{name}] s={s}"), || {
+            let (masses, z) = dis_leverage_scores_z(&cluster, &modal).unwrap();
+            black_box((masses.len(), z.rows()))
+        });
+    }
+    cluster.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    b.write_csv("results/bench_elastic.csv").unwrap();
+
+    // ---- median JSON + warn-only regression diff vs baseline ----
+    let out = std::env::var("DISKPCA_BENCH_OUT").unwrap_or_else(|_| "BENCH_elastic.json".into());
+    b.write_median_json(&out).expect("write bench json");
+    println!("wrote {out} ({} rows)", b.samples.len());
+
+    let baseline_path = std::env::var("DISKPCA_BENCH_BASELINE")
+        .unwrap_or_else(|_| "bench_baseline/BENCH_elastic.json".into());
+    match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => {
+            let warnings = b.regressions_vs(&text, REGRESSION_THRESHOLD);
+            if warnings.is_empty() {
+                println!("no regressions > 25% vs {baseline_path}");
+            } else {
+                for w in &warnings {
+                    println!("WARNING: bench regression: {w}");
+                }
+                println!(
+                    "({} warning(s) vs {baseline_path}; informational only — update the baseline \
+                     by copying {out} over it when a slowdown is intended)",
+                    warnings.len()
+                );
+            }
+        }
+        Err(e) => println!("baseline {baseline_path} unavailable ({e}) — skipping diff"),
+    }
+}

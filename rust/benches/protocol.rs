@@ -23,7 +23,7 @@ use diskpca::bench_harness::{black_box, Bencher};
 use diskpca::coordinator::{
     dis_embed, dis_eval, dis_kpca, dis_leverage_scores, dis_low_rank, dis_set_solution,
     kmeans::distributed_kmeans, rep_sample, run_cluster, uniform_batch_kpca, uniform_dis_lr,
-    Params,
+    GatherMode, Params,
 };
 use diskpca::data::{by_name, Data};
 use diskpca::embed::EmbedSpec;
@@ -46,6 +46,7 @@ fn params() -> Params {
         seed: 5,
         threads: 0,
         chunk_rows: 0,
+        gather: GatherMode::Flat,
     }
 }
 

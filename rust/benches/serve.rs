@@ -19,7 +19,7 @@
 use std::sync::Arc;
 
 use diskpca::bench_harness::{black_box, Bencher};
-use diskpca::coordinator::Params;
+use diskpca::coordinator::{GatherMode, Params};
 use diskpca::data::{by_name, Data};
 use diskpca::kernels::{median_trick_gamma, Kernel};
 use diskpca::linalg::Mat;
@@ -42,6 +42,7 @@ fn params() -> Params {
         seed: 5,
         threads: 0,
         chunk_rows: 0,
+        gather: GatherMode::Flat,
     }
 }
 

@@ -81,6 +81,19 @@ COMMON FLAGS
                                bit-identical for every N). `shard` writes
                                chunked .dkps stores when set; `worker` maps
                                .dkps shards out-of-core
+  --gather flat|tree           sketch-aggregation topology (default flat):
+                               tree merges worker R factors pairwise (TSQR),
+                               cutting the master's per-round gather cost from
+                               O(s·t·p) to O(t²) words per merge level
+  --elastic                    master: survive worker deaths — keep listening,
+                               attach the next rejoining worker to the dead
+                               slot, replay its round state, retry the round;
+                               results stay bit-identical to a fault-free run
+  --shards p0,p1,...           master --elastic: slot-ordered shard paths to
+                               re-ship (ReqLoadShard) to rejoining workers
+                               that started without --data
+  --rejoin-wait SECS           master --elastic: how long to wait for a
+                               replacement worker to connect (default 60)
   --workers N                  override the dataset's worker count
   --jobs N                     serve: fits to run on the session (default 3)
   --transform N                serve: query points to project (default 256)

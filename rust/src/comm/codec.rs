@@ -15,6 +15,9 @@ use super::{Message, PointSet};
 pub enum CodecError {
     Truncated,
     BadTag(u8),
+    /// Bytes remain after a complete value — a whole-buffer decode
+    /// (e.g. a checkpoint file) treats extra bytes as corruption.
+    Trailing,
 }
 
 pub struct Writer {
@@ -32,19 +35,19 @@ impl Writer {
         Self { buf: Vec::new() }
     }
 
-    fn u8(&mut self, v: u8) {
+    pub(crate) fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
 
-    fn u64(&mut self, v: u64) {
+    pub(crate) fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn f64(&mut self, v: f64) {
+    pub(crate) fn f64(&mut self, v: f64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn mat(&mut self, m: &Mat) {
+    pub(crate) fn mat(&mut self, m: &Mat) {
         self.u64(m.rows() as u64);
         self.u64(m.cols() as u64);
         for &v in m.data() {
@@ -52,7 +55,7 @@ impl Writer {
         }
     }
 
-    fn points(&mut self, p: &PointSet) {
+    pub(crate) fn points(&mut self, p: &PointSet) {
         match p {
             PointSet::Dense(m) => {
                 self.u8(0);
@@ -73,7 +76,7 @@ impl Writer {
         }
     }
 
-    fn kernel(&mut self, k: &Kernel) {
+    pub(crate) fn kernel(&mut self, k: &Kernel) {
         match *k {
             Kernel::Gauss { gamma } => {
                 self.u8(0);
@@ -94,7 +97,7 @@ impl Writer {
         }
     }
 
-    fn spec(&mut self, s: &EmbedSpec) {
+    pub(crate) fn spec(&mut self, s: &EmbedSpec) {
         self.kernel(&s.kernel);
         self.u64(s.m as u64);
         self.u64(s.t2 as u64);
@@ -102,7 +105,7 @@ impl Writer {
         self.u64(s.seed);
     }
 
-    fn str(&mut self, s: &str) {
+    pub(crate) fn str(&mut self, s: &str) {
         self.u64(s.len() as u64);
         self.buf.extend_from_slice(s.as_bytes());
     }
@@ -122,24 +125,24 @@ impl<'a> Reader<'a> {
         Self { buf, at: 0 }
     }
 
-    fn u8(&mut self) -> Result<u8, CodecError> {
+    pub(crate) fn u8(&mut self) -> Result<u8, CodecError> {
         let v = *self.buf.get(self.at).ok_or(CodecError::Truncated)?;
         self.at += 1;
         Ok(v)
     }
 
-    fn u64(&mut self) -> Result<u64, CodecError> {
+    pub(crate) fn u64(&mut self) -> Result<u64, CodecError> {
         let end = self.at + 8;
         let bytes = self.buf.get(self.at..end).ok_or(CodecError::Truncated)?;
         self.at = end;
         Ok(u64::from_le_bytes(bytes.try_into().unwrap()))
     }
 
-    fn f64(&mut self) -> Result<f64, CodecError> {
+    pub(crate) fn f64(&mut self) -> Result<f64, CodecError> {
         Ok(f64::from_bits(self.u64()?))
     }
 
-    fn mat(&mut self) -> Result<Mat, CodecError> {
+    pub(crate) fn mat(&mut self) -> Result<Mat, CodecError> {
         let rows = self.u64()? as usize;
         let cols = self.u64()? as usize;
         let mut data = Vec::with_capacity(rows * cols);
@@ -149,7 +152,7 @@ impl<'a> Reader<'a> {
         Ok(Mat::from_vec(rows, cols, data))
     }
 
-    fn points(&mut self) -> Result<PointSet, CodecError> {
+    pub(crate) fn points(&mut self) -> Result<PointSet, CodecError> {
         match self.u8()? {
             0 => Ok(PointSet::Dense(self.mat()?)),
             1 => {
@@ -172,7 +175,7 @@ impl<'a> Reader<'a> {
         }
     }
 
-    fn kernel(&mut self) -> Result<Kernel, CodecError> {
+    pub(crate) fn kernel(&mut self) -> Result<Kernel, CodecError> {
         match self.u8()? {
             0 => Ok(Kernel::Gauss { gamma: self.f64()? }),
             1 => Ok(Kernel::Poly { q: self.u64()? as u32 }),
@@ -182,7 +185,7 @@ impl<'a> Reader<'a> {
         }
     }
 
-    fn spec(&mut self) -> Result<EmbedSpec, CodecError> {
+    pub(crate) fn spec(&mut self) -> Result<EmbedSpec, CodecError> {
         Ok(EmbedSpec {
             kernel: self.kernel()?,
             m: self.u64()? as usize,
@@ -192,12 +195,18 @@ impl<'a> Reader<'a> {
         })
     }
 
-    fn str(&mut self) -> Result<String, CodecError> {
+    pub(crate) fn str(&mut self) -> Result<String, CodecError> {
         let n = self.u64()? as usize;
         let end = self.at.checked_add(n).ok_or(CodecError::Truncated)?;
         let bytes = self.buf.get(self.at..end).ok_or(CodecError::Truncated)?;
         self.at = end;
         Ok(String::from_utf8_lossy(bytes).into_owned())
+    }
+
+    /// Whether the whole buffer has been consumed — checkpoint decode
+    /// rejects trailing garbage with this.
+    pub(crate) fn finished(&self) -> bool {
+        self.at == self.buf.len()
     }
 }
 
@@ -317,6 +326,22 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.u8(28);
             w.points(pts);
         }
+        ReqSketchEmbedR { p, seed } => {
+            w.u8(29);
+            w.u64(*p as u64);
+            w.u64(*seed);
+        }
+        ReqProjectSketchR { pts, w: ww, seed } => {
+            w.u8(30);
+            w.points(pts);
+            w.u64(*ww as u64);
+            w.u64(*seed);
+        }
+        ReqLoadShard { path, chunk_rows } => {
+            w.u8(31);
+            w.str(path);
+            w.u64(*chunk_rows as u64);
+        }
     }
     w.finish()
 }
@@ -366,6 +391,9 @@ pub fn decode(buf: &[u8]) -> Result<Message, CodecError> {
         26 => ReqKrrEval { alpha: r.mat()? },
         27 => RespError(r.str()?),
         28 => ReqProjectPoints { pts: r.points()? },
+        29 => ReqSketchEmbedR { p: r.u64()? as usize, seed: r.u64()? },
+        30 => ReqProjectSketchR { pts: r.points()?, w: r.u64()? as usize, seed: r.u64()? },
+        31 => ReqLoadShard { path: r.str()?, chunk_rows: r.u64()? as usize },
         t => return Err(CodecError::BadTag(t)),
     };
     Ok(msg)
@@ -514,6 +542,30 @@ mod tests {
         // empty message survives too
         match roundtrip(Message::RespError(String::new())) {
             Message::RespError(msg) => assert!(msg.is_empty()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_elastic_variants() {
+        let mut rng = Rng::seed_from(4);
+        let pts = PointSet::Dense(Mat::from_fn(3, 5, |_, _| rng.normal()));
+        match roundtrip(Message::ReqSketchEmbedR { p: 40, seed: 17 }) {
+            Message::ReqSketchEmbedR { p, seed } => assert_eq!((p, seed), (40, 17)),
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(Message::ReqProjectSketchR { pts: pts.clone(), w: 12, seed: 9 }) {
+            Message::ReqProjectSketchR { pts: p, w, seed } => {
+                assert_eq!((w, seed), (12, 9));
+                assert!(mats_eq(&p.to_mat(), &pts.to_mat()));
+            }
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(Message::ReqLoadShard { path: "out/mnist_002.dkps".into(), chunk_rows: 64 }) {
+            Message::ReqLoadShard { path, chunk_rows } => {
+                assert_eq!(path, "out/mnist_002.dkps");
+                assert_eq!(chunk_rows, 64);
+            }
             other => panic!("{other:?}"),
         }
     }

@@ -9,6 +9,7 @@
 //! pushes a hang-up marker so the master sees a typed link failure
 //! instead of waiting forever.
 
+use std::cell::Cell;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
@@ -20,21 +21,31 @@ pub struct WorkerEndpoint {
     index: usize,
     rx: Receiver<Arc<Message>>,
     tx: Sender<ReplyEvent>,
+    /// A request has been received and not yet answered — dying now
+    /// owes the master a hang-up marker (see [`Drop`]).
+    owing: Cell<bool>,
 }
 
 impl WorkerEndpoint {
     /// Block for the next request. `Err` means the master hung up.
     pub fn recv(&self) -> Result<Message, String> {
-        self.rx
+        let msg = self
+            .rx
             .recv()
             .map(|m| Arc::try_unwrap(m).unwrap_or_else(|shared| (*shared).clone()))
-            .map_err(|_| "master hung up (request channel closed)".to_string())
+            .map_err(|_| "master hung up (request channel closed)".to_string())?;
+        // Quit is never answered, so it must not arm the marker: a
+        // clean shutdown leaves the reply queue free of stale events
+        // (an elastic master keeps gathering after worker turnover).
+        self.owing.set(!matches!(msg, Message::Quit));
+        Ok(msg)
     }
 
     /// Send a reply to the master. `Err` means the master hung up —
     /// surfaced to the caller (like the TCP path) instead of being
     /// dropped on the floor.
     pub fn send(&self, msg: Message) -> Result<(), String> {
+        self.owing.set(false);
         self.tx
             .send((self.index, Ok(msg)))
             .map_err(|_| "master hung up (reply queue closed)".to_string())
@@ -50,12 +61,16 @@ impl Drop for WorkerEndpoint {
     /// A worker that dies mid-protocol (thread exit, panic outside the
     /// handler) leaves a hang-up marker in the reply queue, so a
     /// gather awaiting this worker fails fast with the worker index
-    /// instead of hanging. Harmless on clean shutdown: after `Quit`
-    /// the master never gathers again.
+    /// instead of hanging. The marker fires only when the master is
+    /// actually owed a reply — a request in hand, or one already
+    /// queued — so clean post-`Quit` exits stay silent and an elastic
+    /// master's later gathers never see a stale marker.
     fn drop(&mut self) {
-        let _ = self
-            .tx
-            .send((self.index, Err("worker hung up before replying".to_string())));
+        if self.owing.get() || self.rx.try_recv().is_ok() {
+            let _ = self
+                .tx
+                .send((self.index, Err("worker hung up before replying".to_string())));
+        }
     }
 }
 
@@ -75,15 +90,34 @@ impl WorkerLink for MemLink {
 /// (send links + shared reply queue) and the worker endpoints — hand
 /// each endpoint to one worker thread.
 pub fn star(s: usize) -> (Star, Vec<WorkerEndpoint>) {
+    let (star, endpoints, _reply_tx) = star_elastic(s);
+    (star, endpoints)
+}
+
+/// [`star`] that additionally hands back the reply-queue sender, so an
+/// elastic host can attach *revived* workers to the same queue later
+/// ([`pair`]) after the original endpoints are gone.
+pub fn star_elastic(s: usize) -> (Star, Vec<WorkerEndpoint>, Sender<ReplyEvent>) {
     let (reply_tx, reply_rx) = channel::<ReplyEvent>();
     let mut links: Vec<Box<dyn WorkerLink>> = Vec::with_capacity(s);
     let mut endpoints = Vec::with_capacity(s);
     for index in 0..s {
-        let (req_tx, req_rx) = channel::<Arc<Message>>();
-        links.push(Box::new(MemLink { tx: req_tx }));
-        endpoints.push(WorkerEndpoint { index, rx: req_rx, tx: reply_tx.clone() });
+        let (link, ep) = pair(index, reply_tx.clone());
+        links.push(link);
+        endpoints.push(ep);
     }
-    (Star { links, replies: reply_rx }, endpoints)
+    (Star { links, replies: reply_rx }, endpoints, reply_tx)
+}
+
+/// One fresh master-side link + worker endpoint for slot `index`,
+/// wired into an existing reply queue — how a recovery host builds the
+/// replacement for a dead worker before
+/// [`crate::comm::Cluster::install_link`]s it.
+pub fn pair(index: usize, reply_tx: Sender<ReplyEvent>) -> (Box<dyn WorkerLink>, WorkerEndpoint) {
+    let (req_tx, req_rx) = channel::<Arc<Message>>();
+    let link = Box::new(MemLink { tx: req_tx });
+    let ep = WorkerEndpoint { index, rx: req_rx, tx: reply_tx, owing: Cell::new(false) };
+    (link, ep)
 }
 
 #[cfg(test)]
@@ -117,6 +151,35 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn clean_exit_after_quit_leaves_no_marker_and_pair_reattaches() {
+        let (star, endpoints, reply_tx) = star_elastic(1);
+        let cluster = Cluster::new(star, CommStats::new());
+        cluster.set_round("r");
+        let ep = endpoints.into_iter().next().unwrap();
+        let serve = |ep: WorkerEndpoint, n: usize| {
+            thread::spawn(move || loop {
+                match ep.recv() {
+                    Ok(Message::Quit) | Err(_) => break,
+                    Ok(_) => ep.send(Message::RespCount(n)).unwrap(),
+                }
+            })
+        };
+        let h = serve(ep, 1);
+        assert_eq!(cluster.call(0, request::Count).unwrap(), 1);
+        cluster.quit_worker(0);
+        h.join().unwrap();
+        // clean post-Quit exit: the reply queue stays free of markers
+        assert!(cluster.settle(std::time::Duration::from_millis(50)).is_empty());
+        // revive the slot through the retained reply sender
+        let (link, ep) = pair(0, reply_tx);
+        cluster.install_link(0, link);
+        let h = serve(ep, 2);
+        assert_eq!(cluster.call(0, request::Count).unwrap(), 2);
+        cluster.shutdown();
+        h.join().unwrap();
     }
 
     #[test]

@@ -243,6 +243,18 @@ pub enum Message {
     /// Cumulative compute-busy seconds on this worker (for the Fig-7
     /// critical-path metric on a single-core testbed).
     ReqBusyTime,
+    /// Tree-gather (`--gather tree`) variant of [`Message::ReqSketchEmbed`]:
+    /// build the same sketch but reply with only the t×t R factor of
+    /// its transpose (a TSQR leaf) — O(t²) words instead of O(t·p).
+    ReqSketchEmbedR { p: usize, seed: u64 },
+    /// Tree-gather variant of [`Message::ReqProjectSketch`]: identical
+    /// worker-side state effects, but the reply is the |Y|×|Y| R
+    /// factor of the sketched projection's transpose.
+    ReqProjectSketchR { pts: PointSet, w: usize, seed: u64 },
+    /// Elastic runtime: (re)load the shard stored at `path` — how the
+    /// master re-assigns a dead worker's `.dkps` shard to a revived or
+    /// rejoining worker before replaying the round.
+    ReqLoadShard { path: String, chunk_rows: usize },
     /// Shut the worker down.
     Quit,
 
@@ -284,6 +296,9 @@ impl Message {
             ReqKrrStats { pts, .. } => pts.words() + 1,
             ReqKrrEval { alpha } => alpha.rows() * alpha.cols(),
             ReqProjectPoints { pts } => pts.words(),
+            ReqSketchEmbedR { .. } => 2,
+            ReqProjectSketchR { pts, .. } => pts.words() + 2,
+            ReqLoadShard { path, .. } => path.len().div_ceil(8).max(1) + 1,
             RespKrr { g, b, .. } => g.rows() * g.cols() + b.rows() * b.cols() + 1,
             RespMat(m) => m.rows() * m.cols(),
             RespScalar(_) => 1,
@@ -320,6 +335,9 @@ impl Message {
             ReqKrrEval { .. } => "ReqKrrEval",
             ReqProjectPoints { .. } => "ReqProjectPoints",
             RespKrr { .. } => "RespKrr",
+            ReqSketchEmbedR { .. } => "ReqSketchEmbedR",
+            ReqProjectSketchR { .. } => "ReqProjectSketchR",
+            ReqLoadShard { .. } => "ReqLoadShard",
             ReqCount => "ReqCount",
             ReqBusyTime => "ReqBusyTime",
             Quit => "Quit",
@@ -348,8 +366,10 @@ impl Message {
 /// rounds (the worker itself survived). [`CommError::Link`] and
 /// [`CommError::Timeout`] abort mid-gather and leave replies from the
 /// failed round undrained — after one of those the [`Cluster`] must
-/// only be shut down, or later rounds will see misattributed
-/// "unsolicited reply" failures.
+/// either be shut down, or handed to [`crate::recovery::Recovery`],
+/// which revives the dead slot, quiesces the reply queue
+/// ([`Cluster::settle`]) and replays the aborted rounds; anything else
+/// risks misattributed "unsolicited reply" failures in later rounds.
 #[derive(Debug, Clone)]
 pub enum CommError {
     /// The worker executed the handler and reported a failure
@@ -554,6 +574,55 @@ impl CommStats {
         s.total = 0;
         s.messages = 0;
     }
+
+    /// Freeze the current counters. Together with
+    /// [`CommStats::restore`] this is what makes recovery invisible in
+    /// the accounting: the recovery driver snapshots at the start of a
+    /// unit of rounds, and after reviving a worker restores the
+    /// snapshot before replaying the unit — erasing both the aborted
+    /// partial attempt and the replay traffic, so the final per-round
+    /// table is bit-identical to a fault-free run.
+    pub fn snapshot(&self) -> CommSnapshot {
+        let s = self.inner.lock().unwrap();
+        CommSnapshot {
+            by_round: s.by_round.iter().map(|(k, &v)| (k.clone(), v)).collect(),
+            total: s.total,
+            messages: s.messages,
+        }
+    }
+
+    /// Overwrite the counters with a [`CommStats::snapshot`].
+    pub fn restore(&self, snap: &CommSnapshot) {
+        let mut s = self.inner.lock().unwrap();
+        s.by_round = snap.by_round.iter().cloned().collect();
+        s.total = snap.total;
+        s.messages = snap.messages;
+    }
+}
+
+/// A frozen copy of a [`CommStats`] table (see [`CommStats::snapshot`]).
+#[derive(Clone, Debug, Default)]
+pub struct CommSnapshot {
+    by_round: Vec<((String, bool), usize)>,
+    total: usize,
+    messages: usize,
+}
+
+/// Parse a `DISKPCA_COMM_TIMEOUT_SECS` value: `0` disables the bound
+/// (the conventional "no limit" spelling), any other whole number is a
+/// per-reply wait in seconds. Unset (`None`) means no bound. An
+/// unparsable value is a hard error — a mistyped timeout silently
+/// running unbounded is exactly the failure this knob exists to
+/// prevent.
+pub fn parse_comm_timeout(raw: Option<&str>) -> Result<Option<Duration>, String> {
+    let Some(raw) = raw else { return Ok(None) };
+    match raw.trim().parse::<u64>() {
+        Ok(0) => Ok(None),
+        Ok(secs) => Ok(Some(Duration::from_secs(secs))),
+        Err(_) => Err(format!(
+            "DISKPCA_COMM_TIMEOUT_SECS={raw}: not a whole number of seconds (0 disables)"
+        )),
+    }
 }
 
 /// Worker-side view of its link to the master, transport-agnostic —
@@ -650,7 +719,10 @@ pub struct Star {
 /// assert_eq!(cluster.stats.total_words(), 6);
 /// ```
 pub struct Cluster {
-    links: Vec<Box<dyn WorkerLink>>,
+    /// Send links, one per worker slot. Behind a mutex so a recovery
+    /// driver can swap a dead worker's link for a revived one
+    /// ([`Cluster::install_link`]) without tearing the cluster down.
+    links: Mutex<Vec<Box<dyn WorkerLink>>>,
     pub stats: CommStats,
     /// Current protocol-round label applied to accounting.
     round: Arc<Mutex<String>>,
@@ -685,15 +757,13 @@ pub struct Cluster {
 
 impl Cluster {
     pub fn new(star: Star, stats: CommStats) -> Self {
-        // `0` means "no bound", matching the conventional disable
-        // value — not an instantly-expiring window.
-        let timeout = std::env::var("DISKPCA_COMM_TIMEOUT_SECS")
-            .ok()
-            .and_then(|v| v.parse::<u64>().ok())
-            .filter(|&secs| secs > 0)
-            .map(Duration::from_secs);
+        let raw = std::env::var("DISKPCA_COMM_TIMEOUT_SECS").ok();
+        let timeout = match parse_comm_timeout(raw.as_deref()) {
+            Ok(t) => t,
+            Err(msg) => panic!("config {msg}"),
+        };
         Self {
-            links: star.links,
+            links: Mutex::new(star.links),
             stats,
             round: Arc::new(Mutex::new("init".into())),
             round_prefix: Mutex::new(String::new()),
@@ -706,7 +776,7 @@ impl Cluster {
     }
 
     pub fn num_workers(&self) -> usize {
-        self.links.len()
+        self.links.lock().unwrap().len()
     }
 
     pub fn set_round(&self, name: &str) {
@@ -729,6 +799,14 @@ impl Cluster {
     /// [`Cluster::stats`].
     pub fn set_job_stats(&self, stats: Option<CommStats>) {
         *self.job_stats.lock().unwrap() = stats;
+    }
+
+    /// Handle on the per-job sink currently installed, if any
+    /// ([`CommStats`] clones share counters). Recovery snapshots this
+    /// alongside the lifetime stats so a replayed unit leaves per-job
+    /// tables bit-identical too.
+    pub fn job_stats(&self) -> Option<CommStats> {
+        self.job_stats.lock().unwrap().clone()
     }
 
     /// `prefix + round` — the label the lifetime stats and errors see.
@@ -783,13 +861,56 @@ impl Cluster {
     }
 
     fn send_payload(&self, worker: usize, payload: &Payload, round: &str) -> Result<(), CommError> {
-        self.links[worker].send(payload).map_err(|detail| {
+        self.links.lock().unwrap()[worker].send(payload).map_err(|detail| {
             // a partially-sent round leaves the other workers' replies
             // undrained, exactly like a mid-gather abort
             self.poison(CommError::Link { worker, round: self.qualify(round), detail })
         })?;
         self.record(round, false, payload.words());
         Ok(())
+    }
+
+    /// Replace the send link of one worker slot with a revived one —
+    /// the recovery driver's re-attach point. The slot keeps its
+    /// index, shard assignment and per-slot seeds, which is what makes
+    /// a replayed round bit-identical to the fault-free run.
+    pub fn install_link(&self, worker: usize, link: Box<dyn WorkerLink>) {
+        self.links.lock().unwrap()[worker] = link;
+    }
+
+    /// Clear the poisoned flag after a recovery has quiesced the reply
+    /// queue ([`Cluster::settle`]) and re-attached every dead slot.
+    /// Only a recovery driver should call this: unpoisoning with stale
+    /// replies still in flight re-creates the misattribution hazard
+    /// the flag exists to prevent.
+    pub fn unpoison(&self) {
+        *self.poisoned.lock().unwrap() = None;
+    }
+
+    /// Best-effort `Quit` to a single worker (e.g. one being replaced
+    /// whose old incarnation may still be alive). Not recorded in the
+    /// stats — recovery traffic is erased by snapshot/restore anyway.
+    pub fn quit_worker(&self, worker: usize) {
+        let payload = Payload::new(Message::Quit);
+        let _ = self.links.lock().unwrap()[worker].send(&payload);
+    }
+
+    /// Drain the reply queue until it stays quiet for `grace`,
+    /// discarding stale replies from an aborted round, and return the
+    /// workers whose hang-up markers surfaced while draining (newly
+    /// discovered dead workers the recovery must also revive). Workers
+    /// are deterministic, so a stale reply is bit-identical to the one
+    /// a replay would produce — but it must still be consumed here or
+    /// it would desynchronize the completion-order queue.
+    pub fn settle(&self, grace: Duration) -> Vec<usize> {
+        let rx = self.replies.lock().unwrap();
+        let mut dead = Vec::new();
+        while let Ok((worker, event)) = rx.recv_timeout(grace) {
+            if event.is_err() && !dead.contains(&worker) {
+                dead.push(worker);
+            }
+        }
+        dead
     }
 
     /// Pop replies for `pending` (a list of worker indices) off the
@@ -799,7 +920,7 @@ impl Cluster {
         let round = self.round();
         let full = self.qualify(&round);
         let timeout = *self.timeout.lock().unwrap();
-        let mut slot_of = vec![None; self.links.len()];
+        let mut slot_of = vec![None; self.num_workers()];
         for (slot, &w) in pending.iter().enumerate() {
             slot_of[w] = Some(slot);
         }
@@ -895,14 +1016,15 @@ impl Cluster {
         self.check_usable()?;
         let round = self.round();
         let payload = Payload::new(req.into_message());
-        for w in 0..self.links.len() {
+        let s = self.num_workers();
+        for w in 0..s {
             self.send_payload(w, &payload, &round)?;
         }
         // Release the master's strong ref before blocking on replies:
         // the last in-memory receiver then owns the message outright
         // (`Arc::try_unwrap`) instead of deep-cloning it.
         drop(payload);
-        let pending: Vec<usize> = (0..self.links.len()).collect();
+        let pending: Vec<usize> = (0..s).collect();
         self.collect(&pending)?
             .into_iter()
             .enumerate()
@@ -915,13 +1037,14 @@ impl Cluster {
     /// order.
     pub fn scatter<R: Request>(&self, reqs: Vec<R>) -> Result<Vec<R::Response>, CommError> {
         self.check_usable()?;
-        assert_eq!(reqs.len(), self.links.len(), "one request per worker");
+        let s = self.num_workers();
+        assert_eq!(reqs.len(), s, "one request per worker");
         let round = self.round();
         for (w, req) in reqs.into_iter().enumerate() {
             let payload = Payload::new(req.into_message());
             self.send_payload(w, &payload, &round)?;
         }
-        let pending: Vec<usize> = (0..self.links.len()).collect();
+        let pending: Vec<usize> = (0..s).collect();
         self.collect(&pending)?
             .into_iter()
             .enumerate()
@@ -937,7 +1060,7 @@ impl Cluster {
         }
         let payload = Payload::new(Message::Quit);
         let round = self.round();
-        for link in &self.links {
+        for link in self.links.lock().unwrap().iter() {
             if link.send(&payload).is_ok() {
                 self.record(&round, false, payload.words());
             }
@@ -1056,6 +1179,36 @@ mod tests {
         assert_eq!(t.len(), 2);
         s.reset();
         assert_eq!(s.total_words(), 0);
+    }
+
+    #[test]
+    fn stats_snapshot_restore_erases_later_traffic() {
+        let s = CommStats::new();
+        s.record("2-disLS", true, 100);
+        let snap = s.snapshot();
+        s.record("2-disLS", false, 40);
+        s.record("recover", false, 999);
+        s.restore(&snap);
+        assert_eq!(s.total_words(), 100);
+        assert_eq!(s.message_count(), 1);
+        assert_eq!(s.round_words("recover"), 0);
+        assert_eq!(s.round_words("2-disLS"), 100);
+        // restore is a full overwrite, not a merge
+        let empty = CommStats::new().snapshot();
+        s.restore(&empty);
+        assert_eq!(s.total_words(), 0);
+    }
+
+    #[test]
+    fn comm_timeout_parser_is_strict() {
+        assert_eq!(parse_comm_timeout(None).unwrap(), None);
+        assert_eq!(parse_comm_timeout(Some("0")).unwrap(), None);
+        assert_eq!(parse_comm_timeout(Some("30")).unwrap(), Some(Duration::from_secs(30)));
+        assert_eq!(parse_comm_timeout(Some(" 5 ")).unwrap(), Some(Duration::from_secs(5)));
+        let err = parse_comm_timeout(Some("5s")).unwrap_err();
+        assert!(err.contains("DISKPCA_COMM_TIMEOUT_SECS=5s"), "{err}");
+        assert!(parse_comm_timeout(Some("")).is_err());
+        assert!(parse_comm_timeout(Some("-1")).is_err());
     }
 
     #[test]

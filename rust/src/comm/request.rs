@@ -200,6 +200,25 @@ payload_request! {
 }
 
 payload_request! {
+    /// Tree-gather leaf of [`SketchEmbed`]: same sketch worker-side,
+    /// reply with the t×t R factor of its transpose (TSQR).
+    SketchEmbedR { p: usize, seed: u64 } => ReqSketchEmbedR, RespMat -> Mat
+}
+
+payload_request! {
+    /// Tree-gather leaf of [`ProjectSketch`]: same worker-side state
+    /// effects, reply with the |Y|×|Y| R factor of the sketched
+    /// projection's transpose.
+    ProjectSketchR { pts: PointSet, w: usize, seed: u64 } => ReqProjectSketchR, RespMat -> Mat
+}
+
+ack_request! {
+    /// Elastic runtime: (re)load the shard stored at `path` — shard
+    /// re-assignment to a revived or rejoining worker.
+    LoadShard { path: String, chunk_rows: usize } => ReqLoadShard
+}
+
+payload_request! {
     /// Uniform sample of the projected (k-dim) local points (k-means
     /// seeding).
     SampleProjected { count: usize, seed: u64 } => ReqSampleProjected, RespMat -> Mat

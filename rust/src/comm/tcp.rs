@@ -96,15 +96,50 @@ fn reply_pump(worker: usize, mut stream: TcpStream, tx: Sender<ReplyEvent>) {
 /// send-only [`TcpLink`] plus one reader thread per worker, all
 /// feeding a single completion-order reply queue.
 fn master_star(streams: Vec<TcpStream>) -> std::io::Result<Star> {
+    master_star_elastic(streams).map(|(star, _tx)| star)
+}
+
+/// [`master_star`] that additionally hands back the reply-queue
+/// sender, so revived/rejoining workers can be [`attach`]ed to the
+/// same queue after the star is built.
+fn master_star_elastic(streams: Vec<TcpStream>) -> std::io::Result<(Star, Sender<ReplyEvent>)> {
     let (reply_tx, reply_rx) = channel::<ReplyEvent>();
     let mut links: Vec<Box<dyn WorkerLink>> = Vec::with_capacity(streams.len());
     for (worker, stream) in streams.into_iter().enumerate() {
-        let reader = stream.try_clone()?;
-        let tx = reply_tx.clone();
-        std::thread::spawn(move || reply_pump(worker, reader, tx));
-        links.push(Box::new(TcpLink { stream: Mutex::new(stream) }));
+        links.push(attach(worker, stream, reply_tx.clone())?);
     }
-    Ok(Star { links, replies: reply_rx })
+    Ok((Star { links, replies: reply_rx }, reply_tx))
+}
+
+/// Wrap an accepted socket as the send link for worker slot `worker`
+/// and start its reply pump into `reply_tx` — how a rejoining worker's
+/// fresh connection is wired into a live cluster
+/// ([`crate::comm::Cluster::install_link`]).
+pub fn attach(
+    worker: usize,
+    stream: TcpStream,
+    reply_tx: Sender<ReplyEvent>,
+) -> std::io::Result<Box<dyn WorkerLink>> {
+    stream.set_nodelay(true)?;
+    let reader = stream.try_clone()?;
+    std::thread::spawn(move || reply_pump(worker, reader, reply_tx));
+    Ok(Box::new(TcpLink { stream: Mutex::new(stream) }))
+}
+
+/// Build a fresh loopback link + worker endpoint for slot `index` on
+/// an existing reply queue — the TCP twin of `memory::pair`, used by
+/// in-process recovery hosts to revive a dead slot over real sockets.
+pub fn revive_pair(
+    index: usize,
+    reply_tx: Sender<ReplyEvent>,
+) -> std::io::Result<(Box<dyn WorkerLink>, TcpWorkerEndpoint)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let worker_side = TcpStream::connect(addr)?;
+    worker_side.set_nodelay(true)?;
+    let (master_side, _) = listener.accept()?;
+    let link = attach(index, master_side, reply_tx)?;
+    Ok((link, TcpWorkerEndpoint { stream: worker_side }))
 }
 
 /// Worker-side endpoint over TCP (mirrors `memory::WorkerEndpoint`).
@@ -128,6 +163,15 @@ impl TcpWorkerEndpoint {
 /// Bind a loopback listener and connect `s` worker sockets; returns
 /// the master star + worker endpoints, paired by worker index.
 pub fn star(s: usize) -> std::io::Result<(Star, Vec<TcpWorkerEndpoint>)> {
+    let (star, endpoints, _tx) = star_elastic(s)?;
+    Ok((star, endpoints))
+}
+
+/// [`star`] that additionally hands back the reply-queue sender for
+/// later [`revive_pair`]/[`attach`] calls (elastic recovery hosts).
+pub fn star_elastic(
+    s: usize,
+) -> std::io::Result<(Star, Vec<TcpWorkerEndpoint>, Sender<ReplyEvent>)> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     // Connect worker sockets; accept order == connect order on loopback
@@ -154,14 +198,26 @@ pub fn star(s: usize) -> std::io::Result<(Star, Vec<TcpWorkerEndpoint>)> {
         w.read_exact(&mut idx)?;
         workers[u64::from_le_bytes(idx) as usize] = Some(TcpWorkerEndpoint { stream: w });
     }
-    let star = master_star(master_side_streams)?;
-    Ok((star, workers.into_iter().map(|w| w.unwrap()).collect()))
+    let (star, reply_tx) = master_star_elastic(master_side_streams)?;
+    Ok((star, workers.into_iter().map(|w| w.unwrap()).collect(), reply_tx))
 }
 
 /// Multi-process deployment: master binds `addr` and accepts exactly
 /// `s` worker connections (`diskpca master`). Worker order = accept
 /// order; workers are symmetric so no index handshake is needed.
 pub fn listen(addr: &str, s: usize) -> std::io::Result<Star> {
+    let (star, _listener, _tx) = listen_elastic(addr, s)?;
+    Ok(star)
+}
+
+/// [`listen`] that keeps the bound listener and the reply-queue
+/// sender alive: the elastic launcher holds both so a replacement
+/// worker can reconnect to the same address after a failure and be
+/// [`attach`]ed into the dead slot.
+pub fn listen_elastic(
+    addr: &str,
+    s: usize,
+) -> std::io::Result<(Star, TcpListener, Sender<ReplyEvent>)> {
     let listener = TcpListener::bind(addr)?;
     let mut streams = Vec::with_capacity(s);
     for _ in 0..s {
@@ -170,7 +226,8 @@ pub fn listen(addr: &str, s: usize) -> std::io::Result<Star> {
         eprintln!("master: worker connected from {peer}");
         streams.push(stream);
     }
-    master_star(streams)
+    let (star, reply_tx) = master_star_elastic(streams)?;
+    Ok((star, listener, reply_tx))
 }
 
 /// Worker side of a multi-process deployment (`diskpca worker`).
@@ -219,6 +276,32 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn revive_pair_reattaches_a_dead_slot() {
+        let (star, mut endpoints, reply_tx) = star_elastic(1).unwrap();
+        drop(endpoints.remove(0)); // slot 0 dead before serving
+        let cluster = Cluster::new(star, CommStats::new());
+        cluster.set_round("elastic");
+        cluster.set_reply_timeout(std::time::Duration::from_secs(30));
+        let err = cluster.call(0, request::Count).unwrap_err();
+        assert_eq!(err.worker(), Some(0), "{err}");
+        // recover the slot: quiesce, revive over a fresh socket pair,
+        // re-attach, unpoison — further rounds serve normally
+        cluster.settle(std::time::Duration::from_millis(50));
+        let (link, mut ep) = revive_pair(0, reply_tx).unwrap();
+        cluster.install_link(0, link);
+        cluster.unpoison();
+        let h = thread::spawn(move || loop {
+            match ep.try_recv() {
+                Ok(Message::Quit) | Err(_) => break,
+                Ok(_) => ep.try_send(&Message::RespCount(9)).unwrap(),
+            }
+        });
+        assert_eq!(cluster.call(0, request::Count).unwrap(), 9);
+        cluster.shutdown();
+        h.join().unwrap();
     }
 
     #[test]

@@ -105,6 +105,11 @@ impl Config {
             // the CLI flag is `--chunk-rows`; accept the underscore
             // spelling too for config files
             chunk_rows: self.usize_or("chunk-rows", self.usize_or("chunk_rows", d.chunk_rows)),
+            gather: match self.str_or("gather", "flat") {
+                "flat" => crate::coordinator::GatherMode::Flat,
+                "tree" => crate::coordinator::GatherMode::Tree,
+                v => panic!("config gather={v}: expected flat|tree"),
+            },
         }
     }
 }

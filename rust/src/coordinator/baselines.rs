@@ -254,6 +254,7 @@ mod tests {
             seed: 17,
             threads: 0,
             chunk_rows: 0,
+            gather: crate::coordinator::GatherMode::Flat,
         };
         let shards1 = partition_power_law(&data, 3, 7);
         let ((err_dis, _), _) = run_cluster(

@@ -112,6 +112,7 @@ mod tests {
             seed: 77,
             threads: 0,
             chunk_rows: 0,
+            gather: crate::coordinator::GatherMode::Flat,
         };
         let ((run, final_err), _) = run_cluster(
             shards,
@@ -153,6 +154,7 @@ mod tests {
             seed: 5,
             threads: 0,
             chunk_rows: 0,
+            gather: crate::coordinator::GatherMode::Flat,
         };
         // single run error
         let shards = partition_power_law(&data, 3, 6);

@@ -126,7 +126,7 @@ mod tests {
     }
 
     fn params(n_lev: usize, n_adapt: usize) -> Params {
-        Params { k: 5, t: 16, p: 40, n_lev, n_adapt, m_rff: 256, t2: 128, w: 0, seed: 11, threads: 0, chunk_rows: 0 }
+        Params { k: 5, t: 16, p: 40, n_lev, n_adapt, m_rff: 256, t2: 128, w: 0, seed: 11, threads: 0, chunk_rows: 0, gather: crate::coordinator::GatherMode::Flat }
     }
 
     #[test]

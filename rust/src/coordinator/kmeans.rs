@@ -160,6 +160,7 @@ mod tests {
             seed: 23,
             threads: 0,
             chunk_rows: 0,
+            gather: crate::coordinator::GatherMode::Flat,
         };
         let (result, stats) = run_cluster(
             shards,
@@ -197,6 +198,7 @@ mod tests {
             seed: 3,
             threads: 0,
             chunk_rows: 0,
+            gather: crate::coordinator::GatherMode::Flat,
         };
         // run twice with different iteration caps — more Lloyd steps
         // can't increase the (deterministic) objective

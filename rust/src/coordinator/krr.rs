@@ -138,7 +138,7 @@ pub fn dis_krr(
 mod tests {
     use super::*;
     use crate::coordinator::css::dis_css;
-    use crate::coordinator::{run_cluster, Params};
+    use crate::coordinator::{run_cluster, GatherMode, Params};
     use crate::data::{partition_power_law, Data};
     use crate::rng::Rng;
     use crate::runtime::NativeBackend;
@@ -150,7 +150,7 @@ mod tests {
     }
 
     fn params() -> Params {
-        Params { k: 6, t: 16, p: 40, n_lev: 12, n_adapt: 40, w: 0, m_rff: 256, t2: 128, seed: 31, threads: 0, chunk_rows: 0 }
+        Params { k: 6, t: 16, p: 40, n_lev: 12, n_adapt: 40, w: 0, m_rff: 256, t2: 128, seed: 31, threads: 0, chunk_rows: 0, gather: GatherMode::Flat }
     }
 
     #[test]

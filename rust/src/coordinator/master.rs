@@ -15,7 +15,7 @@ use crate::kernels::{gram, Kernel};
 use crate::linalg::{chol_psd, qr_r_only, solve_upper, top_k_left_singular, Mat};
 use crate::rng::{multinomial, Rng};
 
-use super::{KpcaSolution, Params};
+use super::{GatherMode, KpcaSolution, Params};
 
 /// Alg. 4 step 1: broadcast the shared embedding spec; workers build
 /// E^i = S(φ(Aⁱ)) locally.
@@ -41,23 +41,90 @@ pub fn embed_spec_for(kernel: Kernel, params: &Params) -> EmbedSpec {
 /// hold their individual scores; the master only ever sees the t×p
 /// sketches, the t×t factor Z, and one scalar per worker.
 pub fn dis_leverage_scores(cluster: &Cluster, params: &Params) -> Result<Vec<f64>, CommError> {
+    Ok(dis_leverage_scores_z(cluster, params)?.0)
+}
+
+/// [`dis_leverage_scores`] that also returns the broadcast factor Z —
+/// the round state a recovery checkpoint retains so `ReqScores` can be
+/// replayed verbatim onto a revived worker.
+pub fn dis_leverage_scores_z(
+    cluster: &Cluster,
+    params: &Params,
+) -> Result<(Vec<f64>, Mat), CommError> {
     let sx = cluster.session("2-disLS");
     let s = sx.num_workers();
-    // step 1: per-worker right-sketch E^i T^i (distinct seeds ⇒ the
-    // block-diagonal T of Lemma 6).
-    let sketches: Vec<Mat> = sx.scatter(
-        (0..s)
-            .map(|i| rq::SketchEmbed { p: params.p, seed: params.seed ^ (0x515 + i as u64) })
-            .collect(),
-    )?;
-    // step 2: QR-factorize [E¹T¹, …, EˢTˢ]ᵀ = U·Z, broadcast Z. The
-    // per-worker transposes are independent — fan them out on the pool.
-    let transposed: Vec<Mat> = crate::par::par_join(
-        sketches.iter().map(|sk| move || sk.transpose()).collect::<Vec<_>>(),
-    );
-    let z = qr_r_only(&Mat::vcat_all(&transposed));
+    let z = match params.gather {
+        GatherMode::Flat => {
+            // step 1: per-worker right-sketch E^i T^i (distinct seeds ⇒
+            // the block-diagonal T of Lemma 6).
+            let sketches: Vec<Mat> = sx.scatter(
+                (0..s)
+                    .map(|i| rq::SketchEmbed {
+                        p: params.p,
+                        seed: params.seed ^ (0x515 + i as u64),
+                    })
+                    .collect(),
+            )?;
+            // step 2: QR-factorize [E¹T¹, …, EˢTˢ]ᵀ = U·Z. The
+            // per-worker transposes are independent — fan them out on
+            // the pool.
+            let transposed: Vec<Mat> = crate::par::par_join(
+                sketches.iter().map(|sk| move || sk.transpose()).collect::<Vec<_>>(),
+            );
+            qr_r_only(&Mat::vcat_all(&transposed))
+        }
+        GatherMode::Tree => {
+            // Same sketch per worker (same seeds), but each reply is
+            // pre-compressed to its t×t R factor and the master
+            // reduces them as a TSQR tree. Z has the same Gram
+            // (ZᵀZ = Σᵢ EⁱTⁱ(EⁱTⁱ)ᵀ) as the flat factor, and the
+            // worker-side scores only ever query that Gram, so the
+            // scores are equal in exact arithmetic.
+            let rs: Vec<Mat> = sx.scatter(
+                (0..s)
+                    .map(|i| rq::SketchEmbedR {
+                        p: params.p,
+                        seed: params.seed ^ (0x515 + i as u64),
+                    })
+                    .collect(),
+            )?;
+            tsqr_merge(rs)
+        }
+    };
     // step 3: workers compute ℓ̃ⱼ = ‖((Zᵀ)⁻¹Eⁱ)_{:j}‖², reply masses.
-    sx.broadcast(rq::Scores { z })
+    let masses = sx.broadcast(rq::Scores { z: z.clone() })?;
+    Ok((masses, z))
+}
+
+/// Pairwise TSQR reduction of per-worker R factors: QR-merge adjacent
+/// pairs (`qr_r_only([Rᵃ; Rᵇ])` preserves the summed Gram
+/// `RᵀR = RᵃᵀRᵃ + RᵇᵀRᵇ`) until one factor remains, carrying an odd
+/// tail factor to the next level. The merges within one level are
+/// independent — they fan out on the [`crate::par`] pool — so the
+/// master's critical path is O(log s) small QRs instead of the flat
+/// gather's single QR over all s stacked sketches. Deterministic for a
+/// fixed worker count; not bit-identical to the flat factorization
+/// (different FP association).
+pub fn tsqr_merge(mut rs: Vec<Mat>) -> Mat {
+    assert!(!rs.is_empty(), "tsqr_merge of zero factors");
+    while rs.len() > 1 {
+        let carry = if rs.len() % 2 == 1 { rs.pop() } else { None };
+        let pairs: Vec<[Mat; 2]> = {
+            let mut it = rs.into_iter();
+            let mut v = Vec::new();
+            while let (Some(a), Some(b)) = (it.next(), it.next()) {
+                v.push([a, b]);
+            }
+            v
+        };
+        rs = crate::par::par_join(
+            pairs.iter().map(|p| move || qr_r_only(&Mat::vcat_all(p))).collect::<Vec<_>>(),
+        );
+        if let Some(c) = carry {
+            rs.push(c);
+        }
+    }
+    rs.pop().expect("nonempty by construction")
 }
 
 /// Alg. 1 with an ε-accurate sketch (§5.2 closing remark): an
@@ -233,6 +300,19 @@ pub fn dis_low_rank(
     params: &Params,
     y: &PointSet,
 ) -> Result<KpcaSolution, CommError> {
+    Ok(dis_low_rank_w(cluster, kernel, params, y)?.0)
+}
+
+/// [`dis_low_rank`] that also returns the broadcast coefficient matrix
+/// W and the sketch width — the round state a recovery checkpoint
+/// retains so `ReqProjectSketch`/`ReqFinal` can be replayed verbatim
+/// onto a revived worker.
+pub fn dis_low_rank_w(
+    cluster: &Cluster,
+    kernel: Kernel,
+    params: &Params,
+    y: &PointSet,
+) -> Result<(KpcaSolution, Mat, usize), CommError> {
     let sx = cluster.session("5-disLR");
     let timing = std::env::var_os("DISKPCA_TIMING").is_some();
     let mut stamp = std::time::Instant::now();
@@ -244,21 +324,48 @@ pub fn dis_low_rank(
     };
     let s = sx.num_workers();
     let w_cols = if params.w == 0 { y.len() } else { params.w };
-    // step 1: workers project + right-sketch.
-    let sketches: Vec<Mat> = sx.scatter(
-        (0..s)
-            .map(|i| rq::ProjectSketch {
-                pts: y.clone(),
-                w: w_cols,
-                seed: params.seed ^ (0xd15 + i as u64),
-            })
-            .collect(),
-    )?;
-    lap("project");
-    // step 2: concatenate ΠT = [Π¹T¹ … ΠˢTˢ]; top-k left vectors W.
-    let pit = Mat::hcat_all(&sketches);
-    let k = params.k.min(pit.rows()).min(pit.cols());
-    let (w_mat, _sv) = top_k_left_singular(&pit, k);
+    let (w_mat, k) = match params.gather {
+        GatherMode::Flat => {
+            // step 1: workers project + right-sketch.
+            let sketches: Vec<Mat> = sx.scatter(
+                (0..s)
+                    .map(|i| rq::ProjectSketch {
+                        pts: y.clone(),
+                        w: w_cols,
+                        seed: params.seed ^ (0xd15 + i as u64),
+                    })
+                    .collect(),
+            )?;
+            lap("project");
+            // step 2: concatenate ΠT = [Π¹T¹ … ΠˢTˢ]; top-k left
+            // vectors W.
+            let pit = Mat::hcat_all(&sketches);
+            let k = params.k.min(pit.rows()).min(pit.cols());
+            let (w_mat, _sv) = top_k_left_singular(&pit, k);
+            (w_mat, k)
+        }
+        GatherMode::Tree => {
+            // Same per-worker sketch (same seeds, same worker state
+            // effects), replies compressed to |Y|×|Y| R factors and
+            // tree-merged. The top-k left singular vectors of R̃ᵀ are
+            // the eigenvectors of R̃ᵀR̃ = (ΠT)(ΠT)ᵀ — exactly the left
+            // singular vectors the flat concatenation yields.
+            let rs: Vec<Mat> = sx.scatter(
+                (0..s)
+                    .map(|i| rq::ProjectSketchR {
+                        pts: y.clone(),
+                        w: w_cols,
+                        seed: params.seed ^ (0xd15 + i as u64),
+                    })
+                    .collect(),
+            )?;
+            lap("project");
+            let rt = tsqr_merge(rs);
+            let k = params.k.min(rt.rows()).min(rt.cols());
+            let (w_mat, _sv) = top_k_left_singular(&rt.transpose(), k);
+            (w_mat, k)
+        }
+    };
     lap("svd");
     // step 3: broadcast W; workers cache LᵀΦ(Aⁱ) = WᵀΠⁱ.
     sx.broadcast(rq::Final { coeffs: w_mat.clone() })?;
@@ -272,7 +379,7 @@ pub fn dis_low_rank(
         coeffs.set_col(j, &solve_upper(&r, &w_mat.col(j)));
     }
     lap("coeffs");
-    Ok(KpcaSolution { kernel, y: y_mat, coeffs })
+    Ok((KpcaSolution { kernel, y: y_mat, coeffs }, w_mat, w_cols))
 }
 
 /// Alg. 4 (disKPCA): the paper's headline algorithm.

@@ -27,8 +27,9 @@ pub use css::{dis_css, dis_css_warm, CssSolution};
 pub use krr::{dis_krr, KrrModel};
 pub use master::{
     dis_embed, dis_eval, dis_kpca, dis_kpca_mode, dis_kpca_warm, dis_leverage_scores,
-    dis_leverage_scores_eps, dis_leverage_vectors, dis_low_rank, dis_set_solution,
-    embed_spec_for, leverage_sketch_width, rep_sample, rep_sample_mode, SamplingMode,
+    dis_leverage_scores_eps, dis_leverage_scores_z, dis_leverage_vectors, dis_low_rank,
+    dis_low_rank_w, dis_set_solution, embed_spec_for, leverage_sketch_width, rep_sample,
+    rep_sample_mode, tsqr_merge, SamplingMode,
 };
 pub use worker::Worker;
 
@@ -39,6 +40,29 @@ use crate::data::Data;
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
 use crate::runtime::Backend;
+
+/// How the master aggregates the two sketch-gather rounds (disLS's
+/// embedded sketches, disLR's projected sketches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GatherMode {
+    /// Historical star gather: every worker ships its full t×p sketch
+    /// and the master concatenates — O(s·t·p) master words, O(s)
+    /// master merge cost.
+    Flat,
+    /// TSQR-style tree merge: each worker compresses its sketch to the
+    /// t×t R factor of its transpose (same Gram, `RᵀR = S·Sᵀ`) and the
+    /// master reduces the R factors pairwise in a binary tree —
+    /// O(s·t²) words and an O(log s) critical path. Deterministic for
+    /// a fixed `s`, but *not* bit-identical to [`GatherMode::Flat`]
+    /// (the two associate floating-point sums differently).
+    Tree,
+}
+
+impl Default for GatherMode {
+    fn default() -> Self {
+        GatherMode::Flat
+    }
+}
 
 /// Tunables for disKPCA (paper §6.2 defaults unless noted).
 #[derive(Clone, Copy, Debug)]
@@ -74,6 +98,10 @@ pub struct Params {
     /// size. Results are bit-identical for every value — see
     /// [`worker`] module docs.
     pub chunk_rows: usize,
+    /// sketch-aggregation topology (`--gather`): [`GatherMode::Flat`]
+    /// reproduces the paper's star gather; [`GatherMode::Tree`] trades
+    /// bit-compatibility with it for O(log s) master critical path.
+    pub gather: GatherMode,
 }
 
 impl Default for Params {
@@ -90,6 +118,7 @@ impl Default for Params {
             seed: 0xd15c,
             threads: 0,
             chunk_rows: 0,
+            gather: GatherMode::Flat,
         }
     }
 }
@@ -219,6 +248,7 @@ mod tests {
             seed: 7,
             threads: 0,
             chunk_rows: 0,
+            gather: GatherMode::Flat,
         }
     }
 

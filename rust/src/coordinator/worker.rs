@@ -185,11 +185,25 @@ impl EmbedCache {
     }
 }
 
+/// Parse a `DISKPCA_EMBED_CACHE_MB` value (`None` = unset ⇒ the 64 MiB
+/// default). A set-but-unparsable value is a configuration error, not
+/// silently the default — the knob only exists because someone set it.
+pub fn parse_embed_cache_mb(raw: Option<&str>) -> Result<usize, String> {
+    match raw {
+        None => Ok(64),
+        Some(v) => v
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| format!("DISKPCA_EMBED_CACHE_MB={v}: not a whole number of MiB")),
+    }
+}
+
 fn embed_cache_budget_from_env() -> usize {
-    let mb = std::env::var("DISKPCA_EMBED_CACHE_MB")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .unwrap_or(64);
+    let raw = std::env::var("DISKPCA_EMBED_CACHE_MB").ok();
+    let mb = match parse_embed_cache_mb(raw.as_deref()) {
+        Ok(mb) => mb,
+        Err(msg) => panic!("config {msg}"),
+    };
     mb.saturating_mul(1 << 20)
 }
 
@@ -394,6 +408,13 @@ impl Worker {
             Message::ReqProjectPoints { pts } => self.respond(rq::ProjectPoints { pts }),
             Message::ReqCount => self.respond(rq::Count),
             Message::ReqBusyTime => self.respond(rq::BusyTime),
+            Message::ReqSketchEmbedR { p, seed } => self.respond(rq::SketchEmbedR { p, seed }),
+            Message::ReqProjectSketchR { pts, w, seed } => {
+                self.respond(rq::ProjectSketchR { pts, w, seed })
+            }
+            Message::ReqLoadShard { path, chunk_rows } => {
+                self.respond(rq::LoadShard { path, chunk_rows })
+            }
             Message::Quit => Message::Ack,
             other => panic!("worker got unexpected {other:?}"),
         }
@@ -622,6 +643,52 @@ impl Handle<rq::ProjectSketch> for Worker {
             self.stream_basis = Some((y, r));
             sketched
         }
+    }
+}
+
+impl Handle<rq::SketchEmbedR> for Worker {
+    /// Tree-gather twin of [`rq::SketchEmbed`]: same sketch compute
+    /// (and cache effects), but the reply is the p×t sketch compressed
+    /// to its t×t R factor (`RᵀR = sketch·sketchᵀ`), so tree-merged
+    /// aggregation preserves the Gram the master needs while each hop
+    /// carries O(t²) words instead of O(t·p).
+    fn handle_req(&mut self, rq::SketchEmbedR { p, seed }: rq::SketchEmbedR) -> Mat {
+        let sketch = <Self as Handle<rq::SketchEmbed>>::handle_req(self, rq::SketchEmbed { p, seed });
+        crate::linalg::qr_r_only(&sketch.transpose())
+    }
+}
+
+impl Handle<rq::ProjectSketchR> for Worker {
+    /// Tree-gather twin of [`rq::ProjectSketch`]: identical compute and
+    /// state effects (Π / (Y, R) retained for `ReqFinal`), reply
+    /// compressed to the |Y|×|Y| R factor of the sketched matrix.
+    fn handle_req(&mut self, rq::ProjectSketchR { pts, w, seed }: rq::ProjectSketchR) -> Mat {
+        let sketched =
+            <Self as Handle<rq::ProjectSketch>>::handle_req(self, rq::ProjectSketch { pts, w, seed });
+        crate::linalg::qr_r_only(&sketched.transpose())
+    }
+}
+
+impl Handle<rq::LoadShard> for Worker {
+    /// Elastic shard (re-)assignment: rebuild this worker around a
+    /// disk-backed shard, dropping every piece of between-round state
+    /// (the recovery layer replays the rounds that rebuild it). The
+    /// embed-cache budget survives — it is deployment config, not
+    /// round state. IO failure panics and reaches the master as a
+    /// typed [`Message::RespError`] via [`Worker::handle`]'s catch.
+    fn handle_req(&mut self, rq::LoadShard { path, chunk_rows }: rq::LoadShard) {
+        let store = crate::data::ShardStore::open(&path)
+            .unwrap_or_else(|e| panic!("LoadShard {path}: {e}"));
+        let budget = self.embed_cache.budget_bytes;
+        let busy = self.busy;
+        *self = Worker::with_source(
+            ShardSource::Store(store),
+            self.kernel,
+            Arc::clone(&self.backend),
+            chunk_rows,
+        );
+        self.embed_cache.budget_bytes = budget;
+        self.busy = busy;
     }
 }
 

@@ -227,6 +227,7 @@ mod tests {
             seed: 5,
             threads: 0,
             chunk_rows: 0,
+            gather: crate::coordinator::GatherMode::Flat,
         }
     }
 

@@ -30,13 +30,16 @@
 //! guard still fans `Quit` out to every surviving worker, so remote
 //! worker processes exit instead of waiting on a dead coordinator.
 
+use std::sync::mpsc::Sender;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use crate::comm::{tcp, Cluster, CommError, CommStats};
+use crate::comm::{tcp, Cluster, CommError, CommStats, ReplyEvent, WorkerLink};
 use crate::config::Config;
-use crate::coordinator::{dis_eval, dis_kpca, Worker};
+use crate::coordinator::{dis_eval, dis_kpca, SamplingMode, Worker};
 use crate::data::{self, Data};
 use crate::kernels::Kernel;
+use crate::recovery::{self, Recovery, ReviveHost};
 use crate::runtime::backend_from_name;
 
 /// Exit code for a protocol-layer failure ([`LaunchError::Protocol`]).
@@ -103,10 +106,77 @@ pub fn kernel_from_flags(cfg: &Config) -> anyhow::Result<Kernel> {
     })
 }
 
+/// Master-side [`ReviveHost`] for the multi-process deployment: when
+/// a worker dies, keep the original listening socket open and wait for
+/// a replacement `diskpca worker` process to connect (`--rejoin-wait`
+/// seconds). The fresh connection is attached to the dead slot; when
+/// the master knows the slot's on-disk shard (`--shards`), the path is
+/// re-shipped via `ReqLoadShard` so the replacement may start blank
+/// (`diskpca worker` without `--data`).
+pub struct TcpRejoinHost {
+    listener: std::net::TcpListener,
+    reply_tx: Sender<ReplyEvent>,
+    /// Slot-ordered on-disk shard paths to re-assign on rejoin; empty
+    /// when rejoining workers bring their own shard (`--data`).
+    shard_paths: Vec<String>,
+    chunk_rows: usize,
+    wait: Duration,
+}
+
+impl TcpRejoinHost {
+    pub fn new(
+        listener: std::net::TcpListener,
+        reply_tx: Sender<ReplyEvent>,
+        shard_paths: Vec<String>,
+        chunk_rows: usize,
+        wait: Duration,
+    ) -> Self {
+        Self { listener, reply_tx, shard_paths, chunk_rows, wait }
+    }
+}
+
+impl ReviveHost for TcpRejoinHost {
+    fn revive(&mut self, slot: usize) -> Result<Box<dyn WorkerLink>, String> {
+        eprintln!("master: worker {slot} lost; waiting up to {:?} for a rejoin …", self.wait);
+        let deadline = Instant::now() + self.wait;
+        self.listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("listener nonblocking: {e}"))?;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    stream.set_nonblocking(false).map_err(|e| format!("stream blocking: {e}"))?;
+                    eprintln!("master: worker {slot} rejoined from {peer}");
+                    return tcp::attach(slot, stream, self.reply_tx.clone())
+                        .map_err(|e| format!("attach: {e}"));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(format!("no worker rejoined within {:?}", self.wait));
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) => return Err(format!("accept: {e}")),
+            }
+        }
+    }
+
+    fn shard_path(&self, slot: usize) -> Option<(String, usize)> {
+        self.shard_paths.get(slot).cloned().map(|p| (p, self.chunk_rows))
+    }
+}
+
 /// `diskpca master`: accept workers, run disKPCA, print the result.
 /// A protocol failure returns [`LaunchError::Protocol`] — and the
 /// cluster's drop guard has already sent `Quit` to the surviving
 /// workers by the time this returns.
+///
+/// With `--elastic`, a worker dying mid-run does not abort: the master
+/// keeps listening, attaches the next rejoining worker process to the
+/// dead slot, replays the installed round state (shard assignment when
+/// `--shards` names the slot-ordered paths, then embedding + scores +
+/// solution state) and retries the interrupted unit — the final result
+/// and per-round word table are bit-identical to a fault-free run.
 pub fn master(cfg: &Config) -> Result<(), LaunchError> {
     let addr = cfg.str_or("listen", "127.0.0.1:7700");
     let s = cfg.usize_or("workers", 2);
@@ -114,11 +184,50 @@ pub fn master(cfg: &Config) -> Result<(), LaunchError> {
     let params = cfg.params();
     params.apply_threads();
     eprintln!("master: waiting for {s} workers on {addr} …");
-    let star = tcp::listen(addr, s)?;
-    let cluster = Cluster::new(star, CommStats::new());
-    let t0 = std::time::Instant::now();
-    let sol = dis_kpca(&cluster, kernel, &params)?;
-    let (err, trace) = dis_eval(&cluster)?;
+    let t0;
+    let (cluster, sol, err, trace) = if cfg.bool_or("elastic", false) {
+        let (star, listener, reply_tx) = tcp::listen_elastic(addr, s)?;
+        let cluster = Cluster::new(star, CommStats::new());
+        let shard_paths: Vec<String> = cfg
+            .get("shards")
+            .map(|v| v.split(',').map(str::to_string).collect())
+            .unwrap_or_default();
+        if !shard_paths.is_empty() && shard_paths.len() != s {
+            return Err(LaunchError::Env(format!(
+                "--shards names {} paths for {s} workers",
+                shard_paths.len()
+            )));
+        }
+        let host = TcpRejoinHost::new(
+            listener,
+            reply_tx,
+            shard_paths,
+            params.chunk_rows,
+            Duration::from_secs(cfg.u64_or("rejoin-wait", 60)),
+        );
+        let mut rec = Recovery::new(Box::new(host));
+        t0 = Instant::now();
+        let sol = recovery::dis_kpca_recovering(
+            &cluster,
+            &mut rec,
+            kernel,
+            &params,
+            SamplingMode::Full,
+            false,
+        )?;
+        let (err, trace) = recovery::dis_eval_recovering(&cluster, &mut rec)?;
+        if rec.recoveries() > 0 {
+            eprintln!("master: recovered from {} worker failure(s)", rec.recoveries());
+        }
+        (cluster, sol, err, trace)
+    } else {
+        let star = tcp::listen(addr, s)?;
+        let cluster = Cluster::new(star, CommStats::new());
+        t0 = Instant::now();
+        let sol = dis_kpca(&cluster, kernel, &params)?;
+        let (err, trace) = dis_eval(&cluster)?;
+        (cluster, sol, err, trace)
+    };
     cluster.shutdown();
     println!(
         "disKPCA done: |Y|={} rel_err={:.4} comm={} words wall={:.2}s",
@@ -143,16 +252,19 @@ pub fn master(cfg: &Config) -> Result<(), LaunchError> {
 /// resident and stream only when `--chunk-rows` is set.
 pub fn worker(cfg: &Config) -> Result<(), LaunchError> {
     let addr = cfg.str_or("connect", "127.0.0.1:7700");
-    let path = cfg.get("data").ok_or_else(|| {
-        LaunchError::Env("worker needs --data <file.bin|file.csv|file.dkps>".into())
-    })?;
     let params = cfg.params();
-    let source = if path.ends_with(".dkps") {
-        data::ShardSource::Store(data::ShardStore::open(path)?)
-    } else if path.ends_with(".csv") {
-        data::ShardSource::Resident(data::io::load_csv(path)?)
-    } else {
-        data::ShardSource::Resident(data::io::load(path)?)
+    // --data is optional: a worker rejoining an --elastic master may
+    // start blank and receive its shard assignment (ReqLoadShard)
+    // during the recovery replay.
+    let source = match cfg.get("data") {
+        Some(path) if path.ends_with(".dkps") => {
+            data::ShardSource::Store(data::ShardStore::open(path)?)
+        }
+        Some(path) if path.ends_with(".csv") => {
+            data::ShardSource::Resident(data::io::load_csv(path)?)
+        }
+        Some(path) => data::ShardSource::Resident(data::io::load(path)?),
+        None => data::ShardSource::Resident(Data::Dense(crate::linalg::Mat::zeros(0, 0))),
     };
     let kernel = kernel_from_flags(cfg)?;
     // worker processes size their own pool from --threads (absent or

@@ -25,6 +25,7 @@
 //! | protocol | [`coordinator`] | Algs. 1–4 drivers, worker state machine, baselines, k-means/KRR/CSS extensions |
 //! | protocol | [`comm`] | star transports (in-memory, TCP) + per-word accounting (§4 cost model) |
 //! | protocol | [`serve`] | multi-job sessions on a persistent cluster: warm-state reuse, per-job accounting, batched projection serving |
+//! | protocol | [`recovery`] | elastic fault tolerance: slot revival, checkpointed round replay, bit-identical retry |
 //! | protocol | [`embed`] | kernel subspace embeddings `E = S(φ(A))` (§5.1, Lemmas 4–5) |
 //! | compute | [`kernels`] | κ(x,y), Gram blocks, random-feature expansions (§3) |
 //! | compute | [`sketch`] | CountSketch / Gaussian / SRHT / TensorSketch (Lemma 1) |
@@ -93,6 +94,7 @@ pub mod kernels;
 pub mod launcher;
 pub mod linalg;
 pub mod par;
+pub mod recovery;
 pub mod rng;
 pub mod runtime;
 pub mod serve;

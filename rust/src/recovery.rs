@@ -1,0 +1,597 @@
+//! Elastic fault tolerance: revive dead worker slots, replay the
+//! installed round state, and retry the interrupted unit — with the
+//! master-side state frozen in a codec-serializable [`Checkpoint`].
+//!
+//! The protocol layer detects a dead worker (hang-up marker or send
+//! failure) and poisons the cluster; this module owns everything that
+//! happens next:
+//!
+//! 1. **Revive** — a [`ReviveHost`] builds a fresh link + worker for
+//!    the dead slot. The slot keeps its index, shard assignment and
+//!    per-slot seeds ([`crate::comm::Cluster::install_link`]), which is
+//!    what makes the replayed run bit-identical to a fault-free one.
+//! 2. **Settle** — stale replies from the aborted round are drained
+//!    ([`crate::comm::Cluster::settle`]); markers surfacing while
+//!    draining name more dead slots, which are revived too.
+//! 3. **Replay** — the checkpoint's installed state (embed spec,
+//!    leverage sketch, sampled points, final coefficients or a whole
+//!    solution) is re-shipped to each revived slot under the
+//!    `"recover"` round label.
+//! 4. **Retry** — the interrupted unit re-runs from its start against
+//!    the restored cluster, after rewinding the word counters to the
+//!    unit-entry snapshot so the final per-round tables are
+//!    bit-identical to a fault-free run.
+//!
+//! Workers are deterministic state machines, so replay + retry
+//! reproduces the fault-free bytes exactly; `tests/fault_injection.rs`
+//! asserts this for a kill at every round boundary on both transports.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::comm::codec::{CodecError, Reader, Writer};
+use crate::comm::request as rq;
+use crate::comm::{memory, tcp, Cluster, CommError, PointSet, ReplyEvent, WorkerLink};
+use crate::coordinator::css::CssSolution;
+use crate::coordinator::krr::KrrModel;
+use crate::coordinator::worker::Worker;
+use crate::coordinator::{master, KpcaSolution, Params, SamplingMode};
+use crate::data::Data;
+use crate::embed::EmbedSpec;
+use crate::kernels::Kernel;
+use crate::linalg::Mat;
+use crate::runtime::Backend;
+
+/// Bump on any change to the checkpoint wire layout.
+pub const CHECKPOINT_VERSION: u8 = 1;
+
+/// Master-side round state a revived worker must be brought up to
+/// date with. Fields fill in as the driver's units complete; replay
+/// ships whichever are present, in protocol order.
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    /// Label of the unit most recently entered — context for error
+    /// reports and checkpoint files, not used by replay itself.
+    pub round: String,
+    /// Protocol seed (per-slot replay seeds derive from it exactly
+    /// like the live `5-disLR` scatter).
+    pub seed: u64,
+    /// Embedding spec installed by `1-embed` (or warm reuse).
+    pub spec: Option<EmbedSpec>,
+    /// Leverage sketch factor broadcast by `2-disLS` — replaying it
+    /// restores a worker's sampling scores.
+    pub z: Option<Mat>,
+    /// Representative points sampled by rounds 3–4.
+    pub y: Option<PointSet>,
+    /// Projection-sketch width used by `5-disLR` (0 = auto `|Y|`).
+    pub w_cols: usize,
+    /// Final coefficient matrix broadcast by `5-disLR`.
+    pub final_w: Option<Mat>,
+    /// A directly-installed solution (`dis_set_solution`), which
+    /// supersedes `final_w` state when replayed after it.
+    pub solution: Option<(PointSet, Mat)>,
+}
+
+impl Checkpoint {
+    pub fn new(seed: u64) -> Self {
+        Self { round: "init".into(), seed, ..Self::default() }
+    }
+
+    /// Serialize with the protocol codec (self-delimiting, versioned).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u8(CHECKPOINT_VERSION);
+        w.str(&self.round);
+        w.u64(self.seed);
+        w.u64(self.w_cols as u64);
+        match &self.spec {
+            None => w.u8(0),
+            Some(s) => {
+                w.u8(1);
+                w.spec(s);
+            }
+        }
+        match &self.z {
+            None => w.u8(0),
+            Some(m) => {
+                w.u8(1);
+                w.mat(m);
+            }
+        }
+        match &self.y {
+            None => w.u8(0),
+            Some(p) => {
+                w.u8(1);
+                w.points(p);
+            }
+        }
+        match &self.final_w {
+            None => w.u8(0),
+            Some(m) => {
+                w.u8(1);
+                w.mat(m);
+            }
+        }
+        match &self.solution {
+            None => w.u8(0),
+            Some((p, c)) => {
+                w.u8(1);
+                w.points(p);
+                w.mat(c);
+            }
+        }
+        w.finish()
+    }
+
+    /// Decode an [`Checkpoint::encode`] buffer. Rejects truncation,
+    /// unknown versions/flags, and trailing bytes — a checkpoint is a
+    /// whole file, so "extra bytes after a valid prefix" means
+    /// corruption, not success.
+    pub fn decode(buf: &[u8]) -> Result<Self, CodecError> {
+        let mut r = Reader::new(buf);
+        let version = r.u8()?;
+        if version != CHECKPOINT_VERSION {
+            return Err(CodecError::BadTag(version));
+        }
+        let round = r.str()?;
+        let seed = r.u64()?;
+        let w_cols = r.u64()? as usize;
+        fn flag(r: &mut Reader<'_>) -> Result<bool, CodecError> {
+            match r.u8()? {
+                0 => Ok(false),
+                1 => Ok(true),
+                t => Err(CodecError::BadTag(t)),
+            }
+        }
+        let spec = if flag(&mut r)? { Some(r.spec()?) } else { None };
+        let z = if flag(&mut r)? { Some(r.mat()?) } else { None };
+        let y = if flag(&mut r)? { Some(r.points()?) } else { None };
+        let final_w = if flag(&mut r)? { Some(r.mat()?) } else { None };
+        let solution = if flag(&mut r)? { Some((r.points()?, r.mat()?)) } else { None };
+        if !r.finished() {
+            return Err(CodecError::Trailing);
+        }
+        Ok(Self { round, seed, w_cols, spec, z, y, final_w, solution })
+    }
+}
+
+/// Supplies replacement workers for dead slots. The replacement must
+/// serve the *same shard* as the original — recovery preserves slot
+/// identity, it does not rebalance.
+pub trait ReviveHost: Send {
+    /// Build a fresh link + worker for `slot`, wired into the
+    /// cluster's shared reply queue.
+    fn revive(&mut self, slot: usize) -> Result<Box<dyn WorkerLink>, String>;
+
+    /// When the replacement starts blank (e.g. a rejoining process),
+    /// the on-disk shard path (+ chunk size) to re-ship via
+    /// `ReqLoadShard` before any state replay. In-process hosts that
+    /// construct the replacement around the shard return `None`.
+    fn shard_path(&self, _slot: usize) -> Option<(String, usize)> {
+        None
+    }
+
+    /// Join any replacement workers this host spawned. Called after
+    /// the cluster has quit its links; default is a no-op.
+    fn join(&mut self) {}
+}
+
+/// Which wire the replacement worker talks over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    Memory,
+    Tcp,
+}
+
+/// In-process [`ReviveHost`]: keeps a copy of every slot's shard and
+/// spawns a replacement [`Worker`] thread on demand, over the
+/// in-memory channel transport or a fresh loopback TCP socket.
+pub struct LocalHost {
+    shards: Vec<Data>,
+    kernel: Kernel,
+    backend: Arc<dyn Backend>,
+    chunk_rows: usize,
+    embed_cache_bytes: Option<usize>,
+    reply_tx: Sender<ReplyEvent>,
+    transport: Transport,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl LocalHost {
+    pub fn new(
+        shards: Vec<Data>,
+        kernel: Kernel,
+        backend: Arc<dyn Backend>,
+        chunk_rows: usize,
+        reply_tx: Sender<ReplyEvent>,
+        transport: Transport,
+    ) -> Self {
+        Self {
+            shards,
+            kernel,
+            backend,
+            chunk_rows,
+            embed_cache_bytes: None,
+            reply_tx,
+            transport,
+            handles: Vec::new(),
+        }
+    }
+
+    /// Give replacements a non-default embed-cache budget (serve mode).
+    pub fn set_embed_cache_bytes(&mut self, bytes: usize) {
+        self.embed_cache_bytes = Some(bytes);
+    }
+
+    /// Join every replacement worker thread spawned so far. Call after
+    /// the cluster has shut down (replacements exit on `Quit` / link
+    /// close); joining earlier deadlocks.
+    pub fn join(&mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl ReviveHost for LocalHost {
+    fn revive(&mut self, slot: usize) -> Result<Box<dyn WorkerLink>, String> {
+        let shard = self
+            .shards
+            .get(slot)
+            .cloned()
+            .ok_or_else(|| format!("no shard recorded for slot {slot}"))?;
+        let mut worker =
+            Worker::new_chunked(shard, self.kernel, Arc::clone(&self.backend), self.chunk_rows);
+        if let Some(bytes) = self.embed_cache_bytes {
+            worker.set_embed_cache_budget(bytes);
+        }
+        match self.transport {
+            Transport::Memory => {
+                let (link, ep) = memory::pair(slot, self.reply_tx.clone());
+                self.handles.push(std::thread::spawn(move || worker.run(ep)));
+                Ok(link)
+            }
+            Transport::Tcp => {
+                let (link, ep) = tcp::revive_pair(slot, self.reply_tx.clone())
+                    .map_err(|e| format!("tcp revive: {e}"))?;
+                self.handles.push(std::thread::spawn(move || worker.run(ep)));
+                Ok(link)
+            }
+        }
+    }
+
+    fn join(&mut self) {
+        LocalHost::join(self);
+    }
+}
+
+/// The recovery driver: wraps each unit of protocol rounds in a
+/// snapshot → attempt → revive-and-replay → restore → retry loop.
+///
+/// A *unit* is the smallest span of rounds that can be re-run from its
+/// own start against installed worker state (e.g. `2-disLS` alone, or
+/// `3-levSample` + `4-adaptive` together — adaptive sampling feeds on
+/// residuals the unit itself establishes).
+pub struct Recovery {
+    host: Box<dyn ReviveHost>,
+    /// The master-side state replayed to revived slots; elastic
+    /// drivers fill it in as units complete.
+    pub checkpoint: Checkpoint,
+    grace: Duration,
+    max_recoveries: usize,
+    recoveries: usize,
+}
+
+impl Recovery {
+    pub fn new(host: Box<dyn ReviveHost>) -> Self {
+        Self {
+            host,
+            checkpoint: Checkpoint::new(0),
+            grace: Duration::from_millis(100),
+            max_recoveries: 16,
+            recoveries: 0,
+        }
+    }
+
+    /// How long [`crate::comm::Cluster::settle`] waits for the reply
+    /// queue to go quiet during a recovery (default 100ms).
+    pub fn set_grace(&mut self, grace: Duration) {
+        self.grace = grace;
+    }
+
+    /// Cap on revive attempts per driver run (default 16) — a slot
+    /// that dies deterministically on replay must not loop forever.
+    pub fn set_max_recoveries(&mut self, max: usize) {
+        self.max_recoveries = max;
+    }
+
+    /// Revive attempts performed so far.
+    pub fn recoveries(&self) -> usize {
+        self.recoveries
+    }
+
+    /// Join replacement workers the host spawned (after cluster quit).
+    pub fn join_host(&mut self) {
+        self.host.join();
+    }
+
+    /// Run one unit with recovery: on a dead-worker error
+    /// ([`CommError::Worker`] / [`CommError::Link`]), revive + replay,
+    /// rewind the stats to the unit-entry snapshot, and retry the unit
+    /// from its start. Timeouts are *not* recovered — a hung-but-alive
+    /// worker replaced under a live socket would race its replacement.
+    pub fn unit<T>(
+        &mut self,
+        cluster: &Cluster,
+        label: &str,
+        mut attempt: impl FnMut(&Cluster) -> Result<T, CommError>,
+    ) -> Result<T, CommError> {
+        self.checkpoint.round = label.to_string();
+        let snap = cluster.stats.snapshot();
+        let job = cluster.job_stats();
+        let job_snap = job.as_ref().map(|j| j.snapshot());
+        loop {
+            match attempt(cluster) {
+                Ok(v) => return Ok(v),
+                Err(err) => {
+                    let first_dead = match &err {
+                        CommError::Worker { worker, .. } | CommError::Link { worker, .. } => {
+                            *worker
+                        }
+                        _ => return Err(err),
+                    };
+                    if self.recoveries >= self.max_recoveries {
+                        return Err(err);
+                    }
+                    self.recover(cluster, first_dead)?;
+                    cluster.stats.restore(&snap);
+                    if let (Some(j), Some(js)) = (&job, &job_snap) {
+                        j.restore(js);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Revive `first_dead` plus every further slot whose hang-up
+    /// marker surfaces while settling, then replay the checkpoint
+    /// state onto each revived slot.
+    fn recover(&mut self, cluster: &Cluster, first_dead: usize) -> Result<(), CommError> {
+        let mut revived: Vec<usize> = Vec::new();
+        let mut dead: Vec<usize> = vec![first_dead];
+        while let Some(slot) = dead.pop() {
+            if revived.contains(&slot) {
+                continue;
+            }
+            self.recoveries += 1;
+            if self.recoveries > self.max_recoveries {
+                return Err(CommError::Link {
+                    worker: slot,
+                    round: "recover".into(),
+                    detail: format!("recovery budget exhausted ({} revives)", self.max_recoveries),
+                });
+            }
+            cluster.quit_worker(slot);
+            let link = self.host.revive(slot).map_err(|detail| CommError::Link {
+                worker: slot,
+                round: "recover".into(),
+                detail: format!("revive failed: {detail}"),
+            })?;
+            cluster.install_link(slot, link);
+            revived.push(slot);
+            for w in cluster.settle(self.grace) {
+                if !revived.contains(&w) && !dead.contains(&w) {
+                    dead.push(w);
+                }
+            }
+        }
+        cluster.unpoison();
+        for &slot in &revived {
+            self.replay(cluster, slot)?;
+        }
+        Ok(())
+    }
+
+    /// Bring one revived slot up to the checkpoint, in protocol order:
+    /// shard (rejoined processes only) → embed → scores → projection
+    /// basis → final coefficients → installed solution. Replies are
+    /// discarded (state effects are what matter) and the whole
+    /// exchange is erased by the unit's stats rewind.
+    fn replay(&mut self, cluster: &Cluster, slot: usize) -> Result<(), CommError> {
+        cluster.set_round("recover");
+        if let Some((path, chunk_rows)) = self.host.shard_path(slot) {
+            cluster.call(slot, rq::LoadShard { path, chunk_rows })?;
+        }
+        let cp = self.checkpoint.clone();
+        if let Some(spec) = &cp.spec {
+            cluster.call(slot, rq::Embed { spec: *spec })?;
+        }
+        if let Some(z) = &cp.z {
+            let _mass: f64 = cluster.call(slot, rq::Scores { z: z.clone() })?;
+        }
+        if let Some(y) = &cp.y {
+            // same per-slot seed derivation as the live 5-disLR scatter
+            let _r: Mat = cluster.call(
+                slot,
+                rq::ProjectSketch {
+                    pts: y.clone(),
+                    w: cp.w_cols,
+                    seed: cp.seed ^ (0xd15 + slot as u64),
+                },
+            )?;
+            if let Some(w_mat) = &cp.final_w {
+                cluster.call(slot, rq::Final { coeffs: w_mat.clone() })?;
+            }
+        }
+        if let Some((pts, coeffs)) = &cp.solution {
+            cluster.call(slot, rq::SetSolution { pts: pts.clone(), coeffs: coeffs.clone() })?;
+        }
+        Ok(())
+    }
+}
+
+/// [`crate::coordinator::dis_kpca_mode`] with elastic recovery: every
+/// unit runs under [`Recovery::unit`], and the checkpoint fills in as
+/// units complete so later faults replay earlier rounds' state.
+pub fn dis_kpca_recovering(
+    cluster: &Cluster,
+    recovery: &mut Recovery,
+    kernel: Kernel,
+    params: &Params,
+    mode: SamplingMode,
+    embed_installed: bool,
+) -> Result<KpcaSolution, CommError> {
+    params.apply_threads();
+    // fresh job, fresh checkpoint: stale state from a previous job
+    // must not be replayed over this job's rounds
+    recovery.checkpoint = Checkpoint::new(params.seed);
+    let y = if mode == SamplingMode::AdaptiveOnly {
+        recovery.unit(cluster, "repSample", |c| master::rep_sample_mode(c, params, &[], mode))?
+    } else {
+        let spec = master::embed_spec_for(kernel, params);
+        if !embed_installed {
+            recovery.unit(cluster, "1-embed", |c| master::dis_embed(c, spec))?;
+        }
+        recovery.checkpoint.spec = Some(spec);
+        let (masses, z) =
+            recovery.unit(cluster, "2-disLS", |c| master::dis_leverage_scores_z(c, params))?;
+        recovery.checkpoint.z = Some(z);
+        recovery.unit(cluster, "repSample", |c| master::rep_sample_mode(c, params, &masses, mode))?
+    };
+    let (sol, w_mat, w_cols) =
+        recovery.unit(cluster, "5-disLR", |c| master::dis_low_rank_w(c, kernel, params, &y))?;
+    recovery.checkpoint.y = Some(y);
+    recovery.checkpoint.w_cols = w_cols;
+    recovery.checkpoint.final_w = Some(w_mat);
+    Ok(sol)
+}
+
+/// [`crate::coordinator::dis_css`] with elastic recovery.
+pub fn dis_css_recovering(
+    cluster: &Cluster,
+    recovery: &mut Recovery,
+    kernel: Kernel,
+    params: &Params,
+    embed_installed: bool,
+) -> Result<CssSolution, CommError> {
+    params.apply_threads();
+    recovery.checkpoint = Checkpoint::new(params.seed);
+    let spec = master::embed_spec_for(kernel, params);
+    if !embed_installed {
+        recovery.unit(cluster, "1-embed", |c| master::dis_embed(c, spec))?;
+    }
+    recovery.checkpoint.spec = Some(spec);
+    let (masses, z) =
+        recovery.unit(cluster, "2-disLS", |c| master::dis_leverage_scores_z(c, params))?;
+    recovery.checkpoint.z = Some(z);
+    let y = recovery.unit(cluster, "repSample", |c| master::rep_sample(c, params, &masses))?;
+    let (residual, trace) = recovery.unit(cluster, "7-cssCert", |c| {
+        let sx = c.session("7-cssCert");
+        let residual: f64 = sx.broadcast(rq::Residuals { pts: y.clone() })?.into_iter().sum();
+        let trace: f64 = sx.broadcast(rq::EvalTrace)?.into_iter().sum();
+        Ok((residual, trace))
+    })?;
+    Ok(CssSolution { y, residual, trace })
+}
+
+/// [`crate::coordinator::dis_krr`] with elastic recovery (one unit —
+/// both KRR rounds re-run together; they share per-request state).
+pub fn dis_krr_recovering(
+    cluster: &Cluster,
+    recovery: &mut Recovery,
+    kernel: Kernel,
+    y: &PointSet,
+    lambda: f64,
+    teacher_seed: u64,
+) -> Result<KrrModel, CommError> {
+    recovery.unit(cluster, "9-krr", |c| {
+        crate::coordinator::dis_krr(c, kernel, y, lambda, teacher_seed)
+    })
+}
+
+/// [`crate::coordinator::dis_eval`] with elastic recovery. Requires
+/// the checkpoint to hold the solution state (`final_w` path or
+/// `solution`) so a revived slot can answer.
+pub fn dis_eval_recovering(
+    cluster: &Cluster,
+    recovery: &mut Recovery,
+) -> Result<(f64, f64), CommError> {
+    recovery.unit(cluster, "6-eval", master::dis_eval)
+}
+
+/// [`crate::coordinator::dis_set_solution`] with elastic recovery;
+/// notes the solution in the checkpoint so later faults re-install it.
+pub fn dis_set_solution_recovering(
+    cluster: &Cluster,
+    recovery: &mut Recovery,
+    sol: &KpcaSolution,
+) -> Result<(), CommError> {
+    recovery.unit(cluster, "5-setSolution", |c| master::dis_set_solution(c, sol))?;
+    recovery.checkpoint.solution =
+        Some((PointSet::Dense(sol.y.clone()), sol.coeffs.clone()));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_checkpoint() -> Checkpoint {
+        Checkpoint {
+            round: "5-disLR".into(),
+            seed: 42,
+            w_cols: 7,
+            spec: Some(EmbedSpec {
+                kernel: Kernel::Gauss { gamma: 0.5 },
+                m: 64,
+                t2: 32,
+                t: 8,
+                seed: 42 ^ 0xeb3d,
+            }),
+            z: Some(Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f64 * 0.25)),
+            y: Some(PointSet::Dense(Mat::from_fn(2, 5, |i, j| i as f64 - j as f64))),
+            final_w: Some(Mat::from_fn(4, 2, |i, j| (i + j) as f64)),
+            solution: Some((
+                PointSet::Dense(Mat::from_fn(2, 3, |i, j| (i * j) as f64)),
+                Mat::from_fn(3, 3, |i, j| if i == j { 1.0 } else { 0.0 }),
+            )),
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_all_fields() {
+        for cp in [Checkpoint::new(9), full_checkpoint()] {
+            let bytes = cp.encode();
+            let back = Checkpoint::decode(&bytes).unwrap();
+            assert_eq!(back.encode(), bytes);
+            assert_eq!(back.round, cp.round);
+            assert_eq!(back.seed, cp.seed);
+            assert_eq!(back.w_cols, cp.w_cols);
+            assert_eq!(back.spec, cp.spec);
+            assert_eq!(back.z.is_some(), cp.z.is_some());
+            assert_eq!(back.solution.is_some(), cp.solution.is_some());
+        }
+    }
+
+    #[test]
+    fn checkpoint_rejects_bad_version_and_trailing_bytes() {
+        let mut bytes = full_checkpoint().encode();
+        bytes[0] = CHECKPOINT_VERSION + 1;
+        assert!(Checkpoint::decode(&bytes).is_err());
+        bytes[0] = CHECKPOINT_VERSION;
+        bytes.push(0);
+        assert!(matches!(Checkpoint::decode(&bytes), Err(CodecError::Trailing)));
+    }
+
+    #[test]
+    fn checkpoint_rejects_every_truncation() {
+        let bytes = full_checkpoint().encode();
+        for len in 0..bytes.len() {
+            assert!(
+                Checkpoint::decode(&bytes[..len]).is_err(),
+                "prefix of {len} bytes decoded"
+            );
+        }
+    }
+}

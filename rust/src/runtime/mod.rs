@@ -18,7 +18,7 @@ mod native;
 mod xla;
 
 pub use manifest::{Artifact, Manifest};
-pub use native::NativeBackend;
+pub use native::{parse_table_cache_mb, NativeBackend};
 pub use xla::{XlaBackend, XlaStats};
 
 use crate::data::Data;

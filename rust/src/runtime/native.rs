@@ -16,6 +16,21 @@ use super::Backend;
 /// handful of slots suffices; eviction is least-recently-used.
 const TABLE_CACHE_CAP: usize = 4;
 
+/// Parse a `DISKPCA_TABLE_CACHE_MB` value (MiB; `0` disables caching,
+/// unset means the 128 MiB default). An unparsable value is a hard
+/// error, not a silent fallback — a mistyped budget quietly running at
+/// the default is exactly the misconfiguration the knob exists to
+/// prevent.
+pub fn parse_table_cache_mb(raw: Option<&str>) -> Result<usize, String> {
+    match raw {
+        None => Ok(128),
+        Some(v) => v
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| format!("DISKPCA_TABLE_CACHE_MB={v}: not a whole number of MiB")),
+    }
+}
+
 /// Byte budget for the warm table cache (`DISKPCA_TABLE_CACHE_MB`,
 /// default 128 MiB, `0` disables caching). The cache exists to stop a
 /// chunk loop from rebuilding tables *per chunk*; it must not convert
@@ -24,10 +39,11 @@ const TABLE_CACHE_CAP: usize = 4;
 /// than the budget is returned uncached — exactly the historical
 /// build-per-call behavior.
 fn table_cache_budget_from_env() -> usize {
-    let mb = std::env::var("DISKPCA_TABLE_CACHE_MB")
-        .ok()
-        .and_then(|v| v.trim().parse::<usize>().ok())
-        .unwrap_or(128);
+    let raw = std::env::var("DISKPCA_TABLE_CACHE_MB").ok();
+    let mb = match parse_table_cache_mb(raw.as_deref()) {
+        Ok(mb) => mb,
+        Err(msg) => panic!("config {msg}"),
+    };
     mb.saturating_mul(1 << 20)
 }
 

@@ -83,6 +83,7 @@ use crate::data::Data;
 use crate::embed::EmbedSpec;
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
+use crate::recovery::{LocalHost, Recovery, Transport};
 use crate::runtime::Backend;
 
 /// Identity and accounting scope of one job on a [`Service`] cluster.
@@ -123,6 +124,10 @@ pub struct Service {
     next_job: usize,
     /// Per-worker column bound for one transform scatter round.
     batch_cols: usize,
+    /// When present, fit/eval jobs run under the elastic recovery
+    /// driver: a worker dying mid-job is revived and the job completes
+    /// with a bit-identical result ([`crate::recovery`]).
+    recovery: Option<Recovery>,
 }
 
 impl Service {
@@ -137,6 +142,7 @@ impl Service {
             warm_embed: None,
             next_job: 0,
             batch_cols: 1024,
+            recovery: None,
         }
     }
 
@@ -183,6 +189,62 @@ impl Service {
         let mut svc = Self::new(Cluster::new(star, CommStats::new()), kernel);
         svc.handles = handles;
         svc
+    }
+
+    /// [`Service::in_process_opts`] on the elastic memory transport: a
+    /// worker thread dying mid-job is revived from a retained shard
+    /// copy and the job replays to a bit-identical result. Costs one
+    /// extra in-memory copy of every shard (the revival source).
+    pub fn in_process_elastic(
+        shards: Vec<Data>,
+        kernel: Kernel,
+        backend: Arc<dyn Backend>,
+        chunk_rows: usize,
+        embed_cache_bytes: Option<usize>,
+    ) -> Self {
+        let (star, endpoints, reply_tx) = memory::star_elastic(shards.len());
+        let handles: Vec<JoinHandle<()>> = shards
+            .iter()
+            .cloned()
+            .zip(endpoints)
+            .map(|(shard, ep)| {
+                let be = backend.clone();
+                std::thread::spawn(move || {
+                    let mut worker = Worker::new_chunked(shard, kernel, be, chunk_rows);
+                    if let Some(bytes) = embed_cache_bytes {
+                        worker.set_embed_cache_budget(bytes);
+                    }
+                    worker.run(ep)
+                })
+            })
+            .collect();
+        let mut host = LocalHost::new(
+            shards,
+            kernel,
+            backend,
+            chunk_rows,
+            reply_tx,
+            Transport::Memory,
+        );
+        if let Some(bytes) = embed_cache_bytes {
+            host.set_embed_cache_bytes(bytes);
+        }
+        let mut svc = Self::new(Cluster::new(star, CommStats::new()), kernel);
+        svc.handles = handles;
+        svc.recovery = Some(Recovery::new(Box::new(host)));
+        svc
+    }
+
+    /// Attach an elastic recovery driver to an externally-connected
+    /// service (the host must revive onto this cluster's reply queue).
+    pub fn set_recovery(&mut self, recovery: Recovery) {
+        self.recovery = Some(recovery);
+    }
+
+    /// Worker revivals performed across all jobs so far (0 for a
+    /// non-elastic service).
+    pub fn recoveries(&self) -> usize {
+        self.recovery.as_ref().map_or(0, |r| r.recoveries())
     }
 
     pub fn num_workers(&self) -> usize {
@@ -254,7 +316,17 @@ impl Service {
         let spec = embed_spec_for(self.kernel, params);
         let reuse = embeds && self.warm_embed == Some(spec);
         let job = self.begin();
-        let res = dis_kpca_warm(&self.cluster, self.kernel, params, mode, reuse);
+        let res = match self.recovery.as_mut() {
+            Some(rec) => crate::recovery::dis_kpca_recovering(
+                &self.cluster,
+                rec,
+                self.kernel,
+                params,
+                mode,
+                reuse,
+            ),
+            None => dis_kpca_warm(&self.cluster, self.kernel, params, mode, reuse),
+        };
         self.finish();
         self.note_embed_outcome(embeds, spec, &res);
         let output = res?;
@@ -266,7 +338,12 @@ impl Service {
         let spec = embed_spec_for(self.kernel, params);
         let reuse = self.warm_embed == Some(spec);
         let job = self.begin();
-        let res = dis_css_warm(&self.cluster, self.kernel, params, reuse);
+        let res = match self.recovery.as_mut() {
+            Some(rec) => {
+                crate::recovery::dis_css_recovering(&self.cluster, rec, self.kernel, params, reuse)
+            }
+            None => dis_css_warm(&self.cluster, self.kernel, params, reuse),
+        };
         self.finish();
         self.note_embed_outcome(true, spec, &res);
         let output = res?;
@@ -282,7 +359,17 @@ impl Service {
         teacher_seed: u64,
     ) -> Result<JobReport<KrrModel>, CommError> {
         let job = self.begin();
-        let res = dis_krr(&self.cluster, self.kernel, y, lambda, teacher_seed);
+        let res = match self.recovery.as_mut() {
+            Some(rec) => crate::recovery::dis_krr_recovering(
+                &self.cluster,
+                rec,
+                self.kernel,
+                y,
+                lambda,
+                teacher_seed,
+            ),
+            None => dis_krr(&self.cluster, self.kernel, y, lambda, teacher_seed),
+        };
         self.finish();
         let output = res?;
         Ok(JobReport { job, output, embed_reused: false })
@@ -292,7 +379,10 @@ impl Service {
     /// quality metric) as its own job.
     pub fn run_eval(&mut self) -> Result<JobReport<(f64, f64)>, CommError> {
         let job = self.begin();
-        let res = dis_eval(&self.cluster);
+        let res = match self.recovery.as_mut() {
+            Some(rec) => crate::recovery::dis_eval_recovering(&self.cluster, rec),
+            None => dis_eval(&self.cluster),
+        };
         self.finish();
         let output = res?;
         Ok(JobReport { job, output, embed_reused: false })
@@ -387,6 +477,11 @@ impl Drop for Service {
         self.cluster.shutdown();
         for h in self.handles.drain(..) {
             let _ = h.join();
+        }
+        // replacement workers spawned by revivals exit on the same
+        // Quit fan-out; join them too
+        if let Some(rec) = self.recovery.as_mut() {
+            rec.join_host();
         }
     }
 }

@@ -1,0 +1,231 @@
+//! Checkpoint codec properties, mirroring `protocol_properties.rs`:
+//! every decodable buffer re-encodes to the exact same bytes, every
+//! truncation of a valid checkpoint is rejected (never panics, never
+//! mis-decodes), and a solution restored from a decoded checkpoint
+//! replays into a revived worker bit-identically to an uninterrupted
+//! run.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use diskpca::comm::codec::CodecError;
+use diskpca::comm::{memory, Cluster, CommStats, Endpoint, Message, PointSet};
+use diskpca::coordinator::{dis_eval, dis_kpca, dis_set_solution, Params, Worker};
+use diskpca::data::{clusters, partition_power_law, Data};
+use diskpca::embed::EmbedSpec;
+use diskpca::kernels::Kernel;
+use diskpca::linalg::Mat;
+use diskpca::recovery::{
+    dis_eval_recovering, Checkpoint, LocalHost, Recovery, Transport, CHECKPOINT_VERSION,
+};
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+/// A spread of checkpoints over the codec's value space: empty,
+/// partially filled, dense and sparse point sets, degenerate shapes.
+fn varied_checkpoints() -> Vec<Checkpoint> {
+    let spec = EmbedSpec {
+        kernel: Kernel::Gauss { gamma: 0.75 },
+        m: 128,
+        t2: 64,
+        t: 16,
+        seed: 7 ^ 0xeb3d,
+    };
+    vec![
+        Checkpoint::new(0),
+        Checkpoint { round: "2-disLS".into(), spec: Some(spec), ..Checkpoint::new(7) },
+        Checkpoint {
+            round: "5-disLR".into(),
+            w_cols: 33,
+            spec: Some(spec),
+            z: Some(Mat::from_fn(4, 4, |i, j| 1.0 / (1.0 + (i + j) as f64))),
+            y: Some(PointSet::Dense(Mat::from_fn(3, 6, |i, j| (i * 6 + j) as f64 - 8.5))),
+            final_w: Some(Mat::from_fn(6, 2, |i, j| (i as f64).powi(j as i32 + 1))),
+            ..Checkpoint::new(7)
+        },
+        // sparse representative set, including an all-zero column
+        Checkpoint {
+            round: "recover".into(),
+            y: Some(PointSet::Sparse {
+                d: 5,
+                cols: vec![vec![(0, 1.5), (3, -2.0)], vec![], vec![(4, 0.25)]],
+            }),
+            solution: Some((
+                PointSet::Sparse { d: 2, cols: vec![vec![(1, -0.5)]] },
+                Mat::from_fn(1, 1, |_, _| f64::MIN_POSITIVE),
+            )),
+            ..Checkpoint::new(u64::MAX)
+        },
+        // degenerate 0×0 matrices must survive the trip too
+        Checkpoint {
+            round: String::new(),
+            z: Some(Mat::zeros(0, 0)),
+            final_w: Some(Mat::zeros(0, 3)),
+            ..Checkpoint::new(1)
+        },
+    ]
+}
+
+#[test]
+fn every_checkpoint_reencodes_to_identical_bytes() {
+    for (i, cp) in varied_checkpoints().into_iter().enumerate() {
+        let bytes = cp.encode();
+        let back = Checkpoint::decode(&bytes).unwrap_or_else(|e| panic!("checkpoint {i}: {e:?}"));
+        assert_eq!(back.encode(), bytes, "checkpoint {i}: decode∘encode is not the identity");
+        assert_eq!(back.round, cp.round, "checkpoint {i}");
+        assert_eq!(back.seed, cp.seed, "checkpoint {i}");
+        assert_eq!(back.w_cols, cp.w_cols, "checkpoint {i}");
+        assert_eq!(back.spec, cp.spec, "checkpoint {i}");
+    }
+}
+
+#[test]
+fn every_truncation_is_rejected() {
+    for (i, cp) in varied_checkpoints().into_iter().enumerate() {
+        let bytes = cp.encode();
+        for len in 0..bytes.len() {
+            assert!(
+                Checkpoint::decode(&bytes[..len]).is_err(),
+                "checkpoint {i}: {len}-byte prefix of {} decoded",
+                bytes.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn version_flag_and_trailing_corruption_are_rejected() {
+    let bytes = varied_checkpoints().pop().unwrap().encode();
+
+    let mut wrong_version = bytes.clone();
+    wrong_version[0] = CHECKPOINT_VERSION + 3;
+    assert!(matches!(
+        Checkpoint::decode(&wrong_version),
+        Err(CodecError::BadTag(v)) if v == CHECKPOINT_VERSION + 3
+    ));
+
+    // the last field flag sits at the tail of every checkpoint whose
+    // final option is None — force it to a non-boolean byte
+    let mut bad_flag = Checkpoint::new(5).encode();
+    let last = bad_flag.len() - 1;
+    bad_flag[last] = 9;
+    assert!(matches!(Checkpoint::decode(&bad_flag), Err(CodecError::BadTag(9))));
+
+    let mut trailing = bytes;
+    trailing.push(0);
+    assert!(matches!(Checkpoint::decode(&trailing), Err(CodecError::Trailing)));
+}
+
+/// A worker that serves `die_after` requests then exits holding the
+/// next one (duplicated from `fault_injection.rs` — test crates are
+/// separate binaries).
+fn mortal_worker(mut ep: impl Endpoint, shard: Data, kernel: Kernel, die_after: usize) {
+    let mut worker = Worker::new(shard, kernel, Arc::new(NativeBackend::new()));
+    let mut served = 0usize;
+    loop {
+        let req = match ep.recv_req() {
+            Ok(req) => req,
+            Err(_) => return,
+        };
+        if matches!(req, Message::Quit) || served == die_after {
+            return;
+        }
+        let resp = worker.handle(req);
+        if ep.send_resp(resp).is_err() {
+            return;
+        }
+        served += 1;
+    }
+}
+
+/// The end-to-end property: a checkpoint that went through
+/// encode→decode drives a replay whose eval is bit-identical to the
+/// uninterrupted cluster's.
+#[test]
+fn replay_from_decoded_checkpoint_matches_uninterrupted_run() {
+    let s = 3;
+    let mut rng = Rng::seed_from(31);
+    let data = Data::Dense(clusters(6, 110, 3, 0.2, &mut rng));
+    let shards = partition_power_law(&data, s, 2);
+    let kernel = Kernel::Gauss { gamma: 0.6 };
+    let params = Params {
+        k: 3,
+        t: 16,
+        p: 32,
+        n_lev: 8,
+        n_adapt: 12,
+        m_rff: 128,
+        t2: 64,
+        seed: 13,
+        ..Params::default()
+    };
+
+    // uninterrupted reference: fit + eval on a plain memory star
+    let (star, endpoints) = memory::star(s);
+    let cluster = Cluster::new(star, CommStats::new());
+    let handles: Vec<_> = shards
+        .iter()
+        .cloned()
+        .zip(endpoints)
+        .map(|(shard, ep)| {
+            std::thread::spawn(move || {
+                Worker::new(shard, kernel, Arc::new(NativeBackend::new())).run(ep)
+            })
+        })
+        .collect();
+    let sol = dis_kpca(&cluster, kernel, &params).unwrap();
+    let want = dis_eval(&cluster).unwrap();
+    cluster.shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
+
+    // serialize the solution as a checkpoint and round-trip it
+    let cp = Checkpoint {
+        round: "6-eval".into(),
+        solution: Some((PointSet::Dense(sol.y.clone()), sol.coeffs.clone())),
+        ..Checkpoint::new(params.seed)
+    };
+    let decoded = Checkpoint::decode(&cp.encode()).unwrap();
+
+    // elastic cluster: worker 1 answers the solution install, then
+    // dies holding its first eval request
+    let (star, endpoints, reply_tx) = memory::star_elastic(s);
+    let cluster = Cluster::new(star, CommStats::new());
+    cluster.set_reply_timeout(Duration::from_secs(60));
+    let handles: Vec<_> = shards
+        .iter()
+        .cloned()
+        .zip(endpoints)
+        .enumerate()
+        .map(|(i, (shard, ep))| {
+            let die_after = if i == 1 { 1 } else { usize::MAX };
+            std::thread::spawn(move || mortal_worker(ep, shard, kernel, die_after))
+        })
+        .collect();
+    let host = LocalHost::new(
+        shards,
+        kernel,
+        Arc::new(NativeBackend::new()),
+        0,
+        reply_tx,
+        Transport::Memory,
+    );
+    let mut rec = Recovery::new(Box::new(host));
+    rec.set_grace(Duration::from_millis(50));
+
+    dis_set_solution(&cluster, &sol).unwrap();
+    // resume from the serialized state, as a restarted master would
+    rec.checkpoint = decoded;
+    let got = dis_eval_recovering(&cluster, &mut rec).unwrap();
+
+    assert!(rec.recoveries() >= 1, "worker 1's death must have forced a revival");
+    assert_eq!(got.0.to_bits(), want.0.to_bits(), "eval error differs after replay");
+    assert_eq!(got.1.to_bits(), want.1.to_bits(), "eval trace differs after replay");
+
+    cluster.shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
+    rec.join_host();
+}

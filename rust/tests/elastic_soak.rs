@@ -1,0 +1,153 @@
+//! Seeded soak: a multi-job [`diskpca::serve::Service`] over the
+//! elastic memory transport where **every** worker thread is mortal —
+//! each dies after a deterministic-seed randomized request count,
+//! spread across the job sequence. Every job must still complete, the
+//! outputs and per-job word tables must be bitwise identical to a
+//! fault-free service running the same sequence, and warm-spec reuse
+//! must keep holding after rejoins (a revived worker has the embedding
+//! replayed into it, so later warm jobs still skip `1-embed`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use diskpca::comm::{memory, Cluster, CommStats, Endpoint, Message};
+use diskpca::coordinator::{Params, Worker};
+use diskpca::data::{clusters, partition_power_law, Data};
+use diskpca::kernels::Kernel;
+use diskpca::recovery::{LocalHost, Recovery, Transport};
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+use diskpca::serve::Service;
+
+const S: usize = 3;
+
+fn workload() -> (Vec<Data>, Kernel, Params) {
+    let mut rng = Rng::seed_from(23);
+    let data = Data::Dense(clusters(7, 130, 3, 0.2, &mut rng));
+    let shards = partition_power_law(&data, S, 4);
+    let kernel = Kernel::Gauss { gamma: 0.6 };
+    let params = Params {
+        k: 3,
+        t: 16,
+        p: 32,
+        n_lev: 8,
+        n_adapt: 12,
+        m_rff: 128,
+        t2: 64,
+        seed: 9,
+        ..Params::default()
+    };
+    (shards, kernel, params)
+}
+
+/// Serve `die_after` requests, then exit holding the next one.
+fn mortal_worker(mut ep: impl Endpoint, shard: Data, kernel: Kernel, die_after: usize) {
+    let mut worker = Worker::new(shard, kernel, Arc::new(NativeBackend::new()));
+    let mut served = 0usize;
+    loop {
+        let req = match ep.recv_req() {
+            Ok(req) => req,
+            Err(_) => return,
+        };
+        if matches!(req, Message::Quit) {
+            return;
+        }
+        if served == die_after {
+            return;
+        }
+        let resp = worker.handle(req);
+        if ep.send_resp(resp).is_err() {
+            return;
+        }
+        served += 1;
+    }
+}
+
+/// The job sequence both services run: three KPCA fits (cold + two
+/// warm) and a final eval. Returns per-job (y bits, coeffs bits,
+/// table, embed words, reused flag) plus the eval pair.
+fn run_jobs(svc: &mut Service, params: &Params) -> (Vec<JobTrace>, (f64, f64)) {
+    let mut traces = Vec::new();
+    for _ in 0..3 {
+        let report = svc.run_kpca(params).unwrap();
+        traces.push(JobTrace {
+            y: report.output.y.data().to_vec(),
+            coeffs: report.output.coeffs.data().to_vec(),
+            table: report.job.stats.table(),
+            embed_words: report.job.stats.round_words("1-embed"),
+            reused: report.embed_reused,
+        });
+    }
+    let ev = svc.run_eval().unwrap().output;
+    (traces, ev)
+}
+
+struct JobTrace {
+    y: Vec<f64>,
+    coeffs: Vec<f64>,
+    table: Vec<(String, usize, usize)>,
+    embed_words: usize,
+    reused: bool,
+}
+
+#[test]
+fn seeded_soak_every_job_completes_and_warm_reuse_survives_rejoin() {
+    let (shards, kernel, params) = workload();
+
+    // fault-free reference service
+    let mut ideal = Service::in_process(shards.clone(), kernel, Arc::new(NativeBackend::new()), 0);
+    let (want, want_ev) = run_jobs(&mut ideal, &params);
+    ideal.shutdown();
+
+    // mortal service: every worker dies after a seeded request count,
+    // staggered so deaths land in different jobs of the sequence
+    let mut seed_rng = Rng::seed_from(0x50a7);
+    let die_afters: Vec<usize> = (0..S).map(|i| 3 + i * 8 + seed_rng.below(5)).collect();
+    let (star, endpoints, reply_tx) = memory::star_elastic(S);
+    let handles: Vec<_> = shards
+        .iter()
+        .cloned()
+        .zip(endpoints)
+        .zip(die_afters.iter().copied())
+        .map(|((shard, ep), die_after)| {
+            std::thread::spawn(move || mortal_worker(ep, shard, kernel, die_after))
+        })
+        .collect();
+    let host = LocalHost::new(
+        shards,
+        kernel,
+        Arc::new(NativeBackend::new()),
+        0,
+        reply_tx,
+        Transport::Memory,
+    );
+    let mut rec = Recovery::new(Box::new(host));
+    rec.set_grace(Duration::from_millis(50));
+    let mut svc = Service::new(Cluster::new(star, CommStats::new()), kernel);
+    svc.set_recovery(rec);
+
+    let (got, got_ev) = run_jobs(&mut svc, &params);
+
+    assert!(
+        svc.recoveries() >= S,
+        "all {S} mortal workers should have died and been revived (got {})",
+        svc.recoveries()
+    );
+    assert_eq!(got_ev.0.to_bits(), want_ev.0.to_bits(), "eval error differs");
+    assert_eq!(got_ev.1.to_bits(), want_ev.1.to_bits(), "eval trace differs");
+    for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(g.y == w.y, "job {j}: representative points differ");
+        assert!(g.coeffs == w.coeffs, "job {j}: coefficients differ");
+        assert_eq!(g.table, w.table, "job {j}: per-job word table differs");
+        assert_eq!(g.reused, w.reused, "job {j}: warm-reuse flag differs");
+        if j > 0 {
+            assert!(g.reused, "job {j} must reuse the warm embedding");
+            assert_eq!(g.embed_words, 0, "warm job {j} must skip 1-embed entirely");
+        }
+    }
+
+    svc.shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
+}

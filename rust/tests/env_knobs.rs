@@ -1,0 +1,59 @@
+//! Regression tests for the environment-knob parsers. These knobs
+//! used to fall back to their defaults on unparsable values — a typo
+//! like `DISKPCA_COMM_TIMEOUT_SECS=5s` silently disabled the timeout.
+//! Every parser now returns a clear error naming the variable and the
+//! offending value, and the use sites panic with a `config ...`
+//! message instead of proceeding with a default the operator never
+//! chose.
+
+use std::time::Duration;
+
+use diskpca::comm::parse_comm_timeout;
+use diskpca::coordinator::worker::parse_embed_cache_mb;
+use diskpca::runtime::parse_table_cache_mb;
+
+#[test]
+fn comm_timeout_accepts_whole_seconds_and_zero_disables() {
+    assert_eq!(parse_comm_timeout(None), Ok(None), "unset keeps no timeout");
+    assert_eq!(parse_comm_timeout(Some("0")), Ok(None), "0 disables");
+    assert_eq!(parse_comm_timeout(Some("5")), Ok(Some(Duration::from_secs(5))));
+    assert_eq!(
+        parse_comm_timeout(Some(" 7 ")),
+        Ok(Some(Duration::from_secs(7))),
+        "surrounding whitespace is tolerated"
+    );
+}
+
+#[test]
+fn comm_timeout_rejects_garbage_with_named_variable() {
+    for bad in ["5s", "abc", "", "1.5", "-3", "0x10"] {
+        let err = parse_comm_timeout(Some(bad)).unwrap_err();
+        assert!(
+            err.contains("DISKPCA_COMM_TIMEOUT_SECS"),
+            "error must name the variable: {err}"
+        );
+        assert!(err.contains(bad.trim()) || bad.trim().is_empty(), "error must echo the value: {err}");
+    }
+}
+
+#[test]
+fn embed_cache_mb_defaults_and_rejects_garbage() {
+    assert_eq!(parse_embed_cache_mb(None), Ok(64), "unset keeps the 64 MiB default");
+    assert_eq!(parse_embed_cache_mb(Some("0")), Ok(0), "0 disables the cache");
+    assert_eq!(parse_embed_cache_mb(Some(" 256 ")), Ok(256));
+    for bad in ["64MB", "", "-1", "2.5"] {
+        let err = parse_embed_cache_mb(Some(bad)).unwrap_err();
+        assert!(err.contains("DISKPCA_EMBED_CACHE_MB"), "error must name the variable: {err}");
+    }
+}
+
+#[test]
+fn table_cache_mb_defaults_and_rejects_garbage() {
+    assert_eq!(parse_table_cache_mb(None), Ok(128), "unset keeps the 128 MiB default");
+    assert_eq!(parse_table_cache_mb(Some("0")), Ok(0), "0 disables the cache");
+    assert_eq!(parse_table_cache_mb(Some(" 512 ")), Ok(512));
+    for bad in ["lots", "", "-8", "1e3"] {
+        let err = parse_table_cache_mb(Some(bad)).unwrap_err();
+        assert!(err.contains("DISKPCA_TABLE_CACHE_MB"), "error must name the variable: {err}");
+    }
+}

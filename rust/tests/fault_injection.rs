@@ -6,14 +6,26 @@
 //! 3. the master does not hang (bounded by the reply timeout, but the
 //!    hang-up markers fire long before it),
 //! 4. the surviving workers receive `Quit` and shut down cleanly.
+//!
+//! Plus the elastic kill matrix: a worker killed after every request
+//! count (≈ every round boundary) × {memory, TCP} × {resident,
+//! streaming} recovers through [`diskpca::recovery`] and produces a
+//! solution, eval, and per-round word table **bitwise identical** to
+//! the fault-free run.
 
+use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Duration;
 
-use diskpca::comm::{memory, tcp, Cluster, CommError, CommStats, Endpoint, Message};
-use diskpca::coordinator::{dis_kpca, Params, Worker};
+use diskpca::comm::{
+    memory, tcp, Cluster, CommError, CommStats, Endpoint, Message, ReplyEvent, Star,
+};
+use diskpca::coordinator::{dis_eval, dis_kpca, KpcaSolution, Params, SamplingMode, Worker};
 use diskpca::data::{clusters, partition_power_law, Data};
 use diskpca::kernels::Kernel;
+use diskpca::recovery::{
+    dis_eval_recovering, dis_kpca_recovering, LocalHost, Recovery, Transport,
+};
 use diskpca::rng::Rng;
 use diskpca::runtime::NativeBackend;
 
@@ -44,7 +56,18 @@ fn doomed_worker(
     kernel: Kernel,
     die_after: usize,
 ) {
-    let mut worker = Worker::new(shard, kernel, Arc::new(NativeBackend::new()));
+    doomed_worker_chunked(&mut endpoint, shard, kernel, 0, die_after)
+}
+
+/// [`doomed_worker`] with a streaming chunk width (`0` = resident).
+fn doomed_worker_chunked(
+    endpoint: &mut impl Endpoint,
+    shard: Data,
+    kernel: Kernel,
+    chunk_rows: usize,
+    die_after: usize,
+) {
+    let mut worker = Worker::new_chunked(shard, kernel, Arc::new(NativeBackend::new()), chunk_rows);
     let mut served = 0usize;
     loop {
         let req = match endpoint.recv_req() {
@@ -175,4 +198,180 @@ fn drop_guard_releases_workers_after_abort() {
     for h in handles {
         h.join().expect("worker thread panicked");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Elastic kill matrix: recovery must be invisible in the results.
+// ---------------------------------------------------------------------------
+
+type RunResult = (KpcaSolution, (f64, f64), Vec<(String, usize, usize)>);
+
+/// Fault-free reference run (memory star, normal workers).
+fn baseline(chunk_rows: usize) -> RunResult {
+    let (shards, kernel, params) = workload(3);
+    let (star, endpoints) = memory::star(shards.len());
+    let cluster = Cluster::new(star, CommStats::new());
+    let handles: Vec<_> = shards
+        .into_iter()
+        .zip(endpoints)
+        .map(|(shard, ep)| {
+            std::thread::spawn(move || {
+                Worker::new_chunked(shard, kernel, Arc::new(NativeBackend::new()), chunk_rows)
+                    .run(ep)
+            })
+        })
+        .collect();
+    let sol = dis_kpca(&cluster, kernel, &params).unwrap();
+    let ev = dis_eval(&cluster).unwrap();
+    let table = cluster.stats.table();
+    cluster.shutdown();
+    for h in handles {
+        h.join().expect("worker thread panicked");
+    }
+    (sol, ev, table)
+}
+
+/// Elastic run with worker [`DEAD_WORKER`] killed after `die_after`
+/// served requests; returns the result plus the revive count.
+#[allow(clippy::too_many_arguments)]
+fn drive_elastic<E: Endpoint + Send + 'static>(
+    star: Star,
+    endpoints: Vec<E>,
+    reply_tx: Sender<ReplyEvent>,
+    shards: Vec<Data>,
+    kernel: Kernel,
+    params: &Params,
+    transport: Transport,
+    chunk_rows: usize,
+    die_after: usize,
+) -> (RunResult, usize) {
+    let cluster = Cluster::new(star, CommStats::new());
+    cluster.set_reply_timeout(Duration::from_secs(120));
+    let handles: Vec<_> = shards
+        .iter()
+        .cloned()
+        .zip(endpoints)
+        .enumerate()
+        .map(|(i, (shard, mut ep))| {
+            std::thread::spawn(move || {
+                if i == DEAD_WORKER {
+                    doomed_worker_chunked(&mut ep, shard, kernel, chunk_rows, die_after);
+                } else {
+                    Worker::new_chunked(shard, kernel, Arc::new(NativeBackend::new()), chunk_rows)
+                        .run(ep);
+                }
+            })
+        })
+        .collect();
+    let host = LocalHost::new(
+        shards,
+        kernel,
+        Arc::new(NativeBackend::new()),
+        chunk_rows,
+        reply_tx,
+        transport,
+    );
+    let mut rec = Recovery::new(Box::new(host));
+    rec.set_grace(Duration::from_millis(50));
+    let sol =
+        dis_kpca_recovering(&cluster, &mut rec, kernel, params, SamplingMode::Full, false)
+            .unwrap_or_else(|e| panic!("{transport:?} chunk={chunk_rows} die={die_after}: {e}"));
+    let ev = dis_eval_recovering(&cluster, &mut rec)
+        .unwrap_or_else(|e| panic!("{transport:?} chunk={chunk_rows} die={die_after} eval: {e}"));
+    let table = cluster.stats.table();
+    let recoveries = rec.recoveries();
+    cluster.shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
+    rec.join_host();
+    ((sol, ev, table), recoveries)
+}
+
+fn elastic_run(transport: Transport, chunk_rows: usize, die_after: usize) -> (RunResult, usize) {
+    let (shards, kernel, params) = workload(3);
+    match transport {
+        Transport::Memory => {
+            let (star, eps, tx) = memory::star_elastic(shards.len());
+            drive_elastic(star, eps, tx, shards, kernel, &params, transport, chunk_rows, die_after)
+        }
+        Transport::Tcp => {
+            let (star, eps, tx) = tcp::star_elastic(shards.len()).unwrap();
+            drive_elastic(star, eps, tx, shards, kernel, &params, transport, chunk_rows, die_after)
+        }
+    }
+}
+
+fn assert_bit_identical(ctx: &str, got: &RunResult, want: &RunResult) {
+    let (sol, ev, table) = got;
+    let (bsol, bev, btable) = want;
+    assert!(sol.y.data() == bsol.y.data(), "{ctx}: representative points differ");
+    assert!(sol.coeffs.data() == bsol.coeffs.data(), "{ctx}: coefficients differ");
+    assert_eq!(ev.0.to_bits(), bev.0.to_bits(), "{ctx}: eval error differs");
+    assert_eq!(ev.1.to_bits(), bev.1.to_bits(), "{ctx}: eval trace differs");
+    assert_eq!(table, btable, "{ctx}: per-round word table differs");
+}
+
+/// The matrix: kill worker 1 after every request count from the first
+/// request (mid `1-embed`) through the late rounds, on both transports
+/// and both worker modes. Every cell must recover and reproduce the
+/// fault-free run bit for bit — words table included.
+#[test]
+fn kill_matrix_recovers_bit_identically() {
+    for &chunk_rows in &[0usize, 16] {
+        let want = baseline(chunk_rows);
+        for transport in [Transport::Memory, Transport::Tcp] {
+            for die_after in [0usize, 1, 2, 3, 4, 6, 8] {
+                let ctx = format!("{transport:?} chunk={chunk_rows} die_after={die_after}");
+                let (got, recoveries) = elastic_run(transport, chunk_rows, die_after);
+                assert!(recoveries >= 1, "{ctx}: no recovery happened — kill not injected?");
+                assert_bit_identical(&ctx, &got, &want);
+            }
+        }
+    }
+}
+
+/// A second worker dying *during* the recovery settle window is also
+/// revived (the settle loop feeds newly surfaced markers back in).
+#[test]
+fn double_death_in_one_round_recovers() {
+    let (shards, kernel, params) = workload(3);
+    let want = baseline(0);
+    let (star, endpoints, reply_tx) = memory::star_elastic(shards.len());
+    let cluster = Cluster::new(star, CommStats::new());
+    cluster.set_reply_timeout(Duration::from_secs(120));
+    let handles: Vec<_> = shards
+        .iter()
+        .cloned()
+        .zip(endpoints)
+        .enumerate()
+        .map(|(i, (shard, mut ep))| {
+            std::thread::spawn(move || match i {
+                0 => doomed_worker_chunked(&mut ep, shard, kernel, 0, 3),
+                1 => doomed_worker_chunked(&mut ep, shard, kernel, 0, 3),
+                _ => Worker::new(shard, kernel, Arc::new(NativeBackend::new())).run(ep),
+            })
+        })
+        .collect();
+    let host = LocalHost::new(
+        shards,
+        kernel,
+        Arc::new(NativeBackend::new()),
+        0,
+        reply_tx,
+        Transport::Memory,
+    );
+    let mut rec = Recovery::new(Box::new(host));
+    rec.set_grace(Duration::from_millis(50));
+    let sol = dis_kpca_recovering(&cluster, &mut rec, kernel, &params, SamplingMode::Full, false)
+        .unwrap();
+    let ev = dis_eval_recovering(&cluster, &mut rec).unwrap();
+    assert!(rec.recoveries() >= 2, "both deaths must be recovered ({})", rec.recoveries());
+    let got = (sol, ev, cluster.stats.table());
+    assert_bit_identical("double death", &got, &want);
+    cluster.shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
+    rec.join_host();
 }

@@ -15,7 +15,7 @@
 
 use std::sync::Arc;
 
-use diskpca::coordinator::{dis_eval, dis_kpca, run_cluster, Params};
+use diskpca::coordinator::{dis_eval, dis_kpca, run_cluster, GatherMode, Params};
 use diskpca::data::{clusters, partition_power_law, zipf_sparse, Data};
 use diskpca::kernels::{self, Kernel};
 use diskpca::linalg::{qr_r_only, qr_thin, Mat};
@@ -211,6 +211,7 @@ fn dis_kpca_identical_across_thread_counts() {
         seed: 7,
         threads: 0,
         chunk_rows: 0,
+        gather: GatherMode::Flat,
     };
     let mut runs = Vec::new();
     for threads in [1usize, 4] {

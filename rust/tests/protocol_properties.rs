@@ -7,7 +7,8 @@ use std::sync::Arc;
 
 use diskpca::comm::{codec, Message, PointSet};
 use diskpca::coordinator::{
-    batch_kpca, dis_css, dis_eval, dis_kpca, dis_kpca_boosted, run_cluster, Params, Worker,
+    batch_kpca, dis_css, dis_eval, dis_kpca, dis_kpca_boosted, run_cluster, GatherMode, Params,
+    Worker,
 };
 use diskpca::data::{clusters, partition_power_law, zipf_sparse, Data};
 use diskpca::kernels::{gram, Kernel};
@@ -48,6 +49,7 @@ fn random_params(rng: &mut Rng) -> Params {
         seed: rng.next_u64(),
         threads: 0,
         chunk_rows: 0,
+        gather: GatherMode::Flat,
     }
 }
 
@@ -274,6 +276,7 @@ fn prop_degenerate_data_survives() {
                 seed: rng.next_u64(),
                 threads: 0,
                 chunk_rows: 0,
+                gather: GatherMode::Flat,
             };
             let shards = partition_power_law(&data, 3, rng.next_u64());
             let ((err, trace), _) = run_cluster(
@@ -354,6 +357,9 @@ fn variant_index(m: &Message) -> usize {
         ReqKrrEval { .. } => 26,
         RespError(_) => 27,
         ReqProjectPoints { .. } => 28,
+        ReqSketchEmbedR { .. } => 29,
+        ReqProjectSketchR { .. } => 30,
+        ReqLoadShard { .. } => 31,
     }
 }
 
@@ -410,6 +416,13 @@ fn canonical_messages() -> Vec<Message> {
         Message::ReqProjectPoints {
             pts: PointSet::Dense(Mat::from_fn(3, 5, |i, j| (i + j) as f64)),
         },
+        Message::ReqSketchEmbedR { p: 15, seed: 16 },
+        Message::ReqProjectSketchR {
+            pts: PointSet::Dense(Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64)),
+            w: 17,
+            seed: 18,
+        },
+        Message::ReqLoadShard { path: "shards/susy_like_002.dkps".into(), chunk_rows: 64 },
     ]
 }
 
@@ -424,7 +437,7 @@ fn codec_roundtrip_covers_every_variant() {
     let mut seen: Vec<usize> = msgs.iter().map(variant_index).collect();
     seen.sort_unstable();
     seen.dedup();
-    assert_eq!(seen, (0..29).collect::<Vec<_>>(), "canonical list must cover all 29 variants");
+    assert_eq!(seen, (0..32).collect::<Vec<_>>(), "canonical list must cover all 32 variants");
     for msg in msgs {
         let bytes = codec::encode(&msg);
         let back = codec::decode(&bytes).unwrap_or_else(|e| panic!("{}: {e:?}", msg.tag()));

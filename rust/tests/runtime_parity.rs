@@ -5,7 +5,7 @@
 
 use std::sync::Arc;
 
-use diskpca::coordinator::{dis_eval, dis_kpca, run_cluster, Params};
+use diskpca::coordinator::{dis_eval, dis_kpca, run_cluster, GatherMode, Params};
 use diskpca::data::{partition_power_law, Data};
 use diskpca::embed::EmbedSpec;
 use diskpca::kernels::Kernel;
@@ -147,6 +147,7 @@ fn diskpca_end_to_end_on_xla_backend() {
         seed: 21,
         threads: 0,
         chunk_rows: 0,
+        gather: GatherMode::Flat,
     };
     let ((sol, err, trace), _stats) = run_cluster(shards, kernel, backend, move |cluster| {
         let sol = dis_kpca(cluster, kernel, &params).unwrap();

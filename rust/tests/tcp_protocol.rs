@@ -6,7 +6,7 @@ use std::sync::Arc;
 
 use diskpca::comm::{memory, tcp, Cluster, CommStats};
 use diskpca::coordinator::{
-    dis_css, dis_eval, dis_kpca, dis_krr, kmeans::distributed_kmeans, Params, Worker,
+    dis_css, dis_eval, dis_kpca, dis_krr, kmeans::distributed_kmeans, GatherMode, Params, Worker,
 };
 use diskpca::data::{clusters, partition_power_law, Data};
 use diskpca::kernels::Kernel;
@@ -30,6 +30,7 @@ fn workload() -> (Vec<Data>, Kernel, Params) {
         seed: 12,
         threads: 0,
         chunk_rows: 0,
+        gather: GatherMode::Flat,
     };
     (shards, kernel, params)
 }

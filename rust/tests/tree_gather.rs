@@ -1,0 +1,108 @@
+//! Tree (TSQR) gather mode: the pairwise R-factor reduction must
+//! preserve the stacked Gram exactly in theory (to roundoff in f64),
+//! and an end-to-end `--gather tree` fit must produce a solution of
+//! the same quality as the flat gather while shipping strictly fewer
+//! words in the sketch-aggregation round whenever `p > t`.
+
+use std::sync::Arc;
+
+use diskpca::comm::{memory, Cluster, CommStats};
+use diskpca::coordinator::{dis_eval, dis_kpca, tsqr_merge, GatherMode, Params, Worker};
+use diskpca::data::{clusters, partition_power_law, Data};
+use diskpca::kernels::Kernel;
+use diskpca::linalg::{qr_r_only, Mat};
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+#[test]
+fn tsqr_merge_preserves_the_stacked_gram() {
+    let t = 12;
+    let mut rng = Rng::seed_from(4);
+    // every fan-in shape: single factor, even, odd (carry), power of
+    // two, and a tree deep enough to carry across levels
+    for s in [1usize, 2, 3, 5, 8, 32] {
+        let blocks: Vec<Mat> = (0..s)
+            .map(|_| {
+                let rows = t + rng.below(20);
+                Mat::from_fn(rows, t, |_, _| rng.normal())
+            })
+            .collect();
+        let rs: Vec<Mat> = blocks.iter().map(qr_r_only).collect();
+        let merged = tsqr_merge(rs);
+        assert_eq!((merged.rows(), merged.cols()), (t, t), "s={s}: R must be t×t");
+        let got = merged.matmul_at_b(&merged);
+        let want = {
+            let stacked = Mat::vcat_all(&blocks);
+            stacked.matmul_at_b(&stacked)
+        };
+        let scale = (0..t).map(|i| want[(i, i)]).fold(0.0f64, f64::max);
+        assert!(
+            got.max_abs_diff(&want) < 1e-9 * scale,
+            "s={s}: merged Gram drifts by {} (scale {scale})",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+/// Fit + eval under one gather mode; returns the eval pair and the
+/// word counts of the two rounds tree mode compresses.
+fn fit(gather: GatherMode, shards: &[Data], kernel: Kernel, params: &Params) -> ((f64, f64), usize, usize) {
+    let params = Params { gather, ..*params };
+    let (star, endpoints) = memory::star(shards.len());
+    let cluster = Cluster::new(star, CommStats::new());
+    let handles: Vec<_> = shards
+        .iter()
+        .cloned()
+        .zip(endpoints)
+        .map(|(shard, ep)| {
+            std::thread::spawn(move || {
+                Worker::new(shard, kernel, Arc::new(NativeBackend::new())).run(ep)
+            })
+        })
+        .collect();
+    dis_kpca(&cluster, kernel, &params).unwrap();
+    let ev = dis_eval(&cluster).unwrap();
+    let disls = cluster.stats.round_words("2-disLS");
+    let dislr = cluster.stats.round_words("5-disLR");
+    cluster.shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
+    (ev, disls, dislr)
+}
+
+#[test]
+fn tree_gather_matches_flat_quality_with_fewer_sketch_words() {
+    let mut rng = Rng::seed_from(17);
+    let data = Data::Dense(clusters(6, 150, 3, 0.2, &mut rng));
+    let shards = partition_power_law(&data, 3, 6);
+    let kernel = Kernel::Gauss { gamma: 0.6 };
+    // p ≫ t so the flat gather's t×p replies dwarf tree's t×t factors
+    let params = Params {
+        k: 3,
+        t: 16,
+        p: 64,
+        n_lev: 8,
+        n_adapt: 12,
+        m_rff: 128,
+        t2: 64,
+        seed: 11,
+        ..Params::default()
+    };
+
+    let ((flat_err, flat_trace), flat_disls, _) = fit(GatherMode::Flat, &shards, kernel, &params);
+    let ((tree_err, tree_trace), tree_disls, _) = fit(GatherMode::Tree, &shards, kernel, &params);
+
+    assert!(flat_err.is_finite() && flat_err >= 0.0 && flat_err <= flat_trace);
+    assert!(tree_err.is_finite() && tree_err >= 0.0 && tree_err <= tree_trace);
+    // same Gram in exact arithmetic ⇒ the solutions agree to roundoff
+    assert_eq!(tree_trace.to_bits(), flat_trace.to_bits(), "trace is gather-independent");
+    assert!(
+        (tree_err - flat_err).abs() <= 1e-6 * flat_trace.max(1.0),
+        "tree err {tree_err} vs flat err {flat_err} (trace {flat_trace})"
+    );
+    assert!(
+        tree_disls < flat_disls,
+        "tree 2-disLS words ({tree_disls}) must undercut flat ({flat_disls}) at p > t"
+    );
+}
