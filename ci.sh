@@ -25,6 +25,17 @@ else
     cargo test -q --test fault_injection --test elastic_soak --test checkpoint_properties
 fi
 
+# Concurrent scheduler suite under its own hard timeout for the same
+# reason: a dispatch/heal liveness bug shows up as a parked-runner
+# deadlock, and the timeout turns that into a CI failure instead of a
+# stalled runner. (Also part of `cargo test` above when nothing hangs.)
+echo "==> concurrent scheduler suite (hard timeout 600s)"
+if command -v timeout >/dev/null 2>&1; then
+    timeout 600 cargo test -q --test serve_concurrent
+else
+    cargo test -q --test serve_concurrent
+fi
+
 if cargo clippy --version >/dev/null 2>&1; then
     echo "==> cargo clippy --all-targets (-D warnings; bug-finding groups — see [lints] in Cargo.toml)"
     cargo clippy --all-targets --quiet -- -D warnings
@@ -63,6 +74,8 @@ echo "==> serve bench smoke + baseline diff (warn-only, threshold 25%)"
 DISKPCA_BENCH_FAST=1 cargo bench --bench serve
 echo "==> elastic bench smoke + baseline diff (warn-only, threshold 25%; tree vs flat gather)"
 DISKPCA_BENCH_FAST=1 cargo bench --bench elastic
+echo "==> qps bench smoke + baseline diff (warn-only, threshold 25%; seq vs concurrent serving)"
+DISKPCA_BENCH_FAST=1 cargo bench --bench qps
 
 # Serve-layer smoke: the example runs a real multi-job session and
 # asserts the warm-state invariant (second same-spec job performs zero

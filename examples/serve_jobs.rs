@@ -44,7 +44,10 @@ fn main() {
     };
 
     println!("== serve session: 4 workers, susy_like ×{scale}, gauss γ={gamma:.3} ==\n");
-    let mut svc = Service::in_process(shards, kernel, Arc::new(NativeBackend::new()), 0);
+    let mut svc = Service::builder(kernel)
+        .shards(shards)
+        .backend(Arc::new(NativeBackend::new()))
+        .build();
 
     // ---- job 0: cold fit ----
     let cold = svc.run_kpca(&params).unwrap();

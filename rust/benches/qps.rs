@@ -1,0 +1,284 @@
+//! Serving-throughput benchmark: queries/sec and tail latency of the
+//! concurrent job scheduler vs strictly sequential dispatch.
+//!
+//! Each scenario spins up a persistent service, installs one disKPCA
+//! solution, then drives a closed-loop multi-job mix from 4 client
+//! threads (3 projection batches : 1 KRR job, all via
+//! `Service::submit`). Scenarios cover s ∈ {4, 16} workers over the
+//! in-memory and TCP transports, each dispatched sequentially
+//! (`max_inflight = 1` — the bit-identity baseline) and concurrently
+//! (`max_inflight = 4`). Per-query wall times feed the rows:
+//!
+//! - `qps/<scenario>/p50|p95|p99` — per-query latency percentiles,
+//! - `qps/<scenario>/ns-per-query` — wall time / queries (the QPS
+//!   reciprocal, so the baseline diff sees throughput regressions as
+//!   wall-time growth),
+//!
+//! and the JSON additionally records `qps/<scenario>/qps` rows with
+//! the raw queries/sec (trend record only — excluded from the
+//! regression diff, where "bigger" is better, not worse).
+//!
+//! Emits `BENCH_qps.json` and diffs the latency rows against
+//! `bench_baseline/BENCH_qps.json` with the repo's warn-only >25%
+//! threshold. `DISKPCA_BENCH_FAST=1` (the CI smoke) runs s=4 only
+//! with a shrunk workload; the checked-in baseline is calibrated for
+//! fast mode. Override paths with `DISKPCA_BENCH_BASELINE` /
+//! `DISKPCA_BENCH_OUT`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use diskpca::bench_harness::Bencher;
+use diskpca::comm::{tcp, Cluster, CommStats, PointSet};
+use diskpca::coordinator::{Params, Worker};
+use diskpca::data::{by_name, Data};
+use diskpca::kernels::{median_trick_gamma, Kernel};
+use diskpca::linalg::Mat;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+use diskpca::serve::{JobSpec, ServeConfig, Service};
+
+const REGRESSION_THRESHOLD: f64 = 1.25;
+/// Closed-loop client threads per scenario.
+const CLIENTS: usize = 4;
+/// Concurrent scheduling lanes in the `conc` scenarios.
+const CONC_INFLIGHT: usize = 4;
+
+fn params() -> Params {
+    Params {
+        k: 6,
+        t: 24,
+        p: 48,
+        n_lev: 12,
+        n_adapt: 24,
+        m_rff: 128,
+        t2: 64,
+        seed: 5,
+        ..Params::default()
+    }
+}
+
+fn workload(scale: f64, workers: usize) -> (Vec<Data>, Data, Kernel) {
+    let mut spec = by_name("susy_like", scale).unwrap();
+    spec.s = workers;
+    let data = spec.generate(11);
+    let mut rng = Rng::seed_from(13);
+    let gamma = median_trick_gamma(&data, 0.2, 128, &mut rng);
+    let shards = spec.partition(&data, 17);
+    (shards, data, Kernel::Gauss { gamma })
+}
+
+fn config(max_inflight: usize) -> ServeConfig {
+    ServeConfig { max_inflight, ..ServeConfig::default() }
+}
+
+fn mem_service(shards: Vec<Data>, kernel: Kernel, max_inflight: usize) -> Service {
+    Service::builder(kernel)
+        .shards(shards)
+        .backend(Arc::new(NativeBackend::new()))
+        .config(config(max_inflight))
+        .build()
+}
+
+fn tcp_service(
+    shards: Vec<Data>,
+    kernel: Kernel,
+    max_inflight: usize,
+) -> (Service, Vec<std::thread::JoinHandle<()>>) {
+    let (star, endpoints) = tcp::star(shards.len()).unwrap();
+    let handles: Vec<_> = shards
+        .into_iter()
+        .zip(endpoints)
+        .map(|(shard, ep)| {
+            let be = Arc::new(NativeBackend::new());
+            std::thread::spawn(move || Worker::new(shard, kernel, be).run(ep))
+        })
+        .collect();
+    let svc = Service::builder(kernel)
+        .cluster(Cluster::new(star, CommStats::new()))
+        .config(config(max_inflight))
+        .build();
+    (svc, handles)
+}
+
+/// Drive the multi-job mix from `CLIENTS` closed-loop client threads.
+/// Returns every per-query latency plus the total wall seconds.
+fn drive(
+    svc: &Service,
+    y: &PointSet,
+    batch: &Mat,
+    queries_per_client: usize,
+) -> (Vec<Duration>, f64) {
+    let wall = Instant::now();
+    let latencies: Vec<Duration> = std::thread::scope(|scope| {
+        let clients: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut lats = Vec::with_capacity(queries_per_client);
+                    for q in 0..queries_per_client {
+                        // 3:1 projection : KRR, phase-shifted per client
+                        let spec = if (q + c) % 4 == 3 {
+                            JobSpec::Krr {
+                                y: y.clone(),
+                                lambda: 1e-3,
+                                teacher_seed: (c * 1_000 + q) as u64,
+                            }
+                        } else {
+                            JobSpec::Transform { batch: batch.clone() }
+                        };
+                        let t0 = Instant::now();
+                        let handle = loop {
+                            // closed-loop clients can still race a full
+                            // queue; backpressure is part of the cost
+                            match svc.submit(spec.clone()) {
+                                Ok(h) => break h,
+                                Err(_) => std::thread::yield_now(),
+                            }
+                        };
+                        handle.wait().expect("query job failed");
+                        lats.push(t0.elapsed());
+                    }
+                    lats
+                })
+            })
+            .collect();
+        clients.into_iter().flat_map(|c| c.join().unwrap()).collect()
+    });
+    (latencies, wall.elapsed().as_secs_f64())
+}
+
+/// Fold one scenario's latencies into percentile rows + a QPS record.
+/// Returns the achieved queries/sec.
+fn record(
+    b: &mut Bencher,
+    qps_rows: &mut Vec<(String, f64)>,
+    label: &str,
+    mut lats: Vec<Duration>,
+    wall: f64,
+) -> f64 {
+    lats.sort();
+    let n = lats.len();
+    let pct = |p: f64| lats[(((n - 1) as f64) * p).round() as usize];
+    let qps = n as f64 / wall.max(1e-9);
+    let rows = [
+        ("p50", pct(0.50)),
+        ("p95", pct(0.95)),
+        ("p99", pct(0.99)),
+        ("ns-per-query", Duration::from_secs_f64(wall / n as f64)),
+    ];
+    for (tag, d) in rows {
+        let sample = diskpca::bench_harness::Sample {
+            name: format!("{label}/{tag}"),
+            threads: diskpca::par::threads(),
+            iters: n,
+            median: d,
+            mean: d,
+            min: d,
+            mad: Duration::ZERO,
+            gflops: None,
+        };
+        println!("{sample}");
+        b.samples.push(sample);
+    }
+    qps_rows.push((format!("{label}/qps"), qps));
+    println!("    {label}: {qps:.1} queries/s over {n} queries ({wall:.2}s wall)");
+    qps
+}
+
+fn main() {
+    let fast = std::env::var("DISKPCA_BENCH_FAST").is_ok();
+    let mut b = Bencher::new();
+    let mut qps_rows: Vec<(String, f64)> = Vec::new();
+
+    let worker_counts: &[usize] = if fast { &[4] } else { &[4, 16] };
+    let scale = if fast { 0.02 } else { 0.06 };
+    let queries_per_client = if fast { 5 } else { 25 };
+    let batch_cols = if fast { 32 } else { 128 };
+    let p = params();
+
+    for &s in worker_counts {
+        let (shards, data, kernel) = workload(scale, s);
+        let mut rng = Rng::seed_from(29);
+        let batch = Mat::from_fn(data.dim(), batch_cols, |_, _| rng.normal());
+
+        for transport in ["mem", "tcp"] {
+            let mut ratio_base = None;
+            for (mode, inflight) in [("seq", 1), ("conc", CONC_INFLIGHT)] {
+                let label = format!("qps/s={s} {transport} {mode}");
+                let (mut svc, worker_handles) = if transport == "tcp" {
+                    tcp_service(shards.clone(), kernel, inflight)
+                } else {
+                    (mem_service(shards.clone(), kernel, inflight), Vec::new())
+                };
+                // install the solution the projection queries hit, and
+                // chunk batches so query rounds actually pipeline
+                let fit = svc.run_kpca(&p).expect("fit");
+                svc.set_transform_chunk((batch_cols / 4).max(1));
+                let y = PointSet::Dense(fit.output.y.clone());
+
+                let (lats, wall) = drive(&svc, &y, &batch, queries_per_client);
+                let qps = record(&mut b, &mut qps_rows, &label, lats, wall);
+                match ratio_base {
+                    None => ratio_base = Some(qps),
+                    Some(seq_qps) => {
+                        let ratio = qps / seq_qps.max(1e-9);
+                        println!(
+                            "    s={s} {transport}: concurrent/sequential = {ratio:.2}x \
+                             (target ≥ 1.50x)"
+                        );
+                        if ratio < 1.5 {
+                            println!(
+                                "WARNING: concurrent scheduling under 1.5x sequential \
+                                 QPS (s={s} {transport}: {ratio:.2}x)"
+                            );
+                        }
+                    }
+                }
+                svc.shutdown();
+                for h in worker_handles {
+                    let _ = h.join();
+                }
+            }
+        }
+    }
+
+    b.write_csv("results/bench_qps.csv").unwrap();
+
+    // ---- latency rows + raw QPS rows into one flat JSON ----
+    let out = std::env::var("DISKPCA_BENCH_OUT").unwrap_or_else(|_| "BENCH_qps.json".into());
+    let mut pairs: Vec<(String, diskpca::json::Value)> = b
+        .samples
+        .iter()
+        .map(|s| (s.name.clone(), diskpca::json::num(s.median.as_nanos() as f64)))
+        .collect();
+    for (name, qps) in &qps_rows {
+        pairs.push((name.clone(), diskpca::json::num(*qps)));
+    }
+    let borrowed: Vec<(&str, diskpca::json::Value)> =
+        pairs.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    std::fs::write(&out, diskpca::json::write(&diskpca::json::obj(borrowed)))
+        .expect("write bench json");
+    println!("wrote {out} ({} rows)", pairs.len());
+
+    // ---- warn-only regression diff (latency rows only) ----
+    let baseline_path = std::env::var("DISKPCA_BENCH_BASELINE")
+        .unwrap_or_else(|_| "bench_baseline/BENCH_qps.json".into());
+    match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => {
+            let warnings = b.regressions_vs(&text, REGRESSION_THRESHOLD);
+            if warnings.is_empty() {
+                println!("no regressions > 25% vs {baseline_path}");
+            } else {
+                for w in &warnings {
+                    println!("WARNING: bench regression: {w}");
+                }
+                println!(
+                    "({} warning(s) vs {baseline_path}; informational only — update the baseline \
+                     by copying {out} over it when a slowdown is intended)",
+                    warnings.len()
+                );
+            }
+        }
+        Err(e) => println!("baseline {baseline_path} unavailable ({e}) — skipping diff"),
+    }
+}

@@ -68,7 +68,10 @@ fn main() {
         let shards = shards.clone();
         let be = backend.clone();
         b.bench("serve/session-cold[kpca] s=4", move || {
-            let mut svc = Service::in_process(shards.clone(), kernel, be.clone(), 0);
+            let mut svc = Service::builder(kernel)
+                .shards(shards.clone())
+                .backend(be.clone())
+                .build();
             let n = svc.run_kpca(&p).unwrap().output.num_points();
             svc.shutdown();
             black_box(n)
@@ -76,7 +79,10 @@ fn main() {
     }
 
     // ---- persistent service: cold vs warm fits ----
-    let mut svc = Service::in_process(shards.clone(), kernel, backend.clone(), 0);
+    let mut svc = Service::builder(kernel)
+        .shards(shards.clone())
+        .backend(backend.clone())
+        .build();
     svc.run_kpca(&p).unwrap(); // spin up the session
     // a fresh seed every iteration ⇒ a new EmbedSpec ⇒ full re-embed
     let mut cold_seed = 1000u64;

@@ -97,6 +97,19 @@ COMMON FLAGS
   --workers N                  override the dataset's worker count
   --jobs N                     serve: fits to run on the session (default 3)
   --transform N                serve: query points to project (default 256)
+  --max-inflight N             serve: concurrent job lanes on the scheduler
+                               (default 1 = bit-identical sequential path;
+                               env DISKPCA_MAX_INFLIGHT). Independent jobs —
+                               KRR fits, transform batches — interleave their
+                               rounds; conflicting jobs serialize FIFO
+  --queue-depth N              serve: admission-queue bound (default 32, env
+                               DISKPCA_QUEUE_DEPTH); a full queue rejects
+                               submissions with a typed error instead of
+                               stalling the front end
+  --pipeline-depth N           serve: transform super-chunks kept in flight
+                               per query batch (default 2, env
+                               DISKPCA_PIPELINE_DEPTH; results are bitwise
+                               identical for every depth)
   --embed-cache-mb N           worker/serve: embed warm-cache byte budget in
                                MiB (default 64, env DISKPCA_EMBED_CACHE_MB;
                                0 disables caching)

@@ -43,11 +43,12 @@ pub mod tcp;
 
 pub use request::{Handle, KmeansPart, KrrPart, Request};
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
-use std::sync::{Arc, Mutex, OnceLock};
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 use crate::embed::EmbedSpec;
 use crate::linalg::Mat;
@@ -457,11 +458,64 @@ impl std::error::Error for CommError {}
 /// message, or a link-failure description (hang-up, IO, decode).
 pub type ReplyEvent = (usize, Result<Message, String>);
 
-/// Why a queue wait ended without an event (internal to `collect`):
-/// the optional reply bound elapsed, or every reply sender dropped.
-enum QueueWaitError {
-    Timeout,
-    Disconnected,
+/// Granularity of pump/wait slices inside a gather: how often a
+/// blocked exchange re-checks its reply timeout and contends for the
+/// pump role. Purely an internal latency/contention knob — no
+/// protocol semantics depend on it.
+const PUMP_SLICE: Duration = Duration::from_millis(50);
+
+/// Accounting identity of one exchange, captured at issue time: the
+/// bare round label, the job-qualified label the lifetime stats see,
+/// and the per-job sink installed on the issuing handle (if any).
+/// Reply words are recorded under this context *when the reply is
+/// matched* by whichever thread is pumping the shared queue — so
+/// concurrently in-flight rounds from different jobs share the wire
+/// without ever aliasing each other's accounting rows.
+struct ExchangeCtx {
+    round: String,
+    qualified: String,
+    job: Option<CommStats>,
+}
+
+/// One outstanding request to one worker, awaiting its FIFO-matched
+/// reply.
+struct Ticket {
+    id: u64,
+    ctx: Arc<ExchangeCtx>,
+}
+
+/// A resolved-but-failed ticket: the worker to blame plus the detail.
+struct MuxFail {
+    worker: usize,
+    detail: String,
+}
+
+/// Reply-multiplexer state shared by every handle onto one star.
+///
+/// Workers answer requests strictly in arrival order on both
+/// transports (a worker is one sequential recv→handle→send loop), so
+/// per-worker FIFO ticket queues are sound: the next reply from
+/// worker w always answers the front ticket of `fifo[w]`, no matter
+/// which exchange — or which [`Cluster::lane`] — issued it.
+struct MuxState {
+    /// Per-worker queues of outstanding tickets, in wire order.
+    fifo: Vec<VecDeque<Ticket>>,
+    /// Resolved tickets not yet claimed by their issuing exchange.
+    done: HashMap<u64, Result<Message, MuxFail>>,
+    /// Link-failure detail per worker slot, set when a hang-up marker
+    /// surfaces; cleared by [`Cluster::install_link`].
+    dead: Vec<Option<String>>,
+    /// Leader–follower flag: at most one waiter drains the shared
+    /// reply queue at a time; the others sleep on the condvar.
+    pumping: bool,
+    next_ticket: u64,
+    /// Bumps on every processed reply event — what the reply timeout
+    /// treats as liveness (any traffic resets the clock, matching the
+    /// old per-event `recv_timeout` bound).
+    events: u64,
+    /// Round label of the first mid-gather abort; once set, new
+    /// exchanges refuse with [`CommError::Poisoned`].
+    poisoned: Option<String>,
 }
 
 /// A request payload prepared once and shared across links.
@@ -719,25 +773,54 @@ pub struct Star {
 /// assert_eq!(cluster.stats.total_words(), 6);
 /// ```
 pub struct Cluster {
-    /// Send links, one per worker slot. Behind a mutex so a recovery
-    /// driver can swap a dead worker's link for a revived one
-    /// ([`Cluster::install_link`]) without tearing the cluster down.
-    links: Mutex<Vec<Box<dyn WorkerLink>>>,
+    core: Arc<ClusterCore>,
+    /// Lifetime word counters — shared by every [`Cluster::lane`].
     pub stats: CommStats,
+    /// This handle's round label, job prefix and per-job sink.
+    lane: Mutex<LaneState>,
+    /// Only the primary handle (the one [`Cluster::new`] returned)
+    /// quits the workers on drop; lanes never do.
+    owns_shutdown: bool,
+}
+
+/// Per-handle round labeling (see [`Cluster::lane`]).
+struct LaneState {
     /// Current protocol-round label applied to accounting.
-    round: Arc<Mutex<String>>,
+    round: String,
     /// Job-namespace prefix prepended to every round label in the
-    /// lifetime `stats` (and in error context) — the serve layer sets
+    /// lifetime stats (and in error context) — the serve layer sets
     /// `"job3:"` so two jobs on one cluster can never alias each
     /// other's accounting rows. Empty (the default) is a no-op.
-    round_prefix: Mutex<String>,
+    prefix: String,
     /// Optional per-job stats sink: when set, every exchange is
     /// *also* recorded here under the bare (unprefixed) round label,
     /// so a job's table is directly comparable to a fresh
     /// single-job cluster's.
-    job_stats: Mutex<Option<CommStats>>,
+    job: Option<CommStats>,
+}
+
+impl Default for LaneState {
+    fn default() -> Self {
+        Self { round: "init".into(), prefix: String::new(), job: None }
+    }
+}
+
+/// State shared by the primary [`Cluster`] handle and every lane: the
+/// links, the lifetime stats, the reply multiplexer, the timeout.
+struct ClusterCore {
+    /// Send links, one per worker slot. Behind a mutex so a recovery
+    /// driver can swap a dead worker's link for a revived one
+    /// ([`Cluster::install_link`]) without tearing the cluster down.
+    /// Held across a whole exchange fan-out, so ticket registration
+    /// order always equals wire order on every worker.
+    links: Mutex<Vec<Box<dyn WorkerLink>>>,
+    workers: usize,
+    stats: CommStats,
+    state: Mutex<MuxState>,
+    cv: Condvar,
     /// Shared completion-order reply queue (all transports feed it).
-    replies: Mutex<Receiver<ReplyEvent>>,
+    /// Locked only by the current pump and by [`Cluster::settle`].
+    rx: Mutex<Receiver<ReplyEvent>>,
     /// Optional per-reply wait bound. `None` (the default) waits
     /// indefinitely — dead links are already detected promptly via
     /// hang-up markers, and legitimate streaming rounds over huge
@@ -745,14 +828,240 @@ pub struct Cluster {
     /// environments that prefer a hard abort
     /// (`DISKPCA_COMM_TIMEOUT_SECS` / [`Cluster::set_reply_timeout`]).
     timeout: Mutex<Option<Duration>>,
-    /// Set to the round label of the first mid-gather abort
-    /// (`Link`/`Timeout` raised inside a gather): undrained replies
-    /// could be misattributed to later rounds, so further exchanges
-    /// refuse with [`CommError::Poisoned`].
-    poisoned: Mutex<Option<String>>,
     /// Set once `Quit` has been fanned out (by [`Cluster::shutdown`]
     /// or the drop guard).
     shut: AtomicBool,
+}
+
+impl ClusterCore {
+    /// Record one message into the lifetime stats (qualified label)
+    /// and the issuing exchange's per-job sink, when set (bare label).
+    fn record(&self, ctx: &ExchangeCtx, to_master: bool, words: usize) {
+        self.stats.record(&ctx.qualified, to_master, words);
+        if let Some(job) = &ctx.job {
+            job.record(&ctx.round, to_master, words);
+        }
+    }
+
+    /// Mark the cluster unusable after a mid-gather abort (first
+    /// poisoner's round label wins).
+    fn poison_mark(st: &mut MuxState, round: &str) {
+        if st.poisoned.is_none() {
+            st.poisoned = Some(round.to_string());
+        }
+    }
+
+    /// Refuse new exchanges once a gather has been aborted mid-round.
+    fn check_usable(&self) -> Result<(), CommError> {
+        match self.state.lock().unwrap().poisoned.clone() {
+            Some(round) => Err(CommError::Poisoned { round }),
+            None => Ok(()),
+        }
+    }
+
+    /// Round label to poison under when an event can't be tied to an
+    /// exchange: the oldest outstanding ticket's, if any.
+    fn front_round(st: &MuxState) -> String {
+        st.fifo
+            .iter()
+            .filter_map(|q| q.front())
+            .map(|t| t.ctx.qualified.clone())
+            .next()
+            .unwrap_or_else(|| "mux".into())
+    }
+
+    /// Resolve every outstanding ticket as a link failure. `blame`
+    /// names the worker at fault; `None` blames each ticket's own
+    /// worker (the transport itself died, not one peer).
+    fn fail_all(st: &mut MuxState, blame: Option<usize>, detail: &str) {
+        for w in 0..st.fifo.len() {
+            let drained: Vec<Ticket> = st.fifo[w].drain(..).collect();
+            for t in drained {
+                st.done.insert(
+                    t.id,
+                    Err(MuxFail { worker: blame.unwrap_or(w), detail: detail.to_string() }),
+                );
+            }
+        }
+    }
+
+    /// Drain at most one event off the shared reply queue and fold it
+    /// into the mux state. The caller set `pumping` under the state
+    /// lock; this clears it and wakes every waiter. Lock order is
+    /// rx → state (no path takes state → rx), so the pump never
+    /// deadlocks against senders, which take links → state.
+    fn pump_slice(&self) {
+        let event = {
+            let rx = self.rx.lock().unwrap();
+            rx.recv_timeout(PUMP_SLICE)
+        };
+        let mut st = self.state.lock().unwrap();
+        st.pumping = false;
+        match event {
+            Ok((w, Ok(msg))) => {
+                st.events += 1;
+                match st.fifo.get_mut(w).and_then(|q| q.pop_front()) {
+                    Some(t) => {
+                        self.record(&t.ctx, true, msg.words());
+                        st.done.insert(t.id, Ok(msg));
+                    }
+                    None => {
+                        // No outstanding request on this worker: the
+                        // FIFO invariant is broken (a stale reply from
+                        // an un-settled abort, or a protocol bug) —
+                        // nothing can be attributed safely any more.
+                        let round = Self::front_round(&st);
+                        Self::poison_mark(&mut st, &round);
+                        let detail = format!("unsolicited {} reply", msg.tag());
+                        Self::fail_all(&mut st, Some(w), &detail);
+                    }
+                }
+            }
+            Ok((w, Err(detail))) => {
+                // Hang-up marker: the worker died. Fail its pending
+                // tickets and flag the slot so new sends refuse fast.
+                st.events += 1;
+                let round = st
+                    .fifo
+                    .get(w)
+                    .and_then(|q| q.front())
+                    .map(|t| t.ctx.qualified.clone())
+                    .unwrap_or_else(|| Self::front_round(&st));
+                Self::poison_mark(&mut st, &round);
+                if let Some(slot) = st.dead.get_mut(w) {
+                    *slot = Some(detail.clone());
+                }
+                let drained: Vec<Ticket> = match st.fifo.get_mut(w) {
+                    Some(q) => q.drain(..).collect(),
+                    None => Vec::new(),
+                };
+                for t in drained {
+                    st.done.insert(t.id, Err(MuxFail { worker: w, detail: detail.clone() }));
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                // Every reply sender is gone: the transport itself
+                // died, not the clock — fail each pending ticket as a
+                // link error on its own worker.
+                let any_pending = st.fifo.iter().any(|q| !q.is_empty());
+                if any_pending {
+                    st.events += 1;
+                    let round = Self::front_round(&st);
+                    Self::poison_mark(&mut st, &round);
+                    Self::fail_all(&mut st, None, "reply queue disconnected (all workers gone)");
+                }
+            }
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Wait until every ticket of one exchange resolves, claiming
+    /// results as they land. Whoever needs a reply pumps the shared
+    /// queue when nobody else is (leader–follower), so any number of
+    /// exchanges can be in flight with no dedicated reader thread.
+    fn await_exchange(
+        &self,
+        tickets: &[(usize, u64)],
+        ctx: &ExchangeCtx,
+    ) -> Result<Vec<Message>, CommError> {
+        let bound = *self.timeout.lock().unwrap();
+        let mut out: Vec<Option<Message>> = tickets.iter().map(|_| None).collect();
+        let mut remaining = tickets.len();
+        let mut st = self.state.lock().unwrap();
+        let mut last_events = st.events;
+        let mut last_progress = Instant::now();
+        loop {
+            for (slot, &(_, id)) in tickets.iter().enumerate() {
+                if out[slot].is_some() {
+                    continue;
+                }
+                match st.done.remove(&id) {
+                    None => {}
+                    Some(Ok(msg)) => {
+                        out[slot] = Some(msg);
+                        remaining -= 1;
+                    }
+                    Some(Err(fail)) => {
+                        // Mid-gather abort: this exchange's unclaimed
+                        // replies stay behind for settle() to clear.
+                        Self::poison_mark(&mut st, &ctx.qualified);
+                        drop(st);
+                        return Err(CommError::Link {
+                            worker: fail.worker,
+                            round: ctx.qualified.clone(),
+                            detail: fail.detail,
+                        });
+                    }
+                }
+            }
+            if remaining == 0 {
+                drop(st);
+                return Ok(out.into_iter().map(|m| m.expect("all tickets claimed")).collect());
+            }
+            if st.events != last_events {
+                last_events = st.events;
+                last_progress = Instant::now();
+            }
+            if let Some(bound) = bound {
+                if last_progress.elapsed() >= bound {
+                    let pending: Vec<usize> = tickets
+                        .iter()
+                        .enumerate()
+                        .filter(|&(slot, _)| out[slot].is_none())
+                        .map(|(_, &(w, _))| w)
+                        .collect();
+                    Self::poison_mark(&mut st, &ctx.qualified);
+                    drop(st);
+                    return Err(CommError::Timeout { round: ctx.qualified.clone(), pending });
+                }
+            }
+            if st.pumping {
+                let (guard, _) = self.cv.wait_timeout(st, PUMP_SLICE).unwrap();
+                st = guard;
+            } else {
+                st.pumping = true;
+                drop(st);
+                self.pump_slice();
+                st = self.state.lock().unwrap();
+            }
+        }
+    }
+
+    /// Fan `Quit` out to every still-reachable worker (idempotent),
+    /// recording under the calling handle's labels.
+    fn shutdown(&self, ctx: &ExchangeCtx) {
+        if self.shut.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let payload = Payload::new(Message::Quit);
+        for link in self.links.lock().unwrap().iter() {
+            if link.send(&payload).is_ok() {
+                self.record(ctx, false, payload.words());
+            }
+        }
+    }
+}
+
+/// A typed exchange in flight: tickets registered and requests on the
+/// wire, replies not yet awaited. Produced by
+/// [`Cluster::scatter_begin`], consumed by [`Cluster::finish_scatter`].
+pub struct Inflight<R: Request> {
+    tickets: Vec<(usize, u64)>,
+    ctx: Arc<ExchangeCtx>,
+    _req: PhantomData<fn() -> R>,
+}
+
+impl<R: Request> Inflight<R> {
+    /// Number of replies this exchange is still owed.
+    pub fn len(&self) -> usize {
+        self.tickets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tickets.is_empty()
+    }
 }
 
 impl Cluster {
@@ -762,43 +1071,70 @@ impl Cluster {
             Ok(t) => t,
             Err(msg) => panic!("config {msg}"),
         };
-        Self {
+        let workers = star.links.len();
+        let core = ClusterCore {
             links: Mutex::new(star.links),
-            stats,
-            round: Arc::new(Mutex::new("init".into())),
-            round_prefix: Mutex::new(String::new()),
-            job_stats: Mutex::new(None),
-            replies: Mutex::new(star.replies),
+            workers,
+            stats: stats.clone(),
+            state: Mutex::new(MuxState {
+                fifo: (0..workers).map(|_| VecDeque::new()).collect(),
+                done: HashMap::new(),
+                dead: vec![None; workers],
+                pumping: false,
+                next_ticket: 0,
+                events: 0,
+                poisoned: None,
+            }),
+            cv: Condvar::new(),
+            rx: Mutex::new(star.replies),
             timeout: Mutex::new(timeout),
-            poisoned: Mutex::new(None),
             shut: AtomicBool::new(false),
+        };
+        Self {
+            core: Arc::new(core),
+            stats,
+            lane: Mutex::new(LaneState::default()),
+            owns_shutdown: true,
+        }
+    }
+
+    /// A second, independently-labelled handle onto the same star: it
+    /// shares the links, the reply multiplexer, the lifetime stats and
+    /// the timeout, but carries its own round label, job prefix and
+    /// per-job sink. Exchanges from any number of lanes may be in
+    /// flight at once — replies are matched per-worker FIFO and words
+    /// are recorded under the issuing lane's labels — which is what
+    /// lets the serve scheduler interleave rounds of independent jobs
+    /// on one cluster. Dropping a lane never quits the workers; only
+    /// the primary handle's drop (or [`Cluster::shutdown`]) does.
+    pub fn lane(&self) -> Cluster {
+        Cluster {
+            core: Arc::clone(&self.core),
+            stats: self.stats.clone(),
+            lane: Mutex::new(LaneState::default()),
+            owns_shutdown: false,
         }
     }
 
     pub fn num_workers(&self) -> usize {
-        self.links.lock().unwrap().len()
+        self.core.workers
     }
 
     pub fn set_round(&self, name: &str) {
-        *self.round.lock().unwrap() = name.to_string();
-    }
-
-    /// Bare (unprefixed) label of the current round.
-    fn round(&self) -> String {
-        self.round.lock().unwrap().clone()
+        self.lane.lock().unwrap().round = name.to_string();
     }
 
     /// Set the job-namespace prefix applied to every subsequent round
     /// label in the lifetime stats and in error context (`""` clears).
     pub fn set_round_prefix(&self, prefix: &str) {
-        *self.round_prefix.lock().unwrap() = prefix.to_string();
+        self.lane.lock().unwrap().prefix = prefix.to_string();
     }
 
     /// Install (or clear) a per-job stats sink: exchanges are recorded
     /// there under bare round labels in addition to the lifetime
     /// [`Cluster::stats`].
     pub fn set_job_stats(&self, stats: Option<CommStats>) {
-        *self.job_stats.lock().unwrap() = stats;
+        self.lane.lock().unwrap().job = stats;
     }
 
     /// Handle on the per-job sink currently installed, if any
@@ -806,26 +1142,20 @@ impl Cluster {
     /// alongside the lifetime stats so a replayed unit leaves per-job
     /// tables bit-identical too.
     pub fn job_stats(&self) -> Option<CommStats> {
-        self.job_stats.lock().unwrap().clone()
+        self.lane.lock().unwrap().job.clone()
     }
 
-    /// `prefix + round` — the label the lifetime stats and errors see.
-    fn qualify(&self, round: &str) -> String {
-        let prefix = self.round_prefix.lock().unwrap();
-        if prefix.is_empty() {
-            round.to_string()
+    /// Snapshot this handle's labels into the context one exchange
+    /// carries for its whole life (label changes on the handle never
+    /// retroactively relabel an in-flight exchange).
+    fn exchange_ctx(&self) -> Arc<ExchangeCtx> {
+        let lane = self.lane.lock().unwrap();
+        let qualified = if lane.prefix.is_empty() {
+            lane.round.clone()
         } else {
-            format!("{prefix}{round}")
-        }
-    }
-
-    /// Record one message into the lifetime stats (prefixed label) and
-    /// the per-job sink, when set (bare label).
-    fn record(&self, round: &str, to_master: bool, words: usize) {
-        self.stats.record(&self.qualify(round), to_master, words);
-        if let Some(job) = self.job_stats.lock().unwrap().as_ref() {
-            job.record(round, to_master, words);
-        }
+            format!("{}{}", lane.prefix, lane.round)
+        };
+        Arc::new(ExchangeCtx { round: lane.round.clone(), qualified, job: lane.job.clone() })
     }
 
     /// Label the upcoming exchanges with a round name and get a scoped
@@ -835,47 +1165,21 @@ impl Cluster {
         Session { cluster: self }
     }
 
-    /// Bound how long a gather waits for any single reply event. The
-    /// default is no bound (see the `timeout` field docs);
+    /// Bound how long a gather waits without any reply event arriving.
+    /// The default is no bound (see the `timeout` field docs);
     /// `DISKPCA_COMM_TIMEOUT_SECS` is the environment equivalent.
     pub fn set_reply_timeout(&self, timeout: Duration) {
-        *self.timeout.lock().unwrap() = Some(timeout);
-    }
-
-    /// Mark the cluster unusable after a mid-gather abort and pass
-    /// the error through.
-    fn poison(&self, err: CommError) -> CommError {
-        let mut poisoned = self.poisoned.lock().unwrap();
-        if poisoned.is_none() {
-            *poisoned = Some(err.round().to_string());
-        }
-        err
-    }
-
-    /// Refuse new exchanges once a gather has been aborted mid-round.
-    fn check_usable(&self) -> Result<(), CommError> {
-        match self.poisoned.lock().unwrap().clone() {
-            Some(round) => Err(CommError::Poisoned { round }),
-            None => Ok(()),
-        }
-    }
-
-    fn send_payload(&self, worker: usize, payload: &Payload, round: &str) -> Result<(), CommError> {
-        self.links.lock().unwrap()[worker].send(payload).map_err(|detail| {
-            // a partially-sent round leaves the other workers' replies
-            // undrained, exactly like a mid-gather abort
-            self.poison(CommError::Link { worker, round: self.qualify(round), detail })
-        })?;
-        self.record(round, false, payload.words());
-        Ok(())
+        *self.core.timeout.lock().unwrap() = Some(timeout);
     }
 
     /// Replace the send link of one worker slot with a revived one —
     /// the recovery driver's re-attach point. The slot keeps its
     /// index, shard assignment and per-slot seeds, which is what makes
-    /// a replayed round bit-identical to the fault-free run.
+    /// a replayed round bit-identical to the fault-free run. Clears
+    /// the slot's dead flag.
     pub fn install_link(&self, worker: usize, link: Box<dyn WorkerLink>) {
-        self.links.lock().unwrap()[worker] = link;
+        self.core.links.lock().unwrap()[worker] = link;
+        self.core.state.lock().unwrap().dead[worker] = None;
     }
 
     /// Clear the poisoned flag after a recovery has quiesced the reply
@@ -884,7 +1188,7 @@ impl Cluster {
     /// replies still in flight re-creates the misattribution hazard
     /// the flag exists to prevent.
     pub fn unpoison(&self) {
-        *self.poisoned.lock().unwrap() = None;
+        self.core.state.lock().unwrap().poisoned = None;
     }
 
     /// Best-effort `Quit` to a single worker (e.g. one being replaced
@@ -892,188 +1196,199 @@ impl Cluster {
     /// stats — recovery traffic is erased by snapshot/restore anyway.
     pub fn quit_worker(&self, worker: usize) {
         let payload = Payload::new(Message::Quit);
-        let _ = self.links.lock().unwrap()[worker].send(&payload);
+        let _ = self.core.links.lock().unwrap()[worker].send(&payload);
     }
 
     /// Drain the reply queue until it stays quiet for `grace`,
     /// discarding stale replies from an aborted round, and return the
-    /// workers whose hang-up markers surfaced while draining (newly
-    /// discovered dead workers the recovery must also revive). Workers
-    /// are deterministic, so a stale reply is bit-identical to the one
-    /// a replay would produce — but it must still be consumed here or
-    /// it would desynchronize the completion-order queue.
+    /// workers whose hang-up markers surfaced while draining — plus
+    /// any slots the multiplexer already flagged dead (markers it
+    /// consumed mid-gather) that no [`Cluster::install_link`] has
+    /// cleared. Workers are deterministic, so a stale reply is
+    /// bit-identical to the one a replay would produce — but it must
+    /// still be consumed here or it would desynchronize the
+    /// FIFO-matched reply queue; the mux's resolved-but-unclaimed
+    /// tickets are cleared for the same reason.
     pub fn settle(&self, grace: Duration) -> Vec<usize> {
-        let rx = self.replies.lock().unwrap();
         let mut dead = Vec::new();
-        while let Ok((worker, event)) = rx.recv_timeout(grace) {
-            if event.is_err() && !dead.contains(&worker) {
-                dead.push(worker);
+        {
+            let rx = self.core.rx.lock().unwrap();
+            while let Ok((worker, event)) = rx.recv_timeout(grace) {
+                if event.is_err() && !dead.contains(&worker) {
+                    dead.push(worker);
+                }
             }
         }
+        let mut st = self.core.state.lock().unwrap();
+        for (w, flag) in st.dead.iter().enumerate() {
+            if flag.is_some() && !dead.contains(&w) {
+                dead.push(w);
+            }
+        }
+        for q in &mut st.fifo {
+            q.clear();
+        }
+        st.done.clear();
         dead
     }
 
-    /// Pop replies for `pending` (a list of worker indices) off the
-    /// shared queue in completion order, account each as it arrives,
-    /// and return them reduced into `pending`'s order.
-    fn collect(&self, pending: &[usize]) -> Result<Vec<Message>, CommError> {
-        let round = self.round();
-        let full = self.qualify(&round);
-        let timeout = *self.timeout.lock().unwrap();
-        let mut slot_of = vec![None; self.num_workers()];
-        for (slot, &w) in pending.iter().enumerate() {
-            slot_of[w] = Some(slot);
-        }
-        let mut out: Vec<Option<Message>> = pending.iter().map(|_| None).collect();
-        let mut remaining = pending.len();
-        let rx = self.replies.lock().unwrap();
-        while remaining > 0 {
-            let popped = match timeout {
-                Some(bound) => rx.recv_timeout(bound).map_err(|e| match e {
-                    RecvTimeoutError::Timeout => QueueWaitError::Timeout,
-                    RecvTimeoutError::Disconnected => QueueWaitError::Disconnected,
-                }),
-                None => rx.recv().map_err(|_| QueueWaitError::Disconnected),
-            };
-            let (worker, event) = match popped {
-                Ok(ev) => ev,
-                Err(e) => {
-                    let still: Vec<usize> = pending
-                        .iter()
-                        .enumerate()
-                        .filter(|&(slot, _)| out[slot].is_none())
-                        .map(|(_, &w)| w)
-                        .collect();
-                    return Err(self.poison(match e {
-                        QueueWaitError::Timeout => {
-                            CommError::Timeout { round: full, pending: still }
-                        }
-                        // Every reply sender is gone: the transport
-                        // itself died, not the clock — report a link
-                        // failure on the first worker still owing a
-                        // reply, not a timeout.
-                        QueueWaitError::Disconnected => CommError::Link {
-                            worker: still.first().copied().unwrap_or(0),
-                            round: full,
-                            detail: "reply queue disconnected (all workers gone)".into(),
-                        },
-                    }));
-                }
-            };
-            let msg = event.map_err(|detail| {
-                self.poison(CommError::Link { worker, round: full.clone(), detail })
-            })?;
-            self.record(&round, true, msg.words());
-            let slot = slot_of.get(worker).copied().flatten().ok_or_else(|| {
-                self.poison(CommError::Link {
-                    worker,
-                    round: full.clone(),
-                    detail: format!("unsolicited {} reply", msg.tag()),
-                })
-            })?;
-            if out[slot].replace(msg).is_some() {
-                return Err(self.poison(CommError::Link {
-                    worker,
-                    round: full,
-                    detail: "duplicate reply in one round".into(),
-                }));
+    /// Register a ticket for `worker` and ship the payload. The caller
+    /// holds the links lock across its whole fan-out, so concurrent
+    /// exchanges can never interleave registration and wire order on
+    /// any single worker — the invariant FIFO reply matching rests on.
+    fn send_one(
+        &self,
+        links: &[Box<dyn WorkerLink>],
+        worker: usize,
+        payload: &Payload,
+        ctx: &Arc<ExchangeCtx>,
+    ) -> Result<u64, CommError> {
+        let id = {
+            let mut st = self.core.state.lock().unwrap();
+            if let Some(detail) = st.dead[worker].clone() {
+                ClusterCore::poison_mark(&mut st, &ctx.qualified);
+                return Err(CommError::Link { worker, round: ctx.qualified.clone(), detail });
             }
-            remaining -= 1;
+            let id = st.next_ticket;
+            st.next_ticket += 1;
+            st.fifo[worker].push_back(Ticket { id, ctx: Arc::clone(ctx) });
+            id
+        };
+        if let Err(detail) = links[worker].send(payload) {
+            // a partially-sent round leaves the other workers' replies
+            // undrained, exactly like a mid-gather abort
+            let mut st = self.core.state.lock().unwrap();
+            if let Some(pos) = st.fifo[worker].iter().position(|t| t.id == id) {
+                st.fifo[worker].remove(pos);
+            }
+            ClusterCore::poison_mark(&mut st, &ctx.qualified);
+            return Err(CommError::Link { worker, round: ctx.qualified.clone(), detail });
         }
-        Ok(out.into_iter().map(|m| m.expect("all slots filled")).collect())
+        self.core.record(ctx, false, payload.words());
+        Ok(id)
     }
 
-    fn parse<R: Request>(&self, worker: usize, msg: Message) -> Result<R::Response, CommError> {
+    fn parse<R: Request>(
+        ctx: &ExchangeCtx,
+        worker: usize,
+        msg: Message,
+    ) -> Result<R::Response, CommError> {
         if let Message::RespError(detail) = msg {
-            return Err(CommError::Worker { worker, round: self.qualify(&self.round()), detail });
+            return Err(CommError::Worker { worker, round: ctx.qualified.clone(), detail });
         }
         let got = msg.tag();
         R::decode(msg).map_err(|_| CommError::Mismatch {
             worker,
-            round: self.qualify(&self.round()),
+            round: ctx.qualified.clone(),
             expected: R::EXPECTS,
             got,
         })
     }
 
     /// Send one typed request to one worker and await its reply.
-    /// Must not overlap another outstanding exchange.
+    /// May overlap exchanges issued from other lanes or via
+    /// [`Cluster::scatter_begin`] — replies are FIFO-matched per
+    /// worker.
     pub fn call<R: Request>(&self, worker: usize, req: R) -> Result<R::Response, CommError> {
-        self.check_usable()?;
-        let round = self.round();
+        self.core.check_usable()?;
+        let ctx = self.exchange_ctx();
         let payload = Payload::new(req.into_message());
-        self.send_payload(worker, &payload, &round)?;
+        let id = {
+            let links = self.core.links.lock().unwrap();
+            self.send_one(&links, worker, &payload, &ctx)?
+        };
         // Drop the master's strong ref before waiting so the worker's
         // `Arc::try_unwrap` takes the zero-copy path.
         drop(payload);
-        let mut msgs = self.collect(&[worker])?;
-        self.parse::<R>(worker, msgs.remove(0))
+        let inflight = Inflight::<R> { tickets: vec![(worker, id)], ctx, _req: PhantomData };
+        let mut out = self.finish_scatter(inflight)?;
+        Ok(out.remove(0))
     }
 
     /// Send the same typed request to every worker (encode-once) and
     /// return the replies in worker order.
     pub fn broadcast<R: Request>(&self, req: R) -> Result<Vec<R::Response>, CommError> {
-        self.check_usable()?;
-        let round = self.round();
+        self.core.check_usable()?;
+        let ctx = self.exchange_ctx();
         let payload = Payload::new(req.into_message());
-        let s = self.num_workers();
-        for w in 0..s {
-            self.send_payload(w, &payload, &round)?;
+        let s = self.core.workers;
+        let mut tickets = Vec::with_capacity(s);
+        {
+            let links = self.core.links.lock().unwrap();
+            for w in 0..s {
+                tickets.push((w, self.send_one(&links, w, &payload, &ctx)?));
+            }
         }
         // Release the master's strong ref before blocking on replies:
         // the last in-memory receiver then owns the message outright
         // (`Arc::try_unwrap`) instead of deep-cloning it.
         drop(payload);
-        let pending: Vec<usize> = (0..s).collect();
-        self.collect(&pending)?
-            .into_iter()
-            .enumerate()
-            .map(|(w, m)| self.parse::<R>(w, m))
-            .collect()
+        self.finish_scatter(Inflight::<R> { tickets, ctx, _req: PhantomData })
     }
 
     /// Send worker-specific requests (`reqs[i]` → worker i; the Alg.
     /// 1/2/3 per-worker-seed rounds) and return replies in worker
     /// order.
     pub fn scatter<R: Request>(&self, reqs: Vec<R>) -> Result<Vec<R::Response>, CommError> {
-        self.check_usable()?;
-        let s = self.num_workers();
+        let inflight = self.scatter_begin(reqs)?;
+        self.finish_scatter(inflight)
+    }
+
+    /// Issue a scatter without waiting for the replies — the pipelined
+    /// half of [`Cluster::scatter`]. Any number of exchanges may be in
+    /// flight on one cluster (from this handle or any lane); complete
+    /// each with [`Cluster::finish_scatter`]. Requests are delivered
+    /// and answered per-worker FIFO, so finishing in issue order is
+    /// deadlock-free and the results are independent of completion
+    /// order — this is what lets the serve layer keep a worker's
+    /// chunk I/O for query batch n overlapped with the master-side
+    /// assembly of batch n−1.
+    pub fn scatter_begin<R: Request>(&self, reqs: Vec<R>) -> Result<Inflight<R>, CommError> {
+        self.core.check_usable()?;
+        let s = self.core.workers;
         assert_eq!(reqs.len(), s, "one request per worker");
-        let round = self.round();
+        let ctx = self.exchange_ctx();
+        let mut tickets = Vec::with_capacity(s);
+        let links = self.core.links.lock().unwrap();
         for (w, req) in reqs.into_iter().enumerate() {
             let payload = Payload::new(req.into_message());
-            self.send_payload(w, &payload, &round)?;
+            tickets.push((w, self.send_one(&links, w, &payload, &ctx)?));
         }
-        let pending: Vec<usize> = (0..s).collect();
-        self.collect(&pending)?
-            .into_iter()
-            .enumerate()
-            .map(|(w, m)| self.parse::<R>(w, m))
+        drop(links);
+        Ok(Inflight { tickets, ctx, _req: PhantomData })
+    }
+
+    /// Await, account and type-check the replies of a
+    /// [`Cluster::scatter_begin`] exchange, in worker order.
+    pub fn finish_scatter<R: Request>(
+        &self,
+        inflight: Inflight<R>,
+    ) -> Result<Vec<R::Response>, CommError> {
+        let Inflight { tickets, ctx, .. } = inflight;
+        let msgs = self.core.await_exchange(&tickets, &ctx)?;
+        msgs.into_iter()
+            .zip(&tickets)
+            .map(|(m, &(w, _))| Self::parse::<R>(&ctx, w, m))
             .collect()
     }
 
     /// Shut down all workers (best-effort, idempotent — links whose
-    /// worker already died are skipped, not fatal).
+    /// worker already died are skipped, not fatal). Any handle may
+    /// call this; the Quit words are recorded under its labels.
     pub fn shutdown(&self) {
-        if self.shut.swap(true, Ordering::SeqCst) {
-            return;
-        }
-        let payload = Payload::new(Message::Quit);
-        let round = self.round();
-        for link in self.links.lock().unwrap().iter() {
-            if link.send(&payload).is_ok() {
-                self.record(&round, false, payload.words());
-            }
-        }
+        self.core.shutdown(&self.exchange_ctx());
     }
 }
 
 impl Drop for Cluster {
     /// Release workers even on an early error return — the drop guard
     /// makes `Quit` reach every still-connected worker when a driver
-    /// aborts a round with `?`.
+    /// aborts a round with `?`. Lanes ([`Cluster::lane`]) skip this:
+    /// their drop is label-state only.
     fn drop(&mut self) {
-        self.shutdown();
+        if self.owns_shutdown {
+            self.core.shutdown(&self.exchange_ctx());
+        }
     }
 }
 
@@ -1373,6 +1688,103 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+        cluster.shutdown();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn lanes_interleave_exchanges_with_per_job_accounting() {
+        let (star, endpoints) = memory::star(2);
+        let workers: Vec<_> = endpoints
+            .into_iter()
+            .map(|ep| {
+                std::thread::spawn(move || loop {
+                    match ep.recv() {
+                        Ok(Message::Quit) | Err(_) => break,
+                        Ok(Message::ReqCount) => ep.send(Message::RespCount(2)).unwrap(),
+                        Ok(_) => ep.send(Message::Ack).unwrap(),
+                    }
+                })
+            })
+            .collect();
+        let cluster = Cluster::new(star, CommStats::new());
+        let lane = cluster.lane();
+        let sink_a = CommStats::new();
+        let sink_b = CommStats::new();
+        cluster.set_round_prefix("jobA:");
+        cluster.set_job_stats(Some(sink_a.clone()));
+        cluster.set_round("count");
+        lane.set_round_prefix("jobB:");
+        lane.set_job_stats(Some(sink_b.clone()));
+        lane.set_round("count");
+        // Two jobs hammer the same wire concurrently; FIFO matching
+        // must route every reply to the exchange that asked for it.
+        std::thread::scope(|scope| {
+            let a = scope.spawn(|| {
+                for _ in 0..20 {
+                    assert_eq!(cluster.broadcast(request::Count).unwrap(), vec![2, 2]);
+                }
+            });
+            let b = scope.spawn(|| {
+                for _ in 0..20 {
+                    assert_eq!(lane.broadcast(request::Count).unwrap(), vec![2, 2]);
+                }
+            });
+            a.join().unwrap();
+            b.join().unwrap();
+        });
+        // 20 broadcasts × 2 workers × (1-word req + 1-word reply) each
+        assert_eq!(cluster.stats.round_words("jobA:count"), 80);
+        assert_eq!(cluster.stats.round_words("jobB:count"), 80);
+        assert_eq!(sink_a.round_words("count"), 80);
+        assert_eq!(sink_b.round_words("count"), 80);
+        cluster.shutdown();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn pipelined_scatters_finish_in_issue_order() {
+        use std::time::Duration;
+        let (star, endpoints) = memory::star(2);
+        let workers: Vec<_> = endpoints
+            .into_iter()
+            .enumerate()
+            .map(|(i, ep)| {
+                std::thread::spawn(move || {
+                    let mut served = 0usize;
+                    loop {
+                        match ep.recv() {
+                            Ok(Message::Quit) | Err(_) => break,
+                            Ok(Message::ReqCount) => {
+                                // worker 0 answers late: replies from the
+                                // two in-flight scatters arrive out of
+                                // global order, but FIFO matching still
+                                // hands each scatter its own replies.
+                                if i == 0 && served == 0 {
+                                    std::thread::sleep(Duration::from_millis(40));
+                                }
+                                ep.send(Message::RespCount(10 * i + served)).unwrap();
+                                served += 1;
+                            }
+                            Ok(_) => ep.send(Message::Ack).unwrap(),
+                        }
+                    }
+                })
+            })
+            .collect();
+        let cluster = Cluster::new(star, CommStats::new());
+        cluster.set_round("pipe");
+        let first = cluster.scatter_begin(vec![request::Count, request::Count]).unwrap();
+        let second = cluster.scatter_begin(vec![request::Count, request::Count]).unwrap();
+        assert_eq!(first.len(), 2);
+        assert_eq!(cluster.finish_scatter(first).unwrap(), vec![0, 10]);
+        assert_eq!(cluster.finish_scatter(second).unwrap(), vec![1, 11]);
+        // 4 one-word requests + 4 one-word replies, one round label
+        assert_eq!(cluster.stats.round_words("pipe"), 8);
         cluster.shutdown();
         for w in workers {
             w.join().unwrap();

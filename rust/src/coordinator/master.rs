@@ -8,8 +8,10 @@
 //! hang-up, a mismatched reply — aborts the round with the worker
 //! index and round label attached instead of panicking the master.
 
+use std::collections::VecDeque;
+
 use crate::comm::request as rq;
-use crate::comm::{Cluster, CommError, PointSet};
+use crate::comm::{Cluster, CommError, Inflight, PointSet};
 use crate::embed::EmbedSpec;
 use crate::kernels::{gram, Kernel};
 use crate::linalg::{chol_psd, qr_r_only, solve_upper, top_k_left_singular, Mat};
@@ -490,6 +492,71 @@ pub fn dis_eval(cluster: &Cluster) -> Result<(f64, f64), CommError> {
 /// runtime an s-machine cluster would see).
 pub fn dis_busy_times(cluster: &Cluster) -> Result<Vec<f64>, CommError> {
     cluster.session("8-stats").broadcast(rq::BusyTime)
+}
+
+/// Project a batch of new points (d×n, columns are points) through the
+/// solution installed on the workers, pipelining the query stream:
+/// up to `pipeline_depth` super-chunks of `workers × per_worker_cols`
+/// columns are kept in flight at once
+/// ([`Cluster::scatter_begin`]/[`Cluster::finish_scatter`]), so a
+/// streaming worker's chunk I/O for super-chunk n overlaps the
+/// master-side assembly — and the other workers' compute — of
+/// super-chunk n−1. Results are assembled in issue order, so the
+/// output is bitwise independent of `pipeline_depth`; depth 1 is
+/// exactly the old scatter-per-chunk loop. Accounted under
+/// `10-transform`.
+///
+/// An empty batch returns an empty `0×0` matrix without any
+/// communication — the solution's `k` is unknown master-side until a
+/// worker replies, so the k×0 shape cannot be produced.
+pub fn dis_project_points(
+    cluster: &Cluster,
+    batch: &Mat,
+    per_worker_cols: usize,
+    pipeline_depth: usize,
+) -> Result<Mat, CommError> {
+    let n = batch.cols();
+    let s = cluster.num_workers();
+    if n == 0 {
+        return Ok(Mat::zeros(0, 0));
+    }
+    cluster.set_round("10-transform");
+    let super_cols = per_worker_cols.max(1) * s;
+    let depth = pipeline_depth.max(1);
+    let mut out: Option<Mat> = None;
+    let mut inflight: VecDeque<(Vec<usize>, Inflight<rq::ProjectPoints>)> = VecDeque::new();
+    let mut j0 = 0;
+    loop {
+        // keep the wire full: issue until `depth` super-chunks are in
+        // flight or the batch is drained
+        while j0 < n && inflight.len() < depth {
+            let j1 = (j0 + super_cols).min(n);
+            let cols = j1 - j0;
+            // split [j0, j1) over workers as evenly as possible
+            let bounds: Vec<usize> = (0..=s).map(|w| j0 + cols * w / s).collect();
+            let reqs: Vec<rq::ProjectPoints> = (0..s)
+                .map(|w| {
+                    let idx: Vec<usize> = (bounds[w]..bounds[w + 1]).collect();
+                    rq::ProjectPoints { pts: PointSet::Dense(batch.select_cols(&idx)) }
+                })
+                .collect();
+            inflight.push_back((bounds, cluster.scatter_begin(reqs)?));
+            j0 = j1;
+        }
+        let Some((bounds, fly)) = inflight.pop_front() else {
+            break;
+        };
+        let parts = cluster.finish_scatter(fly)?;
+        for (w, part) in parts.iter().enumerate() {
+            let out_m = out.get_or_insert_with(|| Mat::zeros(part.rows(), n));
+            for (jj, j) in (bounds[w]..bounds[w + 1]).enumerate() {
+                for i in 0..part.rows() {
+                    out_m[(i, j)] = part[(i, jj)];
+                }
+            }
+        }
+    }
+    Ok(out.expect("n > 0 produced at least one scatter"))
 }
 
 /// Install an externally computed solution (baselines) on all workers.

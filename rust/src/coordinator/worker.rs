@@ -726,7 +726,13 @@ impl Handle<rq::ProjectPoints> for Worker {
     /// batch over `chunk_rows`-column slices (the PR-2 fold, applied
     /// to the query instead of the shard), so worker memory tracks the
     /// chunk, not the batch; per-column operations are identical, so
-    /// results are bit-identical for every chunk size.
+    /// results are bit-identical for every chunk size. The master may
+    /// pipeline these requests
+    /// ([`crate::coordinator::dis_project_points`]): since the worker
+    /// loop is strictly recv→handle→send, the next batch sits in the
+    /// transport buffer while this one folds through its chunks, so
+    /// the chunk I/O of consecutive batches overlaps the master-side
+    /// assembly without any worker-side change.
     fn handle_req(&mut self, rq::ProjectPoints { pts }: rq::ProjectPoints) -> Mat {
         let sol = self.stream_solution.as_ref().expect("no solution installed");
         let k = match sol {

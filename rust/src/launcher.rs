@@ -339,6 +339,13 @@ pub fn worker(cfg: &Config) -> Result<(), LaunchError> {
 /// round is skipped with zero words) — and finishes with a
 /// `--transform`-point projection batch through the installed
 /// solution, printing per-job word tables and the warm-reuse drop.
+///
+/// `--max-inflight N` runs the session's scheduler with N concurrent
+/// job lanes (default 1 = the bit-identical sequential path) and
+/// `--queue-depth D` bounds the admission queue: the query batch is
+/// pumped through [`crate::serve::Service::submit`], and a full queue
+/// is a typed rejection ([`crate::serve::Rejected`] — the wire form a
+/// TCP front end sends is `Rejected::to_resp_error()`), never a stall.
 pub fn serve(cfg: &Config, dataset: &str) -> Result<(), LaunchError> {
     let kernel = kernel_from_flags(cfg)?;
     let params = cfg.params();
@@ -349,11 +356,21 @@ pub fn serve(cfg: &Config, dataset: &str) -> Result<(), LaunchError> {
     let spec = data::by_name(cfg.str_or("dataset", dataset), scale)
         .ok_or_else(|| LaunchError::Env(format!("unknown dataset {dataset}")))?;
 
+    // scheduling knobs: environment first (the ServeConfig::from_env
+    // convention), explicit flags override
+    let mut serve_cfg = crate::serve::ServeConfig::from_env();
+    serve_cfg.max_inflight = cfg.usize_or("max-inflight", serve_cfg.max_inflight).max(1);
+    serve_cfg.queue_depth = cfg.usize_or("queue-depth", serve_cfg.queue_depth).max(1);
+    serve_cfg.pipeline_depth = cfg.usize_or("pipeline-depth", serve_cfg.pipeline_depth).max(1);
+
     let mut service = if let Some(addr) = cfg.get("listen") {
         let s = cfg.usize_or("workers", 2);
         eprintln!("serve: waiting for {s} workers on {addr} …");
         let star = tcp::listen(addr, s)?;
-        crate::serve::Service::new(Cluster::new(star, CommStats::new()), kernel)
+        crate::serve::Service::builder(kernel)
+            .cluster(Cluster::new(star, CommStats::new()))
+            .config(serve_cfg.clone())
+            .build()
     } else {
         let s = cfg.usize_or("workers", spec.s);
         let global = spec.generate(cfg.u64_or("seed", 1));
@@ -372,13 +389,13 @@ pub fn serve(cfg: &Config, dataset: &str) -> Result<(), LaunchError> {
             ),
             None => None,
         };
-        crate::serve::Service::in_process_opts(
-            shards,
-            kernel,
-            backend,
-            params.chunk_rows,
-            cache_bytes,
-        )
+        crate::serve::Service::builder(kernel)
+            .shards(shards)
+            .backend(backend)
+            .chunk_rows(params.chunk_rows)
+            .embed_cache_bytes(cache_bytes)
+            .config(serve_cfg.clone())
+            .build()
     };
 
     let t0 = std::time::Instant::now();
@@ -413,16 +430,77 @@ pub fn serve(cfg: &Config, dataset: &str) -> Result<(), LaunchError> {
         let batch =
             crate::linalg::Mat::from_fn(spec.d, n_transform, |_, _| rng.normal());
         let tq = std::time::Instant::now();
-        let proj = service.transform(&batch)?;
+        // pump the query batch through the bounded admission queue in
+        // sub-batches — with --max-inflight > 1 these overlap on the
+        // cluster; a full queue rejects (typed) and we drain the
+        // oldest in-flight result before retrying
+        let lanes = serve_cfg.max_inflight * 2;
+        let per = n_transform.div_ceil(lanes).max(1);
+        let mut inflight: std::collections::VecDeque<crate::serve::JobHandle> =
+            std::collections::VecDeque::new();
+        let mut parts: Vec<crate::linalg::Mat> = Vec::new();
+        let mut deferred = 0usize;
+        let take = |h: crate::serve::JobHandle| -> Result<crate::linalg::Mat, LaunchError> {
+            match h.wait()? {
+                crate::serve::JobOutput::Transform(m) => Ok(m),
+                other => Err(LaunchError::Env(format!("unexpected job output {other:?}"))),
+            }
+        };
+        let mut j0 = 0;
+        while j0 < n_transform {
+            let j1 = (j0 + per).min(n_transform);
+            let cols: Vec<usize> = (j0..j1).collect();
+            let sub = batch.select_cols(&cols);
+            loop {
+                match service.submit(crate::serve::JobSpec::Transform { batch: sub.clone() }) {
+                    Ok(h) => {
+                        inflight.push_back(h);
+                        break;
+                    }
+                    Err(rej @ crate::serve::Rejected::QueueFull { .. }) => {
+                        // a TCP front end would send rej.to_resp_error()
+                        // to the client here; the session drains one
+                        // result and retries instead
+                        deferred += 1;
+                        let _ = rej;
+                        match inflight.pop_front() {
+                            Some(h) => parts.push(take(h)?),
+                            None => std::thread::yield_now(),
+                        }
+                    }
+                    Err(rej) => return Err(LaunchError::Env(rej.to_string())),
+                }
+            }
+            j0 = j1;
+        }
+        for h in inflight {
+            parts.push(take(h)?);
+        }
+        let k = parts.first().map_or(0, |m| m.rows());
+        let mut proj = crate::linalg::Mat::zeros(k, n_transform);
+        let mut at = 0;
+        for part in &parts {
+            for j in 0..part.cols() {
+                for i in 0..k {
+                    proj[(i, at + j)] = part[(i, j)];
+                }
+            }
+            at += part.cols();
+        }
         let dt = tq.elapsed().as_secs_f64();
         println!(
-            "transform: {} points → {}×{} in {:.1} ms ({:.0} points/s, {} words)",
+            "transform: {} points → {}×{} in {:.1} ms ({:.0} points/s, {} words{})",
             n_transform,
             proj.rows(),
             proj.cols(),
             dt * 1e3,
             n_transform as f64 / dt.max(1e-9),
             service.stats().round_words("svc:10-transform"),
+            if deferred > 0 {
+                format!(", {deferred} submissions deferred by backpressure")
+            } else {
+                String::new()
+            },
         );
     }
     println!(

@@ -354,6 +354,19 @@ impl Recovery {
         }
     }
 
+    /// Revive dead slots *without* replaying any round-checkpoint
+    /// state: the concurrent serve scheduler reruns failed jobs from
+    /// scratch on a quiesced cluster, so the only state a revived
+    /// worker needs is its shard (rejoined processes reload it inside
+    /// [`Recovery::recover`]'s replay via `LoadShard`). Resets the
+    /// checkpoint to empty first so the replay ships nothing but the
+    /// shard. Sequential serving keeps using [`Recovery::unit`], which
+    /// replays mid-job state and stays bit-identical.
+    pub fn revive_only(&mut self, cluster: &Cluster, first_dead: usize) -> Result<(), CommError> {
+        self.checkpoint = Checkpoint::new(0);
+        self.recover(cluster, first_dead)
+    }
+
     /// Revive `first_dead` plus every further slot whose hang-up
     /// marker surfaces while settling, then replay the checkpoint
     /// state onto each revived slot.

@@ -1,11 +1,12 @@
 //! Multi-job serving layer: many KPCA/CSS/KRR jobs on one persistent
-//! cluster, plus a batched projection path for query traffic.
+//! cluster, a concurrent scheduler, and a pipelined projection path
+//! for query traffic.
 //!
 //! The paper's disKPCA produces a compact solution (Y, C) precisely so
 //! it can be *used* cheaply afterwards — but a cluster that must be
 //! relaunched per fit cannot serve traffic. A [`Service`] wraps a
-//! live [`Cluster`] and runs jobs against it sequentially, with three
-//! properties the one-shot drivers don't have:
+//! live [`Cluster`] and runs jobs against it, with four properties the
+//! one-shot drivers don't have:
 //!
 //! 1. **Job isolation.** Every job gets a [`JobCtx`]: its round labels
 //!    are namespaced (`job3:1-embed`) in the cluster's lifetime
@@ -13,7 +14,8 @@
 //!    accounting rows, and a private per-job [`CommStats`] records the
 //!    *bare* labels — directly comparable, row for row, to a fresh
 //!    single-job cluster's table (pinned by `tests/serve_parity.rs`).
-//! 2. **Warm-state reuse.** The service tracks which [`EmbedSpec`] is
+//! 2. **Warm-state reuse.** The service tracks which
+//!    [`crate::embed::EmbedSpec`] is
 //!    installed on the workers. A job whose spec matches skips the
 //!    `1-embed` broadcast entirely — zero words in that round — and
 //!    each worker additionally keeps an LRU embedding cache (byte
@@ -24,14 +26,19 @@
 //!    cold cluster's bit for bit.
 //! 3. **Query serving.** [`Service::transform`] projects batches of
 //!    *new* points through the installed solution: batches are split
-//!    across the star (any worker can answer — the result depends
-//!    only on the solution) and streamed in bounded column chunks;
-//!    streaming workers additionally fold each sub-batch through the
-//!    out-of-core chunk loop, so worker memory tracks the chunk size.
-//!
-//! Jobs run strictly sequentially (`&mut self`), which is what makes
-//! the namespacing airtight without worker-side job tags; sharded
-//! tenants and async dispatch layer on top of this in later work.
+//!    across the star in worker-order column ranges, streamed in
+//!    bounded super-chunks, and *pipelined* — up to
+//!    [`ServeConfig::pipeline_depth`] super-chunks ride the wire at
+//!    once, so worker chunk I/O overlaps master-side assembly
+//!    ([`crate::coordinator::dis_project_points`]).
+//! 4. **Concurrent scheduling.** Jobs are admitted through a bounded
+//!    queue ([`Service::submit`] → [`JobHandle`]) and dispatched by
+//!    [`scheduler`] onto `max_inflight` runner lanes, head-of-line,
+//!    gated by a worker-state conflict model: independent jobs (a KRR
+//!    fit, a transform batch) interleave their rounds on one cluster;
+//!    conflicting jobs (two KPCA fits) serialize in submission order.
+//!    `--max-inflight 1` (the default) is bit-identical to the
+//!    historical strictly-sequential service.
 //!
 //! # Examples
 //!
@@ -52,7 +59,10 @@
 //!     k: 2, t: 8, p: 16, n_lev: 6, n_adapt: 10, m_rff: 128, t2: 64,
 //!     ..Params::default()
 //! };
-//! let mut svc = Service::in_process(shards, kernel, Arc::new(NativeBackend::new()), 0);
+//! let mut svc = Service::builder(kernel)
+//!     .shards(shards)
+//!     .backend(Arc::new(NativeBackend::new()))
+//!     .build();
 //!
 //! let cold = svc.run_kpca(&params).unwrap();
 //! assert!(!cold.embed_reused);
@@ -70,21 +80,24 @@
 //! svc.shutdown();
 //! ```
 
+pub mod queue;
+pub mod scheduler;
+
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::comm::request as rq;
 use crate::comm::{memory, Cluster, CommError, CommStats, PointSet};
-use crate::coordinator::{
-    dis_css_warm, dis_eval, dis_kpca_warm, dis_krr, embed_spec_for, CssSolution, KpcaSolution,
-    KrrModel, Params, SamplingMode, Worker,
-};
+use crate::coordinator::{CssSolution, KpcaSolution, KrrModel, Params, SamplingMode, Worker};
 use crate::data::Data;
-use crate::embed::EmbedSpec;
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
 use crate::recovery::{LocalHost, Recovery, Transport};
 use crate::runtime::Backend;
+
+pub use queue::{Rejected, ServeConfig};
+pub use scheduler::JobHandle;
+
+use scheduler::Scheduler;
 
 /// Identity and accounting scope of one job on a [`Service`] cluster.
 #[derive(Clone, Debug)]
@@ -109,61 +122,268 @@ pub struct JobReport<T> {
     pub embed_reused: bool,
 }
 
+/// What to run — the submission unit of [`Service::submit`].
+#[derive(Clone, Debug)]
+pub enum JobSpec {
+    /// One disKPCA fit (Alg. 4), with an ablatable sampling stage.
+    Kpca { params: Params, mode: SamplingMode },
+    /// One kernel CSS job (§5.3).
+    Css { params: Params },
+    /// One distributed KRR fit on a representative set.
+    Krr { y: PointSet, lambda: f64, teacher_seed: u64 },
+    /// Evaluate the installed solution (`(error, trace)`).
+    Eval,
+    /// Project a batch of new points (d×n, columns are points)
+    /// through the installed solution. Queries don't consume a job id
+    /// and are accounted under `svc:10-transform`.
+    Transform { batch: Mat },
+}
+
+impl JobSpec {
+    /// Sugar for the common fit submission.
+    pub fn kpca(params: &Params) -> Self {
+        JobSpec::Kpca { params: *params, mode: SamplingMode::Full }
+    }
+}
+
+/// What a completed [`JobSpec`] yields — variant-matched to the spec.
+#[derive(Clone, Debug)]
+pub enum JobOutput {
+    Kpca(JobReport<KpcaSolution>),
+    Css(JobReport<CssSolution>),
+    Krr(JobReport<KrrModel>),
+    Eval(JobReport<(f64, f64)>),
+    Transform(Mat),
+}
+
 /// A job service over a persistent [`Cluster`]: run many fits without
 /// relaunching workers, reuse worker-resident warm state across jobs,
-/// and serve projection queries. See the module docs.
+/// and serve projection queries — sequentially by default, or
+/// concurrently with `max_inflight > 1`. See the module docs.
 pub struct Service {
     cluster: Cluster,
     kernel: Kernel,
+    sched: Scheduler,
     /// In-process worker threads (empty when serving over an external
     /// transport); joined on shutdown/drop.
     handles: Vec<JoinHandle<()>>,
-    /// The [`EmbedSpec`] currently installed on every worker, when
-    /// known — the key for skipping the `1-embed` round.
-    warm_embed: Option<EmbedSpec>,
-    next_job: usize,
-    /// Per-worker column bound for one transform scatter round.
-    batch_cols: usize,
-    /// When present, fit/eval jobs run under the elastic recovery
-    /// driver: a worker dying mid-job is revived and the job completes
-    /// with a bit-identical result ([`crate::recovery`]).
+}
+
+/// Configures and builds a [`Service`] — the single replacement for
+/// the historical `in_process`/`in_process_opts`/`in_process_elastic`
+/// constructor trio.
+///
+/// Provide a data source: either [`ServiceBuilder::shards`] (spawns
+/// in-process workers over the memory transport) or
+/// [`ServiceBuilder::cluster`] (serve over an already-connected
+/// cluster, e.g. TCP workers). Everything else has defaults.
+pub struct ServiceBuilder {
+    kernel: Kernel,
+    shards: Option<Vec<Data>>,
+    cluster: Option<Cluster>,
+    backend: Option<Arc<dyn Backend>>,
+    chunk_rows: usize,
+    /// `None` = worker default (`DISKPCA_EMBED_CACHE_MB`).
+    embed_cache_bytes: Option<usize>,
+    elastic: bool,
+    transform_chunk: Option<usize>,
     recovery: Option<Recovery>,
+    config: Option<ServeConfig>,
+}
+
+impl ServiceBuilder {
+    /// In-process mode: shard the data across spawned worker threads
+    /// (one per shard) over the memory transport.
+    pub fn shards(mut self, shards: Vec<Data>) -> Self {
+        self.shards = Some(shards);
+        self
+    }
+
+    /// Serve over an already-connected cluster (e.g.
+    /// [`crate::comm::tcp`] workers). The workers' kernel must match.
+    pub fn cluster(mut self, cluster: Cluster) -> Self {
+        self.cluster = Some(cluster);
+        self
+    }
+
+    /// Compute backend for in-process workers (required with
+    /// [`ServiceBuilder::shards`]).
+    pub fn backend(mut self, backend: Arc<dyn Backend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// `> 0` makes in-process workers stream out-of-core in
+    /// `chunk_rows`-point chunks (see the worker docs). Default 0
+    /// (resident).
+    pub fn chunk_rows(mut self, chunk_rows: usize) -> Self {
+        self.chunk_rows = chunk_rows;
+        self
+    }
+
+    /// Per-worker embed warm-cache byte budget (`None` keeps the
+    /// `DISKPCA_EMBED_CACHE_MB` default, `Some(0)` disables caching) —
+    /// what `diskpca serve --embed-cache-mb` sets.
+    pub fn embed_cache_bytes(mut self, bytes: Option<usize>) -> Self {
+        self.embed_cache_bytes = bytes;
+        self
+    }
+
+    /// In-process mode only: use the elastic memory transport and
+    /// attach a revival host, so a worker thread dying mid-job is
+    /// revived from a retained shard copy and the job completes with
+    /// a bit-identical result. Costs one extra in-memory copy of
+    /// every shard (the revival source).
+    pub fn elastic(mut self, elastic: bool) -> Self {
+        self.elastic = elastic;
+        self
+    }
+
+    /// Per-worker column bound for one transform scatter round
+    /// (default 1024) — [`Service::set_transform_chunk`] at build
+    /// time.
+    pub fn transform_chunk(mut self, cols: usize) -> Self {
+        self.transform_chunk = Some(cols);
+        self
+    }
+
+    /// Attach an elastic recovery driver (external-transport setups;
+    /// the host must revive onto this cluster's reply queue). The
+    /// in-process equivalent is [`ServiceBuilder::elastic`].
+    pub fn recovery(mut self, recovery: Recovery) -> Self {
+        self.recovery = Some(recovery);
+        self
+    }
+
+    /// Scheduling/queue configuration (`max_inflight`, `queue_depth`,
+    /// `pipeline_depth`, cache budgets). Default:
+    /// [`ServeConfig::from_env`].
+    pub fn config(mut self, config: ServeConfig) -> Self {
+        self.config = Some(config);
+        self
+    }
+
+    /// Build the service, spawning in-process workers when shards
+    /// were provided.
+    ///
+    /// # Panics
+    ///
+    /// When neither [`ServiceBuilder::shards`] nor
+    /// [`ServiceBuilder::cluster`] was set (or both were), when
+    /// shards are given without a [`ServiceBuilder::backend`], or on
+    /// a malformed environment knob (the [`ServeConfig::from_env`]
+    /// convention).
+    pub fn build(self) -> Service {
+        let cfg = self.config.unwrap_or_else(ServeConfig::from_env);
+        let embed_cache_bytes = self.embed_cache_bytes;
+        let mut recovery = self.recovery;
+        let (cluster, handles) = match (self.cluster, self.shards) {
+            (Some(cluster), None) => {
+                assert!(!self.elastic, "elastic mode spawns in-process workers; \
+                     external clusters attach a recovery host instead");
+                (cluster, Vec::new())
+            }
+            (None, Some(shards)) => {
+                let backend = self
+                    .backend
+                    .expect("ServiceBuilder::shards requires ServiceBuilder::backend");
+                let chunk_rows = self.chunk_rows;
+                let spawn = |shard: Data, ep: memory::WorkerEndpoint, be: Arc<dyn Backend>| {
+                    let kernel = self.kernel;
+                    std::thread::spawn(move || {
+                        let mut worker = Worker::new_chunked(shard, kernel, be, chunk_rows);
+                        if let Some(bytes) = embed_cache_bytes {
+                            worker.set_embed_cache_budget(bytes);
+                        }
+                        worker.run(ep)
+                    })
+                };
+                if self.elastic {
+                    let (star, endpoints, reply_tx) = memory::star_elastic(shards.len());
+                    let handles: Vec<JoinHandle<()>> = shards
+                        .iter()
+                        .cloned()
+                        .zip(endpoints)
+                        .map(|(shard, ep)| spawn(shard, ep, backend.clone()))
+                        .collect();
+                    let mut host = LocalHost::new(
+                        shards,
+                        self.kernel,
+                        backend,
+                        chunk_rows,
+                        reply_tx,
+                        Transport::Memory,
+                    );
+                    if let Some(bytes) = embed_cache_bytes {
+                        host.set_embed_cache_bytes(bytes);
+                    }
+                    recovery = Some(Recovery::new(Box::new(host)));
+                    (Cluster::new(star, CommStats::new()), handles)
+                } else {
+                    let (star, endpoints) = memory::star(shards.len());
+                    let handles: Vec<JoinHandle<()>> = shards
+                        .into_iter()
+                        .zip(endpoints)
+                        .map(|(shard, ep)| spawn(shard, ep, backend.clone()))
+                        .collect();
+                    (Cluster::new(star, CommStats::new()), handles)
+                }
+            }
+            (None, None) => panic!("ServiceBuilder needs shards(..) or cluster(..)"),
+            (Some(_), Some(_)) => panic!("ServiceBuilder takes shards(..) or cluster(..), not both"),
+        };
+        cluster.set_round_prefix("svc:");
+        let sched = Scheduler::new(&cluster, self.kernel, cfg, recovery);
+        let svc = Service { cluster, kernel: self.kernel, sched, handles };
+        if let Some(cols) = self.transform_chunk {
+            svc.sched.set_transform_chunk(cols);
+        }
+        svc
+    }
 }
 
 impl Service {
-    /// Serve over an already-connected cluster (e.g. [`crate::comm::tcp`]
-    /// workers). The workers' `kernel` must match.
-    pub fn new(cluster: Cluster, kernel: Kernel) -> Self {
-        cluster.set_round_prefix("svc:");
-        Self {
-            cluster,
+    /// Start configuring a service — see [`ServiceBuilder`].
+    pub fn builder(kernel: Kernel) -> ServiceBuilder {
+        ServiceBuilder {
             kernel,
-            handles: Vec::new(),
-            warm_embed: None,
-            next_job: 0,
-            batch_cols: 1024,
+            shards: None,
+            cluster: None,
+            backend: None,
+            chunk_rows: 0,
+            embed_cache_bytes: None,
+            elastic: false,
+            transform_chunk: None,
             recovery: None,
+            config: None,
         }
     }
 
-    /// Spawn an in-process serving cluster over the memory transport —
-    /// the [`crate::coordinator::run_cluster`] topology, kept alive for
-    /// many jobs. `chunk_rows > 0` makes the workers stream
-    /// out-of-core (see the worker docs). Workers keep the default
-    /// embed warm-cache budget; see [`Service::in_process_opts`].
+    /// Serve over an already-connected cluster (e.g. [`crate::comm::tcp`]
+    /// workers). The workers' `kernel` must match. Equivalent to
+    /// `Service::builder(kernel).cluster(cluster).build()`.
+    pub fn new(cluster: Cluster, kernel: Kernel) -> Self {
+        Service::builder(kernel).cluster(cluster).build()
+    }
+
+    /// Spawn an in-process serving cluster over the memory transport.
+    #[deprecated(note = "use Service::builder(kernel).shards(..).backend(..).build()")]
     pub fn in_process(
         shards: Vec<Data>,
         kernel: Kernel,
         backend: Arc<dyn Backend>,
         chunk_rows: usize,
     ) -> Self {
-        Self::in_process_opts(shards, kernel, backend, chunk_rows, None)
+        Service::builder(kernel)
+            .shards(shards)
+            .backend(backend)
+            .chunk_rows(chunk_rows)
+            .build()
     }
 
     /// [`Service::in_process`] with an explicit per-worker embed
-    /// warm-cache byte budget (`None` keeps the
-    /// `DISKPCA_EMBED_CACHE_MB` default, `Some(0)` disables caching) —
-    /// what `diskpca serve --embed-cache-mb` sets.
+    /// warm-cache byte budget.
+    #[deprecated(note = "use Service::builder with .embed_cache_bytes(..)")]
     pub fn in_process_opts(
         shards: Vec<Data>,
         kernel: Kernel,
@@ -171,30 +391,16 @@ impl Service {
         chunk_rows: usize,
         embed_cache_bytes: Option<usize>,
     ) -> Self {
-        let (star, endpoints) = memory::star(shards.len());
-        let handles: Vec<JoinHandle<()>> = shards
-            .into_iter()
-            .zip(endpoints)
-            .map(|(shard, ep)| {
-                let be = backend.clone();
-                std::thread::spawn(move || {
-                    let mut worker = Worker::new_chunked(shard, kernel, be, chunk_rows);
-                    if let Some(bytes) = embed_cache_bytes {
-                        worker.set_embed_cache_budget(bytes);
-                    }
-                    worker.run(ep)
-                })
-            })
-            .collect();
-        let mut svc = Self::new(Cluster::new(star, CommStats::new()), kernel);
-        svc.handles = handles;
-        svc
+        Service::builder(kernel)
+            .shards(shards)
+            .backend(backend)
+            .chunk_rows(chunk_rows)
+            .embed_cache_bytes(embed_cache_bytes)
+            .build()
     }
 
-    /// [`Service::in_process_opts`] on the elastic memory transport: a
-    /// worker thread dying mid-job is revived from a retained shard
-    /// copy and the job replays to a bit-identical result. Costs one
-    /// extra in-memory copy of every shard (the revival source).
+    /// In-process service on the elastic memory transport.
+    #[deprecated(note = "use Service::builder with .elastic(true)")]
     pub fn in_process_elastic(
         shards: Vec<Data>,
         kernel: Kernel,
@@ -202,49 +408,25 @@ impl Service {
         chunk_rows: usize,
         embed_cache_bytes: Option<usize>,
     ) -> Self {
-        let (star, endpoints, reply_tx) = memory::star_elastic(shards.len());
-        let handles: Vec<JoinHandle<()>> = shards
-            .iter()
-            .cloned()
-            .zip(endpoints)
-            .map(|(shard, ep)| {
-                let be = backend.clone();
-                std::thread::spawn(move || {
-                    let mut worker = Worker::new_chunked(shard, kernel, be, chunk_rows);
-                    if let Some(bytes) = embed_cache_bytes {
-                        worker.set_embed_cache_budget(bytes);
-                    }
-                    worker.run(ep)
-                })
-            })
-            .collect();
-        let mut host = LocalHost::new(
-            shards,
-            kernel,
-            backend,
-            chunk_rows,
-            reply_tx,
-            Transport::Memory,
-        );
-        if let Some(bytes) = embed_cache_bytes {
-            host.set_embed_cache_bytes(bytes);
-        }
-        let mut svc = Self::new(Cluster::new(star, CommStats::new()), kernel);
-        svc.handles = handles;
-        svc.recovery = Some(Recovery::new(Box::new(host)));
-        svc
+        Service::builder(kernel)
+            .shards(shards)
+            .backend(backend)
+            .chunk_rows(chunk_rows)
+            .embed_cache_bytes(embed_cache_bytes)
+            .elastic(true)
+            .build()
     }
 
     /// Attach an elastic recovery driver to an externally-connected
     /// service (the host must revive onto this cluster's reply queue).
     pub fn set_recovery(&mut self, recovery: Recovery) {
-        self.recovery = Some(recovery);
+        self.sched.set_recovery(recovery);
     }
 
     /// Worker revivals performed across all jobs so far (0 for a
     /// non-elastic service).
     pub fn recoveries(&self) -> usize {
-        self.recovery.as_ref().map_or(0, |r| r.recoveries())
+        self.sched.recoveries()
     }
 
     pub fn num_workers(&self) -> usize {
@@ -255,9 +437,14 @@ impl Service {
         self.kernel
     }
 
-    /// Jobs run so far (monotone id source).
+    /// Jobs run so far (monotone id source; queries don't count).
     pub fn jobs_run(&self) -> usize {
-        self.next_job
+        self.sched.jobs_run()
+    }
+
+    /// The active scheduling/queue configuration.
+    pub fn config(&self) -> &ServeConfig {
+        self.sched.config()
     }
 
     /// Lifetime stats of the whole service — every job appears under
@@ -268,7 +455,8 @@ impl Service {
 
     /// The underlying cluster (advanced use; prefer the job API —
     /// exchanges made here are accounted under the ambient `svc:`
-    /// namespace and invalidate no warm state).
+    /// namespace, invalidate no warm state, and are NOT coordinated
+    /// with in-flight scheduled jobs).
     pub fn cluster(&self) -> &Cluster {
         &self.cluster
     }
@@ -277,29 +465,31 @@ impl Service {
     /// round (default 1024): larger batches stream through in
     /// `workers × cols` chunks.
     pub fn set_transform_chunk(&mut self, cols: usize) {
-        self.batch_cols = cols.max(1);
+        self.sched.set_transform_chunk(cols);
     }
 
-    /// Open a job scope: namespace the round labels and install the
-    /// per-job stats sink.
-    fn begin(&mut self) -> JobCtx {
-        let id = self.next_job;
-        self.next_job += 1;
-        let label = format!("job{id}:");
-        let stats = CommStats::new();
-        self.cluster.set_round_prefix(&label);
-        self.cluster.set_job_stats(Some(stats.clone()));
-        JobCtx { id, label, stats }
+    /// Submit a job without blocking: the job queues for dispatch and
+    /// the returned [`JobHandle`] resolves when it completes. Rejects
+    /// (typed, never a hang) when the admission queue is at
+    /// `queue_depth` — the backpressure contract the TCP front end
+    /// relies on.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobHandle, Rejected> {
+        self.sched.submit(spec)
     }
 
-    /// Close the job scope: back to the ambient `svc:` namespace.
-    fn finish(&self) {
-        self.cluster.set_job_stats(None);
-        self.cluster.set_round_prefix("svc:");
+    /// [`Service::submit`] that waits for queue space instead of
+    /// rejecting.
+    fn submit_wait(&self, spec: JobSpec) -> Result<JobOutput, CommError> {
+        let handle = self.sched.submit_blocking(spec).map_err(|rej| CommError::Protocol {
+            round: "scheduler".into(),
+            detail: rej.to_string(),
+        })?;
+        handle.wait()
     }
 
     /// Run one disKPCA job (Alg. 4), reusing the installed embedding
-    /// when this job's [`EmbedSpec`] matches — the reused job performs
+    /// when this job's [`crate::embed::EmbedSpec`] matches — the
+    /// reused job performs
     /// **zero** `1-embed` communication and its solution is
     /// bit-identical to a cold run.
     pub fn run_kpca(&mut self, params: &Params) -> Result<JobReport<KpcaSolution>, CommError> {
@@ -312,42 +502,18 @@ impl Service {
         params: &Params,
         mode: SamplingMode,
     ) -> Result<JobReport<KpcaSolution>, CommError> {
-        let embeds = mode != SamplingMode::AdaptiveOnly;
-        let spec = embed_spec_for(self.kernel, params);
-        let reuse = embeds && self.warm_embed == Some(spec);
-        let job = self.begin();
-        let res = match self.recovery.as_mut() {
-            Some(rec) => crate::recovery::dis_kpca_recovering(
-                &self.cluster,
-                rec,
-                self.kernel,
-                params,
-                mode,
-                reuse,
-            ),
-            None => dis_kpca_warm(&self.cluster, self.kernel, params, mode, reuse),
-        };
-        self.finish();
-        self.note_embed_outcome(embeds, spec, &res);
-        let output = res?;
-        Ok(JobReport { job, output, embed_reused: reuse })
+        match self.submit_wait(JobSpec::Kpca { params: *params, mode })? {
+            JobOutput::Kpca(report) => Ok(report),
+            _ => unreachable!("kpca spec yields kpca output"),
+        }
     }
 
     /// Run one kernel CSS job (§5.3), with the same warm-embed reuse.
     pub fn run_css(&mut self, params: &Params) -> Result<JobReport<CssSolution>, CommError> {
-        let spec = embed_spec_for(self.kernel, params);
-        let reuse = self.warm_embed == Some(spec);
-        let job = self.begin();
-        let res = match self.recovery.as_mut() {
-            Some(rec) => {
-                crate::recovery::dis_css_recovering(&self.cluster, rec, self.kernel, params, reuse)
-            }
-            None => dis_css_warm(&self.cluster, self.kernel, params, reuse),
-        };
-        self.finish();
-        self.note_embed_outcome(true, spec, &res);
-        let output = res?;
-        Ok(JobReport { job, output, embed_reused: reuse })
+        match self.submit_wait(JobSpec::Css { params: *params })? {
+            JobOutput::Css(report) => Ok(report),
+            _ => unreachable!("css spec yields css output"),
+        }
     }
 
     /// Run one distributed KRR job on a representative set (no
@@ -358,112 +524,61 @@ impl Service {
         lambda: f64,
         teacher_seed: u64,
     ) -> Result<JobReport<KrrModel>, CommError> {
-        let job = self.begin();
-        let res = match self.recovery.as_mut() {
-            Some(rec) => crate::recovery::dis_krr_recovering(
-                &self.cluster,
-                rec,
-                self.kernel,
-                y,
-                lambda,
-                teacher_seed,
-            ),
-            None => dis_krr(&self.cluster, self.kernel, y, lambda, teacher_seed),
-        };
-        self.finish();
-        let output = res?;
-        Ok(JobReport { job, output, embed_reused: false })
+        match self.submit_wait(JobSpec::Krr { y: y.clone(), lambda, teacher_seed })? {
+            JobOutput::Krr(report) => Ok(report),
+            _ => unreachable!("krr spec yields krr output"),
+        }
     }
 
     /// Evaluate the installed solution (`(error, trace)`, Alg. 4's
     /// quality metric) as its own job.
     pub fn run_eval(&mut self) -> Result<JobReport<(f64, f64)>, CommError> {
-        let job = self.begin();
-        let res = match self.recovery.as_mut() {
-            Some(rec) => crate::recovery::dis_eval_recovering(&self.cluster, rec),
-            None => dis_eval(&self.cluster),
-        };
-        self.finish();
-        let output = res?;
-        Ok(JobReport { job, output, embed_reused: false })
+        match self.submit_wait(JobSpec::Eval)? {
+            JobOutput::Eval(report) => Ok(report),
+            _ => unreachable!("eval spec yields eval output"),
+        }
     }
 
     /// Run an arbitrary driver sequence as one job (e.g. fit + eval in
-    /// a single accounting scope). The body may install any worker
-    /// state, so the warm-embed key is conservatively invalidated.
+    /// a single accounting scope), exclusively: the body waits for
+    /// every queued and running job, then owns the whole cluster. The
+    /// body may install any worker state, so the warm-embed key is
+    /// conservatively invalidated.
     pub fn run_job<T>(
         &mut self,
         body: impl FnOnce(&Cluster) -> Result<T, CommError>,
     ) -> Result<JobReport<T>, CommError> {
-        let job = self.begin();
-        let res = body(&self.cluster);
-        self.finish();
-        self.warm_embed = None;
+        let id = self.sched.begin_exclusive();
+        let label = format!("job{id}:");
+        let stats = CommStats::new();
+        let lane = self.cluster.lane();
+        lane.set_round_prefix(&label);
+        lane.set_job_stats(Some(stats.clone()));
+        let res = body(&lane);
+        lane.set_job_stats(None);
+        self.sched.end_exclusive();
         let output = res?;
-        Ok(JobReport { job, output, embed_reused: false })
-    }
-
-    /// Track what the workers hold after a job that embeds: on
-    /// success the job's spec is installed; on failure the state is
-    /// unknown — drop the key so the next job re-embeds (harmless).
-    fn note_embed_outcome<T, E>(&mut self, embeds: bool, spec: EmbedSpec, res: &Result<T, E>) {
-        if !embeds {
-            return;
-        }
-        self.warm_embed = match res {
-            Ok(_) => Some(spec),
-            Err(_) => None,
-        };
+        Ok(JobReport { job: JobCtx { id, label, stats }, output, embed_reused: false })
     }
 
     /// Project a batch of new points (d×n, columns are points) through
     /// the solution installed by the most recent fit job: returns the
-    /// k×n coordinates LᵀΦ(batch).
-    ///
-    /// The batch is scattered across the workers in worker-order
-    /// column ranges (any worker computes the same answer — the
-    /// projection depends only on the installed solution) and large
-    /// batches stream through in `workers ×` [`Service::set_transform_chunk`]
-    /// super-chunks, so neither master nor workers ever hold more
-    /// than a bounded slice in flight. Exchanges are accounted under
-    /// `svc:10-transform`.
+    /// k×n coordinates LᵀΦ(batch). Scheduled like any job (a running
+    /// fit finishes installing its solution first), pipelined on the
+    /// wire ([`crate::coordinator::dis_project_points`]), accounted
+    /// under `svc:10-transform`.
     ///
     /// An empty batch returns an empty `0×0` matrix without any
     /// communication — the solution's `k` is unknown master-side
     /// until a worker replies, so the k×0 shape cannot be produced.
     pub fn transform(&mut self, batch: &Mat) -> Result<Mat, CommError> {
-        let n = batch.cols();
-        let s = self.cluster.num_workers();
-        if n == 0 {
+        if batch.cols() == 0 {
             return Ok(Mat::zeros(0, 0));
         }
-        self.cluster.set_round("10-transform");
-        let mut out: Option<Mat> = None;
-        let super_cols = self.batch_cols * s;
-        let mut j0 = 0;
-        while j0 < n {
-            let j1 = (j0 + super_cols).min(n);
-            let cols = j1 - j0;
-            // split [j0, j1) over workers as evenly as possible
-            let bounds: Vec<usize> = (0..=s).map(|w| j0 + cols * w / s).collect();
-            let reqs: Vec<rq::ProjectPoints> = (0..s)
-                .map(|w| {
-                    let idx: Vec<usize> = (bounds[w]..bounds[w + 1]).collect();
-                    rq::ProjectPoints { pts: PointSet::Dense(batch.select_cols(&idx)) }
-                })
-                .collect();
-            let parts = self.cluster.scatter(reqs)?;
-            for (w, part) in parts.iter().enumerate() {
-                let out_m = out.get_or_insert_with(|| Mat::zeros(part.rows(), n));
-                for (jj, j) in (bounds[w]..bounds[w + 1]).enumerate() {
-                    for i in 0..part.rows() {
-                        out_m[(i, j)] = part[(i, jj)];
-                    }
-                }
-            }
-            j0 = j1;
+        match self.submit_wait(JobSpec::Transform { batch: batch.clone() })? {
+            JobOutput::Transform(out) => Ok(out),
+            _ => unreachable!("transform spec yields a matrix"),
         }
-        Ok(out.expect("n > 0 produced at least one scatter"))
     }
 
     /// Quit the workers and join in-process worker threads. Dropping
@@ -474,15 +589,17 @@ impl Service {
 
 impl Drop for Service {
     fn drop(&mut self) {
+        // order matters: stop the scheduler (runners drain and join)
+        // before quitting the workers, or a runner mid-exchange would
+        // see its worker hang up
+        self.sched.shutdown();
         self.cluster.shutdown();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
         // replacement workers spawned by revivals exit on the same
         // Quit fan-out; join them too
-        if let Some(rec) = self.recovery.as_mut() {
-            rec.join_host();
-        }
+        self.sched.join_recovery_host();
     }
 }
 
@@ -494,6 +611,10 @@ mod tests {
     use crate::runtime::NativeBackend;
 
     fn service(s: usize) -> (Service, Data, Params) {
+        service_cfg(s, ServeConfig::default())
+    }
+
+    fn service_cfg(s: usize, cfg: ServeConfig) -> (Service, Data, Params) {
         let mut rng = Rng::seed_from(11);
         let data = Data::Dense(clusters(7, 140, 3, 0.2, &mut rng));
         let shards = partition_power_law(&data, s, 5);
@@ -509,7 +630,11 @@ mod tests {
             seed: 21,
             ..Params::default()
         };
-        let svc = Service::in_process(shards, kernel, Arc::new(NativeBackend::new()), 0);
+        let svc = Service::builder(kernel)
+            .shards(shards)
+            .backend(Arc::new(NativeBackend::new()))
+            .config(cfg)
+            .build();
         (svc, data, params)
     }
 
@@ -597,7 +722,7 @@ mod tests {
         let report = svc
             .run_job(move |cluster| {
                 let sol = crate::coordinator::dis_kpca(cluster, kernel, &params)?;
-                let (err, trace) = dis_eval(cluster)?;
+                let (err, trace) = crate::coordinator::dis_eval(cluster)?;
                 Ok((sol, err, trace))
             })
             .unwrap();
@@ -607,5 +732,50 @@ mod tests {
         for round in ["1-embed", "2-disLS", "5-disLR", "6-eval"] {
             assert!(report.job.stats.round_words(round) > 0, "{round} missing");
         }
+    }
+
+    #[test]
+    fn submit_returns_a_handle_that_polls_then_resolves() {
+        let (svc, _, params) = service(2);
+        let mut handle = svc.submit(JobSpec::kpca(&params)).unwrap();
+        // resolve via wait (try_poll may or may not see it first —
+        // the job runs on its own schedule)
+        let first = match handle.try_poll() {
+            Some(res) => res,
+            None => handle.wait(),
+        };
+        match first.unwrap() {
+            JobOutput::Kpca(report) => {
+                assert_eq!(report.job.id, 0);
+                assert!(!report.embed_reused);
+            }
+            other => panic!("expected a kpca output, got {other:?}"),
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_service_runs_the_same_jobs() {
+        let cfg = ServeConfig { max_inflight: 3, ..ServeConfig::default() };
+        let (mut svc, _, params) = service_cfg(3, cfg);
+        let sol = svc.run_kpca(&params).unwrap();
+        let y = PointSet::Dense(sol.output.y.clone());
+        // a KRR fit and two transform batches in flight together
+        let krr = svc.submit(JobSpec::Krr { y, lambda: 1e-3, teacher_seed: 5 }).unwrap();
+        let mut rng = Rng::seed_from(3);
+        let batch = Mat::from_fn(7, 9, |_, _| rng.normal());
+        let t1 = svc.submit(JobSpec::Transform { batch: batch.clone() }).unwrap();
+        let t2 = svc.submit(JobSpec::Transform { batch: batch.clone() }).unwrap();
+        let a = match t1.wait().unwrap() {
+            JobOutput::Transform(m) => m,
+            other => panic!("{other:?}"),
+        };
+        let b = match t2.wait().unwrap() {
+            JobOutput::Transform(m) => m,
+            other => panic!("{other:?}"),
+        };
+        assert!(a.data() == b.data(), "same batch, same solution, same answer");
+        assert!(matches!(krr.wait().unwrap(), JobOutput::Krr(_)));
+        svc.shutdown();
     }
 }

@@ -1,0 +1,193 @@
+//! Typed serving configuration and admission control.
+//!
+//! One struct, one strict parser: every environment knob the serving
+//! stack reads ([`ServeConfig::from_env`]) funnels through
+//! [`ServeConfig::parse`], so a mistyped value is a configuration
+//! error at startup — never a silent fallback to a default — and
+//! `tests/env_knobs.rs` exercises a single entry point instead of
+//! three scattered parsers.
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::comm::{parse_comm_timeout, Message};
+use crate::coordinator::worker::parse_embed_cache_mb;
+use crate::runtime::parse_table_cache_mb;
+
+/// Every tunable the serving stack reads, in one typed struct.
+///
+/// | field | env knob | default |
+/// |---|---|---|
+/// | `comm_timeout` | `DISKPCA_COMM_TIMEOUT_SECS` | none (unbounded) |
+/// | `embed_cache_mb` | `DISKPCA_EMBED_CACHE_MB` | 64 MiB |
+/// | `table_cache_mb` | `DISKPCA_TABLE_CACHE_MB` | 128 MiB |
+/// | `max_inflight` | `DISKPCA_MAX_INFLIGHT` | 1 (sequential) |
+/// | `queue_depth` | `DISKPCA_QUEUE_DEPTH` | 32 |
+/// | `pipeline_depth` | `DISKPCA_PIPELINE_DEPTH` | 2 |
+///
+/// `max_inflight` is the scheduler's concurrent-job bound (1 keeps
+/// the bit-identical sequential path), `queue_depth` the admission
+/// queue bound beyond which submissions are rejected
+/// ([`Rejected::QueueFull`]), and `pipeline_depth` how many transform
+/// super-chunks [`crate::coordinator::dis_project_points`] keeps in
+/// flight per query batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    pub comm_timeout: Option<Duration>,
+    pub embed_cache_mb: usize,
+    pub table_cache_mb: usize,
+    pub max_inflight: usize,
+    pub queue_depth: usize,
+    pub pipeline_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            comm_timeout: None,
+            embed_cache_mb: 64,
+            table_cache_mb: 128,
+            max_inflight: 1,
+            queue_depth: 32,
+            pipeline_depth: 2,
+        }
+    }
+}
+
+/// Parse a count knob that must be a whole number ≥ 1 (`None` = unset
+/// ⇒ default). Zero is rejected rather than clamped: a scheduler with
+/// zero runners or a zero-deep pipeline is a misconfiguration, not a
+/// mode.
+fn parse_count(name: &str, raw: Option<&str>, default: usize) -> Result<usize, String> {
+    let Some(raw) = raw else { return Ok(default) };
+    match raw.trim().parse::<usize>() {
+        Ok(0) => Err(format!("{name}={raw}: must be at least 1")),
+        Ok(n) => Ok(n),
+        Err(_) => Err(format!("{name}={raw}: not a whole number")),
+    }
+}
+
+impl ServeConfig {
+    /// Parse every serving knob through one strict entry point.
+    /// `lookup` maps a variable name to its (possibly unset) value —
+    /// `std::env::var(..).ok()` in production, a closure over a map in
+    /// tests. The first offending variable aborts the parse with a
+    /// message naming it and echoing the rejected value.
+    pub fn parse(lookup: impl Fn(&str) -> Option<String>) -> Result<Self, String> {
+        let get = |name: &str| lookup(name);
+        let defaults = Self::default();
+        Ok(Self {
+            comm_timeout: parse_comm_timeout(get("DISKPCA_COMM_TIMEOUT_SECS").as_deref())?,
+            embed_cache_mb: parse_embed_cache_mb(get("DISKPCA_EMBED_CACHE_MB").as_deref())?,
+            table_cache_mb: parse_table_cache_mb(get("DISKPCA_TABLE_CACHE_MB").as_deref())?,
+            max_inflight: parse_count(
+                "DISKPCA_MAX_INFLIGHT",
+                get("DISKPCA_MAX_INFLIGHT").as_deref(),
+                defaults.max_inflight,
+            )?,
+            queue_depth: parse_count(
+                "DISKPCA_QUEUE_DEPTH",
+                get("DISKPCA_QUEUE_DEPTH").as_deref(),
+                defaults.queue_depth,
+            )?,
+            pipeline_depth: parse_count(
+                "DISKPCA_PIPELINE_DEPTH",
+                get("DISKPCA_PIPELINE_DEPTH").as_deref(),
+                defaults.pipeline_depth,
+            )?,
+        })
+    }
+
+    /// [`ServeConfig::parse`] over the process environment. Panics on
+    /// a malformed value — the same hard-error convention every knob
+    /// parser here has always had.
+    pub fn from_env() -> Self {
+        match Self::parse(|name| std::env::var(name).ok()) {
+            Ok(cfg) => cfg,
+            Err(msg) => panic!("config {msg}"),
+        }
+    }
+
+    /// Embed-cache budget in bytes (what the worker constructor takes).
+    pub fn embed_cache_bytes(&self) -> usize {
+        self.embed_cache_mb.saturating_mul(1 << 20)
+    }
+}
+
+/// Why the scheduler refused a submission. Admission control is
+/// load-shedding, not an error in the job itself: the caller may
+/// retry later (or block via `submit_blocking`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Rejected {
+    /// The admission queue already holds `depth` jobs — the configured
+    /// bound (`--queue-depth`). Shedding here keeps the TCP accept
+    /// loop responsive instead of letting a burst stall every client.
+    QueueFull { depth: usize },
+    /// The service is shutting down; no new work is admitted.
+    ShuttingDown,
+}
+
+impl fmt::Display for Rejected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Rejected::QueueFull { depth } => {
+                write!(f, "admission queue full ({depth} jobs queued); retry later")
+            }
+            Rejected::ShuttingDown => write!(f, "service shutting down"),
+        }
+    }
+}
+
+impl Rejected {
+    /// The wire form the `--listen` front end sends instead of
+    /// stalling the accept loop: a typed [`Message::RespError`] the
+    /// client can distinguish from a compute failure by its
+    /// `rejected:` prefix.
+    pub fn to_resp_error(&self) -> Message {
+        Message::RespError(format!("rejected: {self}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(pairs: &[(&str, &str)]) -> impl Fn(&str) -> Option<String> + '_ {
+        move |name| {
+            pairs
+                .iter()
+                .find(|(k, _)| *k == name)
+                .map(|(_, v)| v.to_string())
+        }
+    }
+
+    #[test]
+    fn defaults_when_nothing_is_set() {
+        let cfg = ServeConfig::parse(|_| None).unwrap();
+        assert_eq!(cfg, ServeConfig::default());
+    }
+
+    #[test]
+    fn queue_knobs_parse_and_reject_zero() {
+        let cfg = ServeConfig::parse(env(&[
+            ("DISKPCA_MAX_INFLIGHT", "4"),
+            ("DISKPCA_QUEUE_DEPTH", "2"),
+            ("DISKPCA_PIPELINE_DEPTH", "8"),
+        ]))
+        .unwrap();
+        assert_eq!((cfg.max_inflight, cfg.queue_depth, cfg.pipeline_depth), (4, 2, 8));
+        let err = ServeConfig::parse(env(&[("DISKPCA_MAX_INFLIGHT", "0")])).unwrap_err();
+        assert!(err.contains("DISKPCA_MAX_INFLIGHT") && err.contains("at least 1"), "{err}");
+    }
+
+    #[test]
+    fn rejection_reasons_render_and_bridge_to_resp_error() {
+        let full = Rejected::QueueFull { depth: 32 };
+        assert!(full.to_string().contains("32"));
+        match full.to_resp_error() {
+            Message::RespError(detail) => assert!(detail.starts_with("rejected: ")),
+            other => panic!("expected RespError, got {other:?}"),
+        }
+        assert!(Rejected::ShuttingDown.to_string().contains("shutting down"));
+    }
+}

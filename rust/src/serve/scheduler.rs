@@ -1,0 +1,662 @@
+//! Concurrent job scheduler: interleaves rounds of *independent* jobs
+//! on one persistent cluster.
+//!
+//! Round labels are already job-namespaced (`job3:2-disLS`) and the
+//! comm layer multiplexes any number of in-flight exchanges over the
+//! shared reply queue ([`Cluster::lane`]), so two jobs whose worker
+//! state does not overlap can share the wire: while one job's workers
+//! grind through a streaming KRR Gram fold, another job's transform
+//! batches ride the same links. What *cannot* overlap is worker-side
+//! state: a KPCA fit installs embeddings, score state and finally the
+//! solution, and a query that reads the solution mid-install would be
+//! garbage. The scheduler encodes this as a small read/write
+//! footprint per job kind and dispatches strictly head-of-line: the
+//! oldest pending job runs as soon as its footprint is compatible
+//! with everything running, and nothing younger may overtake it —
+//! FIFO submission order therefore stays the completion order of
+//! conflicting jobs, which is what keeps `--max-inflight 1`
+//! bit-identical to the historical sequential service and per-job
+//! word tables row-for-row comparable to fresh single-job clusters.
+//!
+//! Admission is bounded ([`ServeConfig::queue_depth`]): a full queue
+//! rejects with a typed [`Rejected`] instead of stalling the caller —
+//! on the TCP front end that becomes a `RespError` the client can
+//! retry, keeping the accept loop live under overload.
+//!
+//! Failure handling depends on the mode. Sequentially
+//! (`max_inflight == 1`) jobs run under the PR-6 recovering drivers:
+//! revive + replay + stats rewind, bit-identical to a fault-free run.
+//! Concurrently, a dead worker fails every exchange it owes; the
+//! first runner that sees the `Link`/`Worker` error quiesces the
+//! scheduler (no new dispatches, wait for running attempts to drain),
+//! revives the dead slots *without* round replay
+//! ([`crate::recovery::Recovery::revive_only`] — there is no single
+//! round to replay when several jobs were mid-flight), bumps the
+//! epoch, and every affected job reruns from scratch with a fresh
+//! per-job sink. Solutions and per-job tables stay bit-identical;
+//! the *lifetime* table keeps the failed attempt's words (documented
+//! concurrency caveat).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::comm::{Cluster, CommError, CommStats};
+use crate::coordinator::{
+    dis_css_warm, dis_eval, dis_kpca_warm, dis_krr, dis_project_points, embed_spec_for,
+    Params, SamplingMode,
+};
+use crate::embed::EmbedSpec;
+use crate::kernels::Kernel;
+use crate::recovery::Recovery;
+
+use super::queue::{Rejected, ServeConfig};
+use super::{JobCtx, JobOutput, JobReport, JobSpec};
+
+/// Retry budget per job in concurrent mode (revivals themselves are
+/// additionally bounded by [`Recovery::set_max_recoveries`]).
+const MAX_ATTEMPTS: usize = 3;
+
+/// Worker-state bits a job reads or writes — the conflict model the
+/// dispatcher runs on. Two jobs may interleave iff neither writes
+/// state the other touches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct Footprint {
+    reads: u8,
+    writes: u8,
+}
+
+const EMBED: u8 = 1 << 0;
+const SCORES: u8 = 1 << 1;
+const RESID: u8 = 1 << 2;
+const BASIS: u8 = 1 << 3;
+const SOLUTION: u8 = 1 << 4;
+
+impl Footprint {
+    const NONE: Footprint = Footprint { reads: 0, writes: 0 };
+    /// `run_job` bodies may touch anything — serialize against all.
+    pub(crate) const EXCLUSIVE: Footprint = Footprint { reads: 0xff, writes: 0xff };
+
+    fn compatible(self, other: Footprint) -> bool {
+        self.writes & (other.reads | other.writes) == 0 && other.writes & self.reads == 0
+    }
+}
+
+/// The footprint of one job kind. KRR is stateless on the workers
+/// (`ReqKrrStats` recomputes K(Y,·) from the shard each time), so it
+/// interleaves with everything — including a KPCA fit — which is
+/// where the concurrent QPS win comes from.
+fn footprint(spec: &JobSpec) -> Footprint {
+    match spec {
+        JobSpec::Kpca { .. } => Footprint {
+            reads: 0,
+            writes: EMBED | SCORES | RESID | BASIS | SOLUTION,
+        },
+        JobSpec::Css { .. } => Footprint { reads: 0, writes: EMBED | SCORES | RESID | BASIS },
+        JobSpec::Krr { .. } => Footprint::NONE,
+        JobSpec::Eval => Footprint { reads: SOLUTION, writes: 0 },
+        JobSpec::Transform { .. } => Footprint { reads: SOLUTION, writes: 0 },
+    }
+}
+
+/// A submitted-but-not-dispatched job and the channel its result goes
+/// back on.
+struct PendingJob {
+    spec: JobSpec,
+    tx: Sender<Result<JobOutput, CommError>>,
+}
+
+struct SchedState {
+    pending: VecDeque<PendingJob>,
+    /// Footprints of every dispatched-and-unfinished job (kept across
+    /// that job's retries).
+    running: Vec<Footprint>,
+    /// Attempts executing right now (drops to 0 while every failed
+    /// job waits for a revival).
+    active: usize,
+    /// Monotone job-id source (transform queries don't consume one).
+    next_job: usize,
+    /// The [`EmbedSpec`] currently installed on every worker, when
+    /// known — the key for skipping the `1-embed` round.
+    warm_embed: Option<EmbedSpec>,
+    shutting: bool,
+    /// A revival is in progress: no new dispatches until it finishes.
+    recovering: bool,
+    /// Bumped after every successful revival — a failed attempt whose
+    /// epoch is stale knows the world was already healed.
+    epoch: u64,
+    /// Sticky: revival failed (or an unrecoverable abort poisoned the
+    /// cluster); waiting victims give up instead of waiting forever.
+    healing_off: bool,
+}
+
+struct SchedInner {
+    state: Mutex<SchedState>,
+    cv: Condvar,
+    cfg: ServeConfig,
+    kernel: Kernel,
+    recovery: Mutex<Option<Recovery>>,
+    /// Per-worker column bound for one transform scatter round.
+    batch_cols: AtomicUsize,
+}
+
+/// A pending or running job's result slot. One-shot: whichever of
+/// [`JobHandle::wait`] / [`JobHandle::try_poll`] first observes the
+/// result takes it.
+pub struct JobHandle {
+    rx: Receiver<Result<JobOutput, CommError>>,
+}
+
+impl JobHandle {
+    /// Block until the job completes.
+    pub fn wait(self) -> Result<JobOutput, CommError> {
+        self.rx.recv().unwrap_or_else(|_| {
+            Err(CommError::Protocol {
+                round: "scheduler".into(),
+                detail: "service shut down before the job completed".into(),
+            })
+        })
+    }
+
+    /// Non-blocking poll: `None` while the job is still queued or
+    /// running. A `Some` transfers the result out of the handle.
+    pub fn try_poll(&mut self) -> Option<Result<JobOutput, CommError>> {
+        match self.rx.try_recv() {
+            Ok(res) => Some(res),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Err(CommError::Protocol {
+                round: "scheduler".into(),
+                detail: "service shut down before the job completed".into(),
+            })),
+        }
+    }
+}
+
+/// The scheduler: an admission queue, `max_inflight` runner threads
+/// each owning one [`Cluster::lane`], and the shared dispatch state.
+pub(crate) struct Scheduler {
+    inner: Arc<SchedInner>,
+    runners: Vec<JoinHandle<()>>,
+}
+
+impl Scheduler {
+    pub(crate) fn new(
+        cluster: &Cluster,
+        kernel: Kernel,
+        cfg: ServeConfig,
+        recovery: Option<Recovery>,
+    ) -> Self {
+        let inner = Arc::new(SchedInner {
+            state: Mutex::new(SchedState {
+                pending: VecDeque::new(),
+                running: Vec::new(),
+                active: 0,
+                next_job: 0,
+                warm_embed: None,
+                shutting: false,
+                recovering: false,
+                epoch: 0,
+                healing_off: false,
+            }),
+            cv: Condvar::new(),
+            cfg,
+            kernel,
+            recovery: Mutex::new(recovery),
+            batch_cols: AtomicUsize::new(1024),
+        });
+        let runners = (0..inner.cfg.max_inflight)
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                let lane = cluster.lane();
+                lane.set_round_prefix("svc:");
+                std::thread::spawn(move || runner_loop(&inner, &lane))
+            })
+            .collect();
+        Self { inner, runners }
+    }
+
+    /// Admit one job, or reject if the queue is at `queue_depth` (or
+    /// the service is shutting down). Never blocks.
+    pub(crate) fn submit(&self, spec: JobSpec) -> Result<JobHandle, Rejected> {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.shutting {
+            return Err(Rejected::ShuttingDown);
+        }
+        if st.pending.len() >= self.inner.cfg.queue_depth {
+            return Err(Rejected::QueueFull { depth: self.inner.cfg.queue_depth });
+        }
+        let (tx, rx) = mpsc::channel();
+        st.pending.push_back(PendingJob { spec, tx });
+        drop(st);
+        self.inner.cv.notify_all();
+        Ok(JobHandle { rx })
+    }
+
+    /// [`Scheduler::submit`] that waits for queue space instead of
+    /// rejecting — the blocking `run_*` wrappers use this so their
+    /// historical never-rejected semantics survive admission control.
+    pub(crate) fn submit_blocking(&self, spec: JobSpec) -> Result<JobHandle, Rejected> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if st.shutting {
+                return Err(Rejected::ShuttingDown);
+            }
+            if st.pending.len() < self.inner.cfg.queue_depth {
+                break;
+            }
+            st = self.inner.cv.wait(st).unwrap();
+        }
+        let (tx, rx) = mpsc::channel();
+        st.pending.push_back(PendingJob { spec, tx });
+        drop(st);
+        self.inner.cv.notify_all();
+        Ok(JobHandle { rx })
+    }
+
+    /// Claim the whole cluster for a caller-thread job body
+    /// (`Service::run_job`): waits until nothing is pending or
+    /// running, then registers an exclusive footprint so no job
+    /// dispatches until [`Scheduler::end_exclusive`]. Returns the
+    /// job id.
+    pub(crate) fn begin_exclusive(&self) -> usize {
+        let mut st = self.inner.state.lock().unwrap();
+        while st.recovering || !st.pending.is_empty() || !st.running.is_empty() {
+            st = self.inner.cv.wait(st).unwrap();
+        }
+        let id = st.next_job;
+        st.next_job += 1;
+        st.running.push(Footprint::EXCLUSIVE);
+        st.active += 1;
+        id
+    }
+
+    /// Release [`Scheduler::begin_exclusive`]. The body may have
+    /// installed any worker state, so the warm-embed key is
+    /// conservatively invalidated.
+    pub(crate) fn end_exclusive(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        remove_footprint(&mut st, Footprint::EXCLUSIVE);
+        st.active -= 1;
+        st.warm_embed = None;
+        drop(st);
+        self.inner.cv.notify_all();
+    }
+
+    /// Stop admitting, let running attempts finish, join the runners,
+    /// and drop every still-queued job (their handles resolve to a
+    /// shutdown error).
+    pub(crate) fn shutdown(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutting = true;
+        }
+        self.inner.cv.notify_all();
+        for h in self.runners.drain(..) {
+            let _ = h.join();
+        }
+        self.inner.state.lock().unwrap().pending.clear();
+    }
+
+    pub(crate) fn jobs_run(&self) -> usize {
+        self.inner.state.lock().unwrap().next_job
+    }
+
+    pub(crate) fn set_transform_chunk(&self, cols: usize) {
+        self.inner.batch_cols.store(cols.max(1), Ordering::Relaxed);
+    }
+
+    pub(crate) fn set_recovery(&self, recovery: Recovery) {
+        *self.inner.recovery.lock().unwrap() = Some(recovery);
+    }
+
+    pub(crate) fn recoveries(&self) -> usize {
+        self.inner.recovery.lock().unwrap().as_ref().map_or(0, |r| r.recoveries())
+    }
+
+    pub(crate) fn join_recovery_host(&self) {
+        if let Some(rec) = self.inner.recovery.lock().unwrap().as_mut() {
+            rec.join_host();
+        }
+    }
+
+    pub(crate) fn config(&self) -> &ServeConfig {
+        &self.inner.cfg
+    }
+}
+
+fn remove_footprint(st: &mut SchedState, fp: Footprint) {
+    let pos = st.running.iter().position(|r| *r == fp).expect("footprint registered");
+    st.running.swap_remove(pos);
+}
+
+/// Whether this spec would reuse the installed embedding, and whether
+/// it installs one on success (`None` = does not embed).
+fn embed_key(spec: &JobSpec, kernel: Kernel) -> Option<EmbedSpec> {
+    match spec {
+        JobSpec::Kpca { params, mode } if *mode != SamplingMode::AdaptiveOnly => {
+            Some(embed_spec_for(kernel, params))
+        }
+        JobSpec::Css { params } => Some(embed_spec_for(kernel, params)),
+        _ => None,
+    }
+}
+
+fn runner_loop(inner: &SchedInner, lane: &Cluster) {
+    loop {
+        // dispatch strictly head-of-line: only the oldest pending job
+        // is eligible, and only once its footprint fits what's running
+        let (job, id, mut my_epoch, mut reuse) = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.shutting {
+                    return;
+                }
+                if !st.recovering {
+                    if let Some(front) = st.pending.front() {
+                        let fp = footprint(&front.spec);
+                        if st.running.iter().all(|r| fp.compatible(*r)) {
+                            break;
+                        }
+                    }
+                }
+                st = inner.cv.wait(st).unwrap();
+            }
+            let job = st.pending.pop_front().expect("front checked");
+            st.running.push(footprint(&job.spec));
+            st.active += 1;
+            let id = match &job.spec {
+                JobSpec::Transform { .. } => None,
+                _ => {
+                    let id = st.next_job;
+                    st.next_job += 1;
+                    Some(id)
+                }
+            };
+            let reuse = match embed_key(&job.spec, inner.kernel) {
+                Some(spec) => st.warm_embed == Some(spec),
+                None => false,
+            };
+            (job, id, st.epoch, reuse)
+        };
+        // the new front may be dispatchable by an idle runner
+        inner.cv.notify_all();
+
+        let mut attempt = 0usize;
+        let final_res = loop {
+            let res = run_attempt(inner, lane, &job.spec, id, reuse);
+            match res {
+                Ok(out) => break Ok(out),
+                Err(err) => {
+                    let healable = matches!(
+                        err,
+                        CommError::Worker { .. } | CommError::Link { .. } | CommError::Poisoned { .. }
+                    );
+                    // sequential mode already ran the PR-6 recovering
+                    // drivers inside the attempt — a surviving error
+                    // is final there
+                    if inner.cfg.max_inflight == 1 || !healable {
+                        break Err(err);
+                    }
+                    // pause this job: stop counting as active so a
+                    // healer can quiesce, but keep the footprint so
+                    // nothing conflicting sneaks in before the rerun
+                    {
+                        let mut st = inner.state.lock().unwrap();
+                        st.active -= 1;
+                    }
+                    inner.cv.notify_all();
+                    let healed = match &err {
+                        CommError::Worker { worker, .. } | CommError::Link { worker, .. } => {
+                            heal(inner, lane, *worker, my_epoch)
+                        }
+                        _ => wait_for_heal(inner, my_epoch),
+                    };
+                    // retries against an unhealed cluster are futile
+                    if healed.is_none() {
+                        let mut st = inner.state.lock().unwrap();
+                        st.active += 1;
+                        drop(st);
+                        break Err(err);
+                    }
+                    attempt += 1;
+                    if attempt >= MAX_ATTEMPTS {
+                        let mut st = inner.state.lock().unwrap();
+                        st.active += 1;
+                        drop(st);
+                        break Err(err);
+                    }
+                    let mut st = inner.state.lock().unwrap();
+                    st.active += 1;
+                    my_epoch = st.epoch;
+                    reuse = match embed_key(&job.spec, inner.kernel) {
+                        Some(spec) => st.warm_embed == Some(spec),
+                        None => false,
+                    };
+                }
+            }
+        };
+
+        // completion bookkeeping under one lock: footprint out, warm
+        // key updated, waiters woken
+        {
+            let mut st = inner.state.lock().unwrap();
+            remove_footprint(&mut st, footprint(&job.spec));
+            st.active -= 1;
+            if let Some(spec) = embed_key(&job.spec, inner.kernel) {
+                st.warm_embed = match &final_res {
+                    Ok(_) => Some(spec),
+                    Err(_) => None,
+                };
+            }
+        }
+        inner.cv.notify_all();
+        // a gone receiver just means nobody is waiting — fine
+        let _ = job.tx.send(final_res);
+    }
+}
+
+/// Run one attempt of one job on this runner's lane, with the lane
+/// labelled for the job's accounting scope.
+fn run_attempt(
+    inner: &SchedInner,
+    lane: &Cluster,
+    spec: &JobSpec,
+    id: Option<usize>,
+    reuse: bool,
+) -> Result<JobOutput, CommError> {
+    let sink = CommStats::new();
+    match id {
+        Some(id) => {
+            lane.set_round_prefix(&format!("job{id}:"));
+            lane.set_job_stats(Some(sink.clone()));
+        }
+        None => {
+            lane.set_round_prefix("svc:");
+            lane.set_job_stats(None);
+        }
+    }
+    let kernel = inner.kernel;
+    // sequential mode with an elastic host: the PR-6 recovering
+    // drivers (revive + replay + stats rewind) keep fits bit-identical
+    // through worker deaths — exactly the historical Service behavior
+    let seq = inner.cfg.max_inflight == 1;
+    let report = |output| JobReport {
+        job: JobCtx {
+            id: id.expect("job specs carry an id"),
+            label: format!("job{}:", id.expect("job specs carry an id")),
+            stats: sink.clone(),
+        },
+        output,
+        embed_reused: reuse,
+    };
+    let res = match spec {
+        JobSpec::Kpca { params, mode } => {
+            let r = if seq {
+                let mut guard = inner.recovery.lock().unwrap();
+                match guard.as_mut() {
+                    Some(rec) => crate::recovery::dis_kpca_recovering(
+                        lane, rec, kernel, params, *mode, reuse,
+                    ),
+                    None => dis_kpca_warm(lane, kernel, params, *mode, reuse),
+                }
+            } else {
+                dis_kpca_warm(lane, kernel, params, *mode, reuse)
+            };
+            r.map(|sol| JobOutput::Kpca(report(sol)))
+        }
+        JobSpec::Css { params } => {
+            let r = if seq {
+                let mut guard = inner.recovery.lock().unwrap();
+                match guard.as_mut() {
+                    Some(rec) => {
+                        crate::recovery::dis_css_recovering(lane, rec, kernel, params, reuse)
+                    }
+                    None => dis_css_warm(lane, kernel, params, reuse),
+                }
+            } else {
+                dis_css_warm(lane, kernel, params, reuse)
+            };
+            r.map(|sol| JobOutput::Css(report(sol)))
+        }
+        JobSpec::Krr { y, lambda, teacher_seed } => {
+            let r = if seq {
+                let mut guard = inner.recovery.lock().unwrap();
+                match guard.as_mut() {
+                    Some(rec) => crate::recovery::dis_krr_recovering(
+                        lane,
+                        rec,
+                        kernel,
+                        y,
+                        *lambda,
+                        *teacher_seed,
+                    ),
+                    None => dis_krr(lane, kernel, y, *lambda, *teacher_seed),
+                }
+            } else {
+                dis_krr(lane, kernel, y, *lambda, *teacher_seed)
+            };
+            r.map(|model| JobOutput::Krr(report(model)))
+        }
+        JobSpec::Eval => {
+            let r = if seq {
+                let mut guard = inner.recovery.lock().unwrap();
+                match guard.as_mut() {
+                    Some(rec) => crate::recovery::dis_eval_recovering(lane, rec),
+                    None => dis_eval(lane),
+                }
+            } else {
+                dis_eval(lane)
+            };
+            r.map(|ev| JobOutput::Eval(report(ev)))
+        }
+        JobSpec::Transform { batch } => dis_project_points(
+            lane,
+            batch,
+            inner.batch_cols.load(Ordering::Relaxed),
+            inner.cfg.pipeline_depth,
+        )
+        .map(JobOutput::Transform),
+    };
+    lane.set_job_stats(None);
+    lane.set_round_prefix("svc:");
+    res
+}
+
+/// Concurrent-mode recovery entry for a runner holding a
+/// `Worker`/`Link` error: become the healer (quiesce, revive the dead
+/// slots, bump the epoch) unless one already healed past `my_epoch`.
+/// Returns the post-heal epoch, or `None` when healing is off (no
+/// recovery installed, a revive failed, or an unrecoverable abort).
+fn heal(inner: &SchedInner, lane: &Cluster, first_dead: usize, my_epoch: u64) -> Option<u64> {
+    let mut st = inner.state.lock().unwrap();
+    loop {
+        if st.healing_off {
+            return None;
+        }
+        if st.epoch != my_epoch {
+            return Some(st.epoch);
+        }
+        if !st.recovering {
+            break;
+        }
+        st = inner.cv.wait(st).unwrap();
+    }
+    st.recovering = true;
+    while st.active > 0 {
+        st = inner.cv.wait(st).unwrap();
+    }
+    drop(st);
+    // replay-free revival: every affected job reruns from scratch, so
+    // the only state a revived slot needs back is its shard
+    let revived = {
+        let mut guard = inner.recovery.lock().unwrap();
+        match guard.as_mut() {
+            Some(rec) => rec.revive_only(lane, first_dead).map(|()| true),
+            None => Ok(false),
+        }
+    };
+    let mut st = inner.state.lock().unwrap();
+    st.recovering = false;
+    let out = match revived {
+        Ok(true) => {
+            st.epoch += 1;
+            st.warm_embed = None;
+            Some(st.epoch)
+        }
+        Ok(false) | Err(_) => {
+            st.healing_off = true;
+            None
+        }
+    };
+    drop(st);
+    inner.cv.notify_all();
+    out
+}
+
+/// Concurrent-mode wait for a collateral victim (`Poisoned`): some
+/// runner holding the underlying `Worker`/`Link` error is guaranteed
+/// to drive [`heal`], so wait for its epoch bump (or for healing to
+/// be declared off).
+fn wait_for_heal(inner: &SchedInner, my_epoch: u64) -> Option<u64> {
+    let mut st = inner.state.lock().unwrap();
+    loop {
+        if st.healing_off {
+            return None;
+        }
+        if st.epoch != my_epoch {
+            return Some(st.epoch);
+        }
+        st = inner.cv.wait(st).unwrap();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::PointSet;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn footprint_conflicts_encode_worker_state() {
+        let params = Params::default();
+        let kpca = footprint(&JobSpec::Kpca { params, mode: SamplingMode::Full });
+        let krr = footprint(&JobSpec::Krr {
+            y: PointSet::Dense(Mat::zeros(2, 2)),
+            lambda: 1e-3,
+            teacher_seed: 1,
+        });
+        let eval = footprint(&JobSpec::Eval);
+        let transform = footprint(&JobSpec::Transform { batch: Mat::zeros(2, 2) });
+        // the QPS-relevant interleavings
+        assert!(kpca.compatible(krr), "stateless KRR rides along a fit");
+        assert!(eval.compatible(transform), "two solution readers coexist");
+        assert!(krr.compatible(transform));
+        // the must-serialize pairs
+        assert!(!kpca.compatible(kpca), "two fits contend for worker state");
+        assert!(!kpca.compatible(eval), "no reading a half-installed solution");
+        assert!(!kpca.compatible(transform));
+        assert!(!Footprint::EXCLUSIVE.compatible(krr));
+    }
+}

@@ -95,7 +95,10 @@ fn seeded_soak_every_job_completes_and_warm_reuse_survives_rejoin() {
     let (shards, kernel, params) = workload();
 
     // fault-free reference service
-    let mut ideal = Service::in_process(shards.clone(), kernel, Arc::new(NativeBackend::new()), 0);
+    let mut ideal = Service::builder(kernel)
+        .shards(shards.clone())
+        .backend(Arc::new(NativeBackend::new()))
+        .build();
     let (want, want_ev) = run_jobs(&mut ideal, &params);
     ideal.shutdown();
 

@@ -1,25 +1,41 @@
-//! Regression tests for the environment-knob parsers. These knobs
+//! Regression tests for the environment-knob parsing. These knobs
 //! used to fall back to their defaults on unparsable values — a typo
 //! like `DISKPCA_COMM_TIMEOUT_SECS=5s` silently disabled the timeout.
-//! Every parser now returns a clear error naming the variable and the
-//! offending value, and the use sites panic with a `config ...`
-//! message instead of proceeding with a default the operator never
-//! chose.
+//! Every knob the serving stack reads now funnels through one typed
+//! entry point, [`ServeConfig::parse`]: a malformed value is an error
+//! naming the variable and echoing the offending value, and the use
+//! sites panic with a `config ...` message instead of proceeding with
+//! a default the operator never chose.
 
 use std::time::Duration;
 
-use diskpca::comm::parse_comm_timeout;
-use diskpca::coordinator::worker::parse_embed_cache_mb;
-use diskpca::runtime::parse_table_cache_mb;
+use diskpca::serve::ServeConfig;
+
+/// Lookup closure over an inline list of (name, value) pairs.
+fn env(pairs: &[(&str, &str)]) -> impl Fn(&str) -> Option<String> + '_ {
+    move |name| pairs.iter().find(|(k, _)| *k == name).map(|(_, v)| v.to_string())
+}
+
+#[test]
+fn empty_environment_yields_the_documented_defaults() {
+    let cfg = ServeConfig::parse(|_| None).unwrap();
+    assert_eq!(cfg.comm_timeout, None, "unset keeps no timeout");
+    assert_eq!(cfg.embed_cache_mb, 64, "unset keeps the 64 MiB default");
+    assert_eq!(cfg.table_cache_mb, 128, "unset keeps the 128 MiB default");
+    assert_eq!(cfg.max_inflight, 1, "sequential scheduling by default");
+    assert_eq!(cfg.queue_depth, 32);
+    assert_eq!(cfg.pipeline_depth, 2);
+    assert_eq!(cfg, ServeConfig::default());
+}
 
 #[test]
 fn comm_timeout_accepts_whole_seconds_and_zero_disables() {
-    assert_eq!(parse_comm_timeout(None), Ok(None), "unset keeps no timeout");
-    assert_eq!(parse_comm_timeout(Some("0")), Ok(None), "0 disables");
-    assert_eq!(parse_comm_timeout(Some("5")), Ok(Some(Duration::from_secs(5))));
+    let at = |v: &str| ServeConfig::parse(env(&[("DISKPCA_COMM_TIMEOUT_SECS", v)]));
+    assert_eq!(at("0").unwrap().comm_timeout, None, "0 disables");
+    assert_eq!(at("5").unwrap().comm_timeout, Some(Duration::from_secs(5)));
     assert_eq!(
-        parse_comm_timeout(Some(" 7 ")),
-        Ok(Some(Duration::from_secs(7))),
+        at(" 7 ").unwrap().comm_timeout,
+        Some(Duration::from_secs(7)),
         "surrounding whitespace is tolerated"
     );
 }
@@ -27,33 +43,67 @@ fn comm_timeout_accepts_whole_seconds_and_zero_disables() {
 #[test]
 fn comm_timeout_rejects_garbage_with_named_variable() {
     for bad in ["5s", "abc", "", "1.5", "-3", "0x10"] {
-        let err = parse_comm_timeout(Some(bad)).unwrap_err();
+        let err = ServeConfig::parse(env(&[("DISKPCA_COMM_TIMEOUT_SECS", bad)])).unwrap_err();
         assert!(
             err.contains("DISKPCA_COMM_TIMEOUT_SECS"),
             "error must name the variable: {err}"
         );
-        assert!(err.contains(bad.trim()) || bad.trim().is_empty(), "error must echo the value: {err}");
+        assert!(
+            err.contains(bad.trim()) || bad.trim().is_empty(),
+            "error must echo the value: {err}"
+        );
     }
 }
 
 #[test]
-fn embed_cache_mb_defaults_and_rejects_garbage() {
-    assert_eq!(parse_embed_cache_mb(None), Ok(64), "unset keeps the 64 MiB default");
-    assert_eq!(parse_embed_cache_mb(Some("0")), Ok(0), "0 disables the cache");
-    assert_eq!(parse_embed_cache_mb(Some(" 256 ")), Ok(256));
+fn embed_cache_mb_parses_and_rejects_garbage() {
+    let at = |v: &str| ServeConfig::parse(env(&[("DISKPCA_EMBED_CACHE_MB", v)]));
+    assert_eq!(at("0").unwrap().embed_cache_mb, 0, "0 disables the cache");
+    assert_eq!(at(" 256 ").unwrap().embed_cache_mb, 256);
+    assert_eq!(at("256").unwrap().embed_cache_bytes(), 256 << 20);
     for bad in ["64MB", "", "-1", "2.5"] {
-        let err = parse_embed_cache_mb(Some(bad)).unwrap_err();
+        let err = at(bad).unwrap_err();
         assert!(err.contains("DISKPCA_EMBED_CACHE_MB"), "error must name the variable: {err}");
     }
 }
 
 #[test]
-fn table_cache_mb_defaults_and_rejects_garbage() {
-    assert_eq!(parse_table_cache_mb(None), Ok(128), "unset keeps the 128 MiB default");
-    assert_eq!(parse_table_cache_mb(Some("0")), Ok(0), "0 disables the cache");
-    assert_eq!(parse_table_cache_mb(Some(" 512 ")), Ok(512));
+fn table_cache_mb_parses_and_rejects_garbage() {
+    let at = |v: &str| ServeConfig::parse(env(&[("DISKPCA_TABLE_CACHE_MB", v)]));
+    assert_eq!(at("0").unwrap().table_cache_mb, 0, "0 disables the cache");
+    assert_eq!(at(" 512 ").unwrap().table_cache_mb, 512);
     for bad in ["lots", "", "-8", "1e3"] {
-        let err = parse_table_cache_mb(Some(bad)).unwrap_err();
+        let err = at(bad).unwrap_err();
         assert!(err.contains("DISKPCA_TABLE_CACHE_MB"), "error must name the variable: {err}");
     }
+}
+
+#[test]
+fn scheduler_knobs_parse_and_reject_zero_or_garbage() {
+    let cfg = ServeConfig::parse(env(&[
+        ("DISKPCA_MAX_INFLIGHT", "4"),
+        ("DISKPCA_QUEUE_DEPTH", " 8 "),
+        ("DISKPCA_PIPELINE_DEPTH", "3"),
+    ]))
+    .unwrap();
+    assert_eq!((cfg.max_inflight, cfg.queue_depth, cfg.pipeline_depth), (4, 8, 3));
+    // zero runners / zero-deep queues are misconfigurations, not modes
+    for var in ["DISKPCA_MAX_INFLIGHT", "DISKPCA_QUEUE_DEPTH", "DISKPCA_PIPELINE_DEPTH"] {
+        let err = ServeConfig::parse(env(&[(var, "0")])).unwrap_err();
+        assert!(err.contains(var) && err.contains("at least 1"), "{err}");
+        for bad in ["two", "", "-1", "1.5"] {
+            let err = ServeConfig::parse(env(&[(var, bad)])).unwrap_err();
+            assert!(err.contains(var), "error must name the variable: {err}");
+        }
+    }
+}
+
+#[test]
+fn first_offending_variable_aborts_the_whole_parse() {
+    let err = ServeConfig::parse(env(&[
+        ("DISKPCA_COMM_TIMEOUT_SECS", "10"),
+        ("DISKPCA_QUEUE_DEPTH", "bogus"),
+    ]))
+    .unwrap_err();
+    assert!(err.contains("DISKPCA_QUEUE_DEPTH") && err.contains("bogus"), "{err}");
 }

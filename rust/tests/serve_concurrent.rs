@@ -1,0 +1,327 @@
+//! Scheduler correctness: concurrency must be invisible in results.
+//!
+//! Three contracts, one per test:
+//! 1. A mixed job sequence (KPCA fit, KRR, transform batches, eval)
+//!    run with `max_inflight > 1` is bitwise equal — solutions AND
+//!    per-job word tables — to the same sequence on the sequential
+//!    (`max_inflight: 1`) scheduler.
+//! 2. A full admission queue returns a typed [`Rejected::QueueFull`]
+//!    immediately — never a hang — and the rejection bridges to the
+//!    `RespError` wire form the TCP front end sends.
+//! 3. A worker dying mid-flight under `max_inflight > 1` is revived
+//!    through the PR-6 elastic path (replay-free `revive_only` +
+//!    job rerun): every job still completes with results bitwise
+//!    equal to a fault-free run.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use diskpca::comm::{memory, Cluster, CommStats, Endpoint, Message, PointSet};
+use diskpca::coordinator::{Params, Worker};
+use diskpca::data::{clusters, partition_power_law, Data};
+use diskpca::kernels::Kernel;
+use diskpca::linalg::Mat;
+use diskpca::recovery::{LocalHost, Recovery, Transport};
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+use diskpca::serve::{JobOutput, JobSpec, Rejected, ServeConfig, Service};
+
+const S: usize = 3;
+
+fn workload() -> (Vec<Data>, Kernel, Params) {
+    let mut rng = Rng::seed_from(31);
+    let data = Data::Dense(clusters(8, 150, 3, 0.2, &mut rng));
+    let shards = partition_power_law(&data, S, 4);
+    let kernel = Kernel::Gauss { gamma: 0.6 };
+    let params = Params {
+        k: 3,
+        t: 16,
+        p: 32,
+        n_lev: 8,
+        n_adapt: 12,
+        m_rff: 128,
+        t2: 64,
+        seed: 17,
+        ..Params::default()
+    };
+    (shards, kernel, params)
+}
+
+fn service(shards: Vec<Data>, kernel: Kernel, max_inflight: usize) -> Service {
+    Service::builder(kernel)
+        .shards(shards)
+        .backend(Arc::new(NativeBackend::new()))
+        .config(ServeConfig { max_inflight, ..ServeConfig::default() })
+        .build()
+}
+
+/// Everything the mixed sequence produces, bit-comparable.
+struct MixTrace {
+    kpca_y: Vec<u64>,
+    kpca_coeffs: Vec<u64>,
+    kpca_table: Vec<(String, usize, usize)>,
+    krr_alpha: Vec<u64>,
+    krr_table: Vec<(String, usize, usize)>,
+    t1: Vec<u64>,
+    t2: Vec<u64>,
+    eval: (u64, u64),
+    eval_table: Vec<(String, usize, usize)>,
+}
+
+fn bits(m: &Mat) -> Vec<u64> {
+    m.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// The mixed sequence: one fit, then a KRR job + two transform
+/// batches + an eval. On the concurrent service the last four are
+/// submitted together and genuinely share the cluster (KRR has no
+/// worker-state footprint; transforms and eval only read the
+/// installed solution).
+fn run_mix(svc: &mut Service, params: &Params, concurrent: bool) -> MixTrace {
+    let fit = svc.run_kpca(params).unwrap();
+    let y = PointSet::Dense(fit.output.y.clone());
+    let mut rng = Rng::seed_from(77);
+    let b1 = Mat::from_fn(8, 9, |_, _| rng.normal());
+    let b2 = Mat::from_fn(8, 23, |_, _| rng.normal());
+    svc.set_transform_chunk(4); // force multi-chunk pipelined dispatch
+
+    let (krr, t1, t2, eval) = if concurrent {
+        let hk = svc
+            .submit(JobSpec::Krr { y: y.clone(), lambda: 1e-3, teacher_seed: 7 })
+            .unwrap();
+        let h1 = svc.submit(JobSpec::Transform { batch: b1.clone() }).unwrap();
+        let h2 = svc.submit(JobSpec::Transform { batch: b2.clone() }).unwrap();
+        let he = svc.submit(JobSpec::Eval).unwrap();
+        let krr = match hk.wait().unwrap() {
+            JobOutput::Krr(r) => r,
+            other => panic!("expected krr, got {other:?}"),
+        };
+        let t1 = match h1.wait().unwrap() {
+            JobOutput::Transform(m) => m,
+            other => panic!("expected transform, got {other:?}"),
+        };
+        let t2 = match h2.wait().unwrap() {
+            JobOutput::Transform(m) => m,
+            other => panic!("expected transform, got {other:?}"),
+        };
+        let eval = match he.wait().unwrap() {
+            JobOutput::Eval(r) => r,
+            other => panic!("expected eval, got {other:?}"),
+        };
+        (krr, t1, t2, eval)
+    } else {
+        let krr = svc.run_krr(&y, 1e-3, 7).unwrap();
+        let t1 = svc.transform(&b1).unwrap();
+        let t2 = svc.transform(&b2).unwrap();
+        let eval = svc.run_eval().unwrap();
+        (krr, t1, t2, eval)
+    };
+    MixTrace {
+        kpca_y: bits(&fit.output.y),
+        kpca_coeffs: bits(&fit.output.coeffs),
+        kpca_table: fit.job.stats.table(),
+        krr_alpha: krr.output.alpha.iter().map(|v| v.to_bits()).collect(),
+        krr_table: krr.job.stats.table(),
+        t1: bits(&t1),
+        t2: bits(&t2),
+        eval: (eval.output.0.to_bits(), eval.output.1.to_bits()),
+        eval_table: eval.job.stats.table(),
+    }
+}
+
+fn assert_mix_eq(got: &MixTrace, want: &MixTrace) {
+    assert_eq!(got.kpca_y, want.kpca_y, "kpca representative points differ");
+    assert_eq!(got.kpca_coeffs, want.kpca_coeffs, "kpca coefficients differ");
+    assert_eq!(got.kpca_table, want.kpca_table, "kpca per-job word table differs");
+    assert_eq!(got.krr_alpha, want.krr_alpha, "krr weights differ");
+    assert_eq!(got.krr_table, want.krr_table, "krr per-job word table differs");
+    assert_eq!(got.t1, want.t1, "transform batch 1 differs");
+    assert_eq!(got.t2, want.t2, "transform batch 2 differs");
+    assert_eq!(got.eval, want.eval, "eval differs");
+    assert_eq!(got.eval_table, want.eval_table, "eval per-job word table differs");
+}
+
+/// Contract 1: interleaved == sequential, bit for bit.
+#[test]
+fn concurrent_mix_is_bitwise_equal_to_sequential() {
+    let (shards, kernel, params) = workload();
+    let mut seq = service(shards.clone(), kernel, 1);
+    let want = run_mix(&mut seq, &params, false);
+    seq.shutdown();
+
+    let mut conc = service(shards, kernel, 3);
+    let got = run_mix(&mut conc, &params, true);
+    // the concurrent lifetime table still namespaces every job
+    assert!(conc.stats().round_words("job0:1-embed") > 0);
+    assert!(conc.stats().round_words("job1:9-krr") > 0);
+    assert!(conc.stats().round_words("job2:6-eval") > 0);
+    assert!(conc.stats().round_words("svc:10-transform") > 0);
+    conc.shutdown();
+
+    assert_mix_eq(&got, &want);
+}
+
+/// A worker that parks on a shared gate before handling each request
+/// (so in-flight jobs stall deterministically until the gate opens).
+fn gated_worker(
+    mut ep: impl Endpoint,
+    shard: Data,
+    kernel: Kernel,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+) {
+    let mut worker = Worker::new(shard, kernel, Arc::new(NativeBackend::new()));
+    loop {
+        let req = match ep.recv_req() {
+            Ok(req) => req,
+            Err(_) => return,
+        };
+        if matches!(req, Message::Quit) {
+            return;
+        }
+        let (open, cv) = &*gate;
+        let mut o = open.lock().unwrap();
+        while !*o {
+            o = cv.wait(o).unwrap();
+        }
+        drop(o);
+        if ep.send_resp(worker.handle(req)).is_err() {
+            return;
+        }
+    }
+}
+
+/// Contract 2: a full queue is a typed rejection, never a hang.
+#[test]
+fn full_admission_queue_rejects_typed_and_promptly() {
+    let (shards, kernel, _) = workload();
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let (star, endpoints) = memory::star(S);
+    let handles: Vec<_> = shards
+        .into_iter()
+        .zip(endpoints)
+        .map(|(shard, ep)| {
+            let gate = gate.clone();
+            std::thread::spawn(move || gated_worker(ep, shard, kernel, gate))
+        })
+        .collect();
+    let svc = Service::builder(kernel)
+        .cluster(Cluster::new(star, CommStats::new()))
+        .config(ServeConfig { max_inflight: 1, queue_depth: 1, ..ServeConfig::default() })
+        .build();
+
+    let y = PointSet::Dense(Mat::from_fn(8, 4, |i, j| (i * 4 + j) as f64 * 0.1));
+    // job A dispatches onto the (gated) cluster and stalls in flight
+    let ha = svc.submit(JobSpec::Krr { y: y.clone(), lambda: 1e-2, teacher_seed: 1 }).unwrap();
+    let t0 = std::time::Instant::now();
+    while svc.jobs_run() < 1 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "job A never dispatched");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // job B fills the depth-1 admission queue
+    let hb = svc.submit(JobSpec::Krr { y: y.clone(), lambda: 1e-2, teacher_seed: 2 }).unwrap();
+    // job C must be rejected typed — and immediately, while A is still
+    // stalled in flight (the never-a-hang half of the contract)
+    let t1 = std::time::Instant::now();
+    let rej = svc
+        .submit(JobSpec::Krr { y, lambda: 1e-2, teacher_seed: 3 })
+        .expect_err("queue full: submission must be rejected");
+    assert!(t1.elapsed() < Duration::from_secs(1), "rejection must not block");
+    assert_eq!(rej, Rejected::QueueFull { depth: 1 });
+    match rej.to_resp_error() {
+        Message::RespError(detail) => {
+            assert!(detail.starts_with("rejected: "), "wire form: {detail}")
+        }
+        other => panic!("expected RespError wire form, got {other:?}"),
+    }
+
+    // open the gate: both admitted jobs complete normally
+    {
+        let (open, cv) = &*gate;
+        *open.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    assert!(matches!(ha.wait().unwrap(), JobOutput::Krr(_)));
+    assert!(matches!(hb.wait().unwrap(), JobOutput::Krr(_)));
+    svc.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+/// Serve `die_after` requests, then exit holding the next one
+/// (same shape as the elastic_soak mortal worker).
+fn mortal_worker(mut ep: impl Endpoint, shard: Data, kernel: Kernel, die_after: usize) {
+    let mut worker = Worker::new(shard, kernel, Arc::new(NativeBackend::new()));
+    let mut served = 0usize;
+    loop {
+        let req = match ep.recv_req() {
+            Ok(req) => req,
+            Err(_) => return,
+        };
+        if matches!(req, Message::Quit) {
+            return;
+        }
+        if served == die_after {
+            return;
+        }
+        let resp = worker.handle(req);
+        if ep.send_resp(resp).is_err() {
+            return;
+        }
+        served += 1;
+    }
+}
+
+/// Contract 3: a mid-flight death under `max_inflight > 1` heals via
+/// the PR-6 revive path (replay-free `revive_only` + job rerun) and
+/// the sequence still matches a fault-free run bit for bit.
+#[test]
+fn worker_death_under_concurrency_recovers_bitwise() {
+    let (shards, kernel, params) = workload();
+
+    // fault-free sequential reference
+    let mut ideal = service(shards.clone(), kernel, 1);
+    let want = run_mix(&mut ideal, &params, false);
+    ideal.shutdown();
+
+    // mortal cluster: worker 1 dies mid-fit; max_inflight 2
+    let die_afters = [usize::MAX, 3, usize::MAX];
+    let (star, endpoints, reply_tx) = memory::star_elastic(S);
+    let handles: Vec<_> = shards
+        .iter()
+        .cloned()
+        .zip(endpoints)
+        .zip(die_afters)
+        .map(|((shard, ep), die_after)| {
+            std::thread::spawn(move || mortal_worker(ep, shard, kernel, die_after))
+        })
+        .collect();
+    let host = LocalHost::new(
+        shards,
+        kernel,
+        Arc::new(NativeBackend::new()),
+        0,
+        reply_tx,
+        Transport::Memory,
+    );
+    let mut rec = Recovery::new(Box::new(host));
+    rec.set_grace(Duration::from_millis(50));
+    let mut svc = Service::builder(kernel)
+        .cluster(Cluster::new(star, CommStats::new()))
+        .config(ServeConfig { max_inflight: 2, ..ServeConfig::default() })
+        .build();
+    svc.set_recovery(rec);
+
+    let got = run_mix(&mut svc, &params, true);
+    assert!(
+        svc.recoveries() >= 1,
+        "the mortal worker should have died and been revived (got {})",
+        svc.recoveries()
+    );
+    svc.shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
+
+    assert_mix_eq(&got, &want);
+}

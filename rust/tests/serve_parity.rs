@@ -16,7 +16,18 @@ use diskpca::kernels::Kernel;
 use diskpca::linalg::Mat;
 use diskpca::rng::Rng;
 use diskpca::runtime::NativeBackend;
-use diskpca::serve::Service;
+use diskpca::serve::{ServeConfig, Service};
+
+/// In-process service pinned to the sequential scheduler
+/// (`max_inflight: 1` — the configuration this whole suite certifies
+/// as bit-identical to fresh single-job clusters).
+fn mem_service(shards: Vec<Data>, kernel: Kernel) -> Service {
+    Service::builder(kernel)
+        .shards(shards)
+        .backend(Arc::new(NativeBackend::new()))
+        .config(ServeConfig { max_inflight: 1, ..ServeConfig::default() })
+        .build()
+}
 
 fn workload(s: usize) -> (Vec<Data>, Kernel, Params) {
     let mut rng = Rng::seed_from(6);
@@ -125,10 +136,7 @@ fn multi_job_parity(tcp_transport: bool) {
     let (mut svc, handles) = if tcp_transport {
         tcp_service(shards, kernel)
     } else {
-        (
-            Service::in_process(shards, kernel, Arc::new(NativeBackend::new()), 0),
-            Vec::new(),
-        )
+        (mem_service(shards, kernel), Vec::new())
     };
     let served: Vec<JobOutcome> = seeds
         .iter()
@@ -183,10 +191,7 @@ fn warm_reuse(tcp_transport: bool) {
     let (mut svc, handles) = if tcp_transport {
         tcp_service(shards, kernel)
     } else {
-        (
-            Service::in_process(shards, kernel, Arc::new(NativeBackend::new()), 0),
-            Vec::new(),
-        )
+        (mem_service(shards, kernel), Vec::new())
     };
     let cold = svc.run_kpca(&params).unwrap();
     let warm = svc.run_kpca(&params).unwrap();
@@ -244,12 +249,7 @@ fn transform_parity_across_transports() {
     let mut rng = Rng::seed_from(123);
     let batch = Mat::from_fn(9, 40, |_, _| rng.normal());
 
-    let mut mem_svc = Service::in_process(
-        shards.clone(),
-        kernel,
-        Arc::new(NativeBackend::new()),
-        0,
-    );
+    let mut mem_svc = mem_service(shards.clone(), kernel);
     let sol = mem_svc.run_kpca(&params).unwrap().output;
     let mem_proj = mem_svc.transform(&batch).unwrap();
     mem_svc.shutdown();
