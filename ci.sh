@@ -25,6 +25,15 @@ else
     cargo test -q --test fault_injection --test elastic_soak --test checkpoint_properties
 fi
 
+# Fast-tier accuracy gate: the explicit-SIMD compute tier is only
+# allowed to ship while every vectorized kernel stays inside its
+# documented ulp/relative-norm bound vs the exact tier (and the FWHT
+# stays bit-identical). Own [[test]] binary — the tier is
+# process-global state, so the suite serializes on a mutex and must
+# not share a process with exact-tier suites.
+echo "==> fast-tier accuracy suite"
+cargo test -q --test fast_tier_accuracy
+
 # Concurrent scheduler suite under its own hard timeout for the same
 # reason: a dispatch/heal liveness bug shows up as a parked-runner
 # deadlock, and the timeout turns that into a CI failure instead of a
@@ -64,10 +73,18 @@ DISKPCA_BENCH_FAST=1 DISKPCA_BENCH_THREADS=1,2 cargo bench --bench linalg
 # copy the fresh BENCH_*.json over the baseline when a slowdown is
 # intended. The protocol rows track broadcast/gather fan-out, so
 # session-layer refactors are trend-recorded.
-echo "==> gemm bench smoke + baseline diff (warn-only, threshold 25%; GFLOP/s per row)"
+echo "==> gemm bench smoke + baseline diff (warn-only, threshold 25%; GFLOP/s per row, both compute tiers)"
 DISKPCA_BENCH_FAST=1 DISKPCA_BENCH_THREADS=1,4 cargo bench --bench gemm
-echo "==> streaming bench smoke + baseline diff (warn-only, threshold 25%)"
+echo "==> streaming bench smoke + baseline diff (warn-only, threshold 25%; both compute tiers)"
 DISKPCA_BENCH_FAST=1 cargo bench --bench streaming
+
+# --compute-tier fast end-to-end smoke: one tiny disKPCA run through
+# the CLI with the fast tier selected — exercises the flag plumbing
+# (config key -> set_compute_tier) and the SIMD kernels in a real
+# protocol round, not just the microbenches.
+echo "==> --compute-tier fast CLI smoke"
+cargo run --release -- run protein_like --scale 0.02 --compute-tier fast \
+    --k 3 --t 16 --p 32 --n_lev 8 --n_adapt 12 --m_rff 128 --t2 64
 echo "==> protocol bench smoke + baseline diff (warn-only, threshold 25%)"
 DISKPCA_BENCH_FAST=1 cargo bench --bench protocol
 echo "==> serve bench smoke + baseline diff (warn-only, threshold 25%)"

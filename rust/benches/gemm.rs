@@ -12,8 +12,15 @@
 //! `DISKPCA_BENCH_BASELINE`, the output path with `DISKPCA_BENCH_OUT`,
 //! the thread sweep with `DISKPCA_BENCH_THREADS` (the checked-in
 //! baseline covers threads 1, 2 and 4).
+//!
+//! Both compute tiers are swept: the exact rows keep their historic
+//! names (so the baseline diff stays stable) and the fast-tier twins
+//! carry a ` fast` suffix — the tier + SIMD dispatch in use is printed
+//! per sweep (the CommStats-style attribution note), so a GFLOP/s
+//! number is never ambiguous about which kernels produced it.
 
 use diskpca::bench_harness::{black_box, thread_sweep, Bencher};
+use diskpca::linalg::simd::{dispatch_name, set_compute_tier, ComputeTier};
 use diskpca::linalg::Mat;
 use diskpca::rng::Rng;
 
@@ -32,29 +39,40 @@ fn main() {
     // and the wide disLR stack (|Y|×s·w gram).
     let shapes: &[(usize, usize, usize)] = &[(128, 128, 128), (450, 450, 256), (250, 2000, 250)];
 
-    for &t in &thread_sweep() {
-        diskpca::par::set_threads(t);
-        for &(m, k, n) in shapes {
-            let a = randmat(&mut rng, m, k);
-            let bm = randmat(&mut rng, k, n);
-            let at = randmat(&mut rng, k, m);
-            let bt = randmat(&mut rng, n, k);
-            let mm = (2 * m * k * n) as f64;
-            b.bench_flops(&format!("matmul {m}x{k}x{n} t{t}"), mm, || {
-                black_box(a.matmul(&bm))
-            });
-            b.bench_flops(&format!("matmul_at_b {m}x{k}x{n} t{t}"), mm, || {
-                black_box(at.matmul_at_b(&bm))
-            });
-            b.bench_flops(&format!("matmul_a_bt {m}x{k}x{n} t{t}"), mm, || {
-                black_box(a.matmul_a_bt(&bt))
-            });
-            // symmetric: m·m·k multiply-adds (upper triangle × 2)
-            b.bench_flops(&format!("gram_self {m}x{k} t{t}"), (m * m * k) as f64, || {
-                black_box(a.gram_self())
-            });
+    for tier in [ComputeTier::Exact, ComputeTier::Fast] {
+        set_compute_tier(tier);
+        // exact rows keep their historic (untagged) names
+        let tag = if tier == ComputeTier::Fast { " fast" } else { "" };
+        println!(
+            "# compute tier: {} (dispatch {})",
+            tier.name(),
+            if tier == ComputeTier::Fast { dispatch_name() } else { "scalar" }
+        );
+        for &t in &thread_sweep() {
+            diskpca::par::set_threads(t);
+            for &(m, k, n) in shapes {
+                let a = randmat(&mut rng, m, k);
+                let bm = randmat(&mut rng, k, n);
+                let at = randmat(&mut rng, k, m);
+                let bt = randmat(&mut rng, n, k);
+                let mm = (2 * m * k * n) as f64;
+                b.bench_flops(&format!("matmul {m}x{k}x{n} t{t}{tag}"), mm, || {
+                    black_box(a.matmul(&bm))
+                });
+                b.bench_flops(&format!("matmul_at_b {m}x{k}x{n} t{t}{tag}"), mm, || {
+                    black_box(at.matmul_at_b(&bm))
+                });
+                b.bench_flops(&format!("matmul_a_bt {m}x{k}x{n} t{t}{tag}"), mm, || {
+                    black_box(a.matmul_a_bt(&bt))
+                });
+                // symmetric: m·m·k multiply-adds (upper triangle × 2)
+                b.bench_flops(&format!("gram_self {m}x{k} t{t}{tag}"), (m * m * k) as f64, || {
+                    black_box(a.gram_self())
+                });
+            }
         }
     }
+    set_compute_tier(ComputeTier::Exact);
     diskpca::par::set_threads(1);
 
     let out = std::env::var("DISKPCA_BENCH_OUT").unwrap_or_else(|_| "BENCH_gemm.json".into());

@@ -7,8 +7,14 @@
 //! thread-scaling experiment; the `threads` CSV column tracks the
 //! curve. Inputs are built once, so each thread count measures the
 //! exact same (bit-identical) work.
+//!
+//! Both compute tiers are swept (the fast tier vectorizes the SRHT's
+//! FWHT butterflies): exact rows keep their historic names, fast-tier
+//! twins carry a ` fast` suffix, and the tier + SIMD dispatch is
+//! printed per sweep so every row is attributable.
 
 use diskpca::bench_harness::{black_box, thread_sweep, Bencher};
+use diskpca::linalg::simd::{dispatch_name, set_compute_tier, ComputeTier};
 use diskpca::linalg::Mat;
 use diskpca::rng::Rng;
 use diskpca::sketch::{CountSketch, GaussianSketch, Srht, TensorSketch};
@@ -46,31 +52,45 @@ fn main() {
         }
     }));
 
-    for &t in &thread_sweep() {
-        diskpca::par::set_threads(t);
+    for tier in [ComputeTier::Exact, ComputeTier::Fast] {
+        set_compute_tier(tier);
+        let tag = if tier == ComputeTier::Fast { " fast" } else { "" };
+        println!(
+            "# compute tier: {} (dispatch {})",
+            tier.name(),
+            if tier == ComputeTier::Fast { dispatch_name() } else { "scalar" }
+        );
+        for &t in &thread_sweep() {
+            diskpca::par::set_threads(t);
 
-        b.bench("countsketch/point_axis 64x4096->64x256", || {
-            black_box(cs_right.apply_point_axis(&e))
-        });
-        b.bench("countsketch/feature_axis 512x256->64x256", || {
-            black_box(cs_feat.apply_feature_axis(&z))
-        });
-        b.bench("countsketch/sparse 4096x512 rho=60", || {
-            black_box(cs_sparse.apply_feature_axis_sparse(&sparse))
-        });
-        b.bench("gaussian/feature_axis 512x256->64x256", || {
-            black_box(g.apply_feature_axis(&ts_out))
-        });
-        b.bench("srht/feature_axis 512x128->64x128", || {
-            black_box(srht.apply_feature_axis(&x))
-        });
-        b.bench("tensorsketch/dense q=4 784x64->512x64", || {
-            black_box(ts.apply_feature_axis(&xd))
-        });
-        b.bench("tensorsketch/sparse q=4 4096x64 rho=64", || {
-            black_box(ts_sp.apply_feature_axis_sparse(&xs))
-        });
+            b.bench(&format!("countsketch/point_axis 64x4096->64x256{tag}"), || {
+                black_box(cs_right.apply_point_axis(&e))
+            });
+            b.bench(&format!("countsketch/feature_axis 512x256->64x256{tag}"), || {
+                black_box(cs_feat.apply_feature_axis(&z))
+            });
+            b.bench(&format!("countsketch/sparse 4096x512 rho=60{tag}"), || {
+                black_box(cs_sparse.apply_feature_axis_sparse(&sparse))
+            });
+            b.bench(&format!("gaussian/feature_axis 512x256->64x256{tag}"), || {
+                black_box(g.apply_feature_axis(&ts_out))
+            });
+            // FWHT cost: 512·log2(512) butterflies × 1 add + 1 sub per
+            // pair, per column — the row the fast tier vectorizes
+            b.bench_flops(
+                &format!("srht/feature_axis 512x128->64x128{tag}"),
+                (512.0 * 9.0) * 128.0,
+                || black_box(srht.apply_feature_axis(&x)),
+            );
+            b.bench(&format!("tensorsketch/dense q=4 784x64->512x64{tag}"), || {
+                black_box(ts.apply_feature_axis(&xd))
+            });
+            b.bench(&format!("tensorsketch/sparse q=4 4096x64 rho=64{tag}"), || {
+                black_box(ts_sp.apply_feature_axis_sparse(&xs))
+            });
+        }
     }
+    set_compute_tier(ComputeTier::Exact);
 
     b.write_csv("results/bench_sketches.csv").unwrap();
 }

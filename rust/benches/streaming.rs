@@ -9,11 +9,17 @@
 //! trend record. Override the baseline path with
 //! `DISKPCA_BENCH_BASELINE`, the output path with
 //! `DISKPCA_BENCH_OUT`.
+//!
+//! The end-to-end `dis_kpca` rows are swept over both compute tiers:
+//! exact rows keep their historic names, fast-tier twins carry a
+//! ` fast` suffix, and the tier + SIMD dispatch is printed per sweep
+//! so every row is attributable.
 
 use std::sync::Arc;
 
 use diskpca::bench_harness::{black_box, Bencher};
 use diskpca::comm::Message;
+use diskpca::linalg::simd::{dispatch_name, set_compute_tier, ComputeTier};
 use diskpca::coordinator::{dis_eval, dis_kpca, run_cluster_chunked, Params, Worker};
 use diskpca::data::{clusters, partition_power_law, Data};
 use diskpca::embed::EmbedSpec;
@@ -88,22 +94,32 @@ fn bench_dis_kpca(b: &mut Bencher, n: usize) {
         t2: 128,
         ..Params::default()
     };
-    for (label, chunk) in [("resident", 0usize), ("chunk64", 64), ("chunk512", 512)] {
-        b.bench(&format!("dis_kpca/{label}"), || {
-            let shards = partition_power_law(&data, 4, 1);
-            let ((err, trace), _) = run_cluster_chunked(
-                shards,
-                kernel,
-                Arc::new(NativeBackend::new()),
-                chunk,
-                move |cluster| {
-                    let _ = dis_kpca(cluster, kernel, &params).unwrap();
-                    dis_eval(cluster).unwrap()
-                },
-            );
-            black_box((err, trace))
-        });
+    for tier in [ComputeTier::Exact, ComputeTier::Fast] {
+        set_compute_tier(tier);
+        let tag = if tier == ComputeTier::Fast { " fast" } else { "" };
+        println!(
+            "# compute tier: {} (dispatch {})",
+            tier.name(),
+            if tier == ComputeTier::Fast { dispatch_name() } else { "scalar" }
+        );
+        for (label, chunk) in [("resident", 0usize), ("chunk64", 64), ("chunk512", 512)] {
+            b.bench(&format!("dis_kpca/{label}{tag}"), || {
+                let shards = partition_power_law(&data, 4, 1);
+                let ((err, trace), _) = run_cluster_chunked(
+                    shards,
+                    kernel,
+                    Arc::new(NativeBackend::new()),
+                    chunk,
+                    move |cluster| {
+                        let _ = dis_kpca(cluster, kernel, &params).unwrap();
+                        dis_eval(cluster).unwrap()
+                    },
+                );
+                black_box((err, trace))
+            });
+        }
     }
+    set_compute_tier(ComputeTier::Exact);
 }
 
 fn main() {

@@ -85,6 +85,14 @@ COMMON FLAGS
                                tree merges worker R factors pairwise (TSQR),
                                cutting the master's per-round gather cost from
                                O(s·t·p) to O(t²) words per merge level
+  --compute-tier exact|fast    numeric kernel tier (default exact, env
+                               DISKPCA_COMPUTE_TIER): exact is bit-reproducible
+                               scalar code; fast opts into explicit-SIMD
+                               (AVX2/FMA) GEMM, RFF/cos, FWHT and Gram loops —
+                               results differ from exact only within the
+                               documented accuracy bounds (tests/
+                               fast_tier_accuracy.rs) and stay deterministic
+                               for every thread count within the tier
   --elastic                    master: survive worker deaths — keep listening,
                                attach the next rejoining worker to the dead
                                slot, replay its round state, retry the round;

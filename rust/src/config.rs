@@ -88,6 +88,21 @@ impl Config {
         self.vals.keys().map(|s| s.as_str())
     }
 
+    /// The numeric compute tier encoded in this config (CLI flag
+    /// `--compute-tier`; the underscore spelling works in config
+    /// files, the dash spelling wins when both are present). Not a
+    /// [`crate::coordinator::Params`] field — the tier is process-wide
+    /// state ([`crate::linalg::simd::set_compute_tier`]), applied by
+    /// the launcher entry points, and `exact` when unset.
+    pub fn compute_tier(&self) -> crate::linalg::simd::ComputeTier {
+        let raw = self.get("compute-tier").or_else(|| self.get("compute_tier"));
+        match raw {
+            None => crate::linalg::simd::ComputeTier::Exact,
+            Some(v) => crate::linalg::simd::ComputeTier::from_name(v)
+                .unwrap_or_else(|| panic!("config compute-tier={v}: expected exact|fast")),
+        }
+    }
+
     /// The protocol parameters encoded in this config.
     pub fn params(&self) -> crate::coordinator::Params {
         let d = crate::coordinator::Params::default();
@@ -170,5 +185,23 @@ mod tests {
     fn bad_type_panics() {
         let cfg = Config::parse("k = abc\n").unwrap();
         cfg.usize_or("k", 0);
+    }
+
+    #[test]
+    fn compute_tier_both_spellings_default_exact() {
+        use crate::linalg::simd::ComputeTier;
+        assert_eq!(Config::new().compute_tier(), ComputeTier::Exact);
+        let cfg = Config::parse("compute_tier = fast\n").unwrap();
+        assert_eq!(cfg.compute_tier(), ComputeTier::Fast);
+        // the CLI flag spelling wins when both are present
+        let cfg = Config::parse("compute_tier = fast\ncompute-tier = exact\n").unwrap();
+        assert_eq!(cfg.compute_tier(), ComputeTier::Exact);
+    }
+
+    #[test]
+    #[should_panic(expected = "config compute-tier=turbo")]
+    fn bad_compute_tier_panics() {
+        let cfg = Config::parse("compute-tier = turbo\n").unwrap();
+        cfg.compute_tier();
     }
 }

@@ -52,6 +52,9 @@ impl Ctx {
         // driven from this context (native and XLA paths alike);
         // absent or 0 leaves the pool (and DISKPCA_THREADS) untouched.
         cfg.params().apply_threads();
+        // `--compute-tier exact|fast` selects the numeric kernels for
+        // every run driven from this context (default exact)
+        crate::linalg::simd::set_compute_tier(cfg.compute_tier());
         Ok(Self {
             scale: cfg.f64_or("scale", 0.1),
             backend,

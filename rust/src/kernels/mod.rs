@@ -137,6 +137,11 @@ pub fn gram(kernel: Kernel, y: &Mat, x: &Data) -> Mat {
             // elementwise kernel map; mirrors the L1 tiling.
             let dots = y.matmul_at_b(xd); // ny×n
             let xnorms = xd.col_norms_sq();
+            // fast tier: stage the Gauss exponents into the output row
+            // and exponentiate with the branchless polynomial exp (the
+            // other families' maps have no transcendental hot loop)
+            let fast_gauss = crate::linalg::simd::fast_tier_active()
+                && matches!(kernel, Kernel::Gauss { .. });
             let body = |i0: usize, chunk: &mut [f64]| {
                 let rows = chunk.len() / n;
                 for r in 0..rows {
@@ -144,8 +149,15 @@ pub fn gram(kernel: Kernel, y: &Mat, x: &Data) -> Mat {
                     let yn = ynorms[i];
                     let drow = dots.row(i);
                     let orow = &mut chunk[r * n..(r + 1) * n];
-                    for j in 0..n {
-                        orow[j] = gram_entry(kernel, drow[j], yn, xnorms[j]);
+                    if let (true, Kernel::Gauss { gamma }) = (fast_gauss, kernel) {
+                        for j in 0..n {
+                            orow[j] = -gamma * (yn + xnorms[j] - 2.0 * drow[j]).max(0.0);
+                        }
+                        crate::linalg::simd::map_exp_fast(orow);
+                    } else {
+                        for j in 0..n {
+                            orow[j] = gram_entry(kernel, drow[j], yn, xnorms[j]);
+                        }
                     }
                 }
             };
@@ -229,12 +241,20 @@ fn gram_laplace(gamma: f64, y: &Mat, x: &Data) -> Mat {
         Data::Dense(xd) => {
             // materialize the shard columns once (not once per chunk)
             let xcols: Vec<Vec<f64>> = (0..n).map(|j| xd.col(j)).collect();
+            let fast = crate::linalg::simd::fast_tier_active();
             let body = |i0: usize, chunk: &mut [f64]| {
                 let rows = chunk.len() / n;
                 for (j, xc) in xcols.iter().enumerate() {
                     for r in 0..rows {
                         let d1 = l1_dist(xc, &ycols[i0 + r]);
-                        chunk[r * n + j] = (-gamma * d1).exp();
+                        // fast tier: stage the exponent, map below
+                        chunk[r * n + j] =
+                            if fast { -gamma * d1 } else { (-gamma * d1).exp() };
+                    }
+                }
+                if fast {
+                    for r in 0..rows {
+                        crate::linalg::simd::map_exp_fast(&mut chunk[r * n..(r + 1) * n]);
                     }
                 }
             };
@@ -335,13 +355,21 @@ pub fn rff_features(params: &RffParams, x: &Data) -> Mat {
         return out;
     }
     let b = &params.b;
-    // Row-parallel cos map (each feature row is independent).
+    // Row-parallel cos map (each feature row is independent). The
+    // fast tier swaps libm cos for the branchless polynomial map —
+    // the single hottest transcendental loop in the embed path.
+    let fast = crate::linalg::simd::fast_tier_active();
     let body = |i0: usize, chunk: &mut [f64]| {
         let rows = chunk.len() / n;
         for r in 0..rows {
             let bb = b[i0 + r];
-            for v in &mut chunk[r * n..(r + 1) * n] {
-                *v = scale * (*v + bb).cos();
+            let row = &mut chunk[r * n..(r + 1) * n];
+            if fast {
+                crate::linalg::simd::map_cos_fast(row, bb, scale);
+            } else {
+                for v in row {
+                    *v = scale * (*v + bb).cos();
+                }
             }
         }
     };
@@ -381,11 +409,45 @@ pub fn arccos_features(omega: &Mat, degree: u32, x: &Data) -> Mat {
     if n == 0 {
         return out;
     }
+    // Fast tier: branchless ReLU-power via max(0, ·). For v > 0 the
+    // arithmetic is identical to the powi form (deg 1: scale·v; deg 2:
+    // scale·v·v) and v ≤ 0 / NaN clamp to zero in both, so this map is
+    // value-identical to the exact branch (up to the sign of a zero) —
+    // the win is purely the removed data-dependent branch (select
+    // instead of jump).
+    let fast = crate::linalg::simd::fast_tier_active();
     let body = |_i0: usize, chunk: &mut [f64]| {
-        for v in chunk {
-            // Θ(wᵀx)·(wᵀx)^deg — degree 0 is the pure indicator
-            // (a.powi(0) would wrongly turn clamped zeros into ones).
-            *v = if *v > 0.0 { scale * v.powi(degree as i32) } else { 0.0 };
+        if fast {
+            match degree {
+                0 => {
+                    for v in chunk {
+                        *v = if *v > 0.0 { scale } else { 0.0 };
+                    }
+                }
+                1 => {
+                    for v in chunk {
+                        *v = scale * v.max(0.0);
+                    }
+                }
+                2 => {
+                    for v in chunk {
+                        let t = v.max(0.0);
+                        *v = scale * t * t;
+                    }
+                }
+                _ => {
+                    for v in chunk {
+                        let t = v.max(0.0);
+                        *v = scale * t.powi(degree as i32);
+                    }
+                }
+            }
+        } else {
+            for v in chunk {
+                // Θ(wᵀx)·(wᵀx)^deg — degree 0 is the pure indicator
+                // (a.powi(0) would wrongly turn clamped zeros into ones).
+                *v = if *v > 0.0 { scale * v.powi(degree as i32) } else { 0.0 };
+            }
         }
     };
     if crate::linalg::parallel_worthwhile(m * n, 4) {

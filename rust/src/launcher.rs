@@ -183,6 +183,7 @@ pub fn master(cfg: &Config) -> Result<(), LaunchError> {
     let kernel = kernel_from_flags(cfg)?;
     let params = cfg.params();
     params.apply_threads();
+    crate::linalg::simd::set_compute_tier(cfg.compute_tier());
     eprintln!("master: waiting for {s} workers on {addr} …");
     let t0;
     let (cluster, sol, err, trace) = if cfg.bool_or("elastic", false) {
@@ -268,8 +269,10 @@ pub fn worker(cfg: &Config) -> Result<(), LaunchError> {
     };
     let kernel = kernel_from_flags(cfg)?;
     // worker processes size their own pool from --threads (absent or
-    // 0 leaves the pool and DISKPCA_THREADS untouched)
+    // 0 leaves the pool and DISKPCA_THREADS untouched) and select
+    // their numeric tier from --compute-tier (default exact)
     params.apply_threads();
+    crate::linalg::simd::set_compute_tier(cfg.compute_tier());
     let backend = backend_from_name(
         cfg.str_or("backend", "native"),
         cfg.str_or("artifacts", "artifacts"),
@@ -362,6 +365,11 @@ pub fn serve(cfg: &Config, dataset: &str) -> Result<(), LaunchError> {
     serve_cfg.max_inflight = cfg.usize_or("max-inflight", serve_cfg.max_inflight).max(1);
     serve_cfg.queue_depth = cfg.usize_or("queue-depth", serve_cfg.queue_depth).max(1);
     serve_cfg.pipeline_depth = cfg.usize_or("pipeline-depth", serve_cfg.pipeline_depth).max(1);
+    // --compute-tier overrides DISKPCA_COMPUTE_TIER when set;
+    // ServiceBuilder::build applies the result process-wide
+    if cfg.get("compute-tier").or_else(|| cfg.get("compute_tier")).is_some() {
+        serve_cfg.compute_tier = cfg.compute_tier();
+    }
 
     let mut service = if let Some(addr) = cfg.get("listen") {
         let s = cfg.usize_or("workers", 2);

@@ -78,18 +78,34 @@ pub fn ifft_to_real(mut x: Vec<C>) -> Vec<f64> {
 }
 
 /// In-place fast Walsh–Hadamard transform (unnormalized).
+///
+/// Under the fast tier ([`crate::linalg::simd`]) layers with stride
+/// h ≥ 4 run the lane-wise butterfly
+/// ([`crate::linalg::simd::fwht_butterfly_fast`]); since a butterfly
+/// is pairwise `a+b` / `a−b` with no reassociation, the fast tier is
+/// **bit-identical** to the scalar loop here — the one fast-tier
+/// kernel with a stronger-than-bound guarantee. The tier is read once
+/// per transform.
 pub fn fwht_inplace(x: &mut [f64]) {
     let n = x.len();
     assert!(n.is_power_of_two());
+    let fast = crate::linalg::simd::fast_tier_active();
     let mut h = 1;
     while h < n {
         let mut i = 0;
         while i < n {
-            for k in i..i + h {
-                let a = x[k];
-                let b = x[k + h];
-                x[k] = a + b;
-                x[k + h] = a - b;
+            if fast && h >= 4 {
+                // h is a power of two ≥ 4, so both halves are whole
+                // multiples of the 4-wide lanes
+                let (lo, hi) = x[i..i + 2 * h].split_at_mut(h);
+                crate::linalg::simd::fwht_butterfly_fast(lo, hi);
+            } else {
+                for k in i..i + h {
+                    let a = x[k];
+                    let b = x[k + h];
+                    x[k] = a + b;
+                    x[k + h] = a - b;
+                }
             }
             i += 2 * h;
         }

@@ -37,6 +37,16 @@
 //! `tests/gemm_parity.rs` pins all of this against the [`reference`]
 //! loops bit-for-bit, including NaN/∞ inputs and ragged shapes.
 //!
+//! When the opt-in fast tier is active ([`super::simd`]), `panel_body`
+//! swaps the scalar tile for the explicit-SIMD
+//! [`super::simd::microkernel_fast`] and the dot-based paths use the
+//! FMA dots — same packing, same tiling, same output partitioning, so
+//! the fast tier stays self-deterministic across thread counts; only
+//! the per-element rounding differs (see the simd module's accuracy
+//! contract). The exact tier's bit-identity contract above is
+//! untouched: tier selection happens strictly outside the pinned
+//! kernels.
+//!
 //! # Scratch arenas
 //!
 //! Packing buffers live in a reusable [`Scratch`] arena. The zero-
@@ -59,10 +69,23 @@ pub const MR: usize = 4;
 /// Microkernel tile columns (B panel width).
 pub const NR: usize = 8;
 
-/// Below this `m·n·k` flop count the packed path's pack passes cost
-/// more than they save; dispatch runs the [`reference`] loops instead
-/// (bit-identical either way — this is purely a latency knob).
-const PACKED_MIN_FLOPS: usize = 1 << 13;
+/// Dispatch threshold on the product `m·n·k` — the number of fused
+/// multiply-adds in the product, **not** FLOPs (each m·n·k step is one
+/// multiply plus one add, i.e. 2·m·n·k FLOPs; the constant's old name
+/// `PACKED_MIN_FLOPS` misstated this by 2×). Below it the packed
+/// path's pack passes cost more than they save, so dispatch runs the
+/// [`reference`] loops instead (bit-identical either way — this is
+/// purely a latency knob). See [`uses_packed`] for the predicate the
+/// dispatchers share.
+const PACKED_MIN_MNK: usize = 1 << 13;
+
+/// Would `matmul`/`matmul_at_b` take the packed register-tiled path
+/// for an m×k · k×n product? True iff `m·n·max(k, 1)` (saturating)
+/// reaches [`PACKED_MIN_MNK`]. Exposed so tests can pin the dispatch
+/// boundary from both sides without timing anything.
+pub fn uses_packed(m: usize, k: usize, n: usize) -> bool {
+    m.saturating_mul(n).saturating_mul(k.max(1)) >= PACKED_MIN_MNK
+}
 
 /// Reusable packing arena holding the shared B column panels for one
 /// product (read-only while a parallel region runs; the per-thread A
@@ -224,6 +247,15 @@ fn microkernel(k: usize, apack: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR
 /// Sweep one block of output rows: pack each `MR`-row A tile once,
 /// then run the microkernel against every B panel, writing the live
 /// `mw`×`jw` corner of each accumulator tile back to `chunk`.
+///
+/// `fast` selects the explicit-SIMD fast-tier microkernel
+/// ([`super::simd::microkernel_fast`]) instead of the exact scalar
+/// tile. The caller reads the tier **once per product** and threads it
+/// here, so a mid-product tier flip can never mix kernels within one
+/// result. Note: fast-tier padding stays sound without the zero-skip —
+/// padded A lanes contribute `0.0 · b` to accumulator rows `mw..MR`
+/// that are never written back, and padded B lanes land in columns
+/// `jw..NR` that are never written back either.
 fn panel_body<F: Fn(usize, usize, &mut [f64])>(
     row0: usize,
     chunk: &mut [f64],
@@ -231,6 +263,7 @@ fn panel_body<F: Fn(usize, usize, &mut [f64])>(
     k: usize,
     bpack: &[f64],
     pack_tile: &F,
+    fast: bool,
 ) {
     let rows = chunk.len() / n;
     with_apack(|apack| {
@@ -248,7 +281,11 @@ fn panel_body<F: Fn(usize, usize, &mut [f64])>(
                 let jw = NR.min(n - jp);
                 let bpanel = &bpack[jp * k..jp * k + k * NR];
                 let mut acc = [[0.0f64; NR]; MR];
-                microkernel(k, apack, bpanel, &mut acc);
+                if fast {
+                    super::simd::microkernel_fast(k, apack, bpanel, &mut acc);
+                } else {
+                    microkernel(k, apack, bpanel, &mut acc);
+                }
                 for r in 0..mw {
                     let at = (bi + r) * n + jp;
                     let orow = &mut chunk[at..at + jw];
@@ -267,7 +304,7 @@ fn panel_body<F: Fn(usize, usize, &mut [f64])>(
 // Entry points (wired from `Mat`)
 // ------------------------------------------------------------------
 
-/// `a · b` — dispatch: reference loops below `PACKED_MIN_FLOPS`,
+/// `a · b` — dispatch: reference loops below `PACKED_MIN_MNK`,
 /// packed microkernel (row-parallel on the [`crate::par`] pool) above.
 /// Both paths are bit-identical.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
@@ -284,7 +321,7 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     if m == 0 || n == 0 {
         return Mat::zeros(m, n);
     }
-    if m.saturating_mul(n).saturating_mul(k.max(1)) < PACKED_MIN_FLOPS {
+    if !uses_packed(m, k, n) {
         return reference::matmul(a, b);
     }
     with_thread_scratch(|s| matmul_with(a, b, s))
@@ -302,9 +339,10 @@ pub fn matmul_with(a: &Mat, b: &Mat, scratch: &mut Scratch) -> Mat {
     }
     pack_b(b, &mut scratch.bpack);
     let bpack = &scratch.bpack[..];
+    let fast = super::simd::fast_tier_active();
     let pack_tile = |row0: usize, mw: usize, apack: &mut [f64]| pack_a_rows(a, row0, mw, apack);
     let body =
-        |row0: usize, chunk: &mut [f64]| panel_body(row0, chunk, n, k, bpack, &pack_tile);
+        |row0: usize, chunk: &mut [f64]| panel_body(row0, chunk, n, k, bpack, &pack_tile, fast);
     if parallel_worthwhile(m * n, k) {
         crate::par::par_chunks(out.data_mut(), n, body);
     } else {
@@ -320,7 +358,7 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     if m == 0 || n == 0 {
         return Mat::zeros(m, n);
     }
-    if m.saturating_mul(n).saturating_mul(k.max(1)) < PACKED_MIN_FLOPS {
+    if !uses_packed(m, k, n) {
         return reference::matmul_at_b(a, b);
     }
     with_thread_scratch(|s| matmul_at_b_with(a, b, s))
@@ -336,9 +374,10 @@ pub fn matmul_at_b_with(a: &Mat, b: &Mat, scratch: &mut Scratch) -> Mat {
     }
     pack_b(b, &mut scratch.bpack);
     let bpack = &scratch.bpack[..];
+    let fast = super::simd::fast_tier_active();
     let pack_tile = |col0: usize, mw: usize, apack: &mut [f64]| pack_a_cols(a, col0, mw, apack);
     let body =
-        |row0: usize, chunk: &mut [f64]| panel_body(row0, chunk, n, k, bpack, &pack_tile);
+        |row0: usize, chunk: &mut [f64]| panel_body(row0, chunk, n, k, bpack, &pack_tile, fast);
     if parallel_worthwhile(m * n, k) {
         crate::par::par_chunks(out.data_mut(), n, body);
     } else {
@@ -358,6 +397,7 @@ pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     if m == 0 || n == 0 {
         return out;
     }
+    let fast = super::simd::fast_tier_active();
     let body = |row0: usize, chunk: &mut [f64]| {
         let rows = chunk.len() / n;
         for r in 0..rows {
@@ -365,12 +405,21 @@ pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
             let orow = &mut chunk[r * n..(r + 1) * n];
             let mut j = 0;
             while j + 4 <= n {
-                let d = dot4(arow, [b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3)]);
+                let rows4 = [b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3)];
+                let d = if fast {
+                    super::simd::dot4_fast(arow, rows4)
+                } else {
+                    dot4(arow, rows4)
+                };
                 orow[j..j + 4].copy_from_slice(&d);
                 j += 4;
             }
             while j < n {
-                orow[j] = dot(arow, b.row(j));
+                orow[j] = if fast {
+                    super::simd::dot_fast(arow, b.row(j))
+                } else {
+                    dot(arow, b.row(j))
+                };
                 j += 1;
             }
         }
@@ -587,6 +636,28 @@ mod tests {
                 let want = dot(a.row(0), b.row(j));
                 assert_eq!(got[j].to_bits(), want.to_bits(), "n={n} j={j}");
             }
+        }
+    }
+
+    #[test]
+    fn dispatch_boundary_is_pinned_on_both_sides() {
+        // PACKED_MIN_MNK counts m·n·k fused multiply-adds (not FLOPs);
+        // 8192 = 16·32·16 sits exactly on the packed side
+        assert_eq!(PACKED_MIN_MNK, 16 * 32 * 16);
+        assert!(uses_packed(16, 32, 16), "at the threshold: packed");
+        assert!(!uses_packed(16, 31, 16), "one k below: reference");
+        assert!(uses_packed(1, 8192, 1));
+        assert!(!uses_packed(1, 8191, 1));
+        // k = 0 counts as 1, so degenerate inner dims still dispatch
+        assert!(!uses_packed(64, 0, 64));
+        assert!(uses_packed(128, 0, 64));
+        // saturating product: absurd shapes must not overflow
+        assert!(uses_packed(usize::MAX, usize::MAX, usize::MAX));
+        // either side of the boundary, results are bit-identical
+        for &(m, k, n) in &[(16usize, 32usize, 16usize), (16, 31, 16)] {
+            let a = testmat(11, m, k);
+            let b = testmat(12, k, n);
+            assert!(bits_equal(&matmul(&a, &b), &reference::matmul(&a, &b)), "{m}x{k}x{n}");
         }
     }
 

@@ -201,7 +201,10 @@ impl Mat {
         // Upper-triangle accumulation over a contiguous row range.
         // Per-entry the sum runs over kb-chunks in ascending order —
         // identical for any row partitioning, so the parallel split
-        // below is bit-identical to the serial pass.
+        // below is bit-identical to the serial pass. The fast tier
+        // swaps in the FMA dots (read once per product; chunk order
+        // and partitioning unchanged, so it stays self-deterministic).
+        let fast = super::simd::fast_tier_active();
         let body = |r0: usize, chunk: &mut [f64]| {
             let rows = chunk.len() / m;
             for kb in (0..n).step_by(BK) {
@@ -219,22 +222,29 @@ impl Mat {
                             // so per-entry sums are unchanged bitwise)
                             let mut j = j0;
                             while j + 4 <= jend {
-                                let d = super::gemm::dot4(
-                                    ri,
-                                    [
-                                        &self.row(j)[kb..kend],
-                                        &self.row(j + 1)[kb..kend],
-                                        &self.row(j + 2)[kb..kend],
-                                        &self.row(j + 3)[kb..kend],
-                                    ],
-                                );
+                                let rows4 = [
+                                    &self.row(j)[kb..kend],
+                                    &self.row(j + 1)[kb..kend],
+                                    &self.row(j + 2)[kb..kend],
+                                    &self.row(j + 3)[kb..kend],
+                                ];
+                                let d = if fast {
+                                    super::simd::dot4_fast(ri, rows4)
+                                } else {
+                                    super::gemm::dot4(ri, rows4)
+                                };
                                 for l in 0..4 {
                                     chunk[i * m + j + l] += d[l];
                                 }
                                 j += 4;
                             }
                             while j < jend {
-                                chunk[i * m + j] += dot(ri, &self.row(j)[kb..kend]);
+                                let rj = &self.row(j)[kb..kend];
+                                chunk[i * m + j] += if fast {
+                                    super::simd::dot_fast(ri, rj)
+                                } else {
+                                    dot(ri, rj)
+                                };
                                 j += 1;
                             }
                         }

@@ -8,11 +8,13 @@ pub mod eig;
 pub mod fft;
 pub mod gemm;
 pub mod qr;
+pub mod simd;
 mod svd;
 
 pub use chol::{chol_psd, cholesky};
 pub use eig::{eigh, top_eigh};
 pub use mat::{dot, peak_mat_elems, reset_peak_mat_elems, Mat};
+pub use simd::{compute_tier, set_compute_tier, ComputeTier};
 pub(crate) use mat::{parallel_worthwhile, PAR_FLOPS_MIN};
 pub use qr::{inv_upper, qr_r_only, qr_thin, solve_lower, solve_upper, solve_upper_transpose_mat};
 pub use svd::{svd, top_k_left_singular};

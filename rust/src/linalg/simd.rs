@@ -1,0 +1,653 @@
+//! Explicit-SIMD fast compute tier: f64×4 kernels with runtime
+//! feature dispatch, behind an opt-in process-global [`ComputeTier`].
+//!
+//! The exact tier (the default) is the bit-identity contract the rest
+//! of the crate pins in its parity suites: single accumulation chain
+//! per output element, ascending k, the `a == 0.0` zero-skip of
+//! [`crate::linalg::gemm`]. The fast tier trades that contract for
+//! throughput: FMA contraction, no zero-skip, branchless polynomial
+//! transcendentals. It is **self-deterministic** — for a fixed binary
+//! on fixed hardware, results are identical across runs and thread
+//! counts, because tiling still partitions output elements and never
+//! splits a reduction — but it is *not* bit-identical to the exact
+//! tier, and may differ across CPUs (AVX2 vs portable fallback).
+//! `tests/fast_tier_accuracy.rs` gates it with documented bounds.
+//!
+//! # Lane layout and dispatch
+//!
+//! | kernel | AVX2+FMA (f64x4) | portable fallback |
+//! |---|---|---|
+//! | GEMM microkernel | 4×8 tile in 8 ymm accumulators | `[[f64; 8]; 4]` loop, no zero-skip |
+//! | [`dot_fast`]/[`dot4_fast`] | fused multiply-add lanes | exact [`dot`]/[`dot4`] |
+//! | [`fwht_butterfly_fast`] | `_mm256_add_pd`/`_mm256_sub_pd` | pairwise a+b / a−b |
+//! | [`cos_fast`]/[`exp_fast`] | autovectorized branchless poly | same code (scalar) |
+//!
+//! Dispatch is decided at runtime via `is_x86_feature_detected!`
+//! (cached by std after the first query); [`set_force_portable`] pins
+//! the portable fallback for tests. An f64×8 AVX-512 microkernel
+//! exists behind `cfg(target_feature = "avx512f")` — compiled only
+//! when the build itself targets AVX-512 (`-C
+//! target-feature=+avx512f` / `target-cpu=native` on such a machine),
+//! never in default builds, because the intrinsics' availability
+//! cannot be assumed of every toolchain the crate must build on.
+//!
+//! # Accuracy contract (asserted by `tests/fast_tier_accuracy.rs`)
+//!
+//! - GEMM / dot kernels: same products and sums as the exact tier but
+//!   FMA-contracted and without the zero-skip ⇒ per-element relative
+//!   error vs exact ≤ a few ulp of the accumulated magnitude; the
+//!   suite asserts relative Frobenius error ≤ 1e-13 on conditioned
+//!   inputs. NaN/∞/-0.0 propagation may differ (no zero-skip).
+//! - [`fwht_butterfly_fast`]: pairwise a+b / a−b with no
+//!   reassociation — **bit-identical** to the scalar butterfly.
+//! - [`cos_fast`]: Cody–Waite 3-term π/2 reduction + fdlibm minimax
+//!   polynomials; |err| ≤ 5e-15 absolute for |x| ≤ 1e6 (larger
+//!   arguments take the libm path).
+//! - [`exp_fast`]: cephes-style 2^n·expm1 rational; relative error
+//!   ≤ 1e-14 for |x| ≤ 708 (extremes and NaN take the libm path).
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+
+use super::gemm::{dot4, MR, NR};
+use super::mat::dot;
+
+// ------------------------------------------------------------------
+// Tier selection
+// ------------------------------------------------------------------
+
+/// Which compute tier the process-wide hot loops run.
+///
+/// `Exact` (the default) keeps the bit-identity contract of the
+/// historical loops; `Fast` enables the explicit-SIMD kernels in this
+/// module. Selected via `--compute-tier`, the `compute-tier` config
+/// key, or `DISKPCA_COMPUTE_TIER` (strictly parsed through
+/// [`crate::serve::ServeConfig::parse`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ComputeTier {
+    #[default]
+    Exact,
+    Fast,
+}
+
+impl ComputeTier {
+    /// The CLI/config/env spelling (`exact` | `fast`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ComputeTier::Exact => "exact",
+            ComputeTier::Fast => "fast",
+        }
+    }
+
+    /// Inverse of [`ComputeTier::name`]; `None` on anything else.
+    pub fn from_name(v: &str) -> Option<Self> {
+        match v.trim() {
+            "exact" => Some(ComputeTier::Exact),
+            "fast" => Some(ComputeTier::Fast),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a `DISKPCA_COMPUTE_TIER` value (`None` = unset ⇒ the exact
+/// default). A malformed value is a hard error naming the variable —
+/// the same strict convention as every other serving knob.
+pub fn parse_compute_tier(raw: Option<&str>) -> Result<ComputeTier, String> {
+    match raw {
+        None => Ok(ComputeTier::Exact),
+        Some(v) => ComputeTier::from_name(v)
+            .ok_or_else(|| format!("DISKPCA_COMPUTE_TIER={v}: expected exact|fast")),
+    }
+}
+
+/// Process-global tier, mirroring the `crate::par` thread-count knob:
+/// 0 = Exact, 1 = Fast. Relaxed ordering suffices — hot loops read it
+/// once per product, and a tier flip between products is exactly the
+/// granularity the knob promises.
+static TIER: AtomicU8 = AtomicU8::new(0);
+
+/// Select the process-wide compute tier (see [`ComputeTier`]).
+pub fn set_compute_tier(tier: ComputeTier) {
+    TIER.store(tier as u8, Ordering::Relaxed);
+}
+
+/// The currently selected tier.
+pub fn compute_tier() -> ComputeTier {
+    if fast_tier_active() {
+        ComputeTier::Fast
+    } else {
+        ComputeTier::Exact
+    }
+}
+
+/// `compute_tier() == Fast` — the predicate the hot loops read once
+/// per product (so a mid-product flip can never mix kernels within
+/// one result).
+#[inline]
+pub fn fast_tier_active() -> bool {
+    TIER.load(Ordering::Relaxed) != 0
+}
+
+/// Test hook: pin the portable fallback even when AVX2 is available,
+/// so the accuracy suite exercises both dispatch arms on one machine.
+pub fn set_force_portable(on: bool) {
+    FORCE_PORTABLE.store(on, Ordering::Relaxed);
+}
+
+static FORCE_PORTABLE: AtomicBool = AtomicBool::new(false);
+
+#[inline]
+fn simd_allowed() -> bool {
+    !FORCE_PORTABLE.load(Ordering::Relaxed)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn avx2_available() -> bool {
+    // std caches the CPUID probe behind an atomic after first use
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn avx2_available() -> bool {
+    false
+}
+
+/// Which fast-tier kernel arm dispatch would pick right now — the
+/// attribution note benches and tests record next to their rows.
+pub fn dispatch_name() -> &'static str {
+    #[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
+    {
+        if simd_allowed() {
+            return "avx512";
+        }
+    }
+    if simd_allowed() && avx2_available() {
+        "avx2"
+    } else {
+        "portable"
+    }
+}
+
+// ------------------------------------------------------------------
+// GEMM microkernel (fast tier's counterpart of gemm::microkernel)
+// ------------------------------------------------------------------
+
+/// Fast-tier `MR`×`NR` register tile: accumulates `apack · bpanel`
+/// into `acc` over k in ascending order, FMA-contracted, **without**
+/// the exact tier's `a == 0.0` skip. Same packing layout and tile
+/// semantics as `gemm::microkernel`, so the two are drop-in
+/// interchangeable inside `panel_body`.
+#[inline]
+pub fn microkernel_fast(k: usize, apack: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR]) {
+    debug_assert!(apack.len() >= k * MR);
+    debug_assert!(bpanel.len() >= k * NR);
+    #[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
+    {
+        if simd_allowed() {
+            unsafe { microkernel_avx512(k, apack, bpanel, acc) };
+            return;
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_allowed() && avx2_available() {
+            unsafe { microkernel_avx2(k, apack, bpanel, acc) };
+            return;
+        }
+    }
+    microkernel_portable(k, apack, bpanel, acc);
+}
+
+/// Portable 4-lane-shaped fallback: the exact microkernel's loop
+/// minus the zero-skip, which is what lets LLVM autovectorize the
+/// column sweep. Differs from exact only where the skip is observable
+/// (`0.0 · {∞, NaN}`, `-0.0` accumulators) and by any FMA the
+/// autovectorizer contracts.
+fn microkernel_portable(k: usize, apack: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR]) {
+    for kk in 0..k {
+        let a = &apack[kk * MR..kk * MR + MR];
+        let b = &bpanel[kk * NR..kk * NR + NR];
+        for r in 0..MR {
+            let av = a[r];
+            for (ac, &bc) in acc[r].iter_mut().zip(b.iter()) {
+                *ac += av * bc;
+            }
+        }
+    }
+}
+
+/// 4×8 tile in 8 ymm accumulators (4 rows × 2 f64x4 column vectors),
+/// one broadcast + two FMAs per row per k step.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn microkernel_avx2(k: usize, apack: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR]) {
+    use core::arch::x86_64::*;
+    let mut c0 = [_mm256_setzero_pd(); MR];
+    let mut c1 = [_mm256_setzero_pd(); MR];
+    for r in 0..MR {
+        c0[r] = _mm256_loadu_pd(acc[r].as_ptr());
+        c1[r] = _mm256_loadu_pd(acc[r].as_ptr().add(4));
+    }
+    let ap = apack.as_ptr();
+    let bp = bpanel.as_ptr();
+    for kk in 0..k {
+        let b0 = _mm256_loadu_pd(bp.add(kk * NR));
+        let b1 = _mm256_loadu_pd(bp.add(kk * NR + 4));
+        for r in 0..MR {
+            let a = _mm256_set1_pd(*ap.add(kk * MR + r));
+            c0[r] = _mm256_fmadd_pd(a, b0, c0[r]);
+            c1[r] = _mm256_fmadd_pd(a, b1, c1[r]);
+        }
+    }
+    for r in 0..MR {
+        _mm256_storeu_pd(acc[r].as_mut_ptr(), c0[r]);
+        _mm256_storeu_pd(acc[r].as_mut_ptr().add(4), c1[r]);
+    }
+}
+
+/// f64x8 variant: the whole `NR`-wide tile row is one zmm register.
+/// Only compiled when the build itself targets AVX-512 (see module
+/// docs) — default builds never see this code.
+#[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
+#[target_feature(enable = "avx512f")]
+unsafe fn microkernel_avx512(k: usize, apack: &[f64], bpanel: &[f64], acc: &mut [[f64; NR]; MR]) {
+    use core::arch::x86_64::*;
+    let mut c = [_mm512_setzero_pd(); MR];
+    for r in 0..MR {
+        c[r] = _mm512_loadu_pd(acc[r].as_ptr());
+    }
+    let ap = apack.as_ptr();
+    let bp = bpanel.as_ptr();
+    for kk in 0..k {
+        let b = _mm512_loadu_pd(bp.add(kk * NR));
+        for r in 0..MR {
+            c[r] = _mm512_fmadd_pd(_mm512_set1_pd(*ap.add(kk * MR + r)), b, c[r]);
+        }
+    }
+    for r in 0..MR {
+        _mm512_storeu_pd(acc[r].as_mut_ptr(), c[r]);
+    }
+}
+
+// ------------------------------------------------------------------
+// Dot products (fast tier's counterpart of mat::dot / gemm::dot4)
+// ------------------------------------------------------------------
+
+/// Fast-tier dot product: FMA lanes with [`dot`]'s `(s0+s1)+(s2+s3)`
+/// combine and sequential tail. Portable fallback *is* the exact
+/// [`dot`].
+#[inline]
+pub fn dot_fast(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_allowed() && avx2_available() {
+            return unsafe { dot_avx2(a, b) };
+        }
+    }
+    dot(a, b)
+}
+
+/// Fast-tier [`dot4`]: four FMA accumulator vectors sharing one pass
+/// over `a`. Portable fallback is the exact [`dot4`].
+#[inline]
+pub fn dot4_fast(a: &[f64], bs: [&[f64]; 4]) -> [f64; 4] {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_allowed() && avx2_available() {
+            return unsafe { dot4_avx2(a, bs) };
+        }
+    }
+    dot4(a, bs)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+    use core::arch::x86_64::*;
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = _mm256_setzero_pd();
+    for c in 0..chunks {
+        let i = 4 * c;
+        let av = _mm256_loadu_pd(a.as_ptr().add(i));
+        let bv = _mm256_loadu_pd(b.as_ptr().add(i));
+        acc = _mm256_fmadd_pd(av, bv, acc);
+    }
+    let mut l = [0.0f64; 4];
+    _mm256_storeu_pd(l.as_mut_ptr(), acc);
+    let mut s = (l[0] + l[1]) + (l[2] + l[3]);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot4_avx2(a: &[f64], bs: [&[f64]; 4]) -> [f64; 4] {
+    use core::arch::x86_64::*;
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = [_mm256_setzero_pd(); 4];
+    for c in 0..chunks {
+        let i = 4 * c;
+        let av = _mm256_loadu_pd(a.as_ptr().add(i));
+        for (j, accj) in acc.iter_mut().enumerate() {
+            let bv = _mm256_loadu_pd(bs[j].as_ptr().add(i));
+            *accj = _mm256_fmadd_pd(av, bv, *accj);
+        }
+    }
+    let mut out = [0.0f64; 4];
+    for j in 0..4 {
+        let mut l = [0.0f64; 4];
+        _mm256_storeu_pd(l.as_mut_ptr(), acc[j]);
+        let mut s = (l[0] + l[1]) + (l[2] + l[3]);
+        let b = bs[j];
+        for i in 4 * chunks..n {
+            s += a[i] * b[i];
+        }
+        out[j] = s;
+    }
+    out
+}
+
+// ------------------------------------------------------------------
+// FWHT butterfly (fast tier's inner loop of fft::fwht_inplace)
+// ------------------------------------------------------------------
+
+/// One butterfly layer over a stride-`h` block: `lo`/`hi` are the two
+/// length-`h` halves; computes `(a+b, a−b)` pairwise. The arithmetic
+/// is exactly the scalar butterfly's (one add, one sub per pair, no
+/// reassociation), so this is **bit-identical** to the exact tier —
+/// the lane layout only changes the instruction, not the math.
+pub fn fwht_butterfly_fast(lo: &mut [f64], hi: &mut [f64]) {
+    debug_assert_eq!(lo.len(), hi.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd_allowed() && avx2_available() && lo.len() % 4 == 0 {
+            unsafe { fwht_butterfly_avx2(lo, hi) };
+            return;
+        }
+    }
+    for (a, b) in lo.iter_mut().zip(hi.iter_mut()) {
+        let (x, y) = (*a, *b);
+        *a = x + y;
+        *b = x - y;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn fwht_butterfly_avx2(lo: &mut [f64], hi: &mut [f64]) {
+    use core::arch::x86_64::*;
+    let n = lo.len();
+    let lp = lo.as_mut_ptr();
+    let hp = hi.as_mut_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        let a = _mm256_loadu_pd(lp.add(i));
+        let b = _mm256_loadu_pd(hp.add(i));
+        _mm256_storeu_pd(lp.add(i), _mm256_add_pd(a, b));
+        _mm256_storeu_pd(hp.add(i), _mm256_sub_pd(a, b));
+        i += 4;
+    }
+}
+
+// ------------------------------------------------------------------
+// Branchless transcendentals (fast tier's cos / exp maps)
+// ------------------------------------------------------------------
+
+// Cody–Waite 3-term split of π/2 (fdlibm): q·π/2 subtracted in three
+// exact-ish pieces keeps the reduced argument accurate while q·PIO2_1
+// stays exactly representable (q < 2^20).
+const PIO2_1: f64 = 1.570_796_326_734_125_614_17;
+const PIO2_2: f64 = 6.077_100_506_506_192_249_32e-11;
+const PIO2_3: f64 = 2.022_266_248_795_950_631_54e-21;
+
+// fdlibm minimax coefficients on |r| ≤ π/4:
+// sin(r) ≈ r + r·z·(S1 + z·(…)), z = r².
+const S1: f64 = -1.666_666_666_666_663_243_48e-1;
+const S2: f64 = 8.333_333_333_322_489_461_24e-3;
+const S3: f64 = -1.984_126_982_985_794_931_34e-4;
+const S4: f64 = 2.755_731_370_707_006_767_89e-6;
+const S5: f64 = -2.505_076_025_340_686_341_95e-8;
+const S6: f64 = 1.589_690_995_211_550_102_21e-10;
+// cos(r) ≈ 1 − z/2 + z²·(C1 + z·(…)).
+const CC1: f64 = 4.166_666_666_666_660_190_37e-2;
+const CC2: f64 = -1.388_888_888_887_410_957_49e-3;
+const CC3: f64 = 2.475_756_233_595_816_708_17e-5;
+const CC4: f64 = -2.755_731_435_139_066_330_35e-7;
+const CC5: f64 = 2.087_572_321_298_174_827_90e-9;
+const CC6: f64 = -1.135_964_755_778_819_482_65e-11;
+
+/// Branchless `cos` for the RFF feature map: Cody–Waite reduction +
+/// fdlibm sin/cos polynomials with a quadrant select, no table, no
+/// data-dependent branch on the hot range — so the 4-lane loop in
+/// [`map_cos_fast`] autovectorizes. |err| ≤ 5e-15 for |x| ≤ 1e6;
+/// larger (or non-finite) arguments take the libm path.
+#[inline]
+pub fn cos_fast(x: f64) -> f64 {
+    if !(x.abs() <= 1.0e6) {
+        return x.cos(); // rare: huge args, ±∞, NaN
+    }
+    let qf = (x * std::f64::consts::FRAC_2_PI + 0.5).floor();
+    let iq = qf as i64;
+    let r = x - qf * PIO2_1 - qf * PIO2_2 - qf * PIO2_3;
+    let z = r * r;
+    let sinv = r + r * z * (S1 + z * (S2 + z * (S3 + z * (S4 + z * (S5 + z * S6)))));
+    let cosv =
+        1.0 - 0.5 * z + z * z * (CC1 + z * (CC2 + z * (CC3 + z * (CC4 + z * (CC5 + z * CC6)))));
+    // cos(r + q·π/2) cycles {cos r, −sin r, −cos r, sin r} with q mod 4
+    let v = if (iq & 1) != 0 { sinv } else { cosv };
+    if ((iq + 1) & 2) != 0 {
+        -v
+    } else {
+        v
+    }
+}
+
+// cephes-style exp: x = n·ln2 + r, exp(r) from a rational in r², then
+// one exact 2^n scale built from bits.
+const EXP_C1: f64 = 6.931_457_519_531_25e-1;
+const EXP_C2: f64 = 1.428_606_820_309_417_232_12e-6;
+const EXP_P0: f64 = 1.261_771_930_748_105_908_78e-4;
+const EXP_P1: f64 = 3.029_944_077_074_419_613_00e-2;
+const EXP_P2: f64 = 9.999_999_999_999_999_999_10e-1;
+const EXP_Q0: f64 = 3.001_985_051_386_644_550_42e-6;
+const EXP_Q1: f64 = 2.524_483_403_496_841_041_92e-3;
+const EXP_Q2: f64 = 2.272_655_482_081_550_287_66e-1;
+const EXP_Q3: f64 = 2.000_000_000_000_000_000_05;
+
+/// Branchless `exp` for the Gauss/Laplace gram maps. Relative error
+/// ≤ 1e-14 for |x| ≤ 708; extremes (overflow/underflow territory) and
+/// NaN take the libm path.
+#[inline]
+pub fn exp_fast(x: f64) -> f64 {
+    if !(x.abs() <= 708.0) {
+        return x.exp(); // rare: saturating args, ±∞, NaN
+    }
+    let qf = (std::f64::consts::LOG2_E * x + 0.5).floor();
+    let n = qf as i64;
+    let r = x - qf * EXP_C1 - qf * EXP_C2;
+    let z = r * r;
+    let p = r * ((EXP_P0 * z + EXP_P1) * z + EXP_P2);
+    let e = p / ((((EXP_Q0 * z + EXP_Q1) * z + EXP_Q2) * z + EXP_Q3) - p);
+    // 2^n exactly, via the exponent field (|n| ≤ 1022 after the clamp)
+    let scale = f64::from_bits(((n + 1023) as u64) << 52);
+    (1.0 + 2.0 * e) * scale
+}
+
+/// Fast-tier RFF map over one feature row: `v ← scale·cos(v + bias)`.
+pub fn map_cos_fast(v: &mut [f64], bias: f64, scale: f64) {
+    for x in v.iter_mut() {
+        *x = scale * cos_fast(*x + bias);
+    }
+}
+
+/// Fast-tier elementwise `v ← exp(v)` (the gram maps stage their
+/// exponents into the output row, then exponentiate in place).
+pub fn map_exp_fast(v: &mut [f64]) {
+    for x in v.iter_mut() {
+        *x = exp_fast(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    // NOTE: these unit tests never flip the process-global tier or the
+    // force-portable hook — lib tests share one process, and the gemm/
+    // parity suites in sibling modules assume the exact tier. The
+    // fast-tier switches are exercised in `tests/fast_tier_accuracy.rs`
+    // (its own binary, serialized around the global state).
+
+    #[test]
+    fn tier_parse_and_names_round_trip() {
+        assert_eq!(parse_compute_tier(None).unwrap(), ComputeTier::Exact);
+        assert_eq!(parse_compute_tier(Some("exact")).unwrap(), ComputeTier::Exact);
+        assert_eq!(parse_compute_tier(Some(" fast ")).unwrap(), ComputeTier::Fast);
+        for bad in ["Fast", "simd", "", "1"] {
+            let err = parse_compute_tier(Some(bad)).unwrap_err();
+            assert!(err.contains("DISKPCA_COMPUTE_TIER"), "{err}");
+            assert!(err.contains("expected exact|fast"), "{err}");
+        }
+        for t in [ComputeTier::Exact, ComputeTier::Fast] {
+            assert_eq!(ComputeTier::from_name(t.name()), Some(t));
+        }
+        assert_eq!(ComputeTier::default(), ComputeTier::Exact);
+    }
+
+    #[test]
+    fn microkernel_fast_matches_exact_tile_closely() {
+        let mut rng = Rng::seed_from(1);
+        for k in [1usize, 2, 7, 64, 257] {
+            let apack: Vec<f64> = (0..k * MR).map(|_| rng.normal()).collect();
+            let bpanel: Vec<f64> = (0..k * NR).map(|_| rng.normal()).collect();
+            // exact arithmetic oracle: one chain per element, ascending
+            // k, no skip needed (inputs are nonzero w.p. 1)
+            let mut want = [[0.0f64; NR]; MR];
+            for kk in 0..k {
+                for r in 0..MR {
+                    for c in 0..NR {
+                        want[r][c] += apack[kk * MR + r] * bpanel[kk * NR + c];
+                    }
+                }
+            }
+            let mut got = [[0.0f64; NR]; MR];
+            microkernel_fast(k, &apack, &bpanel, &mut got);
+            for r in 0..MR {
+                for c in 0..NR {
+                    let scale = (k as f64).sqrt().max(1.0);
+                    assert!(
+                        (got[r][c] - want[r][c]).abs() <= 1e-13 * scale,
+                        "k={k} ({r},{c}): {} vs {}",
+                        got[r][c],
+                        want[r][c]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn microkernel_fast_accumulates_into_acc() {
+        // panel_body hands the kernel a zeroed tile, but the contract
+        // is accumulation — pin it so the AVX2 load/store round trip
+        // can't silently become an overwrite
+        let apack = vec![1.0; MR];
+        let bpanel = vec![1.0; NR];
+        let mut acc = [[10.0f64; NR]; MR];
+        microkernel_fast(1, &apack, &bpanel, &mut acc);
+        for row in &acc {
+            for &v in row {
+                assert_eq!(v, 11.0);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_fast_and_dot4_fast_match_exact_closely() {
+        let mut rng = Rng::seed_from(2);
+        for n in [0usize, 1, 3, 4, 5, 31, 128, 1001] {
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let bs: Vec<Vec<f64>> = (0..4).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+            let tol = 1e-13 * (n as f64).sqrt().max(1.0);
+            let got = dot_fast(&a, &bs[0]);
+            assert!((got - dot(&a, &bs[0])).abs() <= tol, "n={n}");
+            let got4 = dot4_fast(&a, [&bs[0], &bs[1], &bs[2], &bs[3]]);
+            let want4 = dot4(&a, [&bs[0], &bs[1], &bs[2], &bs[3]]);
+            for j in 0..4 {
+                assert!((got4[j] - want4[j]).abs() <= tol, "n={n} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_butterfly_fast_is_bit_identical_to_scalar() {
+        let mut rng = Rng::seed_from(3);
+        for h in [4usize, 8, 32, 256] {
+            let lo0: Vec<f64> = (0..h).map(|_| rng.normal()).collect();
+            let hi0: Vec<f64> = (0..h).map(|_| rng.normal()).collect();
+            let (mut lo, mut hi) = (lo0.clone(), hi0.clone());
+            fwht_butterfly_fast(&mut lo, &mut hi);
+            for i in 0..h {
+                assert_eq!(lo[i].to_bits(), (lo0[i] + hi0[i]).to_bits());
+                assert_eq!(hi[i].to_bits(), (lo0[i] - hi0[i]).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn cos_fast_within_documented_bound() {
+        let mut rng = Rng::seed_from(4);
+        // quadrant edges and sign flips are the risk spots
+        for mult in 0..32 {
+            let x = mult as f64 * std::f64::consts::FRAC_PI_2;
+            for d in [-1e-8, 0.0, 1e-8] {
+                for s in [1.0, -1.0] {
+                    let t = s * (x + d);
+                    assert!((cos_fast(t) - t.cos()).abs() <= 5e-15, "x={t}");
+                }
+            }
+        }
+        for _ in 0..2000 {
+            let x = rng.uniform(-1.0e4, 1.0e4);
+            assert!((cos_fast(x) - x.cos()).abs() <= 5e-15, "x={x}");
+        }
+        assert!(cos_fast(f64::NAN).is_nan());
+        assert!(cos_fast(f64::INFINITY).is_nan());
+        // beyond the reduction range the libm path takes over exactly
+        let big = 3.7e7;
+        assert_eq!(cos_fast(big).to_bits(), big.cos().to_bits());
+    }
+
+    #[test]
+    fn exp_fast_within_documented_bound() {
+        let mut rng = Rng::seed_from(5);
+        for _ in 0..2000 {
+            let x = rng.uniform(-600.0, 600.0);
+            let got = exp_fast(x);
+            let want = x.exp();
+            assert!((got - want).abs() <= 1e-14 * want, "x={x}: {got} vs {want}");
+        }
+        for x in [0.0, -0.0, 1.0, -1.0, 700.0, -700.0] {
+            let got = exp_fast(x);
+            let want = x.exp();
+            assert!((got - want).abs() <= 1e-13 * want.max(f64::MIN_POSITIVE), "x={x}");
+        }
+        assert!(exp_fast(f64::NAN).is_nan());
+        assert_eq!(exp_fast(f64::INFINITY), f64::INFINITY);
+        assert_eq!(exp_fast(f64::NEG_INFINITY), 0.0);
+        assert_eq!(exp_fast(1000.0), f64::INFINITY);
+        assert_eq!(exp_fast(-1000.0), 0.0);
+    }
+
+    #[test]
+    fn dispatch_name_is_one_of_the_known_arms() {
+        assert!(["avx2", "avx512", "portable"].contains(&dispatch_name()));
+    }
+}

@@ -275,6 +275,9 @@ impl ServiceBuilder {
     /// convention).
     pub fn build(self) -> Service {
         let cfg = self.config.unwrap_or_else(ServeConfig::from_env);
+        // apply the configured numeric tier process-wide before any
+        // worker spawns, so every kernel the service runs sees it
+        crate::linalg::simd::set_compute_tier(cfg.compute_tier);
         let embed_cache_bytes = self.embed_cache_bytes;
         let mut recovery = self.recovery;
         let (cluster, handles) = match (self.cluster, self.shards) {

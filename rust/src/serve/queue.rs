@@ -12,6 +12,7 @@ use std::time::Duration;
 
 use crate::comm::{parse_comm_timeout, Message};
 use crate::coordinator::worker::parse_embed_cache_mb;
+use crate::linalg::simd::{parse_compute_tier, ComputeTier};
 use crate::runtime::parse_table_cache_mb;
 
 /// Every tunable the serving stack reads, in one typed struct.
@@ -24,13 +25,17 @@ use crate::runtime::parse_table_cache_mb;
 /// | `max_inflight` | `DISKPCA_MAX_INFLIGHT` | 1 (sequential) |
 /// | `queue_depth` | `DISKPCA_QUEUE_DEPTH` | 32 |
 /// | `pipeline_depth` | `DISKPCA_PIPELINE_DEPTH` | 2 |
+/// | `compute_tier` | `DISKPCA_COMPUTE_TIER` | exact |
 ///
 /// `max_inflight` is the scheduler's concurrent-job bound (1 keeps
 /// the bit-identical sequential path), `queue_depth` the admission
 /// queue bound beyond which submissions are rejected
 /// ([`Rejected::QueueFull`]), and `pipeline_depth` how many transform
 /// super-chunks [`crate::coordinator::dis_project_points`] keeps in
-/// flight per query batch.
+/// flight per query batch. `compute_tier` selects the numeric kernels
+/// ([`crate::linalg::simd::ComputeTier`]): `exact` is the
+/// bit-reproducible default, `fast` opts into the accuracy-gated SIMD
+/// tier.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ServeConfig {
     pub comm_timeout: Option<Duration>,
@@ -39,6 +44,7 @@ pub struct ServeConfig {
     pub max_inflight: usize,
     pub queue_depth: usize,
     pub pipeline_depth: usize,
+    pub compute_tier: ComputeTier,
 }
 
 impl Default for ServeConfig {
@@ -50,6 +56,7 @@ impl Default for ServeConfig {
             max_inflight: 1,
             queue_depth: 32,
             pipeline_depth: 2,
+            compute_tier: ComputeTier::Exact,
         }
     }
 }
@@ -95,6 +102,7 @@ impl ServeConfig {
                 get("DISKPCA_PIPELINE_DEPTH").as_deref(),
                 defaults.pipeline_depth,
             )?,
+            compute_tier: parse_compute_tier(get("DISKPCA_COMPUTE_TIER").as_deref())?,
         })
     }
 
@@ -178,6 +186,19 @@ mod tests {
         assert_eq!((cfg.max_inflight, cfg.queue_depth, cfg.pipeline_depth), (4, 2, 8));
         let err = ServeConfig::parse(env(&[("DISKPCA_MAX_INFLIGHT", "0")])).unwrap_err();
         assert!(err.contains("DISKPCA_MAX_INFLIGHT") && err.contains("at least 1"), "{err}");
+    }
+
+    #[test]
+    fn compute_tier_parses_and_rejects_unknown_names() {
+        let cfg = ServeConfig::parse(env(&[("DISKPCA_COMPUTE_TIER", "fast")])).unwrap();
+        assert_eq!(cfg.compute_tier, ComputeTier::Fast);
+        let cfg = ServeConfig::parse(env(&[("DISKPCA_COMPUTE_TIER", " exact ")])).unwrap();
+        assert_eq!(cfg.compute_tier, ComputeTier::Exact);
+        let err = ServeConfig::parse(env(&[("DISKPCA_COMPUTE_TIER", "turbo")])).unwrap_err();
+        assert!(
+            err.contains("DISKPCA_COMPUTE_TIER") && err.contains("turbo"),
+            "{err}"
+        );
     }
 
     #[test]

@@ -44,20 +44,34 @@ impl Srht {
     /// padded FWHT workspace, reused allocation-free across a column
     /// batch; `out` receives the t sampled coordinates (overwritten
     /// entirely). Values are bit-identical to [`Srht::apply_vec`].
+    ///
+    /// The workspace is 32-byte-friendly: one extra 4-lane (32-byte)
+    /// slack block is kept past `mpad` and the active window starts on
+    /// a 32-byte boundary, so the fast tier's lane-wise FWHT
+    /// butterflies ([`crate::linalg::simd`]) run aligned whatever base
+    /// the allocator handed the `Vec`. The transform length stays
+    /// exactly `mpad` (the FWHT needs a power of two); alignment never
+    /// changes the arithmetic, so sketches are bit-identical to a
+    /// fresh unaligned buffer — `tests` pin this on odd and
+    /// power-of-two-boundary dims.
     fn apply_vec_with(&self, x: &[f64], buf: &mut Vec<f64>, out: &mut [f64]) {
         assert_eq!(x.len(), self.m);
         debug_assert_eq!(out.len(), self.rows.len());
         buf.clear();
-        buf.resize(self.mpad, 0.0);
+        buf.resize(self.mpad + 4, 0.0);
+        // elements to skip so the window base is 32-byte aligned
+        // (Vec<f64> is always 8-byte aligned)
+        let off = (4 - ((buf.as_ptr() as usize >> 3) & 3)) & 3;
+        let w = &mut buf[off..off + self.mpad];
         for (i, &v) in x.iter().enumerate() {
-            buf[i] = v * self.signs[i];
+            w[i] = v * self.signs[i];
         }
-        fwht_inplace(buf);
+        fwht_inplace(w);
         // S = √(mpad/t)·P·(H/√mpad)·D — the two scales collapse to 1/√t
         // on the unnormalized FWHT output.
         let scale = 1.0 / (self.rows.len() as f64).sqrt();
         for (o, &r) in out.iter_mut().zip(self.rows.iter()) {
-            *o = buf[r] * scale;
+            *o = w[r] * scale;
         }
     }
 
@@ -72,7 +86,7 @@ impl Srht {
         let t = self.rows.len();
         let build = |j0: usize, j1: usize| {
             let mut blk = Mat::zeros(t, j1 - j0);
-            let mut buf = Vec::with_capacity(self.mpad);
+            let mut buf = Vec::with_capacity(self.mpad + 4);
             let mut col = vec![0.0; self.m];
             let mut sk = vec![0.0; t];
             for j in j0..j1 {
@@ -140,6 +154,32 @@ mod tests {
         let n1: f64 = x.iter().map(|v| v * v).sum();
         let n2: f64 = sx.iter().map(|v| v * v).sum();
         assert!((n1 - n2).abs() < 1e-9 * n1, "{n1} vs {n2}");
+    }
+
+    #[test]
+    fn reused_workspace_matches_fresh_buffer_bitwise() {
+        // odd and power-of-two-boundary input dims: the aligned
+        // window's offset and the reused (stale) workspace must never
+        // perturb a sketch vs a fresh buffer
+        let mut rng = Rng::seed_from(5);
+        for m in [1usize, 2, 5, 31, 32, 33, 100] {
+            let t = m.next_power_of_two().min(8);
+            let s = Srht::new(m, t, &mut rng);
+            let a = Mat::from_fn(m, 7, |_, _| rng.normal());
+            // one workspace reused across all 7 columns …
+            let fa = s.apply_feature_axis(&a);
+            for j in 0..7 {
+                // … vs a fresh buffer per column
+                let want = s.apply_vec(&a.col(j));
+                for i in 0..t {
+                    assert_eq!(
+                        fa[(i, j)].to_bits(),
+                        want[i].to_bits(),
+                        "m={m} j={j} i={i}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

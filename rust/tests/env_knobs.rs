@@ -99,6 +99,36 @@ fn scheduler_knobs_parse_and_reject_zero_or_garbage() {
 }
 
 #[test]
+fn compute_tier_parses_and_rejects_unknown_names() {
+    use diskpca::linalg::simd::ComputeTier;
+    let at = |v: &str| ServeConfig::parse(env(&[("DISKPCA_COMPUTE_TIER", v)]));
+    assert_eq!(
+        ServeConfig::parse(|_| None).unwrap().compute_tier,
+        ComputeTier::Exact,
+        "unset keeps the bit-reproducible exact tier"
+    );
+    assert_eq!(at("exact").unwrap().compute_tier, ComputeTier::Exact);
+    assert_eq!(at("fast").unwrap().compute_tier, ComputeTier::Fast);
+    assert_eq!(
+        at(" fast ").unwrap().compute_tier,
+        ComputeTier::Fast,
+        "surrounding whitespace is tolerated"
+    );
+    for bad in ["turbo", "", "Fast?", "exactly", "1"] {
+        let err = at(bad).unwrap_err();
+        assert!(err.contains("DISKPCA_COMPUTE_TIER"), "error must name the variable: {err}");
+        assert!(
+            err.contains(bad.trim()) || bad.trim().is_empty(),
+            "error must echo the value: {err}"
+        );
+        assert!(err.contains("expected exact|fast"), "error must list the accepted names: {err}");
+        // ServeConfig::from_env wraps this as panic!("config {err}") —
+        // the same hard-error convention as every other knob here
+        assert!(format!("config {err}").starts_with("config DISKPCA_COMPUTE_TIER="));
+    }
+}
+
+#[test]
 fn first_offending_variable_aborts_the_whole_parse() {
     let err = ServeConfig::parse(env(&[
         ("DISKPCA_COMM_TIMEOUT_SECS", "10"),

@@ -1,0 +1,315 @@
+//! Accuracy gate for the opt-in explicit-SIMD fast compute tier
+//! (`--compute-tier fast`, [`diskpca::linalg::simd`]).
+//!
+//! The exact tier's bit-identity contract is pinned elsewhere
+//! (`gemm_parity`, `par_engine`, `protocol_parity`); this suite pins
+//! what the *fast* tier is allowed to do instead:
+//!
+//! | kernel | bound vs exact |
+//! |---|---|
+//! | packed GEMM / dot products | relative Frobenius ≤ 1e-13 |
+//! | RFF cos map (post-projection) | per-entry abs ≤ 1e-14 |
+//! | arc-cos map (post-projection) | value-identical (zero-sign aside) |
+//! | Gauss / Laplace gram exp map | per-entry relative ≤ 1e-12 |
+//! | FWHT butterflies | **bit-identical** |
+//! | end-to-end dis_kpca rel-err | within 0.1 of the exact run |
+//!
+//! The tier is process-global state, so every test takes [`TierGuard`]
+//! — a mutex hold that flips to the fast tier and restores the exact
+//! tier (and the SIMD dispatch) on drop, even across panics. This
+//! binary is declared as its own `[[test]]` target so no other suite
+//! shares the process.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use diskpca::coordinator::{dis_eval, dis_kpca, run_cluster, Params};
+use diskpca::data::{clusters, partition_power_law, Data};
+use diskpca::kernels::{arccos_features, gram_sym, rff_features, rff_params, Kernel};
+use diskpca::linalg::fft::fwht_inplace;
+use diskpca::linalg::simd::{
+    dispatch_name, set_compute_tier, set_force_portable, ComputeTier,
+};
+use diskpca::linalg::Mat;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+use diskpca::sketch::Srht;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Hold the suite-wide lock with the fast tier installed; drop
+/// restores the exact tier and clears any forced-portable dispatch.
+struct TierGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl TierGuard {
+    fn fast() -> Self {
+        let lock = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_compute_tier(ComputeTier::Fast);
+        Self { _lock: lock }
+    }
+
+    /// Evaluate `f` under the exact tier, then return to fast — for
+    /// computing the reference halves of the comparisons below.
+    fn exactly<T>(&self, f: impl FnOnce() -> T) -> T {
+        set_compute_tier(ComputeTier::Exact);
+        let out = f();
+        set_compute_tier(ComputeTier::Fast);
+        out
+    }
+}
+
+impl Drop for TierGuard {
+    fn drop(&mut self) {
+        set_force_portable(false);
+        set_compute_tier(ComputeTier::Exact);
+    }
+}
+
+fn randmat(rng: &mut Rng, m: usize, n: usize) -> Mat {
+    Mat::from_fn(m, n, |_, _| rng.normal())
+}
+
+/// ‖a − b‖_F / ‖a‖_F.
+fn rel_fro(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..a.rows() {
+        for j in 0..a.cols() {
+            let d = a[(i, j)] - b[(i, j)];
+            num += d * d;
+            den += a[(i, j)] * a[(i, j)];
+        }
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+fn assert_gemm_paths_close(g: &TierGuard, rng: &mut Rng, tol: f64) {
+    // (m, k, n) with m·n·k ≥ PACKED_MIN_MNK so the microkernel runs,
+    // with remainder tiles (non-multiples of MR=4 / NR=8) included
+    for &(m, k, n) in &[(48usize, 40usize, 72usize), (33, 129, 45), (64, 256, 64)] {
+        let a = randmat(rng, m, k);
+        let b = randmat(rng, k, n);
+        let at = randmat(rng, k, m);
+        let bt = randmat(rng, n, k);
+        let (e1, e2, e3, e4) = g.exactly(|| {
+            (a.matmul(&b), at.matmul_at_b(&b), a.matmul_a_bt(&bt), a.gram_self())
+        });
+        assert!(rel_fro(&e1, &a.matmul(&b)) <= tol, "matmul {m}x{k}x{n}");
+        assert!(rel_fro(&e2, &at.matmul_at_b(&b)) <= tol, "matmul_at_b {m}x{k}x{n}");
+        assert!(rel_fro(&e3, &a.matmul_a_bt(&bt)) <= tol, "matmul_a_bt {m}x{k}x{n}");
+        assert!(rel_fro(&e4, &a.gram_self()) <= tol, "gram_self {m}x{k}");
+    }
+}
+
+#[test]
+fn gemm_within_relative_frobenius_bound() {
+    let g = TierGuard::fast();
+    let mut rng = Rng::seed_from(11);
+    assert_gemm_paths_close(&g, &mut rng, 1e-13);
+}
+
+#[test]
+fn small_gemm_below_packed_threshold_is_bit_identical() {
+    // under the dispatch floor both tiers take the reference loops
+    let g = TierGuard::fast();
+    let mut rng = Rng::seed_from(12);
+    let a = randmat(&mut rng, 7, 9);
+    let b = randmat(&mut rng, 9, 5);
+    let exact = g.exactly(|| a.matmul(&b));
+    let fast = a.matmul(&b);
+    for i in 0..7 {
+        for j in 0..5 {
+            assert_eq!(exact[(i, j)].to_bits(), fast[(i, j)].to_bits(), "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn rff_features_within_per_entry_bound() {
+    let g = TierGuard::fast();
+    let mut rng = Rng::seed_from(13);
+    // d·m·n below the packed-GEMM floor, so the Ωᵀx projection is
+    // bit-identical in both tiers and only the cos map differs —
+    // bounded by the documented |cos_fast − cos| ≤ 5e-15 times the
+    // √(2/m) scale
+    let d = 4;
+    let m = 16;
+    let params = rff_params(d, m, 0.7, &mut rng);
+    let x = Data::Dense(randmat(&mut rng, d, 20));
+    let exact = g.exactly(|| rff_features(&params, &x));
+    let fast = rff_features(&params, &x);
+    for i in 0..m {
+        for j in 0..20 {
+            let diff = (exact[(i, j)] - fast[(i, j)]).abs();
+            assert!(diff <= 1e-14, "({i},{j}): {diff:e}");
+        }
+    }
+    // full pipeline (projection over the packed floor): still tight
+    let params = rff_params(12, 128, 0.7, &mut rng);
+    let x = Data::Dense(randmat(&mut rng, 12, 64));
+    let exact = g.exactly(|| rff_features(&params, &x));
+    let fast = rff_features(&params, &x);
+    assert!(rel_fro(&exact, &fast) <= 1e-12);
+}
+
+#[test]
+fn arccos_features_value_identical_after_identical_projection() {
+    let g = TierGuard::fast();
+    let mut rng = Rng::seed_from(14);
+    let d = 4;
+    let m = 16;
+    let omega = randmat(&mut rng, d, m);
+    let x = Data::Dense(randmat(&mut rng, d, 20));
+    for degree in [0u32, 1, 2, 3] {
+        let exact = g.exactly(|| arccos_features(&omega, degree, &x));
+        let fast = arccos_features(&omega, degree, &x);
+        for i in 0..m {
+            for j in 0..20 {
+                // == on f64: value-identical, tolerating -0.0 vs 0.0
+                // (f64::max may return either sign of zero)
+                assert!(exact[(i, j)] == fast[(i, j)], "deg {degree} ({i},{j})");
+            }
+        }
+    }
+}
+
+#[test]
+fn gauss_and_laplace_gram_within_per_entry_relative_bound() {
+    let g = TierGuard::fast();
+    let mut rng = Rng::seed_from(15);
+    let y = randmat(&mut rng, 6, 18);
+    for kernel in [Kernel::Gauss { gamma: 0.4 }, Kernel::Laplace { gamma: 0.4 }] {
+        let exact = g.exactly(|| gram_sym(kernel, &y));
+        let fast = gram_sym(kernel, &y);
+        for i in 0..18 {
+            for j in 0..18 {
+                let (e, f) = (exact[(i, j)], fast[(i, j)]);
+                assert!(e > 0.0 && e <= 1.0, "{kernel:?} ({i},{j}): {e}");
+                assert!(((e - f) / e).abs() <= 1e-12, "{kernel:?} ({i},{j}): {e} vs {f}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fwht_and_srht_are_bit_identical_across_tiers() {
+    let g = TierGuard::fast();
+    let mut rng = Rng::seed_from(16);
+    // the lane-wise butterfly is pairwise a+b / a−b with no
+    // reassociation — the one fast-tier kernel with a stronger-than-
+    // bound guarantee
+    for &n in &[4usize, 8, 64, 512, 1024] {
+        let orig: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut exact = orig.clone();
+        g.exactly(|| fwht_inplace(&mut exact));
+        let mut fast = orig;
+        fwht_inplace(&mut fast);
+        for i in 0..n {
+            assert_eq!(exact[i].to_bits(), fast[i].to_bits(), "n={n} i={i}");
+        }
+    }
+    // …so a full SRHT sketch is bit-identical too
+    let s = Srht::new(100, 32, &mut rng);
+    let a = randmat(&mut rng, 100, 9);
+    let exact = g.exactly(|| s.apply_feature_axis(&a));
+    let fast = s.apply_feature_axis(&a);
+    for i in 0..32 {
+        for j in 0..9 {
+            assert_eq!(exact[(i, j)].to_bits(), fast[(i, j)].to_bits(), "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn portable_fallback_passes_the_same_bounds() {
+    // force the portable (non-intrinsics) lanes: the dispatch smoke —
+    // machines without AVX2 must satisfy the identical contract
+    let g = TierGuard::fast();
+    set_force_portable(true);
+    assert_eq!(dispatch_name(), "portable");
+    let mut rng = Rng::seed_from(17);
+    assert_gemm_paths_close(&g, &mut rng, 1e-13);
+    let orig: Vec<f64> = (0..256).map(|_| rng.normal()).collect();
+    let mut exact = orig.clone();
+    g.exactly(|| fwht_inplace(&mut exact));
+    let mut fast = orig;
+    fwht_inplace(&mut fast);
+    for i in 0..256 {
+        assert_eq!(exact[i].to_bits(), fast[i].to_bits(), "i={i}");
+    }
+    set_force_portable(false);
+}
+
+#[test]
+fn fast_tier_is_self_deterministic_across_thread_counts() {
+    // the fast tier may differ from exact, but must not differ from
+    // itself: same packing, tiling and chunk partitioning for every
+    // pool size
+    let _g = TierGuard::fast();
+    let mut rng = Rng::seed_from(18);
+    let a = randmat(&mut rng, 96, 128);
+    let b = randmat(&mut rng, 128, 80);
+    let params = rff_params(24, 256, 0.5, &mut rng);
+    let x = Data::Dense(randmat(&mut rng, 24, 200));
+    let mut runs: Vec<Vec<u64>> = Vec::new();
+    for threads in [1usize, 4] {
+        diskpca::par::set_threads(threads);
+        let mut bits = Vec::new();
+        let c = a.matmul(&b);
+        let gm = a.gram_self();
+        let f = rff_features(&params, &x);
+        for m in [&c, &gm, &f] {
+            for i in 0..m.rows() {
+                for j in 0..m.cols() {
+                    bits.push(m[(i, j)].to_bits());
+                }
+            }
+        }
+        runs.push(bits);
+    }
+    diskpca::par::set_threads(1);
+    assert_eq!(runs[0], runs[1], "fast tier must be thread-count invariant");
+}
+
+#[test]
+fn end_to_end_dis_kpca_error_matches_exact_within_tolerance() {
+    let g = TierGuard::fast();
+    let mut rng = Rng::seed_from(19);
+    let data = Data::Dense(clusters(8, 160, 3, 0.2, &mut rng));
+    let kernel = Kernel::Gauss { gamma: 0.6 };
+    let params = Params {
+        k: 3,
+        t: 16,
+        p: 32,
+        n_lev: 10,
+        n_adapt: 20,
+        m_rff: 128,
+        t2: 64,
+        seed: 7,
+        ..Params::default()
+    };
+    let run = || {
+        let shards = partition_power_law(&data, 3, 1);
+        let ((err, trace), _) = run_cluster(
+            shards,
+            kernel,
+            Arc::new(NativeBackend::new()),
+            move |cluster| {
+                let _ = dis_kpca(cluster, kernel, &params).unwrap();
+                dis_eval(cluster).unwrap()
+            },
+        );
+        (err, trace)
+    };
+    let (err_e, trace_e) = g.exactly(run);
+    let (err_f, trace_f) = run();
+    assert!(err_e >= 0.0 && err_e < trace_e, "exact run sane: {err_e} vs {trace_e}");
+    assert!(err_f >= 0.0 && err_f < trace_f, "fast run sane: {err_f} vs {trace_f}");
+    // the per-kernel bounds are ~1e-12, but a perturbed leverage score
+    // can flip a sampled point, so the end-to-end gate is coarser: the
+    // two relative errors must tell the same story
+    let (r_e, r_f) = (err_e / trace_e, err_f / trace_f);
+    assert!((r_e - r_f).abs() <= 0.1, "rel-err drifted: exact {r_e} vs fast {r_f}");
+}
