@@ -93,6 +93,8 @@ echo "==> elastic bench smoke + baseline diff (warn-only, threshold 25%; tree vs
 DISKPCA_BENCH_FAST=1 cargo bench --bench elastic
 echo "==> qps bench smoke + baseline diff (warn-only, threshold 25%; seq vs concurrent serving)"
 DISKPCA_BENCH_FAST=1 cargo bench --bench qps
+echo "==> incremental bench smoke + baseline diff (warn-only, threshold 25%; warm refit vs cold fit)"
+DISKPCA_BENCH_FAST=1 cargo bench --bench incremental
 
 # Serve-layer smoke: the example runs a real multi-job session and
 # asserts the warm-state invariant (second same-spec job performs zero

@@ -1,0 +1,221 @@
+//! Incremental-refit benchmarks: what the epoch-aware warm refit
+//! saves over a full cold fit after a small append (~1% new columns).
+//!
+//! Rows:
+//! - `incremental/cold-fit s=4` — wall time of a full `dis_kpca` over
+//!   store-backed workers (every round including `1-embed`).
+//! - `incremental/warm-refit s=4` — wall time of `dis_kpca_refit` on
+//!   the same warm cluster (refresh + delta-sketch fold, no `1-embed`).
+//! - `incremental/words/{cold,refit} s=4` — the *communication* cost
+//!   of each path, recorded as words-in-nanoseconds via the same
+//!   Sample-injection trick the qps bench uses for its percentile
+//!   rows. Words are deterministic, so these rows are exact trend
+//!   anchors, unlike the wall-time rows.
+//!
+//! Emits `BENCH_incremental.json` and diffs it against
+//! `bench_baseline/BENCH_incremental.json` with the repo's warn-only
+//! >25% threshold. `DISKPCA_BENCH_FAST=1` (the CI smoke) trims
+//! iterations via the harness; the dataset stays fixed so the word
+//! rows are identical in both modes. Prints a WARNING (not a failure)
+//! if the refit does not ship strictly fewer words than the cold fit —
+//! that inequality is the tentpole's whole point, and
+//! `tests/incremental_parity.rs` asserts it hard.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use diskpca::bench_harness::{black_box, Bencher};
+use diskpca::comm::{memory, Cluster, CommStats};
+use diskpca::coordinator::{dis_kpca, dis_kpca_refit, Params, Worker};
+use diskpca::data::{clusters, partition_power_law, Data, ShardSource, ShardStore};
+use diskpca::kernels::Kernel;
+use diskpca::linalg::Mat;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+const REGRESSION_THRESHOLD: f64 = 1.25;
+const S: usize = 4;
+/// Gate disabled: the row measures the warm path's cost; gate
+/// behavior (fallback to cold) is covered by the serve tests.
+const NO_GATE: f64 = 1e-6;
+
+fn params() -> Params {
+    Params {
+        k: 3,
+        t: 16,
+        p: 32,
+        n_lev: 8,
+        n_adapt: 16,
+        m_rff: 128,
+        t2: 64,
+        seed: 5,
+        ..Params::default()
+    }
+}
+
+type Table = Vec<(String, usize, usize)>;
+
+fn table_diff(before: &Table, after: &Table) -> Table {
+    after
+        .iter()
+        .map(|(round, up, down)| {
+            let (bu, bd) = before
+                .iter()
+                .find(|(r, _, _)| r == round)
+                .map(|(_, u, d)| (*u, *d))
+                .unwrap_or((0, 0));
+            (round.clone(), up - bu, down - bd)
+        })
+        .filter(|(_, u, d)| *u > 0 || *d > 0)
+        .collect()
+}
+
+fn total(t: &Table) -> usize {
+    t.iter().map(|(_, u, d)| u + d).sum()
+}
+
+fn round(t: &Table, name: &str) -> usize {
+    t.iter().find(|(r, _, _)| r == name).map(|(_, u, d)| u + d).unwrap_or(0)
+}
+
+/// Record a deterministic word count as a pseudo-duration row (1 word
+/// = 1 ns), so the JSON/CSV artifacts carry the comm-cost trend next
+/// to the wall-time trend.
+fn record_words(b: &mut Bencher, name: &str, words: usize) {
+    let d = Duration::from_nanos(words as u64);
+    let sample = diskpca::bench_harness::Sample {
+        name: name.to_string(),
+        threads: diskpca::par::threads(),
+        iters: 1,
+        median: d,
+        mean: d,
+        min: d,
+        mad: Duration::ZERO,
+        gflops: None,
+    };
+    println!("{sample}");
+    b.samples.push(sample);
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let p = params();
+    let kernel = Kernel::Gauss { gamma: 0.7 };
+
+    // ---- store-backed shards + ~1% append payloads ----
+    let mut rng = Rng::seed_from(11);
+    let data = Data::Dense(clusters(8, 150, 3, 0.2, &mut rng));
+    let shards = partition_power_law(&data, S, 6);
+    let dir = std::env::temp_dir().join("diskpca_bench_incremental");
+    std::fs::create_dir_all(&dir).unwrap();
+    let paths: Vec<_> = shards
+        .iter()
+        .enumerate()
+        .map(|(i, sh)| {
+            let path = dir.join(format!("shard_{i}.dkps"));
+            diskpca::data::shard_store::write(sh, &path, 64).unwrap();
+            path
+        })
+        .collect();
+    // 2 columns per shard ≈ 1–2% of the base columns
+    let deltas: Vec<Data> = (0..S)
+        .map(|i| {
+            let mut rng = Rng::seed_from(200 + i as u64);
+            Data::Dense(Mat::from_fn(8, 2, |_, _| rng.normal()))
+        })
+        .collect();
+
+    let sources: Vec<ShardSource> = paths
+        .iter()
+        .map(|p| ShardSource::Store(ShardStore::open(p).unwrap()))
+        .collect();
+    let (star, endpoints) = memory::star(S);
+    let stats = CommStats::new();
+    let cluster = Cluster::new(star, stats.clone());
+    let handles: Vec<_> = sources
+        .into_iter()
+        .zip(endpoints)
+        .map(|(src, ep)| {
+            let be = Arc::new(NativeBackend::new());
+            std::thread::spawn(move || Worker::with_source(src, kernel, be, 0).run(ep))
+        })
+        .collect();
+
+    // ---- deterministic word tables: one cold fit, append, one refit ----
+    let before = stats.table();
+    dis_kpca(&cluster, kernel, &p).expect("cold fit");
+    let cold_table = table_diff(&before, &stats.table());
+    for (path, delta) in paths.iter().zip(&deltas) {
+        let mut writer = ShardStore::open(path).unwrap();
+        writer.append(delta).unwrap();
+    }
+    let before = stats.table();
+    let report = dis_kpca_refit(&cluster, kernel, &p, 0, NO_GATE).expect("refit");
+    let refit_table = table_diff(&before, &stats.table());
+    assert!(!report.fell_back, "bench refit must take the warm path");
+
+    let (cold_words, refit_words) = (total(&cold_table), total(&refit_table));
+    record_words(&mut b, &format!("incremental/words/cold s={S}"), cold_words);
+    record_words(&mut b, &format!("incremental/words/refit s={S}"), refit_words);
+    println!(
+        "    refit ships {refit_words} words vs {cold_words} cold \
+         ({} 1-embed words skipped, +{} refresh words, +{} delta cols)",
+        round(&cold_table, "1-embed"),
+        round(&refit_table, "0-refresh"),
+        report.delta_cols,
+    );
+    if refit_words >= cold_words {
+        println!(
+            "WARNING: incremental refit did not ship strictly fewer words \
+             ({refit_words} vs {cold_words}) — the epoch-aware warm path is broken"
+        );
+    }
+
+    // ---- wall-time rows on the same warm cluster ----
+    // cold re-fit over the appended stores (workers were refreshed by
+    // the refit above, so every iteration sees the same data)
+    b.bench(&format!("incremental/cold-fit s={S}"), || {
+        black_box(dis_kpca(&cluster, kernel, &p).expect("cold fit").y.rows())
+    });
+    // warm refit: idempotent after the first fold — the retained
+    // accumulator already covers every committed epoch, so repeat
+    // iterations measure the steady-state refresh + solve cost
+    b.bench(&format!("incremental/warm-refit s={S}"), || {
+        let rep = dis_kpca_refit(&cluster, kernel, &p, 0, NO_GATE).expect("refit");
+        black_box(rep.solution.y.rows())
+    });
+
+    cluster.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    b.write_csv("results/bench_incremental.csv").unwrap();
+
+    // ---- median JSON + warn-only regression diff vs baseline ----
+    let out =
+        std::env::var("DISKPCA_BENCH_OUT").unwrap_or_else(|_| "BENCH_incremental.json".into());
+    b.write_median_json(&out).expect("write bench json");
+    println!("wrote {out} ({} rows)", b.samples.len());
+
+    let baseline_path = std::env::var("DISKPCA_BENCH_BASELINE")
+        .unwrap_or_else(|_| "bench_baseline/BENCH_incremental.json".into());
+    match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => {
+            let warnings = b.regressions_vs(&text, REGRESSION_THRESHOLD);
+            if warnings.is_empty() {
+                println!("no regressions > 25% vs {baseline_path}");
+            } else {
+                for w in &warnings {
+                    println!("WARNING: bench regression: {w}");
+                }
+                println!(
+                    "({} warning(s) vs {baseline_path}; informational only — update the baseline \
+                     by copying {out} over it when a slowdown is intended)",
+                    warnings.len()
+                );
+            }
+        }
+        Err(e) => println!("baseline {baseline_path} unavailable ({e}) — skipping diff"),
+    }
+}

@@ -105,6 +105,8 @@ COMMON FLAGS
   --workers N                  override the dataset's worker count
   --jobs N                     serve: fits to run on the session (default 3)
   --transform N                serve: query points to project (default 256)
+  --refit                      serve: close the session with an incremental
+                               warm refit (epoch-aware, no 1-embed round)
   --max-inflight N             serve: concurrent job lanes on the scheduler
                                (default 1 = bit-identical sequential path;
                                env DISKPCA_MAX_INFLIGHT). Independent jobs —
@@ -121,6 +123,11 @@ COMMON FLAGS
   --embed-cache-mb N           worker/serve: embed warm-cache byte budget in
                                MiB (default 64, env DISKPCA_EMBED_CACHE_MB;
                                0 disables caching)
+  --variance-frac F            serve: refit acceptance gate in (0, 1]
+                               (default 0.95, env DISKPCA_VARIANCE_FRAC).
+                               An incremental warm refit whose top-k solution
+                               preserves less than F of the sketched spectrum
+                               re-runs as a full cold fit
   --config FILE                load key=value config file
   --out DIR                    results directory (default results)
 

@@ -342,6 +342,15 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.str(path);
             w.u64(*chunk_rows as u64);
         }
+        ReqRefreshShard { epoch } => {
+            w.u8(32);
+            w.u64(*epoch);
+        }
+        ReqDeltaSketch { p, seed } => {
+            w.u8(33);
+            w.u64(*p as u64);
+            w.u64(*seed);
+        }
     }
     w.finish()
 }
@@ -394,6 +403,8 @@ pub fn decode(buf: &[u8]) -> Result<Message, CodecError> {
         29 => ReqSketchEmbedR { p: r.u64()? as usize, seed: r.u64()? },
         30 => ReqProjectSketchR { pts: r.points()?, w: r.u64()? as usize, seed: r.u64()? },
         31 => ReqLoadShard { path: r.str()?, chunk_rows: r.u64()? as usize },
+        32 => ReqRefreshShard { epoch: r.u64()? },
+        33 => ReqDeltaSketch { p: r.u64()? as usize, seed: r.u64()? },
         t => return Err(CodecError::BadTag(t)),
     };
     Ok(msg)
@@ -568,6 +579,24 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn roundtrip_incremental_variants() {
+        match roundtrip(Message::ReqRefreshShard { epoch: 7 }) {
+            Message::ReqRefreshShard { epoch } => assert_eq!(epoch, 7),
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(Message::ReqDeltaSketch { p: 40, seed: 0x515 }) {
+            Message::ReqDeltaSketch { p, seed } => assert_eq!((p, seed), (40, 0x515)),
+            other => panic!("{other:?}"),
+        }
+        // the refit word-table parity contract: a delta sketch request
+        // costs exactly what a cold sketch request costs on the wire
+        assert_eq!(
+            Message::ReqDeltaSketch { p: 40, seed: 1 }.words(),
+            Message::ReqSketchEmbed { p: 40, seed: 1 }.words(),
+        );
     }
 
     #[test]

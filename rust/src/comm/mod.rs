@@ -256,6 +256,18 @@ pub enum Message {
     /// master re-assigns a dead worker's `.dkps` shard to a revived or
     /// rejoining worker before replaying the round.
     ReqLoadShard { path: String, chunk_rows: usize },
+    /// Incremental refit: re-open the shard store and report its
+    /// committed epoch. `epoch` is the master's installed epoch, so
+    /// the reply `[shard_epoch, delta_cols, n]` tells the master how
+    /// many columns this worker must still fold (resident shards are
+    /// always epoch 0 with no delta).
+    ReqRefreshShard { epoch: u64 },
+    /// Incremental variant of [`Message::ReqSketchEmbed`]: fold only
+    /// the columns the worker's retained sketch accumulator has not
+    /// seen, then reply with the full updated t×p sketch. Same wire
+    /// shape as `ReqSketchEmbed` (2 words down, t×p up), so a refit's
+    /// `2-disLS` row is bit-identical to a cold fit's.
+    ReqDeltaSketch { p: usize, seed: u64 },
     /// Shut the worker down.
     Quit,
 
@@ -300,6 +312,8 @@ impl Message {
             ReqSketchEmbedR { .. } => 2,
             ReqProjectSketchR { pts, .. } => pts.words() + 2,
             ReqLoadShard { path, .. } => path.len().div_ceil(8).max(1) + 1,
+            ReqRefreshShard { .. } => 1,
+            ReqDeltaSketch { .. } => 2,
             RespKrr { g, b, .. } => g.rows() * g.cols() + b.rows() * b.cols() + 1,
             RespMat(m) => m.rows() * m.cols(),
             RespScalar(_) => 1,
@@ -339,6 +353,8 @@ impl Message {
             ReqSketchEmbedR { .. } => "ReqSketchEmbedR",
             ReqProjectSketchR { .. } => "ReqProjectSketchR",
             ReqLoadShard { .. } => "ReqLoadShard",
+            ReqRefreshShard { .. } => "ReqRefreshShard",
+            ReqDeltaSketch { .. } => "ReqDeltaSketch",
             ReqCount => "ReqCount",
             ReqBusyTime => "ReqBusyTime",
             Quit => "Quit",

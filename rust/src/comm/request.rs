@@ -219,6 +219,23 @@ ack_request! {
 }
 
 payload_request! {
+    /// Incremental refit: re-open the shard store (a resident shard is
+    /// a no-op) and reply a 1×3 `[shard_epoch, delta_cols, n]` —
+    /// `epoch` is the master's installed epoch, `delta_cols` the
+    /// columns this worker has not yet folded into its retained
+    /// sketch accumulator.
+    RefreshShard { epoch: u64 } => ReqRefreshShard, RespMat -> Mat
+}
+
+payload_request! {
+    /// Incremental [`SketchEmbed`]: fold only the unseen tail of the
+    /// shard into the retained accumulator, reply the full updated
+    /// t×p sketch. Identical wire shape to [`SketchEmbed`], so the
+    /// `2-disLS` word row of a refit matches a cold fit bit for bit.
+    DeltaSketch { p: usize, seed: u64 } => ReqDeltaSketch, RespMat -> Mat
+}
+
+payload_request! {
     /// Uniform sample of the projected (k-dim) local points (k-means
     /// seeding).
     SampleProjected { count: usize, seed: u64 } => ReqSampleProjected, RespMat -> Mat

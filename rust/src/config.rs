@@ -103,6 +103,27 @@ impl Config {
         }
     }
 
+    /// The refit variance gate encoded in this config (CLI flag
+    /// `--variance-frac`; the underscore spelling works in config
+    /// files, the dash spelling wins when both are present). Validated
+    /// through the same strict parser as `DISKPCA_VARIANCE_FRAC`:
+    /// a fraction in `(0, 1]`, default 0.95.
+    pub fn variance_frac(&self) -> f64 {
+        let raw = self.get("variance-frac").or_else(|| self.get("variance_frac"));
+        match crate::serve::queue::parse_variance_frac(
+            raw,
+            crate::serve::ServeConfig::default().variance_frac,
+        ) {
+            Ok(f) => f,
+            // the env-style message names DISKPCA_VARIANCE_FRAC;
+            // re-key it to the config spelling
+            Err(_) => panic!(
+                "config variance-frac={}: expected a fraction in (0, 1]",
+                raw.unwrap_or_default()
+            ),
+        }
+    }
+
     /// The protocol parameters encoded in this config.
     pub fn params(&self) -> crate::coordinator::Params {
         let d = crate::coordinator::Params::default();
@@ -203,5 +224,22 @@ mod tests {
     fn bad_compute_tier_panics() {
         let cfg = Config::parse("compute-tier = turbo\n").unwrap();
         cfg.compute_tier();
+    }
+
+    #[test]
+    fn variance_frac_both_spellings_default() {
+        assert_eq!(Config::new().variance_frac(), 0.95);
+        let cfg = Config::parse("variance_frac = 0.8\n").unwrap();
+        assert_eq!(cfg.variance_frac(), 0.8);
+        // the CLI flag spelling wins when both are present
+        let cfg = Config::parse("variance_frac = 0.8\nvariance-frac = 0.6\n").unwrap();
+        assert_eq!(cfg.variance_frac(), 0.6);
+    }
+
+    #[test]
+    #[should_panic(expected = "config variance-frac=1.5")]
+    fn bad_variance_frac_panics() {
+        let cfg = Config::parse("variance-frac = 1.5\n").unwrap();
+        cfg.variance_frac();
     }
 }

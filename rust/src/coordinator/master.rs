@@ -315,6 +315,100 @@ pub fn dis_low_rank_w(
     params: &Params,
     y: &PointSet,
 ) -> Result<(KpcaSolution, Mat, usize), CommError> {
+    let (sol, w_mat, w_cols, _preserved) = dis_low_rank_frac(cluster, kernel, params, y, None)?;
+    Ok((sol, w_mat, w_cols))
+}
+
+/// Smallest k whose leading eigenvalues hold at least `frac` of the
+/// spectrum's total mass. `spectrum` is non-increasing eigenvalues
+/// (σᵢ² of the sketched projection); non-finite and non-positive
+/// entries contribute nothing. Degenerate inputs — an empty spectrum,
+/// zero total mass — return the full length (callers clamp into
+/// `1..=k_max`), so the conservative answer is always "keep
+/// everything you have".
+pub fn choose_k(spectrum: &[f64], frac: f64) -> usize {
+    let total = spectrum.iter().filter(|v| v.is_finite() && **v > 0.0).sum();
+    choose_k_mass(spectrum, total, frac)
+}
+
+/// [`choose_k`] against an externally supplied total mass — the
+/// low-rank driver uses ‖ΠT‖²_F (every eigenvalue, not just the k_max
+/// the truncated SVD surfaced), so the fraction measures genuinely
+/// preserved variance.
+fn choose_k_mass(spectrum: &[f64], total: f64, frac: f64) -> usize {
+    if spectrum.is_empty() || !(total > 0.0) {
+        return spectrum.len();
+    }
+    let target = frac * total;
+    let mut acc = 0.0;
+    for (i, &v) in spectrum.iter().enumerate() {
+        if v.is_finite() && v > 0.0 {
+            acc += v;
+        }
+        if acc >= target {
+            return i + 1;
+        }
+    }
+    spectrum.len()
+}
+
+/// Preserved-variance mass Σᵢ σᵢ² of a kept spectrum relative to
+/// `total`, clamped into [0, 1]. A zero total preserves everything by
+/// convention — there was no variance to lose.
+fn preserved_fraction(spectrum: &[f64], total: f64) -> f64 {
+    if !(total > 0.0) {
+        return 1.0;
+    }
+    let kept: f64 = spectrum.iter().filter(|v| v.is_finite() && **v > 0.0).sum();
+    (kept / total).clamp(0.0, 1.0)
+}
+
+/// Truncate (W, σ) to the variance-fraction rank when `frac` is set:
+/// k = [`choose_k`] over σᵢ² against the full mass `total`, clamped
+/// into `1..=k_max`. `frac = None` keeps every column — bit-identical
+/// to the historical fixed-k path. Returns (W, k, kept eigenvalues).
+fn truncate_by_frac(
+    w_full: Mat,
+    sv: &[f64],
+    total: f64,
+    frac: Option<f64>,
+    k_max: usize,
+) -> (Mat, usize, Vec<f64>) {
+    let eig: Vec<f64> = sv.iter().map(|v| v * v).collect();
+    let k = match frac {
+        Some(f) => choose_k_mass(&eig, total, f).clamp(1, k_max.max(1)).min(w_full.cols()),
+        None => w_full.cols(),
+    };
+    if k == w_full.cols() {
+        (w_full, k, eig)
+    } else {
+        let keep: Vec<usize> = (0..k).collect();
+        let eig_kept = eig[..k].to_vec();
+        (w_full.select_cols(&keep), k, eig_kept)
+    }
+}
+
+/// [`dis_low_rank_w`] with an optional variance-fraction rank rule,
+/// also reporting the preserved-variance fraction of the returned
+/// solution.
+///
+/// With `frac = None` the rank is `params.k` exactly as
+/// [`dis_low_rank_w`] always chose it — same requests, same broadcast
+/// W, bit-identical solution. With `frac = Some(f)` the rank becomes
+/// [`choose_k`] over the sketched spectrum (eigenvalues σᵢ², total
+/// mass ‖ΠT‖²_F — the tree path uses ‖R̃‖²_F, equal in exact
+/// arithmetic; both are threshold inputs only, never solution bits),
+/// clamped into `1..=params.k`; W is truncated *before* the
+/// `ReqFinal` broadcast, so a tighter rank also ships fewer words.
+/// The preserved fraction is what [`dis_kpca_refit`] gates its
+/// cold-fit fallback on.
+pub fn dis_low_rank_frac(
+    cluster: &Cluster,
+    kernel: Kernel,
+    params: &Params,
+    y: &PointSet,
+    frac: Option<f64>,
+) -> Result<(KpcaSolution, Mat, usize, f64), CommError> {
     let sx = cluster.session("5-disLR");
     let timing = std::env::var_os("DISKPCA_TIMING").is_some();
     let mut stamp = std::time::Instant::now();
@@ -326,7 +420,7 @@ pub fn dis_low_rank_w(
     };
     let s = sx.num_workers();
     let w_cols = if params.w == 0 { y.len() } else { params.w };
-    let (w_mat, k) = match params.gather {
+    let (w_mat, k, preserved) = match params.gather {
         GatherMode::Flat => {
             // step 1: workers project + right-sketch.
             let sketches: Vec<Mat> = sx.scatter(
@@ -342,9 +436,11 @@ pub fn dis_low_rank_w(
             // step 2: concatenate ΠT = [Π¹T¹ … ΠˢTˢ]; top-k left
             // vectors W.
             let pit = Mat::hcat_all(&sketches);
-            let k = params.k.min(pit.rows()).min(pit.cols());
-            let (w_mat, _sv) = top_k_left_singular(&pit, k);
-            (w_mat, k)
+            let k_max = params.k.min(pit.rows()).min(pit.cols());
+            let (w_full, sv) = top_k_left_singular(&pit, k_max);
+            let total = pit.frob_norm_sq();
+            let (w_mat, k, eig) = truncate_by_frac(w_full, &sv, total, frac, k_max);
+            (w_mat, k, preserved_fraction(&eig, total))
         }
         GatherMode::Tree => {
             // Same per-worker sketch (same seeds, same worker state
@@ -363,9 +459,11 @@ pub fn dis_low_rank_w(
             )?;
             lap("project");
             let rt = tsqr_merge(rs);
-            let k = params.k.min(rt.rows()).min(rt.cols());
-            let (w_mat, _sv) = top_k_left_singular(&rt.transpose(), k);
-            (w_mat, k)
+            let k_max = params.k.min(rt.rows()).min(rt.cols());
+            let (w_full, sv) = top_k_left_singular(&rt.transpose(), k_max);
+            let total = rt.frob_norm_sq();
+            let (w_mat, k, eig) = truncate_by_frac(w_full, &sv, total, frac, k_max);
+            (w_mat, k, preserved_fraction(&eig, total))
         }
     };
     lap("svd");
@@ -381,7 +479,7 @@ pub fn dis_low_rank_w(
         coeffs.set_col(j, &solve_upper(&r, &w_mat.col(j)));
     }
     lap("coeffs");
-    Ok((KpcaSolution { kernel, y: y_mat, coeffs }, w_mat, w_cols))
+    Ok((KpcaSolution { kernel, y: y_mat, coeffs }, w_mat, w_cols, preserved))
 }
 
 /// Alg. 4 (disKPCA): the paper's headline algorithm.
@@ -476,6 +574,116 @@ pub fn dis_kpca_warm(
     let sol = dis_low_rank(cluster, kernel, params, &y)?;
     lap("disLR");
     Ok(sol)
+}
+
+/// Round `0-refresh`: every worker re-opens its disk-backed shard so
+/// appends committed since the installed fit become visible, and
+/// reports its delta relative to `epoch` (the epoch the installed
+/// solution was fitted at). Returns `(max shard epoch, total delta
+/// columns)` across the cluster. Resident shards are immutable and
+/// report `[0, 0, n]`; a cluster of only resident shards therefore
+/// always refreshes to `(0, 0)`.
+pub fn dis_refresh_shards(cluster: &Cluster, epoch: u64) -> Result<(u64, usize), CommError> {
+    let reports = cluster.session("0-refresh").broadcast(rq::RefreshShard { epoch })?;
+    let mut max_epoch = 0u64;
+    let mut delta = 0usize;
+    for m in &reports {
+        max_epoch = max_epoch.max(m[(0, 0)] as u64);
+        delta += m[(0, 1)] as usize;
+    }
+    Ok((max_epoch, delta))
+}
+
+/// Incremental twin of [`dis_leverage_scores`]: identical round label
+/// (`2-disLS`), identical request/reply word counts
+/// (`ReqDeltaSketch.words() == ReqSketchEmbed.words()` by
+/// construction), identical masses bit-for-bit — but each worker only
+/// folds the columns appended since its retained sketch accumulator,
+/// so the per-worker compute is O(delta) instead of O(nᵢ). The tree
+/// gather compresses replies to R factors, which cannot be extended
+/// incrementally — it falls back to the plain round (already
+/// delta-free in words; the compute saving simply doesn't apply).
+pub fn dis_leverage_scores_delta(
+    cluster: &Cluster,
+    params: &Params,
+) -> Result<Vec<f64>, CommError> {
+    if params.gather == GatherMode::Tree {
+        return dis_leverage_scores(cluster, params);
+    }
+    let sx = cluster.session("2-disLS");
+    let s = sx.num_workers();
+    let sketches: Vec<Mat> = sx.scatter(
+        (0..s)
+            .map(|i| rq::DeltaSketch {
+                p: params.p,
+                seed: params.seed ^ (0x515 + i as u64),
+            })
+            .collect(),
+    )?;
+    let transposed: Vec<Mat> = crate::par::par_join(
+        sketches.iter().map(|sk| move || sk.transpose()).collect::<Vec<_>>(),
+    );
+    let z = qr_r_only(&Mat::vcat_all(&transposed));
+    sx.broadcast(rq::Scores { z })
+}
+
+/// What [`dis_kpca_refit`] produced and how it got there.
+#[derive(Clone, Debug)]
+pub struct RefitReport {
+    /// The refreshed solution, installed on every worker.
+    pub solution: KpcaSolution,
+    /// Data epoch the solution now covers (max across shards).
+    pub epoch: u64,
+    /// Appended columns folded in (total across shards, relative to
+    /// the epoch the previous fit covered).
+    pub delta_cols: usize,
+    /// `true` when the preserved-variance gate failed and the refit
+    /// re-ran as a full cold fit (fresh `1-embed` round, no retained
+    /// state trusted).
+    pub fell_back: bool,
+}
+
+/// Incremental warm refit after shard appends — the epoch-aware
+/// counterpart of [`dis_kpca_warm`].
+///
+/// Preconditions: a fit with the *same* `params` was previously run
+/// on this cluster, so every worker still holds its embed state (the
+/// spec under streaming, E^i under resident — the serve scheduler's
+/// warm-embed reuse tracks exactly this) and, ideally, its disLS
+/// sketch accumulator. The rounds are then:
+///
+/// 1. `0-refresh` — workers re-open shards, report epochs + deltas.
+/// 2. `2-disLS` via [`dis_leverage_scores_delta`] — O(delta)
+///    per-worker sketch work, no `1-embed` broadcast at all.
+/// 3. `3-levSample`/`4-adaptive`/`5-disLR` — verbatim the cold
+///    rounds (same seeds, same word counts).
+///
+/// The result is **bit-identical** to a cold [`dis_kpca`] over the
+/// appended shards (`tests/incremental_parity.rs` pins this,
+/// per-round word tables included), while shipping strictly fewer
+/// total words (no embed round; the `0-refresh` round is 4 words per
+/// worker) and doing delta-sized sketch work. If the top-k solution
+/// preserves less than `variance_frac` of the sketched spectrum's
+/// mass, the refit distrusts warm state entirely and re-runs as a
+/// cold fit (`fell_back = true`).
+pub fn dis_kpca_refit(
+    cluster: &Cluster,
+    kernel: Kernel,
+    params: &Params,
+    installed_epoch: u64,
+    variance_frac: f64,
+) -> Result<RefitReport, CommError> {
+    params.apply_threads();
+    let (epoch, delta_cols) = dis_refresh_shards(cluster, installed_epoch)?;
+    let masses = dis_leverage_scores_delta(cluster, params)?;
+    let y = rep_sample_mode(cluster, params, &masses, SamplingMode::Full)?;
+    let (solution, _w, _wc, preserved) = dis_low_rank_frac(cluster, kernel, params, &y, None)?;
+    if preserved >= variance_frac {
+        Ok(RefitReport { solution, epoch, delta_cols, fell_back: false })
+    } else {
+        let solution = dis_kpca_warm(cluster, kernel, params, SamplingMode::Full, false)?;
+        Ok(RefitReport { solution, epoch, delta_cols, fell_back: true })
+    }
 }
 
 /// Distributed evaluation: (‖φ(A) − LLᵀφ(A)‖², tr K) for the solution
@@ -582,5 +790,61 @@ mod tests {
         assert_eq!(masses_or_uniform(&[f64::NAN, 3.0]), vec![1.0, 1.0]);
         assert_eq!(masses_or_uniform(&[f64::INFINITY, 1.0]), vec![1.0, 1.0]);
         assert_eq!(masses_or_uniform(&[-1.0, 0.5]), vec![1.0, 1.0]);
+    }
+
+    /// `choose_k` picks the smallest prefix holding the requested
+    /// eigenvalue mass, and degenerate spectra degrade to "keep all".
+    #[test]
+    fn choose_k_selects_minimal_rank_for_mass() {
+        let sp = [6.0, 3.0, 0.9, 0.1];
+        assert_eq!(choose_k(&sp, 0.5), 1); // 6/10
+        assert_eq!(choose_k(&sp, 0.6), 1);
+        assert_eq!(choose_k(&sp, 0.61), 2); // 9/10
+        assert_eq!(choose_k(&sp, 0.9), 2);
+        assert_eq!(choose_k(&sp, 0.95), 3); // 9.9/10
+        assert_eq!(choose_k(&sp, 1.0), 4);
+        // frac ≤ 0 keeps the minimum one component
+        assert_eq!(choose_k(&sp, 0.0), 1);
+        // negative / NaN entries carry no mass but occupy a slot
+        assert_eq!(choose_k(&[4.0, f64::NAN, -2.0, 4.0], 0.9), 4);
+        // degenerate spectra: keep everything
+        assert_eq!(choose_k(&[], 0.9), 0);
+        assert_eq!(choose_k(&[0.0, 0.0], 0.9), 2);
+    }
+
+    /// `choose_k_mass` against a larger external total (the ‖ΠT‖²_F
+    /// the low-rank driver feeds it) needs more components than the
+    /// truncated-spectrum view would suggest.
+    #[test]
+    fn choose_k_mass_uses_external_total() {
+        let sp = [6.0, 3.0];
+        // against its own total (9): one component holds 2/3
+        assert_eq!(choose_k_mass(&sp, 9.0, 0.66), 1);
+        // against the full mass 12, 6/12 = 0.5 < 0.66 → need both
+        assert_eq!(choose_k_mass(&sp, 12.0, 0.66), 2);
+        // unreachable target: keep the whole truncated spectrum
+        assert_eq!(choose_k_mass(&sp, 100.0, 0.66), 2);
+        assert_eq!(preserved_fraction(&sp, 12.0), 0.75);
+        assert_eq!(preserved_fraction(&sp, 0.0), 1.0);
+    }
+
+    /// The truncation helper: `None` is the identity; `Some` clamps
+    /// into `1..=k_max` and drops trailing W columns + eigenvalues.
+    #[test]
+    fn truncate_by_frac_respects_clamp_and_none() {
+        let w = Mat::from_fn(5, 3, |i, j| (i * 3 + j) as f64);
+        let sv = [3.0, 2.0, 1.0]; // eig 9, 4, 1 (total 14)
+        let (w_none, k_none, eig) = truncate_by_frac(w.clone(), &sv, 14.0, None, 3);
+        assert_eq!((k_none, eig.len()), (3, 3));
+        assert!(w_none.data() == w.data());
+        let (w_cut, k_cut, eig_cut) = truncate_by_frac(w.clone(), &sv, 14.0, Some(0.6), 3);
+        assert_eq!((k_cut, w_cut.cols(), eig_cut.len()), (1, 1, 1));
+        assert_eq!(eig_cut[0], 9.0);
+        for i in 0..5 {
+            assert_eq!(w_cut[(i, 0)], w[(i, 0)]);
+        }
+        // an impossible fraction keeps every column
+        let (_, k_all, _) = truncate_by_frac(w, &sv, 14.0, Some(1.0), 3);
+        assert_eq!(k_all, 3);
     }
 }

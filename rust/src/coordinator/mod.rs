@@ -26,10 +26,11 @@ pub use boost::{dis_kpca_boosted, reps_for_confidence, BoostedRun};
 pub use css::{dis_css, dis_css_warm, CssSolution};
 pub use krr::{dis_krr, KrrModel};
 pub use master::{
-    dis_embed, dis_eval, dis_kpca, dis_kpca_mode, dis_kpca_warm, dis_leverage_scores,
-    dis_leverage_scores_eps, dis_leverage_scores_z, dis_leverage_vectors, dis_low_rank,
-    dis_low_rank_w, dis_project_points, dis_set_solution, embed_spec_for, leverage_sketch_width,
-    rep_sample, rep_sample_mode, tsqr_merge, SamplingMode,
+    choose_k, dis_embed, dis_eval, dis_kpca, dis_kpca_mode, dis_kpca_refit, dis_kpca_warm,
+    dis_leverage_scores, dis_leverage_scores_delta, dis_leverage_scores_eps,
+    dis_leverage_scores_z, dis_leverage_vectors, dis_low_rank, dis_low_rank_frac, dis_low_rank_w,
+    dis_project_points, dis_refresh_shards, dis_set_solution, embed_spec_for,
+    leverage_sketch_width, rep_sample, rep_sample_mode, tsqr_merge, RefitReport, SamplingMode,
 };
 pub use worker::Worker;
 

@@ -114,6 +114,26 @@ enum KrrState {
     Streamed { y: Mat, targets: Vec<f64> },
 }
 
+/// Retained disLS sketch accumulator — the worker's half of the
+/// incremental-refit contract. [`rq::SketchEmbed`] records the t×p
+/// point-axis CountSketch it returned (keyed by the `(p, seed)` the
+/// master drew it under, plus the column count it covered);
+/// [`rq::DeltaSketch`] then folds only columns `[cols, n)` of an
+/// appended shard on top of `out`, which is bit-identical to a cold
+/// full-shard sketch because the sketch tables come from
+/// [`CountSketch::new_extendable`] (prefix-stable in the column count)
+/// and the point-axis fold adds columns in ascending order either way.
+/// A worker with no (or a mismatched) accumulator — e.g. one revived
+/// by the elastic runtime after a crash — silently folds from column
+/// 0 instead: same bits, just no savings.
+struct SketchAcc {
+    p: usize,
+    seed: u64,
+    /// Columns `[0, cols)` are already folded into `out`.
+    cols: usize,
+    out: Mat,
+}
+
 /// Warm-state cache of resident embeddings E^i = S(φ(Aⁱ)), keyed by
 /// the [`EmbedSpec`] (hash key for lookup, full equality re-checked on
 /// every hit). Jobs on a persistent serve cluster that alternate
@@ -245,6 +265,8 @@ pub struct Worker {
     residuals: Option<Vec<f64>>,
     /// KRR state from ReqKrrStats.
     krr: Option<KrrState>,
+    /// Retained disLS sketch for incremental refit (both paths).
+    disls_acc: Option<SketchAcc>,
     /// cumulative compute time (Fig-7 critical-path metric).
     busy: std::time::Duration,
 }
@@ -288,6 +310,7 @@ impl Worker {
             scores: None,
             residuals: None,
             krr: None,
+            disls_acc: None,
             busy: std::time::Duration::ZERO,
         }
     }
@@ -415,6 +438,8 @@ impl Worker {
             Message::ReqLoadShard { path, chunk_rows } => {
                 self.respond(rq::LoadShard { path, chunk_rows })
             }
+            Message::ReqRefreshShard { epoch } => self.respond(rq::RefreshShard { epoch }),
+            Message::ReqDeltaSketch { p, seed } => self.respond(rq::DeltaSketch { p, seed }),
             Message::Quit => Message::Ack,
             other => panic!("worker got unexpected {other:?}"),
         }
@@ -546,23 +571,32 @@ impl Handle<rq::Embed> for Worker {
 }
 
 impl Handle<rq::SketchEmbed> for Worker {
+    /// Sketch tables come from [`CountSketch::new_extendable`] (not
+    /// `new`), so the same `(p, seed)` over an appended shard extends
+    /// — rather than reshuffles — the column hashing, which is what
+    /// lets [`rq::DeltaSketch`] fold only the appended columns onto
+    /// the retained accumulator and still match a cold sketch
+    /// bit-for-bit.
     fn handle_req(&mut self, rq::SketchEmbed { p, seed }: rq::SketchEmbed) -> Mat {
-        if self.streaming() {
-            let spec = self.embed_spec.as_ref().expect("ReqEmbed first");
+        let out = if self.streaming() {
+            let spec = *self.embed_spec.as_ref().expect("ReqEmbed first");
             let backend = &self.backend;
             let mut rng = Rng::seed_from(seed);
-            let cs = CountSketch::new(self.source.len(), p, &mut rng);
+            let cs = CountSketch::new_extendable(self.source.len(), p, &mut rng);
             let mut out = Mat::zeros(spec.t, p);
             self.source.for_each_chunk(self.chunk_rows, |j0, chunk| {
-                cs.accumulate_point_axis(&backend.embed(spec, chunk), j0, &mut out);
+                cs.accumulate_point_axis(&backend.embed(&spec, chunk), j0, &mut out);
             });
             out
         } else {
-            let e: &Mat = self.embedded.as_ref().expect("ReqEmbed first");
+            let e = Arc::clone(self.embedded.as_ref().expect("ReqEmbed first"));
             let mut rng = Rng::seed_from(seed);
-            let cs = CountSketch::new(e.cols(), p, &mut rng);
-            cs.apply_point_axis(e)
-        }
+            let cs = CountSketch::new_extendable(e.cols(), p, &mut rng);
+            cs.apply_point_axis(&e)
+        };
+        let cols = self.source.len();
+        self.disls_acc = Some(SketchAcc { p, seed, cols, out: out.clone() });
+        out
     }
 }
 
@@ -689,6 +723,90 @@ impl Handle<rq::LoadShard> for Worker {
         );
         self.embed_cache.budget_bytes = budget;
         self.busy = busy;
+    }
+}
+
+impl Handle<rq::RefreshShard> for Worker {
+    /// Re-open a disk-backed shard so appends committed since the last
+    /// fit become visible, and report the delta relative to the
+    /// master's installed epoch (`req.epoch`) as a 1×3 row
+    /// `[shard_epoch, delta_cols, n]` — exact small integers, so the
+    /// f64 wire encoding is lossless. Resident shards are immutable:
+    /// the reply is always `[0, 0, n]`. IO failure panics and reaches
+    /// the master as a typed [`Message::RespError`].
+    fn handle_req(&mut self, rq::RefreshShard { epoch }: rq::RefreshShard) -> Mat {
+        if let ShardSource::Store(store) = &mut self.source {
+            store
+                .refresh()
+                .unwrap_or_else(|e| panic!("RefreshShard {}: {e}", store.path().display()));
+        }
+        let n = self.source.len();
+        let (shard_epoch, delta) = match &self.source {
+            ShardSource::Store(store) => {
+                let r = store.delta_range(epoch);
+                (store.epoch(), r.end - r.start)
+            }
+            _ => (0, 0),
+        };
+        let mut m = Mat::zeros(1, 3);
+        m[(0, 0)] = shard_epoch as f64;
+        m[(0, 1)] = delta as f64;
+        m[(0, 2)] = n as f64;
+        m
+    }
+}
+
+impl Handle<rq::DeltaSketch> for Worker {
+    /// Incremental twin of [`rq::SketchEmbed`]: return the same full
+    /// t×p point-axis sketch of S(φ(Aⁱ)), but fold only the columns
+    /// the retained [`SketchAcc`] has not seen. With a matching
+    /// accumulator the per-request work is O(delta columns); without
+    /// one (fresh or revived worker, or a different `(p, seed)`) the
+    /// fold silently restarts from column 0 — the reply is
+    /// bit-identical either way, so the master never needs to know
+    /// which case it hit. Deliberately the same wire cost as
+    /// `ReqSketchEmbed`, so refit and cold-fit word tables line up
+    /// row for row.
+    fn handle_req(&mut self, rq::DeltaSketch { p, seed }: rq::DeltaSketch) -> Mat {
+        let n = self.source.len();
+        let out = if self.streaming() {
+            let spec = *self.embed_spec.as_ref().expect("ReqEmbed first");
+            let (start, mut out) = match self.disls_acc.take() {
+                Some(acc) if acc.p == p && acc.seed == seed && acc.cols <= n => {
+                    (acc.cols, acc.out)
+                }
+                _ => (0, Mat::zeros(spec.t, p)),
+            };
+            let mut rng = Rng::seed_from(seed);
+            let cs = CountSketch::new_extendable(n, p, &mut rng);
+            {
+                let backend = &self.backend;
+                self.source.for_each_chunk_from(self.chunk_rows, start, |j0, chunk| {
+                    cs.accumulate_point_axis(&backend.embed(&spec, chunk), j0, &mut out);
+                });
+            }
+            out
+        } else {
+            // Resident shards never grow, but the handler still works
+            // there (serving the no-delta and fallback cases) so both
+            // paths share one registration point.
+            let e = Arc::clone(self.embedded.as_ref().expect("ReqEmbed first"));
+            let (start, mut out) = match self.disls_acc.take() {
+                Some(acc) if acc.p == p && acc.seed == seed && acc.cols <= n => {
+                    (acc.cols, acc.out)
+                }
+                _ => (0, Mat::zeros(e.rows(), p)),
+            };
+            let mut rng = Rng::seed_from(seed);
+            let cs = CountSketch::new_extendable(n, p, &mut rng);
+            if start < n {
+                let tail: Vec<usize> = (start..n).collect();
+                cs.accumulate_point_axis(&e.select_cols(&tail), start, &mut out);
+            }
+            out
+        };
+        self.disls_acc = Some(SketchAcc { p, seed, cols: n, out: out.clone() });
+        out
     }
 }
 
@@ -1466,6 +1584,106 @@ mod tests {
             other => panic!("{other:?}"),
         };
         assert_eq!((empty.rows(), empty.cols()), (2, 0));
+    }
+
+    /// DeltaSketch with no delta (and with a mismatched key) replies
+    /// bit-identically to SketchEmbed on both paths — the master can
+    /// swap one for the other without touching the numbers.
+    #[test]
+    fn delta_sketch_matches_full_sketch_and_survives_key_mismatch() {
+        for chunk in [0usize, 7] {
+            let mut w = mk_worker_chunked(26, chunk);
+            let spec = EmbedSpec {
+                kernel: Kernel::Gauss { gamma: 0.5 },
+                m: 256,
+                t2: 64,
+                t: 16,
+                seed: 3,
+            };
+            w.handle(Message::ReqEmbed { spec });
+            let full = match w.handle(Message::ReqSketchEmbed { p: 20, seed: 5 }) {
+                Message::RespMat(m) => m,
+                other => panic!("{other:?}"),
+            };
+            // matching (p, seed): zero-delta fold off the accumulator
+            let delta = match w.handle(Message::ReqDeltaSketch { p: 20, seed: 5 }) {
+                Message::RespMat(m) => m,
+                other => panic!("{other:?}"),
+            };
+            assert!(full.data() == delta.data(), "no-delta refit differs (chunk={chunk})");
+            // mismatched seed: silent full re-fold, not an error, and
+            // it matches what SketchEmbed would have returned
+            let refold = match w.handle(Message::ReqDeltaSketch { p: 20, seed: 6 }) {
+                Message::RespMat(m) => m,
+                other => panic!("{other:?}"),
+            };
+            let mut fresh = mk_worker_chunked(26, chunk);
+            fresh.handle(Message::ReqEmbed { spec });
+            let expect = match fresh.handle(Message::ReqSketchEmbed { p: 20, seed: 6 }) {
+                Message::RespMat(m) => m,
+                other => panic!("{other:?}"),
+            };
+            assert!(refold.data() == expect.data(), "mismatch fallback differs (chunk={chunk})");
+        }
+    }
+
+    /// The incremental contract end to end at the worker level: sketch
+    /// a store-backed shard, append columns through a second handle,
+    /// refresh, and the delta fold must be bit-identical to a cold
+    /// worker sketching the appended store from scratch.
+    #[test]
+    fn delta_sketch_after_append_bit_identical_to_cold() {
+        let path = std::env::temp_dir().join("diskpca_worker_delta.dkps");
+        let mut rng = Rng::seed_from(42);
+        let base = Data::Dense(Mat::from_fn(6, 21, |_, _| rng.normal()));
+        let extra = Data::Dense(Mat::from_fn(6, 4, |_, _| rng.normal()));
+        crate::data::shard_store::write(&base, &path, 8).unwrap();
+        let mk = |chunk: usize| {
+            Worker::with_source(
+                ShardSource::Store(crate::data::ShardStore::open(&path).unwrap()),
+                Kernel::Gauss { gamma: 0.5 },
+                Arc::new(NativeBackend::new()),
+                chunk,
+            )
+        };
+        let spec =
+            EmbedSpec { kernel: Kernel::Gauss { gamma: 0.5 }, m: 256, t2: 64, t: 16, seed: 3 };
+        let mut warm = mk(5);
+        warm.handle(Message::ReqEmbed { spec });
+        warm.handle(Message::ReqSketchEmbed { p: 20, seed: 5 });
+        // append through a second handle, as a producer process would
+        let mut producer = crate::data::ShardStore::open(&path).unwrap();
+        producer.append(&extra).unwrap();
+        // refresh reports the new epoch and the delta vs epoch 0
+        let report = match warm.handle(Message::ReqRefreshShard { epoch: 0 }) {
+            Message::RespMat(m) => m,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(
+            (report[(0, 0)], report[(0, 1)], report[(0, 2)]),
+            (1.0, 4.0, 25.0),
+            "refresh report wrong"
+        );
+        assert!(matches!(warm.handle(Message::ReqCount), Message::RespCount(25)));
+        let warm_sketch = match warm.handle(Message::ReqDeltaSketch { p: 20, seed: 5 }) {
+            Message::RespMat(m) => m,
+            other => panic!("{other:?}"),
+        };
+        // cold worker over the appended store, full sketch — and a
+        // second chunk size, since the fold must be chunk-invariant
+        for chunk in [5usize, 3] {
+            let mut cold = mk(chunk);
+            cold.handle(Message::ReqEmbed { spec });
+            let cold_sketch = match cold.handle(Message::ReqSketchEmbed { p: 20, seed: 5 }) {
+                Message::RespMat(m) => m,
+                other => panic!("{other:?}"),
+            };
+            assert!(
+                warm_sketch.data() == cold_sketch.data(),
+                "delta fold differs from cold sketch (chunk={chunk})"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -6,13 +6,17 @@
 //! format they can *fold over* in fixed-size blocks, so worker memory
 //! is bounded by the block size, not the shard size.
 //!
-//! ## File format (`.dkps`, little-endian)
+//! ## File format (`.dkps` v2, little-endian)
 //!
 //! ```text
-//! magic "DKPS" | u8 version=1 | u8 kind (0 dense, 1 sparse)
-//! u64 d | u64 n | u64 block_points | u64 num_blocks
-//! num_blocks × (u64 byte_offset, u64 byte_len)     // block index
-//! num_blocks × payload                             // column blocks
+//! magic "DKPS" | u8 version=2 | u8 kind (0 dense, 1 sparse)
+//! u64 d | u64 block_points | u64 footer_off        // header (30 bytes)
+//! column blocks …                                  // payload
+//! footer @ footer_off:
+//!   u64 footer_magic | u64 n | u64 num_blocks | u64 num_epochs
+//!   num_blocks × (u64 byte_offset, u64 byte_len, u64 fnv1a64)
+//!   num_epochs × u64 epoch_start_col
+//!   u64 footer_checksum                            // fnv1a64 of the above
 //! ```
 //!
 //! Block `b` holds columns `[b·block_points, min(n, (b+1)·block_points))`
@@ -21,6 +25,25 @@
 //! column a `u64 nnz` then `(u32 row, f64 value)` pairs. f64 bits
 //! round-trip exactly, so a streamed shard is bit-identical to the
 //! resident one.
+//!
+//! ### Appends and epochs
+//!
+//! [`ShardStore::append`] adds columns as a new **epoch** without
+//! rewriting committed data: the new blocks (including a fresh copy of
+//! the old partial tail block, keeping the all-but-last-block-full
+//! invariant) and a new footer are written strictly after the end of
+//! the committed region, and only then is the header's `footer_off` —
+//! the single commit word — overwritten. A crash anywhere before that
+//! last 8-byte write leaves the old footer in force and the partial
+//! append as dead bytes; a torn footer is caught by its magic and
+//! checksum. Superseded footers are likewise dead bytes — the file is
+//! its own append log. `epoch_start_col[e]` records how many columns
+//! existed before epoch `e` was appended, so
+//! [`ShardStore::delta_range`] can hand a worker exactly the columns
+//! it has not folded yet.
+//!
+//! v1 files (inline index, no checksums, no epochs) still open
+//! read-only; [`write_v1`] keeps the legacy writer for them.
 //!
 //! [`ShardStore`] is the memory-bounded reader: blocks decode on
 //! demand through a small LRU, so a sequential fold touches one block
@@ -39,7 +62,14 @@ use crate::sparse::Csc;
 use super::Data;
 
 const MAGIC: &[u8; 4] = b"DKPS";
-const VERSION: u8 = 1;
+const VERSION_V1: u8 = 1;
+const VERSION: u8 = 2;
+/// magic "DKPS" + version + kind + d + block_points + footer_off.
+const V2_HEADER_LEN: u64 = 4 + 1 + 1 + 8 + 8 + 8;
+/// Byte offset of the header's `footer_off` word — the append commit
+/// word (`magic + version + kind + d + block_points` precede it).
+const FOOTER_OFF_AT: u64 = 4 + 1 + 1 + 8 + 8;
+const FOOTER_MAGIC: u64 = u64::from_le_bytes(*b"DKPSFTR2");
 
 /// Decoded blocks kept in memory by a [`ShardStore`] reader.
 const DEFAULT_CACHE_BLOCKS: usize = 4;
@@ -48,8 +78,74 @@ const DEFAULT_CACHE_BLOCKS: usize = 4;
 /// index driving a huge allocation).
 const MAX_BLOCK_BYTES: u64 = 1 << 33;
 
-/// Write `data` as a chunked shard store with `block_points` columns
-/// per block (the last block may be short).
+/// FNV-1a 64-bit, continued from `h` (seed with [`fnv1a64`]'s offset
+/// basis for a fresh hash).
+fn fnv1a64_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a 64-bit of `bytes` — the per-block and footer checksum.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_update(0xcbf2_9ce4_8422_2325, bytes)
+}
+
+/// Encode columns `[lo, hi)` of `data` in the block payload format.
+fn encode_cols(data: &Data, lo: usize, hi: usize, out: &mut Vec<u8>) {
+    match data {
+        Data::Dense(m) => {
+            for j in lo..hi {
+                for i in 0..m.rows() {
+                    out.extend_from_slice(&m[(i, j)].to_le_bytes());
+                }
+            }
+        }
+        Data::Sparse(s) => {
+            for j in lo..hi {
+                out.extend_from_slice(&(s.col_nnz(j) as u64).to_le_bytes());
+                for (r, v) in s.col_iter(j) {
+                    out.extend_from_slice(&(r as u32).to_le_bytes());
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+/// Encoded byte size of columns `[lo, hi)` — lets writers lay out the
+/// file without buffering every block.
+fn block_payload_size(data: &Data, lo: usize, hi: usize) -> u64 {
+    match data {
+        Data::Dense(_) => (data.dim() * (hi - lo) * 8) as u64,
+        Data::Sparse(s) => (lo..hi).map(|j| 8 + 12 * s.col_nnz(j) as u64).sum(),
+    }
+}
+
+/// Serialize a v2 footer (including its trailing checksum).
+fn footer_bytes(n: u64, index: &[(u64, u64)], checksums: &[u64], epoch_starts: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32 + index.len() * 24 + epoch_starts.len() * 8 + 8);
+    for v in [FOOTER_MAGIC, n, index.len() as u64, epoch_starts.len() as u64] {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for (&(off, len), &ck) in index.iter().zip(checksums) {
+        for v in [off, len, ck] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    for &e in epoch_starts {
+        out.extend_from_slice(&e.to_le_bytes());
+    }
+    let ck = fnv1a64(&out);
+    out.extend_from_slice(&ck.to_le_bytes());
+    out
+}
+
+/// Write `data` as a v2 chunked shard store with `block_points`
+/// columns per block (the last block may be short). The store starts
+/// at epoch 0; grow it later with [`ShardStore::append`].
 pub fn write(data: &Data, path: impl AsRef<Path>, block_points: usize) -> anyhow::Result<()> {
     anyhow::ensure!(block_points > 0, "shard store needs block_points > 0");
     let d = data.dim();
@@ -59,23 +155,64 @@ pub fn write(data: &Data, path: impl AsRef<Path>, block_points: usize) -> anyhow
         Data::Dense(_) => 0u8,
         Data::Sparse(_) => 1u8,
     };
-    // Payload sizes are computable up front, so the index can be
-    // written before any block without buffering the whole store.
+    // Payload sizes are computable up front, so the header's footer
+    // offset is known before any block is buffered.
+    let mut index = Vec::with_capacity(num_blocks);
+    let mut offset = V2_HEADER_LEN;
+    for b in 0..num_blocks {
+        let lo = b * block_points;
+        let hi = (lo + block_points).min(n);
+        let sz = block_payload_size(data, lo, hi);
+        index.push((offset, sz));
+        offset += sz;
+    }
+    let footer_off = offset;
+    let f = std::fs::File::create(path.as_ref())?;
+    let mut w = std::io::BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&[VERSION, kind])?;
+    for v in [d as u64, block_points as u64, footer_off] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    let mut checksums = Vec::with_capacity(num_blocks);
+    let mut blkbuf = Vec::new();
+    for b in 0..num_blocks {
+        let lo = b * block_points;
+        let hi = (lo + block_points).min(n);
+        blkbuf.clear();
+        encode_cols(data, lo, hi, &mut blkbuf);
+        debug_assert_eq!(blkbuf.len() as u64, index[b].1);
+        checksums.push(fnv1a64(&blkbuf));
+        w.write_all(&blkbuf)?;
+    }
+    w.write_all(&footer_bytes(n as u64, &index, &checksums, &[0]))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write `data` in the legacy v1 layout (inline index, no checksums,
+/// no epoch table). Kept for back-compat coverage; v1 stores open
+/// read-only and cannot be appended to.
+pub fn write_v1(data: &Data, path: impl AsRef<Path>, block_points: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(block_points > 0, "shard store needs block_points > 0");
+    let d = data.dim();
+    let n = data.len();
+    let num_blocks = n.div_ceil(block_points);
+    let kind = match data {
+        Data::Dense(_) => 0u8,
+        Data::Sparse(_) => 1u8,
+    };
     let mut sizes = Vec::with_capacity(num_blocks);
     for b in 0..num_blocks {
         let lo = b * block_points;
         let hi = (lo + block_points).min(n);
-        let bytes: u64 = match data {
-            Data::Dense(_) => (d * (hi - lo) * 8) as u64,
-            Data::Sparse(s) => (lo..hi).map(|j| 8 + 12 * s.col_nnz(j) as u64).sum(),
-        };
-        sizes.push(bytes);
+        sizes.push(block_payload_size(data, lo, hi));
     }
     let header_len = (4 + 1 + 1 + 8 * 4 + num_blocks * 16) as u64;
     let f = std::fs::File::create(path.as_ref())?;
     let mut w = std::io::BufWriter::new(f);
     w.write_all(MAGIC)?;
-    w.write_all(&[VERSION, kind])?;
+    w.write_all(&[VERSION_V1, kind])?;
     for v in [d as u64, n as u64, block_points as u64, num_blocks as u64] {
         w.write_all(&v.to_le_bytes())?;
     }
@@ -85,27 +222,13 @@ pub fn write(data: &Data, path: impl AsRef<Path>, block_points: usize) -> anyhow
         w.write_all(&sz.to_le_bytes())?;
         offset += sz;
     }
+    let mut blkbuf = Vec::new();
     for b in 0..num_blocks {
         let lo = b * block_points;
         let hi = (lo + block_points).min(n);
-        match data {
-            Data::Dense(m) => {
-                for j in lo..hi {
-                    for i in 0..d {
-                        w.write_all(&m[(i, j)].to_le_bytes())?;
-                    }
-                }
-            }
-            Data::Sparse(s) => {
-                for j in lo..hi {
-                    w.write_all(&(s.col_nnz(j) as u64).to_le_bytes())?;
-                    for (r, v) in s.col_iter(j) {
-                        w.write_all(&(r as u32).to_le_bytes())?;
-                        w.write_all(&v.to_le_bytes())?;
-                    }
-                }
-            }
-        }
+        blkbuf.clear();
+        encode_cols(data, lo, hi, &mut blkbuf);
+        w.write_all(&blkbuf)?;
     }
     w.flush()?;
     Ok(())
@@ -115,12 +238,22 @@ pub fn write(data: &Data, path: impl AsRef<Path>, block_points: usize) -> anyhow
 /// behind a small LRU of [`Arc<Data>`] blocks.
 pub struct ShardStore {
     file: Mutex<std::fs::File>,
+    /// Backing file, kept for [`ShardStore::append`] (the read handle
+    /// is read-only) and [`ShardStore::refresh`].
+    path: std::path::PathBuf,
+    /// Format version this file was opened as (1 = legacy read-only).
+    version: u8,
     /// (byte_offset, byte_len) per block.
     index: Vec<(u64, u64)>,
+    /// FNV-1a 64 per block payload; empty for v1 stores (unchecked).
+    checksums: Vec<u64>,
     dim: usize,
     len: usize,
     block_points: usize,
     sparse: bool,
+    /// `epoch_starts[e]` = column count before epoch `e` was appended
+    /// (always starts with 0; one entry per committed epoch + 1).
+    epoch_starts: Vec<u64>,
     /// Most-recently-used first.
     cache: Mutex<Vec<(usize, Arc<Data>)>>,
     cache_blocks: usize,
@@ -128,49 +261,257 @@ pub struct ShardStore {
 
 impl ShardStore {
     pub fn open(path: impl AsRef<Path>) -> anyhow::Result<Self> {
-        let mut f = std::fs::File::open(path.as_ref())?;
+        let path = path.as_ref().to_path_buf();
+        let mut f = std::fs::File::open(&path)?;
         let file_len = f.metadata()?.len();
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic)?;
         anyhow::ensure!(&magic == MAGIC, "not a diskpca shard store (bad magic)");
         let mut hdr = [0u8; 2];
         f.read_exact(&mut hdr)?;
-        anyhow::ensure!(hdr[0] == VERSION, "unsupported shard store version {}", hdr[0]);
+        anyhow::ensure!(
+            hdr[0] == VERSION_V1 || hdr[0] == VERSION,
+            "unsupported shard store version {}",
+            hdr[0]
+        );
         anyhow::ensure!(hdr[1] <= 1, "unknown shard store kind {}", hdr[1]);
+        let sparse = hdr[1] == 1;
         let mut u = [0u8; 8];
         let mut next = |f: &mut std::fs::File| -> anyhow::Result<u64> {
             f.read_exact(&mut u)?;
             Ok(u64::from_le_bytes(u))
         };
+        if hdr[0] == VERSION_V1 {
+            // legacy layout: n + inline index in the header, no
+            // checksums, no epoch table — read-only, epoch pinned to 0
+            let d = next(&mut f)? as usize;
+            let n = next(&mut f)? as usize;
+            let block_points = next(&mut f)? as usize;
+            let num_blocks = next(&mut f)? as usize;
+            anyhow::ensure!(block_points > 0, "shard store has block_points = 0");
+            anyhow::ensure!(
+                num_blocks == n.div_ceil(block_points),
+                "shard store index length {num_blocks} inconsistent with n={n}, block_points={block_points}"
+            );
+            let mut index = Vec::with_capacity(num_blocks);
+            for _ in 0..num_blocks {
+                let off = next(&mut f)?;
+                let len = next(&mut f)?;
+                anyhow::ensure!(
+                    len <= MAX_BLOCK_BYTES
+                        && off.checked_add(len).is_some_and(|end| end <= file_len),
+                    "shard store block range {off}+{len} outside file of {file_len} bytes"
+                );
+                index.push((off, len));
+            }
+            return Ok(Self {
+                file: Mutex::new(f),
+                path,
+                version: VERSION_V1,
+                index,
+                checksums: Vec::new(),
+                dim: d,
+                len: n,
+                block_points,
+                sparse,
+                epoch_starts: vec![0],
+                cache: Mutex::new(Vec::new()),
+                cache_blocks: DEFAULT_CACHE_BLOCKS,
+            });
+        }
         let d = next(&mut f)? as usize;
-        let n = next(&mut f)? as usize;
         let block_points = next(&mut f)? as usize;
-        let num_blocks = next(&mut f)? as usize;
+        let footer_off = next(&mut f)?;
         anyhow::ensure!(block_points > 0, "shard store has block_points = 0");
+        anyhow::ensure!(
+            footer_off >= V2_HEADER_LEN
+                && footer_off.checked_add(40).is_some_and(|end| end <= file_len),
+            "shard store footer offset {footer_off} outside file of {file_len} bytes"
+        );
+        f.seek(SeekFrom::Start(footer_off))?;
+        let mut head = [0u8; 32];
+        f.read_exact(&mut head)?;
+        let word = |i: usize| u64::from_le_bytes(head[8 * i..8 * i + 8].try_into().unwrap());
+        anyhow::ensure!(
+            word(0) == FOOTER_MAGIC,
+            "shard store footer magic mismatch (torn or corrupt append)"
+        );
+        let n = word(1) as usize;
+        let num_blocks = word(2) as usize;
+        let num_epochs = word(3) as usize;
+        anyhow::ensure!(num_epochs >= 1, "shard store footer has no epoch table");
         anyhow::ensure!(
             num_blocks == n.div_ceil(block_points),
             "shard store index length {num_blocks} inconsistent with n={n}, block_points={block_points}"
         );
+        let tail_len = (num_blocks as u64)
+            .checked_mul(24)
+            .and_then(|v| v.checked_add((num_epochs as u64).checked_mul(8)?))
+            .and_then(|v| v.checked_add(8));
+        anyhow::ensure!(
+            tail_len.is_some_and(|t| footer_off + 32 + t <= file_len),
+            "shard store footer truncated"
+        );
+        let mut tail = vec![0u8; tail_len.unwrap() as usize];
+        f.read_exact(&mut tail)?;
+        let body_len = tail.len() - 8;
+        let want = u64::from_le_bytes(tail[body_len..].try_into().unwrap());
+        let got = fnv1a64_update(fnv1a64(&head), &tail[..body_len]);
+        anyhow::ensure!(
+            got == want,
+            "shard store footer checksum mismatch (torn or corrupt append)"
+        );
+        let mut at = 0usize;
+        let mut rd = |at: &mut usize| {
+            let v = u64::from_le_bytes(tail[*at..*at + 8].try_into().unwrap());
+            *at += 8;
+            v
+        };
         let mut index = Vec::with_capacity(num_blocks);
+        let mut checksums = Vec::with_capacity(num_blocks);
         for _ in 0..num_blocks {
-            let off = next(&mut f)?;
-            let len = next(&mut f)?;
+            let off = rd(&mut at);
+            let len = rd(&mut at);
+            let ck = rd(&mut at);
             anyhow::ensure!(
-                len <= MAX_BLOCK_BYTES && off.checked_add(len).is_some_and(|end| end <= file_len),
+                len <= MAX_BLOCK_BYTES
+                    && off >= V2_HEADER_LEN
+                    && off.checked_add(len).is_some_and(|end| end <= file_len),
                 "shard store block range {off}+{len} outside file of {file_len} bytes"
             );
             index.push((off, len));
+            checksums.push(ck);
         }
+        let mut epoch_starts = Vec::with_capacity(num_epochs);
+        for _ in 0..num_epochs {
+            epoch_starts.push(rd(&mut at));
+        }
+        anyhow::ensure!(
+            epoch_starts[0] == 0
+                && epoch_starts.windows(2).all(|w| w[0] <= w[1])
+                && *epoch_starts.last().unwrap() <= n as u64,
+            "shard store epoch table is not an ascending prefix of 0..n"
+        );
         Ok(Self {
             file: Mutex::new(f),
+            path,
+            version: VERSION,
             index,
+            checksums,
             dim: d,
             len: n,
             block_points,
-            sparse: hdr[1] == 1,
+            sparse,
+            epoch_starts,
             cache: Mutex::new(Vec::new()),
             cache_blocks: DEFAULT_CACHE_BLOCKS,
         })
+    }
+
+    /// Append `cols` as a new epoch; returns the new epoch number.
+    ///
+    /// Crash-safe: the new blocks (including a fresh copy of the old
+    /// partial tail block, preserving the every-block-but-last-full
+    /// invariant) and a new footer are written strictly *after* the
+    /// committed region, then the header's footer offset — the single
+    /// 8-byte commit word — is overwritten last. A crash before that
+    /// write leaves the prior footer in force and the partial append
+    /// as dead bytes; [`ShardStore::open`] never sees it.
+    pub fn append(&mut self, cols: &Data) -> anyhow::Result<u64> {
+        anyhow::ensure!(
+            self.version >= VERSION,
+            "v1 shard store is read-only: rewrite it as v2 to append"
+        );
+        anyhow::ensure!(
+            cols.dim() == self.dim,
+            "append dim {} != store dim {}",
+            cols.dim(),
+            self.dim
+        );
+        anyhow::ensure!(
+            matches!(cols, Data::Sparse(_)) == self.sparse,
+            "append encoding must match the store (dense vs sparse)"
+        );
+        anyhow::ensure!(!cols.is_empty(), "refusing to append an empty epoch");
+        let bp = self.block_points;
+        let keep_blocks = self.len / bp;
+        let tail_start = keep_blocks * bp;
+        let combined = if tail_start == self.len {
+            cols.clone()
+        } else {
+            concat_data(vec![self.read_cols(tail_start, self.len), cols.clone()])
+        };
+        let mut f = std::fs::OpenOptions::new().read(true).write(true).open(&self.path)?;
+        let old_end = f.seek(SeekFrom::End(0))?;
+        let new_n = self.len + cols.len();
+        let mut index: Vec<(u64, u64)> = self.index[..keep_blocks].to_vec();
+        let mut checksums: Vec<u64> = self.checksums[..keep_blocks].to_vec();
+        let mut epoch_starts = self.epoch_starts.clone();
+        epoch_starts.push(self.len as u64);
+        let footer_off;
+        {
+            let mut w = std::io::BufWriter::new(&mut f);
+            let mut offset = old_end;
+            let mut blkbuf = Vec::new();
+            let m = combined.len();
+            let mut lo = 0;
+            while lo < m {
+                let hi = (lo + bp).min(m);
+                blkbuf.clear();
+                encode_cols(&combined, lo, hi, &mut blkbuf);
+                w.write_all(&blkbuf)?;
+                index.push((offset, blkbuf.len() as u64));
+                checksums.push(fnv1a64(&blkbuf));
+                offset += blkbuf.len() as u64;
+                lo = hi;
+            }
+            footer_off = offset;
+            w.write_all(&footer_bytes(new_n as u64, &index, &checksums, &epoch_starts))?;
+            w.flush()?;
+        }
+        // everything must be durable before the commit word moves
+        f.sync_all()?;
+        f.seek(SeekFrom::Start(FOOTER_OFF_AT))?;
+        f.write_all(&footer_off.to_le_bytes())?;
+        f.sync_all()?;
+        self.index = index;
+        self.checksums = checksums;
+        self.len = new_n;
+        self.epoch_starts = epoch_starts;
+        // the old partial tail block (if any) was superseded by a
+        // rewritten copy at a new offset — drop any cached decode
+        self.cache.lock().unwrap().retain(|(b, _)| *b < keep_blocks);
+        Ok(self.epoch())
+    }
+
+    /// Number of appends committed to this store (a fresh store — and
+    /// any v1 store — is epoch 0).
+    pub fn epoch(&self) -> u64 {
+        (self.epoch_starts.len() - 1) as u64
+    }
+
+    /// The columns appended *after* `epoch` was current: exactly what
+    /// a worker holding state for `epoch` must fold to catch up.
+    /// Empty when the store is at (or behind) the given epoch.
+    pub fn delta_range(&self, epoch: u64) -> std::ops::Range<usize> {
+        match usize::try_from(epoch).ok().and_then(|e| self.epoch_starts.get(e + 1)) {
+            Some(&start) => start as usize..self.len,
+            None => self.len..self.len,
+        }
+    }
+
+    /// The backing file this store reads from.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Re-open the backing file, picking up epochs committed through
+    /// another handle (the worker-side `ReqRefreshShard` path).
+    pub fn refresh(&mut self) -> anyhow::Result<()> {
+        let mut fresh = ShardStore::open(&self.path)?;
+        fresh.cache_blocks = self.cache_blocks;
+        *self = fresh;
+        Ok(())
     }
 
     pub fn dim(&self) -> usize {
@@ -234,6 +575,13 @@ impl ShardStore {
             let mut f = self.file.lock().unwrap();
             f.seek(SeekFrom::Start(off))?;
             f.read_exact(&mut buf)?;
+        }
+        if let Some(&want) = self.checksums.get(b) {
+            let got = fnv1a64(&buf);
+            anyhow::ensure!(
+                got == want,
+                "block {b} checksum mismatch ({got:#018x} != {want:#018x}): shard store corrupt"
+            );
         }
         fn take_u64(buf: &[u8], at: &mut usize) -> anyhow::Result<u64> {
             let end = *at + 8;
@@ -407,12 +755,35 @@ impl ShardSource {
         }
     }
 
+    /// The store's committed epoch (a resident shard is always 0).
+    pub fn epoch(&self) -> u64 {
+        match self {
+            ShardSource::Resident(_) => 0,
+            ShardSource::Store(s) => s.epoch(),
+        }
+    }
+
     /// Fold `f(first_col, chunk)` over ascending column chunks of at
     /// most `chunk_rows` points (`0` ⇒ one chunk for a resident shard,
     /// block-sized chunks for a store).
-    pub fn for_each_chunk(&self, chunk_rows: usize, mut f: impl FnMut(usize, &Data)) {
+    pub fn for_each_chunk(&self, chunk_rows: usize, f: impl FnMut(usize, &Data)) {
+        self.for_each_chunk_from(chunk_rows, 0, f);
+    }
+
+    /// [`ShardSource::for_each_chunk`] restricted to columns
+    /// `[from, len)` — the delta-fold entry: an epoch-aware worker
+    /// starts at the first column its retained accumulator has not
+    /// seen. Chunk boundaries never change per-column results (the
+    /// sketch fold adds per ascending global column), so any `from`
+    /// composed with any chunking is bit-identical to one full pass.
+    pub fn for_each_chunk_from(
+        &self,
+        chunk_rows: usize,
+        from: usize,
+        mut f: impl FnMut(usize, &Data),
+    ) {
         let n = self.len();
-        if n == 0 {
+        if from >= n {
             return;
         }
         let step = match (self, chunk_rows) {
@@ -420,13 +791,18 @@ impl ShardSource {
             (ShardSource::Store(s), 0) => s.block_points(),
             (_, c) => c,
         };
-        if let (ShardSource::Resident(d), true) = (self, step >= n) {
+        if let (ShardSource::Resident(d), true) = (self, from == 0 && step >= n) {
             f(0, d);
             return;
         }
-        let mut at = 0;
+        let mut at = from;
         while at < n {
-            let end = (at + step).min(n);
+            // block-step store folds re-align to block boundaries so
+            // every chunk after the first is a zero-copy cached block
+            let end = match (self, chunk_rows) {
+                (ShardSource::Store(_), 0) => ((at / step + 1) * step).min(n),
+                _ => (at + step).min(n),
+            };
             match self {
                 ShardSource::Resident(d) => f(at, &d.slice_cols(at, end)),
                 ShardSource::Store(s) => {
@@ -605,15 +981,220 @@ mod tests {
         let path = tmp("garbage");
         std::fs::write(&path, b"NOPE").unwrap();
         assert!(ShardStore::open(&path).is_err());
-        // valid store, then corrupt one index entry's length
+        // valid v1 store, then corrupt one inline index entry's length
         let mut rng = Rng::seed_from(7);
         let data = dense_data(&mut rng, 3, 10);
         let path = tmp("corrupt");
-        write(&data, &path, 4).unwrap();
+        write_v1(&data, &path, 4).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
-        let idx_at = 4 + 2 + 32 + 8; // first block's byte_len field
+        let idx_at = 4 + 2 + 32 + 8; // first block's byte_len field (v1 layout)
         bytes[idx_at..idx_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
         std::fs::write(&path, &bytes).unwrap();
         assert!(ShardStore::open(&path).is_err(), "oversized block length must be rejected");
+    }
+
+    #[test]
+    fn v1_opens_read_only_at_epoch_zero() {
+        let mut rng = Rng::seed_from(10);
+        let data = dense_data(&mut rng, 5, 23);
+        let path = tmp("v1_compat");
+        write_v1(&data, &path, 6).unwrap();
+        let mut store = ShardStore::open(&path).unwrap();
+        assert_eq!((store.dim(), store.len()), (5, 23));
+        assert_eq!(store.epoch(), 0);
+        assert!(store.delta_range(0).is_empty());
+        assert_eq!(
+            store.read_cols(0, 23).to_dense().data(),
+            data.to_dense().data(),
+            "v1 payload must still round-trip"
+        );
+        let extra = dense_data(&mut rng, 5, 3);
+        let err = store.append(&extra).unwrap_err();
+        assert!(err.to_string().contains("read-only"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn v2_rejects_unknown_version_and_truncation() {
+        let mut rng = Rng::seed_from(11);
+        let data = dense_data(&mut rng, 4, 17);
+        let path = tmp("v2_version");
+        write(&data, &path, 5).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // unknown version byte
+        let mut bad = bytes.clone();
+        bad[4] = 3;
+        std::fs::write(&path, &bad).unwrap();
+        let err = ShardStore::open(&path).unwrap_err();
+        assert!(err.to_string().contains("version"), "unexpected error: {err}");
+        // truncation anywhere in the footer must be caught cleanly
+        for cut in [1, 8, 40] {
+            std::fs::write(&path, &bytes[..bytes.len() - cut]).unwrap();
+            assert!(ShardStore::open(&path).is_err(), "cut={cut} must be rejected");
+        }
+        // restore → opens again
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ShardStore::open(&path).is_ok());
+    }
+
+    #[test]
+    fn v2_block_corruption_fails_checksum_on_read() {
+        let mut rng = Rng::seed_from(12);
+        let data = dense_data(&mut rng, 3, 12);
+        let path = tmp("v2_blkcorrupt");
+        write(&data, &path, 4).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one payload bit in block 0 (payload starts at byte 30);
+        // the footer stays valid, so open succeeds and the *read* trips
+        bytes[30 + 5] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let store = ShardStore::open(&path).unwrap();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| store.block(0)));
+        assert!(res.is_err(), "corrupt block payload must fail its checksum");
+        // untouched blocks still read fine
+        assert_eq!(store.block(1).len(), 4);
+    }
+
+    #[test]
+    fn append_roundtrips_epochs_and_delta_ranges() {
+        let mut rng = Rng::seed_from(13);
+        // bp=6, n=14: the tail block is partial, so the first append
+        // exercises the rewrite path
+        for sparse in [false, true] {
+            let gen = |rng: &mut Rng, n: usize| {
+                if sparse {
+                    sparse_data(rng, 9, n)
+                } else {
+                    dense_data(rng, 9, n)
+                }
+            };
+            let base = gen(&mut rng, 14);
+            let d1 = gen(&mut rng, 5);
+            let d2 = gen(&mut rng, 7);
+            let path = tmp(if sparse { "append_s" } else { "append_d" });
+            write(&base, &path, 6).unwrap();
+            let mut store = ShardStore::open(&path).unwrap();
+            assert_eq!(store.append(&d1).unwrap(), 1);
+            assert_eq!(store.append(&d2).unwrap(), 2);
+            assert_eq!(store.len(), 26);
+            assert_eq!(store.num_blocks(), 5);
+            assert_eq!(store.delta_range(0), 14..26);
+            assert_eq!(store.delta_range(1), 19..26);
+            assert!(store.delta_range(2).is_empty());
+            assert!(store.delta_range(99).is_empty());
+            let want = concat_data(vec![base.clone(), d1.clone(), d2.clone()]);
+            assert_eq!(
+                store.read_cols(0, 26).to_dense().data(),
+                want.to_dense().data(),
+                "sparse={sparse}: appended store must read back bit-exact"
+            );
+            // a fresh open sees the same committed state
+            let reopened = ShardStore::open(&path).unwrap();
+            assert_eq!(reopened.epoch(), 2);
+            assert_eq!(reopened.delta_range(1), 19..26);
+            assert_eq!(
+                reopened.read_cols(0, 26).to_dense().data(),
+                want.to_dense().data()
+            );
+        }
+    }
+
+    #[test]
+    fn append_rejects_mismatched_columns() {
+        let mut rng = Rng::seed_from(14);
+        let path = tmp("append_guard");
+        write(&dense_data(&mut rng, 4, 10), &path, 4).unwrap();
+        let mut store = ShardStore::open(&path).unwrap();
+        assert!(store.append(&dense_data(&mut rng, 5, 3)).is_err(), "wrong dim");
+        assert!(store.append(&sparse_data(&mut rng, 4, 3)).is_err(), "wrong encoding");
+        assert!(store.append(&dense_data(&mut rng, 4, 0)).is_err(), "empty epoch");
+        assert_eq!(store.epoch(), 0, "failed appends must not commit an epoch");
+    }
+
+    #[test]
+    fn torn_append_leaves_committed_epochs_intact() {
+        let mut rng = Rng::seed_from(15);
+        let base = dense_data(&mut rng, 3, 10);
+        let delta = dense_data(&mut rng, 3, 4);
+        let path = tmp("torn");
+        write(&base, &path, 4).unwrap();
+        let before = std::fs::read(&path).unwrap();
+        let mut store = ShardStore::open(&path).unwrap();
+        store.append(&delta).unwrap();
+        let after = std::fs::read(&path).unwrap();
+        // simulate a crash after the blocks + footer landed but before
+        // the header commit word: restore the old footer_off
+        let mut torn = after.clone();
+        let at = FOOTER_OFF_AT as usize;
+        torn[at..at + 8].copy_from_slice(&before[at..at + 8]);
+        std::fs::write(&path, &torn).unwrap();
+        let recovered = ShardStore::open(&path).unwrap();
+        assert_eq!(recovered.epoch(), 0, "uncommitted append must be invisible");
+        assert_eq!(recovered.len(), 10);
+        assert_eq!(
+            recovered.read_cols(0, 10).to_dense().data(),
+            base.to_dense().data(),
+            "committed epoch must survive the torn append"
+        );
+        // a torn *footer pointer* (commit word pointing mid-payload)
+        // must fail cleanly, not panic or misparse
+        let mut wild = after;
+        wild[at..at + 8].copy_from_slice(&35u64.to_le_bytes());
+        std::fs::write(&path, &wild).unwrap();
+        let err = ShardStore::open(&path).unwrap_err();
+        assert!(
+            err.to_string().contains("footer"),
+            "torn commit word must surface a footer error, got: {err}"
+        );
+    }
+
+    #[test]
+    fn refresh_picks_up_epochs_from_another_handle() {
+        let mut rng = Rng::seed_from(16);
+        let base = dense_data(&mut rng, 4, 9);
+        let delta = dense_data(&mut rng, 4, 6);
+        let path = tmp("refresh");
+        write(&base, &path, 4).unwrap();
+        let mut reader = ShardStore::open(&path).unwrap();
+        assert_eq!(reader.epoch(), 0);
+        let mut writer = ShardStore::open(&path).unwrap();
+        writer.append(&delta).unwrap();
+        // the stale handle still sees epoch 0 until refreshed
+        assert_eq!(reader.epoch(), 0);
+        reader.refresh().unwrap();
+        assert_eq!(reader.epoch(), 1);
+        assert_eq!(reader.len(), 15);
+        assert_eq!(reader.delta_range(0), 9..15);
+        let want = concat_data(vec![base, delta]);
+        assert_eq!(reader.read_cols(0, 15).to_dense().data(), want.to_dense().data());
+    }
+
+    #[test]
+    fn chunk_fold_from_covers_exactly_the_tail() {
+        let mut rng = Rng::seed_from(17);
+        let data = dense_data(&mut rng, 4, 37);
+        let path = tmp("fold_from");
+        write(&data, &path, 9).unwrap();
+        for source in [
+            ShardSource::Resident(data.clone()),
+            ShardSource::Store(ShardStore::open(&path).unwrap()),
+        ] {
+            for from in [0, 1, 9, 20, 36, 37, 50] {
+                for chunk in [0, 1, 5, 37] {
+                    let mut cols = from;
+                    let mut seen = Vec::new();
+                    source.for_each_chunk_from(chunk, from, |j0, c| {
+                        assert_eq!(j0, cols, "chunks must ascend contiguously from {from}");
+                        cols += c.len();
+                        for j in 0..c.len() {
+                            seen.push(c.col_norm_sq(j).to_bits());
+                        }
+                    });
+                    assert_eq!(cols, 37.max(from), "from={from} chunk={chunk}");
+                    let want: Vec<u64> =
+                        (from.min(37)..37).map(|j| data.col_norm_sq(j).to_bits()).collect();
+                    assert_eq!(seen, want, "from={from} chunk={chunk}");
+                }
+            }
+        }
     }
 }

@@ -365,6 +365,11 @@ pub fn serve(cfg: &Config, dataset: &str) -> Result<(), LaunchError> {
     serve_cfg.max_inflight = cfg.usize_or("max-inflight", serve_cfg.max_inflight).max(1);
     serve_cfg.queue_depth = cfg.usize_or("queue-depth", serve_cfg.queue_depth).max(1);
     serve_cfg.pipeline_depth = cfg.usize_or("pipeline-depth", serve_cfg.pipeline_depth).max(1);
+    // --variance-frac overrides DISKPCA_VARIANCE_FRAC when set (the
+    // accessor validates the (0, 1] range either way)
+    if cfg.get("variance-frac").or_else(|| cfg.get("variance_frac")).is_some() {
+        serve_cfg.variance_frac = cfg.variance_frac();
+    }
     // --compute-tier overrides DISKPCA_COMPUTE_TIER when set;
     // ServiceBuilder::build applies the result process-wide
     if cfg.get("compute-tier").or_else(|| cfg.get("compute_tier")).is_some() {
@@ -430,6 +435,24 @@ pub fn serve(cfg: &Config, dataset: &str) -> Result<(), LaunchError> {
         println!(
             "warm reuse: first job {first_words} words, \
              mean {warm_words} words/job over {jobs} jobs"
+        );
+    }
+
+    // --refit: close the session with an incremental warm refit —
+    // against in-memory shards it refreshes to a zero delta, but the
+    // word table shows the shape of the saving (no 1-embed round)
+    if cfg.bool_or("refit", false) {
+        let report = service.run_refit(&params)?;
+        println!(
+            "refit: epoch {} (+{} cols) words={} {}",
+            report.output.epoch,
+            report.output.delta_cols,
+            report.job.stats.total_words(),
+            if report.output.fell_back {
+                "(fell back to a cold fit)"
+            } else {
+                "(incremental: 1-embed skipped)"
+            }
         );
     }
 
@@ -689,6 +712,8 @@ mod tests {
         cfg.set("kernel", "gauss");
         cfg.set("gamma", "0.6");
         cfg.set("jobs", "2");
+        cfg.set("refit", "true");
+        cfg.set("variance-frac", "0.1");
         cfg.set("transform", "32");
         cfg.set("scale", "0.02");
         cfg.set("k", "3");

@@ -44,7 +44,8 @@ use crate::linalg::Mat;
 use crate::runtime::Backend;
 
 /// Bump on any change to the checkpoint wire layout.
-pub const CHECKPOINT_VERSION: u8 = 1;
+/// v2 added the data `epoch` the checkpointed fit covers.
+pub const CHECKPOINT_VERSION: u8 = 2;
 
 /// Master-side round state a revived worker must be brought up to
 /// date with. Fields fill in as the driver's units complete; replay
@@ -57,6 +58,10 @@ pub struct Checkpoint {
     /// Protocol seed (per-slot replay seeds derive from it exactly
     /// like the live `5-disLR` scatter).
     pub seed: u64,
+    /// Data epoch the checkpointed fit covers (0 until a refit reports
+    /// one) — lets a resumed serve master refit against the right
+    /// delta instead of re-folding everything.
+    pub epoch: u64,
     /// Embedding spec installed by `1-embed` (or warm reuse).
     pub spec: Option<EmbedSpec>,
     /// Leverage sketch factor broadcast by `2-disLS` — replaying it
@@ -84,6 +89,7 @@ impl Checkpoint {
         w.u8(CHECKPOINT_VERSION);
         w.str(&self.round);
         w.u64(self.seed);
+        w.u64(self.epoch);
         w.u64(self.w_cols as u64);
         match &self.spec {
             None => w.u8(0),
@@ -136,6 +142,7 @@ impl Checkpoint {
         }
         let round = r.str()?;
         let seed = r.u64()?;
+        let epoch = r.u64()?;
         let w_cols = r.u64()? as usize;
         fn flag(r: &mut Reader<'_>) -> Result<bool, CodecError> {
             match r.u8()? {
@@ -152,7 +159,7 @@ impl Checkpoint {
         if !r.finished() {
             return Err(CodecError::Trailing);
         }
-        Ok(Self { round, seed, w_cols, spec, z, y, final_w, solution })
+        Ok(Self { round, seed, epoch, w_cols, spec, z, y, final_w, solution })
     }
 }
 
@@ -480,6 +487,42 @@ pub fn dis_kpca_recovering(
     Ok(sol)
 }
 
+/// [`crate::coordinator::dis_kpca_refit`] with elastic recovery.
+///
+/// The refit's delta rounds feed on worker-retained state (embed spec
+/// + disLS sketch accumulator), so mid-refit faults cannot be
+/// replayed round by round — a revived slot has neither. Instead the
+/// checkpoint is pre-seeded with the embed spec (replayed onto every
+/// revived slot, restoring the one piece of state the delta sketch
+/// *requires*) and the **whole refit retries as a single unit**: the
+/// revived worker's missing accumulator just means a full-fold
+/// `ReqDeltaSketch` — bit-identical reply, no savings on that slot —
+/// while surviving workers keep their delta-sized work. On success
+/// the checkpoint carries the refreshed solution and its epoch, so
+/// later units (eval, project) can replay it.
+pub fn dis_kpca_refit_recovering(
+    cluster: &Cluster,
+    recovery: &mut Recovery,
+    kernel: Kernel,
+    params: &Params,
+    installed_epoch: u64,
+    variance_frac: f64,
+) -> Result<master::RefitReport, CommError> {
+    params.apply_threads();
+    recovery.checkpoint = Checkpoint::new(params.seed);
+    recovery.checkpoint.epoch = installed_epoch;
+    recovery.checkpoint.spec = Some(master::embed_spec_for(kernel, params));
+    let report = recovery.unit(cluster, "refit", |c| {
+        master::dis_kpca_refit(c, kernel, params, installed_epoch, variance_frac)
+    })?;
+    recovery.checkpoint.epoch = report.epoch;
+    recovery.checkpoint.solution = Some((
+        PointSet::Dense(report.solution.y.clone()),
+        report.solution.coeffs.clone(),
+    ));
+    Ok(report)
+}
+
 /// [`crate::coordinator::dis_css`] with elastic recovery.
 pub fn dis_css_recovering(
     cluster: &Cluster,
@@ -554,6 +597,7 @@ mod tests {
         Checkpoint {
             round: "5-disLR".into(),
             seed: 42,
+            epoch: 3,
             w_cols: 7,
             spec: Some(EmbedSpec {
                 kernel: Kernel::Gauss { gamma: 0.5 },
@@ -580,6 +624,7 @@ mod tests {
             assert_eq!(back.encode(), bytes);
             assert_eq!(back.round, cp.round);
             assert_eq!(back.seed, cp.seed);
+            assert_eq!(back.epoch, cp.epoch);
             assert_eq!(back.w_cols, cp.w_cols);
             assert_eq!(back.spec, cp.spec);
             assert_eq!(back.z.is_some(), cp.z.is_some());

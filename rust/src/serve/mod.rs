@@ -87,7 +87,9 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::comm::{memory, Cluster, CommError, CommStats, PointSet};
-use crate::coordinator::{CssSolution, KpcaSolution, KrrModel, Params, SamplingMode, Worker};
+use crate::coordinator::{
+    CssSolution, KpcaSolution, KrrModel, Params, RefitReport, SamplingMode, Worker,
+};
 use crate::data::Data;
 use crate::kernels::Kernel;
 use crate::linalg::Mat;
@@ -127,6 +129,13 @@ pub struct JobReport<T> {
 pub enum JobSpec {
     /// One disKPCA fit (Alg. 4), with an ablatable sampling stage.
     Kpca { params: Params, mode: SamplingMode },
+    /// Incremental warm refit after shard appends: refresh every
+    /// worker's store view, fold only the appended delta columns into
+    /// the retained sketch state, and re-solve — falling back to a
+    /// cold fit when the warm embedding doesn't match or the refreshed
+    /// sketch preserves too little variance
+    /// ([`crate::coordinator::dis_kpca_refit`]).
+    Refit { params: Params },
     /// One kernel CSS job (§5.3).
     Css { params: Params },
     /// One distributed KRR fit on a representative set.
@@ -150,6 +159,7 @@ impl JobSpec {
 #[derive(Clone, Debug)]
 pub enum JobOutput {
     Kpca(JobReport<KpcaSolution>),
+    Refit(JobReport<RefitReport>),
     Css(JobReport<CssSolution>),
     Krr(JobReport<KrrModel>),
     Eval(JobReport<(f64, f64)>),
@@ -169,9 +179,7 @@ pub struct Service {
     handles: Vec<JoinHandle<()>>,
 }
 
-/// Configures and builds a [`Service`] — the single replacement for
-/// the historical `in_process`/`in_process_opts`/`in_process_elastic`
-/// constructor trio.
+/// Configures and builds a [`Service`].
 ///
 /// Provide a data source: either [`ServiceBuilder::shards`] (spawns
 /// in-process workers over the memory transport) or
@@ -369,57 +377,6 @@ impl Service {
         Service::builder(kernel).cluster(cluster).build()
     }
 
-    /// Spawn an in-process serving cluster over the memory transport.
-    #[deprecated(note = "use Service::builder(kernel).shards(..).backend(..).build()")]
-    pub fn in_process(
-        shards: Vec<Data>,
-        kernel: Kernel,
-        backend: Arc<dyn Backend>,
-        chunk_rows: usize,
-    ) -> Self {
-        Service::builder(kernel)
-            .shards(shards)
-            .backend(backend)
-            .chunk_rows(chunk_rows)
-            .build()
-    }
-
-    /// [`Service::in_process`] with an explicit per-worker embed
-    /// warm-cache byte budget.
-    #[deprecated(note = "use Service::builder with .embed_cache_bytes(..)")]
-    pub fn in_process_opts(
-        shards: Vec<Data>,
-        kernel: Kernel,
-        backend: Arc<dyn Backend>,
-        chunk_rows: usize,
-        embed_cache_bytes: Option<usize>,
-    ) -> Self {
-        Service::builder(kernel)
-            .shards(shards)
-            .backend(backend)
-            .chunk_rows(chunk_rows)
-            .embed_cache_bytes(embed_cache_bytes)
-            .build()
-    }
-
-    /// In-process service on the elastic memory transport.
-    #[deprecated(note = "use Service::builder with .elastic(true)")]
-    pub fn in_process_elastic(
-        shards: Vec<Data>,
-        kernel: Kernel,
-        backend: Arc<dyn Backend>,
-        chunk_rows: usize,
-        embed_cache_bytes: Option<usize>,
-    ) -> Self {
-        Service::builder(kernel)
-            .shards(shards)
-            .backend(backend)
-            .chunk_rows(chunk_rows)
-            .embed_cache_bytes(embed_cache_bytes)
-            .elastic(true)
-            .build()
-    }
-
     /// Attach an elastic recovery driver to an externally-connected
     /// service (the host must revive onto this cluster's reply queue).
     pub fn set_recovery(&mut self, recovery: Recovery) {
@@ -508,6 +465,21 @@ impl Service {
         match self.submit_wait(JobSpec::Kpca { params: *params, mode })? {
             JobOutput::Kpca(report) => Ok(report),
             _ => unreachable!("kpca spec yields kpca output"),
+        }
+    }
+
+    /// Incremental warm refit after shard appends
+    /// ([`crate::coordinator::dis_kpca_refit`] as a scheduled job):
+    /// refreshes every worker's store view and folds only the appended
+    /// delta columns through the retained sketch state, so a refit
+    /// ships **zero** `1-embed` words and delta-sized sketch work.
+    /// When the warm embedding doesn't match this job's spec (cold
+    /// service, intervening job with another spec) the refit degrades
+    /// to a full fit and the report's `fell_back` flag is set.
+    pub fn run_refit(&mut self, params: &Params) -> Result<JobReport<RefitReport>, CommError> {
+        match self.submit_wait(JobSpec::Refit { params: *params })? {
+            JobOutput::Refit(report) => Ok(report),
+            _ => unreachable!("refit spec yields refit output"),
         }
     }
 
@@ -678,6 +650,60 @@ mod tests {
         let back = svc.run_kpca(&params).unwrap();
         assert!(!back.embed_reused);
         assert!(back.job.stats.round_words("1-embed") > 0);
+    }
+
+    #[test]
+    fn refit_reuses_warm_state_and_matches_cold_fit() {
+        // a permissive gate keeps the assertion about the warm path
+        // independent of this dataset's exact spectrum
+        let cfg = ServeConfig { variance_frac: 0.1, ..ServeConfig::default() };
+        let (mut svc, _, params) = service_cfg(3, cfg);
+        let cold = svc.run_kpca(&params).unwrap();
+        let refit = svc.run_refit(&params).unwrap();
+        assert!(refit.embed_reused);
+        assert!(!refit.output.fell_back);
+        // resident shards are immutable: nothing was appended
+        assert_eq!(refit.output.epoch, 0);
+        assert_eq!(refit.output.delta_cols, 0);
+        assert_eq!(
+            refit.job.stats.round_words("1-embed"),
+            0,
+            "refit must skip the embed broadcast entirely"
+        );
+        assert!(refit.job.stats.round_words("0-refresh") > 0);
+        assert!(refit.job.stats.total_words() < cold.job.stats.total_words());
+        // no appended data ⇒ bit-identical to the cold fit
+        assert!(cold.output.y.data() == refit.output.solution.y.data());
+        assert!(cold.output.coeffs.data() == refit.output.solution.coeffs.data());
+    }
+
+    #[test]
+    fn refit_without_warm_state_falls_back_to_cold_fit() {
+        let (mut svc, _, params) = service(2);
+        let refit = svc.run_refit(&params).unwrap();
+        assert!(!refit.embed_reused);
+        assert!(refit.output.fell_back);
+        assert!(refit.job.stats.round_words("1-embed") > 0);
+        // the fallback installed real warm state: a same-spec fit now
+        // reuses it and reproduces the same solution bit for bit
+        let warm = svc.run_kpca(&params).unwrap();
+        assert!(warm.embed_reused);
+        assert!(warm.output.y.data() == refit.output.solution.y.data());
+        assert!(warm.output.coeffs.data() == refit.output.solution.coeffs.data());
+    }
+
+    #[test]
+    fn refit_variance_gate_forces_cold_fallback() {
+        // a 3-component solution cannot hold the entire sketched
+        // spectrum of 7 noisy clusters, so frac = 1.0 must trip
+        let cfg = ServeConfig { variance_frac: 1.0, ..ServeConfig::default() };
+        let (mut svc, _, params) = service_cfg(2, cfg);
+        let cold = svc.run_kpca(&params).unwrap();
+        let refit = svc.run_refit(&params).unwrap();
+        assert!(refit.embed_reused, "gate fires inside the warm attempt");
+        assert!(refit.output.fell_back);
+        // the cold re-run is deterministic: same solution as the fit
+        assert!(cold.output.y.data() == refit.output.solution.y.data());
     }
 
     #[test]

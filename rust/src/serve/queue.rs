@@ -26,6 +26,7 @@ use crate::runtime::parse_table_cache_mb;
 /// | `queue_depth` | `DISKPCA_QUEUE_DEPTH` | 32 |
 /// | `pipeline_depth` | `DISKPCA_PIPELINE_DEPTH` | 2 |
 /// | `compute_tier` | `DISKPCA_COMPUTE_TIER` | exact |
+/// | `variance_frac` | `DISKPCA_VARIANCE_FRAC` | 0.95 |
 ///
 /// `max_inflight` is the scheduler's concurrent-job bound (1 keeps
 /// the bit-identical sequential path), `queue_depth` the admission
@@ -35,8 +36,11 @@ use crate::runtime::parse_table_cache_mb;
 /// flight per query batch. `compute_tier` selects the numeric kernels
 /// ([`crate::linalg::simd::ComputeTier`]): `exact` is the
 /// bit-reproducible default, `fast` opts into the accuracy-gated SIMD
-/// tier.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// tier. `variance_frac` is the refit acceptance gate: a warm refit
+/// ([`crate::coordinator::dis_kpca_refit`]) whose top-k solution
+/// preserves less than this fraction of the sketched spectrum's mass
+/// re-runs as a cold fit.
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
     pub comm_timeout: Option<Duration>,
     pub embed_cache_mb: usize,
@@ -45,6 +49,7 @@ pub struct ServeConfig {
     pub queue_depth: usize,
     pub pipeline_depth: usize,
     pub compute_tier: ComputeTier,
+    pub variance_frac: f64,
 }
 
 impl Default for ServeConfig {
@@ -57,7 +62,23 @@ impl Default for ServeConfig {
             queue_depth: 32,
             pipeline_depth: 2,
             compute_tier: ComputeTier::Exact,
+            variance_frac: 0.95,
         }
+    }
+}
+
+/// Parse the refit variance gate: a fraction in `(0, 1]` (`None` =
+/// unset ⇒ default). Out-of-range values are rejected rather than
+/// clamped — a gate of 0 would accept any refit and a gate above 1
+/// would reject every one, both misconfigurations.
+pub fn parse_variance_frac(raw: Option<&str>, default: f64) -> Result<f64, String> {
+    let Some(raw) = raw else { return Ok(default) };
+    match raw.trim().parse::<f64>() {
+        Ok(f) if f > 0.0 && f <= 1.0 => Ok(f),
+        Ok(_) => Err(format!(
+            "DISKPCA_VARIANCE_FRAC={raw}: must be in (0, 1]"
+        )),
+        Err(_) => Err(format!("DISKPCA_VARIANCE_FRAC={raw}: not a number")),
     }
 }
 
@@ -103,6 +124,10 @@ impl ServeConfig {
                 defaults.pipeline_depth,
             )?,
             compute_tier: parse_compute_tier(get("DISKPCA_COMPUTE_TIER").as_deref())?,
+            variance_frac: parse_variance_frac(
+                get("DISKPCA_VARIANCE_FRAC").as_deref(),
+                defaults.variance_frac,
+            )?,
         })
     }
 
@@ -199,6 +224,21 @@ mod tests {
             err.contains("DISKPCA_COMPUTE_TIER") && err.contains("turbo"),
             "{err}"
         );
+    }
+
+    #[test]
+    fn variance_frac_parses_and_rejects_out_of_range() {
+        let cfg = ServeConfig::parse(env(&[("DISKPCA_VARIANCE_FRAC", "0.8")])).unwrap();
+        assert_eq!(cfg.variance_frac, 0.8);
+        let cfg = ServeConfig::parse(env(&[("DISKPCA_VARIANCE_FRAC", " 1.0 ")])).unwrap();
+        assert_eq!(cfg.variance_frac, 1.0);
+        for bad in ["0", "0.0", "1.5", "-0.3", "lots"] {
+            let err = ServeConfig::parse(env(&[("DISKPCA_VARIANCE_FRAC", bad)])).unwrap_err();
+            assert!(
+                err.contains("DISKPCA_VARIANCE_FRAC") && err.contains(bad),
+                "{bad}: {err}"
+            );
+        }
     }
 
     #[test]

@@ -45,8 +45,8 @@ use std::thread::JoinHandle;
 
 use crate::comm::{Cluster, CommError, CommStats};
 use crate::coordinator::{
-    dis_css_warm, dis_eval, dis_kpca_warm, dis_krr, dis_project_points, embed_spec_for,
-    Params, SamplingMode,
+    dis_css_warm, dis_eval, dis_kpca_refit, dis_kpca_warm, dis_krr, dis_project_points,
+    dis_refresh_shards, embed_spec_for, Params, RefitReport, SamplingMode,
 };
 use crate::embed::EmbedSpec;
 use crate::kernels::Kernel;
@@ -94,6 +94,13 @@ fn footprint(spec: &JobSpec) -> Footprint {
             reads: 0,
             writes: EMBED | SCORES | RESID | BASIS | SOLUTION,
         },
+        // a refit rewrites the same worker state a fit does (and
+        // additionally advances the shard views), so it serializes
+        // against everything a fit would
+        JobSpec::Refit { .. } => Footprint {
+            reads: 0,
+            writes: EMBED | SCORES | RESID | BASIS | SOLUTION,
+        },
         JobSpec::Css { .. } => Footprint { reads: 0, writes: EMBED | SCORES | RESID | BASIS },
         JobSpec::Krr { .. } => Footprint::NONE,
         JobSpec::Eval => Footprint { reads: SOLUTION, writes: 0 },
@@ -121,6 +128,10 @@ struct SchedState {
     /// The [`EmbedSpec`] currently installed on every worker, when
     /// known — the key for skipping the `1-embed` round.
     warm_embed: Option<EmbedSpec>,
+    /// Data epoch the installed solution covers — what a refit's
+    /// `0-refresh` round measures its delta against. Distinct from
+    /// `epoch` below, which counts worker *revivals*.
+    data_epoch: u64,
     shutting: bool,
     /// A revival is in progress: no new dispatches until it finishes.
     recovering: bool,
@@ -195,6 +206,7 @@ impl Scheduler {
                 active: 0,
                 next_job: 0,
                 warm_embed: None,
+                data_epoch: 0,
                 shutting: false,
                 recovering: false,
                 epoch: 0,
@@ -338,6 +350,7 @@ fn embed_key(spec: &JobSpec, kernel: Kernel) -> Option<EmbedSpec> {
         JobSpec::Kpca { params, mode } if *mode != SamplingMode::AdaptiveOnly => {
             Some(embed_spec_for(kernel, params))
         }
+        JobSpec::Refit { params } => Some(embed_spec_for(kernel, params)),
         JobSpec::Css { params } => Some(embed_spec_for(kernel, params)),
         _ => None,
     }
@@ -450,6 +463,11 @@ fn runner_loop(inner: &SchedInner, lane: &Cluster) {
                     Err(_) => None,
                 };
             }
+            // a completed refit advances the epoch the installed
+            // solution covers; the next refit's delta starts there
+            if let Ok(JobOutput::Refit(rep)) = &final_res {
+                st.data_epoch = rep.output.epoch;
+            }
         }
         inner.cv.notify_all();
         // a gone receiver just means nobody is waiting — fine
@@ -505,6 +523,48 @@ fn run_attempt(
                 dis_kpca_warm(lane, kernel, params, *mode, reuse)
             };
             r.map(|sol| JobOutput::Kpca(report(sol)))
+        }
+        JobSpec::Refit { params } => {
+            let installed = inner.state.lock().unwrap().data_epoch;
+            let frac = inner.cfg.variance_frac;
+            let r = if reuse {
+                if seq {
+                    let mut guard = inner.recovery.lock().unwrap();
+                    match guard.as_mut() {
+                        Some(rec) => crate::recovery::dis_kpca_refit_recovering(
+                            lane, rec, kernel, params, installed, frac,
+                        ),
+                        None => dis_kpca_refit(lane, kernel, params, installed, frac),
+                    }
+                } else {
+                    dis_kpca_refit(lane, kernel, params, installed, frac)
+                }
+            } else {
+                // no warm state to refit from: refresh the store views
+                // so appended columns become visible, then fit cold
+                dis_refresh_shards(lane, installed).and_then(|(epoch, delta_cols)| {
+                    let solution = if seq {
+                        let mut guard = inner.recovery.lock().unwrap();
+                        match guard.as_mut() {
+                            Some(rec) => crate::recovery::dis_kpca_recovering(
+                                lane,
+                                rec,
+                                kernel,
+                                params,
+                                SamplingMode::Full,
+                                false,
+                            ),
+                            None => {
+                                dis_kpca_warm(lane, kernel, params, SamplingMode::Full, false)
+                            }
+                        }
+                    } else {
+                        dis_kpca_warm(lane, kernel, params, SamplingMode::Full, false)
+                    }?;
+                    Ok(RefitReport { solution, epoch, delta_cols, fell_back: true })
+                })
+            };
+            r.map(|rep| JobOutput::Refit(report(rep)))
         }
         JobSpec::Css { params } => {
             let r = if seq {
@@ -603,6 +663,10 @@ fn heal(inner: &SchedInner, lane: &Cluster, first_dead: usize, my_epoch: u64) ->
         Ok(true) => {
             st.epoch += 1;
             st.warm_embed = None;
+            // revived workers hold no retained sketch state and their
+            // store views were reopened from scratch: the next refit
+            // must measure its delta from epoch 0, not trust ours
+            st.data_epoch = 0;
             Some(st.epoch)
         }
         Ok(false) | Err(_) => {
@@ -654,7 +718,11 @@ mod tests {
         assert!(eval.compatible(transform), "two solution readers coexist");
         assert!(krr.compatible(transform));
         // the must-serialize pairs
+        let refit = footprint(&JobSpec::Refit { params });
         assert!(!kpca.compatible(kpca), "two fits contend for worker state");
+        assert!(!refit.compatible(kpca), "a refit rewrites fit state");
+        assert!(!refit.compatible(transform), "no reading mid-refit");
+        assert!(refit.compatible(krr), "stateless KRR rides along a refit");
         assert!(!kpca.compatible(eval), "no reading a half-installed solution");
         assert!(!kpca.compatible(transform));
         assert!(!Footprint::EXCLUSIVE.compatible(krr));

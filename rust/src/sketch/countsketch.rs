@@ -52,6 +52,27 @@ impl CountSketch {
         Self { t, h, s, bucket_start, bucket_rows }
     }
 
+    /// Prefix-stable construction: `(h[j], s[j])` are drawn as one
+    /// interleaved pair per input coordinate, so
+    /// `new_extendable(m', t, Rng::seed_from(seed))` agrees with
+    /// `new_extendable(m, t, Rng::seed_from(seed))` on the first
+    /// `min(m, m')` coordinates. [`CountSketch::new`] draws all of `h`
+    /// before any of `s`, so growing `m` there reshuffles every sign —
+    /// the incremental-refit path needs the prefix to survive appends
+    /// (old columns keep their buckets and signs; only new columns'
+    /// contributions are folded in).
+    pub fn new_extendable(m: usize, t: usize, rng: &mut Rng) -> Self {
+        assert!(t > 0);
+        let mut h = Vec::with_capacity(m);
+        let mut s = Vec::with_capacity(m);
+        for _ in 0..m {
+            h.push(rng.below(t) as u32);
+            s.push(rng.sign());
+        }
+        let (bucket_start, bucket_rows) = build_buckets(t, &h);
+        Self { t, h, s, bucket_start, bucket_rows }
+    }
+
     /// From explicit tables (for cross-checking against the XLA/Pallas
     /// countsketch artifact, which receives h and s as inputs).
     pub fn from_tables(t: usize, h: Vec<u32>, s: Vec<f64>) -> Self {
@@ -326,6 +347,30 @@ mod tests {
             }
             assert!(out.data() == full.data(), "chunk={chunk}: bits differ");
         }
+    }
+
+    /// Growing `m` under `new_extendable` must leave the first
+    /// `m_old` coordinates' buckets *and* signs untouched — the
+    /// property the delta-sketch fold stands on. (`new` does not have
+    /// it: the sign stream starts after all of `h`, so a larger `m`
+    /// shifts every sign.)
+    #[test]
+    fn extendable_tables_are_prefix_stable() {
+        for (m_old, m_new, t) in [(10, 11, 8), (40, 67, 16), (1, 100, 4)] {
+            let a = CountSketch::new_extendable(m_old, t, &mut Rng::seed_from(42));
+            let b = CountSketch::new_extendable(m_new, t, &mut Rng::seed_from(42));
+            let (ha, sa) = a.tables();
+            let (hb, sb) = b.tables();
+            assert_eq!(ha, &hb[..m_old], "buckets diverge on the prefix");
+            assert_eq!(sa, &sb[..m_old], "signs diverge on the prefix");
+        }
+        // and the sketch itself still behaves like a CountSketch
+        let mut rng = Rng::seed_from(9);
+        let (m, n, t) = (40, 7, 16);
+        let cs = CountSketch::new_extendable(m, t, &mut rng);
+        let s = dense_equiv(&cs, m);
+        let a = Mat::from_fn(m, n, |_, _| rng.normal());
+        assert!(cs.apply_feature_axis(&a).max_abs_diff(&s.matmul(&a)) < 1e-12);
     }
 
     #[test]

@@ -25,6 +25,7 @@ fn empty_environment_yields_the_documented_defaults() {
     assert_eq!(cfg.max_inflight, 1, "sequential scheduling by default");
     assert_eq!(cfg.queue_depth, 32);
     assert_eq!(cfg.pipeline_depth, 2);
+    assert_eq!(cfg.variance_frac, 0.95, "unset keeps the 0.95 refit gate");
     assert_eq!(cfg, ServeConfig::default());
 }
 
@@ -125,6 +126,28 @@ fn compute_tier_parses_and_rejects_unknown_names() {
         // ServeConfig::from_env wraps this as panic!("config {err}") —
         // the same hard-error convention as every other knob here
         assert!(format!("config {err}").starts_with("config DISKPCA_COMPUTE_TIER="));
+    }
+}
+
+#[test]
+fn variance_frac_parses_and_rejects_out_of_range_or_garbage() {
+    let at = |v: &str| ServeConfig::parse(env(&[("DISKPCA_VARIANCE_FRAC", v)]));
+    assert_eq!(at("0.5").unwrap().variance_frac, 0.5);
+    assert_eq!(at("1").unwrap().variance_frac, 1.0, "1.0 demands the full spectrum");
+    assert_eq!(
+        at(" 0.99 ").unwrap().variance_frac,
+        0.99,
+        "surrounding whitespace is tolerated"
+    );
+    // 0 would accept any refit, > 1 would reject every one: both are
+    // misconfigurations, not modes
+    for bad in ["0", "0.0", "-0.5", "1.01", "95%", "most", ""] {
+        let err = at(bad).unwrap_err();
+        assert!(err.contains("DISKPCA_VARIANCE_FRAC"), "error must name the variable: {err}");
+        assert!(
+            err.contains(bad.trim()) || bad.trim().is_empty(),
+            "error must echo the value: {err}"
+        );
     }
 }
 

@@ -1,0 +1,293 @@
+//! Incremental-refit parity tests — the epoch-aware tentpole
+//! invariant: a warm [`dis_kpca_refit`] over appended shard stores is
+//! **bit-identical** to a cold [`dis_kpca`] over the same stores —
+//! solution points, coefficients, and the per-round communication
+//! word table for every shared round — while shipping **zero**
+//! `1-embed` words and strictly fewer total words. Pinned across
+//! chunk sizes and across the memory and TCP transports.
+
+use std::sync::Arc;
+
+use diskpca::comm::{memory, tcp, Cluster, CommStats};
+use diskpca::coordinator::{dis_kpca, dis_kpca_refit, Params, RefitReport, Worker};
+use diskpca::data::{clusters, partition_power_law, Data, ShardSource, ShardStore};
+use diskpca::kernels::Kernel;
+use diskpca::linalg::Mat;
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+fn kernel() -> Kernel {
+    Kernel::Gauss { gamma: 0.7 }
+}
+
+fn params() -> Params {
+    Params {
+        k: 3,
+        t: 16,
+        p: 32,
+        n_lev: 10,
+        n_adapt: 20,
+        m_rff: 256,
+        t2: 64,
+        seed: 12,
+        ..Params::default()
+    }
+}
+
+/// The refit gate is effectively disabled here: these tests pin
+/// bit-identity of the *warm* path, and the gate's own behavior is
+/// covered by the serve and master unit tests.
+const NO_GATE: f64 = 1e-6;
+
+fn base_shards(seed: u64) -> Vec<Data> {
+    let mut rng = Rng::seed_from(seed);
+    let data = Data::Dense(clusters(8, 150, 3, 0.2, &mut rng));
+    partition_power_law(&data, 3, 6)
+}
+
+/// Deterministic per-shard append payload (shard `i` gets `3 + i`
+/// columns), identical across chunk sizes and transports so warm
+/// solutions are comparable between sweeps.
+fn delta_for(i: usize) -> Data {
+    let mut rng = Rng::seed_from(100 + i as u64);
+    Data::Dense(Mat::from_fn(8, 3 + i, |_, _| rng.normal()))
+}
+
+fn write_stores(tag: &str, shards: &[Data], block_points: usize) -> Vec<std::path::PathBuf> {
+    let dir = std::env::temp_dir().join(format!("diskpca_incremental_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    shards
+        .iter()
+        .enumerate()
+        .map(|(i, sh)| {
+            let path = dir.join(format!("shard_{i}.dkps"));
+            diskpca::data::shard_store::write(sh, &path, block_points).unwrap();
+            path
+        })
+        .collect()
+}
+
+/// Spawn store-backed workers on the memory transport, run `body`
+/// against the cluster (with live access to its stats for mid-run
+/// table snapshots), shut down, and join.
+fn with_store_cluster<T>(
+    paths: &[std::path::PathBuf],
+    chunk_rows: usize,
+    body: impl FnOnce(&Cluster, &CommStats) -> T,
+) -> T {
+    let sources: Vec<ShardSource> = paths
+        .iter()
+        .map(|p| ShardSource::Store(ShardStore::open(p).unwrap()))
+        .collect();
+    let (star, endpoints) = memory::star(sources.len());
+    let stats = CommStats::new();
+    let cluster = Cluster::new(star, stats.clone());
+    let handles: Vec<_> = sources
+        .into_iter()
+        .zip(endpoints)
+        .map(|(src, ep)| {
+            let k = kernel();
+            std::thread::spawn(move || {
+                Worker::with_source(src, k, Arc::new(NativeBackend::new()), chunk_rows).run(ep)
+            })
+        })
+        .collect();
+    let out = body(&cluster, &stats);
+    cluster.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+    out
+}
+
+type Table = Vec<(String, usize, usize)>;
+
+/// Per-round word growth between two cumulative snapshots — the
+/// contribution of whatever ran in between (rounds that did not move
+/// are dropped).
+fn table_diff(before: &Table, after: &Table) -> Table {
+    after
+        .iter()
+        .map(|(round, up, down)| {
+            let (bu, bd) = before
+                .iter()
+                .find(|(r, _, _)| r == round)
+                .map(|(_, u, d)| (*u, *d))
+                .unwrap_or((0, 0));
+            (round.clone(), up - bu, down - bd)
+        })
+        .filter(|(_, u, d)| *u > 0 || *d > 0)
+        .collect()
+}
+
+fn words(t: &Table, round: &str) -> (usize, usize) {
+    t.iter()
+        .find(|(r, _, _)| r == round)
+        .map(|(_, u, d)| (*u, *d))
+        .unwrap_or((0, 0))
+}
+
+fn total(t: &Table) -> usize {
+    t.iter().map(|(_, u, d)| u + d).sum()
+}
+
+/// The word-table contract of one refit against its cold reference:
+/// no `1-embed` words at all, a (tiny) `0-refresh` round the cold fit
+/// doesn't have, every shared round identical word for word, and
+/// strictly fewer words in total.
+fn assert_refit_words(refit: &Table, cold: &Table, ctx: &str) {
+    assert_eq!(words(refit, "1-embed"), (0, 0), "{ctx}: refit must ship zero 1-embed words");
+    assert!(words(refit, "0-refresh") != (0, 0), "{ctx}: refit must run the refresh round");
+    assert_eq!(words(cold, "0-refresh"), (0, 0), "{ctx}: cold fit has no refresh round");
+    for (round, up, down) in cold {
+        if round == "1-embed" {
+            continue;
+        }
+        assert_eq!(
+            words(refit, round),
+            (*up, *down),
+            "{ctx}: shared round {round} must cost identical words"
+        );
+    }
+    assert!(
+        total(refit) < total(cold),
+        "{ctx}: refit must be strictly cheaper ({} vs {} words)",
+        total(refit),
+        total(cold)
+    );
+}
+
+#[test]
+fn refit_without_appends_is_bit_identical_and_strictly_cheaper() {
+    let shards = base_shards(4);
+    for chunk in [0usize, 5] {
+        let paths = write_stores(&format!("noappend_c{chunk}"), &shards, 5);
+        let (y0, c0, report, fit_table, refit_table) =
+            with_store_cluster(&paths, chunk, |cluster, stats| {
+                let p = params();
+                let cold = dis_kpca(cluster, kernel(), &p).unwrap();
+                let fit_table = stats.table();
+                let report = dis_kpca_refit(cluster, kernel(), &p, 0, NO_GATE).unwrap();
+                let refit_table = table_diff(&fit_table, &stats.table());
+                (cold.y, cold.coeffs, report, fit_table, refit_table)
+            });
+        assert!(!report.fell_back, "chunk={chunk}");
+        assert_eq!(report.epoch, 0, "nothing was appended");
+        assert_eq!(report.delta_cols, 0);
+        assert!(
+            report.solution.y.data() == y0.data(),
+            "chunk={chunk}: refit solution points differ from the cold fit"
+        );
+        assert!(report.solution.coeffs.data() == c0.data(), "chunk={chunk}");
+        assert_refit_words(&refit_table, &fit_table, &format!("chunk={chunk}"));
+    }
+}
+
+#[test]
+fn refit_after_append_matches_fresh_cold_fit_bit_for_bit() {
+    let shards = base_shards(9);
+    let total_delta: usize = (0..shards.len()).map(|i| delta_for(i).len()).sum();
+    let mut warm_bits: Option<Vec<u64>> = None;
+    for chunk in [0usize, 6] {
+        let paths = write_stores(&format!("append_c{chunk}"), &shards, 5);
+        // one persistent cluster: fit at epoch 0, commit appends
+        // through separate writer handles (the workers' own handles
+        // stay stale until the refresh round), then refit warm
+        let (report, refit_table) = with_store_cluster(&paths, chunk, |cluster, stats| {
+            let p = params();
+            let _ = dis_kpca(cluster, kernel(), &p).unwrap();
+            for (i, path) in paths.iter().enumerate() {
+                let mut writer = ShardStore::open(path).unwrap();
+                writer.append(&delta_for(i)).unwrap();
+            }
+            let before = stats.table();
+            let report = dis_kpca_refit(cluster, kernel(), &p, 0, NO_GATE).unwrap();
+            (report, table_diff(&before, &stats.table()))
+        });
+        assert!(!report.fell_back, "chunk={chunk}");
+        assert_eq!(report.epoch, 1, "one append per shard commits one epoch");
+        assert_eq!(report.delta_cols, total_delta, "chunk={chunk}");
+
+        // the reference: a fresh cold fit over the appended stores
+        let (y_cold, c_cold, cold_table) = with_store_cluster(&paths, chunk, |cluster, stats| {
+            let sol = dis_kpca(cluster, kernel(), &params()).unwrap();
+            (sol.y, sol.coeffs, stats.table())
+        });
+        assert!(
+            report.solution.y.data() == y_cold.data(),
+            "chunk={chunk}: warm refit differs from a cold fit over the appended data"
+        );
+        assert!(report.solution.coeffs.data() == c_cold.data(), "chunk={chunk}");
+        assert_refit_words(&refit_table, &cold_table, &format!("chunk={chunk}"));
+
+        // and the warm solution itself is chunk-invariant
+        let bits: Vec<u64> = report.solution.y.data().iter().map(|v| v.to_bits()).collect();
+        match &warm_bits {
+            None => warm_bits = Some(bits),
+            Some(b) => assert!(*b == bits, "warm solution differs across chunk sizes"),
+        }
+    }
+}
+
+#[test]
+fn refit_after_append_parity_over_tcp() {
+    // the same fit → append → refit flow through real sockets, then a
+    // cold memory-transport fit over the appended stores as the
+    // reference — pinning both transport-independence and parity
+    let shards = base_shards(21);
+    let s = shards.len();
+    let paths = write_stores("tcp", &shards, 5);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener); // free the port for `listen` (race-free enough on loopback)
+
+    let master_paths = paths.clone();
+    let master_addr = addr.clone();
+    let master = std::thread::spawn(move || -> (RefitReport, Table) {
+        let star = tcp::listen(&master_addr, s).unwrap();
+        let stats = CommStats::new();
+        let cluster = Cluster::new(star, stats.clone());
+        let p = params();
+        let _ = dis_kpca(&cluster, kernel(), &p).unwrap();
+        for (i, path) in master_paths.iter().enumerate() {
+            let mut writer = ShardStore::open(path).unwrap();
+            writer.append(&delta_for(i)).unwrap();
+        }
+        let before = stats.table();
+        let report = dis_kpca_refit(&cluster, kernel(), &p, 0, NO_GATE).unwrap();
+        let refit_table = table_diff(&before, &stats.table());
+        cluster.shutdown();
+        (report, refit_table)
+    });
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let workers: Vec<_> = paths
+        .iter()
+        .map(|path| {
+            let path = path.clone();
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let src = ShardSource::Store(ShardStore::open(&path).unwrap());
+                let ep = tcp::connect(&addr).unwrap();
+                Worker::with_source(src, kernel(), Arc::new(NativeBackend::new()), 4).run(ep)
+            })
+        })
+        .collect();
+    let (report, refit_table) = master.join().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    let (y_cold, c_cold, cold_table) = with_store_cluster(&paths, 4, |cluster, stats| {
+        let sol = dis_kpca(cluster, kernel(), &params()).unwrap();
+        (sol.y, sol.coeffs, stats.table())
+    });
+    assert_eq!(report.epoch, 1);
+    assert!(!report.fell_back);
+    assert!(
+        report.solution.y.data() == y_cold.data(),
+        "tcp warm refit differs from the memory-transport cold fit"
+    );
+    assert!(report.solution.coeffs.data() == c_cold.data());
+    assert_refit_words(&refit_table, &cold_table, "tcp");
+}

@@ -360,6 +360,8 @@ fn variant_index(m: &Message) -> usize {
         ReqSketchEmbedR { .. } => 29,
         ReqProjectSketchR { .. } => 30,
         ReqLoadShard { .. } => 31,
+        ReqRefreshShard { .. } => 32,
+        ReqDeltaSketch { .. } => 33,
     }
 }
 
@@ -423,6 +425,8 @@ fn canonical_messages() -> Vec<Message> {
             seed: 18,
         },
         Message::ReqLoadShard { path: "shards/susy_like_002.dkps".into(), chunk_rows: 64 },
+        Message::ReqRefreshShard { epoch: 3 },
+        Message::ReqDeltaSketch { p: 19, seed: 20 },
     ]
 }
 
@@ -437,7 +441,7 @@ fn codec_roundtrip_covers_every_variant() {
     let mut seen: Vec<usize> = msgs.iter().map(variant_index).collect();
     seen.sort_unstable();
     seen.dedup();
-    assert_eq!(seen, (0..32).collect::<Vec<_>>(), "canonical list must cover all 32 variants");
+    assert_eq!(seen, (0..34).collect::<Vec<_>>(), "canonical list must cover all 34 variants");
     for msg in msgs {
         let bytes = codec::encode(&msg);
         let back = codec::decode(&bytes).unwrap_or_else(|e| panic!("{}: {e:?}", msg.tag()));
