@@ -25,6 +25,19 @@ else
     cargo test -q --test fault_injection --test elastic_soak --test checkpoint_properties
 fi
 
+# Seeded chaos soak: the same multi-job service sequence as
+# elastic_soak, but every master→worker link sits behind the seeded
+# fault-injection transport (severed links + delayed sends at a fixed
+# seed). Own step under a hard timeout for the same reason as the
+# matrix above: a healing-liveness bug is a hang, and the timeout
+# turns it into a failure.
+echo "==> chaos soak (hard timeout 600s)"
+if command -v timeout >/dev/null 2>&1; then
+    timeout 600 cargo test -q --test chaos_soak
+else
+    cargo test -q --test chaos_soak
+fi
+
 # Fast-tier accuracy gate: the explicit-SIMD compute tier is only
 # allowed to ship while every vectorized kernel stays inside its
 # documented ulp/relative-norm bound vs the exact tier (and the FWHT
@@ -95,6 +108,8 @@ echo "==> qps bench smoke + baseline diff (warn-only, threshold 25%; seq vs conc
 DISKPCA_BENCH_FAST=1 cargo bench --bench qps
 echo "==> incremental bench smoke + baseline diff (warn-only, threshold 25%; warm refit vs cold fit)"
 DISKPCA_BENCH_FAST=1 cargo bench --bench incremental
+echo "==> degraded bench smoke + baseline diff (warn-only, threshold 25%; revival vs rebalance healing)"
+DISKPCA_BENCH_FAST=1 cargo bench --bench degraded
 
 # Serve-layer smoke: the example runs a real multi-job session and
 # asserts the warm-state invariant (second same-spec job performs zero

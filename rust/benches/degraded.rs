@@ -1,0 +1,306 @@
+//! Degraded-mode benchmarks: what healing costs, measured end to end
+//! on a 3-worker elastic memory star running one disKPCA fit + eval.
+//!
+//! Rows:
+//! - `degraded/cold s=3` — the fault-free run, the latency floor both
+//!   healing paths are compared against.
+//! - `degraded/revival s=3` — worker 1 dies mid `2-disLS` and a
+//!   replacement is revived in place: settle grace + state replay +
+//!   the retried unit.
+//! - `degraded/rebalance s=3→2` — worker 1 dies mid `2-disLS` and
+//!   never rejoins: survivor 2 adopts its shard, the cluster shrinks,
+//!   and the whole job re-runs cold on two workers.
+//!
+//! Besides the latencies, the `degraded/words/*` rows record the
+//! *extra communication* of each path as words-in-nanoseconds (the
+//! same Sample-injection trick the incremental bench uses — 1 word =
+//! 1 ns, deterministic, so any drift is a protocol change, not
+//! noise): revival's replay words (total vs the cold run) and
+//! rebalance's shard-shipping words
+//! ([`diskpca::recovery::Recovery::last_rebalance_words`] — the job
+//! re-run itself rewinds the stats, so the tables stay clean).
+//!
+//! Emits `BENCH_degraded.json` and diffs it against
+//! `bench_baseline/BENCH_degraded.json` with the repo's warn-only
+//! >25% threshold.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Duration;
+
+use diskpca::bench_harness::{black_box, Bencher};
+use diskpca::comm::{memory, Cluster, CommStats, Endpoint, Message, ReplyEvent, WorkerLink};
+use diskpca::coordinator::{dis_eval, dis_kpca, Params, SamplingMode, Worker};
+use diskpca::data::{clusters, partition_power_law, Data};
+use diskpca::kernels::Kernel;
+use diskpca::recovery::{
+    dis_eval_recovering, dis_kpca_recovering, with_rebalance, AdoptSource, LocalHost, Recovery,
+    ReviveHost, Transport,
+};
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+
+const REGRESSION_THRESHOLD: f64 = 1.25;
+const S: usize = 3;
+const DEAD: usize = 1;
+const DIE_AFTER: usize = 2; // dies inside round 2-disLS
+
+fn workload() -> (Vec<Data>, Kernel, Params) {
+    let mut rng = Rng::seed_from(31);
+    let data = Data::Dense(clusters(6, 90, 3, 0.2, &mut rng));
+    let shards = partition_power_law(&data, S, 2);
+    let kernel = Kernel::Gauss { gamma: 0.6 };
+    let params = Params {
+        k: 3,
+        t: 16,
+        p: 32,
+        n_lev: 8,
+        n_adapt: 12,
+        m_rff: 128,
+        t2: 64,
+        seed: 5,
+        ..Params::default()
+    };
+    (shards, kernel, params)
+}
+
+/// Serve `die_after` requests, then exit holding the next one.
+fn doomed_worker(mut ep: impl Endpoint, shard: Data, kernel: Kernel, die_after: usize) {
+    let mut worker = Worker::new(shard, kernel, Arc::new(NativeBackend::new()));
+    let mut served = 0usize;
+    loop {
+        let req = match ep.recv_req() {
+            Ok(req) => req,
+            Err(_) => return,
+        };
+        if matches!(req, Message::Quit) {
+            return;
+        }
+        if served == die_after {
+            return;
+        }
+        let resp = worker.handle(req);
+        if ep.send_resp(resp).is_err() {
+            return;
+        }
+        served += 1;
+    }
+}
+
+/// A [`ReviveHost`] whose `refuse` slot never comes back; everything
+/// else delegates to the wrapped [`LocalHost`].
+struct NoRejoin {
+    inner: LocalHost,
+    refuse: usize,
+}
+
+impl ReviveHost for NoRejoin {
+    fn revive(&mut self, slot: usize) -> Result<Box<dyn WorkerLink>, String> {
+        if slot == self.refuse {
+            return Err(format!("slot {slot} never rejoins"));
+        }
+        self.inner.revive(slot)
+    }
+
+    fn shard_path(&self, slot: usize) -> Option<(String, usize)> {
+        self.inner.shard_path(slot)
+    }
+
+    fn adopt_source(&mut self, slot: usize) -> Result<AdoptSource, String> {
+        self.inner.adopt_source(slot)
+    }
+
+    fn rebalanced(&mut self, dead: usize, adopter: usize) {
+        self.inner.rebalanced(dead, adopter)
+    }
+
+    fn join(&mut self) {
+        self.inner.join()
+    }
+}
+
+/// Fault-free run; returns its total word count.
+fn cold_run() -> usize {
+    let (shards, kernel, params) = workload();
+    let (star, endpoints) = memory::star(S);
+    let cluster = Cluster::new(star, CommStats::new());
+    let handles: Vec<_> = shards
+        .into_iter()
+        .zip(endpoints)
+        .map(|(shard, ep)| {
+            std::thread::spawn(move || {
+                Worker::new(shard, kernel, Arc::new(NativeBackend::new())).run(ep)
+            })
+        })
+        .collect();
+    dis_kpca(&cluster, kernel, &params).unwrap();
+    dis_eval(&cluster).unwrap();
+    let words = cluster.stats.total_words();
+    cluster.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+    words
+}
+
+fn spawn_mortal_cluster(
+    shards: &[Data],
+    kernel: Kernel,
+) -> (Cluster, Vec<std::thread::JoinHandle<()>>, Sender<ReplyEvent>) {
+    let (star, endpoints, reply_tx) = memory::star_elastic(S);
+    let cluster = Cluster::new(star, CommStats::new());
+    cluster.set_reply_timeout(Duration::from_secs(120));
+    let handles: Vec<_> = shards
+        .iter()
+        .cloned()
+        .zip(endpoints)
+        .enumerate()
+        .map(|(i, (shard, ep))| {
+            std::thread::spawn(move || {
+                if i == DEAD {
+                    doomed_worker(ep, shard, kernel, DIE_AFTER);
+                } else {
+                    Worker::new(shard, kernel, Arc::new(NativeBackend::new())).run(ep);
+                }
+            })
+        })
+        .collect();
+    (cluster, handles, reply_tx)
+}
+
+/// One death, revived in place; returns the run's total words.
+fn revival_run() -> usize {
+    let (shards, kernel, params) = workload();
+    let (cluster, handles, reply_tx) = spawn_mortal_cluster(&shards, kernel);
+    let host = LocalHost::new(
+        shards,
+        kernel,
+        Arc::new(NativeBackend::new()),
+        0,
+        reply_tx,
+        Transport::Memory,
+    );
+    let mut rec = Recovery::new(Box::new(host));
+    rec.set_grace(Duration::from_millis(50));
+    dis_kpca_recovering(&cluster, &mut rec, kernel, &params, SamplingMode::Full, false).unwrap();
+    dis_eval_recovering(&cluster, &mut rec).unwrap();
+    let words = cluster.stats.total_words();
+    cluster.shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
+    rec.join_host();
+    words
+}
+
+/// One permanent loss, healed by rebalance; returns the words spent
+/// shipping the adopted shard.
+fn rebalance_run() -> usize {
+    let (shards, kernel, params) = workload();
+    let (cluster, handles, reply_tx) = spawn_mortal_cluster(&shards, kernel);
+    let inner = LocalHost::new(
+        shards,
+        kernel,
+        Arc::new(NativeBackend::new()),
+        0,
+        reply_tx,
+        Transport::Memory,
+    );
+    let mut rec = Recovery::new(Box::new(NoRejoin { inner, refuse: DEAD }));
+    rec.set_grace(Duration::from_millis(50));
+    rec.set_rebalance(true);
+    with_rebalance(&cluster, &mut rec, |cluster, rec| {
+        dis_kpca_recovering(cluster, rec, kernel, &params, SamplingMode::Full, false)?;
+        dis_eval_recovering(cluster, rec)?;
+        Ok(())
+    })
+    .unwrap();
+    let words = rec.last_rebalance_words();
+    cluster.shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
+    rec.join_host();
+    words
+}
+
+/// Record a deterministic word count as a pseudo-duration row (1 word
+/// = 1 ns), so the JSON/CSV artifacts carry the comm-cost trend next
+/// to the wall-time trend.
+fn record_words(b: &mut Bencher, name: &str, words: usize) {
+    let d = Duration::from_nanos(words as u64);
+    let sample = diskpca::bench_harness::Sample {
+        name: name.to_string(),
+        threads: diskpca::par::threads(),
+        iters: 1,
+        median: d,
+        mean: d,
+        min: d,
+        mad: Duration::ZERO,
+        gflops: None,
+    };
+    println!("{sample}");
+    b.samples.push(sample);
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    let cold_words = cold_run();
+    b.bench(&format!("degraded/cold s={S}"), || black_box(cold_run()));
+
+    let revival_words = revival_run();
+    b.bench(&format!("degraded/revival s={S}"), || black_box(revival_run()));
+
+    let rebalance_ship_words = rebalance_run();
+    b.bench(&format!("degraded/rebalance s={S}→2"), || black_box(rebalance_run()));
+
+    record_words(&mut b, &format!("degraded/words/cold s={S}"), cold_words);
+    record_words(
+        &mut b,
+        &format!("degraded/words/revival-extra s={S}"),
+        revival_words.saturating_sub(cold_words),
+    );
+    record_words(
+        &mut b,
+        &format!("degraded/words/rebalance-ship s={S}→2"),
+        rebalance_ship_words,
+    );
+    println!("cold run: {cold_words} words");
+    println!(
+        "revival: {} words total (+{} replay words over cold)",
+        revival_words,
+        revival_words.saturating_sub(cold_words)
+    );
+    println!(
+        "rebalance: {rebalance_ship_words} extra words shipping the adopted shard \
+         (job re-run words are rewound to the survivor cold fit's table)"
+    );
+
+    b.write_csv("results/bench_degraded.csv").unwrap();
+
+    let out = std::env::var("DISKPCA_BENCH_OUT").unwrap_or_else(|_| "BENCH_degraded.json".into());
+    b.write_median_json(&out).expect("write bench json");
+    println!("wrote {out} ({} rows)", b.samples.len());
+
+    let baseline_path = std::env::var("DISKPCA_BENCH_BASELINE")
+        .unwrap_or_else(|_| "bench_baseline/BENCH_degraded.json".into());
+    match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => {
+            let warnings = b.regressions_vs(&text, REGRESSION_THRESHOLD);
+            if warnings.is_empty() {
+                println!("no regressions > 25% vs {baseline_path}");
+            } else {
+                for w in &warnings {
+                    println!("WARNING: bench regression: {w}");
+                }
+                println!(
+                    "({} warning(s) vs {baseline_path}; informational only — update the baseline \
+                     by copying {out} over it when a slowdown is intended)",
+                    warnings.len()
+                );
+            }
+        }
+        Err(e) => println!("baseline {baseline_path} unavailable ({e}) — skipping diff"),
+    }
+}

@@ -102,6 +102,22 @@ COMMON FLAGS
                                that started without --data
   --rejoin-wait SECS           master --elastic: how long to wait for a
                                replacement worker to connect (default 60)
+  --rebalance                  master --elastic: when a dead slot's revival
+                               budget runs out, adopt its shard onto a
+                               survivor, shrink the cluster, and re-run the
+                               job cold on s-1 workers (bit-identical to a
+                               fresh fit over the post-rebalance layout).
+                               Off by default: permanent loss then exits 4
+  --comm-retries N             reply-timeout retry budget (default 0, env
+                               DISKPCA_COMM_RETRIES): each expiry doubles
+                               the bound and retries, up to N times, before
+                               the timeout poisons the cluster — waits out
+                               slow-but-alive workers
+  --chaos-seed S               master --elastic: wrap every worker link in
+                               the seeded deterministic fault-injection
+                               transport (delays + severed links; env
+                               DISKPCA_CHAOS_SEED). Same seed, same fault
+                               schedule — healed runs stay bit-identical
   --workers N                  override the dataset's worker count
   --jobs N                     serve: fits to run on the session (default 3)
   --transform N                serve: query points to project (default 256)
@@ -138,6 +154,10 @@ EXIT CODES (master / worker deployment subcommands)
   3  protocol failure — a worker died, reported an error, or replied
      garbage mid-round; the error names the worker and the round, and
      the master releases surviving workers before exiting
+  4  degraded — a worker slot is permanently lost (revival budget
+     exhausted or no rejoin within --rejoin-wait) and --rebalance was
+     off or impossible; the error names the lost slot. Re-shard, or
+     rerun with --rebalance to continue on the survivors
 ";
 
 #[cfg(test)]

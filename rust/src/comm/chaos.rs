@@ -1,0 +1,183 @@
+//! Seeded chaos transport: a deterministic fault-injection wrapper
+//! around any [`WorkerLink`].
+//!
+//! Each [`ChaosLink`] rolls a private [`Rng`] once per send and, per
+//! its configured per-mille rates, either (a) *severs* the link — the
+//! wrapped `Box<dyn WorkerLink>` is dropped, so this send and every
+//! later one fail master-side while the worker observes a hang-up
+//! (the memory transport's endpoint `recv` errors; a TCP peer sees
+//! the socket close mid-stream, i.e. a truncated frame) — or (b)
+//! *delays* the send by a bounded, seed-derived number of
+//! milliseconds, or (c) passes it through untouched. Both fault kinds
+//! are exactly the real-world failures the elastic runtime must heal:
+//! a severed link surfaces as [`CommError::Link`] and is repaired by
+//! [`crate::recovery::Recovery`] (whose
+//! [`Cluster::install_link`](crate::comm::Cluster::install_link)
+//! replaces the chaos wrapper with a fresh raw link), and a delay
+//! exercises the reply-timeout retry budget
+//! ([`Cluster::set_comm_retries`](crate::comm::Cluster::set_comm_retries)).
+//!
+//! Determinism: every decision is a pure function of the seed and the
+//! send count on that link — no wall clock, no global state — so a
+//! soak at a fixed seed replays the same fault schedule on every run
+//! (`tests/chaos_soak.rs`; `--chaos-seed` / `DISKPCA_CHAOS_SEED` in
+//! the launcher). The injected *sleeps* affect wall time only, never
+//! message contents, so a healed run's outputs are bit-identical to
+//! the fault-free run.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::{Payload, Star, WorkerLink};
+use crate::rng::Rng;
+
+/// Default per-mille probability that one send severs the link.
+pub const DROP_PER_MILLE: usize = 20;
+/// Default per-mille probability that one send is delayed.
+pub const DELAY_PER_MILLE: usize = 100;
+/// Default upper bound (exclusive, ms) on one injected delay.
+pub const MAX_DELAY_MS: u64 = 15;
+
+struct ChaosInner {
+    /// The real link; `None` once a drop roll severed it. Severing by
+    /// dropping the box is what makes the fault real on both sides:
+    /// the master's next send errors, the worker sees a hang-up.
+    link: Option<Box<dyn WorkerLink>>,
+    rng: Rng,
+    drop_per_mille: usize,
+    delay_per_mille: usize,
+    max_delay_ms: u64,
+}
+
+/// A [`WorkerLink`] that injects seeded faults in front of a real one.
+pub struct ChaosLink {
+    inner: Mutex<ChaosInner>,
+}
+
+impl ChaosLink {
+    /// Wrap `link` with the default fault rates.
+    pub fn new(link: Box<dyn WorkerLink>, seed: u64) -> Self {
+        Self::with_rates(link, seed, DROP_PER_MILLE, DELAY_PER_MILLE, MAX_DELAY_MS)
+    }
+
+    /// Wrap `link` with explicit per-mille drop/delay rates (tests pin
+    /// these to force or forbid specific fault kinds).
+    pub fn with_rates(
+        link: Box<dyn WorkerLink>,
+        seed: u64,
+        drop_per_mille: usize,
+        delay_per_mille: usize,
+        max_delay_ms: u64,
+    ) -> Self {
+        Self {
+            inner: Mutex::new(ChaosInner {
+                link: Some(link),
+                rng: Rng::seed_from(seed),
+                drop_per_mille,
+                delay_per_mille,
+                max_delay_ms,
+            }),
+        }
+    }
+}
+
+impl WorkerLink for ChaosLink {
+    fn send(&self, payload: &Payload) -> Result<(), String> {
+        let mut g = self.inner.lock().unwrap();
+        let roll = g.rng.below(1000);
+        if roll < g.drop_per_mille {
+            // Sever: drop the real link. The error below and every
+            // later send's error drive the master into recovery, which
+            // installs a fresh raw link over this wrapper.
+            g.link = None;
+        } else if roll < g.drop_per_mille + g.delay_per_mille && g.max_delay_ms > 0 {
+            let ms = 1 + g.rng.below(g.max_delay_ms as usize) as u64;
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        match &g.link {
+            Some(link) => link.send(payload),
+            None => Err("chaos: link severed".to_string()),
+        }
+    }
+}
+
+/// Wrap every link of a star with a [`ChaosLink`] at the default
+/// rates, deriving a distinct per-link seed from `seed` so the fault
+/// schedules of different workers are decorrelated but each is fully
+/// determined by (`seed`, link index, send count).
+pub fn wrap_star(star: Star, seed: u64) -> Star {
+    let Star { links, replies } = star;
+    let links = links
+        .into_iter()
+        .enumerate()
+        .map(|(i, link)| {
+            Box::new(ChaosLink::new(link, seed ^ (0xca05 + i as u64))) as Box<dyn WorkerLink>
+        })
+        .collect();
+    Star { links, replies }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    use crate::comm::Message;
+
+    /// A link that counts deliveries instead of shipping them.
+    struct CountingLink {
+        delivered: Arc<AtomicUsize>,
+    }
+
+    impl WorkerLink for CountingLink {
+        fn send(&self, _payload: &Payload) -> Result<(), String> {
+            self.delivered.fetch_add(1, Ordering::SeqCst);
+            Ok(())
+        }
+    }
+
+    fn counting() -> (Box<dyn WorkerLink>, Arc<AtomicUsize>) {
+        let delivered = Arc::new(AtomicUsize::new(0));
+        (Box::new(CountingLink { delivered: Arc::clone(&delivered) }), delivered)
+    }
+
+    fn drive(seed: u64, sends: usize) -> (usize, Vec<bool>) {
+        let (link, delivered) = counting();
+        // delays off: this test must not sleep
+        let chaos = ChaosLink::with_rates(link, seed, 50, 0, 0);
+        let payload = Payload::new(Message::Ack);
+        let oks: Vec<bool> = (0..sends).map(|_| chaos.send(&payload).is_ok()).collect();
+        (delivered.load(Ordering::SeqCst), oks)
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let (d1, oks1) = drive(42, 200);
+        let (d2, oks2) = drive(42, 200);
+        assert_eq!(d1, d2);
+        assert_eq!(oks1, oks2, "same seed must replay the same fault schedule");
+        let (_, oks3) = drive(43, 200);
+        assert_ne!(oks1, oks3, "different seeds should diverge within 200 sends");
+    }
+
+    #[test]
+    fn severed_link_stays_severed() {
+        // 5% per send: 200 sends sever with overwhelming probability
+        let (delivered, oks) = drive(7, 200);
+        let first_err = oks.iter().position(|ok| !ok).expect("a drop roll must land");
+        assert!(oks[first_err..].iter().all(|ok| !ok), "no send succeeds after a sever");
+        assert_eq!(delivered, first_err, "exactly the pre-sever sends were delivered");
+    }
+
+    #[test]
+    fn zero_rates_are_a_transparent_wrapper() {
+        let (link, delivered) = counting();
+        let chaos = ChaosLink::with_rates(link, 1, 0, 0, 0);
+        let payload = Payload::new(Message::Ack);
+        for _ in 0..50 {
+            chaos.send(&payload).unwrap();
+        }
+        assert_eq!(delivered.load(Ordering::SeqCst), 50);
+    }
+}

@@ -351,6 +351,12 @@ pub fn encode(msg: &Message) -> Vec<u8> {
             w.u64(*p as u64);
             w.u64(*seed);
         }
+        ReqAdoptShard { path, pts, chunk_rows } => {
+            w.u8(34);
+            w.str(path);
+            w.points(pts);
+            w.u64(*chunk_rows as u64);
+        }
     }
     w.finish()
 }
@@ -405,6 +411,7 @@ pub fn decode(buf: &[u8]) -> Result<Message, CodecError> {
         31 => ReqLoadShard { path: r.str()?, chunk_rows: r.u64()? as usize },
         32 => ReqRefreshShard { epoch: r.u64()? },
         33 => ReqDeltaSketch { p: r.u64()? as usize, seed: r.u64()? },
+        34 => ReqAdoptShard { path: r.str()?, pts: r.points()?, chunk_rows: r.u64()? as usize },
         t => return Err(CodecError::BadTag(t)),
     };
     Ok(msg)
@@ -576,6 +583,32 @@ mod tests {
             Message::ReqLoadShard { path, chunk_rows } => {
                 assert_eq!(path, "out/mnist_002.dkps");
                 assert_eq!(chunk_rows, 64);
+            }
+            other => panic!("{other:?}"),
+        }
+        // degraded-mode adoption: both the path form (columns stay on
+        // disk) and the inline-columns form must survive the wire
+        match roundtrip(Message::ReqAdoptShard {
+            path: "out/mnist_002.dkps".into(),
+            pts: PointSet::Dense(Mat::zeros(3, 0)),
+            chunk_rows: 64,
+        }) {
+            Message::ReqAdoptShard { path, pts: p, chunk_rows } => {
+                assert_eq!(path, "out/mnist_002.dkps");
+                assert_eq!(p.len(), 0);
+                assert_eq!(chunk_rows, 64);
+            }
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(Message::ReqAdoptShard {
+            path: String::new(),
+            pts: pts.clone(),
+            chunk_rows: 0,
+        }) {
+            Message::ReqAdoptShard { path, pts: p, chunk_rows } => {
+                assert!(path.is_empty());
+                assert!(mats_eq(&p.to_mat(), &pts.to_mat()));
+                assert_eq!(chunk_rows, 0);
             }
             other => panic!("{other:?}"),
         }

@@ -36,6 +36,7 @@
 //! - [`tcp`] — length-prefixed framed TCP over loopback, proving the
 //!   protocol genuinely serializes (see `codec`).
 
+pub mod chaos;
 pub mod codec;
 pub mod memory;
 pub mod request;
@@ -45,7 +46,7 @@ pub use request::{Handle, KmeansPart, KrrPart, Request};
 
 use std::collections::{HashMap, VecDeque};
 use std::marker::PhantomData;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
@@ -268,6 +269,15 @@ pub enum Message {
     /// shape as `ReqSketchEmbed` (2 words down, t×p up), so a refit's
     /// `2-disLS` row is bit-identical to a cold fit's.
     ReqDeltaSketch { p: usize, seed: u64 },
+    /// Degraded-mode rebalance: a survivor adopts a permanently lost
+    /// slot's shard by appending its columns after its own. A
+    /// non-empty `path` names a `.dkps` store the adopter opens
+    /// itself (cheap — only the path crosses the wire, extending the
+    /// [`Message::ReqLoadShard`] machinery); otherwise `pts` carries
+    /// the columns inline. The adopter rebuilds around the combined
+    /// shard, so a subsequent cold fit over the shrunk cluster is
+    /// bit-identical to a fresh fit over the post-rebalance layout.
+    ReqAdoptShard { path: String, pts: PointSet, chunk_rows: usize },
     /// Shut the worker down.
     Quit,
 
@@ -314,6 +324,9 @@ impl Message {
             ReqLoadShard { path, .. } => path.len().div_ceil(8).max(1) + 1,
             ReqRefreshShard { .. } => 1,
             ReqDeltaSketch { .. } => 2,
+            ReqAdoptShard { path, pts, .. } => {
+                path.len().div_ceil(8).max(1) + pts.words() + 1
+            }
             RespKrr { g, b, .. } => g.rows() * g.cols() + b.rows() * b.cols() + 1,
             RespMat(m) => m.rows() * m.cols(),
             RespScalar(_) => 1,
@@ -355,6 +368,7 @@ impl Message {
             ReqLoadShard { .. } => "ReqLoadShard",
             ReqRefreshShard { .. } => "ReqRefreshShard",
             ReqDeltaSketch { .. } => "ReqDeltaSketch",
+            ReqAdoptShard { .. } => "ReqAdoptShard",
             ReqCount => "ReqCount",
             ReqBusyTime => "ReqBusyTime",
             Quit => "Quit",
@@ -412,6 +426,13 @@ pub enum CommError {
     /// failure), leaving undrained replies; the cluster now refuses
     /// further exchanges — shut it down and rebuild.
     Poisoned { round: String },
+    /// Permanent worker loss: the slot died, no replacement could be
+    /// revived (revive failed, `--rejoin-wait` expired, or the
+    /// recovery budget ran out), and its shard could not be — or was
+    /// not allowed to be — rebalanced onto a survivor. Carries the
+    /// lost slot so operators know which shard is orphaned; the
+    /// launcher maps this to its own exit code (see `cli.rs`).
+    Degraded { slot: usize, round: String, detail: String },
 }
 
 impl CommError {
@@ -422,6 +443,7 @@ impl CommError {
             CommError::Worker { worker, .. }
             | CommError::Link { worker, .. }
             | CommError::Mismatch { worker, .. } => Some(*worker),
+            CommError::Degraded { slot, .. } => Some(*slot),
             CommError::Timeout { pending, .. } => pending.first().copied(),
             CommError::Protocol { .. } | CommError::Poisoned { .. } => None,
         }
@@ -436,6 +458,7 @@ impl CommError {
             | CommError::Mismatch { round, .. }
             | CommError::Timeout { round, .. }
             | CommError::Protocol { round, .. }
+            | CommError::Degraded { round, .. }
             | CommError::Poisoned { round } => round,
         }
     }
@@ -460,6 +483,10 @@ impl std::fmt::Display for CommError {
             CommError::Protocol { round, detail } => {
                 write!(f, "round {round} violated a protocol invariant: {detail}")
             }
+            CommError::Degraded { slot, round, detail } => write!(
+                f,
+                "cluster degraded: worker {slot} permanently lost in round {round}: {detail}"
+            ),
             CommError::Poisoned { round } => write!(
                 f,
                 "cluster unusable: round {round} aborted mid-gather earlier (shut down and rebuild)"
@@ -532,6 +559,12 @@ struct MuxState {
     /// Round label of the first mid-gather abort; once set, new
     /// exchanges refuse with [`CommError::Poisoned`].
     poisoned: Option<String>,
+    /// Wire index (the fixed tag a transport stamps on its reply
+    /// events) → current logical slot. Identity at construction;
+    /// [`Cluster::shrink`] renumbers survivors down and maps the dead
+    /// slot's wire to `None`, so a straggling event from an
+    /// adopted-away wire is dropped instead of blaming a survivor.
+    wire_to_slot: Vec<Option<usize>>,
 }
 
 /// A request payload prepared once and shared across links.
@@ -695,6 +728,19 @@ pub fn parse_comm_timeout(raw: Option<&str>) -> Result<Option<Duration>, String>
     }
 }
 
+/// Parse a `DISKPCA_COMM_RETRIES` value: how many times a timed-out
+/// exchange doubles its reply-timeout bound and keeps waiting before
+/// poisoning the cluster. `0` (and unset) preserves the original
+/// fail-fast contract — the first expired bound raises
+/// [`CommError::Timeout`]. Unparsable values are hard errors, matching
+/// [`parse_comm_timeout`].
+pub fn parse_comm_retries(raw: Option<&str>) -> Result<usize, String> {
+    let Some(raw) = raw else { return Ok(0) };
+    raw.trim().parse::<usize>().map_err(|_| {
+        format!("DISKPCA_COMM_RETRIES={raw}: not a whole number of retries (0 disables)")
+    })
+}
+
 /// Worker-side view of its link to the master, transport-agnostic —
 /// `Worker::run` is generic over this. Both directions are fallible:
 /// a lost master surfaces as an `Err` the worker loop can act on
@@ -830,7 +876,10 @@ struct ClusterCore {
     /// Held across a whole exchange fan-out, so ticket registration
     /// order always equals wire order on every worker.
     links: Mutex<Vec<Box<dyn WorkerLink>>>,
-    workers: usize,
+    /// Current logical worker count. Atomic because
+    /// [`Cluster::shrink`] reduces it after a degraded-mode rebalance
+    /// while serve lanes may be reading it concurrently.
+    workers: AtomicUsize,
     stats: CommStats,
     state: Mutex<MuxState>,
     cv: Condvar,
@@ -844,6 +893,12 @@ struct ClusterCore {
     /// environments that prefer a hard abort
     /// (`DISKPCA_COMM_TIMEOUT_SECS` / [`Cluster::set_reply_timeout`]).
     timeout: Mutex<Option<Duration>>,
+    /// Reply-timeout retry budget: how many times an exchange may
+    /// double its timeout bound and keep waiting before poisoning the
+    /// cluster with [`CommError::Timeout`]. `0` (the default) keeps
+    /// the original fail-fast contract (`DISKPCA_COMM_RETRIES` /
+    /// [`Cluster::set_comm_retries`]).
+    retries: AtomicUsize,
     /// Set once `Quit` has been fanned out (by [`Cluster::shutdown`]
     /// or the drop guard).
     shut: AtomicBool,
@@ -914,45 +969,58 @@ impl ClusterCore {
         let mut st = self.state.lock().unwrap();
         st.pumping = false;
         match event {
-            Ok((w, Ok(msg))) => {
+            Ok((wire, res)) => {
                 st.events += 1;
-                match st.fifo.get_mut(w).and_then(|q| q.pop_front()) {
-                    Some(t) => {
-                        self.record(&t.ctx, true, msg.words());
-                        st.done.insert(t.id, Ok(msg));
+                // Transports stamp replies with their fixed wire
+                // index; a rebalance renumbers logical slots without
+                // touching the wires, so translate before attributing.
+                let logical = st.wire_to_slot.get(wire).copied().flatten();
+                match (logical, res) {
+                    (None, _) => {
+                        // Straggler from a wire whose slot was adopted
+                        // away by a rebalance: nothing left to blame or
+                        // attribute — drop it.
                     }
-                    None => {
-                        // No outstanding request on this worker: the
-                        // FIFO invariant is broken (a stale reply from
-                        // an un-settled abort, or a protocol bug) —
-                        // nothing can be attributed safely any more.
-                        let round = Self::front_round(&st);
+                    (Some(w), Ok(msg)) => {
+                        match st.fifo.get_mut(w).and_then(|q| q.pop_front()) {
+                            Some(t) => {
+                                self.record(&t.ctx, true, msg.words());
+                                st.done.insert(t.id, Ok(msg));
+                            }
+                            None => {
+                                // No outstanding request on this worker: the
+                                // FIFO invariant is broken (a stale reply from
+                                // an un-settled abort, or a protocol bug) —
+                                // nothing can be attributed safely any more.
+                                let round = Self::front_round(&st);
+                                Self::poison_mark(&mut st, &round);
+                                let detail = format!("unsolicited {} reply", msg.tag());
+                                Self::fail_all(&mut st, Some(w), &detail);
+                            }
+                        }
+                    }
+                    (Some(w), Err(detail)) => {
+                        // Hang-up marker: the worker died. Fail its pending
+                        // tickets and flag the slot so new sends refuse fast.
+                        let round = st
+                            .fifo
+                            .get(w)
+                            .and_then(|q| q.front())
+                            .map(|t| t.ctx.qualified.clone())
+                            .unwrap_or_else(|| Self::front_round(&st));
                         Self::poison_mark(&mut st, &round);
-                        let detail = format!("unsolicited {} reply", msg.tag());
-                        Self::fail_all(&mut st, Some(w), &detail);
+                        if let Some(slot) = st.dead.get_mut(w) {
+                            *slot = Some(detail.clone());
+                        }
+                        let drained: Vec<Ticket> = match st.fifo.get_mut(w) {
+                            Some(q) => q.drain(..).collect(),
+                            None => Vec::new(),
+                        };
+                        for t in drained {
+                            st.done
+                                .insert(t.id, Err(MuxFail { worker: w, detail: detail.clone() }));
+                        }
                     }
-                }
-            }
-            Ok((w, Err(detail))) => {
-                // Hang-up marker: the worker died. Fail its pending
-                // tickets and flag the slot so new sends refuse fast.
-                st.events += 1;
-                let round = st
-                    .fifo
-                    .get(w)
-                    .and_then(|q| q.front())
-                    .map(|t| t.ctx.qualified.clone())
-                    .unwrap_or_else(|| Self::front_round(&st));
-                Self::poison_mark(&mut st, &round);
-                if let Some(slot) = st.dead.get_mut(w) {
-                    *slot = Some(detail.clone());
-                }
-                let drained: Vec<Ticket> = match st.fifo.get_mut(w) {
-                    Some(q) => q.drain(..).collect(),
-                    None => Vec::new(),
-                };
-                for t in drained {
-                    st.done.insert(t.id, Err(MuxFail { worker: w, detail: detail.clone() }));
                 }
             }
             Err(RecvTimeoutError::Timeout) => {}
@@ -982,7 +1050,8 @@ impl ClusterCore {
         tickets: &[(usize, u64)],
         ctx: &ExchangeCtx,
     ) -> Result<Vec<Message>, CommError> {
-        let bound = *self.timeout.lock().unwrap();
+        let mut bound = *self.timeout.lock().unwrap();
+        let mut retries_left = self.retries.load(Ordering::SeqCst);
         let mut out: Vec<Option<Message>> = tickets.iter().map(|_| None).collect();
         let mut remaining = tickets.len();
         let mut st = self.state.lock().unwrap();
@@ -1020,17 +1089,28 @@ impl ClusterCore {
                 last_events = st.events;
                 last_progress = Instant::now();
             }
-            if let Some(bound) = bound {
-                if last_progress.elapsed() >= bound {
-                    let pending: Vec<usize> = tickets
-                        .iter()
-                        .enumerate()
-                        .filter(|&(slot, _)| out[slot].is_none())
-                        .map(|(_, &(w, _))| w)
-                        .collect();
-                    Self::poison_mark(&mut st, &ctx.qualified);
-                    drop(st);
-                    return Err(CommError::Timeout { round: ctx.qualified.clone(), pending });
+            if let Some(b) = bound {
+                if last_progress.elapsed() >= b {
+                    if retries_left > 0 {
+                        // Retry budget (`DISKPCA_COMM_RETRIES`): the
+                        // worker may be slow rather than dead — dead
+                        // links already surface promptly as hang-up
+                        // markers — so escalate the bound with
+                        // exponential backoff instead of poisoning.
+                        retries_left -= 1;
+                        bound = Some(b.saturating_mul(2));
+                        last_progress = Instant::now();
+                    } else {
+                        let pending: Vec<usize> = tickets
+                            .iter()
+                            .enumerate()
+                            .filter(|&(slot, _)| out[slot].is_none())
+                            .map(|(_, &(w, _))| w)
+                            .collect();
+                        Self::poison_mark(&mut st, &ctx.qualified);
+                        drop(st);
+                        return Err(CommError::Timeout { round: ctx.qualified.clone(), pending });
+                    }
                 }
             }
             if st.pumping {
@@ -1087,10 +1167,15 @@ impl Cluster {
             Ok(t) => t,
             Err(msg) => panic!("config {msg}"),
         };
+        let raw = std::env::var("DISKPCA_COMM_RETRIES").ok();
+        let retries = match parse_comm_retries(raw.as_deref()) {
+            Ok(n) => n,
+            Err(msg) => panic!("config {msg}"),
+        };
         let workers = star.links.len();
         let core = ClusterCore {
             links: Mutex::new(star.links),
-            workers,
+            workers: AtomicUsize::new(workers),
             stats: stats.clone(),
             state: Mutex::new(MuxState {
                 fifo: (0..workers).map(|_| VecDeque::new()).collect(),
@@ -1100,10 +1185,12 @@ impl Cluster {
                 next_ticket: 0,
                 events: 0,
                 poisoned: None,
+                wire_to_slot: (0..workers).map(Some).collect(),
             }),
             cv: Condvar::new(),
             rx: Mutex::new(star.replies),
             timeout: Mutex::new(timeout),
+            retries: AtomicUsize::new(retries),
             shut: AtomicBool::new(false),
         };
         Self {
@@ -1133,7 +1220,7 @@ impl Cluster {
     }
 
     pub fn num_workers(&self) -> usize {
-        self.core.workers
+        self.core.workers.load(Ordering::SeqCst)
     }
 
     pub fn set_round(&self, name: &str) {
@@ -1188,6 +1275,16 @@ impl Cluster {
         *self.core.timeout.lock().unwrap() = Some(timeout);
     }
 
+    /// Set the reply-timeout retry budget: each expired bound doubles
+    /// the wait (bounded exponential backoff) instead of poisoning,
+    /// until the budget runs out — making [`CommError::Timeout`]
+    /// recoverable when a worker is slow rather than dead. `0` (the
+    /// default) preserves the fail-fast contract;
+    /// `DISKPCA_COMM_RETRIES` is the environment equivalent.
+    pub fn set_comm_retries(&self, retries: usize) {
+        self.core.retries.store(retries, Ordering::SeqCst);
+    }
+
     /// Replace the send link of one worker slot with a revived one —
     /// the recovery driver's re-attach point. The slot keeps its
     /// index, shard assignment and per-slot seeds, which is what makes
@@ -1226,10 +1323,15 @@ impl Cluster {
     /// FIFO-matched reply queue; the mux's resolved-but-unclaimed
     /// tickets are cleared for the same reason.
     pub fn settle(&self, grace: Duration) -> Vec<usize> {
+        // Snapshot the wire→slot map up front: it only changes in
+        // [`Cluster::shrink`], which is never concurrent with settle
+        // (both belong to the single recovery driver).
+        let wire_to_slot = self.core.state.lock().unwrap().wire_to_slot.clone();
         let mut dead = Vec::new();
         {
             let rx = self.core.rx.lock().unwrap();
-            while let Ok((worker, event)) = rx.recv_timeout(grace) {
+            while let Ok((wire, event)) = rx.recv_timeout(grace) {
+                let Some(worker) = wire_to_slot.get(wire).copied().flatten() else { continue };
                 if event.is_err() && !dead.contains(&worker) {
                     dead.push(worker);
                 }
@@ -1246,6 +1348,33 @@ impl Cluster {
         }
         st.done.clear();
         dead
+    }
+
+    /// Remove a permanently lost slot from the cluster view after a
+    /// degraded-mode rebalance: survivors are renumbered down to
+    /// `0..s-1` (so index-derived per-slot seeds of a re-run match a
+    /// fresh cluster of `s-1` workers by construction) and the dead
+    /// slot's wire is unmapped, so any straggling event from it is
+    /// dropped by the multiplexer instead of blaming a survivor.
+    ///
+    /// Only a recovery driver should call this, and only after
+    /// [`Cluster::settle`] has quiesced the reply queue (fifo/done are
+    /// empty) — shrinking with tickets outstanding would misattribute
+    /// their replies.
+    pub fn shrink(&self, dead: usize) {
+        let mut links = self.core.links.lock().unwrap();
+        let mut st = self.core.state.lock().unwrap();
+        links.remove(dead);
+        st.fifo.remove(dead);
+        st.dead.remove(dead);
+        for slot in st.wire_to_slot.iter_mut() {
+            *slot = match *slot {
+                Some(l) if l == dead => None,
+                Some(l) if l > dead => Some(l - 1),
+                other => other,
+            };
+        }
+        self.core.workers.fetch_sub(1, Ordering::SeqCst);
     }
 
     /// Register a ticket for `worker` and ship the payload. The caller
@@ -1327,7 +1456,7 @@ impl Cluster {
         self.core.check_usable()?;
         let ctx = self.exchange_ctx();
         let payload = Payload::new(req.into_message());
-        let s = self.core.workers;
+        let s = self.num_workers();
         let mut tickets = Vec::with_capacity(s);
         {
             let links = self.core.links.lock().unwrap();
@@ -1361,7 +1490,7 @@ impl Cluster {
     /// assembly of batch n−1.
     pub fn scatter_begin<R: Request>(&self, reqs: Vec<R>) -> Result<Inflight<R>, CommError> {
         self.core.check_usable()?;
-        let s = self.core.workers;
+        let s = self.num_workers();
         assert_eq!(reqs.len(), s, "one request per worker");
         let ctx = self.exchange_ctx();
         let mut tickets = Vec::with_capacity(s);
@@ -1543,6 +1672,34 @@ mod tests {
     }
 
     #[test]
+    fn comm_retries_parser_is_strict() {
+        assert_eq!(parse_comm_retries(None).unwrap(), 0);
+        assert_eq!(parse_comm_retries(Some("0")).unwrap(), 0);
+        assert_eq!(parse_comm_retries(Some("3")).unwrap(), 3);
+        assert_eq!(parse_comm_retries(Some(" 2 ")).unwrap(), 2);
+        let err = parse_comm_retries(Some("two")).unwrap_err();
+        assert!(err.contains("DISKPCA_COMM_RETRIES=two"), "{err}");
+        assert!(parse_comm_retries(Some("")).is_err());
+        assert!(parse_comm_retries(Some("-1")).is_err());
+        assert!(parse_comm_retries(Some("1.5")).is_err());
+    }
+
+    #[test]
+    fn degraded_error_carries_slot_round_and_detail() {
+        let e = CommError::Degraded {
+            slot: 3,
+            round: "recover".into(),
+            detail: "no worker rejoined".into(),
+        };
+        assert_eq!(e.worker(), Some(3));
+        assert_eq!(e.round(), "recover");
+        let msg = e.to_string();
+        assert!(msg.contains("worker 3"), "{msg}");
+        assert!(msg.contains("permanently lost"), "{msg}");
+        assert!(msg.contains("no worker rejoined"), "{msg}");
+    }
+
+    #[test]
     fn payload_encodes_once_and_shares() {
         let payload = Payload::new(Message::RespMat(Mat::zeros(3, 3)));
         assert_eq!(payload.words(), 9);
@@ -1605,6 +1762,86 @@ mod tests {
         for w in workers {
             w.join().unwrap();
         }
+    }
+
+    #[test]
+    fn shrink_renumbers_survivors_and_remaps_wires() {
+        let (star, endpoints) = memory::star(3);
+        let workers: Vec<_> = endpoints
+            .into_iter()
+            .enumerate()
+            .map(|(i, ep)| {
+                std::thread::spawn(move || loop {
+                    match ep.recv() {
+                        Ok(Message::Quit) | Err(_) => break,
+                        Ok(Message::ReqCount) => ep.send(Message::RespCount(10 + i)).unwrap(),
+                        Ok(_) => ep.send(Message::Ack).unwrap(),
+                    }
+                })
+            })
+            .collect();
+        let cluster = Cluster::new(star, CommStats::new());
+        cluster.set_round("pre");
+        assert_eq!(cluster.broadcast(request::Count).unwrap(), vec![10, 11, 12]);
+        // Adopt slot 1 away: the cluster view shrinks to two logical
+        // workers, and original worker 2's replies (stamped with wire
+        // index 2 by the transport) must now land on logical slot 1.
+        cluster.shrink(1);
+        assert_eq!(cluster.num_workers(), 2);
+        cluster.set_round("post");
+        assert_eq!(cluster.broadcast(request::Count).unwrap(), vec![10, 12]);
+        // call() by logical index also reaches the renumbered worker
+        assert_eq!(cluster.call(1, request::Count).unwrap(), 12);
+        cluster.shutdown();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn retry_budget_outlasts_a_slow_worker_then_fail_fast_without_it() {
+        use std::time::Duration;
+        let slow = Duration::from_millis(150);
+        let run = |retries: usize| {
+            let (star, endpoints) = memory::star(1);
+            let workers: Vec<_> = endpoints
+                .into_iter()
+                .map(|ep| {
+                    std::thread::spawn(move || loop {
+                        match ep.recv() {
+                            Ok(Message::Quit) | Err(_) => break,
+                            Ok(Message::ReqCount) => {
+                                std::thread::sleep(slow);
+                                // the master may have timed out and hung
+                                // up mid-sleep in the 0-retry leg
+                                let _ = ep.send(Message::RespCount(7));
+                            }
+                            Ok(_) => ep.send(Message::Ack).unwrap(),
+                        }
+                    })
+                })
+                .collect();
+            let cluster = Cluster::new(star, CommStats::new());
+            cluster.set_reply_timeout(Duration::from_millis(40));
+            cluster.set_comm_retries(retries);
+            cluster.set_round("slow");
+            let res = cluster.broadcast(request::Count);
+            // Give the worker time to finish its sleep before Quit so
+            // the thread joins promptly either way.
+            drop(cluster);
+            for w in workers {
+                w.join().unwrap();
+            }
+            res
+        };
+        // 0 retries: the 40ms bound expires mid-sleep and poisons.
+        match run(0) {
+            Err(CommError::Timeout { pending, .. }) => assert_eq!(pending, vec![0]),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        // 3 retries escalate the bound 40→80→160→320ms, outlasting the
+        // 150ms stall: the slow-but-alive worker's reply is accepted.
+        assert_eq!(run(3).unwrap(), vec![7]);
     }
 
     #[test]

@@ -218,6 +218,15 @@ ack_request! {
     LoadShard { path: String, chunk_rows: usize } => ReqLoadShard
 }
 
+ack_request! {
+    /// Degraded-mode rebalance: adopt a permanently lost slot's shard
+    /// by appending its columns after this worker's own. A non-empty
+    /// `path` names a `.dkps` store the adopter opens itself;
+    /// otherwise `pts` carries the columns inline (see
+    /// [`crate::comm::Message::ReqAdoptShard`]).
+    AdoptShard { path: String, pts: PointSet, chunk_rows: usize } => ReqAdoptShard
+}
+
 payload_request! {
     /// Incremental refit: re-open the shard store (a resident shard is
     /// a no-op) and reply a 1×3 `[shard_epoch, delta_cols, n]` —

@@ -440,6 +440,9 @@ impl Worker {
             }
             Message::ReqRefreshShard { epoch } => self.respond(rq::RefreshShard { epoch }),
             Message::ReqDeltaSketch { p, seed } => self.respond(rq::DeltaSketch { p, seed }),
+            Message::ReqAdoptShard { path, pts, chunk_rows } => {
+                self.respond(rq::AdoptShard { path, pts, chunk_rows })
+            }
             Message::Quit => Message::Ack,
             other => panic!("worker got unexpected {other:?}"),
         }
@@ -717,6 +720,52 @@ impl Handle<rq::LoadShard> for Worker {
         let busy = self.busy;
         *self = Worker::with_source(
             ShardSource::Store(store),
+            self.kernel,
+            Arc::clone(&self.backend),
+            chunk_rows,
+        );
+        self.embed_cache.budget_bytes = budget;
+        self.busy = busy;
+    }
+}
+
+impl Handle<rq::AdoptShard> for Worker {
+    /// Degraded-mode rebalance: append a permanently lost slot's
+    /// columns *after* this worker's own and rebuild around the
+    /// combined resident shard, dropping every piece of between-round
+    /// state like [`rq::LoadShard`] (the re-run rebuilds it). The
+    /// own-then-adopted order is load-bearing: it makes the combined
+    /// shard equal to the concatenation a fresh cold fit over the
+    /// post-rebalance assignment would start from, which is what keeps
+    /// the healed solution bit-identical. A non-empty `path` names a
+    /// `.dkps` store whose columns are read here (only the path
+    /// crossed the wire); otherwise `pts` carries them inline. IO
+    /// failure panics and reaches the master as a typed
+    /// [`Message::RespError`] via [`Worker::handle`]'s catch.
+    fn handle_req(&mut self, rq::AdoptShard { path, pts, chunk_rows }: rq::AdoptShard) {
+        let n = self.source.len();
+        let own_idx: Vec<usize> = (0..n).collect();
+        let own = self.source.point_set(&own_idx);
+        let adopted = if path.is_empty() {
+            pts
+        } else {
+            let store = crate::data::ShardStore::open(&path)
+                .unwrap_or_else(|e| panic!("AdoptShard {path}: {e}"));
+            let source = ShardSource::Store(store);
+            let idx: Vec<usize> = (0..source.len()).collect();
+            source.point_set(&idx)
+        };
+        let combined = PointSet::concat(&[own, adopted]);
+        let data = match combined {
+            PointSet::Dense(m) => Data::Dense(m),
+            PointSet::Sparse { d, cols } => {
+                Data::Sparse(crate::sparse::Csc::from_columns(d, cols))
+            }
+        };
+        let budget = self.embed_cache.budget_bytes;
+        let busy = self.busy;
+        *self = Worker::with_source(
+            ShardSource::Resident(data),
             self.kernel,
             Arc::clone(&self.backend),
             chunk_rows,

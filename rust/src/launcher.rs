@@ -26,7 +26,11 @@
 //! failures (bad flags, unreadable shards, bind/connect errors).
 //! [`LaunchError::exit_code`] maps them to distinct process exit
 //! codes so orchestration scripts can tell "retry the job" from "fix
-//! the config". On a protocol failure the master's [`Cluster`] drop
+//! the config". A third class — permanent worker loss with
+//! rebalancing off ([`CommError::Degraded`], exit [`EXIT_DEGRADED`])
+//! — means the cluster itself shrank and neither retrying nor a
+//! config fix will help; see [`EXIT_DEGRADED`] for the recourse. On a
+//! protocol failure the master's [`Cluster`] drop
 //! guard still fans `Quit` out to every surviving worker, so remote
 //! worker processes exit instead of waiting on a dead coordinator.
 
@@ -46,6 +50,12 @@ use crate::runtime::backend_from_name;
 pub const EXIT_PROTOCOL: i32 = 3;
 /// Exit code for an environment/setup failure ([`LaunchError::Env`]).
 pub const EXIT_ENV: i32 = 1;
+/// Exit code for a degraded cluster ([`CommError::Degraded`]): a
+/// worker slot is permanently lost (its revival budget ran out or no
+/// replacement rejoined) and rebalancing was off or impossible.
+/// Unlike [`EXIT_PROTOCOL`] ("retry the job"), this one says "the
+/// deployment shrank — re-shard or restart with `--rebalance`".
+pub const EXIT_DEGRADED: i32 = 4;
 
 /// A deployment subcommand failure, split by which exit code it maps
 /// to (see the module docs).
@@ -60,6 +70,7 @@ pub enum LaunchError {
 impl LaunchError {
     pub fn exit_code(&self) -> i32 {
         match self {
+            LaunchError::Protocol(CommError::Degraded { .. }) => EXIT_DEGRADED,
             LaunchError::Protocol(_) => EXIT_PROTOCOL,
             LaunchError::Env(_) => EXIT_ENV,
         }
@@ -162,7 +173,28 @@ impl ReviveHost for TcpRejoinHost {
     }
 
     fn shard_path(&self, slot: usize) -> Option<(String, usize)> {
-        self.shard_paths.get(slot).cloned().map(|p| (p, self.chunk_rows))
+        self.shard_paths
+            .get(slot)
+            .filter(|p| !p.is_empty())
+            .cloned()
+            .map(|p| (p, self.chunk_rows))
+    }
+
+    fn rebalanced(&mut self, dead: usize, adopter: usize) {
+        if self.shard_paths.is_empty() {
+            return;
+        }
+        self.shard_paths.remove(dead);
+        // `adopter` is the pre-shrink index; survivors above the dead
+        // slot renumber down by one
+        let at = if adopter > dead { adopter - 1 } else { adopter };
+        if let Some(p) = self.shard_paths.get_mut(at) {
+            // the adopter now holds own + adopted columns — no single
+            // on-disk path describes that, so a later revival of this
+            // slot cannot start blank (a rejoining worker must bring
+            // its own --data)
+            p.clear();
+        }
     }
 }
 
@@ -177,6 +209,21 @@ impl ReviveHost for TcpRejoinHost {
 /// `--shards` names the slot-ordered paths, then embedding + scores +
 /// solution state) and retries the interrupted unit — the final result
 /// and per-round word table are bit-identical to a fault-free run.
+///
+/// Three degraded-mode knobs ride on `--elastic`:
+/// - `--comm-retries N` (env `DISKPCA_COMM_RETRIES`): a reply timeout
+///   retries up to N times with doubling bounds before poisoning, so
+///   a slow-but-alive worker is waited out instead of declared dead.
+///   (Honoured without `--elastic` too.)
+/// - `--chaos-seed S` (env `DISKPCA_CHAOS_SEED`): wrap every worker
+///   link in the seeded fault-injection transport
+///   ([`crate::comm::chaos`]) — elastic only, since the injected
+///   faults need recovery to heal them.
+/// - `--rebalance`: when a dead slot's revival budget runs out (or no
+///   worker rejoins within `--rejoin-wait`), adopt its shard onto a
+///   survivor, shrink the cluster, and re-run the job cold on s−1
+///   workers ([`recovery::with_rebalance`]). Off by default: the
+///   degraded error then exits with code [`EXIT_DEGRADED`].
 pub fn master(cfg: &Config) -> Result<(), LaunchError> {
     let addr = cfg.str_or("listen", "127.0.0.1:7700");
     let s = cfg.usize_or("workers", 2);
@@ -184,11 +231,39 @@ pub fn master(cfg: &Config) -> Result<(), LaunchError> {
     let params = cfg.params();
     params.apply_threads();
     crate::linalg::simd::set_compute_tier(cfg.compute_tier());
+    // degraded-mode knobs: environment first, explicit flags override
+    let comm_retries = match cfg.get("comm-retries") {
+        Some(v) => Some(v.trim().parse::<usize>().map_err(|_| {
+            LaunchError::Env(format!("--comm-retries {v}: not a usize"))
+        })?),
+        None => None, // Cluster::new reads DISKPCA_COMM_RETRIES itself
+    };
+    let chaos_seed = match cfg.get("chaos-seed") {
+        Some(v) => Some(v.trim().parse::<u64>().map_err(|_| {
+            LaunchError::Env(format!("--chaos-seed {v}: not a u64"))
+        })?),
+        None => crate::serve::parse_chaos_seed(
+            std::env::var("DISKPCA_CHAOS_SEED").ok().as_deref(),
+        )
+        .map_err(LaunchError::Env)?,
+    };
+    if cfg.get("chaos-seed").is_some() && !cfg.bool_or("elastic", false) {
+        return Err(LaunchError::Env(
+            "--chaos-seed requires --elastic: injected faults need recovery to heal".into(),
+        ));
+    }
     eprintln!("master: waiting for {s} workers on {addr} …");
     let t0;
     let (cluster, sol, err, trace) = if cfg.bool_or("elastic", false) {
         let (star, listener, reply_tx) = tcp::listen_elastic(addr, s)?;
+        let star = match chaos_seed {
+            Some(seed) => crate::comm::chaos::wrap_star(star, seed),
+            None => star,
+        };
         let cluster = Cluster::new(star, CommStats::new());
+        if let Some(n) = comm_retries {
+            cluster.set_comm_retries(n);
+        }
         let shard_paths: Vec<String> = cfg
             .get("shards")
             .map(|v| v.split(',').map(str::to_string).collect())
@@ -207,23 +282,37 @@ pub fn master(cfg: &Config) -> Result<(), LaunchError> {
             Duration::from_secs(cfg.u64_or("rejoin-wait", 60)),
         );
         let mut rec = Recovery::new(Box::new(host));
+        rec.set_rebalance(cfg.bool_or("rebalance", false));
         t0 = Instant::now();
-        let sol = recovery::dis_kpca_recovering(
-            &cluster,
-            &mut rec,
-            kernel,
-            &params,
-            SamplingMode::Full,
-            false,
-        )?;
-        let (err, trace) = recovery::dis_eval_recovering(&cluster, &mut rec)?;
+        let (sol, err, trace) =
+            recovery::with_rebalance(&cluster, &mut rec, |cluster, rec| {
+                let sol = recovery::dis_kpca_recovering(
+                    cluster,
+                    rec,
+                    kernel,
+                    &params,
+                    SamplingMode::Full,
+                    false,
+                )?;
+                let (err, trace) = recovery::dis_eval_recovering(cluster, rec)?;
+                Ok((sol, err, trace))
+            })?;
         if rec.recoveries() > 0 {
             eprintln!("master: recovered from {} worker failure(s)", rec.recoveries());
+        }
+        if cluster.num_workers() < s {
+            eprintln!(
+                "master: degraded to {} worker(s) — lost shards were adopted by survivors",
+                cluster.num_workers()
+            );
         }
         (cluster, sol, err, trace)
     } else {
         let star = tcp::listen(addr, s)?;
         let cluster = Cluster::new(star, CommStats::new());
+        if let Some(n) = comm_retries {
+            cluster.set_comm_retries(n);
+        }
         t0 = Instant::now();
         let sol = dis_kpca(&cluster, kernel, &params)?;
         let (err, trace) = dis_eval(&cluster)?;
@@ -687,6 +776,13 @@ mod tests {
         assert!(p.to_string().contains("protocol failure"));
         let e = LaunchError::Env("bad flag".into());
         assert_eq!(e.exit_code(), EXIT_ENV);
+        let d = LaunchError::Protocol(CommError::Degraded {
+            slot: 1,
+            round: "recover".into(),
+            detail: "no worker rejoined".into(),
+        });
+        assert_eq!(d.exit_code(), EXIT_DEGRADED, "permanent loss gets its own exit code");
+        assert!(d.to_string().contains("degraded"));
     }
 
     #[test]

@@ -25,6 +25,21 @@
 //! Workers are deterministic state machines, so replay + retry
 //! reproduces the fault-free bytes exactly; `tests/fault_injection.rs`
 //! asserts this for a kill at every round boundary on both transports.
+//!
+//! # Degraded mode
+//!
+//! When no replacement can be built — [`ReviveHost::revive`] fails,
+//! `--rejoin-wait` expires, or the recovery budget runs out — the
+//! failure surfaces as the typed [`CommError::Degraded`]. With
+//! rebalancing enabled ([`Recovery::set_rebalance`], `--rebalance`),
+//! [`with_rebalance`] catches it: a survivor *adopts* the dead slot's
+//! shard (`ReqAdoptShard`, appending the columns after its own), the
+//! cluster view shrinks to the renumbered survivors
+//! ([`crate::comm::Cluster::shrink`]), and the whole job re-runs cold —
+//! the checkpointed state and per-slot seeds were computed against the
+//! old worker count, so a unit-level retry cannot be bit-faithful, but
+//! a cold re-run over the post-rebalance shard assignment is
+//! bit-identical to a fresh fit over that assignment by construction.
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
@@ -163,9 +178,22 @@ impl Checkpoint {
     }
 }
 
-/// Supplies replacement workers for dead slots. The replacement must
-/// serve the *same shard* as the original — recovery preserves slot
-/// identity, it does not rebalance.
+/// What a survivor must ingest to adopt a dead slot's shard during a
+/// degraded-mode rebalance ([`Recovery::rebalance`]).
+#[derive(Clone, Debug)]
+pub enum AdoptSource {
+    /// The columns stay on disk: only the `.dkps` path (+ chunk size)
+    /// crosses the wire and the adopter opens the store itself.
+    Path { path: String, chunk_rows: usize },
+    /// The columns cross the wire inline.
+    Columns { pts: PointSet, chunk_rows: usize },
+}
+
+/// Supplies replacement workers for dead slots. A *revival* must serve
+/// the *same shard* as the original — revival preserves slot identity.
+/// When no replacement can be built, degraded-mode rebalancing
+/// ([`Recovery::rebalance`]) instead asks the host for the dead slot's
+/// shard ([`ReviveHost::adopt_source`]) and ships it to a survivor.
 pub trait ReviveHost: Send {
     /// Build a fresh link + worker for `slot`, wired into the
     /// cluster's shared reply queue.
@@ -178,6 +206,24 @@ pub trait ReviveHost: Send {
     fn shard_path(&self, _slot: usize) -> Option<(String, usize)> {
         None
     }
+
+    /// The dead slot's shard, for a survivor to adopt. The default
+    /// derives it from [`ReviveHost::shard_path`] (disk-backed hosts
+    /// get rebalancing for free); hosts holding shards in memory
+    /// override it to ship the columns inline.
+    fn adopt_source(&mut self, slot: usize) -> Result<AdoptSource, String> {
+        match self.shard_path(slot) {
+            Some((path, chunk_rows)) => Ok(AdoptSource::Path { path, chunk_rows }),
+            None => Err(format!("host cannot supply slot {slot}'s shard for adoption")),
+        }
+    }
+
+    /// Bookkeeping hook after a completed rebalance: `dead` has been
+    /// removed from the cluster (survivors above it shifted down one)
+    /// and the pre-shrink slot `adopter` now serves the combined
+    /// shard. Hosts that record per-slot shards must mirror that, so a
+    /// *later* revival of the adopter rebuilds the combined shard.
+    fn rebalanced(&mut self, _dead: usize, _adopter: usize) {}
 
     /// Join any replacement workers this host spawned. Called after
     /// the cluster has quit its links; default is a no-op.
@@ -241,6 +287,25 @@ impl LocalHost {
     }
 }
 
+/// Concatenate two shards column-wise, adopted columns after own —
+/// exactly the combined shard the worker-side `AdoptShard` handler
+/// builds, so a host's bookkeeping and the live adopter agree bit for
+/// bit (a later revival of the adopter must rebuild the same shard).
+fn concat_shards(own: &Data, adopted: &Data) -> Data {
+    let combined = PointSet::concat(&[shard_points(own), shard_points(adopted)]);
+    match combined {
+        PointSet::Dense(m) => Data::Dense(m),
+        PointSet::Sparse { d, cols } => Data::Sparse(crate::sparse::Csc::from_columns(d, cols)),
+    }
+}
+
+/// All of a shard's columns in its natural [`PointSet`] encoding.
+fn shard_points(shard: &Data) -> PointSet {
+    let src = crate::data::ShardSource::Resident(shard.clone());
+    let idx: Vec<usize> = (0..src.len()).collect();
+    src.point_set(&idx)
+}
+
 impl ReviveHost for LocalHost {
     fn revive(&mut self, slot: usize) -> Result<Box<dyn WorkerLink>, String> {
         let shard = self
@@ -268,6 +333,22 @@ impl ReviveHost for LocalHost {
         }
     }
 
+    fn adopt_source(&mut self, slot: usize) -> Result<AdoptSource, String> {
+        let shard = self
+            .shards
+            .get(slot)
+            .ok_or_else(|| format!("no shard recorded for slot {slot}"))?;
+        Ok(AdoptSource::Columns { pts: shard_points(shard), chunk_rows: self.chunk_rows })
+    }
+
+    fn rebalanced(&mut self, dead: usize, adopter: usize) {
+        let adopted = self.shards.remove(dead);
+        // the adopter was named pre-shrink; removing `dead` shifted
+        // every higher slot down one
+        let at = if adopter > dead { adopter - 1 } else { adopter };
+        self.shards[at] = concat_shards(&self.shards[at], &adopted);
+    }
+
     fn join(&mut self) {
         LocalHost::join(self);
     }
@@ -288,6 +369,14 @@ pub struct Recovery {
     grace: Duration,
     max_recoveries: usize,
     recoveries: usize,
+    /// Degraded-mode policy: may [`with_rebalance`] adopt a
+    /// permanently lost slot's shard onto a survivor? Off by default —
+    /// shrinking changes which solution is computed, so it is an
+    /// explicit opt-in (`--rebalance`).
+    rebalance: bool,
+    /// Words the last [`Recovery::rebalance`] spent shipping the shard
+    /// (captured before the job re-run's stats rewind erases them).
+    last_rebalance_words: usize,
 }
 
 impl Recovery {
@@ -298,6 +387,8 @@ impl Recovery {
             grace: Duration::from_millis(100),
             max_recoveries: 16,
             recoveries: 0,
+            rebalance: false,
+            last_rebalance_words: 0,
         }
     }
 
@@ -318,6 +409,24 @@ impl Recovery {
         self.recoveries
     }
 
+    /// Allow degraded-mode shard rebalancing (see [`with_rebalance`]).
+    pub fn set_rebalance(&mut self, on: bool) {
+        self.rebalance = on;
+    }
+
+    /// Whether degraded-mode rebalancing is allowed.
+    pub fn rebalance_enabled(&self) -> bool {
+        self.rebalance
+    }
+
+    /// Words the most recent [`Recovery::rebalance`] spent shipping
+    /// the adopted shard (0 if none has run). The job re-run's stats
+    /// rewind erases this traffic from the tables, so benches read it
+    /// here.
+    pub fn last_rebalance_words(&self) -> usize {
+        self.last_rebalance_words
+    }
+
     /// Join replacement workers the host spawned (after cluster quit).
     pub fn join_host(&mut self) {
         self.host.join();
@@ -327,7 +436,10 @@ impl Recovery {
     /// ([`CommError::Worker`] / [`CommError::Link`]), revive + replay,
     /// rewind the stats to the unit-entry snapshot, and retry the unit
     /// from its start. Timeouts are *not* recovered — a hung-but-alive
-    /// worker replaced under a live socket would race its replacement.
+    /// worker replaced under a live socket would race its replacement;
+    /// the comm layer's reply-timeout retry budget
+    /// ([`crate::comm::Cluster::set_comm_retries`]) is the
+    /// slow-but-alive path.
     pub fn unit<T>(
         &mut self,
         cluster: &Cluster,
@@ -349,7 +461,14 @@ impl Recovery {
                         _ => return Err(err),
                     };
                     if self.recoveries >= self.max_recoveries {
-                        return Err(err);
+                        return Err(CommError::Degraded {
+                            slot: first_dead,
+                            round: err.round().to_string(),
+                            detail: format!(
+                                "recovery budget exhausted ({} revives): {err}",
+                                self.max_recoveries
+                            ),
+                        });
                     }
                     self.recover(cluster, first_dead)?;
                     cluster.stats.restore(&snap);
@@ -386,15 +505,20 @@ impl Recovery {
             }
             self.recoveries += 1;
             if self.recoveries > self.max_recoveries {
-                return Err(CommError::Link {
-                    worker: slot,
+                return Err(CommError::Degraded {
+                    slot,
                     round: "recover".into(),
                     detail: format!("recovery budget exhausted ({} revives)", self.max_recoveries),
                 });
             }
             cluster.quit_worker(slot);
-            let link = self.host.revive(slot).map_err(|detail| CommError::Link {
-                worker: slot,
+            // A revive that fails — the host cannot build a
+            // replacement, or (in the launcher) no process rejoined
+            // within `--rejoin-wait` — means the slot is *permanently*
+            // lost: the typed Degraded error is what
+            // [`with_rebalance`] catches and `--rebalance` heals.
+            let link = self.host.revive(slot).map_err(|detail| CommError::Degraded {
+                slot,
                 round: "recover".into(),
                 detail: format!("revive failed: {detail}"),
             })?;
@@ -448,6 +572,93 @@ impl Recovery {
             cluster.call(slot, rq::SetSolution { pts: pts.clone(), coeffs: coeffs.clone() })?;
         }
         Ok(())
+    }
+
+    /// Degraded-mode rebalance: adopt the permanently lost slot
+    /// `dead`'s shard onto the next live survivor and shrink the
+    /// cluster view to s−1 workers. The caller (normally
+    /// [`with_rebalance`]) must then re-run its whole job cold — the
+    /// checkpoint and every index-derived per-slot seed were computed
+    /// against the old worker count. Resets the recovery budget: a
+    /// completed rebalance is forward progress, not another attempt at
+    /// the same failure.
+    pub fn rebalance(&mut self, cluster: &Cluster, dead: usize) -> Result<(), CommError> {
+        let degraded = |detail: String| CommError::Degraded {
+            slot: dead,
+            round: "rebalance".into(),
+            detail,
+        };
+        let s = cluster.num_workers();
+        if s <= 1 {
+            return Err(degraded("no survivors to adopt the shard".into()));
+        }
+        // Quiesce: make sure the dead slot's wire is silent and learn
+        // of any other slot that died in the same incident.
+        cluster.quit_worker(dead);
+        let mut dead_now = cluster.settle(self.grace);
+        if !dead_now.contains(&dead) {
+            dead_now.push(dead);
+        }
+        // First live survivor after the dead slot, wrapping — a
+        // deterministic choice, so reruns and the survivor-layout
+        // baseline agree on who holds the combined shard.
+        let adopter = (1..s)
+            .map(|off| (dead + off) % s)
+            .find(|w| !dead_now.contains(w))
+            .ok_or_else(|| degraded("every worker is dead; nothing can adopt".into()))?;
+        let source = self
+            .host
+            .adopt_source(dead)
+            .map_err(|detail| degraded(format!("host cannot supply the shard: {detail}")))?;
+        cluster.unpoison();
+        cluster.set_round("rebalance");
+        let before = cluster.stats.total_words();
+        let (path, pts, chunk_rows) = match source {
+            AdoptSource::Path { path, chunk_rows } => {
+                (path, PointSet::Sparse { d: 0, cols: Vec::new() }, chunk_rows)
+            }
+            AdoptSource::Columns { pts, chunk_rows } => (String::new(), pts, chunk_rows),
+        };
+        cluster.call(adopter, rq::AdoptShard { path, pts, chunk_rows })?;
+        self.last_rebalance_words = cluster.stats.total_words() - before;
+        cluster.shrink(dead);
+        self.host.rebalanced(dead, adopter);
+        self.recoveries = 0;
+        Ok(())
+    }
+}
+
+/// Run a whole job (fit + eval together) with degraded-mode healing:
+/// when the job fails [`CommError::Degraded`] and the recovery allows
+/// rebalancing, adopt the lost shard onto a survivor
+/// ([`Recovery::rebalance`]), rewind the word counters to the entry
+/// snapshot, and re-run the job cold on the shrunk cluster. The body
+/// must be restartable from scratch (every `*_recovering` driver is:
+/// each resets the checkpoint on entry) and should pass
+/// `embed_installed = false` — the adopter's rebuilt worker holds no
+/// spec. On success the solution *and* the per-round word tables are
+/// bit-identical to a fresh cold fit over the post-rebalance shard
+/// assignment. With rebalancing off (the default) the Degraded error
+/// propagates unchanged — the documented exit-code-4 path.
+pub fn with_rebalance<T>(
+    cluster: &Cluster,
+    recovery: &mut Recovery,
+    mut body: impl FnMut(&Cluster, &mut Recovery) -> Result<T, CommError>,
+) -> Result<T, CommError> {
+    let snap = cluster.stats.snapshot();
+    let job = cluster.job_stats();
+    let job_snap = job.as_ref().map(|j| j.snapshot());
+    loop {
+        match body(cluster, recovery) {
+            Err(CommError::Degraded { slot, .. }) if recovery.rebalance_enabled() => {
+                recovery.rebalance(cluster, slot)?;
+                cluster.stats.restore(&snap);
+                if let (Some(j), Some(js)) = (&job, &job_snap) {
+                    j.restore(js);
+                }
+            }
+            other => return other,
+        }
     }
 }
 

@@ -96,7 +96,7 @@ use crate::linalg::Mat;
 use crate::recovery::{LocalHost, Recovery, Transport};
 use crate::runtime::Backend;
 
-pub use queue::{Rejected, ServeConfig};
+pub use queue::{parse_chaos_seed, Rejected, ServeConfig};
 pub use scheduler::JobHandle;
 
 use scheduler::Scheduler;
@@ -311,6 +311,12 @@ impl ServiceBuilder {
                 };
                 if self.elastic {
                     let (star, endpoints, reply_tx) = memory::star_elastic(shards.len());
+                    // chaos soaks: wrap the links only where recovery
+                    // exists to heal the injected faults
+                    let star = match cfg.chaos_seed {
+                        Some(seed) => crate::comm::chaos::wrap_star(star, seed),
+                        None => star,
+                    };
                     let handles: Vec<JoinHandle<()>> = shards
                         .iter()
                         .cloned()
@@ -344,6 +350,8 @@ impl ServiceBuilder {
             (Some(_), Some(_)) => panic!("ServiceBuilder takes shards(..) or cluster(..), not both"),
         };
         cluster.set_round_prefix("svc:");
+        // explicit config wins over whatever the cluster read from env
+        cluster.set_comm_retries(cfg.comm_retries);
         let sched = Scheduler::new(&cluster, self.kernel, cfg, recovery);
         let svc = Service { cluster, kernel: self.kernel, sched, handles };
         if let Some(cols) = self.transform_chunk {

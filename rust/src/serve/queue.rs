@@ -10,7 +10,7 @@
 use std::fmt;
 use std::time::Duration;
 
-use crate::comm::{parse_comm_timeout, Message};
+use crate::comm::{parse_comm_retries, parse_comm_timeout, Message};
 use crate::coordinator::worker::parse_embed_cache_mb;
 use crate::linalg::simd::{parse_compute_tier, ComputeTier};
 use crate::runtime::parse_table_cache_mb;
@@ -20,6 +20,8 @@ use crate::runtime::parse_table_cache_mb;
 /// | field | env knob | default |
 /// |---|---|---|
 /// | `comm_timeout` | `DISKPCA_COMM_TIMEOUT_SECS` | none (unbounded) |
+/// | `comm_retries` | `DISKPCA_COMM_RETRIES` | 0 (fail fast) |
+/// | `chaos_seed` | `DISKPCA_CHAOS_SEED` | none (chaos off) |
 /// | `embed_cache_mb` | `DISKPCA_EMBED_CACHE_MB` | 64 MiB |
 /// | `table_cache_mb` | `DISKPCA_TABLE_CACHE_MB` | 128 MiB |
 /// | `max_inflight` | `DISKPCA_MAX_INFLIGHT` | 1 (sequential) |
@@ -39,10 +41,17 @@ use crate::runtime::parse_table_cache_mb;
 /// tier. `variance_frac` is the refit acceptance gate: a warm refit
 /// ([`crate::coordinator::dis_kpca_refit`]) whose top-k solution
 /// preserves less than this fraction of the sketched spectrum's mass
-/// re-runs as a cold fit.
+/// re-runs as a cold fit. `comm_retries` is the reply-timeout retry
+/// budget ([`crate::comm::Cluster::set_comm_retries`]: each expired
+/// bound doubles and re-waits before poisoning; 0 keeps today's
+/// fail-fast contract). `chaos_seed` arms the seeded fault-injection
+/// transport ([`crate::comm::chaos`]) for soak runs — unset (the
+/// default) means no chaos wrapping at all.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
     pub comm_timeout: Option<Duration>,
+    pub comm_retries: usize,
+    pub chaos_seed: Option<u64>,
     pub embed_cache_mb: usize,
     pub table_cache_mb: usize,
     pub max_inflight: usize,
@@ -56,6 +65,8 @@ impl Default for ServeConfig {
     fn default() -> Self {
         Self {
             comm_timeout: None,
+            comm_retries: 0,
+            chaos_seed: None,
             embed_cache_mb: 64,
             table_cache_mb: 128,
             max_inflight: 1,
@@ -82,6 +93,18 @@ pub fn parse_variance_frac(raw: Option<&str>, default: f64) -> Result<f64, Strin
     }
 }
 
+/// Parse a `DISKPCA_CHAOS_SEED` value: any `u64` (0 included — a seed
+/// is a seed) arms the chaos transport with that schedule; unset
+/// leaves chaos off entirely. There is no "disable" spelling by
+/// design: fault injection must be impossible to switch on by typo.
+pub fn parse_chaos_seed(raw: Option<&str>) -> Result<Option<u64>, String> {
+    let Some(raw) = raw else { return Ok(None) };
+    raw.trim()
+        .parse::<u64>()
+        .map(Some)
+        .map_err(|_| format!("DISKPCA_CHAOS_SEED={raw}: not a whole-number seed"))
+}
+
 /// Parse a count knob that must be a whole number ≥ 1 (`None` = unset
 /// ⇒ default). Zero is rejected rather than clamped: a scheduler with
 /// zero runners or a zero-deep pipeline is a misconfiguration, not a
@@ -106,6 +129,8 @@ impl ServeConfig {
         let defaults = Self::default();
         Ok(Self {
             comm_timeout: parse_comm_timeout(get("DISKPCA_COMM_TIMEOUT_SECS").as_deref())?,
+            comm_retries: parse_comm_retries(get("DISKPCA_COMM_RETRIES").as_deref())?,
+            chaos_seed: parse_chaos_seed(get("DISKPCA_CHAOS_SEED").as_deref())?,
             embed_cache_mb: parse_embed_cache_mb(get("DISKPCA_EMBED_CACHE_MB").as_deref())?,
             table_cache_mb: parse_table_cache_mb(get("DISKPCA_TABLE_CACHE_MB").as_deref())?,
             max_inflight: parse_count(
@@ -198,6 +223,24 @@ mod tests {
     fn defaults_when_nothing_is_set() {
         let cfg = ServeConfig::parse(|_| None).unwrap();
         assert_eq!(cfg, ServeConfig::default());
+        // the robustness knobs default to "off": fail fast, no chaos
+        assert_eq!(cfg.comm_retries, 0);
+        assert_eq!(cfg.chaos_seed, None);
+    }
+
+    #[test]
+    fn comm_retries_and_chaos_seed_parse_and_reject_garbage() {
+        let cfg = ServeConfig::parse(env(&[
+            ("DISKPCA_COMM_RETRIES", "3"),
+            ("DISKPCA_CHAOS_SEED", "0"),
+        ]))
+        .unwrap();
+        assert_eq!(cfg.comm_retries, 3);
+        assert_eq!(cfg.chaos_seed, Some(0), "seed 0 is a schedule, not 'off'");
+        let err = ServeConfig::parse(env(&[("DISKPCA_COMM_RETRIES", "many")])).unwrap_err();
+        assert!(err.contains("DISKPCA_COMM_RETRIES") && err.contains("many"), "{err}");
+        let err = ServeConfig::parse(env(&[("DISKPCA_CHAOS_SEED", "-7")])).unwrap_err();
+        assert!(err.contains("DISKPCA_CHAOS_SEED") && err.contains("-7"), "{err}");
     }
 
     #[test]

@@ -627,6 +627,9 @@ fn run_attempt(
 /// Concurrent-mode recovery entry for a runner holding a
 /// `Worker`/`Link` error: become the healer (quiesce, revive the dead
 /// slots, bump the epoch) unless one already healed past `my_epoch`.
+/// When a revival comes back [`CommError::Degraded`] and the recovery
+/// has rebalancing enabled, the dead slot's shard is adopted onto a
+/// survivor instead and serving continues on the shrunken cluster.
 /// Returns the post-heal epoch, or `None` when healing is off (no
 /// recovery installed, a revive failed, or an unrecoverable abort).
 fn heal(inner: &SchedInner, lane: &Cluster, first_dead: usize, my_epoch: u64) -> Option<u64> {
@@ -653,7 +656,15 @@ fn heal(inner: &SchedInner, lane: &Cluster, first_dead: usize, my_epoch: u64) ->
     let revived = {
         let mut guard = inner.recovery.lock().unwrap();
         match guard.as_mut() {
-            Some(rec) => rec.revive_only(lane, first_dead).map(|()| true),
+            Some(rec) => match rec.revive_only(lane, first_dead) {
+                Ok(()) => Ok(true),
+                // permanent loss: adopt the dead slot's shard onto a
+                // survivor and keep serving on the shrunken cluster
+                Err(CommError::Degraded { slot, .. }) if rec.rebalance_enabled() => {
+                    rec.rebalance(lane, slot).map(|()| true)
+                }
+                Err(e) => Err(e),
+            },
             None => Ok(false),
         }
     };

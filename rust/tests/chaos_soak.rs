@@ -1,0 +1,148 @@
+//! Seeded chaos soak: the same multi-job [`diskpca::serve::Service`]
+//! sequence as `elastic_soak.rs`, but the faults come from the seeded
+//! chaos transport ([`diskpca::comm::chaos`]) instead of mortal
+//! workers — every master→worker link is wrapped in a [`ChaosLink`]
+//! that deterministically severs links and delays sends per a fixed
+//! seed. The workers themselves are immortal: when a chaos roll
+//! severs a link, the master sees a link failure, recovery revives
+//! the slot over a fresh raw link (replacing the chaos wrapper), and
+//! the job replays. At a fixed seed the fault schedule is identical
+//! on every run, and every job must complete with outputs and
+//! per-job word tables bitwise identical to a fault-free service.
+//!
+//! [`ChaosLink`]: diskpca::comm::chaos::ChaosLink
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use diskpca::comm::{chaos, memory, Cluster, CommStats};
+use diskpca::coordinator::{Params, Worker};
+use diskpca::data::{clusters, partition_power_law, Data};
+use diskpca::kernels::Kernel;
+use diskpca::recovery::{LocalHost, Recovery, Transport};
+use diskpca::rng::Rng;
+use diskpca::runtime::NativeBackend;
+use diskpca::serve::{ServeConfig, Service};
+
+const S: usize = 3;
+
+/// The chaos schedule: fixed, so the soak replays the same severs and
+/// delays on every run.
+const CHAOS_SEED: u64 = 0xc4a0_5eed;
+
+fn workload() -> (Vec<Data>, Kernel, Params) {
+    let mut rng = Rng::seed_from(23);
+    let data = Data::Dense(clusters(7, 130, 3, 0.2, &mut rng));
+    let shards = partition_power_law(&data, S, 4);
+    let kernel = Kernel::Gauss { gamma: 0.6 };
+    let params = Params {
+        k: 3,
+        t: 16,
+        p: 32,
+        n_lev: 8,
+        n_adapt: 12,
+        m_rff: 128,
+        t2: 64,
+        seed: 9,
+        ..Params::default()
+    };
+    (shards, kernel, params)
+}
+
+struct JobTrace {
+    y: Vec<f64>,
+    coeffs: Vec<f64>,
+    table: Vec<(String, usize, usize)>,
+    embed_words: usize,
+    reused: bool,
+}
+
+/// Three KPCA fits (cold + two warm) and a final eval — the same
+/// sequence `elastic_soak.rs` runs.
+fn run_jobs(svc: &mut Service, params: &Params) -> (Vec<JobTrace>, (f64, f64)) {
+    let mut traces = Vec::new();
+    for _ in 0..3 {
+        let report = svc.run_kpca(params).unwrap();
+        traces.push(JobTrace {
+            y: report.output.y.data().to_vec(),
+            coeffs: report.output.coeffs.data().to_vec(),
+            table: report.job.stats.table(),
+            embed_words: report.job.stats.round_words("1-embed"),
+            reused: report.embed_reused,
+        });
+    }
+    let ev = svc.run_eval().unwrap().output;
+    (traces, ev)
+}
+
+#[test]
+fn chaos_soak_at_fixed_seed_completes_every_job_bit_identically() {
+    let (shards, kernel, params) = workload();
+
+    // fault-free reference service
+    let mut ideal = Service::builder(kernel)
+        .shards(shards.clone())
+        .backend(Arc::new(NativeBackend::new()))
+        .build();
+    let (want, want_ev) = run_jobs(&mut ideal, &params);
+    ideal.shutdown();
+
+    // chaos service: immortal workers behind seeded fault-injection
+    // links; severed links are healed by revival (which swaps the
+    // chaos wrapper for a fresh raw link)
+    let (star, endpoints, reply_tx) = memory::star_elastic(S);
+    let star = chaos::wrap_star(star, CHAOS_SEED);
+    let handles: Vec<_> = shards
+        .iter()
+        .cloned()
+        .zip(endpoints)
+        .map(|(shard, ep)| {
+            std::thread::spawn(move || {
+                Worker::new(shard, kernel, Arc::new(NativeBackend::new())).run(ep)
+            })
+        })
+        .collect();
+    let host = LocalHost::new(
+        shards,
+        kernel,
+        Arc::new(NativeBackend::new()),
+        0,
+        reply_tx,
+        Transport::Memory,
+    );
+    let mut rec = Recovery::new(Box::new(host));
+    rec.set_grace(Duration::from_millis(50));
+    // chaos keeps rolling for the whole sequence — don't let the
+    // per-driver revive cap end the soak early
+    rec.set_max_recoveries(64);
+    let cfg = ServeConfig { comm_retries: 2, ..ServeConfig::default() };
+    let mut svc = Service::builder(kernel)
+        .cluster(Cluster::new(star, CommStats::new()))
+        .config(cfg)
+        .build();
+    svc.set_recovery(rec);
+
+    let (got, got_ev) = run_jobs(&mut svc, &params);
+
+    assert!(
+        svc.recoveries() >= 1,
+        "the fixed chaos seed should sever at least one link over the sequence"
+    );
+    assert_eq!(got_ev.0.to_bits(), want_ev.0.to_bits(), "eval error differs");
+    assert_eq!(got_ev.1.to_bits(), want_ev.1.to_bits(), "eval trace differs");
+    for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(g.y == w.y, "job {j}: representative points differ");
+        assert!(g.coeffs == w.coeffs, "job {j}: coefficients differ");
+        assert_eq!(g.table, w.table, "job {j}: per-job word table differs");
+        assert_eq!(g.reused, w.reused, "job {j}: warm-reuse flag differs");
+        if j > 0 {
+            assert!(g.reused, "job {j} must reuse the warm embedding");
+            assert_eq!(g.embed_words, 0, "warm job {j} must skip 1-embed entirely");
+        }
+    }
+
+    svc.shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
+}

@@ -26,7 +26,42 @@ fn empty_environment_yields_the_documented_defaults() {
     assert_eq!(cfg.queue_depth, 32);
     assert_eq!(cfg.pipeline_depth, 2);
     assert_eq!(cfg.variance_frac, 0.95, "unset keeps the 0.95 refit gate");
+    assert_eq!(cfg.comm_retries, 0, "unset keeps the fail-fast no-retry default");
+    assert_eq!(cfg.chaos_seed, None, "unset keeps chaos injection off");
     assert_eq!(cfg, ServeConfig::default());
+}
+
+#[test]
+fn comm_retries_parses_and_rejects_garbage() {
+    let at = |v: &str| ServeConfig::parse(env(&[("DISKPCA_COMM_RETRIES", v)]));
+    assert_eq!(at("0").unwrap().comm_retries, 0, "0 keeps the fail-fast path");
+    assert_eq!(at("3").unwrap().comm_retries, 3);
+    assert_eq!(at(" 5 ").unwrap().comm_retries, 5, "surrounding whitespace is tolerated");
+    for bad in ["many", "", "-7", "1.5", "3s"] {
+        let err = at(bad).unwrap_err();
+        assert!(err.contains("DISKPCA_COMM_RETRIES"), "error must name the variable: {err}");
+        assert!(
+            err.contains(bad.trim()) || bad.trim().is_empty(),
+            "error must echo the value: {err}"
+        );
+    }
+}
+
+#[test]
+fn chaos_seed_parses_and_rejects_garbage() {
+    let at = |v: &str| ServeConfig::parse(env(&[("DISKPCA_CHAOS_SEED", v)]));
+    assert_eq!(at("42").unwrap().chaos_seed, Some(42));
+    // seed 0 is a schedule like any other — unset is the only "off"
+    assert_eq!(at("0").unwrap().chaos_seed, Some(0), "0 arms chaos with seed 0");
+    assert_eq!(at(" 7 ").unwrap().chaos_seed, Some(7), "surrounding whitespace is tolerated");
+    for bad in ["coin", "", "-1", "0.5", "0x2a"] {
+        let err = at(bad).unwrap_err();
+        assert!(err.contains("DISKPCA_CHAOS_SEED"), "error must name the variable: {err}");
+        assert!(
+            err.contains(bad.trim()) || bad.trim().is_empty(),
+            "error must echo the value: {err}"
+        );
+    }
 }
 
 #[test]

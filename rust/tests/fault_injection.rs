@@ -12,19 +12,28 @@
 //! streaming} recovers through [`diskpca::recovery`] and produces a
 //! solution, eval, and per-round word table **bitwise identical** to
 //! the fault-free run.
+//!
+//! Plus the never-rejoins cells: the same kill but the host *refuses*
+//! to revive the slot. With rebalancing on, the dead slot's shard is
+//! adopted by a survivor and the job re-runs on s−1 workers — bitwise
+//! identical (word table included) to a fresh cold fit over the
+//! post-rebalance shard layout. With rebalancing off, the run fails
+//! with the typed [`CommError::Degraded`] naming the lost slot.
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Duration;
 
 use diskpca::comm::{
-    memory, tcp, Cluster, CommError, CommStats, Endpoint, Message, ReplyEvent, Star,
+    memory, tcp, Cluster, CommError, CommStats, Endpoint, Message, ReplyEvent, Star, WorkerLink,
 };
 use diskpca::coordinator::{dis_eval, dis_kpca, KpcaSolution, Params, SamplingMode, Worker};
 use diskpca::data::{clusters, partition_power_law, Data};
 use diskpca::kernels::Kernel;
+use diskpca::linalg::Mat;
 use diskpca::recovery::{
-    dis_eval_recovering, dis_kpca_recovering, LocalHost, Recovery, Transport,
+    dis_eval_recovering, dis_kpca_recovering, with_rebalance, AdoptSource, LocalHost, Recovery,
+    ReviveHost, Transport,
 };
 use diskpca::rng::Rng;
 use diskpca::runtime::NativeBackend;
@@ -206,9 +215,9 @@ fn drop_guard_releases_workers_after_abort() {
 
 type RunResult = (KpcaSolution, (f64, f64), Vec<(String, usize, usize)>);
 
-/// Fault-free reference run (memory star, normal workers).
-fn baseline(chunk_rows: usize) -> RunResult {
-    let (shards, kernel, params) = workload(3);
+/// Fault-free cold fit over an explicit shard layout (memory star,
+/// normal workers).
+fn cold_run(shards: Vec<Data>, kernel: Kernel, params: &Params, chunk_rows: usize) -> RunResult {
     let (star, endpoints) = memory::star(shards.len());
     let cluster = Cluster::new(star, CommStats::new());
     let handles: Vec<_> = shards
@@ -221,7 +230,7 @@ fn baseline(chunk_rows: usize) -> RunResult {
             })
         })
         .collect();
-    let sol = dis_kpca(&cluster, kernel, &params).unwrap();
+    let sol = dis_kpca(&cluster, kernel, params).unwrap();
     let ev = dis_eval(&cluster).unwrap();
     let table = cluster.stats.table();
     cluster.shutdown();
@@ -229,6 +238,12 @@ fn baseline(chunk_rows: usize) -> RunResult {
         h.join().expect("worker thread panicked");
     }
     (sol, ev, table)
+}
+
+/// Fault-free reference run (memory star, normal workers).
+fn baseline(chunk_rows: usize) -> RunResult {
+    let (shards, kernel, params) = workload(3);
+    cold_run(shards, kernel, &params, chunk_rows)
 }
 
 /// Elastic run with worker [`DEAD_WORKER`] killed after `die_after`
@@ -374,4 +389,174 @@ fn double_death_in_one_round_recovers() {
         let _ = h.join();
     }
     rec.join_host();
+}
+
+// ---------------------------------------------------------------------------
+// Never-rejoins cells: permanent loss → rebalance onto survivors.
+// ---------------------------------------------------------------------------
+
+/// A [`ReviveHost`] whose `refuse` slot never comes back — every other
+/// capability (shard adoption included) delegates to the wrapped
+/// [`LocalHost`].
+struct NoRejoin {
+    inner: LocalHost,
+    refuse: usize,
+}
+
+impl ReviveHost for NoRejoin {
+    fn revive(&mut self, slot: usize) -> Result<Box<dyn WorkerLink>, String> {
+        if slot == self.refuse {
+            return Err(format!("slot {slot} never rejoins"));
+        }
+        self.inner.revive(slot)
+    }
+
+    fn shard_path(&self, slot: usize) -> Option<(String, usize)> {
+        self.inner.shard_path(slot)
+    }
+
+    fn adopt_source(&mut self, slot: usize) -> Result<AdoptSource, String> {
+        self.inner.adopt_source(slot)
+    }
+
+    fn rebalanced(&mut self, dead: usize, adopter: usize) {
+        self.inner.rebalanced(dead, adopter)
+    }
+
+    fn join(&mut self) {
+        self.inner.join()
+    }
+}
+
+/// Column-wise concatenation of two dense shards — the layout a
+/// survivor holds after adopting a dead slot's columns (own first).
+fn concat_dense(own: &Data, adopted: &Data) -> Data {
+    let (a, b) = match (own, adopted) {
+        (Data::Dense(a), Data::Dense(b)) => (a, b),
+        _ => panic!("dense shards expected"),
+    };
+    let m = Mat::from_fn(a.rows(), a.cols() + b.cols(), |i, j| {
+        if j < a.cols() {
+            a[(i, j)]
+        } else {
+            b[(i, j - a.cols())]
+        }
+    });
+    Data::Dense(m)
+}
+
+/// The layout after worker [`DEAD_WORKER`] (slot 1 of 3) is lost for
+/// good: the first live survivor after it — slot 2 — adopts its
+/// columns (own-first order), then renumbers down to slot 1.
+fn survivor_baseline(chunk_rows: usize) -> RunResult {
+    let (shards, kernel, params) = workload(3);
+    let survivors = vec![shards[0].clone(), concat_dense(&shards[2], &shards[1])];
+    cold_run(survivors, kernel, &params, chunk_rows)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn drive_never_rejoins<E: Endpoint + Send + 'static>(
+    star: Star,
+    endpoints: Vec<E>,
+    reply_tx: Sender<ReplyEvent>,
+    shards: Vec<Data>,
+    kernel: Kernel,
+    params: &Params,
+    transport: Transport,
+    chunk_rows: usize,
+    rebalance: bool,
+) -> Result<RunResult, CommError> {
+    let cluster = Cluster::new(star, CommStats::new());
+    cluster.set_reply_timeout(Duration::from_secs(120));
+    let handles: Vec<_> = shards
+        .iter()
+        .cloned()
+        .zip(endpoints)
+        .enumerate()
+        .map(|(i, (shard, mut ep))| {
+            std::thread::spawn(move || {
+                if i == DEAD_WORKER {
+                    doomed_worker_chunked(&mut ep, shard, kernel, chunk_rows, DIE_AFTER);
+                } else {
+                    Worker::new_chunked(shard, kernel, Arc::new(NativeBackend::new()), chunk_rows)
+                        .run(ep);
+                }
+            })
+        })
+        .collect();
+    let inner = LocalHost::new(
+        shards,
+        kernel,
+        Arc::new(NativeBackend::new()),
+        chunk_rows,
+        reply_tx,
+        transport,
+    );
+    let mut rec = Recovery::new(Box::new(NoRejoin { inner, refuse: DEAD_WORKER }));
+    rec.set_grace(Duration::from_millis(50));
+    rec.set_rebalance(rebalance);
+    let res = with_rebalance(&cluster, &mut rec, |cluster, rec| {
+        let sol = dis_kpca_recovering(cluster, rec, kernel, params, SamplingMode::Full, false)?;
+        let ev = dis_eval_recovering(cluster, rec)?;
+        Ok((sol, ev, cluster.stats.table()))
+    });
+    cluster.shutdown();
+    for h in handles {
+        let _ = h.join();
+    }
+    rec.join_host();
+    res
+}
+
+fn never_rejoins_run(
+    transport: Transport,
+    chunk_rows: usize,
+    rebalance: bool,
+) -> Result<RunResult, CommError> {
+    let (shards, kernel, params) = workload(3);
+    match transport {
+        Transport::Memory => {
+            let (star, eps, tx) = memory::star_elastic(shards.len());
+            drive_never_rejoins(
+                star, eps, tx, shards, kernel, &params, transport, chunk_rows, rebalance,
+            )
+        }
+        Transport::Tcp => {
+            let (star, eps, tx) = tcp::star_elastic(shards.len()).unwrap();
+            drive_never_rejoins(
+                star, eps, tx, shards, kernel, &params, transport, chunk_rows, rebalance,
+            )
+        }
+    }
+}
+
+/// Worker 1 dies mid `2-disLS` and never rejoins. With rebalancing
+/// on, survivor 2 adopts its shard, the cluster shrinks to two slots,
+/// and the re-run — solution, eval, and per-round word table — is
+/// bitwise identical to a fresh cold fit over the survivor layout.
+#[test]
+fn never_rejoins_rebalances_bit_identically_to_survivor_cold_fit() {
+    for &chunk_rows in &[0usize, 16] {
+        let want = survivor_baseline(chunk_rows);
+        for transport in [Transport::Memory, Transport::Tcp] {
+            let ctx = format!("never-rejoins {transport:?} chunk={chunk_rows}");
+            let got = never_rejoins_run(transport, chunk_rows, true)
+                .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            assert_bit_identical(&ctx, &got, &want);
+        }
+    }
+}
+
+/// With rebalancing off (the default), permanent loss is a *typed*
+/// degraded error naming the lost slot — not a generic protocol
+/// failure.
+#[test]
+fn never_rejoins_without_rebalance_is_a_typed_degraded_error() {
+    let err = never_rejoins_run(Transport::Memory, 0, false).unwrap_err();
+    match &err {
+        CommError::Degraded { slot, .. } => assert_eq!(*slot, DEAD_WORKER),
+        other => panic!("expected CommError::Degraded, got {other:?}"),
+    }
+    let text = err.to_string();
+    assert!(text.contains("degraded") && text.contains("worker 1"), "{text}");
 }

@@ -362,6 +362,7 @@ fn variant_index(m: &Message) -> usize {
         ReqLoadShard { .. } => 31,
         ReqRefreshShard { .. } => 32,
         ReqDeltaSketch { .. } => 33,
+        ReqAdoptShard { .. } => 34,
     }
 }
 
@@ -427,6 +428,11 @@ fn canonical_messages() -> Vec<Message> {
         Message::ReqLoadShard { path: "shards/susy_like_002.dkps".into(), chunk_rows: 64 },
         Message::ReqRefreshShard { epoch: 3 },
         Message::ReqDeltaSketch { p: 19, seed: 20 },
+        Message::ReqAdoptShard {
+            path: "shards/susy_like_001.dkps".into(),
+            pts: PointSet::Dense(Mat::from_fn(2, 2, |i, j| (i * 2 + j) as f64)),
+            chunk_rows: 32,
+        },
     ]
 }
 
@@ -441,7 +447,7 @@ fn codec_roundtrip_covers_every_variant() {
     let mut seen: Vec<usize> = msgs.iter().map(variant_index).collect();
     seen.sort_unstable();
     seen.dedup();
-    assert_eq!(seen, (0..34).collect::<Vec<_>>(), "canonical list must cover all 34 variants");
+    assert_eq!(seen, (0..35).collect::<Vec<_>>(), "canonical list must cover all 35 variants");
     for msg in msgs {
         let bytes = codec::encode(&msg);
         let back = codec::decode(&bytes).unwrap_or_else(|e| panic!("{}: {e:?}", msg.tag()));
